@@ -1,0 +1,75 @@
+//! The dense-block PJRT acceleration path, standalone.
+//!
+//! Sweeps operand density and compares host SpGEMM vs the AOT-compiled
+//! Pallas tile kernel (plus-times and min-plus), verifying exact
+//! agreement and printing the crossover — the data behind the
+//! `fig6b_accel` bench.
+//!
+//! Run: `cargo run --release --example accel_matmul`
+
+use d4m::assoc::{Assoc, ValsInput};
+use d4m::runtime::{accel_matmul, should_accelerate, Runtime};
+use d4m::semiring::{MinPlus, PlusTimes, Semiring};
+use d4m::util::{human, SplitMix64, Stopwatch};
+
+fn random_assoc(seed: u64, keys: u64, density: f64) -> Assoc {
+    let mut r = SplitMix64::new(seed);
+    let triples = ((keys * keys) as f64 * density) as usize;
+    let rows: Vec<String> = (0..triples).map(|_| format!("k{:05}", r.below(keys))).collect();
+    let cols: Vec<String> = (0..triples).map(|_| format!("k{:05}", r.below(keys))).collect();
+    let vals: Vec<f64> = (0..triples).map(|_| r.range_i64(1, 9) as f64).collect();
+    Assoc::from_triples(&rows, &cols, ValsInput::Num(vals))
+}
+
+fn main() {
+    let rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("loaded {} artifacts\n", rt.artifacts().count());
+
+    for (sr, name) in [(&PlusTimes as &dyn Semiring, "plus_times"), (&MinPlus, "min_plus")] {
+        println!("== semiring {name} ==");
+        println!(
+            "{:>9} {:>10} {:>12} {:>12} {:>8} {:>7} {:>6}",
+            "density", "nnz", "host", "pjrt", "kcalls", "skip", "equal"
+        );
+        for density in [0.002, 0.01, 0.05, 0.2] {
+            let a = random_assoc(1, 512, density);
+            let b = random_assoc(2, 512, density);
+            let sw = Stopwatch::start();
+            let host = a.matmul_with(&b, sr);
+            let t_host = sw.elapsed_s();
+            let sw = Stopwatch::start();
+            let (accel, stats) = accel_matmul(&rt, &a, &b, sr).expect("accel path");
+            let t_accel = sw.elapsed_s();
+            println!(
+                "{:>9.3} {:>10} {:>12} {:>12} {:>8} {:>7} {:>6}",
+                density,
+                a.nnz(),
+                human::seconds(t_host),
+                human::seconds(t_accel),
+                stats.kernel_calls,
+                stats.skipped_tiles,
+                accel == host,
+            );
+            assert_eq!(accel, host, "{name} PJRT result must equal host SpGEMM");
+        }
+        println!();
+    }
+
+    // The dispatch heuristic in action.
+    let dense = random_assoc(3, 256, 0.3);
+    let sparse = random_assoc(4, 4096, 0.0005);
+    println!(
+        "dispatch: dense {} → accelerate={}, sparse {} → accelerate={}",
+        dense.summary(),
+        should_accelerate(&dense, &dense, 0.02),
+        sparse.summary(),
+        should_accelerate(&sparse, &sparse, 0.02),
+    );
+    println!("accel_matmul OK");
+}

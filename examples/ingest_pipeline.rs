@@ -1,0 +1,187 @@
+//! END-TO-END DRIVER: the full D4M stack on a realistic workload.
+//!
+//! Exercises every layer in one run (recorded in EXPERIMENTS.md):
+//!
+//! 1. **Generate** a synthetic web-log corpus (~200k triples: client →
+//!    url hits with bytes + status fields), the kind of semi-structured
+//!    data D4M's ingest deployments handle.
+//! 2. **Ingest** it through the sharded, backpressured pipeline into
+//!    the Accumulo-sim table store (adjacency + transpose tables),
+//!    reporting throughput, stalls, shard balance and tablet splits.
+//! 3. **Query** with Graphulo server-side kernels (degree tables, BFS)
+//!    and scan-to-Assoc + the associative-array algebra (facets, AᵀA).
+//! 4. **Accelerate**: run the correlation matmul on the PJRT dense-
+//!    block path (AOT Pallas kernel) and cross-check it against host
+//!    SpGEMM — proving artifacts, runtime and algebra compose.
+//! 5. **Report** the paper's five op timings (Figs 3–7 ops) on the
+//!    ingested real data.
+//!
+//! Run: `cargo run --release --example ingest_pipeline`
+
+use d4m::assoc::{Aggregator, Assoc, ValsInput};
+use d4m::bench::Workload;
+use d4m::graphulo;
+use d4m::pipeline::{IngestPipeline, PipelineConfig, ShardPolicy};
+use d4m::semiring::PlusTimes;
+use d4m::store::{ScanRange, TableConfig, TableStore, Triple};
+use d4m::util::{human, time_op, SplitMix64, Stopwatch};
+use std::sync::Arc;
+
+const N_EVENTS: usize = 100_000;
+const N_CLIENTS: u64 = 5_000;
+const N_URLS: u64 = 800;
+
+fn main() {
+    println!("== D4M end-to-end driver ==\n");
+
+    // ---- 1. generate the corpus ---------------------------------------
+    let mut rng = SplitMix64::new(0x1091);
+    let mut events: Vec<(String, String, String, String)> = Vec::with_capacity(N_EVENTS);
+    for _ in 0..N_EVENTS {
+        // Zipf-ish skew: square the uniform to concentrate mass.
+        let c = ((rng.f64() * rng.f64()) * N_CLIENTS as f64) as u64;
+        let u = ((rng.f64() * rng.f64()) * N_URLS as f64) as u64;
+        let status = *rng.choose(&["200", "200", "200", "304", "404", "500"]);
+        let bytes = (rng.below(64) + 1) * 512;
+        events.push((
+            format!("client{c:05}"),
+            format!("/page{u:04}"),
+            status.to_string(),
+            bytes.to_string(),
+        ));
+    }
+    println!("corpus: {} web-log events", human::count(N_EVENTS as u64));
+
+    // ---- 2. pipeline ingest into the store ------------------------------
+    let store = TableStore::new(TableConfig { split_threshold: 1 << 20, write_latency_us: 0 });
+    let hits = store.create_table("hits");
+    let hits_t = store.create_table("hits_T");
+
+    let mut p = IngestPipeline::start(
+        Arc::clone(&hits),
+        PipelineConfig { workers: 4, policy: ShardPolicy::Hash, ..Default::default() },
+    );
+    let mut pt = IngestPipeline::start(Arc::clone(&hits_t), PipelineConfig::default());
+    let sw = Stopwatch::start();
+    for (client, url, _, _) in &events {
+        p.submit(Triple::new(client.clone(), url.clone(), "1"));
+        pt.submit(Triple::new(url.clone(), client.clone(), "1"));
+    }
+    let report = p.finish();
+    let report_t = pt.finish();
+    println!(
+        "ingest: {} triples in {} → {} (x2 for transpose table), \
+         {} stalls, imbalance {:.2}, {} tablets",
+        human::count((report.written + report_t.written) as u64),
+        human::seconds(sw.elapsed_s()),
+        human::rate(report.rate()),
+        report.stalls,
+        report.imbalance(),
+        hits.tablet_count(),
+    );
+
+    // ---- 3. server-side analytics (Graphulo) ----------------------------
+    let deg_out = store.create_table("deg_client");
+    let deg_in = store.create_table("deg_url");
+    let sw = Stopwatch::start();
+    let clients = graphulo::degree_table(&hits, &deg_out);
+    let urls = graphulo::degree_table(&hits_t, &deg_in);
+    println!(
+        "\ndegree tables: {clients} clients, {urls} urls in {}",
+        human::seconds(sw.elapsed_s())
+    );
+    let top_url = store
+        .read_assoc("deg_url")
+        .unwrap();
+    let mut best = (String::new(), 0.0);
+    for (r, _, v) in top_url.iter() {
+        let v = v.as_num().unwrap_or(0.0);
+        if v > best.1 {
+            best = (r.to_string(), v);
+        }
+    }
+    println!("hottest url: {} with {} distinct clients", best.0, best.1);
+
+    let frontier = graphulo::bfs(&hits, &[best.0.replace("/page", "client").clone()], 1);
+    println!("bfs sanity: {} frontiers from a client seed", frontier.len());
+
+    // ---- scan → Assoc → algebra -----------------------------------------
+    let sw = Stopwatch::start();
+    let a = hits.scan_to_assoc(ScanRange::all()); // client × url (1 = hit)
+    println!(
+        "\nscan→Assoc: {} in {}",
+        a.summary(),
+        human::seconds(sw.elapsed_s())
+    );
+    let per_client = a.count(1);
+    let per_url = a.count(0);
+    println!(
+        "degrees via algebra: {} clients, {} urls (agrees with Graphulo: {})",
+        per_client.nnz(),
+        per_url.nnz(),
+        per_client.nnz() == clients && per_url.nnz() == urls,
+    );
+
+    // url↔url co-visitation graph.
+    let sw = Stopwatch::start();
+    let covisit = a.sqin();
+    println!("AᵀA co-visitation: {} in {}", covisit.summary(), human::seconds(sw.elapsed_s()));
+
+    // ---- 4. PJRT-accelerated correlation --------------------------------
+    match d4m::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            let at = a.transpose();
+            let sw = Stopwatch::start();
+            let (accel, stats) = d4m::runtime::accel_matmul(&rt, &at, &a, &PlusTimes)
+                .expect("accelerated matmul");
+            let t_accel = sw.elapsed_s();
+            let sw = Stopwatch::start();
+            let host = at.matmul(&a);
+            let t_host = sw.elapsed_s();
+            println!(
+                "\naccel AᵀA: PJRT {} ({} kernel calls, {} skipped, tile {}) vs host SpGEMM {} — equal: {}",
+                human::seconds(t_accel),
+                stats.kernel_calls,
+                stats.skipped_tiles,
+                stats.tile,
+                human::seconds(t_host),
+                accel == host,
+            );
+            assert_eq!(accel, host, "PJRT path must agree with host SpGEMM");
+        }
+        Err(e) => println!("\n(skipping PJRT stage: {e})"),
+    }
+
+    // ---- 5. the paper's five ops on real + reference data ---------------
+    println!("\npaper-op timings on the ingested data + §III.A workload (n=12):");
+    let w = Workload::generate(12, 42);
+    let ones = w.ones();
+    let wa = Assoc::from_triples(&w.rows, &w.cols, ValsInput::Num(ones.clone()));
+    let wb = Assoc::from_triples(&w.rows2, &w.cols2, ValsInput::Num(ones));
+    let reps = 5;
+    let t1 = time_op(1, reps, |_| {
+        Assoc::from_triples(&w.rows, &w.cols, ValsInput::Num(w.num_vals.clone()))
+    });
+    let t2 = time_op(1, reps, |_| {
+        Assoc::try_new(
+            w.rows.iter().map(|s| s.as_str().into()).collect(),
+            w.cols.iter().map(|s| s.as_str().into()).collect(),
+            ValsInput::Str(w.str_vals.clone()),
+            Aggregator::Min,
+        )
+        .unwrap()
+    });
+    let t3 = time_op(1, reps, |_| wa.add(&wb));
+    let t4 = time_op(1, reps, |_| wa.matmul(&wb));
+    let t5 = time_op(1, reps, |_| wa.elemmul(&wb));
+    for (name, t) in [
+        ("constructor(num)", t1),
+        ("constructor(str)", t2),
+        ("add", t3),
+        ("matmul", t4),
+        ("elemmul", t5),
+    ] {
+        println!("  {name:18} mean {}", human::seconds(t.mean_s()));
+    }
+    println!("\ningest_pipeline OK");
+}

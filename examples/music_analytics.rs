@@ -1,0 +1,178 @@
+//! Facet search and graph analytics over a synthetic music catalog —
+//! the workload class the paper's introduction motivates (spreadsheets
+//! / databases / graphs under one algebra).
+//!
+//! Builds a ~30k-entry string associative array of track metadata,
+//! then answers analyst questions purely with the D4M algebra:
+//! facet counts, co-occurrence graphs (`AᵀA`), artist similarity, and
+//! semiring-powered widest-path queries over the collaboration graph.
+//!
+//! Run: `cargo run --release --example music_analytics`
+
+use d4m::assoc::{Aggregator, Assoc, Selector, ValsInput};
+use d4m::semiring::MaxMin;
+use d4m::util::{human, SplitMix64, Stopwatch};
+
+const GENRES: [&str; 8] =
+    ["rock", "pop", "jazz", "classical", "electronic", "folk", "hiphop", "ambient"];
+const LABELS: [&str; 6] = ["EMI", "Sub Pop", "Blue Note", "DG", "Warp", "Merge"];
+
+fn main() {
+    let mut rng = SplitMix64::new(0xD4A7);
+    let n_tracks = 10_000usize;
+    let n_artists = 400usize;
+
+    // --- build the catalog as one exploded string array ----------------
+    let sw = Stopwatch::start();
+    let mut rows: Vec<String> = Vec::new();
+    let mut cols: Vec<String> = Vec::new();
+    let mut vals: Vec<String> = Vec::new();
+    for t in 0..n_tracks {
+        let track = format!("{t:06}.mp3");
+        let artist = format!("artist{:03}", rng.below(n_artists as u64));
+        let push = |rows: &mut Vec<String>, cols: &mut Vec<String>, vals: &mut Vec<String>,
+                    c: &str, v: String| {
+            rows.push(track.clone());
+            cols.push(c.to_string());
+            vals.push(v);
+        };
+        push(&mut rows, &mut cols, &mut vals, "artist", artist);
+        push(&mut rows, &mut cols, &mut vals, "genre", rng.choose(&GENRES).to_string());
+        push(&mut rows, &mut cols, &mut vals, "label", rng.choose(&LABELS).to_string());
+        push(
+            &mut rows,
+            &mut cols,
+            &mut vals,
+            "duration",
+            format!("{}:{:02}", 2 + rng.below(7), rng.below(60)),
+        );
+    }
+    let a = Assoc::try_new(
+        rows.iter().map(|s| s.as_str().into()).collect(),
+        cols.iter().map(|s| s.as_str().into()).collect(),
+        ValsInput::Str(vals),
+        Aggregator::Min,
+    )
+    .unwrap();
+    println!(
+        "catalog: {} ({} tracks × {} fields) built in {}",
+        a.summary(),
+        n_tracks,
+        a.col_keys().len(),
+        human::seconds(sw.elapsed_s())
+    );
+
+    // --- facet search: D4M's "exploded schema" idiom --------------------
+    // Explode values into columns: E[track, "genre|rock"] = 1.
+    let (tr, tc, tv) = a.triples();
+    let exploded_cols: Vec<String> = match &tv {
+        ValsInput::Str(vs) => tc
+            .iter()
+            .zip(vs)
+            .map(|(c, v)| format!("{c}|{v}"))
+            .collect(),
+        _ => unreachable!(),
+    };
+    let e = Assoc::try_new(
+        tr,
+        exploded_cols.iter().map(|s| s.as_str().into()).collect(),
+        ValsInput::NumScalar(1.0),
+        Aggregator::Min,
+    )
+    .unwrap();
+    println!("exploded: {}", e.summary());
+
+    // Facet counts per genre: one column-sum over the exploded array.
+    let facet = e
+        .select(&Selector::All, &Selector::Prefix("genre|".into()))
+        .sum(0);
+    println!("\ngenre facet counts:\n{facet}");
+
+    // Tracks that are rock AND on EMI: filter the EMI indicator column
+    // down to the rock tracks' row keys (the D4M join idiom — an
+    // elementwise multiply would intersect *column* keys, which differ).
+    let rock = e.get_col("genre|rock");
+    let emi = e.get_col("label|EMI");
+    let both = emi.select(&Selector::Keys(rock.row_keys().to_vec()), &Selector::All);
+    println!("rock ∧ EMI tracks: {}", both.nnz());
+
+    // --- graph analytics: AᵀA on the exploded array ----------------------
+    let sw = Stopwatch::start();
+    let ata = e.sqin();
+    println!(
+        "\nAᵀA co-occurrence graph: {} in {}",
+        ata.summary(),
+        human::seconds(sw.elapsed_s())
+    );
+    // Strongest genre↔label affinity.
+    let genre_label = ata.select(
+        &Selector::Prefix("genre|".into()),
+        &Selector::Prefix("label|".into()),
+    );
+    let mut best = ("", "", 0.0);
+    for (r, c, v) in genre_label.iter() {
+        let v = v.as_num().unwrap();
+        if v > best.2 {
+            best = (
+                r.as_str().unwrap_or_default(),
+                c.as_str().unwrap_or_default(),
+                v,
+            );
+        }
+    }
+    println!("strongest genre↔label pair: {} × {} ({} tracks)", best.0, best.1, best.2);
+
+    // --- semiring query: widest path in the artist collaboration graph --
+    // Artist similarity = number of shared (genre, label) facets.
+    let by_artist = {
+        // P[artist, facet] = count of artist's tracks with that facet.
+        let artist_col = a.get_col("artist");
+        let (ar, _, av) = artist_col.triples();
+        let artists: Vec<String> = match av {
+            ValsInput::Str(vs) => vs,
+            _ => unreachable!(),
+        };
+        // Map track -> artist, then group exploded facets by artist.
+        let track_to_artist: std::collections::HashMap<String, String> = ar
+            .iter()
+            .map(|k| k.to_string())
+            .zip(artists)
+            .collect();
+        let mut prows = Vec::new();
+        let mut pcols = Vec::new();
+        for (t, c, _) in e.iter() {
+            if let Some(artist) = track_to_artist.get(&t.to_string()) {
+                if !c.to_string().starts_with("duration|") {
+                    prows.push(artist.clone());
+                    pcols.push(c.to_string());
+                }
+            }
+        }
+        Assoc::try_new(
+            prows.iter().map(|s| s.as_str().into()).collect(),
+            pcols.iter().map(|s| s.as_str().into()).collect(),
+            ValsInput::NumScalar(1.0),
+            Aggregator::Sum,
+        )
+        .unwrap()
+    };
+    let sim = by_artist.sqout(); // artist × artist shared-facet counts
+    println!("\nartist similarity graph: {}", sim.summary());
+
+    // Widest path (max-min semiring) between two artists through one
+    // intermediate: similarity "bandwidth" of the best 2-hop connection.
+    let sw = Stopwatch::start();
+    let two_hop = sim.matmul_with(&sim, &MaxMin);
+    println!(
+        "max-min 2-hop similarity: {} in {}",
+        two_hop.summary(),
+        human::seconds(sw.elapsed_s())
+    );
+    let (a0, a1) = ("artist000", "artist001");
+    println!(
+        "widest 2-hop connection {a0} → {a1}: {:?} (direct: {:?})",
+        two_hop.get_num(a0, a1),
+        sim.get_num(a0, a1)
+    );
+    println!("\nmusic_analytics OK");
+}

@@ -1,0 +1,51 @@
+//! Quickstart: the paper's Figure 1 associative array, end to end.
+//!
+//! Builds the music-metadata array, exercises extraction (including the
+//! D4M string-slice semantics), the algebra (`+`, `*`, `@`), and the
+//! correlation idiom `AᵀA`.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use d4m::assoc::{Assoc, Selector};
+
+fn main() {
+    // --- construction (paper Fig 1 / Fig 2) ---------------------------
+    let a = Assoc::from_triples(
+        &["0294.mp3", "0294.mp3", "0294.mp3", "1829.mp3", "1829.mp3", "1829.mp3", "7802.mp3",
+            "7802.mp3", "7802.mp3"],
+        &["artist", "duration", "genre", "artist", "duration", "genre", "artist", "duration",
+            "genre"],
+        &["Pink Floyd", "6:53", "rock", "Samuel Barber", "8:01", "classical", "Taylor Swift",
+            "10:12", "pop"][..],
+    );
+    println!("A =\n{a}");
+
+    // The four attributes of the storage model (paper §II.A).
+    println!("A.row = {:?}", a.row_keys().iter().map(ToString::to_string).collect::<Vec<_>>());
+    println!("A.col = {:?}", a.col_keys().iter().map(ToString::to_string).collect::<Vec<_>>());
+    println!("A.val pool = {:?}", a.values().strings().unwrap());
+    println!("A.adj nnz = {}\n", a.adj().nnz());
+
+    // --- extraction (paper §II.B) --------------------------------------
+    println!("one track:\n{}", a.get_row("0294.mp3"));
+    // String slice "0294.mp3,:,1829.mp3," — inclusive on the right.
+    let slice = a.select(&Selector::range("0294.mp3", "1829.mp3"), &Selector::All);
+    println!("rows 0294..=1829 (right-inclusive!):\n{slice}");
+    // Integers are positions, not keys (paper §II.B item 2).
+    let by_pos = a.select(&Selector::PosRange(0, 2), &Selector::Positions(vec![0]));
+    println!("A[0:2, [0]] by position:\n{by_pos}");
+
+    // --- algebra (paper §II.C) ------------------------------------------
+    let mask = Assoc::from_triples(&["0294.mp3", "7802.mp3"], &["genre", "genre"], 1.0);
+    println!("string × numeric acts as a mask:\n{}", &a * &mask);
+
+    let more = Assoc::from_triples(&["0294.mp3"], &["genre"], &["prog"][..]);
+    println!("string + string concatenates on collision:\n{}", &a.get_col("genre") + &more);
+
+    // AᵀA: which attributes co-occur across tracks (the facet idiom).
+    println!("AᵀA =\n{}", a.sqin());
+
+    // Degree-style reduction.
+    println!("entries per track:\n{}", a.count(1));
+    println!("quickstart OK");
+}

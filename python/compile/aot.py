@@ -1,0 +1,111 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust PJRT runtime.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's pinned xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py, whose recipe this follows).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per variant plus ``manifest.json``
+describing shapes/semirings so the Rust side can discover and validate
+artifacts without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels.semiring_matmul import vmem_bytes
+from .model import accum_fn, matmul_fn
+
+# (kind, semiring, size, block) — the artifact set the Rust runtime
+# expects. 128 is the MXU-native tile; 256 amortizes dispatch for the
+# plus-times path (4 MXU passes per grid step).
+VARIANTS = [
+    ("matmul", "plus_times", 128, 128),
+    ("matmul", "plus_times", 256, 128),
+    ("matmul", "max_plus", 128, 32),
+    ("matmul", "min_plus", 128, 32),
+    ("matmul", "max_min", 128, 32),
+    ("accum", "plus_times", 128, 128),
+    ("accum", "min_plus", 128, 32),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax fn -> XLA HLO text (the 0.5.1-compatible bridge)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variant_name(kind: str, semiring: str, size: int) -> str:
+    return f"{kind}_{semiring}_{size}"
+
+
+def lower_variant(kind: str, semiring: str, size: int, block: int) -> str:
+    if kind == "matmul":
+        fn, specs = matmul_fn(semiring, size, block)
+    elif kind == "accum":
+        fn, specs = accum_fn(semiring, size, block)
+    else:
+        raise ValueError(f"unknown kind {kind!r}")
+    return to_hlo_text(fn.lower(*specs))
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for kind, semiring, size, block in VARIANTS:
+        name = variant_name(kind, semiring, size)
+        text = lower_variant(kind, semiring, size, block)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "kind": kind,
+            "semiring": semiring,
+            "size": size,
+            "block": block,
+            "dtype": "f32",
+            "num_inputs": 3 if kind == "accum" else 2,
+            "file": f"{name}.hlo.txt",
+            "vmem_bytes_per_step": vmem_bytes(semiring, block, block, block),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # TSV twin for the Rust runtime (no JSON parser in its minimal
+    # dependency set): name kind semiring size block num_inputs file.
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for name in sorted(manifest):
+            m = manifest[name]
+            f.write(
+                f"{name}\t{m['kind']}\t{m['semiring']}\t{m['size']}\t"
+                f"{m['block']}\t{m['num_inputs']}\t{m['file']}\n"
+            )
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = parser.parse_args()
+    print(f"AOT-lowering {len(VARIANTS)} variants (jax {jax.__version__})")
+    manifest = build_all(args.out_dir)
+    print(f"wrote manifest with {len(manifest)} entries to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

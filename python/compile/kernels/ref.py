@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the semiring matmul kernels.
+
+Straight rank-3 broadcast + reduce (no blocking, no Pallas): the
+definitionally-obvious implementation the kernels must agree with.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .semiring_matmul import SEMIRINGS
+
+
+def semiring_matmul_ref(a: jax.Array, b: jax.Array, semiring: str = "plus_times") -> jax.Array:
+    """``C[i,j] = ⊕_k A[i,k] ⊗ B[k,j]`` — unblocked reference."""
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}")
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if semiring == "plus_times":
+        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+    _, _, mul = SEMIRINGS[semiring]
+    expanded = mul(a[:, :, None], b[None, :, :])
+    if semiring in ("max_plus", "max_min"):
+        return jnp.max(expanded, axis=1)
+    return jnp.min(expanded, axis=1)

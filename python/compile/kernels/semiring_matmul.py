@@ -1,0 +1,115 @@
+"""L1: blocked semiring matrix-multiply Pallas kernels.
+
+The compute hot-spot of D4M is semiring matrix multiplication (`A @ B`,
+Graphulo TableMult). The host-side Rust engine uses sparse SpGEMM; for
+dense blocks the coordinator dispatches to these AOT-compiled kernels
+instead (DESIGN.md §2 "Hardware-Adaptation").
+
+TPU mapping (vs. the host sparse code, not a CUDA port — the paper has
+no GPU design):
+
+* tiles of ``(bm, bk) x (bk, bn)`` are staged HBM -> VMEM by ``BlockSpec``
+  index maps over a ``(M/bm, N/bn, K/bk)`` grid;
+* ``plus_times`` contracts tiles with ``jnp.dot`` -> MXU systolic array
+  (f32 on CPU-interpret; bf16-accumulate-f32 on real TPU);
+* the tropical algebras (``max_plus``/``min_plus``) and ``max_min``
+  expand one rank and reduce -- VPU elementwise work, blocked so the
+  ``(bm, bk, bn)`` intermediate stays VMEM-sized;
+* the K grid dimension accumulates in the output ref (revisited across
+  the innermost grid steps), initialized to the semiring zero at k == 0.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls, so interpret-mode lowering (plain HLO ops)
+is the correctness + interchange path; real-TPU perf is *estimated* in
+DESIGN.md from the VMEM footprint and MXU utilization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Semiring registry: name -> (zero, add, mul). `add` / `mul` operate on
+# broadcastable jnp arrays.
+SEMIRINGS = {
+    "plus_times": (0.0, jnp.add, jnp.multiply),
+    "max_plus": (-jnp.inf, jnp.maximum, jnp.add),
+    "min_plus": (jnp.inf, jnp.minimum, jnp.add),
+    "max_min": (-jnp.inf, jnp.maximum, jnp.minimum),
+}
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, semiring: str):
+    """One (i, j, k) grid step: o[i,j] ⊕= a[i,k] ⊗. b[k,j]."""
+    zero, add, _ = SEMIRINGS[semiring]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, zero)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if semiring == "plus_times":
+        # MXU path: a straight tile contraction.
+        partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        o_ref[...] += partial
+    else:
+        _, _, mul = SEMIRINGS[semiring]
+        # VPU path: rank-expand (bm, bk, bn) then ⊕-reduce over k.
+        expanded = mul(a[:, :, None], b[None, :, :])
+        if semiring in ("max_plus", "max_min"):
+            partial = jnp.max(expanded, axis=1)
+        else:
+            partial = jnp.min(expanded, axis=1)
+        o_ref[...] = add(o_ref[...], partial)
+
+
+def semiring_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    semiring: str = "plus_times",
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked Pallas semiring matmul: ``C[i,j] = ⊕_k A[i,k] ⊗ B[k,j]``.
+
+    Shapes must tile exactly: ``M % bm == K % bk == N % bn == 0`` (the
+    Rust dispatcher pads blocks with the semiring zero, which is exactly
+    the identity this kernel's ⊕-accumulation ignores).
+    """
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}; have {sorted(SEMIRINGS)}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if m % bm or k % bk or n % bn:
+        raise ValueError(f"shape {(m, k, n)} not tiled by blocks {(bm, bk, bn)}")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, semiring=semiring),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def vmem_bytes(semiring: str, bm: int, bk: int, bn: int) -> int:
+    """Estimated VMEM working set of one grid step (f32), used by the
+    DESIGN.md roofline estimate: A, B, O tiles (+ the rank-3 tropical
+    intermediate)."""
+    tiles = bm * bk + bk * bn + bm * bn
+    if semiring != "plus_times":
+        tiles += bm * bk * bn
+    return 4 * tiles

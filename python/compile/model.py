@@ -1,0 +1,46 @@
+"""L2: the JAX compute graphs that get AOT-compiled for the Rust runtime.
+
+Each exported function is a jitted graph over fixed shapes that calls
+the L1 Pallas kernel, so the kernel lowers into the same HLO module the
+Rust PJRT client loads. Python never runs at request time — these
+graphs are lowered once by ``aot.py``.
+
+Exported variants (see ``aot.VARIANTS``):
+
+* ``matmul_<semiring>_<S>`` — S×S×S dense-block semiring matmul
+  (the `@` acceleration path; the Rust side tiles larger operands over
+  this fixed block and ⊕-combines partial blocks).
+* ``accum_<semiring>_<S>`` — fused ``O = (A ⊗.⊕ B) ⊕ C``: one tile
+  contraction *plus* the cross-tile accumulation, so the Rust tiling
+  loop needs one PJRT call per k-step instead of a matmul call and a
+  host-side combine.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.semiring_matmul import SEMIRINGS, semiring_matmul
+
+
+def matmul_fn(semiring: str, size: int, block: int):
+    """A jitted ``(a, b) -> (c,)`` semiring matmul over ``size²`` tiles."""
+
+    def fn(a, b):
+        return (semiring_matmul(a, b, semiring=semiring, bm=block, bk=block, bn=block),)
+
+    spec = jax.ShapeDtypeStruct((size, size), jnp.float32)
+    return jax.jit(fn), (spec, spec)
+
+
+def accum_fn(semiring: str, size: int, block: int):
+    """A jitted ``(a, b, c) -> ((a ⊗.⊕ b) ⊕ c,)`` fused step."""
+    _, add, _ = SEMIRINGS[semiring]
+
+    def fn(a, b, c):
+        partial = semiring_matmul(a, b, semiring=semiring, bm=block, bk=block, bn=block)
+        return (add(partial, c),)
+
+    spec = jax.ShapeDtypeStruct((size, size), jnp.float32)
+    return jax.jit(fn), (spec, spec, spec)

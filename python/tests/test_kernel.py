@@ -1,0 +1,115 @@
+"""L1 correctness: the Pallas semiring-matmul kernel vs the pure-jnp
+oracle — the core build-time correctness signal, swept by hypothesis
+over shapes, blockings, dtypes and semirings."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import semiring_matmul_ref
+from compile.kernels.semiring_matmul import SEMIRINGS, semiring_matmul, vmem_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, shape, dtype, semiring):
+    if semiring == "plus_times":
+        # Small integers: exact in f32, so equality is exact.
+        return rng.integers(-4, 5, size=shape).astype(dtype)
+    # Tropical algebras are exact for any float values.
+    return (rng.standard_normal(shape) * 10).astype(dtype)
+
+
+@pytest.mark.parametrize("semiring", sorted(SEMIRINGS))
+def test_matches_ref_small(semiring):
+    rng = np.random.default_rng(0)
+    a = rand(rng, (16, 8), np.float32, semiring)
+    b = rand(rng, (8, 24), np.float32, semiring)
+    got = semiring_matmul(a, b, semiring=semiring, bm=8, bk=8, bn=8)
+    want = semiring_matmul_ref(a, b, semiring)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("semiring", sorted(SEMIRINGS))
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    block=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matches_ref_swept(semiring, mi, ki, ni, block, seed):
+    """Random tiled shapes x blockings x seeds, exact agreement."""
+    m, k, n = mi * block, ki * block, ni * block
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (m, k), np.float32, semiring)
+    b = rand(rng, (k, n), np.float32, semiring)
+    got = semiring_matmul(a, b, semiring=semiring, bm=block, bk=block, bn=block)
+    want = semiring_matmul_ref(a, b, semiring)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    dtype=st.sampled_from([np.float32, np.float64, np.int32]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_dtype_coercion(dtype, seed):
+    """Inputs of any numeric dtype are computed in f32."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-3, 4, size=(8, 8)).astype(dtype)
+    b = rng.integers(-3, 4, size=(8, 8)).astype(dtype)
+    got = semiring_matmul(a, b, semiring="plus_times", bm=8, bk=8, bn=8)
+    assert got.dtype == jnp.float32
+    want = np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=0, atol=0)
+
+
+def test_tropical_identity_padding_is_inert():
+    """Padding with the semiring zero must not change results — the
+    contract the Rust dispatcher's block-padding relies on."""
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    want = semiring_matmul_ref(a, b, "min_plus")
+    # Embed in a 16x16 problem padded with +inf (min_plus zero).
+    pad_a = np.full((16, 16), np.inf, np.float32)
+    pad_b = np.full((16, 16), np.inf, np.float32)
+    pad_a[:8, :8] = a
+    pad_b[:8, :8] = b
+    got = semiring_matmul(pad_a, pad_b, semiring="min_plus", bm=8, bk=8, bn=8)
+    np.testing.assert_allclose(np.asarray(got)[:8, :8], np.asarray(want), rtol=0, atol=0)
+
+
+def test_plus_times_zero_padding_is_inert():
+    rng = np.random.default_rng(8)
+    a = rng.integers(-3, 4, size=(8, 8)).astype(np.float32)
+    b = rng.integers(-3, 4, size=(8, 8)).astype(np.float32)
+    want = np.asarray(a @ b)
+    pad_a = np.zeros((16, 16), np.float32)
+    pad_b = np.zeros((16, 16), np.float32)
+    pad_a[:8, :8] = a
+    pad_b[:8, :8] = b
+    got = semiring_matmul(pad_a, pad_b, semiring="plus_times", bm=8, bk=8, bn=8)
+    np.testing.assert_allclose(np.asarray(got)[:8, :8], want, rtol=0, atol=0)
+
+
+def test_shape_validation():
+    a = jnp.zeros((8, 8))
+    with pytest.raises(ValueError, match="not tiled"):
+        semiring_matmul(a, a, bm=3, bk=8, bn=8)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        semiring_matmul(jnp.zeros((8, 8)), jnp.zeros((4, 8)), bm=8, bk=8, bn=8)
+    with pytest.raises(ValueError, match="unknown semiring"):
+        semiring_matmul(a, a, semiring="nope")
+
+
+def test_vmem_estimate_shapes():
+    # plus_times: 3 tiles; tropical adds the rank-3 intermediate.
+    assert vmem_bytes("plus_times", 128, 128, 128) == 4 * 3 * 128 * 128
+    assert vmem_bytes("min_plus", 128, 32, 128) > vmem_bytes("plus_times", 128, 32, 128)
+    # The chosen tropical blocking fits comfortably in 16 MiB VMEM.
+    assert vmem_bytes("min_plus", 128, 32, 128) < 16 * 2**20

@@ -1,0 +1,106 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * **condense strategy** — the paper's indptr-mask trick
+//!   (`csr_rows[:-1] < csr_rows[1:]`) vs rebuilding from triples.
+//! * **constructor sort strategy** — the packed-u64 pair sort used by
+//!   the COO builder vs sorting (row, col) tuples of strings.
+//! * **CSR-resident vs COO-resident adj** — what D4M.py pays per `@`
+//!   for keeping COO and converting inside each operation (the
+//!   deviation documented in `assoc`'s module docs).
+//!
+//! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]`
+
+use d4m::assoc::{Assoc, ValsInput};
+use d4m::bench::{FigureHarness, Workload};
+use d4m::semiring::PlusTimes;
+use d4m::sparse::{spgemm, CooMatrix};
+use d4m::util::{time_op, Args};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 12);
+    let repeats = args.usize_or("repeats", 5);
+    let out_dir = args.str_or("out", "results");
+    let w = Workload::generate(n, 77);
+    let ones = w.ones();
+    let a = Assoc::from_triples(&w.rows, &w.cols, ValsInput::Num(ones.clone()));
+    let b = Assoc::from_triples(&w.rows2, &w.cols2, ValsInput::Num(ones.clone()));
+
+    let mut h = FigureHarness::new("ablations", "design-choice ablations (DESIGN.md §5)");
+
+    // --- condense: indptr mask vs triple rebuild ------------------------
+    // Build an un-condensed product (matmul output before cleanup).
+    let k = {
+        use d4m::sorted::sorted_intersect;
+        sorted_intersect(a.col_keys(), b.row_keys())
+    };
+    let all_rows: Vec<usize> = (0..a.row_keys().len()).collect();
+    let all_cols: Vec<usize> = (0..b.col_keys().len()).collect();
+    let ga = a.adj().gather(&all_rows, &k.map_left);
+    let gb = b.adj().gather(&k.map_right, &all_cols);
+    let c_pre = spgemm(&ga, &gb, &PlusTimes).unwrap();
+
+    let t = time_op(1, repeats, |_| {
+        // Paper's strategy: boolean masks from indptr, then select.
+        let rm = c_pre.nonempty_rows();
+        let cm = c_pre.nonempty_cols();
+        c_pre.select(&rm, &cm)
+    });
+    h.record(n, "condense-mask", t, c_pre.nnz());
+
+    let t = time_op(1, repeats, |_| {
+        // Naive strategy: extract triples, re-sort, rebuild.
+        let coo = c_pre.to_coo();
+        let rows: Vec<usize> = coo.row_indices().iter().map(|&r| r as usize).collect();
+        let cols: Vec<usize> = coo.col_indices().iter().map(|&c| c as usize).collect();
+        let (m, nn) = c_pre.shape();
+        CooMatrix::from_triples_aggregate(m, nn, &rows, &cols, coo.values(), 0.0, |x, _| x)
+            .unwrap()
+            .to_csr()
+    });
+    h.record(n, "condense-rebuild", t, c_pre.nnz());
+
+    // --- constructor sort: packed u64 rank pairs vs string tuples -------
+    let t = time_op(1, repeats, |_| {
+        Assoc::from_triples(&w.rows, &w.cols, ValsInput::Num(w.num_vals.clone()))
+    });
+    h.record(n, "ctor-packed-u64", t, a.nnz());
+
+    let t = time_op(1, repeats, |_| {
+        // Strategy D4M.py can't use (no rank packing): sort owned
+        // (row, col, val) string tuples directly.
+        let mut triples: Vec<(String, String, f64)> = (0..w.rows.len())
+            .map(|i| (w.rows[i].clone(), w.cols[i].clone(), w.num_vals[i]))
+            .collect();
+        triples.sort_unstable_by(|x, y| (&x.0, &x.1).cmp(&(&y.0, &y.1)));
+        triples.dedup_by(|x, y| {
+            if x.0 == y.0 && x.1 == y.1 {
+                y.2 = y.2.min(x.2);
+                true
+            } else {
+                false
+            }
+        });
+        triples
+    });
+    h.record(n, "ctor-string-sort", t, a.nnz());
+
+    // --- adj residency: CSR-resident (ours) vs COO + per-op convert -----
+    let t = time_op(1, repeats, |_| a.matmul(&b));
+    h.record(n, "matmul-csr-resident", t, 0);
+
+    let coo_a = a.adj().to_coo();
+    let coo_b = b.adj().to_coo();
+    let t = time_op(1, repeats, |_| {
+        // D4M.py's layout: COO at rest, convert inside the op.
+        let ca = coo_a.to_csr();
+        let cb = coo_b.to_csr();
+        let ga = ca.gather(&all_rows, &k.map_left);
+        let gb = cb.gather(&k.map_right, &all_cols);
+        let c = spgemm(&ga, &gb, &PlusTimes).unwrap();
+        c.to_coo() // and back to the resident format
+    });
+    h.record(n, "matmul-coo-convert", t, 0);
+
+    h.write_csv(&out_dir).expect("write CSV");
+}

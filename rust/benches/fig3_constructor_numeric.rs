@@ -1,0 +1,24 @@
+//! Figure 3 reproduction: `Assoc` constructor runtime, numeric values.
+//!
+//! Paper workload (§III.A): arrays of dimension ≈ 2ⁿ×2ⁿ with 8·2ⁿ
+//! triples, keys = uniform ints in [0, 2ⁿ] cast to strings, values =
+//! uniform ints (numeric). Series: one per engine (paper: Python /
+//! MATLAB / Julia; here: d4m-rs / hashmap / btree — see DESIGN.md §3).
+//!
+//! Usage: `cargo bench --bench fig3_constructor_numeric -- [--full]
+//! [--min-n A] [--max-n B] [--repeats R] [--out DIR]`
+
+mod fig_common;
+
+use d4m::bench::BenchParams;
+use fig_common::{run_figure, OpKind};
+
+fn main() {
+    let params = BenchParams::from_env(18, 12);
+    run_figure(
+        "fig3",
+        "Assoc constructor, numeric values (paper Fig. 3)",
+        OpKind::Construct { string_vals: false },
+        &params,
+    );
+}

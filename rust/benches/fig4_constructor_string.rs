@@ -1,0 +1,20 @@
+//! Figure 4 reproduction: `Assoc` constructor runtime, string values
+//! (≈8 random length-8 strings per row; the constructor additionally
+//! builds the sorted unique value pool and stores 1-based indices).
+//!
+//! Usage: `cargo bench --bench fig4_constructor_string -- [--full] ...`
+
+mod fig_common;
+
+use d4m::bench::BenchParams;
+use fig_common::{run_figure, OpKind};
+
+fn main() {
+    let params = BenchParams::from_env(18, 12);
+    run_figure(
+        "fig4",
+        "Assoc constructor, string values (paper Fig. 4)",
+        OpKind::Construct { string_vals: true },
+        &params,
+    );
+}

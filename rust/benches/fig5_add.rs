@@ -1,0 +1,20 @@
+//! Figure 5 reproduction: element-wise addition `A + B` where
+//! `A = Assoc(rows, cols, 1)` and `B = Assoc(rows2, cols2, 1)` —
+//! sorted-union key alignment + sparse add + condense (paper §II.C.1).
+//!
+//! Usage: `cargo bench --bench fig5_add -- [--full] ...`
+
+mod fig_common;
+
+use d4m::bench::BenchParams;
+use fig_common::{run_figure, BinaryOp, OpKind};
+
+fn main() {
+    let params = BenchParams::from_env(18, 12);
+    run_figure(
+        "fig5",
+        "element-wise addition A + B (paper Fig. 5)",
+        OpKind::Binary(BinaryOp::Add),
+        &params,
+    );
+}

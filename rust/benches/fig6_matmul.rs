@@ -1,0 +1,21 @@
+//! Figure 6 reproduction: associative-array multiplication `A @ B` —
+//! sorted intersection of `A.col ∩ B.row`, SpGEMM, condense (paper
+//! §II.C.3). The paper sweeps n ≤ 17 (vs 18 elsewhere) because of the
+//! op's cost; the full sweep here honors that cap.
+//!
+//! Usage: `cargo bench --bench fig6_matmul -- [--full] ...`
+
+mod fig_common;
+
+use d4m::bench::BenchParams;
+use fig_common::{run_figure, BinaryOp, OpKind};
+
+fn main() {
+    let params = BenchParams::from_env(17, 11);
+    run_figure(
+        "fig6",
+        "array multiplication A @ B (paper Fig. 6)",
+        OpKind::Binary(BinaryOp::Matmul),
+        &params,
+    );
+}

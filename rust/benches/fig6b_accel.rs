@@ -1,0 +1,66 @@
+//! Beyond-paper bench: dense-block PJRT kernel vs host SpGEMM for `@`,
+//! swept over operand density — locates the crossover that justifies
+//! the `should_accelerate` dispatch threshold (DESIGN.md §5).
+//!
+//! Skips (exit 0) when artifacts are missing so `cargo bench` works
+//! before `make artifacts`.
+//!
+//! Usage: `cargo bench --bench fig6b_accel -- [--repeats R] [--out DIR]`
+
+use d4m::assoc::{Assoc, ValsInput};
+use d4m::bench::FigureHarness;
+use d4m::runtime::{accel_matmul, Runtime};
+use d4m::semiring::PlusTimes;
+use d4m::util::{time_op, Args, SplitMix64};
+
+fn random_assoc(seed: u64, keys: u64, density: f64) -> Assoc {
+    let mut r = SplitMix64::new(seed);
+    let triples = ((keys * keys) as f64 * density) as usize;
+    let rows: Vec<String> = (0..triples).map(|_| format!("k{:05}", r.below(keys))).collect();
+    let cols: Vec<String> = (0..triples).map(|_| format!("k{:05}", r.below(keys))).collect();
+    let vals: Vec<f64> = (0..triples).map(|_| r.range_i64(1, 9) as f64).collect();
+    Assoc::from_triples(&rows, &cols, ValsInput::Num(vals))
+}
+
+fn main() {
+    let args = Args::from_env();
+    let repeats = args.usize_or("repeats", 3);
+    let out_dir = args.str_or("out", "results");
+    let rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("fig6b_accel: skipping ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let mut harness = FigureHarness::new(
+        "fig6b",
+        "host SpGEMM vs PJRT dense-block matmul across density (beyond-paper)",
+    );
+    // Encode density as the n column (permille) for CSV compatibility.
+    for (i, density) in [0.002, 0.01, 0.05, 0.1, 0.2].into_iter().enumerate() {
+        let a = random_assoc(100 + i as u64, 512, density);
+        let b = random_assoc(200 + i as u64, 512, density);
+        let permille = (density * 1000.0) as usize;
+
+        let mut nnz = 0usize;
+        let t_host = time_op(1, repeats, |_| {
+            let c = a.matmul_with(&b, &PlusTimes);
+            nnz = c.nnz();
+            c
+        });
+        harness.record(permille, "host-spgemm", t_host, nnz);
+
+        // Warm the kernel cache before timing (first call compiles).
+        let _ = accel_matmul(&rt, &a, &b, &PlusTimes).unwrap();
+        let mut nnz2 = 0usize;
+        let t_pjrt = time_op(0, repeats, |_| {
+            let (c, _) = accel_matmul(&rt, &a, &b, &PlusTimes).unwrap();
+            nnz2 = c.nnz();
+            c
+        });
+        assert_eq!(nnz, nnz2, "PJRT and host results must agree");
+        harness.record(permille, "pjrt-dense", t_pjrt, nnz2);
+    }
+    harness.write_csv(&out_dir).expect("write CSV");
+}

@@ -1,0 +1,22 @@
+//! Figure 7 reproduction: element-wise multiplication `A * B` —
+//! sorted-intersection key alignment + sparse element-wise multiply
+//! (paper §II.C.2). The paper sweeps only n ≤ 13 here "because of the
+//! large running times relative to n" of the MATLAB/Julia engines —
+//! the figure where implementation strategies diverge most.
+//!
+//! Usage: `cargo bench --bench fig7_elemmul -- [--full] ...`
+
+mod fig_common;
+
+use d4m::bench::BenchParams;
+use fig_common::{run_figure, BinaryOp, OpKind};
+
+fn main() {
+    let params = BenchParams::from_env(13, 11);
+    run_figure(
+        "fig7",
+        "element-wise multiplication A * B (paper Fig. 7)",
+        OpKind::Binary(BinaryOp::Elemmul),
+        &params,
+    );
+}

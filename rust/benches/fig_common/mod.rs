@@ -1,0 +1,84 @@
+//! Shared driver for the Figure 3–7 reproduction benches: sweep n,
+//! run one operation on all three engines, record into the harness.
+
+use d4m::baselines::{btree::BTreeEngine, hashmap::HashMapEngine, D4mEngine, Engine};
+use d4m::bench::{BenchParams, FigureHarness, Workload};
+use d4m::util::time_op;
+
+/// Which operand set a figure op needs.
+///
+/// (Each bench binary uses one variant; the cross-binary "unused
+/// variant" lint is silenced since the module is shared source.)
+#[allow(dead_code)]
+pub enum OpKind {
+    /// Figs 3–4: construct from the raw key/value lists.
+    Construct { string_vals: bool },
+    /// Figs 5–7: binary op on `A = Assoc(rows, cols, 1)`,
+    /// `B = Assoc(rows2, cols2, 1)`.
+    Binary(BinaryOp),
+}
+
+/// The binary operations of Figures 5–7.
+#[derive(Clone, Copy)]
+#[allow(dead_code)]
+pub enum BinaryOp {
+    /// Fig 5 — `A + B`.
+    Add,
+    /// Fig 6 — `A @ B`.
+    Matmul,
+    /// Fig 7 — `A * B`.
+    Elemmul,
+}
+
+/// Run one figure: sweep `params.ns()`, measure every engine, write CSV.
+pub fn run_figure(id: &str, title: &str, kind: OpKind, params: &BenchParams) {
+    let mut harness = FigureHarness::new(id, title);
+    for n in params.ns() {
+        let w = Workload::generate(n, 0xD4A7_2022 + n as u64);
+        measure_engine(&D4mEngine, &mut harness, &w, &kind, params);
+        measure_engine(&HashMapEngine, &mut harness, &w, &kind, params);
+        measure_engine(&BTreeEngine, &mut harness, &w, &kind, params);
+    }
+    harness.write_csv(&params.out_dir).expect("write CSV");
+}
+
+fn measure_engine<E: Engine>(
+    engine: &E,
+    harness: &mut FigureHarness,
+    w: &Workload,
+    kind: &OpKind,
+    params: &BenchParams,
+) {
+    match kind {
+        OpKind::Construct { string_vals } => {
+            let mut out_nnz = 0usize;
+            let t = time_op(1, params.repeats, |_| {
+                let a = if *string_vals {
+                    engine.construct_string(&w.rows, &w.cols, &w.str_vals)
+                } else {
+                    engine.construct_numeric(&w.rows, &w.cols, &w.num_vals)
+                };
+                out_nnz = engine.nnz(&a);
+                a
+            });
+            harness.record(w.n, engine.name(), t, out_nnz);
+        }
+        OpKind::Binary(op) => {
+            let ones = w.ones();
+            let a = engine.construct_numeric(&w.rows, &w.cols, &ones);
+            let b = engine.construct_numeric(&w.rows2, &w.cols2, &ones);
+            let mut out_nnz = 0usize;
+            let op = *op;
+            let t = time_op(1, params.repeats, |_| {
+                let c = match op {
+                    BinaryOp::Add => engine.add(&a, &b),
+                    BinaryOp::Matmul => engine.matmul(&a, &b),
+                    BinaryOp::Elemmul => engine.elemmul(&a, &b),
+                };
+                out_nnz = engine.nnz(&c);
+                c
+            });
+            harness.record(w.n, engine.name(), t, out_nnz);
+        }
+    }
+}

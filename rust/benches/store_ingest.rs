@@ -1,0 +1,95 @@
+//! Store-ingest throughput bench — the scaled-down echo of the D4M
+//! lineage's "100,000,000 database inserts per second" Accumulo result
+//! (paper ref [13]): triples/second into the tablet store, swept over
+//! batch size, worker count, and shard policy.
+//!
+//! Usage: `cargo bench --bench store_ingest -- [--triples N] [--out DIR]`
+
+use d4m::bench::FigureHarness;
+use d4m::pipeline::{IngestPipeline, PipelineConfig, ShardPolicy};
+use d4m::store::{Table, TableConfig, Triple, WriterConfig};
+use d4m::util::{time_op, Args, SplitMix64};
+use std::sync::Arc;
+
+fn gen_triples(n: usize, seed: u64) -> Vec<Triple> {
+    let mut r = SplitMix64::new(seed);
+    (0..n)
+        .map(|i| {
+            Triple::new(
+                format!("r{:010}", r.next_u64() % (n as u64)),
+                format!("c{}", i % 32),
+                "1",
+            )
+        })
+        .collect()
+}
+
+fn run(table_cfg: TableConfig, pipe_cfg: PipelineConfig, triples: &[Triple]) -> (f64, usize) {
+    let table = Arc::new(Table::new("ingest", table_cfg));
+    let mut p = IngestPipeline::start(Arc::clone(&table), pipe_cfg);
+    p.submit_all(triples.iter().cloned());
+    let report = p.finish();
+    assert_eq!(report.written, triples.len());
+    (report.rate(), report.stalls)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("triples", 400_000);
+    let repeats = args.usize_or("repeats", 3);
+    let out_dir = args.str_or("out", "results");
+    let triples = gen_triples(n, 9);
+    let mut h = FigureHarness::new("store_ingest", "pipeline ingest throughput (triples/s ×1000)");
+
+    // Sweep batch size (the BatchWriter lever).
+    for (i, batch_bytes) in [4usize << 10, 64 << 10, 1 << 20].into_iter().enumerate() {
+        let mut rate = 0.0;
+        let t = time_op(0, repeats, |_| {
+            let (r, _) = run(
+                TableConfig { split_threshold: 8 << 20, write_latency_us: 0 },
+                PipelineConfig {
+                    workers: 4,
+                    writer: WriterConfig { batch_bytes, ..Default::default() },
+                    ..Default::default()
+                },
+                &triples,
+            );
+            rate = r;
+        });
+        h.record(i, &format!("batch-{}k", batch_bytes >> 10), t, (rate / 1e3) as usize);
+    }
+
+    // Sweep worker count.
+    for workers in [1usize, 2, 4, 8] {
+        let mut rate = 0.0;
+        let t = time_op(0, repeats, |_| {
+            let (r, _) = run(
+                TableConfig { split_threshold: 8 << 20, write_latency_us: 0 },
+                PipelineConfig { workers, ..Default::default() },
+                &triples,
+            );
+            rate = r;
+        });
+        h.record(workers, &format!("workers-{workers}"), t, (rate / 1e3) as usize);
+    }
+
+    // Hash vs range sharding (range pre-split at even boundaries).
+    let splits: Vec<String> = (1..4).map(|i| format!("r{:010}", i * (n as u64) / 4)).collect();
+    for (name, policy) in [
+        ("hash", ShardPolicy::Hash),
+        ("range", ShardPolicy::Range { splits: splits.clone() }),
+    ] {
+        let mut rate = 0.0;
+        let t = time_op(0, repeats, |_| {
+            let (r, _) = run(
+                TableConfig { split_threshold: 8 << 20, write_latency_us: 0 },
+                PipelineConfig { workers: 4, policy: policy.clone(), ..Default::default() },
+                &triples,
+            );
+            rate = r;
+        });
+        h.record(4, &format!("policy-{name}"), t, (rate / 1e3) as usize);
+    }
+
+    h.write_csv(&out_dir).expect("write CSV");
+}

@@ -1,0 +1,152 @@
+//! Tabular display of associative arrays — the Figure 1 rendering.
+
+use super::{Assoc, Val};
+use std::fmt;
+
+/// Maximum rows/columns rendered before truncation.
+const MAX_DISPLAY_ROWS: usize = 20;
+const MAX_DISPLAY_COLS: usize = 12;
+
+impl fmt::Display for Assoc {
+    /// Render as the paper's Figure-1 style table: column keys as the
+    /// header, row keys on the left, empty cells blank. Large arrays are
+    /// truncated with ellipses and a summary line.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_empty() {
+            return writeln!(f, "(empty associative array)");
+        }
+        let (m, n) = self.shape();
+        let show_m = m.min(MAX_DISPLAY_ROWS);
+        let show_n = n.min(MAX_DISPLAY_COLS);
+
+        // Gather cell strings.
+        let col_hdrs: Vec<String> =
+            self.col[..show_n].iter().map(|k| k.to_string()).collect();
+        let row_hdrs: Vec<String> =
+            self.row[..show_m].iter().map(|k| k.to_string()).collect();
+        let mut cells: Vec<Vec<String>> = vec![vec![String::new(); show_n]; show_m];
+        for r in 0..show_m {
+            let (ci, cv) = self.adj.row(r);
+            for (c, v) in ci.iter().zip(cv) {
+                let c = *c as usize;
+                if c < show_n {
+                    cells[r][c] = self.val.decode(*v).to_string();
+                }
+            }
+        }
+
+        // Column widths.
+        let mut rw = row_hdrs.iter().map(String::len).max().unwrap_or(0);
+        rw = rw.max(1);
+        let mut widths: Vec<usize> = col_hdrs.iter().map(String::len).collect();
+        for row in &cells {
+            for (j, cell) in row.iter().enumerate() {
+                widths[j] = widths[j].max(cell.len());
+            }
+        }
+
+        // Header.
+        write!(f, "{:rw$} ", "")?;
+        for (j, h) in col_hdrs.iter().enumerate() {
+            write!(f, " {:>w$}", h, w = widths[j])?;
+        }
+        if n > show_n {
+            write!(f, " …")?;
+        }
+        writeln!(f)?;
+        // Body.
+        for r in 0..show_m {
+            write!(f, "{:rw$} ", row_hdrs[r])?;
+            for (j, cell) in cells[r].iter().enumerate() {
+                write!(f, " {:>w$}", cell, w = widths[j])?;
+            }
+            if n > show_n {
+                write!(f, " …")?;
+            }
+            writeln!(f)?;
+        }
+        if m > show_m {
+            writeln!(f, "… ({m} rows total)")?;
+        }
+        writeln!(
+            f,
+            "[{m}x{n} {} associative array, {} nonempty]",
+            if self.is_numeric() { "numeric" } else { "string" },
+            self.nnz()
+        )
+    }
+}
+
+impl Assoc {
+    /// One-line summary (shape, type, nnz).
+    pub fn summary(&self) -> String {
+        let (m, n) = self.shape();
+        format!(
+            "{}x{} {} assoc, nnz={}",
+            m,
+            n,
+            if self.is_numeric() { "numeric" } else { "string" },
+            self.nnz()
+        )
+    }
+
+    /// A "spy plot" as text: `#` for nonempty cells (small arrays only).
+    pub fn spy(&self) -> String {
+        let (m, n) = self.shape();
+        let mut out = String::new();
+        for r in 0..m.min(40) {
+            let (ci, _) = self.adj.row(r);
+            let mut line = vec![b'.'; n.min(80)];
+            for &c in ci {
+                if (c as usize) < line.len() {
+                    line[c as usize] = b'#';
+                }
+            }
+            out.push_str(std::str::from_utf8(&line).unwrap());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Decoded value at a raw position (for display/debug helpers).
+    pub fn val_at(&self, r: usize, c: usize) -> Option<Val<'_>> {
+        self.adj.get(r, c).map(|v| self.val.decode(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::music;
+    use super::*;
+
+    #[test]
+    fn display_contains_headers_and_values() {
+        let s = music().to_string();
+        assert!(s.contains("artist"));
+        assert!(s.contains("Pink Floyd"));
+        assert!(s.contains("0294.mp3"));
+        assert!(s.contains("[3x3 string associative array, 9 nonempty]"));
+    }
+
+    #[test]
+    fn display_empty() {
+        assert!(Assoc::empty().to_string().contains("empty"));
+    }
+
+    #[test]
+    fn display_truncates_large() {
+        let rows: Vec<String> = (0..50).map(|i| format!("r{i:03}")).collect();
+        let a = Assoc::from_triples(&rows, &["c"], 1.0);
+        let s = a.to_string();
+        assert!(s.contains("(50 rows total)"));
+    }
+
+    #[test]
+    fn summary_and_spy() {
+        let a = music();
+        assert_eq!(a.summary(), "3x3 string assoc, nnz=9");
+        let spy = a.spy();
+        assert_eq!(spy.lines().count(), 3);
+        assert!(spy.lines().all(|l| l == "###"));
+    }
+}

@@ -1,0 +1,286 @@
+//! Sub-array extraction and assignment — `__getitem__`/`__setitem__`
+//! (paper §II.B).
+//!
+//! Two subtleties called out by the paper are implemented faithfully:
+//!
+//! 1. **String slices are inclusive on the right**: `A["a,:,b,", :]`
+//!    selects all keys `k` with `a ≤ k ≤ b` — [`Selector::KeyRange`].
+//! 2. **Integers mean positions, not keys**: `A[1, 0:2]` treats the
+//!    integers as indices into `A.row`/`A.col` (the keys are usually
+//!    strings). [`Selector::Positions`]/[`Selector::PosRange`] are those
+//!    forms; to select a *numeric key*, use `Selector::keys([...])`.
+
+use super::{Assoc, Key};
+use crate::sorted::range_indices;
+
+/// A row- or column-selector for [`Assoc::select`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Selector {
+    /// All keys (`:`).
+    All,
+    /// An explicit set of keys; missing keys are silently ignored
+    /// (D4M extraction never errors on absent keys).
+    Keys(Vec<Key>),
+    /// The *closed* key range `[lo, hi]` — D4M string-slice semantics,
+    /// inclusive on the right (paper §II.B item 1).
+    KeyRange(Key, Key),
+    /// All string keys starting with the given prefix (D4M's
+    /// `StartsWith`).
+    Prefix(String),
+    /// Explicit positions into `A.row`/`A.col` (paper §II.B item 2).
+    /// Out-of-range positions are ignored; order and duplicates are
+    /// preserved in the extracted key list semantics of D4M (the result
+    /// is still a set of keys, so duplicates collapse).
+    Positions(Vec<usize>),
+    /// The half-open position range `[start, end)` — Python slice
+    /// semantics (`A[1, 0:2]`), *exclusive* on the right, in contrast to
+    /// key ranges.
+    PosRange(usize, usize),
+}
+
+impl Selector {
+    /// Selector from anything key-like.
+    pub fn keys<K: Into<Key> + Clone>(keys: &[K]) -> Selector {
+        Selector::Keys(keys.iter().cloned().map(Into::into).collect())
+    }
+
+    /// Closed key range (both endpoints included).
+    pub fn range(lo: impl Into<Key>, hi: impl Into<Key>) -> Selector {
+        Selector::KeyRange(lo.into(), hi.into())
+    }
+
+    /// Resolve to sorted, deduplicated positions into `keys`.
+    fn resolve(&self, keys: &[Key]) -> Vec<usize> {
+        match self {
+            Selector::All => (0..keys.len()).collect(),
+            Selector::Keys(sel) => {
+                let mut pos: Vec<usize> =
+                    sel.iter().filter_map(|k| keys.binary_search(k).ok()).collect();
+                pos.sort_unstable();
+                pos.dedup();
+                pos
+            }
+            Selector::KeyRange(lo, hi) => {
+                let (s, e) = range_indices(keys, lo, hi);
+                (s..e).collect()
+            }
+            Selector::Prefix(p) => {
+                // Prefix p selects the contiguous key range [p, p + U+10FFFF).
+                let lo = Key::str(p.clone());
+                let mut hi_s = p.clone();
+                hi_s.push(char::MAX);
+                let hi = Key::str(hi_s);
+                let (s, e) = range_indices(keys, &lo, &hi);
+                (s..e).collect()
+            }
+            Selector::Positions(ps) => {
+                let mut pos: Vec<usize> =
+                    ps.iter().copied().filter(|&p| p < keys.len()).collect();
+                pos.sort_unstable();
+                pos.dedup();
+                pos
+            }
+            Selector::PosRange(s, e) => (*s..(*e).min(keys.len())).collect(),
+        }
+    }
+}
+
+impl Assoc {
+    /// Extract the sub-array selected by `rows` × `cols`
+    /// (`A[rows, cols]`). The result is condensed: only keys with
+    /// surviving nonempty entries appear (and string pools are pruned).
+    pub fn select(&self, rows: &Selector, cols: &Selector) -> Assoc {
+        let rpos = rows.resolve(&self.row);
+        let cpos = cols.resolve(&self.col);
+        if rpos.is_empty() || cpos.is_empty() {
+            return Assoc::empty();
+        }
+        let adj = self.adj.gather(&rpos, &cpos);
+        let row = rpos.iter().map(|&p| self.row[p].clone()).collect();
+        let col = cpos.iter().map(|&p| self.col[p].clone()).collect();
+        Assoc { row, col, val: self.val.clone(), adj }
+            .condense_pool()
+            .condensed()
+    }
+
+    /// Extract one row as a `1 × n` array (`A[key, :]`).
+    pub fn get_row(&self, key: impl Into<Key>) -> Assoc {
+        self.select(&Selector::Keys(vec![key.into()]), &Selector::All)
+    }
+
+    /// Extract one column as an `m × 1` array (`A[:, key]`).
+    pub fn get_col(&self, key: impl Into<Key>) -> Assoc {
+        self.select(&Selector::All, &Selector::Keys(vec![key.into()]))
+    }
+
+    /// Assign one entry (`A[row, col] = val` — `__setitem__`).
+    ///
+    /// Implemented as a merge-rebuild (D4M arrays are value types built
+    /// for bulk construction; point mutation is O(nnz)). Assigning a
+    /// numeric value to a string array (or vice versa) converts the
+    /// array via the same string-combination rules as `+`.
+    pub fn set(
+        &mut self,
+        row: impl Into<Key>,
+        col: impl Into<Key>,
+        val: impl Into<super::ValsInput>,
+    ) {
+        // Append the raw triple and rebuild with Last semantics (the
+        // patch wins on collision; a zero/empty value deletes, since the
+        // constructor never stores zeros).
+        let (mut r, mut c, v) = self.triples();
+        r.push(row.into());
+        c.push(col.into());
+        let patch: super::ValsInput = val.into();
+        match (v, patch) {
+            (super::ValsInput::Num(mut v), super::ValsInput::Num(pv)) if pv.len() == 1 => {
+                v.push(pv[0]);
+                *self = Assoc::try_new(r, c, super::ValsInput::Num(v), super::Aggregator::Last)
+                    .expect("merged triples");
+            }
+            (super::ValsInput::Num(mut v), super::ValsInput::NumScalar(x)) => {
+                v.push(x);
+                *self = Assoc::try_new(r, c, super::ValsInput::Num(v), super::Aggregator::Last)
+                    .expect("merged triples");
+            }
+            (v, pv) => {
+                // Mixed or string: go through string space.
+                let mut vs = super::ops::vals_to_strings(v);
+                vs.push(match pv {
+                    super::ValsInput::StrScalar(s) => s,
+                    super::ValsInput::NumScalar(x) => {
+                        super::ops::vals_to_strings(super::ValsInput::Num(vec![x])).pop().unwrap()
+                    }
+                    super::ValsInput::Str(mut xs) if xs.len() == 1 => xs.pop().unwrap(),
+                    super::ValsInput::Num(xs) if xs.len() == 1 => {
+                        super::ops::vals_to_strings(super::ValsInput::Num(xs)).pop().unwrap()
+                    }
+                    other => panic!("Assoc::set expects a single value, got {other:?}"),
+                });
+                *self = Assoc::try_new(r, c, super::ValsInput::Str(vs), super::Aggregator::Last)
+                    .expect("merged triples");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc::tests::music;
+
+    #[test]
+    fn select_all_is_identity() {
+        let a = music();
+        assert_eq!(a.select(&Selector::All, &Selector::All), a);
+    }
+
+    #[test]
+    fn select_by_keys() {
+        let a = music();
+        let b = a.select(&Selector::keys(&["0294.mp3", "7802.mp3"]), &Selector::keys(&["genre"]));
+        assert_eq!(b.shape(), (2, 1));
+        assert_eq!(b.get_str("0294.mp3", "genre"), Some("rock"));
+        assert_eq!(b.get_str("7802.mp3", "genre"), Some("pop"));
+    }
+
+    #[test]
+    fn select_missing_keys_ignored() {
+        let a = music();
+        let b = a.select(&Selector::keys(&["0294.mp3", "nope.mp3"]), &Selector::All);
+        assert_eq!(b.shape(), (1, 3));
+    }
+
+    #[test]
+    fn key_range_right_inclusive() {
+        let a = music();
+        // "0294.mp3" ≤ k ≤ "1829.mp3" — both endpoints included.
+        let b = a.select(&Selector::range("0294.mp3", "1829.mp3"), &Selector::All);
+        assert_eq!(b.shape(), (2, 3));
+        assert!(b.get_str("1829.mp3", "genre").is_some());
+    }
+
+    #[test]
+    fn prefix_selector() {
+        let a = music();
+        let b = a.select(&Selector::Prefix("18".into()), &Selector::All);
+        assert_eq!(b.shape(), (1, 3));
+        assert_eq!(b.get_str("1829.mp3", "artist"), Some("Samuel Barber"));
+        // Prefix matching everything.
+        let c = a.select(&Selector::Prefix("".into()), &Selector::All);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn positions_are_indices_not_keys() {
+        let a = music();
+        // Position 1 = second row key "1829.mp3" (paper §II.B item 2).
+        let b = a.select(&Selector::Positions(vec![1]), &Selector::PosRange(0, 2));
+        assert_eq!(b.shape(), (1, 2));
+        assert_eq!(b.get_str("1829.mp3", "artist"), Some("Samuel Barber"));
+        assert_eq!(b.get_str("1829.mp3", "duration"), Some("8:01"));
+        assert_eq!(b.get_str("1829.mp3", "genre"), None); // pos 2 excluded
+    }
+
+    #[test]
+    fn pos_range_clamps() {
+        let a = music();
+        let b = a.select(&Selector::PosRange(0, 99), &Selector::All);
+        assert_eq!(b, a);
+        let c = a.select(&Selector::PosRange(5, 9), &Selector::All);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn select_result_pool_is_pruned() {
+        let a = music();
+        let b = a.select(&Selector::keys(&["0294.mp3"]), &Selector::keys(&["artist"]));
+        assert_eq!(b.values().strings().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn get_row_get_col() {
+        let a = music();
+        let r = a.get_row("0294.mp3");
+        assert_eq!(r.shape(), (1, 3));
+        let c = a.get_col("artist");
+        assert_eq!(c.shape(), (3, 1));
+    }
+
+    #[test]
+    fn set_inserts_and_overwrites() {
+        let mut a = Assoc::from_triples(&["r"], &["c"], vec![1.0]);
+        a.set("r", "c2", 5.0);
+        assert_eq!(a.get_num("r", "c2"), Some(5.0));
+        a.set("r", "c", 9.0); // overwrite
+        assert_eq!(a.get_num("r", "c"), Some(9.0));
+        assert_eq!(a.nnz(), 2);
+    }
+
+    #[test]
+    fn set_zero_deletes() {
+        let mut a = Assoc::from_triples(&["r", "r2"], &["c", "c"], vec![1.0, 2.0]);
+        a.set("r", "c", 0.0);
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.shape(), (1, 1));
+    }
+
+    #[test]
+    fn set_string_value() {
+        let mut a = music();
+        a.set("0294.mp3", "genre", "prog-rock");
+        assert_eq!(a.get_str("0294.mp3", "genre"), Some("prog-rock"));
+        assert_eq!(a.nnz(), 9);
+    }
+
+    #[test]
+    fn select_on_numeric_array() {
+        let a = Assoc::from_triples(&[1i64, 2, 10], &[1i64, 1, 1], 1.0);
+        // Numeric keys selected BY KEY:
+        let b = a.select(&Selector::keys(&[10i64]), &Selector::All);
+        assert_eq!(b.nnz(), 1);
+        // vs BY POSITION:
+        let c = a.select(&Selector::Positions(vec![0]), &Selector::All);
+        assert_eq!(c.get_num(1i64, 1i64), Some(1.0));
+    }
+}

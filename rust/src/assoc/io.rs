@@ -1,0 +1,223 @@
+//! Associative-array I/O: triple TSV files and dense CSV tables.
+//!
+//! D4M's standard interchange formats:
+//!
+//! * **TSV triples** (`row \t col \t val` per line) — the write/read
+//!   format used for bulk data and the store ingest path.
+//! * **CSV tables** — a spreadsheet-shaped file whose first row is the
+//!   column keys and first column the row keys; exactly the tabular
+//!   rendering of Figure 1.
+
+use super::{Aggregator, Assoc, Key, ValsInput};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write `a` as TSV triples (`row\tcol\tval`, one nonempty entry per
+/// line, row-major order).
+pub fn write_tsv(a: &Assoc, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for (r, c, v) in a.iter() {
+        writeln!(w, "{r}\t{c}\t{v}")?;
+    }
+    w.flush()
+}
+
+/// Read TSV triples into an associative array.
+///
+/// Values are parsed as numbers when *every* value parses as `f64`,
+/// otherwise all values are kept as strings (D4M arrays are entirely
+/// numeric or entirely string, paper §I.B). Collisions aggregate with
+/// `agg`.
+pub fn read_tsv(path: impl AsRef<Path>, agg: Aggregator) -> std::io::Result<Assoc> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut rows: Vec<Key> = Vec::new();
+    let mut cols: Vec<Key> = Vec::new();
+    let mut vals: Vec<String> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(3, '\t');
+        let (r, c, v) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(r), Some(c), Some(v)) => (r, c, v),
+            _ => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("line {}: expected row\\tcol\\tval", lineno + 1),
+                ))
+            }
+        };
+        rows.push(Key::str(r));
+        cols.push(Key::str(c));
+        vals.push(v.to_string());
+    }
+    let numeric: Option<Vec<f64>> = vals.iter().map(|v| v.parse::<f64>().ok()).collect();
+    let vals_input = match numeric {
+        Some(nums) => ValsInput::Num(nums),
+        None => ValsInput::Str(vals),
+    };
+    Assoc::try_new(rows, cols, vals_input, agg)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+/// Write `a` as a dense CSV table: header row of column keys, then one
+/// line per row key. Cells are quoted when they contain separators.
+pub fn write_csv_table(a: &Assoc, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    write!(w, "")?;
+    for c in a.col_keys() {
+        write!(w, ",{}", csv_escape(&c.to_string()))?;
+    }
+    writeln!(w)?;
+    for (r, key) in a.row_keys().iter().enumerate() {
+        write!(w, "{}", csv_escape(&key.to_string()))?;
+        let (ci, cv) = a.adj().row(r);
+        let mut cells = vec![String::new(); a.col_keys().len()];
+        for (c, v) in ci.iter().zip(cv) {
+            cells[*c as usize] = a.values().decode(*v).to_string();
+        }
+        for cell in cells {
+            write!(w, ",{}", csv_escape(&cell))?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()
+}
+
+/// Read a dense CSV table (first row = column keys, first column = row
+/// keys) into an associative array; empty cells are unstored.
+pub fn read_csv_table(path: impl AsRef<Path>) -> std::io::Result<Assoc> {
+    let content = std::fs::read_to_string(path)?;
+    let mut lines = content.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "empty CSV"))?;
+    let col_keys: Vec<String> = split_csv(header).into_iter().skip(1).collect();
+    let mut rows: Vec<Key> = Vec::new();
+    let mut cols: Vec<Key> = Vec::new();
+    let mut vals: Vec<String> = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let fields = split_csv(line);
+        let rkey = &fields[0];
+        for (j, cell) in fields.iter().skip(1).enumerate() {
+            if !cell.is_empty() && j < col_keys.len() {
+                rows.push(Key::str(rkey.as_str()));
+                cols.push(Key::str(col_keys[j].as_str()));
+                vals.push(cell.clone());
+            }
+        }
+    }
+    let numeric: Option<Vec<f64>> = vals.iter().map(|v| v.parse::<f64>().ok()).collect();
+    let vals_input = match numeric {
+        Some(nums) => ValsInput::Num(nums),
+        None => ValsInput::Str(vals),
+    };
+    Assoc::try_new(rows, cols, vals_input, Aggregator::Min)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Minimal CSV field splitter with quote handling.
+fn split_csv(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(ch) = chars.next() {
+        match ch {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut field));
+            }
+            c => field.push(c),
+        }
+    }
+    out.push(field);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::music;
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("d4m-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn tsv_roundtrip_string() {
+        let a = music();
+        let p = tmp("music.tsv");
+        write_tsv(&a, &p).unwrap();
+        let b = read_tsv(&p, Aggregator::Min).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tsv_roundtrip_numeric() {
+        let a = Assoc::from_triples(&["r1", "r2"], &["c1", "c2"], vec![1.5, -2.0]);
+        let p = tmp("nums.tsv");
+        write_tsv(&a, &p).unwrap();
+        let b = read_tsv(&p, Aggregator::Min).unwrap();
+        assert_eq!(a, b);
+        assert!(b.is_numeric());
+    }
+
+    #[test]
+    fn tsv_bad_line_errors() {
+        let p = tmp("bad.tsv");
+        std::fs::write(&p, "only_two\tfields\n").unwrap();
+        assert!(read_tsv(&p, Aggregator::Min).is_err());
+    }
+
+    #[test]
+    fn csv_table_roundtrip() {
+        let a = music();
+        let p = tmp("music.csv");
+        write_csv_table(&a, &p).unwrap();
+        let b = read_csv_table(&p).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let a = Assoc::from_triples(&["r,1"], &["c\"2"], &["va,l\"ue"][..]);
+        let p = tmp("quoted.csv");
+        write_csv_table(&a, &p).unwrap();
+        let b = read_csv_table(&p).unwrap();
+        assert_eq!(b.get_str("r,1", "c\"2"), Some("va,l\"ue"));
+    }
+
+    #[test]
+    fn split_csv_cases() {
+        assert_eq!(split_csv("a,b,c"), vec!["a", "b", "c"]);
+        assert_eq!(split_csv("\"a,b\",c"), vec!["a,b", "c"]);
+        assert_eq!(split_csv("\"x\"\"y\""), vec!["x\"y"]);
+        assert_eq!(split_csv(""), vec![""]);
+    }
+}

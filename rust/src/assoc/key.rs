@@ -1,0 +1,246 @@
+//! Associative-array keys.
+//!
+//! D4M key spaces "consist of all strings and numbers" (paper §I.B).
+//! [`Key`] is that union, with a *total* order so keys can live in the
+//! sorted unique `row`/`col` vectors: numbers order among themselves by
+//! value, strings lexicographically, and every number sorts before every
+//! string (a fixed, documented convention — D4M.py inherits whatever
+//! NumPy's mixed-dtype sort does; any consistent choice preserves the
+//! algebra, which only needs *a* total order).
+//!
+//! `NaN` keys are rejected at construction: a NaN would poison the sort
+//! order and can never compare equal to itself on lookup.
+
+use std::borrow::Borrow;
+use std::cmp::Ordering;
+use std::fmt;
+
+/// A row or column key: a finite number or a string.
+#[derive(Debug, Clone)]
+pub enum Key {
+    /// Numeric key (finite `f64`; integers display without a decimal).
+    Num(f64),
+    /// String key.
+    Str(Box<str>),
+}
+
+impl Key {
+    /// Build a numeric key; panics on NaN (infinite keys are allowed —
+    /// they are orderable).
+    pub fn num(v: f64) -> Key {
+        assert!(!v.is_nan(), "NaN cannot be an associative-array key");
+        Key::Num(v)
+    }
+
+    /// Build a string key.
+    pub fn str(s: impl Into<Box<str>>) -> Key {
+        Key::Str(s.into())
+    }
+
+    /// The string content, if this is a string key.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Key::Str(s) => Some(s),
+            Key::Num(_) => None,
+        }
+    }
+
+    /// The numeric value, if this is a numeric key.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Key::Num(v) => Some(*v),
+            Key::Str(_) => None,
+        }
+    }
+}
+
+impl PartialEq for Key {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Key::Num(a), Key::Num(b)) => a == b,
+            (Key::Str(a), Key::Str(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl Eq for Key {}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        match (self, other) {
+            // Finite/non-NaN by construction, so partial_cmp is total here.
+            (Key::Num(a), Key::Num(b)) => a.partial_cmp(b).expect("NaN key"),
+            (Key::Str(a), Key::Str(b)) => a.cmp(b),
+            (Key::Num(_), Key::Str(_)) => Ordering::Less,
+            (Key::Str(_), Key::Num(_)) => Ordering::Greater,
+        }
+    }
+}
+
+impl std::hash::Hash for Key {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        match self {
+            Key::Num(v) => {
+                state.write_u8(0);
+                // Normalize -0.0 to 0.0 so equal keys hash equally.
+                let v = if *v == 0.0 { 0.0f64 } else { *v };
+                state.write_u64(v.to_bits());
+            }
+            Key::Str(s) => {
+                state.write_u8(1);
+                s.hash(state);
+            }
+        }
+    }
+}
+
+impl fmt::Display for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Key::Num(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    write!(f, "{}", *v as i64)
+                } else {
+                    write!(f, "{v}")
+                }
+            }
+            Key::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl From<&str> for Key {
+    fn from(s: &str) -> Key {
+        Key::str(s)
+    }
+}
+
+impl From<String> for Key {
+    fn from(s: String) -> Key {
+        Key::str(s)
+    }
+}
+
+impl From<&String> for Key {
+    fn from(s: &String) -> Key {
+        Key::str(s.as_str())
+    }
+}
+
+impl From<f64> for Key {
+    fn from(v: f64) -> Key {
+        Key::num(v)
+    }
+}
+
+impl From<i64> for Key {
+    fn from(v: i64) -> Key {
+        Key::num(v as f64)
+    }
+}
+
+impl From<i32> for Key {
+    fn from(v: i32) -> Key {
+        Key::num(v as f64)
+    }
+}
+
+impl From<usize> for Key {
+    fn from(v: usize) -> Key {
+        Key::num(v as f64)
+    }
+}
+
+impl From<&Key> for Key {
+    fn from(k: &Key) -> Key {
+        k.clone()
+    }
+}
+
+impl Borrow<str> for Key {
+    /// Allows `&[Key]` lookups by `&str` in sorted containers when every
+    /// key is a string. Numeric keys never equal a `str`, so this borrow
+    /// is only meaningful for string keys; calling it on a numeric key
+    /// returns an empty string sentinel (and will simply fail lookups).
+    fn borrow(&self) -> &str {
+        self.as_str().unwrap_or("")
+    }
+}
+
+/// Convert a slice of key-like things into a `Vec<Key>`.
+pub fn keys_from<K: Into<Key> + Clone>(xs: &[K]) -> Vec<Key> {
+    xs.iter().cloned().map(Into::into).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_numbers_before_strings() {
+        let mut keys = vec![Key::str("a"), Key::num(10.0), Key::str("0"), Key::num(-1.0)];
+        keys.sort();
+        assert_eq!(
+            keys,
+            vec![Key::num(-1.0), Key::num(10.0), Key::str("0"), Key::str("a")]
+        );
+    }
+
+    #[test]
+    fn numeric_order_is_by_value_not_lex() {
+        assert!(Key::num(2.0) < Key::num(10.0)); // "10" < "2" lexically — numbers aren't strings
+    }
+
+    #[test]
+    fn string_order_is_lex() {
+        assert!(Key::str("10") < Key::str("2")); // the paper's int-cast-to-string keys sort this way
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Key::num(3.0).to_string(), "3");
+        assert_eq!(Key::num(3.5).to_string(), "3.5");
+        assert_eq!(Key::str("abc").to_string(), "abc");
+    }
+
+    #[test]
+    fn equality_across_variants_is_false() {
+        assert_ne!(Key::num(1.0), Key::str("1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn nan_key_rejected() {
+        Key::num(f64::NAN);
+    }
+
+    #[test]
+    fn hash_consistent_with_eq() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(Key::num(0.0));
+        assert!(set.contains(&Key::num(-0.0)));
+        set.insert(Key::str("x"));
+        assert!(set.contains(&Key::str("x")));
+        assert!(!set.contains(&Key::str("y")));
+    }
+
+    #[test]
+    fn conversions() {
+        let k: Key = "s".into();
+        assert_eq!(k, Key::str("s"));
+        let k: Key = 7i64.into();
+        assert_eq!(k, Key::num(7.0));
+        let k: Key = 7usize.into();
+        assert_eq!(k, Key::num(7.0));
+        let ks = keys_from(&["a", "b"]);
+        assert_eq!(ks, vec![Key::str("a"), Key::str("b")]);
+    }
+}

@@ -1,0 +1,875 @@
+//! Associative arrays — D4M's central data model (paper §I–II).
+//!
+//! An [`Assoc`] is a finite-support function `A : I × J → V` from pairs
+//! of (string or numeric) keys to a semiring's values, stored exactly as
+//! the paper's four attributes:
+//!
+//! * `row` — sorted unique row keys of the nonempty entries,
+//! * `col` — sorted unique column keys,
+//! * `val` — the numeric flag **or** the sorted unique string pool
+//!   ([`Values`]),
+//! * `adj` — a sparse matrix of the values (numeric case) or of 1-based
+//!   pool indices (string case).
+//!
+//! One deliberate deviation from D4M.py: `adj` is kept resident in
+//! **CSR** rather than COO. D4M.py stores COO and converts to CSR/CSC
+//! inside every operation (the paper's own profiling calls out these
+//! conversions as a dominant cost of `@`); keeping CSR moves that
+//! conversion cost into the constructor once and eliminates it from the
+//! operators. COO views remain available via [`Assoc::adj`]`.to_coo()`.
+//!
+//! Submodules: [`ops`](self) (`+ * @`, transpose, logical, reductions),
+//! indexing (sub-array extraction/assignment, D4M string-slice
+//! semantics), tabular display, and TSV/CSV I/O.
+
+mod fmt;
+mod index;
+mod io;
+mod key;
+mod ops;
+mod scalar;
+mod schema;
+mod values;
+
+pub use index::Selector;
+pub use io::{read_csv_table, read_tsv, write_csv_table, write_tsv};
+pub use key::{keys_from, Key};
+pub use schema::{col2type, val2col};
+pub use values::{Val, ValsInput, Values};
+
+use crate::sorted::sort_dedup_with_index;
+use crate::sparse::{CooMatrix, CsrMatrix};
+
+/// Collision-aggregation policy for the constructor (paper §II.A: "an
+/// associative, commutative binary operation (default min)").
+///
+/// `First`/`Last` resolve collisions by input order and are therefore
+/// not commutative; they are provided for ingest convenience (matching
+/// D4M's practical usage) and documented as order-dependent.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Aggregator {
+    /// Keep the minimum (numeric or lexicographic) — the D4M default.
+    Min,
+    /// Keep the maximum.
+    Max,
+    /// Sum values (numeric arrays only).
+    Sum,
+    /// Multiply values (numeric arrays only).
+    Prod,
+    /// Keep the first value in input order.
+    First,
+    /// Keep the last value in input order (assignment semantics).
+    Last,
+    /// Concatenate strings with a separator (string arrays only).
+    Concat(String),
+}
+
+/// Errors from associative-array construction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AssocError {
+    /// Triple inputs cannot be broadcast to one common length.
+    LengthMismatch { rows: usize, cols: usize, vals: Option<usize> },
+    /// Aggregator incompatible with the value type (e.g. `Sum` on strings).
+    BadAggregator { agg: &'static str, value_type: &'static str },
+    /// `from_parts` given inconsistent attribute shapes.
+    BadParts(String),
+}
+
+impl std::fmt::Display for AssocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AssocError::LengthMismatch { rows, cols, vals } => write!(
+                f,
+                "cannot broadcast triple lengths rows={rows} cols={cols} vals={vals:?}"
+            ),
+            AssocError::BadAggregator { agg, value_type } => {
+                write!(f, "aggregator {agg} is not defined for {value_type} values")
+            }
+            AssocError::BadParts(msg) => write!(f, "inconsistent Assoc parts: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for AssocError {}
+
+/// A D4M associative array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assoc {
+    pub(crate) row: Vec<Key>,
+    pub(crate) col: Vec<Key>,
+    pub(crate) val: Values,
+    pub(crate) adj: CsrMatrix,
+}
+
+impl Assoc {
+    // ------------------------------------------------------------------
+    // Constructors
+    // ------------------------------------------------------------------
+
+    /// The empty associative array (stored as numeric, paper §II.A).
+    pub fn empty() -> Assoc {
+        Assoc {
+            row: Vec::new(),
+            col: Vec::new(),
+            val: Values::Numeric,
+            adj: CsrMatrix::zeros(0, 0),
+        }
+    }
+
+    /// Full constructor: `Assoc(row, col, val, aggregate=agg)`.
+    ///
+    /// `rows`/`cols`/`vals` must have one common length after broadcasting
+    /// length-1 (or scalar `vals`) inputs. Collisions — duplicate
+    /// `(row, col)` pairs — are resolved by `agg`. Entries whose
+    /// (aggregated) value is the zero of its algebra (`0.0` for numbers,
+    /// `""` for strings) are dropped, and keys that end up with no
+    /// nonempty entries do not appear in `row`/`col`.
+    pub fn try_new(
+        rows: Vec<Key>,
+        cols: Vec<Key>,
+        vals: ValsInput,
+        agg: Aggregator,
+    ) -> Result<Assoc, AssocError> {
+        // --- broadcast to a common length -----------------------------
+        let n = broadcast_len(rows.len(), cols.len(), vals.len()).ok_or(
+            AssocError::LengthMismatch { rows: rows.len(), cols: cols.len(), vals: vals.len() },
+        )?;
+        if n == 0 {
+            return Ok(Assoc::empty());
+        }
+        let rows = broadcast_keys(rows, n);
+        let cols = broadcast_keys(cols, n);
+
+        // --- sort + dedup key spaces (with index maps) -----------------
+        // Specialized digest sort (see sorted::keysort) — the generic
+        // permutation sort was ~65% of constructor time in profiles.
+        let (row_keys, rmap) = crate::sorted::sort_dedup_keys(&rows);
+        let (col_keys, cmap) = crate::sorted::sort_dedup_keys(&cols);
+
+        match vals {
+            ValsInput::Num(v) => {
+                let v = if v.len() == 1 && n > 1 { vec![v[0]; n] } else { v };
+                Self::build_numeric(row_keys, col_keys, rmap, cmap, v, agg)
+            }
+            ValsInput::NumScalar(x) => {
+                Self::build_numeric(row_keys, col_keys, rmap, cmap, vec![x; n], agg)
+            }
+            ValsInput::Str(v) => {
+                let v = if v.len() == 1 && n > 1 { vec![v[0].clone(); n] } else { v };
+                Self::build_string(row_keys, col_keys, rmap, cmap, v, agg)
+            }
+            ValsInput::StrScalar(s) => {
+                Self::build_string(row_keys, col_keys, rmap, cmap, vec![s; n], agg)
+            }
+        }
+    }
+
+    /// Convenience constructor with the D4M default aggregator (`Min`);
+    /// panics on length mismatch. Accepts anything key-like and
+    /// value-like:
+    ///
+    /// ```
+    /// use d4m::assoc::Assoc;
+    /// let a = Assoc::from_triples(&["r1", "r2"], &["c", "c"], &["x", "y"][..]);
+    /// assert_eq!(a.nnz(), 2);
+    /// let b = Assoc::from_triples(&["r1"], &["c"], 1.0); // scalar broadcast
+    /// assert_eq!(b.get_num("r1", "c"), Some(1.0));
+    /// ```
+    pub fn from_triples<K1, K2, V>(rows: &[K1], cols: &[K2], vals: V) -> Assoc
+    where
+        K1: Into<Key> + Clone,
+        K2: Into<Key> + Clone,
+        V: Into<ValsInput>,
+    {
+        Assoc::try_new(keys_from(rows), keys_from(cols), vals.into(), Aggregator::Min)
+            .expect("Assoc::from_triples: bad inputs")
+    }
+
+    /// Constructor with an explicit aggregator (still panicking).
+    pub fn from_triples_agg<K1, K2, V>(rows: &[K1], cols: &[K2], vals: V, agg: Aggregator) -> Assoc
+    where
+        K1: Into<Key> + Clone,
+        K2: Into<Key> + Clone,
+        V: Into<ValsInput>,
+    {
+        Assoc::try_new(keys_from(rows), keys_from(cols), vals.into(), agg)
+            .expect("Assoc::from_triples_agg: bad inputs")
+    }
+
+    fn build_numeric(
+        row_keys: Vec<Key>,
+        col_keys: Vec<Key>,
+        rmap: Vec<usize>,
+        cmap: Vec<usize>,
+        vals: Vec<f64>,
+        agg: Aggregator,
+    ) -> Result<Assoc, AssocError> {
+        if vals.len() != rmap.len() {
+            return Err(AssocError::LengthMismatch {
+                rows: rmap.len(),
+                cols: cmap.len(),
+                vals: Some(vals.len()),
+            });
+        }
+        let agg_fn: fn(f64, f64) -> f64 = match agg {
+            Aggregator::Min => f64::min,
+            Aggregator::Max => f64::max,
+            Aggregator::Sum => |a, b| a + b,
+            Aggregator::Prod => |a, b| a * b,
+            Aggregator::First => |a, _| a,
+            Aggregator::Last => |_, b| b,
+            Aggregator::Concat(_) => {
+                return Err(AssocError::BadAggregator { agg: "Concat", value_type: "numeric" })
+            }
+        };
+        let coo = CooMatrix::from_triples_aggregate(
+            row_keys.len(),
+            col_keys.len(),
+            &rmap,
+            &cmap,
+            &vals,
+            0.0,
+            agg_fn,
+        )
+        .expect("index maps are in bounds by construction");
+        let adj = coo.to_csr();
+        Ok(Assoc { row: row_keys, col: col_keys, val: Values::Numeric, adj }.condensed())
+    }
+
+    fn build_string(
+        row_keys: Vec<Key>,
+        col_keys: Vec<Key>,
+        rmap: Vec<usize>,
+        cmap: Vec<usize>,
+        vals: Vec<String>,
+        agg: Aggregator,
+    ) -> Result<Assoc, AssocError> {
+        if vals.len() != rmap.len() {
+            return Err(AssocError::LengthMismatch {
+                rows: rmap.len(),
+                cols: cmap.len(),
+                vals: Some(vals.len()),
+            });
+        }
+        match agg {
+            Aggregator::Sum => {
+                return Err(AssocError::BadAggregator { agg: "Sum", value_type: "string" })
+            }
+            Aggregator::Prod => {
+                return Err(AssocError::BadAggregator { agg: "Prod", value_type: "string" })
+            }
+            Aggregator::Concat(sep) => {
+                // General path: aggregate in string space, then intern.
+                return Ok(Self::build_string_concat(row_keys, col_keys, rmap, cmap, vals, &sep));
+            }
+            _ => {}
+        }
+        // Fast path (Min/Max/First/Last): intern values first; because
+        // the pool is sorted, lexicographic min/max on strings is
+        // numeric min/max on (1-based) pool indices.
+        let (pool, vmap) = crate::sorted::sort_dedup_strs(&vals);
+        let stored: Vec<f64> = vmap.iter().map(|&k| (k + 1) as f64).collect();
+        let agg_fn: fn(f64, f64) -> f64 = match agg {
+            Aggregator::Min => f64::min,
+            Aggregator::Max => f64::max,
+            Aggregator::First => |a, _| a,
+            Aggregator::Last => |_, b| b,
+            _ => unreachable!(),
+        };
+        // Note: empty-string values participate in aggregation
+        // (min("", "x") == ""); the pool may contain "" at index 1 (it
+        // sorts first), stripped after aggregation.
+        let coo = CooMatrix::from_triples_aggregate(
+            row_keys.len(),
+            col_keys.len(),
+            &rmap,
+            &cmap,
+            &stored,
+            0.0,
+            agg_fn,
+        )
+        .expect("index maps in bounds");
+        let assoc = Assoc {
+            row: row_keys,
+            col: col_keys,
+            val: Values::Strings(pool.into_iter().map(String::into_boxed_str).collect()),
+            adj: coo.to_csr(),
+        };
+        Ok(assoc.strip_empty_string().condense_pool().condensed())
+    }
+
+    fn build_string_concat(
+        row_keys: Vec<Key>,
+        col_keys: Vec<Key>,
+        rmap: Vec<usize>,
+        cmap: Vec<usize>,
+        vals: Vec<String>,
+        sep: &str,
+    ) -> Assoc {
+        // Group triples by (row, col) in row-major order, preserving
+        // input order within groups, and concatenate.
+        let n = vals.len();
+        let mut keyed: Vec<(u64, u32)> = (0..n)
+            .map(|i| (((rmap[i] as u64) << 32) | cmap[i] as u64, i as u32))
+            .collect();
+        keyed.sort_unstable();
+        let mut agg_rows = Vec::new();
+        let mut agg_cols = Vec::new();
+        let mut agg_vals: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let key = keyed[i].0;
+            let mut s = vals[keyed[i].1 as usize].clone();
+            i += 1;
+            while i < n && keyed[i].0 == key {
+                s.push_str(sep);
+                s.push_str(&vals[keyed[i].1 as usize]);
+                i += 1;
+            }
+            agg_rows.push((key >> 32) as usize);
+            agg_cols.push((key & 0xFFFF_FFFF) as usize);
+            agg_vals.push(s);
+        }
+        let (pool, vmap) = sort_dedup_with_index(&agg_vals);
+        let stored: Vec<f64> = vmap.iter().map(|&k| (k + 1) as f64).collect();
+        let coo = CooMatrix::from_triples_aggregate(
+            row_keys.len(),
+            col_keys.len(),
+            &agg_rows,
+            &agg_cols,
+            &stored,
+            0.0,
+            |a, _| a,
+        )
+        .expect("aggregated triples are unique");
+        let assoc = Assoc {
+            row: row_keys,
+            col: col_keys,
+            val: Values::Strings(pool.into_iter().map(String::into_boxed_str).collect()),
+            adj: coo.to_csr(),
+        };
+        assoc.strip_empty_string().condense_pool().condensed()
+    }
+
+    /// The paper's second constructor form: attributes given directly
+    /// (`Assoc(row, col, val, adj=sp_mat)`). Validates consistency.
+    pub fn from_parts(
+        row: Vec<Key>,
+        col: Vec<Key>,
+        val: Values,
+        adj: CsrMatrix,
+    ) -> Result<Assoc, AssocError> {
+        let (m, n) = adj.shape();
+        if row.len() != m || col.len() != n {
+            return Err(AssocError::BadParts(format!(
+                "adj is {m}x{n} but |row|={} |col|={}",
+                row.len(),
+                col.len()
+            )));
+        }
+        if !crate::sorted::is_sorted_unique(&row) || !crate::sorted::is_sorted_unique(&col) {
+            return Err(AssocError::BadParts("row/col keys must be sorted unique".into()));
+        }
+        if let Values::Strings(pool) = &val {
+            if !pool.windows(2).all(|w| w[0] < w[1]) {
+                return Err(AssocError::BadParts("string pool must be sorted unique".into()));
+            }
+            let k = pool.len() as f64;
+            for &v in adj.values() {
+                if v.fract() != 0.0 || v < 1.0 || v > k {
+                    return Err(AssocError::BadParts(format!(
+                        "adj value {v} is not a 1-based pool index (pool size {k})"
+                    )));
+                }
+            }
+        }
+        Ok(Assoc { row, col, val, adj }.condensed())
+    }
+
+    // ------------------------------------------------------------------
+    // Attributes (the paper's A.row / A.col / A.val / A.adj)
+    // ------------------------------------------------------------------
+
+    /// Sorted unique row keys (`A.row`).
+    pub fn row_keys(&self) -> &[Key] {
+        &self.row
+    }
+
+    /// Sorted unique column keys (`A.col`).
+    pub fn col_keys(&self) -> &[Key] {
+        &self.col
+    }
+
+    /// The value pool / numeric flag (`A.val`).
+    pub fn values(&self) -> &Values {
+        &self.val
+    }
+
+    /// The adjacency sparse matrix (`A.adj`), CSR-resident.
+    pub fn adj(&self) -> &CsrMatrix {
+        &self.adj
+    }
+
+    /// `(number of row keys, number of column keys)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.row.len(), self.col.len())
+    }
+
+    /// Number of nonempty entries.
+    pub fn nnz(&self) -> usize {
+        self.adj.nnz()
+    }
+
+    /// True when the array has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.nnz() == 0
+    }
+
+    /// True when values are numeric (the empty array counts as numeric,
+    /// paper §II.A).
+    pub fn is_numeric(&self) -> bool {
+        self.val.is_numeric()
+    }
+
+    // ------------------------------------------------------------------
+    // Point access
+    // ------------------------------------------------------------------
+
+    /// Position of a row key, if present.
+    pub fn find_row(&self, key: &Key) -> Option<usize> {
+        self.row.binary_search(key).ok()
+    }
+
+    /// Position of a column key, if present.
+    pub fn find_col(&self, key: &Key) -> Option<usize> {
+        self.col.binary_search(key).ok()
+    }
+
+    /// Value at `(row, col)`, decoded; `None` when unstored (= the
+    /// conventional zero-padding of the full key space, paper §I.A).
+    pub fn get(&self, row: impl Into<Key>, col: impl Into<Key>) -> Option<Val<'_>> {
+        let (r, c) = (row.into(), col.into());
+        let ri = self.find_row(&r)?;
+        let ci = self.find_col(&c)?;
+        self.adj.get(ri, ci).map(|stored| self.val.decode(stored))
+    }
+
+    /// Numeric value at `(row, col)` (`None` if unstored or a string).
+    pub fn get_num(&self, row: impl Into<Key>, col: impl Into<Key>) -> Option<f64> {
+        self.get(row, col).and_then(|v| v.as_num())
+    }
+
+    /// String value at `(row, col)` (`None` if unstored or numeric).
+    pub fn get_str(&self, row: impl Into<Key>, col: impl Into<Key>) -> Option<&str> {
+        match (self.find_row(&row.into()), self.find_col(&col.into())) {
+            (Some(ri), Some(ci)) => match (self.adj.get(ri, ci), &self.val) {
+                (Some(stored), Values::Strings(pool)) => Some(&pool[stored as usize - 1]),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// Iterate all nonempty entries as `(row_key, col_key, value)`.
+    pub fn iter(&self) -> impl Iterator<Item = (&Key, &Key, Val<'_>)> + '_ {
+        (0..self.row.len()).flat_map(move |r| {
+            let (ci, cv) = self.adj.row(r);
+            ci.iter()
+                .zip(cv)
+                .map(move |(c, v)| (&self.row[r], &self.col[*c as usize], self.val.decode(*v)))
+        })
+    }
+
+    /// Extract the `(rows, cols, vals)` triple lists that reconstruct
+    /// this array (the paper's `find`-style extraction used by string
+    /// addition). String values are cloned out of the pool.
+    pub fn triples(&self) -> (Vec<Key>, Vec<Key>, ValsInput) {
+        let mut rows = Vec::with_capacity(self.nnz());
+        let mut cols = Vec::with_capacity(self.nnz());
+        match &self.val {
+            Values::Numeric => {
+                let mut vals = Vec::with_capacity(self.nnz());
+                for (r, c, v) in self.entries_raw() {
+                    rows.push(self.row[r].clone());
+                    cols.push(self.col[c].clone());
+                    vals.push(v);
+                }
+                (rows, cols, ValsInput::Num(vals))
+            }
+            Values::Strings(pool) => {
+                let mut vals = Vec::with_capacity(self.nnz());
+                for (r, c, v) in self.entries_raw() {
+                    rows.push(self.row[r].clone());
+                    cols.push(self.col[c].clone());
+                    vals.push(pool[v as usize - 1].to_string());
+                }
+                (rows, cols, ValsInput::Str(vals))
+            }
+        }
+    }
+
+    /// Raw `(row_idx, col_idx, stored_value)` iterator.
+    pub(crate) fn entries_raw(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.row.len()).flat_map(move |r| {
+            let (ci, cv) = self.adj.row(r);
+            ci.iter().zip(cv).map(move |(c, v)| (r, *c as usize, *v))
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Maintenance (condense & friends — paper §II.C.1)
+    // ------------------------------------------------------------------
+
+    /// Remove rows/columns with no nonempty entries, shrinking `row`,
+    /// `col` and `adj` consistently — the paper's `.condense()`.
+    /// Normalizes a fully-empty result to the canonical empty array.
+    pub(crate) fn condensed(self) -> Assoc {
+        if self.nnz() == 0 {
+            return Assoc::empty();
+        }
+        let row_mask = self.adj.nonempty_rows();
+        let col_mask = self.adj.nonempty_cols();
+        if row_mask.iter().all(|&b| b) && col_mask.iter().all(|&b| b) {
+            return self; // already condensed — common fast path
+        }
+        let adj = self.adj.select(&row_mask, &col_mask);
+        let row = mask_keys(self.row, &row_mask);
+        let col = mask_keys(self.col, &col_mask);
+        Assoc { row, col, val: self.val, adj }
+    }
+
+    /// Drop string-pool entries no longer referenced by `adj`, and
+    /// renumber stored indices. No-op for numeric arrays.
+    pub(crate) fn condense_pool(self) -> Assoc {
+        let pool = match &self.val {
+            Values::Numeric => return self,
+            Values::Strings(pool) => pool,
+        };
+        let mut used = vec![false; pool.len()];
+        for &v in self.adj.values() {
+            used[v as usize - 1] = true;
+        }
+        if used.iter().all(|&u| u) {
+            return self;
+        }
+        // old (1-based) -> new (1-based) index map.
+        let mut remap = vec![0f64; pool.len() + 1];
+        let mut new_pool = Vec::new();
+        for (i, keep) in used.iter().enumerate() {
+            if *keep {
+                new_pool.push(pool[i].clone());
+                remap[i + 1] = new_pool.len() as f64;
+            }
+        }
+        let adj = self.adj.map_values(0.0, |v| remap[v as usize]);
+        Assoc { row: self.row, col: self.col, val: Values::Strings(new_pool), adj }
+    }
+
+    /// Remove entries whose value is the empty string (the string-zero;
+    /// "zeros are unstored"). No-op for numeric arrays or pools without
+    /// an empty string (it can only be pool index 1, since "" sorts
+    /// first).
+    pub(crate) fn strip_empty_string(self) -> Assoc {
+        let has_empty = match &self.val {
+            Values::Strings(pool) => pool.first().is_some_and(|s| s.is_empty()),
+            Values::Numeric => false,
+        };
+        if !has_empty {
+            return self;
+        }
+        // Drop stored index 1 (""), shift the rest down, drop "" from pool.
+        let adj = self.adj.map_values(0.0, |v| if v == 1.0 { 0.0 } else { v - 1.0 });
+        let pool = match self.val {
+            Values::Strings(pool) => pool[1..].to_vec(),
+            Values::Numeric => unreachable!(),
+        };
+        Assoc { row: self.row, col: self.col, val: Values::Strings(pool), adj }
+    }
+}
+
+/// Compute the common broadcast length of the three constructor inputs.
+/// `None` for vals means scalar (matches anything).
+fn broadcast_len(r: usize, c: usize, v: Option<usize>) -> Option<usize> {
+    let n = r.max(c).max(v.unwrap_or(0));
+    let ok = |len: usize| len == n || len == 1;
+    if !ok(r) || !ok(c) {
+        return None;
+    }
+    if let Some(v) = v {
+        if !ok(v) {
+            return None;
+        }
+    }
+    Some(n)
+}
+
+fn broadcast_keys(mut keys: Vec<Key>, n: usize) -> Vec<Key> {
+    if keys.len() == 1 && n > 1 {
+        let k = keys.pop().unwrap();
+        vec![k; n]
+    } else {
+        keys
+    }
+}
+
+fn mask_keys(keys: Vec<Key>, mask: &[bool]) -> Vec<Key> {
+    keys.into_iter()
+        .zip(mask)
+        .filter_map(|(k, &keep)| keep.then_some(k))
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// The paper's Figure 1/2 example array.
+    pub(crate) fn music() -> Assoc {
+        Assoc::from_triples(
+            &[
+                "0294.mp3", "0294.mp3", "0294.mp3", "1829.mp3", "1829.mp3", "1829.mp3",
+                "7802.mp3", "7802.mp3", "7802.mp3",
+            ],
+            &[
+                "artist", "duration", "genre", "artist", "duration", "genre", "artist",
+                "duration", "genre",
+            ],
+            &[
+                "Pink Floyd", "6:53", "rock", "Samuel Barber", "8:01", "classical",
+                "Taylor Swift", "10:12", "pop",
+            ][..],
+        )
+    }
+
+    #[test]
+    fn figure2_attributes() {
+        let a = music();
+        let rows: Vec<String> = a.row_keys().iter().map(|k| k.to_string()).collect();
+        assert_eq!(rows, vec!["0294.mp3", "1829.mp3", "7802.mp3"]);
+        let cols: Vec<String> = a.col_keys().iter().map(|k| k.to_string()).collect();
+        assert_eq!(cols, vec!["artist", "duration", "genre"]);
+        // The paper's Fig 2 pool, sorted: "10:12","6:53","8:01","Pink
+        // Floyd","Samuel Barber","Taylor Swift","classical","pop","rock"
+        let pool: Vec<&str> =
+            a.values().strings().unwrap().iter().map(|s| s.as_ref()).collect();
+        assert_eq!(
+            pool,
+            vec![
+                "10:12", "6:53", "8:01", "Pink Floyd", "Samuel Barber", "Taylor Swift",
+                "classical", "pop", "rock"
+            ]
+        );
+        // Spot-check the 1-based index correspondence of Fig 2's adj.
+        assert_eq!(a.get_str("0294.mp3", "artist"), Some("Pink Floyd"));
+        assert_eq!(a.get_str("7802.mp3", "duration"), Some("10:12"));
+        assert_eq!(a.get_str("1829.mp3", "genre"), Some("classical"));
+        assert_eq!(a.get_str("1829.mp3", "nope"), None);
+    }
+
+    #[test]
+    fn numeric_constructor_and_access() {
+        let a = Assoc::from_triples(&["r1", "r2"], &["c1", "c2"], vec![2.0, 3.0]);
+        assert_eq!(a.get_num("r1", "c1"), Some(2.0));
+        assert_eq!(a.get_num("r2", "c2"), Some(3.0));
+        assert_eq!(a.get_num("r1", "c2"), None);
+        assert!(a.is_numeric());
+        assert_eq!(a.shape(), (2, 2));
+    }
+
+    #[test]
+    fn scalar_broadcast() {
+        let a = Assoc::from_triples(&["a", "b", "c"], &["x", "y", "z"], 1.0);
+        assert_eq!(a.nnz(), 3);
+        assert!(a.iter().all(|(_, _, v)| v == Val::Num(1.0)));
+        // length-1 key broadcast too
+        let b = Assoc::from_triples(&["r"], &["x", "y", "z"], 1.0);
+        assert_eq!(b.shape(), (1, 3));
+        assert_eq!(b.nnz(), 3);
+    }
+
+    #[test]
+    fn default_min_aggregation_on_collision() {
+        let a = Assoc::from_triples(&["r", "r"], &["c", "c"], vec![5.0, 3.0]);
+        assert_eq!(a.get_num("r", "c"), Some(3.0));
+        let s = Assoc::from_triples(&["r", "r"], &["c", "c"], &["zeta", "alpha"][..]);
+        assert_eq!(s.get_str("r", "c"), Some("alpha"));
+    }
+
+    #[test]
+    fn aggregators_numeric() {
+        let mk = |agg| {
+            Assoc::from_triples_agg(&["r", "r"], &["c", "c"], vec![5.0, 3.0], agg)
+                .get_num("r", "c")
+                .unwrap()
+        };
+        assert_eq!(mk(Aggregator::Min), 3.0);
+        assert_eq!(mk(Aggregator::Max), 5.0);
+        assert_eq!(mk(Aggregator::Sum), 8.0);
+        assert_eq!(mk(Aggregator::Prod), 15.0);
+        assert_eq!(mk(Aggregator::First), 5.0);
+        assert_eq!(mk(Aggregator::Last), 3.0);
+    }
+
+    #[test]
+    fn string_first_last_respect_input_order() {
+        let mk = |agg| {
+            Assoc::from_triples_agg(
+                &["r", "r", "r"],
+                &["c", "c", "c"],
+                &["mid", "zzz", "aaa"][..],
+                agg,
+            )
+        };
+        assert_eq!(mk(Aggregator::First).get_str("r", "c"), Some("mid"));
+        assert_eq!(mk(Aggregator::Last).get_str("r", "c"), Some("aaa"));
+        assert_eq!(mk(Aggregator::Max).get_str("r", "c"), Some("zzz"));
+    }
+
+    #[test]
+    fn concat_aggregator_on_strings() {
+        let a = Assoc::from_triples_agg(
+            &["r", "r", "r"],
+            &["c", "c", "c"],
+            &["x", "y", "z"][..],
+            Aggregator::Concat(";".into()),
+        );
+        assert_eq!(a.get_str("r", "c"), Some("x;y;z"));
+    }
+
+    #[test]
+    fn bad_aggregators_rejected() {
+        let err = Assoc::try_new(
+            keys_from(&["r"]),
+            keys_from(&["c"]),
+            ValsInput::Str(vec!["x".into()]),
+            Aggregator::Sum,
+        )
+        .unwrap_err();
+        assert!(matches!(err, AssocError::BadAggregator { .. }));
+        let err = Assoc::try_new(
+            keys_from(&["r"]),
+            keys_from(&["c"]),
+            ValsInput::Num(vec![1.0]),
+            Aggregator::Concat(",".into()),
+        )
+        .unwrap_err();
+        assert!(matches!(err, AssocError::BadAggregator { .. }));
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let err = Assoc::try_new(
+            keys_from(&["a", "b"]),
+            keys_from(&["c", "d", "e"]),
+            ValsInput::NumScalar(1.0),
+            Aggregator::Min,
+        )
+        .unwrap_err();
+        assert!(matches!(err, AssocError::LengthMismatch { .. }));
+    }
+
+    #[test]
+    fn zero_values_unstored() {
+        let a = Assoc::from_triples(&["r1", "r2"], &["c1", "c2"], vec![0.0, 1.0]);
+        assert_eq!(a.nnz(), 1);
+        // r1/c1 must not linger in the key space.
+        assert_eq!(a.shape(), (1, 1));
+        assert!(a.find_row(&Key::str("r1")).is_none());
+    }
+
+    #[test]
+    fn empty_string_values_unstored() {
+        let a = Assoc::from_triples(&["r1", "r2"], &["c1", "c2"], &["", "x"][..]);
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.shape(), (1, 1));
+        assert_eq!(a.get_str("r2", "c2"), Some("x"));
+        // Pool contains only "x".
+        assert_eq!(a.values().strings().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn aggregation_to_zero_condenses() {
+        let a = Assoc::from_triples_agg(
+            &["r", "r", "s"],
+            &["c", "c", "d"],
+            vec![2.0, -2.0, 1.0],
+            Aggregator::Sum,
+        );
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.shape(), (1, 1));
+    }
+
+    #[test]
+    fn empty_constructor_inputs() {
+        let a = Assoc::from_triples::<&str, &str, _>(&[], &[], ValsInput::Num(vec![]));
+        assert!(a.is_empty());
+        assert!(a.is_numeric());
+        assert_eq!(a, Assoc::empty());
+    }
+
+    #[test]
+    fn numeric_keys_work() {
+        let a = Assoc::from_triples(&[1i64, 2, 10], &[1i64, 1, 1], 1.0);
+        let rows: Vec<f64> = a.row_keys().iter().map(|k| k.as_num().unwrap()).collect();
+        assert_eq!(rows, vec![1.0, 2.0, 10.0]); // numeric order, not lex
+        assert_eq!(a.get_num(10i64, 1i64), Some(1.0));
+    }
+
+    #[test]
+    fn from_parts_validation() {
+        use crate::sparse::CsrMatrix;
+        // Shape mismatch.
+        let err = Assoc::from_parts(
+            keys_from(&["a"]),
+            keys_from(&["b", "c"]),
+            Values::Numeric,
+            CsrMatrix::zeros(2, 2),
+        )
+        .unwrap_err();
+        assert!(matches!(err, AssocError::BadParts(_)));
+        // Unsorted keys.
+        let err = Assoc::from_parts(
+            vec![Key::str("b"), Key::str("a")],
+            keys_from(&["c", "d"]),
+            Values::Numeric,
+            CsrMatrix::zeros(2, 2),
+        )
+        .unwrap_err();
+        assert!(matches!(err, AssocError::BadParts(_)));
+    }
+
+    #[test]
+    fn from_parts_roundtrip() {
+        let a = music();
+        let b = Assoc::from_parts(a.row.clone(), a.col.clone(), a.val.clone(), a.adj.clone())
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn triples_roundtrip_string() {
+        let a = music();
+        let (r, c, v) = a.triples();
+        let b = Assoc::try_new(r, c, v, Aggregator::Min).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn triples_roundtrip_numeric() {
+        let a = Assoc::from_triples(&["r1", "r2", "r3"], &["c1", "c1", "c2"], vec![3.0, 1.0, 2.0]);
+        let (r, c, v) = a.triples();
+        let b = Assoc::try_new(r, c, v, Aggregator::Min).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn iter_yields_sorted_row_major() {
+        let a = music();
+        let entries: Vec<(String, String)> =
+            a.iter().map(|(r, c, _)| (r.to_string(), c.to_string())).collect();
+        let mut sorted = entries.clone();
+        sorted.sort();
+        assert_eq!(entries, sorted);
+        assert_eq!(entries.len(), 9);
+    }
+}

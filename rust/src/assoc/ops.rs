@@ -1,0 +1,798 @@
+//! Associative-array algebra: `+`, `*`, `@`, transpose, logical,
+//! reductions — paper §II.C, implemented exactly by its recipes:
+//!
+//! * **Addition** (numeric): sorted union of key spaces (with index
+//!   maps), re-index both `adj`s onto the union, sparse add, condense.
+//! * **Addition** (string): extract both triple lists, append, rebuild
+//!   with concatenation aggregation (the `combine` method).
+//! * **Element-wise multiplication**: sorted intersections, restrict +
+//!   re-index, sparse element-wise multiply, condense. Mixed
+//!   string×numeric acts as a mask; numeric×string reduces via
+//!   `B.logical()`.
+//! * **Multiplication** (`@`): sorted intersection `A.col ∩ B.row`,
+//!   restrict + re-index, SpGEMM, condense. String operands go through
+//!   `.logical()` first.
+//!
+//! Every operation is also exposed with an explicit [`Semiring`]
+//! (`add_with`, `elemmul_with`, `matmul_with`) — the paper's future-work
+//! "user-selected semiring operations".
+
+use super::{Aggregator, Assoc, Key, ValsInput, Values};
+use crate::semiring::{FnSemiring, PlusTimes, Semiring};
+use crate::sorted::{sorted_intersect, sorted_union};
+use crate::sparse::spgemm;
+
+impl Assoc {
+    // ------------------------------------------------------------------
+    // logical / transpose
+    // ------------------------------------------------------------------
+
+    /// Replace every nonempty entry by numeric `1` (paper §II.C.2: "can
+    /// be very easily achieved by replacing `B.val` with 1.0 and
+    /// `B.adj.data` with ones").
+    pub fn logical(&self) -> Assoc {
+        Assoc {
+            row: self.row.clone(),
+            col: self.col.clone(),
+            val: Values::Numeric,
+            adj: self.adj.map_values(0.0, |_| 1.0),
+        }
+    }
+
+    /// Transpose: `Aᵀ[j, i] = A[i, j]`.
+    pub fn transpose(&self) -> Assoc {
+        Assoc {
+            row: self.col.clone(),
+            col: self.row.clone(),
+            val: self.val.clone(),
+            adj: self.adj.transpose(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // element-wise addition
+    // ------------------------------------------------------------------
+
+    /// Element-wise addition `A + B` with D4M semantics: numeric arrays
+    /// add under plus-times; if either operand is a string array, values
+    /// combine by concatenation (paper §II.C.1), with numeric values
+    /// rendered to strings first.
+    pub fn add(&self, other: &Assoc) -> Assoc {
+        if self.is_string() || other.is_string() {
+            return self.combine_strings(other, Aggregator::Concat(String::new()));
+        }
+        self.add_with(other, &PlusTimes)
+    }
+
+    /// Numeric element-wise addition under an explicit semiring's `⊕`
+    /// (string operands are `logical()`-ed first).
+    pub fn add_with(&self, other: &Assoc, s: &dyn Semiring) -> Assoc {
+        let a = self.as_numeric();
+        let b = other.as_numeric();
+        if a.is_empty() {
+            return b.into_owned();
+        }
+        if b.is_empty() {
+            return a.into_owned();
+        }
+        let (a, b) = (a.as_ref(), b.as_ref());
+        // Sorted unions with index maps (paper §II.C.1).
+        let ru = sorted_union(&a.row, &b.row);
+        let cu = sorted_union(&a.col, &b.col);
+        let nrows = ru.keys.len();
+        let ncols = cu.keys.len();
+        // Re-shape and re-index both adjs onto the union key space.
+        let ea = a.adj.expand(nrows, ncols, &ru.map_left, &cu.map_left);
+        let eb = b.adj.expand(nrows, ncols, &ru.map_right, &cu.map_right);
+        let adj = ea.add(&eb, s).expect("expanded shapes match");
+        Assoc { row: ru.keys, col: cu.keys, val: Values::Numeric, adj }.condensed()
+    }
+
+    /// The paper's `combine`: element-wise merge over the *union* of key
+    /// spaces with a chosen aggregator — concatenation gives string `+`,
+    /// `Min`/`Max` give element-wise min/max. Values of both operands
+    /// are taken as strings (numeric values are rendered).
+    pub fn combine_strings(&self, other: &Assoc, agg: Aggregator) -> Assoc {
+        let (mut r1, mut c1, v1) = self.triples();
+        let (r2, c2, v2) = other.triples();
+        let mut vals = vals_to_strings(v1);
+        r1.extend(r2);
+        c1.extend(c2);
+        vals.extend(vals_to_strings(v2));
+        // Collisions occur between at most one value from each operand,
+        // at most once per key pair (paper §II.C.1).
+        Assoc::try_new(r1, c1, ValsInput::Str(vals), agg)
+            .expect("triples from well-formed operands")
+    }
+
+    /// Element-wise min over the union (numeric or string).
+    pub fn elemmin(&self, other: &Assoc) -> Assoc {
+        if self.is_string() || other.is_string() {
+            return self.combine_strings(other, Aggregator::Min);
+        }
+        // Numeric: min over union. Values may be negative, so "absent"
+        // must behave as an identity, not as 0 — combine via triples.
+        self.combine_numeric(other, f64::min)
+    }
+
+    /// Element-wise max over the union (numeric or string).
+    pub fn elemmax(&self, other: &Assoc) -> Assoc {
+        if self.is_string() || other.is_string() {
+            return self.combine_strings(other, Aggregator::Max);
+        }
+        self.combine_numeric(other, f64::max)
+    }
+
+    fn combine_numeric(&self, other: &Assoc, agg: fn(f64, f64) -> f64) -> Assoc {
+        let a = self.as_numeric();
+        let b = other.as_numeric();
+        let (r, c, v) = collect_union_triples(a.as_ref(), b.as_ref(), agg);
+        Assoc::try_new(r, c, ValsInput::Num(v), Aggregator::First).expect("well-formed triples")
+    }
+
+    // ------------------------------------------------------------------
+    // element-wise multiplication
+    // ------------------------------------------------------------------
+
+    /// Element-wise multiplication `A * B` with D4M's type rules
+    /// (paper §II.C.2):
+    ///
+    /// * numeric × numeric — multiply over the intersection;
+    /// * string × numeric — the numeric array acts as a **mask** on the
+    ///   string array;
+    /// * numeric × string — the string array is `logical()`-ed, reducing
+    ///   to the numeric case (note the asymmetry with the previous rule);
+    /// * string × string — element-wise lexicographic `min` over the
+    ///   intersection (the string algebra's ⊗).
+    pub fn elemmul(&self, other: &Assoc) -> Assoc {
+        match (self.is_string(), other.is_string()) {
+            (false, false) => self.elemmul_with(other, &PlusTimes),
+            (true, false) => self.mask_by(other),
+            (false, true) => self.elemmul_with(&other.logical(), &PlusTimes),
+            (true, true) => self.string_elemmul(other),
+        }
+    }
+
+    /// Numeric element-wise multiplication under an explicit semiring's
+    /// `⊗` (string operands `logical()`-ed first).
+    pub fn elemmul_with(&self, other: &Assoc, s: &dyn Semiring) -> Assoc {
+        let a = self.as_numeric();
+        let b = other.as_numeric();
+        let (a, b) = (a.as_ref(), b.as_ref());
+        let ri = sorted_intersect(&a.row, &b.row);
+        let ci = sorted_intersect(&a.col, &b.col);
+        if ri.keys.is_empty() || ci.keys.is_empty() {
+            return Assoc::empty();
+        }
+        let ga = a.adj.gather(&ri.map_left, &ci.map_left);
+        let gb = b.adj.gather(&ri.map_right, &ci.map_right);
+        let adj = ga.multiply(&gb, s).expect("gathered shapes match");
+        Assoc { row: ri.keys, col: ci.keys, val: Values::Numeric, adj }.condensed()
+    }
+
+    /// Keep this (string) array's entries wherever `mask` is nonempty.
+    fn mask_by(&self, mask: &Assoc) -> Assoc {
+        let ri = sorted_intersect(&self.row, &mask.row);
+        let ci = sorted_intersect(&self.col, &mask.col);
+        if ri.keys.is_empty() || ci.keys.is_empty() {
+            return Assoc::empty();
+        }
+        let ga = self.adj.gather(&ri.map_left, &ci.map_left);
+        let gb = mask.logical().adj.gather(&ri.map_right, &ci.map_right);
+        // stored-index × 1.0 = stored-index: plus-times multiply keeps
+        // the pool pointers intact where the mask is set.
+        let adj = ga.multiply(&gb, &PlusTimes).expect("shapes match");
+        Assoc { row: ri.keys, col: ci.keys, val: self.val.clone(), adj }
+            .condense_pool()
+            .condensed()
+    }
+
+    /// String × string element-wise `min` (the string semiring's ⊗).
+    fn string_elemmul(&self, other: &Assoc) -> Assoc {
+        // Merge the two pools so lexicographic order is index order.
+        let (pa, pb) = (self.pool(), other.pool());
+        let merged = sorted_union(pa, pb);
+        let remap_a: Vec<f64> =
+            merged.map_left.iter().map(|&i| (i + 1) as f64).collect();
+        let remap_b: Vec<f64> =
+            merged.map_right.iter().map(|&i| (i + 1) as f64).collect();
+        let ri = sorted_intersect(&self.row, &other.row);
+        let ci = sorted_intersect(&self.col, &other.col);
+        if ri.keys.is_empty() || ci.keys.is_empty() {
+            return Assoc::empty();
+        }
+        let ga = self
+            .adj
+            .gather(&ri.map_left, &ci.map_left)
+            .map_values(0.0, |v| remap_a[v as usize - 1]);
+        let gb = other
+            .adj
+            .gather(&ri.map_right, &ci.map_right)
+            .map_values(0.0, |v| remap_b[v as usize - 1]);
+        // min on merged-pool indices == lexicographic min on strings.
+        fn idx_min(a: f64, b: f64) -> f64 {
+            a.min(b)
+        }
+        fn never(_: f64, _: f64) -> f64 {
+            unreachable!("multiply never calls ⊕")
+        }
+        let s = FnSemiring::new("string_min", 0.0, f64::NAN, never, idx_min);
+        let adj = ga.multiply(&gb, &s).expect("shapes match");
+        Assoc {
+            row: ri.keys,
+            col: ci.keys,
+            val: Values::Strings(merged.keys),
+            adj,
+        }
+        .condense_pool()
+        .condensed()
+    }
+
+    // ------------------------------------------------------------------
+    // array multiplication
+    // ------------------------------------------------------------------
+
+    /// Associative-array multiplication `A @ B` (plus-times). String
+    /// operands are converted via `.logical()` first (paper §II.C.3:
+    /// "associative array multiplication is currently defined only for
+    /// numerical associative arrays").
+    pub fn matmul(&self, other: &Assoc) -> Assoc {
+        self.matmul_with(other, &PlusTimes)
+    }
+
+    /// `A ⊗.⊕ B` under an explicit semiring.
+    pub fn matmul_with(&self, other: &Assoc, s: &dyn Semiring) -> Assoc {
+        let a = self.as_numeric();
+        let b = other.as_numeric();
+        let (a, b) = (a.as_ref(), b.as_ref());
+        // Contract over A.col ∩ B.row (paper §II.C.3).
+        let k = sorted_intersect(&a.col, &b.row);
+        if k.keys.is_empty() {
+            return Assoc::empty();
+        }
+        let all_rows: Vec<usize> = (0..a.row.len()).collect();
+        let all_cols: Vec<usize> = (0..b.col.len()).collect();
+        let ga = a.adj.gather(&all_rows, &k.map_left);
+        let gb = b.adj.gather(&k.map_right, &all_cols);
+        let adj = spgemm(&ga, &gb, s).expect("contracted shapes match");
+        Assoc { row: a.row.clone(), col: b.col.clone(), val: Values::Numeric, adj }.condensed()
+    }
+
+    /// D4M's `CatKeyMul`: array multiplication that records *which*
+    /// contraction keys produced each output entry instead of the
+    /// numeric sum — `C[i,j] = "k₁;k₂;…"` over all `k ∈ A.col ∩ B.row`
+    /// with `A[i,k]` and `B[k,j]` both nonempty. The standard D4M
+    /// provenance idiom: a graph product that remembers its witnesses.
+    pub fn catkeymul(&self, other: &Assoc, sep: &str) -> Assoc {
+        let a = self.as_numeric();
+        let b = other.as_numeric();
+        let (a, b) = (a.as_ref(), b.as_ref());
+        let kx = sorted_intersect(&a.col, &b.row);
+        if kx.keys.is_empty() {
+            return Assoc::empty();
+        }
+        let all_rows: Vec<usize> = (0..a.row.len()).collect();
+        let all_cols: Vec<usize> = (0..b.col.len()).collect();
+        let ga = a.adj.gather(&all_rows, &kx.map_left);
+        let gb = b.adj.gather(&kx.map_right, &all_cols);
+        // Row-wise expansion: for each (i, k, j) contributing pair,
+        // append key k's name to C[i, j]'s witness list. Keys arrive in
+        // sorted-k order per (i, j) because we scan k within row i in
+        // column order and merge per-j lists via a BTreeMap.
+        let mut witnesses: std::collections::BTreeMap<(usize, usize), String> =
+            std::collections::BTreeMap::new();
+        for i in 0..all_rows.len() {
+            let (kcols, _) = ga.row(i);
+            for &k in kcols {
+                let kname = kx.keys[k as usize].to_string();
+                let (jcols, _) = gb.row(k as usize);
+                for &j in jcols {
+                    witnesses
+                        .entry((i, j as usize))
+                        .and_modify(|s| {
+                            s.push_str(sep);
+                            s.push_str(&kname);
+                        })
+                        .or_insert_with(|| kname.clone());
+                }
+            }
+        }
+        let mut rows = Vec::with_capacity(witnesses.len());
+        let mut cols = Vec::with_capacity(witnesses.len());
+        let mut vals = Vec::with_capacity(witnesses.len());
+        for ((i, j), s) in witnesses {
+            rows.push(a.row[i].clone());
+            cols.push(b.col[j].clone());
+            vals.push(s);
+        }
+        Assoc::try_new(rows, cols, ValsInput::Str(vals), Aggregator::First)
+            .expect("catkeymul triples")
+    }
+
+    /// Correlation `AᵀA` — the canonical D4M facet/graph construction.
+    pub fn sqin(&self) -> Assoc {
+        self.transpose().matmul(self)
+    }
+
+    /// Correlation `AAᵀ`.
+    pub fn sqout(&self) -> Assoc {
+        self.matmul(&self.transpose())
+    }
+
+    // ------------------------------------------------------------------
+    // reductions
+    // ------------------------------------------------------------------
+
+    /// Sum along an axis (string arrays are `logical()`-ed first, so
+    /// this counts nonempty entries). `axis = 0` collapses rows
+    /// (result is `1 × ncols`, row key `1`); `axis = 1` collapses
+    /// columns (result is `nrows × 1`, column key `1`).
+    pub fn sum(&self, axis: usize) -> Assoc {
+        self.reduce(axis, &PlusTimes)
+    }
+
+    /// Count of nonempty entries along an axis (degree vectors).
+    pub fn count(&self, axis: usize) -> Assoc {
+        self.logical().reduce(axis, &PlusTimes)
+    }
+
+    /// Reduce along an axis with a semiring's `⊕`.
+    pub fn reduce(&self, axis: usize, s: &dyn Semiring) -> Assoc {
+        let a = self.as_numeric();
+        let a = a.as_ref();
+        assert!(axis < 2, "axis must be 0 (collapse rows) or 1 (collapse columns)");
+        let key1 = vec![Key::num(1.0)];
+        if axis == 0 {
+            let sums = a.adj.reduce_cols(s);
+            let cols = a.col.clone();
+            Assoc::try_new(
+                key1,
+                cols,
+                ValsInput::Num(sums),
+                Aggregator::First,
+            )
+            .expect("reduction triples")
+        } else {
+            let sums = a.adj.reduce_rows(s);
+            let rows = a.row.clone();
+            Assoc::try_new(
+                rows,
+                key1,
+                ValsInput::Num(sums),
+                Aggregator::First,
+            )
+            .expect("reduction triples")
+        }
+    }
+
+    /// Total of all nonempty values (string arrays: count of entries).
+    pub fn total(&self) -> f64 {
+        match &self.val {
+            Values::Numeric => self.adj.values().iter().sum(),
+            Values::Strings(_) => self.nnz() as f64,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // helpers
+    // ------------------------------------------------------------------
+
+    /// True when values are strings.
+    pub fn is_string(&self) -> bool {
+        !self.val.is_numeric()
+    }
+
+    fn pool(&self) -> &[Box<str>] {
+        self.val.strings().expect("string array")
+    }
+
+    /// A numeric view: identity for numeric arrays, `logical()` for
+    /// string arrays.
+    fn as_numeric(&self) -> std::borrow::Cow<'_, Assoc> {
+        if self.is_numeric() {
+            std::borrow::Cow::Borrowed(self)
+        } else {
+            std::borrow::Cow::Owned(self.logical())
+        }
+    }
+}
+
+pub(crate) fn vals_to_strings(v: ValsInput) -> Vec<String> {
+    match v {
+        ValsInput::Str(v) => v,
+        ValsInput::Num(v) => v
+            .into_iter()
+            .map(|x| {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    format!("{}", x as i64)
+                } else {
+                    format!("{x}")
+                }
+            })
+            .collect(),
+        ValsInput::NumScalar(_) | ValsInput::StrScalar(_) => {
+            unreachable!("triples() never yields scalars")
+        }
+    }
+}
+
+/// Union-merge the numeric triples of two arrays with `agg` applied on
+/// collisions (exactly one collision per common key pair).
+fn collect_union_triples(
+    a: &Assoc,
+    b: &Assoc,
+    agg: fn(f64, f64) -> f64,
+) -> (Vec<Key>, Vec<Key>, Vec<f64>) {
+    use std::collections::BTreeMap;
+    let mut m: BTreeMap<(Key, Key), f64> = BTreeMap::new();
+    for (r, c, v) in a.iter() {
+        m.insert((r.clone(), c.clone()), v.as_num().expect("numeric"));
+    }
+    for (r, c, v) in b.iter() {
+        let v = v.as_num().expect("numeric");
+        m.entry((r.clone(), c.clone()))
+            .and_modify(|x| *x = agg(*x, v))
+            .or_insert(v);
+    }
+    let mut rows = Vec::with_capacity(m.len());
+    let mut cols = Vec::with_capacity(m.len());
+    let mut vals = Vec::with_capacity(m.len());
+    for ((r, c), v) in m {
+        rows.push(r);
+        cols.push(c);
+        vals.push(v);
+    }
+    (rows, cols, vals)
+}
+
+/// `A + B` (operator form).
+impl std::ops::Add<&Assoc> for &Assoc {
+    type Output = Assoc;
+    fn add(self, rhs: &Assoc) -> Assoc {
+        Assoc::add(self, rhs)
+    }
+}
+
+/// `A * B` — element-wise multiplication (operator form; `@` has no Rust
+/// operator, use [`Assoc::matmul`]).
+impl std::ops::Mul<&Assoc> for &Assoc {
+    type Output = Assoc;
+    fn mul(self, rhs: &Assoc) -> Assoc {
+        Assoc::elemmul(self, rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc::tests::music;
+    use crate::semiring::{MaxPlus, MinPlus};
+    use crate::util::prop::check;
+
+    fn num(rows: &[&str], cols: &[&str], vals: &[f64]) -> Assoc {
+        Assoc::from_triples(rows, cols, vals.to_vec())
+    }
+
+    #[test]
+    fn numeric_add_union_semantics() {
+        let a = num(&["r1", "r1"], &["c1", "c2"], &[1.0, 2.0]);
+        let b = num(&["r1", "r2"], &["c2", "c3"], &[10.0, 5.0]);
+        let c = &a + &b;
+        assert_eq!(c.get_num("r1", "c1"), Some(1.0));
+        assert_eq!(c.get_num("r1", "c2"), Some(12.0));
+        assert_eq!(c.get_num("r2", "c3"), Some(5.0));
+        assert_eq!(c.shape(), (2, 3));
+    }
+
+    #[test]
+    fn add_with_empty_is_identity() {
+        let a = num(&["r"], &["c"], &[3.0]);
+        assert_eq!(&a + &Assoc::empty(), a);
+        assert_eq!(&Assoc::empty() + &a, a);
+    }
+
+    #[test]
+    fn add_cancellation_condenses() {
+        let a = num(&["r1", "r2"], &["c1", "c2"], &[1.0, 1.0]);
+        let b = num(&["r1"], &["c1"], &[-1.0]);
+        let c = &a + &b;
+        assert_eq!(c.shape(), (1, 1));
+        assert_eq!(c.get_num("r2", "c2"), Some(1.0));
+    }
+
+    #[test]
+    fn string_add_concatenates_on_collision() {
+        let a = Assoc::from_triples(&["r"], &["c"], &["foo"][..]);
+        let b = Assoc::from_triples(&["r", "r2"], &["c", "c"], &["bar", "solo"][..]);
+        let c = &a + &b;
+        assert_eq!(c.get_str("r", "c"), Some("foobar"));
+        assert_eq!(c.get_str("r2", "c"), Some("solo"));
+    }
+
+    #[test]
+    fn mixed_add_renders_numbers() {
+        let a = Assoc::from_triples(&["r"], &["c"], &["v="][..]);
+        let b = num(&["r"], &["c"], &[7.0]);
+        let c = &a + &b;
+        assert_eq!(c.get_str("r", "c"), Some("v=7"));
+    }
+
+    #[test]
+    fn elemmin_elemmax_union() {
+        let a = num(&["r1", "r2"], &["c", "c"], &[5.0, 1.0]);
+        let b = num(&["r1"], &["c"], &[3.0]);
+        assert_eq!(a.elemmin(&b).get_num("r1", "c"), Some(3.0));
+        assert_eq!(a.elemmin(&b).get_num("r2", "c"), Some(1.0)); // union keeps b-absent
+        assert_eq!(a.elemmax(&b).get_num("r1", "c"), Some(5.0));
+        // String variant.
+        let sa = Assoc::from_triples(&["r"], &["c"], &["bb"][..]);
+        let sb = Assoc::from_triples(&["r"], &["c"], &["aa"][..]);
+        assert_eq!(sa.elemmin(&sb).get_str("r", "c"), Some("aa"));
+        assert_eq!(sa.elemmax(&sb).get_str("r", "c"), Some("bb"));
+    }
+
+    #[test]
+    fn numeric_elemmul_intersection_semantics() {
+        let a = num(&["r1", "r1", "r2"], &["c1", "c2", "c1"], &[2.0, 3.0, 4.0]);
+        let b = num(&["r1", "r3"], &["c1", "c1"], &[10.0, 9.0]);
+        let c = &a * &b;
+        assert_eq!(c.get_num("r1", "c1"), Some(20.0));
+        assert_eq!(c.nnz(), 1);
+        assert_eq!(c.shape(), (1, 1)); // condensed to the surviving keys
+    }
+
+    #[test]
+    fn elemmul_disjoint_is_empty() {
+        let a = num(&["r1"], &["c1"], &[2.0]);
+        let b = num(&["r2"], &["c2"], &[3.0]);
+        assert!((&a * &b).is_empty());
+    }
+
+    #[test]
+    fn string_times_numeric_is_mask() {
+        let a = music();
+        let mask = num(&["0294.mp3", "7802.mp3"], &["genre", "genre"], &[1.0, 1.0]);
+        let c = &a * &mask;
+        assert_eq!(c.get_str("0294.mp3", "genre"), Some("rock"));
+        assert_eq!(c.get_str("7802.mp3", "genre"), Some("pop"));
+        assert_eq!(c.nnz(), 2);
+        assert!(c.is_string());
+        // Pool condensed to just the surviving values.
+        assert_eq!(c.values().strings().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn numeric_times_string_reduces_to_logical() {
+        let a = music();
+        let m = num(&["0294.mp3"], &["genre"], &[5.0]);
+        let c = &m * &a; // numeric × string
+        assert!(c.is_numeric());
+        assert_eq!(c.get_num("0294.mp3", "genre"), Some(5.0));
+    }
+
+    #[test]
+    fn string_times_string_is_lex_min() {
+        let a = Assoc::from_triples(&["r", "r2"], &["c", "c"], &["zeta", "x"][..]);
+        let b = Assoc::from_triples(&["r"], &["c"], &["alpha"][..]);
+        let c = &a * &b;
+        assert_eq!(c.get_str("r", "c"), Some("alpha"));
+        assert_eq!(c.nnz(), 1);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // A: r1->k1 (2), r1->k2 (3); B: k1->c1 (10), k2->c1 (100)
+        let a = num(&["r1", "r1"], &["k1", "k2"], &[2.0, 3.0]);
+        let b = num(&["k1", "k2"], &["c1", "c1"], &[10.0, 100.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.get_num("r1", "c1"), Some(320.0));
+        assert_eq!(c.shape(), (1, 1));
+    }
+
+    #[test]
+    fn matmul_contracts_only_common_keys() {
+        let a = num(&["r"], &["shared"], &[2.0]);
+        let b = num(&["shared", "other"], &["c", "c"], &[5.0, 7.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.get_num("r", "c"), Some(10.0));
+        // disjoint contraction → empty
+        let d = num(&["r"], &["x"], &[1.0]).matmul(&num(&["y"], &["c"], &[1.0]));
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn matmul_string_operands_logicalized() {
+        let a = music();
+        let ata = a.sqin(); // AᵀA: column-key correlation counts
+        assert!(ata.is_numeric());
+        // Every track has each attribute: diagonal = 3.
+        assert_eq!(ata.get_num("artist", "artist"), Some(3.0));
+        assert_eq!(ata.get_num("artist", "genre"), Some(3.0));
+        assert_eq!(ata.shape(), (3, 3));
+    }
+
+    #[test]
+    fn matmul_semiring_minplus() {
+        // Shortest path through one hop: r -k1-> c (2+10), r -k2-> c (3+1).
+        let a = num(&["r", "r"], &["k1", "k2"], &[2.0, 3.0]);
+        let b = num(&["k1", "k2"], &["c", "c"], &[10.0, 1.0]);
+        let c = a.matmul_with(&b, &MinPlus);
+        assert_eq!(c.get_num("r", "c"), Some(4.0));
+        let c = a.matmul_with(&b, &MaxPlus);
+        assert_eq!(c.get_num("r", "c"), Some(12.0));
+    }
+
+    #[test]
+    fn catkeymul_records_witnesses() {
+        // r -k1-> c and r -k2-> c: witnesses are "k1;k2" (sorted).
+        let a = num(&["r", "r"], &["k1", "k2"], &[1.0, 1.0]);
+        let b = num(&["k1", "k2"], &["c", "c"], &[1.0, 1.0]);
+        let c = a.catkeymul(&b, ";");
+        assert!(c.is_string());
+        assert_eq!(c.get_str("r", "c"), Some("k1;k2"));
+        // Numeric matmul on the same operands counts the witnesses.
+        assert_eq!(a.matmul(&b).get_num("r", "c"), Some(2.0));
+    }
+
+    #[test]
+    fn catkeymul_empty_and_single() {
+        let a = num(&["r"], &["x"], &[1.0]);
+        let b = num(&["y"], &["c"], &[1.0]);
+        assert!(a.catkeymul(&b, ";").is_empty());
+        let b2 = num(&["x"], &["c"], &[1.0]);
+        assert_eq!(a.catkeymul(&b2, ";").get_str("r", "c"), Some("x"));
+    }
+
+    #[test]
+    fn prop_catkeymul_support_matches_matmul() {
+        check("catkeymul support == matmul support", 60, |g| {
+            let (r1, c1, v1) = g.triples(25, 8);
+            let (r2, c2, v2) = g.triples(25, 8);
+            let a = Assoc::from_triples(&r1, &c1, v1);
+            let b = Assoc::from_triples(&r2, &c2, v2);
+            let ck = a.catkeymul(&b, ";");
+            let mm = a.logical().matmul(&b.logical());
+            assert_eq!(ck.nnz(), mm.nnz());
+            for (r, c, v) in ck.iter() {
+                // Witness count == logical contraction count.
+                let count = v.as_str().unwrap().split(';').count() as f64;
+                assert_eq!(mm.get_num(r.clone(), c.clone()), Some(count));
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_roundtrip_and_values() {
+        let a = music();
+        let t = a.transpose();
+        assert_eq!(t.get_str("genre", "0294.mp3"), Some("rock"));
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn logical_makes_ones() {
+        let a = music();
+        let l = a.logical();
+        assert!(l.is_numeric());
+        assert_eq!(l.nnz(), a.nnz());
+        assert!(l.iter().all(|(_, _, v)| v.as_num() == Some(1.0)));
+    }
+
+    #[test]
+    fn sum_axes() {
+        let a = num(&["r1", "r1", "r2"], &["c1", "c2", "c1"], &[1.0, 2.0, 4.0]);
+        let rowsum = a.sum(1); // collapse columns
+        assert_eq!(rowsum.get_num("r1", 1i64), Some(3.0));
+        assert_eq!(rowsum.get_num("r2", 1i64), Some(4.0));
+        let colsum = a.sum(0); // collapse rows
+        assert_eq!(colsum.get_num(1i64, "c1"), Some(5.0));
+        assert_eq!(colsum.get_num(1i64, "c2"), Some(2.0));
+    }
+
+    #[test]
+    fn count_counts_nonempty() {
+        let a = music();
+        let degrees = a.count(1);
+        assert_eq!(degrees.get_num("0294.mp3", 1i64), Some(3.0));
+        assert_eq!(a.total(), 9.0);
+    }
+
+    #[test]
+    fn prop_add_commutative_numeric() {
+        check("A + B == B + A (numeric)", 150, |g| {
+            let (r1, c1, v1) = g.triples(40, 12);
+            let (r2, c2, v2) = g.triples(40, 12);
+            let a = Assoc::from_triples(&r1, &c1, v1);
+            let b = Assoc::from_triples(&r2, &c2, v2);
+            assert_eq!(&a + &b, &b + &a);
+        });
+    }
+
+    #[test]
+    fn prop_add_associative_numeric() {
+        check("(A+B)+C == A+(B+C) (integer values)", 100, |g| {
+            let mk = |g: &mut crate::util::prop::Gen| {
+                let (r, c, v) = g.triples(25, 8);
+                Assoc::from_triples(&r, &c, v)
+            };
+            let a = mk(g);
+            let b = mk(g);
+            let c = mk(g);
+            assert_eq!(&(&a + &b) + &c, &a + &(&b + &c));
+        });
+    }
+
+    #[test]
+    fn prop_elemmul_matches_pointwise_model() {
+        check("(A*B)[i,j] == A[i,j]*B[i,j]", 150, |g| {
+            let (r1, c1, v1) = g.triples(30, 10);
+            let (r2, c2, v2) = g.triples(30, 10);
+            let a = Assoc::from_triples(&r1, &c1, v1);
+            let b = Assoc::from_triples(&r2, &c2, v2);
+            let c = &a * &b;
+            for i in 0..10u64 {
+                for j in 0..10u64 {
+                    let (ik, jk) = (i.to_string(), j.to_string());
+                    let expect = a.get_num(ik.as_str(), jk.as_str()).unwrap_or(0.0)
+                        * b.get_num(ik.as_str(), jk.as_str()).unwrap_or(0.0);
+                    let got = c.get_num(ik.as_str(), jk.as_str()).unwrap_or(0.0);
+                    assert_eq!(got, expect, "at ({ik},{jk})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_matmul_matches_contraction_model() {
+        check("(A@B)[i,j] == Σ_k A[i,k]B[k,j]", 80, |g| {
+            let (r1, c1, v1) = g.triples(25, 8);
+            let (r2, c2, v2) = g.triples(25, 8);
+            let a = Assoc::from_triples(&r1, &c1, v1);
+            let b = Assoc::from_triples(&r2, &c2, v2);
+            let c = a.matmul(&b);
+            for i in 0..8u64 {
+                for j in 0..8u64 {
+                    let (ik, jk) = (i.to_string(), j.to_string());
+                    let mut expect = 0.0;
+                    for k in 0..8u64 {
+                        let kk = k.to_string();
+                        expect += a.get_num(ik.as_str(), kk.as_str()).unwrap_or(0.0)
+                            * b.get_num(kk.as_str(), jk.as_str()).unwrap_or(0.0);
+                    }
+                    assert_eq!(
+                        c.get_num(ik.as_str(), jk.as_str()).unwrap_or(0.0),
+                        expect,
+                        "at ({ik},{jk})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_distributivity_matmul_over_add() {
+        check("A@(B+C) == A@B + A@C (integer values)", 60, |g| {
+            let mk = |g: &mut crate::util::prop::Gen| {
+                let (r, c, v) = g.triples(20, 6);
+                Assoc::from_triples(&r, &c, v)
+            };
+            let a = mk(g);
+            let b = mk(g);
+            let c = mk(g);
+            let left = a.matmul(&(&b + &c));
+            let right = &a.matmul(&b) + &a.matmul(&c);
+            assert_eq!(left, right);
+        });
+    }
+
+    #[test]
+    fn prop_transpose_antihomomorphism() {
+        check("(A@B)ᵀ == Bᵀ@Aᵀ", 80, |g| {
+            let (r1, c1, v1) = g.triples(25, 8);
+            let (r2, c2, v2) = g.triples(25, 8);
+            let a = Assoc::from_triples(&r1, &c1, v1);
+            let b = Assoc::from_triples(&r2, &c2, v2);
+            assert_eq!(a.matmul(&b).transpose(), b.transpose().matmul(&a.transpose()));
+        });
+    }
+}

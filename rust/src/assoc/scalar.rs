@@ -1,0 +1,192 @@
+//! Scalar arithmetic and comparison operations — the rest of D4M's
+//! day-to-day API: `A + 3`, `A * 2`, `A > 5`, `A == "rock"`, `abs`,
+//! element-wise divide.
+//!
+//! Comparisons return **indicator arrays** (numeric 1 at every entry
+//! satisfying the predicate, unstored elsewhere), D4M's idiom for
+//! building masks that feed back into element-wise multiplication.
+
+use super::{Assoc, Values};
+
+impl Assoc {
+    /// Map every nonempty numeric value through `f`, dropping results
+    /// equal to zero (string arrays are `logical()`-ed first).
+    pub fn map_num(&self, f: impl Fn(f64) -> f64 + Copy) -> Assoc {
+        let base = if self.is_string() { self.logical() } else { self.clone() };
+        Assoc {
+            row: base.row,
+            col: base.col,
+            val: Values::Numeric,
+            adj: base.adj.map_values(0.0, f),
+        }
+        .condensed()
+    }
+
+    /// `A + s` on nonempty entries (note: *not* on the implicit zeros —
+    /// associative arrays only store and transform nonempty values,
+    /// matching D4M).
+    pub fn scalar_add(&self, s: f64) -> Assoc {
+        self.map_num(move |v| v + s)
+    }
+
+    /// `A * s` on nonempty entries.
+    pub fn scalar_mul(&self, s: f64) -> Assoc {
+        self.map_num(move |v| v * s)
+    }
+
+    /// `|A|` element-wise.
+    pub fn abs(&self) -> Assoc {
+        self.map_num(f64::abs)
+    }
+
+    /// Element-wise division `A ./ B` over the intersection of key
+    /// spaces. Division by a stored zero cannot occur (zeros are
+    /// unstored); any non-finite result is dropped.
+    pub fn elemdiv(&self, other: &Assoc) -> Assoc {
+        use crate::semiring::FnSemiring;
+        fn div(a: f64, b: f64) -> f64 {
+            let q = a / b;
+            if q.is_finite() {
+                q
+            } else {
+                0.0
+            }
+        }
+        fn never(_: f64, _: f64) -> f64 {
+            unreachable!("multiply never calls ⊕")
+        }
+        let s = FnSemiring::new("divide", 0.0, 1.0, never, div);
+        self.elemmul_with(other, &s)
+    }
+
+    /// Indicator of entries with numeric value `> s`.
+    pub fn gt(&self, s: f64) -> Assoc {
+        self.map_num(move |v| if v > s { 1.0 } else { 0.0 })
+    }
+
+    /// Indicator of entries with numeric value `>= s`.
+    pub fn ge(&self, s: f64) -> Assoc {
+        self.map_num(move |v| if v >= s { 1.0 } else { 0.0 })
+    }
+
+    /// Indicator of entries with numeric value `< s` (nonempty only).
+    pub fn lt(&self, s: f64) -> Assoc {
+        self.map_num(move |v| if v < s { 1.0 } else { 0.0 })
+    }
+
+    /// Indicator of entries with numeric value `<= s` (nonempty only).
+    pub fn le(&self, s: f64) -> Assoc {
+        self.map_num(move |v| if v <= s { 1.0 } else { 0.0 })
+    }
+
+    /// Indicator of entries equal to the numeric value `s` (for `s = 0`
+    /// this is always empty: zeros are unstored).
+    pub fn eq_num(&self, s: f64) -> Assoc {
+        self.map_num(move |v| if v == s { 1.0 } else { 0.0 })
+    }
+
+    /// Indicator of string entries equal to `s` — `A == "rock"`, the
+    /// facet-query primitive. Empty for numeric arrays.
+    pub fn eq_str(&self, s: &str) -> Assoc {
+        let pool = match &self.val {
+            Values::Strings(pool) => pool,
+            Values::Numeric => return Assoc::empty(),
+        };
+        // The pool is sorted: the match, if any, is one binary search.
+        let target = match pool.binary_search_by(|p| p.as_ref().cmp(s)) {
+            Ok(i) => (i + 1) as f64,
+            Err(_) => return Assoc::empty(),
+        };
+        Assoc {
+            row: self.row.clone(),
+            col: self.col.clone(),
+            val: Values::Numeric,
+            adj: self.adj.map_values(0.0, |v| if v == target { 1.0 } else { 0.0 }),
+        }
+        .condensed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::music;
+    use super::*;
+    use crate::assoc::ValsInput;
+
+    fn nums() -> Assoc {
+        Assoc::from_triples(
+            &["r1", "r1", "r2"],
+            &["c1", "c2", "c1"],
+            ValsInput::Num(vec![2.0, -3.0, 5.0]),
+        )
+    }
+
+    #[test]
+    fn scalar_arith() {
+        let a = nums();
+        assert_eq!(a.scalar_add(1.0).get_num("r1", "c2"), Some(-2.0));
+        assert_eq!(a.scalar_mul(2.0).get_num("r2", "c1"), Some(10.0));
+        assert_eq!(a.abs().get_num("r1", "c2"), Some(3.0));
+    }
+
+    #[test]
+    fn scalar_add_can_cancel() {
+        let a = nums();
+        let b = a.scalar_add(3.0); // -3 + 3 = 0 → dropped + condensed
+        assert_eq!(b.get_num("r1", "c2"), None);
+        assert_eq!(b.nnz(), 2);
+        assert_eq!(b.col_keys().len(), 1);
+    }
+
+    #[test]
+    fn comparisons_are_indicators() {
+        let a = nums();
+        let big = a.gt(1.0);
+        assert_eq!(big.get_num("r1", "c1"), Some(1.0));
+        assert_eq!(big.get_num("r2", "c1"), Some(1.0));
+        assert_eq!(big.nnz(), 2);
+        assert_eq!(a.lt(0.0).nnz(), 1);
+        assert_eq!(a.ge(5.0).nnz(), 1);
+        assert_eq!(a.le(2.0).nnz(), 2);
+        assert_eq!(a.eq_num(5.0).nnz(), 1);
+    }
+
+    #[test]
+    fn comparison_feeds_mask() {
+        // Classic idiom: A * (A > 1) keeps only the large entries.
+        let a = nums();
+        let masked = a.elemmul(&a.gt(1.0));
+        assert_eq!(masked.nnz(), 2);
+        assert_eq!(masked.get_num("r1", "c1"), Some(2.0));
+        assert_eq!(masked.get_num("r1", "c2"), None);
+    }
+
+    #[test]
+    fn eq_str_facet_query() {
+        let a = music();
+        let rock = a.eq_str("rock");
+        assert!(rock.is_numeric());
+        assert_eq!(rock.nnz(), 1);
+        assert_eq!(rock.get_num("0294.mp3", "genre"), Some(1.0));
+        assert!(a.eq_str("no-such-value").is_empty());
+        // eq_str on numeric arrays is empty.
+        assert!(nums().eq_str("2").is_empty());
+    }
+
+    #[test]
+    fn elemdiv_intersection() {
+        let a = nums();
+        let b = Assoc::from_triples(&["r1"], &["c1"], ValsInput::Num(vec![4.0]));
+        let q = a.elemdiv(&b);
+        assert_eq!(q.get_num("r1", "c1"), Some(0.5));
+        assert_eq!(q.nnz(), 1);
+    }
+
+    #[test]
+    fn string_arrays_logicalize_for_scalar_math() {
+        let a = music();
+        let doubled = a.scalar_mul(2.0);
+        assert!(doubled.is_numeric());
+        assert!(doubled.iter().all(|(_, _, v)| v.as_num() == Some(2.0)));
+    }
+}

@@ -1,0 +1,108 @@
+//! Exploded-schema helpers — D4M's `val2col` / `col2type`.
+//!
+//! The standard D4M database pattern stores a dense table
+//! `A[row, field] = value` as a *sparse indicator* array
+//! `E[row, "field|value"] = 1`, which turns facet queries, joins and
+//! correlations into pure sparse algebra (`E.sqin()` is the
+//! co-occurrence graph). `val2col` performs that explosion; `col2type`
+//! inverts it.
+
+use super::{Aggregator, Assoc, Key, ValsInput};
+
+/// Explode `A[row, field] = value` into `E[row, "field<sep>value"] = 1`.
+///
+/// Numeric values are rendered with the usual integer-style formatting.
+pub fn val2col(a: &Assoc, sep: &str) -> Assoc {
+    let (rows, cols, vals) = a.triples();
+    let rendered: Vec<String> = match vals {
+        ValsInput::Str(vs) => vs,
+        ValsInput::Num(vs) => vs
+            .into_iter()
+            .map(|x| {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    format!("{}", x as i64)
+                } else {
+                    format!("{x}")
+                }
+            })
+            .collect(),
+        _ => unreachable!("triples() never yields scalars"),
+    };
+    let exploded: Vec<Key> = cols
+        .iter()
+        .zip(&rendered)
+        .map(|(c, v)| Key::str(format!("{c}{sep}{v}")))
+        .collect();
+    Assoc::try_new(rows, exploded, ValsInput::NumScalar(1.0), Aggregator::Min)
+        .expect("val2col triples")
+}
+
+/// Invert [`val2col`]: collapse `E[row, "field<sep>value"] = 1` back to
+/// `A[row, field] = value`. Columns without the separator are skipped;
+/// collisions (two exploded columns for one field) keep the
+/// lexicographically smallest value (the D4M default aggregator).
+pub fn col2type(e: &Assoc, sep: &str) -> Assoc {
+    let mut rows: Vec<Key> = Vec::new();
+    let mut cols: Vec<Key> = Vec::new();
+    let mut vals: Vec<String> = Vec::new();
+    for (r, c, _) in e.iter() {
+        let cs = c.to_string();
+        if let Some((field, value)) = cs.split_once(sep) {
+            rows.push(r.clone());
+            cols.push(Key::str(field));
+            vals.push(value.to_string());
+        }
+    }
+    Assoc::try_new(rows, cols, ValsInput::Str(vals), Aggregator::Min).expect("col2type triples")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::music;
+    use super::*;
+
+    #[test]
+    fn val2col_explodes_to_indicators() {
+        let a = music();
+        let e = val2col(&a, "|");
+        assert!(e.is_numeric());
+        assert_eq!(e.nnz(), a.nnz());
+        assert_eq!(e.get_num("0294.mp3", "genre|rock"), Some(1.0));
+        assert_eq!(e.get_num("7802.mp3", "artist|Taylor Swift"), Some(1.0));
+        // One exploded column per distinct (field, value) pair.
+        assert_eq!(e.col_keys().len(), 9);
+    }
+
+    #[test]
+    fn col2type_inverts_val2col() {
+        let a = music();
+        let roundtrip = col2type(&val2col(&a, "|"), "|");
+        assert_eq!(roundtrip, a);
+    }
+
+    #[test]
+    fn val2col_numeric_values() {
+        let a = Assoc::from_triples(&["r"], &["score"], vec![7.0]);
+        let e = val2col(&a, "|");
+        assert_eq!(e.get_num("r", "score|7"), Some(1.0));
+    }
+
+    #[test]
+    fn col2type_skips_plain_columns() {
+        let e = Assoc::from_triples(&["r", "r"], &["genre|rock", "plain"], 1.0);
+        let back = col2type(&e, "|");
+        assert_eq!(back.nnz(), 1);
+        assert_eq!(back.get_str("r", "genre"), Some("rock"));
+    }
+
+    #[test]
+    fn facet_pipeline_on_exploded_schema() {
+        // The motivating pattern: explode, correlate, read facets.
+        let a = music();
+        let e = val2col(&a, "|");
+        let ata = e.sqin();
+        // "rock" and "Pink Floyd" co-occur on exactly one track.
+        assert_eq!(ata.get_num("genre|rock", "artist|Pink Floyd"), Some(1.0));
+        assert_eq!(ata.get_num("genre|rock", "genre|classical"), None);
+    }
+}

@@ -1,0 +1,224 @@
+//! The `A.val` attribute: numeric flag vs. sorted string value pool.
+//!
+//! Exactly the paper's §II.A storage duality:
+//!
+//! * **Numeric** arrays: `A.val` is the float `1.0` (a *flag* that values
+//!   are numeric) and `A.adj` stores the values directly.
+//! * **String** arrays: `A.val` is the sorted vector of unique nonempty
+//!   values and `A.adj` stores **1-based** indices into it (`k + 1`,
+//!   because 0 is the unstored "empty").
+//!
+//! The empty array edge case is stored "as if numeric" (paper §II.A) and
+//! every consumer that branches on numeric-vs-string treats an empty
+//! array as compatible with both.
+
+use std::fmt;
+
+/// The value pool of an associative array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Values {
+    /// Numeric array: `adj` holds the values themselves (`A.val = 1.0`).
+    Numeric,
+    /// String array: `adj` holds 1-based indices into this sorted,
+    /// unique, nonempty pool.
+    Strings(Vec<Box<str>>),
+}
+
+impl Values {
+    /// Is this the numeric flag?
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, Values::Numeric)
+    }
+
+    /// The string pool, if any.
+    pub fn strings(&self) -> Option<&[Box<str>]> {
+        match self {
+            Values::Numeric => None,
+            Values::Strings(v) => Some(v),
+        }
+    }
+
+    /// Decode a stored `adj` entry into a value view.
+    ///
+    /// Numeric arrays pass the float through; string arrays treat it as
+    /// the 1-based pool index (paper: `A.adj[i,j] = k + 1`).
+    pub fn decode(&self, stored: f64) -> Val<'_> {
+        match self {
+            Values::Numeric => Val::Num(stored),
+            Values::Strings(pool) => {
+                let k = stored as usize;
+                assert!(
+                    k >= 1 && k <= pool.len() && stored.fract() == 0.0,
+                    "corrupt string-pool index {stored}"
+                );
+                Val::Str(&pool[k - 1])
+            }
+        }
+    }
+}
+
+/// A decoded value: number or string view.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Val<'a> {
+    /// Numeric value.
+    Num(f64),
+    /// String value (borrowed from the pool).
+    Str(&'a str),
+}
+
+impl Val<'_> {
+    /// Numeric content, if numeric.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Val::Num(v) => Some(*v),
+            Val::Str(_) => None,
+        }
+    }
+
+    /// String content, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Val::Str(s) => Some(s),
+            Val::Num(_) => None,
+        }
+    }
+}
+
+impl fmt::Display for Val<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Val::Num(v) => {
+                // Integers display without a decimal point, matching Key.
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    write!(f, "{}", *v as i64)
+                } else {
+                    write!(f, "{v}")
+                }
+            }
+            Val::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// Constructor value input: a numeric array, a string array, or a scalar
+/// broadcast (the paper's `Assoc(rows, cols, 1)` form).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValsInput {
+    /// One number per triple.
+    Num(Vec<f64>),
+    /// One string per triple.
+    Str(Vec<String>),
+    /// A single number broadcast to every triple.
+    NumScalar(f64),
+    /// A single string broadcast to every triple.
+    StrScalar(String),
+}
+
+impl ValsInput {
+    /// Length, or `None` for scalars (broadcast to any length).
+    pub fn len(&self) -> Option<usize> {
+        match self {
+            ValsInput::Num(v) => Some(v.len()),
+            ValsInput::Str(v) => Some(v.len()),
+            ValsInput::NumScalar(_) | ValsInput::StrScalar(_) => None,
+        }
+    }
+
+    /// True when no per-triple values are present.
+    pub fn is_empty(&self) -> bool {
+        self.len() == Some(0)
+    }
+}
+
+impl From<Vec<f64>> for ValsInput {
+    fn from(v: Vec<f64>) -> Self {
+        ValsInput::Num(v)
+    }
+}
+
+impl From<&[f64]> for ValsInput {
+    fn from(v: &[f64]) -> Self {
+        ValsInput::Num(v.to_vec())
+    }
+}
+
+impl From<f64> for ValsInput {
+    fn from(v: f64) -> Self {
+        ValsInput::NumScalar(v)
+    }
+}
+
+impl From<i64> for ValsInput {
+    fn from(v: i64) -> Self {
+        ValsInput::NumScalar(v as f64)
+    }
+}
+
+impl From<Vec<String>> for ValsInput {
+    fn from(v: Vec<String>) -> Self {
+        ValsInput::Str(v)
+    }
+}
+
+impl From<&[&str]> for ValsInput {
+    fn from(v: &[&str]) -> Self {
+        ValsInput::Str(v.iter().map(|s| s.to_string()).collect())
+    }
+}
+
+impl From<&str> for ValsInput {
+    fn from(v: &str) -> Self {
+        ValsInput::StrScalar(v.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_decode_passthrough() {
+        let v = Values::Numeric;
+        assert_eq!(v.decode(3.5), Val::Num(3.5));
+    }
+
+    #[test]
+    fn string_decode_one_based() {
+        let v = Values::Strings(vec!["alpha".into(), "beta".into()]);
+        assert_eq!(v.decode(1.0), Val::Str("alpha"));
+        assert_eq!(v.decode(2.0), Val::Str("beta"));
+    }
+
+    #[test]
+    #[should_panic(expected = "corrupt string-pool index")]
+    fn string_decode_zero_is_corrupt() {
+        let v = Values::Strings(vec!["alpha".into()]);
+        v.decode(0.0); // 0 means "unstored" — must never be decoded
+    }
+
+    #[test]
+    #[should_panic(expected = "corrupt string-pool index")]
+    fn string_decode_out_of_range() {
+        let v = Values::Strings(vec!["alpha".into()]);
+        v.decode(5.0);
+    }
+
+    #[test]
+    fn val_display() {
+        assert_eq!(Val::Num(4.0).to_string(), "4");
+        assert_eq!(Val::Num(4.25).to_string(), "4.25");
+        assert_eq!(Val::Str("x").to_string(), "x");
+    }
+
+    #[test]
+    fn vals_input_conversions() {
+        let v: ValsInput = vec![1.0, 2.0].into();
+        assert_eq!(v.len(), Some(2));
+        let v: ValsInput = 1.0.into();
+        assert_eq!(v.len(), None);
+        let v: ValsInput = "tag".into();
+        assert_eq!(v, ValsInput::StrScalar("tag".to_string()));
+        let v: ValsInput = (&["a", "b"][..]).into();
+        assert_eq!(v.len(), Some(2));
+    }
+}

@@ -1,0 +1,202 @@
+//! Ordered-map triple-store baseline engine.
+//!
+//! A `BTreeMap<(row, col), value>` — the design a sorted key/value
+//! store (or a naive Accumulo-style client) implies: ordered iteration
+//! is free, so union/intersection ops are sorted merges like D4M's, but
+//! without the dense-index sparse kernels — every step pays tree-node
+//! and per-key string-comparison costs. This is the "ordered but not
+//! array-packed" comparison curve.
+
+use super::Engine;
+use std::collections::BTreeMap;
+
+/// Array representation: a sorted triple map.
+#[derive(Debug, Clone, Default)]
+pub struct BTreeArray {
+    /// Numeric cells in row-major key order.
+    pub cells: BTreeMap<(String, String), f64>,
+    /// String cells (string constructor bench only).
+    pub str_cells: BTreeMap<(String, String), String>,
+}
+
+/// The ordered-map engine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BTreeEngine;
+
+impl Engine for BTreeEngine {
+    type Array = BTreeArray;
+
+    fn name(&self) -> &'static str {
+        "btree"
+    }
+
+    fn construct_numeric(&self, rows: &[String], cols: &[String], vals: &[f64]) -> BTreeArray {
+        let mut cells: BTreeMap<(String, String), f64> = BTreeMap::new();
+        for i in 0..rows.len() {
+            cells
+                .entry((rows[i].clone(), cols[i].clone()))
+                .and_modify(|v| *v = v.min(vals[i]))
+                .or_insert(vals[i]);
+        }
+        cells.retain(|_, v| *v != 0.0);
+        BTreeArray { cells, str_cells: BTreeMap::new() }
+    }
+
+    fn construct_string(&self, rows: &[String], cols: &[String], vals: &[String]) -> BTreeArray {
+        let mut str_cells: BTreeMap<(String, String), String> = BTreeMap::new();
+        for i in 0..rows.len() {
+            let key = (rows[i].clone(), cols[i].clone());
+            match str_cells.get_mut(&key) {
+                Some(v) => {
+                    if vals[i] < *v {
+                        *v = vals[i].clone();
+                    }
+                }
+                None => {
+                    str_cells.insert(key, vals[i].clone());
+                }
+            }
+        }
+        str_cells.retain(|_, v| !v.is_empty());
+        BTreeArray { cells: BTreeMap::new(), str_cells }
+    }
+
+    fn add(&self, a: &BTreeArray, b: &BTreeArray) -> BTreeArray {
+        // Sorted merge of the two ordered maps.
+        let mut cells = BTreeMap::new();
+        let mut ia = a.cells.iter().peekable();
+        let mut ib = b.cells.iter().peekable();
+        loop {
+            match (ia.peek(), ib.peek()) {
+                (Some((ka, va)), Some((kb, vb))) => match ka.cmp(kb) {
+                    std::cmp::Ordering::Less => {
+                        cells.insert((*ka).clone(), **va);
+                        ia.next();
+                    }
+                    std::cmp::Ordering::Greater => {
+                        cells.insert((*kb).clone(), **vb);
+                        ib.next();
+                    }
+                    std::cmp::Ordering::Equal => {
+                        let s = **va + **vb;
+                        if s != 0.0 {
+                            cells.insert((*ka).clone(), s);
+                        }
+                        ia.next();
+                        ib.next();
+                    }
+                },
+                (Some((ka, va)), None) => {
+                    cells.insert((*ka).clone(), **va);
+                    ia.next();
+                }
+                (None, Some((kb, vb))) => {
+                    cells.insert((*kb).clone(), **vb);
+                    ib.next();
+                }
+                (None, None) => break,
+            }
+        }
+        BTreeArray { cells, str_cells: BTreeMap::new() }
+    }
+
+    fn matmul(&self, a: &BTreeArray, b: &BTreeArray) -> BTreeArray {
+        // Group B by row via ordered iteration (runs are contiguous),
+        // then contract in A's row-major order.
+        let mut b_by_row: BTreeMap<&str, Vec<(&str, f64)>> = BTreeMap::new();
+        for ((r, c), v) in &b.cells {
+            b_by_row.entry(r.as_str()).or_default().push((c.as_str(), *v));
+        }
+        let mut cells: BTreeMap<(String, String), f64> = BTreeMap::new();
+        for ((r, k), av) in &a.cells {
+            if let Some(brow) = b_by_row.get(k.as_str()) {
+                for (c2, bv) in brow {
+                    *cells.entry((r.clone(), c2.to_string())).or_insert(0.0) += av * bv;
+                }
+            }
+        }
+        cells.retain(|_, v| *v != 0.0);
+        BTreeArray { cells, str_cells: BTreeMap::new() }
+    }
+
+    fn elemmul(&self, a: &BTreeArray, b: &BTreeArray) -> BTreeArray {
+        // Sorted-merge intersection.
+        let mut cells = BTreeMap::new();
+        let mut ia = a.cells.iter().peekable();
+        let mut ib = b.cells.iter().peekable();
+        while let (Some((ka, va)), Some((kb, vb))) = (ia.peek(), ib.peek()) {
+            match ka.cmp(kb) {
+                std::cmp::Ordering::Less => {
+                    ia.next();
+                }
+                std::cmp::Ordering::Greater => {
+                    ib.next();
+                }
+                std::cmp::Ordering::Equal => {
+                    let p = **va * **vb;
+                    if p != 0.0 {
+                        cells.insert((*ka).clone(), p);
+                    }
+                    ia.next();
+                    ib.next();
+                }
+            }
+        }
+        BTreeArray { cells, str_cells: BTreeMap::new() }
+    }
+
+    fn nnz(&self, a: &BTreeArray) -> usize {
+        a.cells.len() + a.str_cells.len()
+    }
+
+    fn checksum(&self, a: &BTreeArray) -> f64 {
+        a.cells.values().sum::<f64>() + a.str_cells.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn sorted_merge_add() {
+        let e = BTreeEngine;
+        let a = e.construct_numeric(&s(&["a", "c"]), &s(&["1", "1"]), &[1.0, 2.0]);
+        let b = e.construct_numeric(&s(&["b", "c"]), &s(&["1", "1"]), &[5.0, -2.0]);
+        let sum = e.add(&a, &b);
+        assert_eq!(sum.cells.len(), 2); // c/1 cancelled to 0 and dropped
+        assert_eq!(sum.cells[&("a".into(), "1".into())], 1.0);
+        assert_eq!(sum.cells[&("b".into(), "1".into())], 5.0);
+    }
+
+    #[test]
+    fn intersection_elemmul() {
+        let e = BTreeEngine;
+        let a = e.construct_numeric(&s(&["a", "b"]), &s(&["1", "1"]), &[2.0, 3.0]);
+        let b = e.construct_numeric(&s(&["b", "z"]), &s(&["1", "9"]), &[4.0, 1.0]);
+        let p = e.elemmul(&a, &b);
+        assert_eq!(p.cells.len(), 1);
+        assert_eq!(p.cells[&("b".into(), "1".into())], 12.0);
+    }
+
+    #[test]
+    fn matmul_matches_hand_result() {
+        let e = BTreeEngine;
+        let a = e.construct_numeric(&s(&["r", "r"]), &s(&["k1", "k2"]), &[2.0, 3.0]);
+        let b = e.construct_numeric(&s(&["k1", "k2"]), &s(&["c", "c"]), &[10.0, 100.0]);
+        let c = e.matmul(&a, &b);
+        assert_eq!(c.cells[&("r".into(), "c".into())], 320.0);
+    }
+
+    #[test]
+    fn string_construct() {
+        let e = BTreeEngine;
+        let a = e.construct_string(&s(&["r", "r", "q"]), &s(&["c", "c", "c"]), &s(&["b", "a", ""]));
+        assert_eq!(a.str_cells.len(), 1);
+        assert_eq!(a.str_cells[&("r".into(), "c".into())], "a");
+    }
+}

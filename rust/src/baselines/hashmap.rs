@@ -1,0 +1,168 @@
+//! Dict-of-triples baseline engine.
+//!
+//! The "obvious" implementation: a `HashMap<(row, col), value>`. O(1)
+//! point access and cheap construction, but no sorted structure — so
+//! union/intersection ops probe per-entry and `@` must build a row
+//! index on the fly. This plays the role of a naive scripting-language
+//! implementation curve in the figure reproductions.
+
+use super::Engine;
+use std::collections::HashMap;
+
+/// Array representation: a flat hash map (numeric) plus the D4M zero
+/// rules (no zero values stored).
+#[derive(Debug, Clone, Default)]
+pub struct HashArray {
+    /// Numeric cells.
+    pub cells: HashMap<(String, String), f64>,
+    /// String cells (used only by the string constructor bench).
+    pub str_cells: HashMap<(String, String), String>,
+}
+
+/// The dict-of-dict engine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HashMapEngine;
+
+impl Engine for HashMapEngine {
+    type Array = HashArray;
+
+    fn name(&self) -> &'static str {
+        "hashmap"
+    }
+
+    fn construct_numeric(&self, rows: &[String], cols: &[String], vals: &[f64]) -> HashArray {
+        let mut cells: HashMap<(String, String), f64> = HashMap::with_capacity(rows.len());
+        for i in 0..rows.len() {
+            cells
+                .entry((rows[i].clone(), cols[i].clone()))
+                .and_modify(|v| *v = v.min(vals[i]))
+                .or_insert(vals[i]);
+        }
+        cells.retain(|_, v| *v != 0.0);
+        HashArray { cells, str_cells: HashMap::new() }
+    }
+
+    fn construct_string(&self, rows: &[String], cols: &[String], vals: &[String]) -> HashArray {
+        let mut str_cells: HashMap<(String, String), String> =
+            HashMap::with_capacity(rows.len());
+        for i in 0..rows.len() {
+            let key = (rows[i].clone(), cols[i].clone());
+            match str_cells.get_mut(&key) {
+                Some(v) => {
+                    if vals[i] < *v {
+                        *v = vals[i].clone();
+                    }
+                }
+                None => {
+                    str_cells.insert(key, vals[i].clone());
+                }
+            }
+        }
+        str_cells.retain(|_, v| !v.is_empty());
+        HashArray { cells: HashMap::new(), str_cells }
+    }
+
+    fn add(&self, a: &HashArray, b: &HashArray) -> HashArray {
+        let mut cells = a.cells.clone();
+        for (k, v) in &b.cells {
+            *cells.entry(k.clone()).or_insert(0.0) += v;
+        }
+        cells.retain(|_, v| *v != 0.0);
+        HashArray { cells, str_cells: HashMap::new() }
+    }
+
+    fn matmul(&self, a: &HashArray, b: &HashArray) -> HashArray {
+        // Index B by row, then contract: C[r, c2] += A[r, k] * B[k, c2].
+        let mut b_by_row: HashMap<&str, Vec<(&str, f64)>> = HashMap::new();
+        for ((r, c), v) in &b.cells {
+            b_by_row.entry(r.as_str()).or_default().push((c.as_str(), *v));
+        }
+        let mut cells: HashMap<(String, String), f64> = HashMap::new();
+        for ((r, k), av) in &a.cells {
+            if let Some(brow) = b_by_row.get(k.as_str()) {
+                for (c2, bv) in brow {
+                    *cells.entry((r.clone(), c2.to_string())).or_insert(0.0) += av * bv;
+                }
+            }
+        }
+        cells.retain(|_, v| *v != 0.0);
+        HashArray { cells, str_cells: HashMap::new() }
+    }
+
+    fn elemmul(&self, a: &HashArray, b: &HashArray) -> HashArray {
+        // Probe the smaller operand against the larger.
+        let (small, large) = if a.cells.len() <= b.cells.len() {
+            (&a.cells, &b.cells)
+        } else {
+            (&b.cells, &a.cells)
+        };
+        let mut cells = HashMap::with_capacity(small.len());
+        for (k, v) in small {
+            if let Some(w) = large.get(k) {
+                let p = v * w;
+                if p != 0.0 {
+                    cells.insert(k.clone(), p);
+                }
+            }
+        }
+        HashArray { cells, str_cells: HashMap::new() }
+    }
+
+    fn nnz(&self, a: &HashArray) -> usize {
+        a.cells.len() + a.str_cells.len()
+    }
+
+    fn checksum(&self, a: &HashArray) -> f64 {
+        a.cells.values().sum::<f64>() + a.str_cells.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn construct_min_aggregates_and_drops_zero() {
+        let e = HashMapEngine;
+        let a = e.construct_numeric(
+            &s(&["r", "r", "q"]),
+            &s(&["c", "c", "d"]),
+            &[5.0, 3.0, 0.0],
+        );
+        assert_eq!(a.cells[&("r".into(), "c".into())], 3.0);
+        assert_eq!(e.nnz(&a), 1);
+    }
+
+    #[test]
+    fn add_and_elemmul() {
+        let e = HashMapEngine;
+        let a = e.construct_numeric(&s(&["r"]), &s(&["c"]), &[2.0]);
+        let b = e.construct_numeric(&s(&["r", "x"]), &s(&["c", "y"]), &[3.0, 1.0]);
+        let sum = e.add(&a, &b);
+        assert_eq!(sum.cells[&("r".into(), "c".into())], 5.0);
+        assert_eq!(e.nnz(&sum), 2);
+        let prod = e.elemmul(&a, &b);
+        assert_eq!(prod.cells[&("r".into(), "c".into())], 6.0);
+        assert_eq!(e.nnz(&prod), 1);
+    }
+
+    #[test]
+    fn matmul_contracts() {
+        let e = HashMapEngine;
+        let a = e.construct_numeric(&s(&["r", "r"]), &s(&["k1", "k2"]), &[2.0, 3.0]);
+        let b = e.construct_numeric(&s(&["k1", "k2"]), &s(&["c", "c"]), &[10.0, 100.0]);
+        let c = e.matmul(&a, &b);
+        assert_eq!(c.cells[&("r".into(), "c".into())], 320.0);
+    }
+
+    #[test]
+    fn string_construct_lex_min() {
+        let e = HashMapEngine;
+        let a = e.construct_string(&s(&["r", "r"]), &s(&["c", "c"]), &s(&["zz", "aa"]));
+        assert_eq!(a.str_cells[&("r".into(), "c".into())], "aa");
+    }
+}

@@ -1,0 +1,170 @@
+//! Baseline associative-array engines — the comparison curves.
+//!
+//! The paper's Figures 3–7 compare three implementations of the same
+//! API (D4M.py / D4M-MATLAB / D4M.jl). MATLAB and Julia cannot run
+//! here, so the reproduction compares three *implementation strategies*
+//! with identical semantics instead (DESIGN.md §3):
+//!
+//! * the sorted-array + sparse-matrix engine (`d4m-rs`, the paper's
+//!   design — [`crate::assoc::Assoc`]),
+//! * [`hashmap::HashMapEngine`] — a dict-of-triples engine (what a
+//!   straightforward Python/Julia dictionary implementation does),
+//! * [`btree::BTreeEngine`] — an ordered-map triple store (what a
+//!   naive sorted key/value design does).
+//!
+//! [`Engine`] is the common interface the figure benches drive; the
+//! cross-engine agreement tests in `rust/tests/` pin all three to the
+//! same semantics so the benchmarks compare equal work.
+
+pub mod btree;
+pub mod hashmap;
+
+use crate::assoc::{Assoc, ValsInput};
+
+/// The five benched operations, implementable by every engine.
+/// Construction takes pre-generated key/value lists (the paper's
+/// workload files); `add`/`elemmul`/`matmul` operate on numeric arrays.
+pub trait Engine {
+    /// The engine's associative-array representation.
+    type Array;
+
+    /// Engine name for bench output.
+    fn name(&self) -> &'static str;
+
+    /// Figure 3: numeric-value constructor (default `min` aggregation).
+    fn construct_numeric(&self, rows: &[String], cols: &[String], vals: &[f64]) -> Self::Array;
+
+    /// Figure 4: string-value constructor (default `min` aggregation).
+    fn construct_string(&self, rows: &[String], cols: &[String], vals: &[String]) -> Self::Array;
+
+    /// Figure 5: element-wise addition (plus-times ⊕ over the union).
+    fn add(&self, a: &Self::Array, b: &Self::Array) -> Self::Array;
+
+    /// Figure 6: array multiplication (plus-times contraction).
+    fn matmul(&self, a: &Self::Array, b: &Self::Array) -> Self::Array;
+
+    /// Figure 7: element-wise multiplication (intersection).
+    fn elemmul(&self, a: &Self::Array, b: &Self::Array) -> Self::Array;
+
+    /// Nonempty-entry count (result verification across engines).
+    fn nnz(&self, a: &Self::Array) -> usize;
+
+    /// Checksum of numeric content: Σ value (cross-engine agreement).
+    fn checksum(&self, a: &Self::Array) -> f64;
+}
+
+/// The primary engine: [`Assoc`] (sorted arrays + CSR sparse matrices).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct D4mEngine;
+
+impl Engine for D4mEngine {
+    type Array = Assoc;
+
+    fn name(&self) -> &'static str {
+        "d4m-rs"
+    }
+
+    fn construct_numeric(&self, rows: &[String], cols: &[String], vals: &[f64]) -> Assoc {
+        Assoc::from_triples(rows, cols, ValsInput::Num(vals.to_vec()))
+    }
+
+    fn construct_string(&self, rows: &[String], cols: &[String], vals: &[String]) -> Assoc {
+        Assoc::from_triples(rows, cols, ValsInput::Str(vals.to_vec()))
+    }
+
+    fn add(&self, a: &Assoc, b: &Assoc) -> Assoc {
+        a.add(b)
+    }
+
+    fn matmul(&self, a: &Assoc, b: &Assoc) -> Assoc {
+        a.matmul(b)
+    }
+
+    fn elemmul(&self, a: &Assoc, b: &Assoc) -> Assoc {
+        a.elemmul(b)
+    }
+
+    fn nnz(&self, a: &Assoc) -> usize {
+        a.nnz()
+    }
+
+    fn checksum(&self, a: &Assoc) -> f64 {
+        a.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::btree::BTreeEngine;
+    use super::hashmap::HashMapEngine;
+    use super::*;
+    use crate::util::prop::check;
+
+    /// Run the same random workload through all three engines and insist
+    /// on identical nnz + checksums for every benched operation.
+    #[test]
+    fn prop_engines_agree_on_all_figure_ops() {
+        let d4m = D4mEngine;
+        let hash = HashMapEngine;
+        let btree = BTreeEngine;
+        check("3 engines agree (construct/add/matmul/elemmul)", 60, |g| {
+            let (r1, c1, v1) = g.triples(50, 14);
+            let (r2, c2, _) = g.triples(50, 14);
+            let ones1 = vec![1.0; r1.len()];
+            let ones2 = vec![1.0; r2.len()];
+
+            let (da, ha, ba) = (
+                d4m.construct_numeric(&r1, &c1, &ones1),
+                hash.construct_numeric(&r1, &c1, &ones1),
+                btree.construct_numeric(&r1, &c1, &ones1),
+            );
+            let (db, hb, bb) = (
+                d4m.construct_numeric(&r2, &c2, &ones2),
+                hash.construct_numeric(&r2, &c2, &ones2),
+                btree.construct_numeric(&r2, &c2, &ones2),
+            );
+            // Constructor with values (min aggregation).
+            let (dv, hv, bv) = (
+                d4m.construct_numeric(&r1, &c1, &v1),
+                hash.construct_numeric(&r1, &c1, &v1),
+                btree.construct_numeric(&r1, &c1, &v1),
+            );
+            assert_eq!(d4m.nnz(&dv), hash.nnz(&hv));
+            assert_eq!(d4m.nnz(&dv), btree.nnz(&bv));
+            assert_eq!(d4m.checksum(&dv), hash.checksum(&hv));
+            assert_eq!(d4m.checksum(&dv), btree.checksum(&bv));
+
+            for (op_name, d, h, b) in [
+                ("add", d4m.add(&da, &db), hash.add(&ha, &hb), btree.add(&ba, &bb)),
+                ("matmul", d4m.matmul(&da, &db), hash.matmul(&ha, &hb), btree.matmul(&ba, &bb)),
+                (
+                    "elemmul",
+                    d4m.elemmul(&da, &db),
+                    hash.elemmul(&ha, &hb),
+                    btree.elemmul(&ba, &bb),
+                ),
+            ] {
+                assert_eq!(d4m.nnz(&d), hash.nnz(&h), "{op_name} nnz d4m vs hash");
+                assert_eq!(d4m.nnz(&d), btree.nnz(&b), "{op_name} nnz d4m vs btree");
+                assert_eq!(d4m.checksum(&d), hash.checksum(&h), "{op_name} checksum hash");
+                assert_eq!(d4m.checksum(&d), btree.checksum(&b), "{op_name} checksum btree");
+            }
+        });
+    }
+
+    #[test]
+    fn string_constructors_agree() {
+        let d4m = D4mEngine;
+        let hash = HashMapEngine;
+        let btree = BTreeEngine;
+        check("string constructor agreement", 60, |g| {
+            let (r, c, _) = g.triples(40, 10);
+            let vals: Vec<String> = (0..r.len()).map(|_| g.rng().ascii_lower(8)).collect();
+            let d = d4m.construct_string(&r, &c, &vals);
+            let h = hash.construct_string(&r, &c, &vals);
+            let b = btree.construct_string(&r, &c, &vals);
+            assert_eq!(d4m.nnz(&d), hash.nnz(&h));
+            assert_eq!(d4m.nnz(&d), btree.nnz(&b));
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Benchmark support: the paper's workload generators (§III.A) and the
+//! harness that prints/persists each figure's series.
+//!
+//! The paper's setup: for each `5 ≤ n ≤ 18`, six arrays of `8·2^n`
+//! elements — `rows`, `rows2`, `cols`, `cols2` are uniform random
+//! integers in `[0, 2^n]` *cast to strings*; `num_vals` are uniform
+//! integers in `[1, 100]`; `string_vals` are uniform random strings of
+//! length 8. (The paper says "between 0 and 100"; zero-valued entries
+//! would be unstored, so the generator uses `[1, 100]` to keep every
+//! triple live — the keys, counts and collision structure are
+//! unchanged.) Runs are averaged over 10 repeats on one core.
+
+pub mod workload;
+
+pub use workload::Workload;
+
+use crate::util::human;
+use crate::util::timer::Timings;
+use std::io::Write;
+
+/// One measured point of a figure series.
+#[derive(Debug, Clone)]
+pub struct Point {
+    /// Problem scale exponent (array is ~2ⁿ × 2ⁿ).
+    pub n: usize,
+    /// Engine / series label.
+    pub series: String,
+    /// Timing statistics.
+    pub timings: Timings,
+    /// Output nnz (work witness; also cross-checks engines).
+    pub out_nnz: usize,
+}
+
+/// Collector that prints the figure's table as it runs and writes a CSV
+/// at the end — one file per reproduced figure.
+pub struct FigureHarness {
+    /// Figure id, e.g. `"fig3"`.
+    pub id: String,
+    /// Human title, e.g. `"Assoc constructor (numeric values)"`.
+    pub title: String,
+    points: Vec<Point>,
+}
+
+impl FigureHarness {
+    /// Start a figure run (prints the header).
+    pub fn new(id: &str, title: &str) -> Self {
+        println!("== {id}: {title} ==");
+        println!(
+            "{:>4} {:>12} {:>12} {:>12} {:>12} {:>10}",
+            "n", "engine", "mean", "median", "min", "out_nnz"
+        );
+        FigureHarness { id: id.to_string(), title: title.to_string(), points: Vec::new() }
+    }
+
+    /// Record (and print) one measurement.
+    pub fn record(&mut self, n: usize, series: &str, timings: Timings, out_nnz: usize) {
+        println!(
+            "{:>4} {:>12} {:>12} {:>12} {:>12} {:>10}",
+            n,
+            series,
+            human::seconds(timings.mean_s()),
+            human::seconds(timings.median_s()),
+            human::seconds(timings.min_s()),
+            out_nnz,
+        );
+        self.points.push(Point { n, series: series.to_string(), timings, out_nnz });
+    }
+
+    /// Write `results/<id>.csv` with one row per point.
+    pub fn write_csv(&self, dir: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(format!("{}.csv", self.id));
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(f, "figure,n,engine,mean_s,median_s,min_s,stddev_s,out_nnz")?;
+        for p in &self.points {
+            writeln!(
+                f,
+                "{},{},{},{:.9},{:.9},{:.9},{:.9},{}",
+                self.id,
+                p.n,
+                p.series,
+                p.timings.mean_s(),
+                p.timings.median_s(),
+                p.timings.min_s(),
+                p.timings.stddev_s(),
+                p.out_nnz
+            )?;
+        }
+        f.flush()?;
+        println!("[{}] wrote {}", self.id, path.display());
+        Ok(path)
+    }
+
+    /// Recorded points (for shape assertions in tests).
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+}
+
+/// Standard bench CLI: `--min-n`, `--max-n`, `--repeats`, `--full`,
+/// `--out <dir>`. `--full` runs the paper's full range; the default is
+/// a reduced sweep so `cargo bench` completes quickly.
+pub struct BenchParams {
+    /// Smallest n.
+    pub min_n: usize,
+    /// Largest n (inclusive).
+    pub max_n: usize,
+    /// Timed repeats per point (paper: 10).
+    pub repeats: usize,
+    /// Output directory for CSVs.
+    pub out_dir: String,
+}
+
+impl BenchParams {
+    /// Parse from argv with figure-appropriate defaults. `paper_max_n`
+    /// is the figure's full-range cap (18 for Figs 3–5, 17 for Fig 6,
+    /// 13 for Fig 7); the quick default sweeps to `quick_max_n`.
+    pub fn from_env(paper_max_n: usize, quick_max_n: usize) -> Self {
+        let args = crate::util::Args::from_env();
+        let full = args.flag("full");
+        let default_max = if full { paper_max_n } else { quick_max_n.min(paper_max_n) };
+        let default_reps = if full { 10 } else { 3 };
+        BenchParams {
+            min_n: args.usize_or("min-n", 5),
+            max_n: args.usize_or("max-n", default_max),
+            repeats: args.usize_or("repeats", default_reps),
+            out_dir: args.str_or("out", "results"),
+        }
+    }
+
+    /// The swept n values.
+    pub fn ns(&self) -> impl Iterator<Item = usize> {
+        self.min_n..=self.max_n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn harness_collects_and_writes_csv() {
+        let mut h = FigureHarness::new("figtest", "test figure");
+        h.record(5, "d4m-rs", Timings { samples: vec![Duration::from_millis(1)] }, 42);
+        h.record(5, "hashmap", Timings { samples: vec![Duration::from_millis(2)] }, 42);
+        let dir = std::env::temp_dir().join("d4m-bench-test");
+        let path = h.write_csv(dir.to_str().unwrap()).unwrap();
+        let content = std::fs::read_to_string(path).unwrap();
+        assert!(content.starts_with("figure,n,engine"));
+        assert_eq!(content.lines().count(), 3);
+        assert!(content.contains("figtest,5,d4m-rs"));
+        assert_eq!(h.points().len(), 2);
+    }
+}

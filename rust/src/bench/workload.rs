@@ -1,0 +1,124 @@
+//! The paper's §III.A workload generator.
+
+use crate::util::SplitMix64;
+
+/// The six §III.A input arrays for one scale `n`, generated
+/// deterministically (seeded) instead of loaded from the paper's
+/// `rows.txt` … `string_vals.txt` files.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Scale exponent: keys in `[0, 2ⁿ]`, `8·2ⁿ` triples.
+    pub n: usize,
+    /// Row keys for operand A (`rows.txt[n]`).
+    pub rows: Vec<String>,
+    /// Column keys for operand A (`cols.txt[n]`).
+    pub cols: Vec<String>,
+    /// Row keys for operand B (`rows2.txt[n]`).
+    pub rows2: Vec<String>,
+    /// Column keys for operand B (`cols2.txt[n]`).
+    pub cols2: Vec<String>,
+    /// Numeric values (`num_vals.txt[n]`, uniform in `[1, 100]`).
+    pub num_vals: Vec<f64>,
+    /// String values (`string_vals.txt[n]`, random length-8 strings).
+    pub str_vals: Vec<String>,
+}
+
+impl Workload {
+    /// Number of triples at scale `n` (the paper's `8 · 2ⁿ`).
+    pub fn len_for(n: usize) -> usize {
+        8usize << n
+    }
+
+    /// Generate the full workload for scale `n` with a fixed seed
+    /// (distinct streams per array, all derived from `seed`).
+    pub fn generate(n: usize, seed: u64) -> Workload {
+        let len = Self::len_for(n);
+        let universe = (1u64 << n) + 1; // "between 0 and 2^n" inclusive
+        let mut root = SplitMix64::new(seed ^ (n as u64) << 32);
+        let key_stream = |r: &mut SplitMix64| -> Vec<String> {
+            (0..len).map(|_| r.below(universe).to_string()).collect()
+        };
+        let mut r1 = root.split();
+        let mut r2 = root.split();
+        let mut r3 = root.split();
+        let mut r4 = root.split();
+        let mut r5 = root.split();
+        let mut r6 = root.split();
+        Workload {
+            n,
+            rows: key_stream(&mut r1),
+            cols: key_stream(&mut r2),
+            rows2: key_stream(&mut r3),
+            cols2: key_stream(&mut r4),
+            num_vals: (0..len).map(|_| r5.range_i64(1, 100) as f64).collect(),
+            str_vals: (0..len).map(|_| r6.ascii_lower(8)).collect(),
+        }
+    }
+
+    /// The all-ones value vector used by the add/matmul/elemmul benches
+    /// (`Assoc(rows, cols, 1)`).
+    pub fn ones(&self) -> Vec<f64> {
+        vec![1.0; self.rows.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_paper() {
+        let w = Workload::generate(5, 1);
+        assert_eq!(w.rows.len(), 8 * 32);
+        assert_eq!(w.cols.len(), w.rows.len());
+        assert_eq!(w.num_vals.len(), w.rows.len());
+        assert_eq!(w.str_vals.len(), w.rows.len());
+    }
+
+    #[test]
+    fn keys_in_range_and_stringy() {
+        let w = Workload::generate(6, 2);
+        for k in w.rows.iter().chain(&w.cols).chain(&w.rows2).chain(&w.cols2) {
+            let v: u64 = k.parse().expect("integer-as-string key");
+            assert!(v <= 64, "key {v} exceeds 2^6");
+        }
+    }
+
+    #[test]
+    fn values_in_declared_ranges() {
+        let w = Workload::generate(7, 3);
+        assert!(w.num_vals.iter().all(|&v| (1.0..=100.0).contains(&v) && v.fract() == 0.0));
+        assert!(w.str_vals.iter().all(|s| s.len() == 8));
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_distinct_per_stream() {
+        let a = Workload::generate(5, 42);
+        let b = Workload::generate(5, 42);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.str_vals, b.str_vals);
+        let c = Workload::generate(5, 43);
+        assert_ne!(a.rows, c.rows);
+        // Streams differ from each other.
+        assert_ne!(a.rows, a.rows2);
+        assert_ne!(a.cols, a.cols2);
+    }
+
+    #[test]
+    fn collision_rate_is_papers() {
+        // ~8 entries per row over a 2^n key space: with 8·2^n draws over
+        // (2^n)² cells the collision rate is low but nonzero.
+        let w = Workload::generate(8, 7);
+        use std::collections::HashSet;
+        let pairs: HashSet<(String, String)> = w
+            .rows
+            .iter()
+            .cloned()
+            .zip(w.cols.iter().cloned())
+            .collect();
+        let unique = pairs.len();
+        let total = w.rows.len();
+        assert!(unique <= total);
+        assert!(unique as f64 > 0.9 * total as f64, "too many collisions: {unique}/{total}");
+    }
+}

@@ -1,0 +1,53 @@
+//! # d4m — Dynamic Distributed Dimensional Data Model, in Rust
+//!
+//! A from-scratch reproduction of the D4M associative-array data model
+//! described in *"Python Implementation of the Dynamic Distributed
+//! Dimensional Data Model"* (Jananthan et al., IEEE HPEC 2022), built as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **[`assoc`]** — the associative-array algebra (`A : I × J → V` over a
+//!   semiring), the paper's central data model, with the four-attribute
+//!   storage layout (`row`, `col`, `val`, `adj`).
+//! * **[`sorted`]** — sorted union / sorted intersection with index maps,
+//!   the algorithmic core of `+`, `*` and `@` (paper §II.C).
+//! * **[`semiring`]** — plus-times, max-plus, min-plus, max-min and the
+//!   string (concat, min) algebra (paper §I.A).
+//! * **[`sparse`]** — a from-scratch sparse linear-algebra substrate
+//!   (COO/CSR/CSC, add, elementwise multiply, SpGEMM) standing in for
+//!   SciPy.sparse.
+//! * **[`store`]** — an Accumulo-like sorted, distributed key/value triple
+//!   store (tablets, splits, batch writer, range scans).
+//! * **[`graphulo`]** — Graphulo-style server-side kernels (TableMult,
+//!   degree tables, BFS) over the store.
+//! * **[`pipeline`]** — the streaming ingest orchestrator: sharding,
+//!   rebalancing and bounded-queue backpressure.
+//! * **[`runtime`]** — PJRT (XLA) runtime that loads AOT-compiled Pallas
+//!   semiring-matmul kernels and serves the dense-block acceleration path.
+//! * **[`baselines`]** — alternative engines (hashmap dict-of-dict, btree
+//!   triple store) used as the comparison curves for the paper's figures.
+//! * **[`bench`]** — the paper's workload generators (§III.A) and the
+//!   harness that regenerates Figures 3–7.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use d4m::assoc::Assoc;
+//! let a = Assoc::from_triples(
+//!     &["0294.mp3", "1829.mp3", "7802.mp3"],
+//!     &["artist", "artist", "artist"],
+//!     &["Pink Floyd", "Samuel Barber", "Taylor Swift"][..],
+//! );
+//! assert_eq!(a.get_str("0294.mp3", "artist"), Some("Pink Floyd"));
+//! ```
+
+pub mod assoc;
+pub mod baselines;
+pub mod bench;
+pub mod graphulo;
+pub mod pipeline;
+pub mod runtime;
+pub mod semiring;
+pub mod sorted;
+pub mod sparse;
+pub mod store;
+pub mod util;

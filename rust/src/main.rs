@@ -1,0 +1,138 @@
+//! `d4m` — leader entrypoint / CLI for the D4M reproduction.
+//!
+//! Subcommands:
+//!
+//! * `d4m info` — artifact manifest + PJRT platform report.
+//! * `d4m demo` — build and print the paper's Figure-1 array, run the
+//!   basic algebra on it.
+//! * `d4m ingest [--triples N] [--workers W] [--policy hash|range]
+//!   [--latency-us L]` — run the sharded ingest pipeline against an
+//!   in-process table store and report throughput/backpressure.
+//! * `d4m op --op <constructor|add|matmul|elemmul> [--n N]` — time one
+//!   paper operation at scale `n` on the d4m engine.
+//!
+//! The figure reproductions live in `cargo bench` targets (one per
+//! paper figure); the end-to-end driver is `examples/ingest_pipeline`.
+
+use d4m::assoc::Assoc;
+use d4m::bench::Workload;
+use d4m::pipeline::{IngestPipeline, PipelineConfig, ShardPolicy};
+use d4m::store::{Table, TableConfig, Triple};
+use d4m::util::{human, time_op, Args};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "demo" => demo(),
+        "ingest" => ingest(&args),
+        "op" => op(&args),
+        _ => {
+            eprintln!(
+                "usage: d4m <info|demo|ingest|op> [flags]\n\
+                 \n  info    — artifact manifest + PJRT platform\
+                 \n  demo    — the paper's Figure 1 walkthrough\
+                 \n  ingest  — sharded pipeline ingest (--triples --workers --policy --latency-us)\
+                 \n  op      — time one op (--op constructor|add|matmul|elemmul, --n N)"
+            );
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+fn info() {
+    match d4m::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            println!("PJRT runtime loaded from artifacts/:");
+            for a in rt.artifacts() {
+                println!(
+                    "  {:28} kind={:7} semiring={:11} tile={}x{} block={} inputs={}",
+                    a.name, a.kind, a.semiring, a.size, a.size, a.block, a.num_inputs
+                );
+            }
+        }
+        Err(e) => println!("runtime unavailable ({e}); run `make artifacts`"),
+    }
+}
+
+fn demo() {
+    let a = Assoc::from_triples(
+        &["0294.mp3", "0294.mp3", "0294.mp3", "1829.mp3", "1829.mp3", "1829.mp3", "7802.mp3",
+            "7802.mp3", "7802.mp3"],
+        &["artist", "duration", "genre", "artist", "duration", "genre", "artist", "duration",
+            "genre"],
+        &["Pink Floyd", "6:53", "rock", "Samuel Barber", "8:01", "classical", "Taylor Swift",
+            "10:12", "pop"][..],
+    );
+    println!("A =\n{a}");
+    println!("A row keys: {:?}", a.row_keys().iter().map(|k| k.to_string()).collect::<Vec<_>>());
+    println!("AᵀA (track-attribute correlation) =\n{}", a.sqin());
+    println!("genre column:\n{}", a.get_col("genre"));
+}
+
+fn ingest(args: &Args) {
+    let triples = args.usize_or("triples", 1_000_000);
+    let workers = args.usize_or("workers", 4);
+    let latency = args.usize_or("latency-us", 0) as u64;
+    let policy = match args.str_or("policy", "hash").as_str() {
+        "range" => ShardPolicy::Range { splits: vec![] },
+        _ => ShardPolicy::Hash,
+    };
+    let table = Arc::new(Table::new(
+        "ingest",
+        TableConfig { split_threshold: 8 << 20, write_latency_us: latency },
+    ));
+    let mut p = IngestPipeline::start(
+        Arc::clone(&table),
+        PipelineConfig { workers, policy, ..Default::default() },
+    );
+    let mut r = d4m::util::SplitMix64::new(7);
+    for i in 0..triples {
+        p.submit(Triple::new(
+            format!("r{:012}", r.next_u64() % (triples as u64)),
+            format!("c{}", i % 64),
+            "1",
+        ));
+    }
+    let report = p.finish();
+    println!(
+        "ingested {} triples in {} ({}), {} workers, {} stalls, imbalance {:.2}, {} tablets",
+        human::count(report.written as u64),
+        human::seconds(report.elapsed_s),
+        human::rate(report.rate()),
+        report.per_worker.len(),
+        report.stalls,
+        report.imbalance(),
+        table.tablet_count(),
+    );
+}
+
+fn op(args: &Args) {
+    let n = args.usize_or("n", 12);
+    let opname = args.str_or("op", "matmul");
+    let w = Workload::generate(n, 20220910);
+    let ones = w.ones();
+    let a = Assoc::from_triples(&w.rows, &w.cols, d4m::assoc::ValsInput::Num(ones.clone()));
+    let b = Assoc::from_triples(&w.rows2, &w.cols2, d4m::assoc::ValsInput::Num(ones.clone()));
+    let timings = match opname.as_str() {
+        "constructor" => time_op(1, 10, |_| {
+            Assoc::from_triples(&w.rows, &w.cols, d4m::assoc::ValsInput::Num(w.num_vals.clone()))
+        }),
+        "add" => time_op(1, 10, |_| a.add(&b)),
+        "matmul" => time_op(1, 10, |_| a.matmul(&b)),
+        "elemmul" => time_op(1, 10, |_| a.elemmul(&b)),
+        other => {
+            eprintln!("unknown --op {other}");
+            std::process::exit(2);
+        }
+    };
+    println!(
+        "{opname} @ n={n} ({} triples): mean {} median {} min {}",
+        human::count(Workload::len_for(n) as u64),
+        human::seconds(timings.mean_s()),
+        human::seconds(timings.median_s()),
+        human::seconds(timings.min_s()),
+    );
+}

@@ -1,0 +1,331 @@
+//! Streaming ingest pipeline — the L3 coordination layer.
+//!
+//! D4M's headline deployments are high-rate triple ingest into the
+//! distributed store (the 100M-inserts/s Accumulo result in the paper's
+//! lineage). This module is that orchestrator, scaled to one process:
+//!
+//! ```text
+//!   source ──► sharder ──bounded queues──► worker 0 ─BatchWriter─► Table
+//!                 │                        worker 1 ─BatchWriter─►  (tablets)
+//!                 └── backpressure: send blocks when a queue is full
+//! ```
+//!
+//! * **Sharding** — triples are routed to workers by hash or by row
+//!   range ([`ShardPolicy`]); range sharding aligns workers with tablet
+//!   split points so writers rarely cross-lock tablets.
+//! * **Backpressure** — queues are bounded `sync_channel`s: when
+//!   workers fall behind, the producer blocks instead of buffering
+//!   without limit. Queue-full stalls are counted in [`IngestReport`].
+//! * **Rebalancing** — [`IngestPipeline::rebalance_splits`] re-derives
+//!   range boundaries from a key sample (used between ingest waves).
+
+mod shard;
+
+pub use shard::{sample_split_points, ShardPolicy, Sharder};
+
+use crate::store::{BatchWriter, Table, Triple, WriterConfig};
+use std::sync::atomic::AtomicUsize;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Pipeline tuning.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Number of ingest worker threads.
+    pub workers: usize,
+    /// Bound of each worker's queue, in triples (the backpressure knob).
+    pub queue_depth: usize,
+    /// Batch-writer settings used by every worker.
+    pub writer: WriterConfig,
+    /// Shard-routing policy.
+    pub policy: ShardPolicy,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            workers: 4,
+            queue_depth: 1024,
+            writer: WriterConfig::default(),
+            policy: ShardPolicy::Hash,
+        }
+    }
+}
+
+/// Outcome of one ingest run.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// Triples submitted by the producer.
+    pub submitted: usize,
+    /// Triples written to the table (== submitted on success).
+    pub written: usize,
+    /// Times the producer blocked on a full queue (backpressure events).
+    pub stalls: usize,
+    /// Wall-clock seconds for the whole run.
+    pub elapsed_s: f64,
+    /// Per-worker triple counts (shard balance diagnostic).
+    pub per_worker: Vec<usize>,
+    /// Batch flushes across workers.
+    pub flushes: usize,
+}
+
+impl IngestReport {
+    /// Ingest rate in triples/second.
+    pub fn rate(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.written as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Shard imbalance: max/mean worker load (1.0 = perfectly even).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.per_worker.iter().copied().max().unwrap_or(0) as f64;
+        let mean = self.written as f64 / self.per_worker.len().max(1) as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
+}
+
+/// A running ingest pipeline bound to one destination table.
+pub struct IngestPipeline {
+    senders: Vec<SyncSender<Vec<Triple>>>,
+    workers: Vec<JoinHandle<(usize, usize)>>,
+    sharder: Sharder,
+    stalls: usize,
+    submitted: usize,
+    started: Instant,
+    /// Micro-batch assembly buffers, one per worker.
+    pending: Vec<Vec<Triple>>,
+    micro_batch: usize,
+}
+
+impl IngestPipeline {
+    /// Spawn workers and return a ready pipeline writing into `table`.
+    pub fn start(table: Arc<Table>, config: PipelineConfig) -> Self {
+        assert!(config.workers >= 1);
+        let live_counter = Arc::new(AtomicUsize::new(0));
+        let mut senders = Vec::with_capacity(config.workers);
+        let mut workers = Vec::with_capacity(config.workers);
+        for w in 0..config.workers {
+            let (tx, rx): (SyncSender<Vec<Triple>>, Receiver<Vec<Triple>>) =
+                sync_channel(config.queue_depth);
+            let table = Arc::clone(&table);
+            let wconf = config.writer.clone();
+            let _live = Arc::clone(&live_counter);
+            let handle = std::thread::Builder::new()
+                .name(format!("d4m-ingest-{w}"))
+                .spawn(move || {
+                    let mut writer = BatchWriter::new(table, wconf);
+                    let mut count = 0usize;
+                    while let Ok(batch) = rx.recv() {
+                        count += batch.len();
+                        writer.put_all(batch);
+                    }
+                    writer.flush();
+                    (count, writer.flushes)
+                })
+                .expect("spawn ingest worker");
+            senders.push(tx);
+            workers.push(handle);
+        }
+        let sharder = Sharder::new(config.policy, config.workers);
+        IngestPipeline {
+            senders,
+            workers,
+            sharder,
+            stalls: 0,
+            submitted: 0,
+            started: Instant::now(),
+            pending: (0..config.workers).map(|_| Vec::new()).collect(),
+            micro_batch: 64,
+        }
+    }
+
+    /// Submit one triple. Blocks (backpressure) when the destination
+    /// worker's queue is full; the stall is counted.
+    pub fn submit(&mut self, t: Triple) {
+        let w = self.sharder.route(&t.row);
+        self.submitted += 1;
+        self.pending[w].push(t);
+        if self.pending[w].len() >= self.micro_batch {
+            self.dispatch(w);
+        }
+    }
+
+    /// Submit many triples.
+    pub fn submit_all(&mut self, ts: impl IntoIterator<Item = Triple>) {
+        for t in ts {
+            self.submit(t);
+        }
+    }
+
+    fn dispatch(&mut self, w: usize) {
+        let batch = std::mem::take(&mut self.pending[w]);
+        match self.senders[w].try_send(batch) {
+            Ok(()) => {}
+            Err(TrySendError::Full(batch)) => {
+                // Backpressure: block until the worker drains.
+                self.stalls += 1;
+                self.senders[w].send(batch).expect("worker alive");
+            }
+            Err(TrySendError::Disconnected(_)) => panic!("ingest worker died"),
+        }
+    }
+
+    /// Re-derive range-shard boundaries from the table's current split
+    /// points (no-op under hash sharding). Call between ingest waves.
+    pub fn rebalance_splits(&mut self, table: &Table) {
+        self.sharder.rebalance(&table.split_points());
+    }
+
+    /// Flush all pending micro-batches, stop workers, and report.
+    pub fn finish(mut self) -> IngestReport {
+        for w in 0..self.pending.len() {
+            if !self.pending[w].is_empty() {
+                self.dispatch(w);
+            }
+        }
+        // Close channels so workers drain and exit.
+        drop(std::mem::take(&mut self.senders));
+        let mut per_worker = Vec::new();
+        let mut flushes = 0;
+        for h in self.workers.drain(..) {
+            let (count, f) = h.join().expect("ingest worker panicked");
+            per_worker.push(count);
+            flushes += f;
+        }
+        let written = per_worker.iter().sum();
+        IngestReport {
+            submitted: self.submitted,
+            written,
+            stalls: self.stalls,
+            elapsed_s: self.started.elapsed().as_secs_f64(),
+            per_worker,
+            flushes,
+        }
+    }
+}
+
+impl Drop for IngestPipeline {
+    fn drop(&mut self) {
+        // Close channels; detach workers (finish() is the normal path).
+        self.senders.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{ScanRange, TableConfig};
+
+    fn mk_table(latency_us: u64) -> Arc<Table> {
+        Arc::new(Table::new(
+            "t",
+            TableConfig { split_threshold: 1 << 16, write_latency_us: latency_us },
+        ))
+    }
+
+    fn triples(n: usize) -> Vec<Triple> {
+        (0..n).map(|i| Triple::new(format!("row{i:06}"), "c", "v")).collect()
+    }
+
+    #[test]
+    fn ingests_everything_hash_sharded() {
+        let table = mk_table(0);
+        let mut p = IngestPipeline::start(
+            Arc::clone(&table),
+            PipelineConfig { workers: 3, ..Default::default() },
+        );
+        p.submit_all(triples(5000));
+        let report = p.finish();
+        assert_eq!(report.submitted, 5000);
+        assert_eq!(report.written, 5000);
+        assert_eq!(table.len(), 5000);
+        assert_eq!(report.per_worker.len(), 3);
+        assert!(report.per_worker.iter().all(|&c| c > 0), "all workers used");
+        // Hash sharding should be reasonably balanced.
+        assert!(report.imbalance() < 1.5, "imbalance {}", report.imbalance());
+    }
+
+    #[test]
+    fn range_sharding_routes_by_split_points() {
+        let table = mk_table(0);
+        let mut p = IngestPipeline::start(
+            Arc::clone(&table),
+            PipelineConfig {
+                workers: 2,
+                policy: ShardPolicy::Range { splits: vec!["row005000".into()] },
+                ..Default::default()
+            },
+        );
+        p.submit_all(triples(10000));
+        let report = p.finish();
+        assert_eq!(report.written, 10000);
+        // Split at the median → both workers hit.
+        assert!(report.per_worker.iter().all(|&c| c == 5000), "{:?}", report.per_worker);
+    }
+
+    #[test]
+    fn backpressure_stalls_counted_with_slow_store() {
+        let table = mk_table(200); // 200µs per batch write — slow server
+        let mut p = IngestPipeline::start(
+            Arc::clone(&table),
+            PipelineConfig {
+                workers: 1,
+                queue_depth: 1, // tiny queue to force stalls
+                // Tiny write buffer so every micro-batch hits the slow
+                // table instead of sitting in the BatchWriter.
+                writer: WriterConfig { batch_bytes: 256, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        p.submit_all(triples(2000));
+        let report = p.finish();
+        assert_eq!(report.written, 2000);
+        assert!(report.stalls > 0, "expected backpressure stalls");
+    }
+
+    #[test]
+    fn scan_after_ingest_is_sorted_and_complete() {
+        let table = mk_table(0);
+        let mut p = IngestPipeline::start(Arc::clone(&table), PipelineConfig::default());
+        p.submit_all(triples(1000));
+        p.finish();
+        let all = table.scan(ScanRange::all());
+        assert_eq!(all.len(), 1000);
+        assert!(all.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn rebalance_from_table_splits() {
+        let table = Arc::new(Table::new(
+            "t",
+            TableConfig { split_threshold: 1 << 10, write_latency_us: 0 },
+        ));
+        let mut p = IngestPipeline::start(
+            Arc::clone(&table),
+            PipelineConfig {
+                workers: 2,
+                policy: ShardPolicy::Range { splits: vec![] },
+                ..Default::default()
+            },
+        );
+        // Wave 1: all triples go to worker 0 (no splits yet).
+        p.submit_all(triples(2000));
+        p.rebalance_splits(&table);
+        // Wave 2 distributes.
+        p.submit_all(triples(2000));
+        let report = p.finish();
+        assert_eq!(report.written, 4000);
+    }
+}

@@ -1,0 +1,183 @@
+//! Shard routing: which worker owns a row key.
+
+/// Routing policy for the ingest pipeline.
+#[derive(Debug, Clone)]
+pub enum ShardPolicy {
+    /// FNV-1a hash of the row key modulo worker count. Uniform load,
+    /// but a worker's writes touch arbitrary tablets.
+    Hash,
+    /// Range partitioning by explicit boundary keys (worker `i` owns
+    /// keys in `[splits[i-1], splits[i])`). Aligns workers with tablet
+    /// extents so each `BatchWriter` flush lands in few tablets.
+    Range {
+        /// Sorted boundary keys; `len` ≤ workers − 1 (extra boundaries
+        /// are folded into the last worker).
+        splits: Vec<String>,
+    },
+}
+
+/// A resolved router (policy + worker count).
+#[derive(Debug, Clone)]
+pub struct Sharder {
+    policy: ShardPolicy,
+    workers: usize,
+}
+
+impl Sharder {
+    /// Build a router for `workers` workers.
+    pub fn new(policy: ShardPolicy, workers: usize) -> Self {
+        let policy = match policy {
+            ShardPolicy::Range { mut splits } => {
+                splits.sort();
+                splits.dedup();
+                splits.truncate(workers.saturating_sub(1));
+                ShardPolicy::Range { splits }
+            }
+            p => p,
+        };
+        Sharder { policy, workers }
+    }
+
+    /// Worker index for a row key.
+    pub fn route(&self, row: &str) -> usize {
+        match &self.policy {
+            ShardPolicy::Hash => (fnv1a(row.as_bytes()) as usize) % self.workers,
+            ShardPolicy::Range { splits } => {
+                // partition_point: first boundary greater than row.
+                splits.partition_point(|s| s.as_str() <= row)
+            }
+        }
+    }
+
+    /// Replace range boundaries (no-op for hash sharding). New splits
+    /// are re-fitted to the worker count exactly like `new`.
+    pub fn rebalance(&mut self, splits: &[String]) {
+        if let ShardPolicy::Range { .. } = self.policy {
+            let refit = Sharder::new(
+                ShardPolicy::Range { splits: even_subsample(splits, self.workers - 1) },
+                self.workers,
+            );
+            self.policy = refit.policy;
+        }
+    }
+}
+
+/// FNV-1a 64-bit hash.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Pick `k` roughly-evenly-spaced boundaries from a sorted key list.
+pub(crate) fn even_subsample(splits: &[String], k: usize) -> Vec<String> {
+    if k == 0 || splits.is_empty() {
+        return Vec::new();
+    }
+    if splits.len() <= k {
+        return splits.to_vec();
+    }
+    (1..=k)
+        .map(|i| splits[i * splits.len() / (k + 1)].clone())
+        .collect()
+}
+
+/// Derive `k` split points from a (not necessarily sorted) key sample —
+/// used to pre-split tables / pre-shard pipelines before a large ingest.
+pub fn sample_split_points(sample: &[String], k: usize) -> Vec<String> {
+    let mut sorted = sample.to_vec();
+    sorted.sort();
+    sorted.dedup();
+    even_subsample(&sorted, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn hash_routing_in_range_and_balanced() {
+        let s = Sharder::new(ShardPolicy::Hash, 4);
+        let mut counts = [0usize; 4];
+        let mut r = SplitMix64::new(1);
+        for _ in 0..8000 {
+            let key = r.below(1_000_000).to_string();
+            let w = s.route(&key);
+            assert!(w < 4);
+            counts[w] += 1;
+        }
+        for &c in &counts {
+            assert!((1600..=2400).contains(&c), "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn hash_routing_is_deterministic() {
+        let s = Sharder::new(ShardPolicy::Hash, 8);
+        assert_eq!(s.route("somekey"), s.route("somekey"));
+    }
+
+    #[test]
+    fn range_routing_boundaries() {
+        let s = Sharder::new(
+            ShardPolicy::Range { splits: vec!["g".into(), "p".into()] },
+            3,
+        );
+        assert_eq!(s.route("a"), 0);
+        assert_eq!(s.route("f"), 0);
+        assert_eq!(s.route("g"), 1); // boundary belongs to the right shard
+        assert_eq!(s.route("o"), 1);
+        assert_eq!(s.route("p"), 2);
+        assert_eq!(s.route("z"), 2);
+    }
+
+    #[test]
+    fn range_with_no_splits_routes_all_to_zero() {
+        let s = Sharder::new(ShardPolicy::Range { splits: vec![] }, 4);
+        assert_eq!(s.route("anything"), 0);
+    }
+
+    #[test]
+    fn excess_splits_truncated_to_workers() {
+        let s = Sharder::new(
+            ShardPolicy::Range {
+                splits: vec!["b".into(), "c".into(), "d".into(), "e".into()],
+            },
+            2,
+        );
+        // Only 1 boundary survives for 2 workers.
+        assert_eq!(s.route("a"), 0);
+        assert_eq!(s.route("z"), 1);
+    }
+
+    #[test]
+    fn rebalance_changes_routing() {
+        let mut s = Sharder::new(ShardPolicy::Range { splits: vec![] }, 2);
+        assert_eq!(s.route("m"), 0);
+        s.rebalance(&["m".to_string()]);
+        assert_eq!(s.route("l"), 0);
+        assert_eq!(s.route("m"), 1);
+    }
+
+    #[test]
+    fn sample_split_points_even() {
+        let sample: Vec<String> = (0..100).map(|i| format!("{i:03}")).collect();
+        let sp = sample_split_points(&sample, 3);
+        assert_eq!(sp.len(), 3);
+        assert!(sp.windows(2).all(|w| w[0] < w[1]));
+        // Roughly the quartiles.
+        assert_eq!(sp, vec!["025".to_string(), "050".to_string(), "075".to_string()]);
+    }
+
+    #[test]
+    fn even_subsample_edge_cases() {
+        assert!(even_subsample(&[], 3).is_empty());
+        assert!(even_subsample(&["a".into()], 0).is_empty());
+        let two = vec!["a".to_string(), "b".to_string()];
+        assert_eq!(even_subsample(&two, 5), two);
+    }
+}

@@ -1,0 +1,270 @@
+//! PJRT runtime: load and execute the AOT-compiled Pallas kernels.
+//!
+//! `make artifacts` (build-time Python) lowers the L1/L2 semiring
+//! matmul variants to HLO text in `artifacts/`; this module is the
+//! request-path side: a [`Runtime`] wraps a PJRT CPU client
+//! (`xla` crate), discovers artifacts from `manifest.tsv`, compiles
+//! each on first use, and serves dense-block execution to the
+//! accelerated `@` path ([`accel_matmul`]). Python never runs here.
+//!
+//! The accelerated path mirrors `Assoc::matmul_with` exactly — contract
+//! over `A.col ∩ B.row` — but routes the contraction through fixed-size
+//! dense tiles: scatter CSR blocks into `S×S` f32 tiles (padded with
+//! the semiring zero, which the kernel's ⊕-accumulation ignores), run
+//! the compiled kernel per `(i, j, k)` tile step, ⊕-combine partial
+//! tiles on the host, and gather the result back to sparse. Dispatch is
+//! by operand density ([`should_accelerate`]).
+
+mod tile;
+
+pub use tile::{accel_matmul, should_accelerate, AccelStats};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One AOT artifact as described by `manifest.tsv`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    /// Variant name, e.g. `matmul_plus_times_128`.
+    pub name: String,
+    /// `matmul` (2 inputs) or `accum` (3 inputs, fused ⊕ C).
+    pub kind: String,
+    /// Semiring name (matches [`crate::semiring::Semiring::name`]).
+    pub semiring: String,
+    /// Square tile extent S (operands are S×S).
+    pub size: usize,
+    /// Pallas block parameter used at lowering (perf metadata).
+    pub block: usize,
+    /// Number of kernel inputs.
+    pub num_inputs: usize,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+}
+
+/// A loaded PJRT runtime with lazily-compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: BTreeMap<String, Artifact>,
+    compiled: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest from an artifact directory and start a PJRT
+    /// CPU client. Fails if the directory or manifest is missing (run
+    /// `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let mut artifacts = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 7 {
+                return Err(anyhow!("manifest.tsv line {}: expected 7 fields", i + 1));
+            }
+            let a = Artifact {
+                name: f[0].to_string(),
+                kind: f[1].to_string(),
+                semiring: f[2].to_string(),
+                size: f[3].parse().context("size")?,
+                block: f[4].parse().context("block")?,
+                num_inputs: f[5].parse().context("num_inputs")?,
+                file: f[6].to_string(),
+            };
+            artifacts.insert(a.name.clone(), a);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, artifacts, compiled: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the
+    /// working directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load("artifacts")
+    }
+
+    /// The manifest.
+    pub fn artifacts(&self) -> impl Iterator<Item = &Artifact> {
+        self.artifacts.values()
+    }
+
+    /// Look up an artifact by name.
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.get(name)
+    }
+
+    /// Find the matmul artifact for a semiring with the largest tile
+    /// size ≤ `max_size` (the tile planner's query).
+    pub fn best_matmul(&self, semiring: &str, max_size: usize) -> Option<&Artifact> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == "matmul" && a.semiring == semiring && a.size <= max_size)
+            .max_by_key(|a| a.size)
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name} in manifest"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.compiled.lock().unwrap().insert(name.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute a 2-input S×S matmul artifact on raw row-major f32 tiles.
+    pub fn run_matmul(&self, name: &str, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let art =
+            self.artifact(name).ok_or_else(|| anyhow!("no artifact {name}"))?.clone();
+        anyhow::ensure!(art.num_inputs == 2, "{name} is not a 2-input matmul artifact");
+        let s = art.size;
+        anyhow::ensure!(a.len() == s * s && b.len() == s * s, "tile size mismatch");
+        let exe = self.executable(name)?;
+        let la = literal_2d(a, s)?;
+        let lb = literal_2d(b, s)?;
+        execute_tuple1(&exe, &[la, lb], s)
+    }
+
+    /// Execute a 3-input fused accum artifact: `(A ⊗.⊕ B) ⊕ C`.
+    pub fn run_accum(&self, name: &str, a: &[f32], b: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        let art =
+            self.artifact(name).ok_or_else(|| anyhow!("no artifact {name}"))?.clone();
+        anyhow::ensure!(art.num_inputs == 3, "{name} is not a 3-input accum artifact");
+        let s = art.size;
+        anyhow::ensure!(
+            a.len() == s * s && b.len() == s * s && c.len() == s * s,
+            "tile size mismatch"
+        );
+        let exe = self.executable(name)?;
+        execute_tuple1(&exe, &[literal_2d(a, s)?, literal_2d(b, s)?, literal_2d(c, s)?], s)
+    }
+}
+
+fn literal_2d(data: &[f32], s: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[s as i64, s as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+fn execute_tuple1(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+    s: usize,
+) -> Result<Vec<f32>> {
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    // Lowered with return_tuple=True: unwrap the 1-tuple.
+    let out = result.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
+    let v = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+    anyhow::ensure!(v.len() == s * s, "unexpected output size {}", v.len());
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests are skipped (not failed) when artifacts are absent, so
+    /// `cargo test` works before `make artifacts`; the Makefile's test
+    /// target always builds artifacts first.
+    fn runtime() -> Option<Runtime> {
+        if !Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping runtime test: artifacts/ missing (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load("artifacts").expect("load runtime"))
+    }
+
+    #[test]
+    fn manifest_loads_expected_variants() {
+        let Some(rt) = runtime() else { return };
+        let names: Vec<&str> = rt.artifacts().map(|a| a.name.as_str()).collect();
+        assert!(names.contains(&"matmul_plus_times_128"));
+        assert!(names.contains(&"matmul_min_plus_128"));
+        let art = rt.artifact("matmul_plus_times_128").unwrap();
+        assert_eq!((art.size, art.num_inputs), (128, 2));
+    }
+
+    #[test]
+    fn best_matmul_selection() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.best_matmul("plus_times", 512).unwrap().size, 256);
+        assert_eq!(rt.best_matmul("plus_times", 128).unwrap().size, 128);
+        assert!(rt.best_matmul("plus_times", 64).is_none());
+        assert!(rt.best_matmul("nope", 512).is_none());
+    }
+
+    #[test]
+    fn plus_times_tile_matches_host() {
+        let Some(rt) = runtime() else { return };
+        let s = 128usize;
+        // Identity x J: result is J.
+        let mut ident = vec![0f32; s * s];
+        for i in 0..s {
+            ident[i * s + i] = 1.0;
+        }
+        let j: Vec<f32> = (0..s * s).map(|i| (i % 7) as f32).collect();
+        let out = rt.run_matmul("matmul_plus_times_128", &ident, &j).unwrap();
+        assert_eq!(out, j);
+    }
+
+    #[test]
+    fn min_plus_tile_known_values() {
+        let Some(rt) = runtime() else { return };
+        let s = 128usize;
+        let inf = f32::INFINITY;
+        // a[0,0]=2, a[0,1]=5; b[0,0]=10, b[1,0]=1 → c[0,0]=min(12, 6)=6.
+        let mut a = vec![inf; s * s];
+        let mut b = vec![inf; s * s];
+        a[0] = 2.0;
+        a[1] = 5.0;
+        b[0] = 10.0;
+        b[s] = 1.0;
+        let out = rt.run_matmul("matmul_min_plus_128", &a, &b).unwrap();
+        assert_eq!(out[0], 6.0);
+        assert_eq!(out[1], inf); // untouched cells stay at the zero
+    }
+
+    #[test]
+    fn accum_fuses_host_combine() {
+        let Some(rt) = runtime() else { return };
+        let s = 128usize;
+        let a = vec![0f32; s * s]; // zero operand ⇒ A@B = 0
+        let b = vec![0f32; s * s];
+        let c: Vec<f32> = (0..s * s).map(|i| (i % 13) as f32).collect();
+        let out = rt.run_accum("accum_plus_times_128", &a, &b, &c).unwrap();
+        assert_eq!(out, c); // 0 + C = C
+    }
+
+    #[test]
+    fn wrong_tile_size_rejected() {
+        let Some(rt) = runtime() else { return };
+        let bad = vec![0f32; 4];
+        assert!(rt.run_matmul("matmul_plus_times_128", &bad, &bad).is_err());
+        assert!(rt.run_matmul("no_such_artifact", &bad, &bad).is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! The tiled dense-block acceleration path for `A @ B`.
+//!
+//! Mirrors `Assoc::matmul_with` (contract over `A.col ∩ B.row`,
+//! condense after), but runs the numeric contraction on the PJRT tile
+//! kernels instead of host SpGEMM: scatter sparse blocks into `S×S`
+//! dense f32 tiles padded with the semiring zero, contract tiles on
+//! the compiled kernel, ⊕-combine partial tiles on the host, gather
+//! the nonzero results back to sparse.
+
+use super::Runtime;
+use crate::assoc::{Assoc, Values};
+use crate::semiring::Semiring;
+use crate::sorted::sorted_intersect;
+use crate::sparse::{CooMatrix, CsrMatrix, DenseBlock};
+use anyhow::Result;
+
+/// Instrumentation from one accelerated matmul.
+#[derive(Debug, Clone, Default)]
+pub struct AccelStats {
+    /// Tile size used.
+    pub tile: usize,
+    /// PJRT kernel invocations.
+    pub kernel_calls: usize,
+    /// Tile steps skipped because an operand tile was all-zero.
+    pub skipped_tiles: usize,
+}
+
+/// Density heuristic: the dense path wins when operands are dense
+/// enough that `O(S³)` regular dense work beats sparse SpGEMM's
+/// irregular access. The crossover (measured by the `fig6b_accel`
+/// bench) sits at a few percent density.
+pub fn should_accelerate(a: &Assoc, b: &Assoc, threshold: f64) -> bool {
+    DenseBlock::density(a.adj()) >= threshold && DenseBlock::density(b.adj()) >= threshold
+}
+
+/// `A ⊗.⊕ B` on the PJRT tile kernels. Semantically identical to
+/// [`Assoc::matmul_with`] (string operands are `logical()`-ed first,
+/// result condensed); returns the result plus execution stats.
+///
+/// Padding tiles with the semiring zero is inert: zero annihilates ⊗
+/// and is the identity of ⊕, so padded lanes never contribute.
+pub fn accel_matmul(
+    rt: &Runtime,
+    a: &Assoc,
+    b: &Assoc,
+    s: &dyn Semiring,
+) -> Result<(Assoc, AccelStats)> {
+    let art = rt
+        .best_matmul(s.name(), 256)
+        .ok_or_else(|| anyhow::anyhow!("no matmul artifact for semiring {}", s.name()))?;
+    let tile = art.size;
+    let name = art.name.clone();
+    let zero = s.zero();
+    let zero32 = zero as f32;
+
+    let a_log;
+    let a = if a.is_string() {
+        a_log = a.logical();
+        &a_log
+    } else {
+        a
+    };
+    let b_log;
+    let b = if b.is_string() {
+        b_log = b.logical();
+        &b_log
+    } else {
+        b
+    };
+
+    // Contract over A.col ∩ B.row (paper §II.C.3), as the sparse path.
+    let kx = sorted_intersect(a.col_keys(), b.row_keys());
+    let mut stats = AccelStats { tile, ..Default::default() };
+    if kx.keys.is_empty() {
+        return Ok((Assoc::empty(), stats));
+    }
+    let (m, _) = a.shape();
+    let n = b.shape().1;
+    let kk = kx.keys.len();
+    let all_rows: Vec<usize> = (0..m).collect();
+    let all_cols: Vec<usize> = (0..n).collect();
+    let ga = a.adj().gather(&all_rows, &kx.map_left); // m × kk
+    let gb = b.adj().gather(&kx.map_right, &all_cols); // kk × n
+
+    let tiles = |extent: usize| extent.div_ceil(tile);
+    let (mt, kt, nt) = (tiles(m), tiles(kk), tiles(n));
+
+    // Pre-extract operand tiles as CSR blocks (so all-zero steps are
+    // skippable without scattering).
+    let block_rows = |lo: usize, extent: usize| -> Vec<usize> {
+        (lo..(lo + tile).min(extent)).collect()
+    };
+    let mut a_tiles: Vec<Vec<CsrMatrix>> = Vec::with_capacity(mt);
+    for bi in 0..mt {
+        let rows = block_rows(bi * tile, m);
+        let mut strip = Vec::with_capacity(kt);
+        for bk in 0..kt {
+            let cols = block_rows(bk * tile, kk);
+            strip.push(ga.gather(&rows, &cols));
+        }
+        a_tiles.push(strip);
+    }
+    let mut b_tiles: Vec<Vec<CsrMatrix>> = Vec::with_capacity(kt);
+    for bk in 0..kt {
+        let rows = block_rows(bk * tile, kk);
+        let mut strip = Vec::with_capacity(nt);
+        for bj in 0..nt {
+            let cols = block_rows(bj * tile, n);
+            strip.push(gb.gather(&rows, &cols));
+        }
+        b_tiles.push(strip);
+    }
+
+    // Contract tile-by-tile; accumulate result triples globally.
+    let mut rows_out: Vec<usize> = Vec::new();
+    let mut cols_out: Vec<usize> = Vec::new();
+    let mut vals_out: Vec<f64> = Vec::new();
+    for bi in 0..mt {
+        for bj in 0..nt {
+            let mut acc: Option<Vec<f32>> = None;
+            for bk in 0..kt {
+                let at = &a_tiles[bi][bk];
+                let bt = &b_tiles[bk][bj];
+                if at.nnz() == 0 || bt.nnz() == 0 {
+                    stats.skipped_tiles += 1;
+                    continue;
+                }
+                let da = DenseBlock::scatter_from(at, tile, tile, zero32);
+                let db = DenseBlock::scatter_from(bt, tile, tile, zero32);
+                let partial = rt.run_matmul(&name, da.data(), db.data())?;
+                stats.kernel_calls += 1;
+                match &mut acc {
+                    None => acc = Some(partial),
+                    Some(acc) => {
+                        for (x, p) in acc.iter_mut().zip(&partial) {
+                            *x = s.add(*x as f64, *p as f64) as f32;
+                        }
+                    }
+                }
+            }
+            if let Some(acc) = acc {
+                // Gather nonzeros of the valid region into global triples.
+                let bh = (m - bi * tile).min(tile);
+                let bw = (n - bj * tile).min(tile);
+                for r in 0..bh {
+                    for c in 0..bw {
+                        let v = acc[r * tile + c] as f64;
+                        if v != zero {
+                            rows_out.push(bi * tile + r);
+                            cols_out.push(bj * tile + c);
+                            vals_out.push(v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let adj = CooMatrix::from_triples_aggregate(m, n, &rows_out, &cols_out, &vals_out, zero, |x, _| x)
+        .expect("tile triples are unique and in bounds")
+        .to_csr();
+    let out = Assoc {
+        row: a.row_keys().to_vec(),
+        col: b.col_keys().to_vec(),
+        val: Values::Numeric,
+        adj,
+    }
+    .condensed();
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::semiring::{MinPlus, PlusTimes};
+    use crate::util::SplitMix64;
+    use std::path::Path;
+
+    fn runtime() -> Option<Runtime> {
+        if !Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping accel test: artifacts/ missing (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load("artifacts").expect("load runtime"))
+    }
+
+    fn random_assoc(seed: u64, keys: u64, triples: usize) -> Assoc {
+        let mut r = SplitMix64::new(seed);
+        let rows: Vec<String> = (0..triples).map(|_| format!("k{:04}", r.below(keys))).collect();
+        let cols: Vec<String> = (0..triples).map(|_| format!("k{:04}", r.below(keys))).collect();
+        let vals: Vec<f64> = (0..triples).map(|_| r.range_i64(1, 9) as f64).collect();
+        Assoc::from_triples(&rows, &cols, crate::assoc::ValsInput::Num(vals))
+    }
+
+    #[test]
+    fn accel_matches_sparse_plus_times() {
+        let Some(rt) = runtime() else { return };
+        // ~200 keys → spans two 128-tiles in every dimension.
+        let a = random_assoc(1, 200, 3000);
+        let b = random_assoc(2, 200, 3000);
+        let want = a.matmul_with(&b, &PlusTimes);
+        let (got, stats) = accel_matmul(&rt, &a, &b, &PlusTimes).unwrap();
+        assert_eq!(got, want);
+        assert!(stats.kernel_calls > 0);
+        assert_eq!(stats.tile, 256); // largest plus-times artifact
+    }
+
+    #[test]
+    fn accel_matches_sparse_min_plus() {
+        let Some(rt) = runtime() else { return };
+        let a = random_assoc(3, 100, 800);
+        let b = random_assoc(4, 100, 800);
+        let want = a.matmul_with(&b, &MinPlus);
+        let (got, stats) = accel_matmul(&rt, &a, &b, &MinPlus).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.tile, 128);
+    }
+
+    #[test]
+    fn accel_disjoint_contraction_is_empty() {
+        let Some(rt) = runtime() else { return };
+        let a = Assoc::from_triples(&["r"], &["x"], 1.0);
+        let b = Assoc::from_triples(&["y"], &["c"], 1.0);
+        let (got, stats) = accel_matmul(&rt, &a, &b, &PlusTimes).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(stats.kernel_calls, 0);
+    }
+
+    #[test]
+    fn accel_string_operands_logicalized() {
+        let Some(rt) = runtime() else { return };
+        let a = crate::assoc::tests::music();
+        let want = a.sqin();
+        let at = a.transpose();
+        let (got, _) = accel_matmul(&rt, &at, &a, &PlusTimes).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn density_dispatch() {
+        let dense = Assoc::from_triples(&["a", "a", "b", "b"], &["x", "y", "x", "y"], 1.0);
+        let sparse = random_assoc(9, 1000, 50);
+        assert!(should_accelerate(&dense, &dense, 0.5));
+        assert!(!should_accelerate(&sparse, &sparse, 0.5));
+    }
+}

@@ -1,0 +1,100 @@
+//! Executable semiring axioms (paper §I.A's axiom list), checked over
+//! sample points. Floating-point caveat: `+`/`×` over arbitrary floats
+//! are not exactly associative/distributive, so law checks use small
+//! integer-valued samples where IEEE arithmetic is exact; max/min-based
+//! algebras are exact everywhere.
+
+use super::Semiring;
+
+/// Assert the semiring axioms on a grid of sample values.
+///
+/// Panics with a descriptive message on the first violated law.
+/// `samples` should be exactly representable values for which `add`/`mul`
+/// are exact (small integers are safe for every built-in algebra).
+pub fn check_semiring_laws(s: &dyn Semiring, samples: &[f64]) {
+    let zero = s.zero();
+    let one = s.one();
+    let mut pts: Vec<f64> = samples.to_vec();
+    pts.push(zero);
+    pts.push(one);
+
+    for &u in &pts {
+        // Identities.
+        assert_eq!(s.add(u, zero), u, "{}: u ⊕ 0 = u failed for u={u}", s.name());
+        assert_eq!(s.add(zero, u), u, "{}: 0 ⊕ u = u failed for u={u}", s.name());
+        assert_eq!(s.mul(u, one), u, "{}: u ⊗ 1 = u failed for u={u}", s.name());
+        assert_eq!(s.mul(one, u), u, "{}: 1 ⊗ u = u failed for u={u}", s.name());
+        // Annihilation.
+        assert_eq!(s.mul(u, zero), zero, "{}: u ⊗ 0 = 0 failed for u={u}", s.name());
+        assert_eq!(s.mul(zero, u), zero, "{}: 0 ⊗ u = 0 failed for u={u}", s.name());
+    }
+    for &u in &pts {
+        for &v in &pts {
+            // Commutativity of ⊕.
+            assert_eq!(
+                s.add(u, v),
+                s.add(v, u),
+                "{}: ⊕ not commutative at ({u}, {v})",
+                s.name()
+            );
+            for &w in &pts {
+                // Associativity.
+                assert_eq!(
+                    s.add(u, s.add(v, w)),
+                    s.add(s.add(u, v), w),
+                    "{}: ⊕ not associative at ({u}, {v}, {w})",
+                    s.name()
+                );
+                assert_eq!(
+                    s.mul(u, s.mul(v, w)),
+                    s.mul(s.mul(u, v), w),
+                    "{}: ⊗ not associative at ({u}, {v}, {w})",
+                    s.name()
+                );
+                // Distributivity (both sides).
+                assert_eq!(
+                    s.mul(u, s.add(v, w)),
+                    s.add(s.mul(u, v), s.mul(u, w)),
+                    "{}: left distributivity failed at ({u}, {v}, {w})",
+                    s.name()
+                );
+                assert_eq!(
+                    s.mul(s.add(v, w), u),
+                    s.add(s.mul(v, u), s.mul(w, u)),
+                    "{}: right distributivity failed at ({u}, {v}, {w})",
+                    s.name()
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::semiring::{builtin, FnSemiring};
+
+    const SAMPLES: [f64; 7] = [-3.0, -1.0, 0.0, 1.0, 2.0, 5.0, 16.0];
+
+    #[test]
+    fn all_builtin_semirings_satisfy_laws() {
+        for s in builtin() {
+            check_semiring_laws(s.as_ref(), &SAMPLES);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "⊗ 0 = 0")]
+    fn broken_semiring_is_caught() {
+        // "max-times" over all reals is NOT a semiring: negative values
+        // break annihilation (−3 × −∞ = +∞ ≠ −∞) and distributivity.
+        fn fmax(a: f64, b: f64) -> f64 {
+            a.max(b)
+        }
+        fn fmul(a: f64, b: f64) -> f64 {
+            a * b
+        }
+        let bad = FnSemiring::new("max_times", f64::NEG_INFINITY, 1.0, fmax, fmul);
+        check_semiring_laws(&bad, &SAMPLES);
+    }
+}

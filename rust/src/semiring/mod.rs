@@ -1,0 +1,263 @@
+//! Semirings — the value algebras of associative arrays (paper §I.A).
+//!
+//! A semiring `(V, ⊕, ⊗, 0, 1)` supplies the "addition" and
+//! "multiplication" that associative-array element-wise ops and `@`
+//! contract with. D4M's two implicit algebras are the **plus-times**
+//! algebra over numbers and the **(concat, min) string algebra**; this
+//! module additionally provides the tropical algebras (max-plus,
+//! min-plus) and max-min (fuzzy) algebra the paper lists, plus a
+//! user-defined escape hatch ([`FnSemiring`]) anticipating the paper's
+//! future-work item of user-selected semirings.
+//!
+//! All numeric semirings operate on `f64` (D4M's numeric value type).
+//! The string algebra lives with the string value pool in
+//! [`crate::assoc`], because its "values" are interned indices.
+
+use std::fmt::Debug;
+
+mod laws;
+pub use laws::check_semiring_laws;
+
+/// A semiring over `f64` values.
+///
+/// Implementations must satisfy the semiring axioms (associativity of
+/// both ops, commutativity of `add`, identities, annihilation,
+/// distributivity); [`check_semiring_laws`] verifies them on sample
+/// points and is exercised by the test suite for every instance.
+pub trait Semiring: Send + Sync + 'static {
+    /// Additive identity ("zero"; the unstored value).
+    fn zero(&self) -> f64;
+    /// Multiplicative identity.
+    fn one(&self) -> f64;
+    /// `a ⊕ b`.
+    fn add(&self, a: f64, b: f64) -> f64;
+    /// `a ⊗ b`.
+    fn mul(&self, a: f64, b: f64) -> f64;
+    /// Whether `a` is (exactly) the additive identity.
+    fn is_zero(&self, a: f64) -> bool {
+        a == self.zero()
+    }
+    /// Stable name used by artifact lookup and bench output.
+    fn name(&self) -> &'static str;
+}
+
+/// The standard arithmetic algebra `(ℝ, +, ×, 0, 1)`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlusTimes;
+
+impl Semiring for PlusTimes {
+    fn zero(&self) -> f64 {
+        0.0
+    }
+    fn one(&self) -> f64 {
+        1.0
+    }
+    fn add(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+    fn mul(&self, a: f64, b: f64) -> f64 {
+        a * b
+    }
+    fn name(&self) -> &'static str {
+        "plus_times"
+    }
+}
+
+/// The tropical max-plus algebra `(ℝ ∪ {−∞}, max, +, −∞, 0)`.
+///
+/// `A ⊕.⊗ B` under max-plus computes longest paths / best-score
+/// contractions — a classic GraphBLAS workhorse.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaxPlus;
+
+impl Semiring for MaxPlus {
+    fn zero(&self) -> f64 {
+        f64::NEG_INFINITY
+    }
+    fn one(&self) -> f64 {
+        0.0
+    }
+    fn add(&self, a: f64, b: f64) -> f64 {
+        a.max(b)
+    }
+    fn mul(&self, a: f64, b: f64) -> f64 {
+        // −∞ must annihilate: −∞ + x = −∞ (holds for IEEE unless x = +∞,
+        // which the key spaces never produce).
+        a + b
+    }
+    fn name(&self) -> &'static str {
+        "max_plus"
+    }
+}
+
+/// The tropical min-plus algebra `(ℝ ∪ {+∞}, min, +, +∞, 0)` — shortest
+/// paths.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinPlus;
+
+impl Semiring for MinPlus {
+    fn zero(&self) -> f64 {
+        f64::INFINITY
+    }
+    fn one(&self) -> f64 {
+        0.0
+    }
+    fn add(&self, a: f64, b: f64) -> f64 {
+        a.min(b)
+    }
+    fn mul(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+    fn name(&self) -> &'static str {
+        "min_plus"
+    }
+}
+
+/// The max-min (fuzzy/bottleneck) algebra
+/// `(ℝ ∪ {±∞}, max, min, −∞, +∞)` — widest-path / bottleneck capacity.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaxMin;
+
+impl Semiring for MaxMin {
+    fn zero(&self) -> f64 {
+        f64::NEG_INFINITY
+    }
+    fn one(&self) -> f64 {
+        f64::INFINITY
+    }
+    fn add(&self, a: f64, b: f64) -> f64 {
+        a.max(b)
+    }
+    fn mul(&self, a: f64, b: f64) -> f64 {
+        a.min(b)
+    }
+    fn name(&self) -> &'static str {
+        "max_min"
+    }
+}
+
+/// A user-defined semiring from closures (paper §IV future work:
+/// "user-selected or user-defined semiring operations").
+///
+/// The caller is responsible for the closures actually satisfying the
+/// semiring axioms; [`check_semiring_laws`] can be used to sanity-check.
+pub struct FnSemiring {
+    zero: f64,
+    one: f64,
+    add: fn(f64, f64) -> f64,
+    mul: fn(f64, f64) -> f64,
+    name: &'static str,
+}
+
+impl FnSemiring {
+    /// Build a semiring from function pointers and identity constants.
+    pub fn new(
+        name: &'static str,
+        zero: f64,
+        one: f64,
+        add: fn(f64, f64) -> f64,
+        mul: fn(f64, f64) -> f64,
+    ) -> Self {
+        FnSemiring { zero, one, add, mul, name }
+    }
+}
+
+impl Semiring for FnSemiring {
+    fn zero(&self) -> f64 {
+        self.zero
+    }
+    fn one(&self) -> f64 {
+        self.one
+    }
+    fn add(&self, a: f64, b: f64) -> f64 {
+        (self.add)(a, b)
+    }
+    fn mul(&self, a: f64, b: f64) -> f64 {
+        (self.mul)(a, b)
+    }
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Look up a built-in semiring by name (CLI / artifact manifest).
+pub fn by_name(name: &str) -> Option<Box<dyn Semiring>> {
+    match name {
+        "plus_times" => Some(Box::new(PlusTimes)),
+        "max_plus" => Some(Box::new(MaxPlus)),
+        "min_plus" => Some(Box::new(MinPlus)),
+        "max_min" => Some(Box::new(MaxMin)),
+        _ => None,
+    }
+}
+
+/// All built-in numeric semirings (for law tests and bench sweeps).
+pub fn builtin() -> Vec<Box<dyn Semiring>> {
+    vec![
+        Box::new(PlusTimes),
+        Box::new(MaxPlus),
+        Box::new(MinPlus),
+        Box::new(MaxMin),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identities() {
+        assert_eq!(PlusTimes.add(3.0, PlusTimes.zero()), 3.0);
+        assert_eq!(PlusTimes.mul(3.0, PlusTimes.one()), 3.0);
+        assert_eq!(MaxPlus.add(3.0, MaxPlus.zero()), 3.0);
+        assert_eq!(MaxPlus.mul(3.0, MaxPlus.one()), 3.0);
+        assert_eq!(MinPlus.add(3.0, MinPlus.zero()), 3.0);
+        assert_eq!(MinPlus.mul(3.0, MinPlus.one()), 3.0);
+        assert_eq!(MaxMin.add(3.0, MaxMin.zero()), 3.0);
+        assert_eq!(MaxMin.mul(3.0, MaxMin.one()), 3.0);
+    }
+
+    #[test]
+    fn annihilation() {
+        for s in builtin() {
+            let z = s.zero();
+            for v in [-2.0, 0.0, 1.0, 5.5] {
+                assert_eq!(s.mul(v, z), z, "{} right-annihilate", s.name());
+                assert_eq!(s.mul(z, v), z, "{} left-annihilate", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for s in builtin() {
+            let found = by_name(s.name()).expect("by_name");
+            assert_eq!(found.name(), s.name());
+            assert_eq!(found.zero(), s.zero());
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn fn_semiring_works() {
+        // xor-and over {0,1} as floats (boolean ring fragment).
+        fn bxor(a: f64, b: f64) -> f64 {
+            if (a != 0.0) ^ (b != 0.0) {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        fn band(a: f64, b: f64) -> f64 {
+            if a != 0.0 && b != 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        let s = FnSemiring::new("xor_and", 0.0, 1.0, bxor, band);
+        assert_eq!(s.add(1.0, 1.0), 0.0);
+        assert_eq!(s.mul(1.0, 1.0), 1.0);
+        assert_eq!(s.name(), "xor_and");
+    }
+}

@@ -1,0 +1,210 @@
+//! Sorted union / sorted intersection with concurrently built index maps
+//! — the alternating-merge procedures of paper §II.C.1–3.
+
+use std::cmp::Ordering;
+
+/// Result of [`sorted_union`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Union<T> {
+    /// `K = I ∪ J`, sorted and repetition-free.
+    pub keys: Vec<T>,
+    /// `map_left[m]` = position of `I[m]` in `keys`.
+    pub map_left: Vec<usize>,
+    /// `map_right[n]` = position of `J[n]` in `keys`.
+    pub map_right: Vec<usize>,
+}
+
+/// Result of [`sorted_intersect`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Intersection<T> {
+    /// `K = I ∩ J`, sorted and repetition-free.
+    pub keys: Vec<T>,
+    /// `map_left[k]` = position of `keys[k]` in `I`.
+    pub map_left: Vec<usize>,
+    /// `map_right[k]` = position of `keys[k]` in `J`.
+    pub map_right: Vec<usize>,
+}
+
+/// Sorted union of two repetition-free sorted slices, with index maps
+/// describing how each input sits inside the union (paper §II.C.1).
+///
+/// Runs in `O(|left| + |right|)`; the three cases of the loop body are
+/// exactly the paper's Case 1–3 alternating iteration.
+pub fn sorted_union<T: Ord + Clone>(left: &[T], right: &[T]) -> Union<T> {
+    debug_assert!(super::is_sorted_unique(left));
+    debug_assert!(super::is_sorted_unique(right));
+    let mut keys = Vec::with_capacity(left.len() + right.len());
+    let mut map_left = Vec::with_capacity(left.len());
+    let mut map_right = Vec::with_capacity(right.len());
+    let (mut m, mut n) = (0usize, 0usize);
+    while m < left.len() && n < right.len() {
+        match left[m].cmp(&right[n]) {
+            Ordering::Less => {
+                map_left.push(keys.len());
+                keys.push(left[m].clone());
+                m += 1;
+            }
+            Ordering::Equal => {
+                map_left.push(keys.len());
+                map_right.push(keys.len());
+                keys.push(left[m].clone());
+                m += 1;
+                n += 1;
+            }
+            Ordering::Greater => {
+                map_right.push(keys.len());
+                keys.push(right[n].clone());
+                n += 1;
+            }
+        }
+    }
+    // One (or both) inputs exhausted: append the tail.
+    while m < left.len() {
+        map_left.push(keys.len());
+        keys.push(left[m].clone());
+        m += 1;
+    }
+    while n < right.len() {
+        map_right.push(keys.len());
+        keys.push(right[n].clone());
+        n += 1;
+    }
+    Union { keys, map_left, map_right }
+}
+
+/// Sorted intersection of two repetition-free sorted slices, with index
+/// maps describing where each common key sits in the inputs (§II.C.2).
+pub fn sorted_intersect<T: Ord + Clone>(left: &[T], right: &[T]) -> Intersection<T> {
+    debug_assert!(super::is_sorted_unique(left));
+    debug_assert!(super::is_sorted_unique(right));
+    let cap = left.len().min(right.len());
+    let mut keys = Vec::with_capacity(cap);
+    let mut map_left = Vec::with_capacity(cap);
+    let mut map_right = Vec::with_capacity(cap);
+    let (mut m, mut n) = (0usize, 0usize);
+    while m < left.len() && n < right.len() {
+        match left[m].cmp(&right[n]) {
+            Ordering::Less => m += 1,
+            Ordering::Greater => n += 1,
+            Ordering::Equal => {
+                map_left.push(m);
+                map_right.push(n);
+                keys.push(left[m].clone());
+                m += 1;
+                n += 1;
+            }
+        }
+    }
+    Intersection { keys, map_left, map_right }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sorted::is_sorted_unique;
+    use crate::util::prop::check;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn union_disjoint() {
+        let u = sorted_union(&[1, 3, 5], &[2, 4, 6]);
+        assert_eq!(u.keys, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(u.map_left, vec![0, 2, 4]);
+        assert_eq!(u.map_right, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn union_overlapping() {
+        let u = sorted_union(&["a", "b", "d"], &["b", "c", "d"]);
+        assert_eq!(u.keys, vec!["a", "b", "c", "d"]);
+        assert_eq!(u.map_left, vec![0, 1, 3]);
+        assert_eq!(u.map_right, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn union_one_empty() {
+        let u = sorted_union::<i32>(&[], &[1, 2]);
+        assert_eq!(u.keys, vec![1, 2]);
+        assert!(u.map_left.is_empty());
+        assert_eq!(u.map_right, vec![0, 1]);
+        let u = sorted_union::<i32>(&[1, 2], &[]);
+        assert_eq!(u.keys, vec![1, 2]);
+        assert_eq!(u.map_left, vec![0, 1]);
+    }
+
+    #[test]
+    fn union_identical() {
+        let u = sorted_union(&[1, 2, 3], &[1, 2, 3]);
+        assert_eq!(u.keys, vec![1, 2, 3]);
+        assert_eq!(u.map_left, u.map_right);
+    }
+
+    #[test]
+    fn intersect_basic() {
+        let i = sorted_intersect(&["a", "b", "c", "e"], &["b", "d", "e"]);
+        assert_eq!(i.keys, vec!["b", "e"]);
+        assert_eq!(i.map_left, vec![1, 3]);
+        assert_eq!(i.map_right, vec![0, 2]);
+    }
+
+    #[test]
+    fn intersect_disjoint_and_empty() {
+        let i = sorted_intersect(&[1, 3], &[2, 4]);
+        assert!(i.keys.is_empty());
+        let i = sorted_intersect::<i32>(&[], &[1]);
+        assert!(i.keys.is_empty());
+    }
+
+    #[test]
+    fn prop_union_matches_btreeset() {
+        check("sorted_union == BTreeSet union", 300, |g| {
+            let a = g.sorted_unique_keys(40, 30);
+            let b = g.sorted_unique_keys(40, 30);
+            let u = sorted_union(&a, &b);
+            let expect: Vec<String> = a
+                .iter()
+                .chain(b.iter())
+                .cloned()
+                .collect::<BTreeSet<_>>()
+                .into_iter()
+                .collect();
+            assert_eq!(u.keys, expect);
+            assert!(is_sorted_unique(&u.keys));
+            // Index maps are correct embeddings.
+            for (m, k) in a.iter().enumerate() {
+                assert_eq!(&u.keys[u.map_left[m]], k);
+            }
+            for (n, k) in b.iter().enumerate() {
+                assert_eq!(&u.keys[u.map_right[n]], k);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_intersect_matches_btreeset() {
+        check("sorted_intersect == BTreeSet intersection", 300, |g| {
+            let a = g.sorted_unique_keys(40, 30);
+            let b = g.sorted_unique_keys(40, 30);
+            let i = sorted_intersect(&a, &b);
+            let sa: BTreeSet<_> = a.iter().cloned().collect();
+            let sb: BTreeSet<_> = b.iter().cloned().collect();
+            let expect: Vec<String> = sa.intersection(&sb).cloned().collect();
+            assert_eq!(i.keys, expect);
+            for (k, key) in i.keys.iter().enumerate() {
+                assert_eq!(&a[i.map_left[k]], key);
+                assert_eq!(&b[i.map_right[k]], key);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_union_intersect_inclusion_exclusion() {
+        check("|I∪J| + |I∩J| == |I| + |J|", 200, |g| {
+            let a = g.sorted_unique_keys(50, 25);
+            let b = g.sorted_unique_keys(50, 25);
+            let u = sorted_union(&a, &b);
+            let i = sorted_intersect(&a, &b);
+            assert_eq!(u.keys.len() + i.keys.len(), a.len() + b.len());
+        });
+    }
+}

@@ -1,0 +1,123 @@
+//! Sorted-set algebra: the index-map machinery of paper §II.C.
+//!
+//! D4M's associative-array operations reduce to sparse-matrix operations
+//! *after* aligning the operands' key spaces. That alignment is done by
+//! two primitives over repetition-free sorted sequences:
+//!
+//! * [`sorted_union`] — `K = I ∪ J` plus index maps `I → K` and `J → K`
+//!   (used by element-wise addition, which lives on `(I₁∪I₂) × (J₁∪J₂)`).
+//! * [`sorted_intersect`] — `K = I ∩ J` plus index maps `K → I` and
+//!   `K → J` (used by element-wise multiplication and by `@`, which
+//!   contracts over `A.col ∩ B.row`).
+//!
+//! Both are the single alternating merge pass the paper describes, O(|I| +
+//! |J|), constructing the index maps concurrently with the merge.
+//!
+//! The module also provides [`sort_dedup_with_index`], the constructor's
+//! workhorse: sort a key list, deduplicate it, and return for each input
+//! position the index of its key in the deduplicated output.
+
+mod keysort;
+mod merge;
+mod search;
+
+pub use keysort::{sort_dedup_keys, sort_dedup_strs};
+pub use merge::{sorted_intersect, sorted_union, Intersection, Union};
+pub use search::{lower_bound, range_indices, upper_bound};
+
+/// Sort + deduplicate `keys`, returning `(unique_sorted, index_map)` where
+/// `index_map[p]` is the position of `keys[p]` in `unique_sorted`.
+///
+/// This is the shared first step of the `Assoc` constructor for the row
+/// keys, column keys, and (string-valued) value pool. Cloning is avoided
+/// by sorting an index permutation and moving keys out once.
+pub fn sort_dedup_with_index<T: Ord + Clone>(keys: &[T]) -> (Vec<T>, Vec<usize>) {
+    let n = keys.len();
+    if n == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    // Sort a permutation of positions by key, then walk it assigning
+    // dense ranks. `sort_unstable_by` on indices avoids moving the keys.
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    perm.sort_unstable_by(|&a, &b| keys[a as usize].cmp(&keys[b as usize]));
+
+    let mut unique: Vec<T> = Vec::new();
+    let mut index_map = vec![0usize; n];
+    for &p in &perm {
+        let k = &keys[p as usize];
+        if unique.last() != Some(k) {
+            unique.push(k.clone());
+        }
+        index_map[p as usize] = unique.len() - 1;
+    }
+    (unique, index_map)
+}
+
+/// Check that a slice is strictly increasing (sorted + repetition-free).
+pub fn is_sorted_unique<T: Ord>(xs: &[T]) -> bool {
+    xs.windows(2).all(|w| w[0] < w[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn sort_dedup_basic() {
+        let keys = vec!["b", "a", "b", "c", "a"];
+        let (unique, map) = sort_dedup_with_index(&keys);
+        assert_eq!(unique, vec!["a", "b", "c"]);
+        assert_eq!(map, vec![1, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn sort_dedup_empty() {
+        let (unique, map) = sort_dedup_with_index::<String>(&[]);
+        assert!(unique.is_empty());
+        assert!(map.is_empty());
+    }
+
+    #[test]
+    fn sort_dedup_single() {
+        let (unique, map) = sort_dedup_with_index(&[7i64]);
+        assert_eq!(unique, vec![7]);
+        assert_eq!(map, vec![0]);
+    }
+
+    #[test]
+    fn sort_dedup_all_equal() {
+        let keys = vec!["x"; 10];
+        let (unique, map) = sort_dedup_with_index(&keys);
+        assert_eq!(unique, vec!["x"]);
+        assert!(map.iter().all(|&i| i == 0));
+    }
+
+    #[test]
+    fn is_sorted_unique_cases() {
+        assert!(is_sorted_unique::<i32>(&[]));
+        assert!(is_sorted_unique(&[1]));
+        assert!(is_sorted_unique(&[1, 2, 3]));
+        assert!(!is_sorted_unique(&[1, 1, 2]));
+        assert!(!is_sorted_unique(&[2, 1]));
+    }
+
+    #[test]
+    fn prop_sort_dedup_roundtrip() {
+        check("sort_dedup: unique[map[p]] == keys[p]", 300, |g| {
+            let keys = g.vec_of(64, |r| r.below(20).to_string());
+            let (unique, map) = sort_dedup_with_index(&keys);
+            assert!(is_sorted_unique(&unique));
+            assert_eq!(map.len(), keys.len());
+            for (p, k) in keys.iter().enumerate() {
+                assert_eq!(&unique[map[p]], k);
+            }
+            // Every unique element is hit by the map.
+            let mut hit = vec![false; unique.len()];
+            for &i in &map {
+                hit[i] = true;
+            }
+            assert!(hit.iter().all(|&h| h));
+        });
+    }
+}

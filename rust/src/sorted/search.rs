@@ -1,0 +1,81 @@
+//! Binary-search helpers over sorted unique key vectors.
+//!
+//! D4M's "string slices" (`A["a,:,b,"]`, paper §II.B) select all keys `k`
+//! with `a ≤ k ≤ b` — *inclusive on the right*, unlike Python slices.
+//! [`range_indices`] maps such a closed key range onto the half-open index
+//! range of a sorted key vector.
+
+use std::cmp::Ordering;
+
+/// Index of the first element `>= probe` (`xs` sorted ascending).
+pub fn lower_bound<T: Ord>(xs: &[T], probe: &T) -> usize {
+    xs.partition_point(|x| x.cmp(probe) == Ordering::Less)
+}
+
+/// Index of the first element `> probe` (`xs` sorted ascending).
+pub fn upper_bound<T: Ord>(xs: &[T], probe: &T) -> usize {
+    xs.partition_point(|x| x.cmp(probe) != Ordering::Greater)
+}
+
+/// Half-open index range `[start, end)` of keys in the *closed* key range
+/// `[lo, hi]` — D4M string-slice semantics (inclusive both ends).
+pub fn range_indices<T: Ord>(xs: &[T], lo: &T, hi: &T) -> (usize, usize) {
+    (lower_bound(xs, lo), upper_bound(xs, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn bounds_basic() {
+        let xs = vec![10, 20, 20, 30]; // upper/lower work on sorted (dupes ok)
+        assert_eq!(lower_bound(&xs, &20), 1);
+        assert_eq!(upper_bound(&xs, &20), 3);
+        assert_eq!(lower_bound(&xs, &5), 0);
+        assert_eq!(upper_bound(&xs, &35), 4);
+    }
+
+    #[test]
+    fn range_is_right_inclusive() {
+        let xs = vec!["a", "b", "c", "d"];
+        let (s, e) = range_indices(&xs, &"b", &"c");
+        assert_eq!(&xs[s..e], &["b", "c"]); // "c" included — D4M semantics
+    }
+
+    #[test]
+    fn range_with_absent_endpoints() {
+        let xs = vec!["b", "d", "f"];
+        let (s, e) = range_indices(&xs, &"a", &"e");
+        assert_eq!(&xs[s..e], &["b", "d"]);
+        let (s, e) = range_indices(&xs, &"g", &"z");
+        assert_eq!(s, e); // empty
+    }
+
+    #[test]
+    fn range_empty_input() {
+        let xs: Vec<i32> = vec![];
+        assert_eq!(range_indices(&xs, &1, &2), (0, 0));
+    }
+
+    #[test]
+    fn prop_range_matches_filter() {
+        check("range_indices == linear filter", 300, |g| {
+            let xs = g.sorted_unique_keys(50, 40);
+            let lo = g.key_string(40);
+            let hi = g.key_string(40);
+            let (s, e) = range_indices(&xs, &lo, &hi);
+            let expect: Vec<&String> =
+                xs.iter().filter(|k| **k >= lo && **k <= hi).collect();
+            let got: Vec<&String> = xs[s.min(xs.len())..e.min(xs.len()).max(s.min(xs.len()))]
+                .iter()
+                .collect();
+            if lo <= hi {
+                assert_eq!(got, expect);
+            } else {
+                assert!(expect.is_empty());
+            }
+        });
+    }
+}

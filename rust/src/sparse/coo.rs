@@ -1,0 +1,384 @@
+//! COOrdinate-format sparse matrix (row, col, value triples).
+//!
+//! This is D4M.py's `A.adj` storage format (`scipy.sparse.coo_matrix`).
+//! Construction from unsorted triples with collision aggregation is the
+//! hot path of the `Assoc` constructor (paper Figures 3–4), so
+//! [`CooMatrix::from_triples_aggregate`] is written as one sort + one
+//! linear aggregation pass over index pairs packed into `u64`s.
+
+use super::{CsrMatrix, SparseError};
+
+/// Sparse matrix in COO format. Invariants after construction:
+/// entries are sorted row-major (row, then col), unique, and no stored
+/// value equals the `zero` it was constructed with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooMatrix {
+    nrows: usize,
+    ncols: usize,
+    rows: Vec<u32>,
+    cols: Vec<u32>,
+    data: Vec<f64>,
+}
+
+impl CooMatrix {
+    /// Maximum extent along either axis (indices are stored as `u32`).
+    pub const MAX_EXTENT: usize = u32::MAX as usize;
+
+    /// Empty matrix of the given shape.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        assert!(nrows <= Self::MAX_EXTENT && ncols <= Self::MAX_EXTENT);
+        CooMatrix { nrows, ncols, rows: Vec::new(), cols: Vec::new(), data: Vec::new() }
+    }
+
+    /// Build from triples, aggregating duplicate `(row, col)` pairs with
+    /// `agg` and dropping entries equal to `zero`.
+    ///
+    /// `agg` must be associative and commutative (the paper's constructor
+    /// contract) — the order in which colliding values are combined is
+    /// unspecified. Cost: one `u64` sort + one linear pass.
+    pub fn from_triples_aggregate(
+        nrows: usize,
+        ncols: usize,
+        rows: &[usize],
+        cols: &[usize],
+        vals: &[f64],
+        zero: f64,
+        mut agg: impl FnMut(f64, f64) -> f64,
+    ) -> Result<Self, SparseError> {
+        if rows.len() != cols.len() || cols.len() != vals.len() {
+            return Err(SparseError::LengthMismatch {
+                rows: rows.len(),
+                cols: cols.len(),
+                vals: vals.len(),
+            });
+        }
+        assert!(nrows <= Self::MAX_EXTENT && ncols <= Self::MAX_EXTENT);
+        // Pack (row, col) into one u64 key; sort a permutation of entry
+        // ids by key; aggregate runs of equal keys.
+        let n = rows.len();
+        let mut keyed: Vec<(u64, u32)> = Vec::with_capacity(n);
+        for i in 0..n {
+            let (r, c) = (rows[i], cols[i]);
+            if r >= nrows {
+                return Err(SparseError::IndexOutOfBounds { axis: "row", index: r, extent: nrows });
+            }
+            if c >= ncols {
+                return Err(SparseError::IndexOutOfBounds { axis: "col", index: c, extent: ncols });
+            }
+            keyed.push((((r as u64) << 32) | c as u64, i as u32));
+        }
+        // Sort by (key, input-position): deterministic, and runs of equal
+        // keys preserve input order so First/Last aggregators are
+        // meaningful.
+        keyed.sort_unstable();
+
+        let mut out_rows = Vec::with_capacity(n);
+        let mut out_cols = Vec::with_capacity(n);
+        let mut out_data: Vec<f64> = Vec::with_capacity(n);
+        let mut i = 0;
+        while i < n {
+            let key = keyed[i].0;
+            let mut acc = vals[keyed[i].1 as usize];
+            i += 1;
+            while i < n && keyed[i].0 == key {
+                acc = agg(acc, vals[keyed[i].1 as usize]);
+                i += 1;
+            }
+            if acc != zero {
+                out_rows.push((key >> 32) as u32);
+                out_cols.push((key & 0xFFFF_FFFF) as u32);
+                out_data.push(acc);
+            }
+        }
+        Ok(CooMatrix { nrows, ncols, rows: out_rows, cols: out_cols, data: out_data })
+    }
+
+    /// Build from already-sorted, unique, nonzero triples (no checks
+    /// beyond debug assertions). Used by format conversions.
+    pub(crate) fn from_sorted_parts(
+        nrows: usize,
+        ncols: usize,
+        rows: Vec<u32>,
+        cols: Vec<u32>,
+        data: Vec<f64>,
+    ) -> Self {
+        debug_assert_eq!(rows.len(), cols.len());
+        debug_assert_eq!(cols.len(), data.len());
+        debug_assert!(rows
+            .iter()
+            .zip(&cols)
+            .zip(rows.iter().skip(1).zip(cols.iter().skip(1)))
+            .all(|((r0, c0), (r1, c1))| (r0, c0) < (r1, c1)));
+        CooMatrix { nrows, ncols, rows, cols, data }
+    }
+
+    /// Shape `(nrows, ncols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    /// Number of stored (nonzero) entries.
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Stored row indices (sorted row-major with [`Self::col_indices`]).
+    pub fn row_indices(&self) -> &[u32] {
+        &self.rows
+    }
+
+    /// Stored column indices.
+    pub fn col_indices(&self) -> &[u32] {
+        &self.cols
+    }
+
+    /// Stored values.
+    pub fn values(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Iterate stored entries as `(row, col, value)`.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        self.rows
+            .iter()
+            .zip(&self.cols)
+            .zip(&self.data)
+            .map(|((&r, &c), &v)| (r as usize, c as usize, v))
+    }
+
+    /// Value at `(row, col)` or `None` if unstored. O(log nnz).
+    pub fn get(&self, row: usize, col: usize) -> Option<f64> {
+        let key = ((row as u64) << 32) | col as u64;
+        // Binary search over the packed row-major key order.
+        let mut lo = 0usize;
+        let mut hi = self.data.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            let k = ((self.rows[mid] as u64) << 32) | self.cols[mid] as u64;
+            match k.cmp(&key) {
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+                std::cmp::Ordering::Equal => return Some(self.data[mid]),
+            }
+        }
+        None
+    }
+
+    /// Convert to CSR. O(nnz) — entries are already row-major sorted.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut indptr = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            indptr[i + 1] += indptr[i];
+        }
+        CsrMatrix::from_parts(
+            self.nrows,
+            self.ncols,
+            indptr,
+            self.cols.clone(),
+            self.data.clone(),
+        )
+    }
+
+    /// Transpose (swaps shape; re-sorts entries col-major → row-major).
+    pub fn transpose(&self) -> CooMatrix {
+        let mut entries: Vec<(u32, u32, f64)> = self
+            .iter()
+            .map(|(r, c, v)| (c as u32, r as u32, v))
+            .collect();
+        entries.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut rows = Vec::with_capacity(entries.len());
+        let mut cols = Vec::with_capacity(entries.len());
+        let mut data = Vec::with_capacity(entries.len());
+        for (r, c, v) in entries {
+            rows.push(r);
+            cols.push(c);
+            data.push(v);
+        }
+        CooMatrix { nrows: self.ncols, ncols: self.nrows, rows, cols, data }
+    }
+
+    /// Densify into row-major `Vec<f64>` with `fill` in unstored slots
+    /// (testing / small blocks only).
+    pub fn to_dense(&self, fill: f64) -> Vec<f64> {
+        let mut out = vec![fill; self.nrows * self.ncols];
+        for (r, c, v) in self.iter() {
+            out[r * self.ncols + c] = v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn simple() -> CooMatrix {
+        CooMatrix::from_triples_aggregate(
+            3,
+            4,
+            &[0, 2, 1, 0],
+            &[1, 3, 0, 1],
+            &[5.0, 7.0, 2.0, 3.0],
+            0.0,
+            |a, b| a + b,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn aggregates_collisions() {
+        let m = simple();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.get(0, 1), Some(8.0)); // 5 + 3 collided
+        assert_eq!(m.get(1, 0), Some(2.0));
+        assert_eq!(m.get(2, 3), Some(7.0));
+        assert_eq!(m.get(0, 0), None);
+    }
+
+    #[test]
+    fn sorted_row_major() {
+        let m = simple();
+        let entries: Vec<_> = m.iter().collect();
+        assert_eq!(entries, vec![(0, 1, 8.0), (1, 0, 2.0), (2, 3, 7.0)]);
+    }
+
+    #[test]
+    fn drops_zeros_after_aggregation() {
+        let m = CooMatrix::from_triples_aggregate(
+            2,
+            2,
+            &[0, 0],
+            &[0, 0],
+            &[3.0, -3.0],
+            0.0,
+            |a, b| a + b,
+        )
+        .unwrap();
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn drops_explicit_zero_inputs() {
+        let m = CooMatrix::from_triples_aggregate(2, 2, &[0, 1], &[0, 1], &[0.0, 1.0], 0.0, f64::min)
+            .unwrap();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.get(1, 1), Some(1.0));
+    }
+
+    #[test]
+    fn respects_nonstandard_zero() {
+        // min-plus zero is +inf.
+        let m = CooMatrix::from_triples_aggregate(
+            2,
+            2,
+            &[0, 1],
+            &[0, 0],
+            &[f64::INFINITY, 2.0],
+            f64::INFINITY,
+            f64::min,
+        )
+        .unwrap();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.get(1, 0), Some(2.0));
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let err =
+            CooMatrix::from_triples_aggregate(2, 2, &[0], &[0, 1], &[1.0], 0.0, f64::min)
+                .unwrap_err();
+        assert!(matches!(err, SparseError::LengthMismatch { .. }));
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let err = CooMatrix::from_triples_aggregate(2, 2, &[5], &[0], &[1.0], 0.0, f64::min)
+            .unwrap_err();
+        assert!(matches!(err, SparseError::IndexOutOfBounds { axis: "row", .. }));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = simple();
+        let t = m.transpose();
+        assert_eq!(t.shape(), (4, 3));
+        assert_eq!(t.get(1, 0), Some(8.0));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn to_dense_layout() {
+        let m = simple();
+        let d = m.to_dense(0.0);
+        assert_eq!(d.len(), 12);
+        assert_eq!(d[0 * 4 + 1], 8.0);
+        assert_eq!(d[1 * 4 + 0], 2.0);
+        assert_eq!(d[2 * 4 + 3], 7.0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CooMatrix::zeros(5, 7);
+        assert_eq!(m.shape(), (5, 7));
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.get(0, 0), None);
+        assert_eq!(m.to_csr().nnz(), 0);
+    }
+
+    #[test]
+    fn prop_matches_hashmap_model() {
+        check("COO constructor == HashMap model", 200, |g| {
+            let n = 12usize;
+            let len = g.rng().below_usize(80);
+            let mut rows = Vec::new();
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            for _ in 0..len {
+                rows.push(g.rng().below_usize(n));
+                cols.push(g.rng().below_usize(n));
+                vals.push(g.rng().range_i64(1, 50) as f64);
+            }
+            let m = CooMatrix::from_triples_aggregate(n, n, &rows, &cols, &vals, 0.0, f64::min)
+                .unwrap();
+            use std::collections::HashMap;
+            let mut model: HashMap<(usize, usize), f64> = HashMap::new();
+            for i in 0..len {
+                model
+                    .entry((rows[i], cols[i]))
+                    .and_modify(|v| *v = v.min(vals[i]))
+                    .or_insert(vals[i]);
+            }
+            model.retain(|_, v| *v != 0.0);
+            assert_eq!(m.nnz(), model.len());
+            for ((r, c), v) in model {
+                assert_eq!(m.get(r, c), Some(v), "at ({r},{c})");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_csr_roundtrip_preserves_entries() {
+        check("COO -> CSR -> COO identity", 200, |g| {
+            let n = 10usize;
+            let len = g.rng().below_usize(60);
+            let mut rows = Vec::new();
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            for _ in 0..len {
+                rows.push(g.rng().below_usize(n));
+                cols.push(g.rng().below_usize(n));
+                vals.push(g.rng().range_i64(1, 9) as f64);
+            }
+            let m = CooMatrix::from_triples_aggregate(n, n, &rows, &cols, &vals, 0.0, |a, b| {
+                a + b
+            })
+            .unwrap();
+            let back = m.to_csr().to_coo();
+            assert_eq!(m, back);
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Compressed Sparse Column matrix.
+//!
+//! Mostly a transpose-view companion to [`CsrMatrix`]: `condense` uses
+//! its `indptr` for the nonempty-column test (the paper's
+//! `csc_cols[:-1] < csc_cols[1:]`), and `transpose` is a free
+//! reinterpretation of CSC as CSR.
+
+use super::CsrMatrix;
+
+/// Sparse matrix in CSC format. Same invariants as CSR, transposed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscMatrix {
+    nrows: usize,
+    ncols: usize,
+    indptr: Vec<usize>,  // len ncols + 1
+    indices: Vec<u32>,   // row indices, column-major
+    data: Vec<f64>,
+}
+
+impl CscMatrix {
+    pub(crate) fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        data: Vec<f64>,
+    ) -> Self {
+        debug_assert_eq!(indptr.len(), ncols + 1);
+        debug_assert_eq!(indices.len(), data.len());
+        CscMatrix { nrows, ncols, indptr, indices, data }
+    }
+
+    /// Shape `(nrows, ncols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Column pointer array (`ncols + 1` entries).
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// The `(row_indices, values)` slice of one column.
+    pub fn col(&self, c: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[c], self.indptr[c + 1]);
+        (&self.indices[s..e], &self.data[s..e])
+    }
+
+    /// Boolean mask of columns with at least one stored entry — the
+    /// paper's `csc_cols[:-1] < csc_cols[1:]`.
+    pub fn nonempty_cols(&self) -> Vec<bool> {
+        self.indptr.windows(2).map(|w| w[0] < w[1]).collect()
+    }
+
+    /// Reinterpret this CSC as the CSR of the transposed matrix (free).
+    pub fn transpose_view(self) -> CsrMatrix {
+        CsrMatrix::from_parts(self.ncols, self.nrows, self.indptr, self.indices, self.data)
+    }
+
+    /// Convert back to CSR (transpose of the transpose-view). O(nnz).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut indptr = vec![0usize; self.nrows + 1];
+        for &r in &self.indices {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut next = indptr.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0f64; self.nnz()];
+        for c in 0..self.ncols {
+            let (ri, rv) = self.col(c);
+            for (r, v) in ri.iter().zip(rv) {
+                let q = next[*r as usize];
+                next[*r as usize] += 1;
+                indices[q] = c as u32;
+                data[q] = *v;
+            }
+        }
+        CsrMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    fn sample() -> CsrMatrix {
+        CooMatrix::from_triples_aggregate(
+            3,
+            4,
+            &[0, 1, 1, 2],
+            &[1, 0, 3, 1],
+            &[5.0, 2.0, 7.0, 4.0],
+            0.0,
+            f64::min,
+        )
+        .unwrap()
+        .to_csr()
+    }
+
+    #[test]
+    fn csc_columns_correct() {
+        let csc = sample().to_csc();
+        assert_eq!(csc.shape(), (3, 4));
+        let (ri, rv) = csc.col(1);
+        assert_eq!(ri, &[0, 2]);
+        assert_eq!(rv, &[5.0, 4.0]);
+        let (ri, _) = csc.col(2);
+        assert!(ri.is_empty());
+    }
+
+    #[test]
+    fn nonempty_cols_mask() {
+        let csc = sample().to_csc();
+        assert_eq!(csc.nonempty_cols(), vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn transpose_view_is_transpose() {
+        let csr = sample();
+        let t = csr.clone().to_csc().transpose_view();
+        assert_eq!(t.shape(), (4, 3));
+        for r in 0..3 {
+            for c in 0..4 {
+                assert_eq!(csr.get(r, c), t.get(c, r));
+            }
+        }
+    }
+
+    #[test]
+    fn to_csr_roundtrip() {
+        let csr = sample();
+        assert_eq!(csr.to_csc().to_csr(), csr);
+    }
+}

@@ -1,0 +1,637 @@
+//! Compressed Sparse Row matrix — the compute format.
+//!
+//! Semiring-parameterized element-wise addition (union merge per row,
+//! paper §II.C.1) and multiplication (intersection merge per row,
+//! §II.C.2), plus the `indptr`-based nonempty row/column detection that
+//! powers `Assoc::condense` — the exact `csr_rows[:-1] < csr_rows[1:]`
+//! trick of the paper.
+
+use super::{CooMatrix, CscMatrix, SparseError};
+use crate::semiring::Semiring;
+
+/// Sparse matrix in CSR format.
+///
+/// Invariants: `indptr.len() == nrows + 1`, `indptr` non-decreasing,
+/// column indices strictly increasing within each row, stored values
+/// never equal to the semiring zero of the op that produced them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    nrows: usize,
+    ncols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    data: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Assemble from raw parts (trusted; debug-asserted).
+    pub(crate) fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        data: Vec<f64>,
+    ) -> Self {
+        debug_assert_eq!(indptr.len(), nrows + 1);
+        debug_assert_eq!(indices.len(), data.len());
+        debug_assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
+        debug_assert!(indptr.windows(2).all(|w| w[0] <= w[1]));
+        #[cfg(debug_assertions)]
+        for r in 0..nrows {
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            debug_assert!(row.windows(2).all(|w| w[0] < w[1]), "row {r} not strictly sorted");
+        }
+        CsrMatrix { nrows, ncols, indptr, indices, data }
+    }
+
+    /// Empty matrix of the given shape.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        CsrMatrix {
+            nrows,
+            ncols,
+            indptr: vec![0; nrows + 1],
+            indices: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Shape `(nrows, ncols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row pointer array (`nrows + 1` entries).
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// Column indices, row-major.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Stored values, row-major.
+    pub fn values(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// The `(indices, values)` slice of one row.
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[s..e], &self.data[s..e])
+    }
+
+    /// Value at `(row, col)` or `None` (binary search within the row).
+    pub fn get(&self, row: usize, col: usize) -> Option<f64> {
+        if row >= self.nrows {
+            return None;
+        }
+        let (idx, vals) = self.row(row);
+        idx.binary_search(&(col as u32)).ok().map(|p| vals[p])
+    }
+
+    /// Convert to COO (row-major sorted, same entries).
+    pub fn to_coo(&self) -> CooMatrix {
+        let mut rows = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            for _ in self.indptr[r]..self.indptr[r + 1] {
+                rows.push(r as u32);
+            }
+        }
+        CooMatrix::from_sorted_parts(
+            self.nrows,
+            self.ncols,
+            rows,
+            self.indices.clone(),
+            self.data.clone(),
+        )
+    }
+
+    /// Convert to CSC (used by `condense` for the column test and by
+    /// column slicing). O(nnz + ncols).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut indptr = vec![0usize; self.ncols + 1];
+        for &c in &self.indices {
+            indptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut next = indptr.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0f64; self.nnz()];
+        for r in 0..self.nrows {
+            for p in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.indices[p] as usize;
+                let q = next[c];
+                next[c] += 1;
+                indices[q] = r as u32;
+                data[q] = self.data[p];
+            }
+        }
+        CscMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data)
+    }
+
+    /// Transpose via CSC reinterpretation. O(nnz + ncols).
+    pub fn transpose(&self) -> CsrMatrix {
+        self.to_csc().transpose_view()
+    }
+
+    /// Element-wise addition under `s` (union merge per row, §II.C.1).
+    pub fn add(&self, other: &CsrMatrix, s: &dyn Semiring) -> Result<CsrMatrix, SparseError> {
+        if self.shape() != other.shape() {
+            return Err(SparseError::ShapeMismatch {
+                left: self.shape(),
+                right: other.shape(),
+                op: "add",
+            });
+        }
+        let zero = s.zero();
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        indptr.push(0);
+        let mut indices = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut data = Vec::with_capacity(self.nnz() + other.nnz());
+        for r in 0..self.nrows {
+            let (ai, av) = self.row(r);
+            let (bi, bv) = other.row(r);
+            let (mut m, mut n) = (0usize, 0usize);
+            while m < ai.len() && n < bi.len() {
+                let (ca, cb) = (ai[m], bi[n]);
+                let (c, v) = match ca.cmp(&cb) {
+                    std::cmp::Ordering::Less => {
+                        let out = (ca, av[m]);
+                        m += 1;
+                        out
+                    }
+                    std::cmp::Ordering::Greater => {
+                        let out = (cb, bv[n]);
+                        n += 1;
+                        out
+                    }
+                    std::cmp::Ordering::Equal => {
+                        let out = (ca, s.add(av[m], bv[n]));
+                        m += 1;
+                        n += 1;
+                        out
+                    }
+                };
+                if v != zero {
+                    indices.push(c);
+                    data.push(v);
+                }
+            }
+            for p in m..ai.len() {
+                if av[p] != zero {
+                    indices.push(ai[p]);
+                    data.push(av[p]);
+                }
+            }
+            for p in n..bi.len() {
+                if bv[p] != zero {
+                    indices.push(bi[p]);
+                    data.push(bv[p]);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Ok(CsrMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data))
+    }
+
+    /// Element-wise multiplication under `s` (intersection merge per row,
+    /// §II.C.2).
+    pub fn multiply(&self, other: &CsrMatrix, s: &dyn Semiring) -> Result<CsrMatrix, SparseError> {
+        if self.shape() != other.shape() {
+            return Err(SparseError::ShapeMismatch {
+                left: self.shape(),
+                right: other.shape(),
+                op: "multiply",
+            });
+        }
+        let zero = s.zero();
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for r in 0..self.nrows {
+            let (ai, av) = self.row(r);
+            let (bi, bv) = other.row(r);
+            let (mut m, mut n) = (0usize, 0usize);
+            while m < ai.len() && n < bi.len() {
+                match ai[m].cmp(&bi[n]) {
+                    std::cmp::Ordering::Less => m += 1,
+                    std::cmp::Ordering::Greater => n += 1,
+                    std::cmp::Ordering::Equal => {
+                        let v = s.mul(av[m], bv[n]);
+                        if v != zero {
+                            indices.push(ai[m]);
+                            data.push(v);
+                        }
+                        m += 1;
+                        n += 1;
+                    }
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Ok(CsrMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data))
+    }
+
+    /// Map stored values through `f`, pruning results equal to `zero`.
+    /// (`Assoc::logical` replaces all stored values by 1 via this.)
+    pub fn map_values(&self, zero: f64, mut f: impl FnMut(f64) -> f64) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        indptr.push(0);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut data = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            let (ci, cv) = self.row(r);
+            for (c, v) in ci.iter().zip(cv) {
+                let w = f(*v);
+                if w != zero {
+                    indices.push(*c);
+                    data.push(w);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data)
+    }
+
+    /// Boolean mask of rows with at least one stored entry —
+    /// `csr_rows[:-1] < csr_rows[1:]` from paper §II.C.1.
+    pub fn nonempty_rows(&self) -> Vec<bool> {
+        self.indptr.windows(2).map(|w| w[0] < w[1]).collect()
+    }
+
+    /// Boolean mask of columns with at least one stored entry. Computed
+    /// by a direct scan of column indices (equivalent to the paper's
+    /// `csc_cols` test without materializing CSC).
+    pub fn nonempty_cols(&self) -> Vec<bool> {
+        let mut mask = vec![false; self.ncols];
+        for &c in &self.indices {
+            mask[c as usize] = true;
+        }
+        mask
+    }
+
+    /// Select the sub-matrix of rows/cols whose mask bit is set,
+    /// renumbering indices densely — the reshape step of `condense`.
+    pub fn select(&self, row_mask: &[bool], col_mask: &[bool]) -> CsrMatrix {
+        assert_eq!(row_mask.len(), self.nrows);
+        assert_eq!(col_mask.len(), self.ncols);
+        // Dense old→new column map; u32::MAX marks dropped columns.
+        let mut col_map = vec![u32::MAX; self.ncols];
+        let mut ncols = 0u32;
+        for (c, &keep) in col_mask.iter().enumerate() {
+            if keep {
+                col_map[c] = ncols;
+                ncols += 1;
+            }
+        }
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for r in 0..self.nrows {
+            if !row_mask[r] {
+                continue;
+            }
+            let (ci, cv) = self.row(r);
+            for (c, v) in ci.iter().zip(cv) {
+                let nc = col_map[*c as usize];
+                if nc != u32::MAX {
+                    indices.push(nc);
+                    data.push(*v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        let nrows = indptr.len() - 1;
+        CsrMatrix::from_parts(nrows, ncols as usize, indptr, indices, data)
+    }
+
+    /// Gather the sub-matrix `rows × cols` (index lists, order preserved,
+    /// duplicates allowed) — the engine behind `Assoc` sub-array
+    /// extraction.
+    ///
+    /// Fast path: when `cols` is duplicate-free and increasing (the
+    /// shape every algebra op produces — identity lists and
+    /// sorted-intersection maps), gathering is a single re-map pass
+    /// with no per-row sort and no per-column allocation. The general
+    /// path (duplicates / arbitrary order, reachable via user
+    /// selectors) keeps the old→positions multimap.
+    pub fn gather(&self, rows: &[usize], cols: &[usize]) -> CsrMatrix {
+        let monotone_unique = cols.windows(2).all(|w| w[0] < w[1]);
+        if monotone_unique {
+            // Dense old→new map; u32::MAX = dropped.
+            let mut col_map = vec![u32::MAX; self.ncols];
+            for (new_c, &old_c) in cols.iter().enumerate() {
+                assert!(old_c < self.ncols);
+                col_map[old_c] = new_c as u32;
+            }
+            let mut indptr = Vec::with_capacity(rows.len() + 1);
+            indptr.push(0usize);
+            let mut indices: Vec<u32> = Vec::new();
+            let mut data: Vec<f64> = Vec::new();
+            for &old_r in rows {
+                assert!(old_r < self.nrows);
+                let (ci, cv) = self.row(old_r);
+                for (c, v) in ci.iter().zip(cv) {
+                    let nc = col_map[*c as usize];
+                    if nc != u32::MAX {
+                        indices.push(nc);
+                        data.push(*v);
+                    }
+                }
+                indptr.push(indices.len());
+            }
+            return CsrMatrix::from_parts(rows.len(), cols.len(), indptr, indices, data);
+        }
+        // General path: old col -> list of new positions.
+        let mut col_positions: Vec<Vec<u32>> = vec![Vec::new(); self.ncols];
+        for (new_c, &old_c) in cols.iter().enumerate() {
+            assert!(old_c < self.ncols);
+            col_positions[old_c].push(new_c as u32);
+        }
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0usize);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut data: Vec<f64> = Vec::new();
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for &old_r in rows {
+            assert!(old_r < self.nrows);
+            scratch.clear();
+            let (ci, cv) = self.row(old_r);
+            for (c, v) in ci.iter().zip(cv) {
+                for &nc in &col_positions[*c as usize] {
+                    scratch.push((nc, *v));
+                }
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in scratch.iter() {
+                indices.push(c);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix::from_parts(rows.len(), cols.len(), indptr, indices, data)
+    }
+
+    /// Reshape into a larger key space: entry `(r, c)` moves to
+    /// `(row_map[r], col_map[c])`, shape becomes `nrows × ncols`.
+    /// `row_map` must be strictly increasing (so row order is preserved);
+    /// `col_map` must be strictly increasing (column order preserved).
+    /// This is the re-indexing step of `+` after sorted union.
+    pub fn expand(
+        &self,
+        nrows: usize,
+        ncols: usize,
+        row_map: &[usize],
+        col_map: &[usize],
+    ) -> CsrMatrix {
+        assert_eq!(row_map.len(), self.nrows);
+        assert_eq!(col_map.len(), self.ncols);
+        debug_assert!(row_map.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(col_map.windows(2).all(|w| w[0] < w[1]));
+        let mut indptr = vec![0usize; nrows + 1];
+        for r in 0..self.nrows {
+            indptr[row_map[r] + 1] = self.indptr[r + 1] - self.indptr[r];
+        }
+        for i in 0..nrows {
+            indptr[i + 1] += indptr[i];
+        }
+        let indices: Vec<u32> =
+            self.indices.iter().map(|&c| col_map[c as usize] as u32).collect();
+        CsrMatrix::from_parts(nrows, ncols, indptr, indices, self.data.clone())
+    }
+
+    /// Row-reduce with `s.add`, producing a column vector of length
+    /// `nrows` (dense): `out[r] = ⊕_c A[r, c]` (`Assoc::sum(axis=1)`).
+    pub fn reduce_rows(&self, s: &dyn Semiring) -> Vec<f64> {
+        let mut out = vec![s.zero(); self.nrows];
+        for r in 0..self.nrows {
+            let (_, vals) = self.row(r);
+            for &v in vals {
+                out[r] = s.add(out[r], v);
+            }
+        }
+        out
+    }
+
+    /// Column-reduce with `s.add`: `out[c] = ⊕_r A[r, c]` (`sum(axis=0)`).
+    pub fn reduce_cols(&self, s: &dyn Semiring) -> Vec<f64> {
+        let mut out = vec![s.zero(); self.ncols];
+        for (&c, &v) in self.indices.iter().zip(&self.data) {
+            let c = c as usize;
+            out[c] = s.add(out[c], v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::semiring::{MaxPlus, MinPlus, PlusTimes};
+    use crate::util::prop::check;
+    use crate::util::SplitMix64;
+
+    fn from_triples(n: usize, t: &[(usize, usize, f64)]) -> CsrMatrix {
+        let rows: Vec<usize> = t.iter().map(|x| x.0).collect();
+        let cols: Vec<usize> = t.iter().map(|x| x.1).collect();
+        let vals: Vec<f64> = t.iter().map(|x| x.2).collect();
+        CooMatrix::from_triples_aggregate(n, n, &rows, &cols, &vals, 0.0, |a, b| a + b)
+            .unwrap()
+            .to_csr()
+    }
+
+    fn random_csr(r: &mut SplitMix64, n: usize, nnz: usize) -> CsrMatrix {
+        let mut t = Vec::new();
+        for _ in 0..nnz {
+            t.push((r.below_usize(n), r.below_usize(n), r.range_i64(1, 9) as f64));
+        }
+        from_triples(n, &t)
+    }
+
+    #[test]
+    fn get_and_row() {
+        let m = from_triples(3, &[(0, 1, 2.0), (1, 0, 3.0), (1, 2, 4.0)]);
+        assert_eq!(m.get(0, 1), Some(2.0));
+        assert_eq!(m.get(1, 1), None);
+        let (ci, cv) = m.row(1);
+        assert_eq!(ci, &[0, 2]);
+        assert_eq!(cv, &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn add_plus_times() {
+        let a = from_triples(2, &[(0, 0, 1.0), (0, 1, 2.0)]);
+        let b = from_triples(2, &[(0, 1, 3.0), (1, 1, 4.0)]);
+        let c = a.add(&b, &PlusTimes).unwrap();
+        assert_eq!(c.get(0, 0), Some(1.0));
+        assert_eq!(c.get(0, 1), Some(5.0));
+        assert_eq!(c.get(1, 1), Some(4.0));
+        assert_eq!(c.nnz(), 3);
+    }
+
+    #[test]
+    fn add_cancellation_prunes() {
+        let a = from_triples(2, &[(0, 0, 1.0)]);
+        let b = from_triples(2, &[(0, 0, -1.0)]);
+        let c = a.add(&b, &PlusTimes).unwrap();
+        assert_eq!(c.nnz(), 0);
+    }
+
+    #[test]
+    fn add_shape_mismatch() {
+        let a = CsrMatrix::zeros(2, 2);
+        let b = CsrMatrix::zeros(3, 2);
+        assert!(a.add(&b, &PlusTimes).is_err());
+    }
+
+    #[test]
+    fn multiply_intersects() {
+        let a = from_triples(2, &[(0, 0, 2.0), (0, 1, 3.0)]);
+        let b = from_triples(2, &[(0, 1, 5.0), (1, 0, 7.0)]);
+        let c = a.multiply(&b, &PlusTimes).unwrap();
+        assert_eq!(c.nnz(), 1);
+        assert_eq!(c.get(0, 1), Some(15.0));
+    }
+
+    #[test]
+    fn multiply_maxplus_is_add() {
+        let a = from_triples(2, &[(0, 0, 2.0)]);
+        let b = from_triples(2, &[(0, 0, 5.0)]);
+        let c = a.multiply(&b, &MaxPlus).unwrap();
+        assert_eq!(c.get(0, 0), Some(7.0));
+    }
+
+    #[test]
+    fn nonempty_masks() {
+        let m = from_triples(3, &[(0, 2, 1.0), (2, 2, 1.0)]);
+        assert_eq!(m.nonempty_rows(), vec![true, false, true]);
+        assert_eq!(m.nonempty_cols(), vec![false, false, true]);
+    }
+
+    #[test]
+    fn select_condenses() {
+        let m = from_triples(3, &[(0, 2, 1.0), (2, 2, 2.0)]);
+        let s = m.select(&m.nonempty_rows(), &m.nonempty_cols());
+        assert_eq!(s.shape(), (2, 1));
+        assert_eq!(s.get(0, 0), Some(1.0));
+        assert_eq!(s.get(1, 0), Some(2.0));
+    }
+
+    #[test]
+    fn gather_with_duplicates_and_order() {
+        let m = from_triples(3, &[(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0)]);
+        let g = m.gather(&[2, 0, 2], &[1, 2, 2]);
+        assert_eq!(g.shape(), (3, 3));
+        assert_eq!(g.get(0, 1), Some(3.0)); // row 2, col 2 duplicated
+        assert_eq!(g.get(0, 2), Some(3.0));
+        assert_eq!(g.get(1, 0), None);
+        assert_eq!(g.get(2, 1), Some(3.0));
+    }
+
+    #[test]
+    fn expand_reindexes() {
+        let m = from_triples(2, &[(0, 0, 1.0), (1, 1, 2.0)]);
+        let e = m.expand(4, 5, &[1, 3], &[0, 4]);
+        assert_eq!(e.shape(), (4, 5));
+        assert_eq!(e.get(1, 0), Some(1.0));
+        assert_eq!(e.get(3, 4), Some(2.0));
+        assert_eq!(e.nnz(), 2);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let mut r = SplitMix64::new(5);
+        let m = random_csr(&mut r, 8, 30);
+        assert_eq!(m.transpose().transpose(), m);
+        let t = m.transpose();
+        for rr in 0..8 {
+            for cc in 0..8 {
+                assert_eq!(m.get(rr, cc), t.get(cc, rr));
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_rows_and_cols() {
+        let m = from_triples(3, &[(0, 0, 1.0), (0, 2, 2.0), (2, 0, 5.0)]);
+        assert_eq!(m.reduce_rows(&PlusTimes), vec![3.0, 0.0, 5.0]);
+        assert_eq!(m.reduce_cols(&PlusTimes), vec![6.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn map_values_prunes_zeros() {
+        let m = from_triples(2, &[(0, 0, 1.0), (1, 1, 2.0)]);
+        let logical = m.map_values(0.0, |_| 1.0);
+        assert_eq!(logical.get(1, 1), Some(1.0));
+        let zeroed = m.map_values(0.0, |v| if v > 1.5 { 0.0 } else { v });
+        assert_eq!(zeroed.nnz(), 1);
+    }
+
+    #[test]
+    fn min_plus_add_respects_inf_zero() {
+        let a = from_triples(2, &[(0, 0, 3.0)]);
+        let b = from_triples(2, &[(0, 0, 5.0)]);
+        let c = a.add(&b, &MinPlus).unwrap();
+        assert_eq!(c.get(0, 0), Some(3.0));
+    }
+
+    #[test]
+    fn prop_add_matches_dense_model() {
+        check("CSR add == dense add", 150, |g| {
+            let n = 8;
+            let a = random_csr(g.rng(), n, 24);
+            let b = random_csr(g.rng(), n, 24);
+            let c = a.add(&b, &PlusTimes).unwrap();
+            for r in 0..n {
+                for cc in 0..n {
+                    let expect = a.get(r, cc).unwrap_or(0.0) + b.get(r, cc).unwrap_or(0.0);
+                    let got = c.get(r, cc).unwrap_or(0.0);
+                    assert_eq!(got, expect, "at ({r},{cc})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_multiply_matches_dense_model() {
+        check("CSR multiply == dense elementwise", 150, |g| {
+            let n = 8;
+            let a = random_csr(g.rng(), n, 24);
+            let b = random_csr(g.rng(), n, 24);
+            let c = a.multiply(&b, &PlusTimes).unwrap();
+            for r in 0..n {
+                for cc in 0..n {
+                    let expect = a.get(r, cc).unwrap_or(0.0) * b.get(r, cc).unwrap_or(0.0);
+                    assert_eq!(c.get(r, cc).unwrap_or(0.0), expect);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_add_commutes() {
+        check("CSR add commutative", 100, |g| {
+            let a = random_csr(g.rng(), 8, 20);
+            let b = random_csr(g.rng(), 8, 20);
+            assert_eq!(a.add(&b, &PlusTimes).unwrap(), b.add(&a, &PlusTimes).unwrap());
+        });
+    }
+
+    #[test]
+    fn prop_csc_roundtrip() {
+        check("CSR -> CSC -> CSR identity", 100, |g| {
+            let a = random_csr(g.rng(), 10, 40);
+            assert_eq!(a.to_csc().to_csr(), a);
+        });
+    }
+}

@@ -1,0 +1,166 @@
+//! Dense blocks — the scatter/gather boundary between the sparse host
+//! representation and the AOT-compiled Pallas kernel.
+//!
+//! The accelerated `@` path in [`crate::runtime`] works on fixed-size
+//! dense `f32` tiles: a [`CsrMatrix`] region is scattered into a
+//! [`DenseBlock`], the PJRT executable contracts the tiles, and the
+//! result is gathered back into sparse form, pruning semiring zeros.
+
+use super::{CooMatrix, CsrMatrix};
+
+/// A dense row-major `f32` block (the PJRT kernels run in `f32` — the
+/// MXU-native matmul dtype; D4M numeric values are small integers and
+/// survive the round-trip exactly up to 2^24).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseBlock {
+    nrows: usize,
+    ncols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseBlock {
+    /// Block filled with `fill` (use the semiring zero).
+    pub fn filled(nrows: usize, ncols: usize, fill: f32) -> Self {
+        DenseBlock { nrows, ncols, data: vec![fill; nrows * ncols] }
+    }
+
+    /// Shape `(nrows, ncols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    /// Row-major data slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable row-major data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Element accessor.
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.ncols + c]
+    }
+
+    /// Element setter.
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.ncols + c] = v;
+    }
+
+    /// Scatter a CSR matrix into a dense block of shape `(bh, bw)`
+    /// (padding with `fill`). The matrix must fit.
+    pub fn scatter_from(csr: &CsrMatrix, bh: usize, bw: usize, fill: f32) -> Self {
+        let (m, n) = csr.shape();
+        assert!(m <= bh && n <= bw, "matrix {m}x{n} does not fit block {bh}x{bw}");
+        let mut block = DenseBlock::filled(bh, bw, fill);
+        for r in 0..m {
+            let (ci, cv) = csr.row(r);
+            for (c, v) in ci.iter().zip(cv) {
+                block.data[r * bw + *c as usize] = *v as f32;
+            }
+        }
+        block
+    }
+
+    /// Gather back to CSR, keeping the leading `m × n` region and
+    /// pruning entries equal to `zero`.
+    pub fn gather_to_csr(&self, m: usize, n: usize, zero: f64) -> CsrMatrix {
+        assert!(m <= self.nrows && n <= self.ncols);
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for r in 0..m {
+            for c in 0..n {
+                let v = self.data[r * self.ncols + c] as f64;
+                if v != zero {
+                    rows.push(r);
+                    cols.push(c);
+                    vals.push(v);
+                }
+            }
+        }
+        CooMatrix::from_triples_aggregate(m, n, &rows, &cols, &vals, zero, |a, _| a)
+            .expect("gather triples are well-formed")
+            .to_csr()
+    }
+
+    /// Density of the leading `m × n` region of a CSR matrix — the
+    /// dispatch heuristic for the accelerated path.
+    pub fn density(csr: &CsrMatrix) -> f64 {
+        let (m, n) = csr.shape();
+        if m == 0 || n == 0 {
+            return 0.0;
+        }
+        csr.nnz() as f64 / (m as f64 * n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    fn sample_csr() -> CsrMatrix {
+        CooMatrix::from_triples_aggregate(
+            2,
+            3,
+            &[0, 1, 1],
+            &[1, 0, 2],
+            &[5.0, 2.0, 7.0],
+            0.0,
+            f64::min,
+        )
+        .unwrap()
+        .to_csr()
+    }
+
+    #[test]
+    fn scatter_pads_with_fill() {
+        let b = DenseBlock::scatter_from(&sample_csr(), 4, 4, 0.0);
+        assert_eq!(b.shape(), (4, 4));
+        assert_eq!(b.get(0, 1), 5.0);
+        assert_eq!(b.get(1, 0), 2.0);
+        assert_eq!(b.get(1, 2), 7.0);
+        assert_eq!(b.get(3, 3), 0.0);
+    }
+
+    #[test]
+    fn gather_roundtrip() {
+        let csr = sample_csr();
+        let b = DenseBlock::scatter_from(&csr, 4, 4, 0.0);
+        let back = b.gather_to_csr(2, 3, 0.0);
+        assert_eq!(back, csr);
+    }
+
+    #[test]
+    fn gather_prunes_zero() {
+        let mut b = DenseBlock::filled(2, 2, 0.0);
+        b.set(0, 0, 3.0);
+        let csr = b.gather_to_csr(2, 2, 0.0);
+        assert_eq!(csr.nnz(), 1);
+    }
+
+    #[test]
+    fn min_plus_fill_roundtrip() {
+        // Tropical kernels pad with +inf; gather must prune it back out.
+        let csr = sample_csr();
+        let b = DenseBlock::scatter_from(&csr, 4, 4, f32::INFINITY);
+        let back = b.gather_to_csr(2, 3, f64::INFINITY);
+        assert_eq!(back, csr);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn scatter_overflow_panics() {
+        DenseBlock::scatter_from(&sample_csr(), 1, 1, 0.0);
+    }
+
+    #[test]
+    fn density_calc() {
+        let d = DenseBlock::density(&sample_csr());
+        assert!((d - 3.0 / 6.0).abs() < 1e-12);
+        assert_eq!(DenseBlock::density(&CsrMatrix::zeros(0, 0)), 0.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! From-scratch sparse linear-algebra substrate.
+//!
+//! The paper leaves "as much of the work as possible to a dedicated
+//! sparse linear algebra library" — SciPy.sparse for D4M.py, MATLAB's
+//! built-in sparse for D4M-MATLAB, `SparseArrays` for D4M.jl. This repo
+//! has no such dependency, so this module *is* that library:
+//!
+//! * [`CooMatrix`] — COOrdinate (triple) format: the `A.adj` storage
+//!   format of D4M.py, and the ingest format for construction.
+//! * [`CsrMatrix`] — Compressed Sparse Row: the compute format for
+//!   addition, element-wise multiplication and SpGEMM; also supplies the
+//!   `indptr`-based nonempty-row test used by `condense` (paper §II.C.1).
+//! * [`CscMatrix`] — Compressed Sparse Column: transpose-view used for
+//!   the nonempty-column test and column slicing.
+//!
+//! All value storage is `f64` (D4M's numeric value type; string arrays
+//! store 1-based value-pool indices as `f64`, exactly like D4M.py storing
+//! `k + 1` in a SciPy COO matrix). Algebraic operations are parameterized
+//! by a [`crate::semiring::Semiring`] so `+`, `*`, `@` work over
+//! plus-times, max-plus, min-plus, max-min or user algebras.
+//!
+//! Entries whose value equals the semiring zero are *never stored*;
+//! every constructor and operation prunes them ("zeros are unstored",
+//! paper §I.B).
+
+mod coo;
+mod csc;
+mod csr;
+mod dense;
+mod spgemm;
+
+pub use coo::CooMatrix;
+pub use csc::CscMatrix;
+pub use csr::CsrMatrix;
+pub use dense::DenseBlock;
+pub use spgemm::{spgemm, SpGemmStats};
+
+/// Errors from sparse-matrix constructors and shape checks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SparseError {
+    /// Triple arrays have mismatched lengths.
+    LengthMismatch { rows: usize, cols: usize, vals: usize },
+    /// An index is out of the declared shape.
+    IndexOutOfBounds { axis: &'static str, index: usize, extent: usize },
+    /// Operand shapes are incompatible for the requested operation.
+    ShapeMismatch { left: (usize, usize), right: (usize, usize), op: &'static str },
+}
+
+impl std::fmt::Display for SparseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SparseError::LengthMismatch { rows, cols, vals } => write!(
+                f,
+                "triple arrays have mismatched lengths: rows={rows} cols={cols} vals={vals}"
+            ),
+            SparseError::IndexOutOfBounds { axis, index, extent } => {
+                write!(f, "{axis} index {index} out of bounds for extent {extent}")
+            }
+            SparseError::ShapeMismatch { left, right, op } => write!(
+                f,
+                "shape mismatch for {op}: {}x{} vs {}x{}",
+                left.0, left.1, right.0, right.1
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SparseError {}

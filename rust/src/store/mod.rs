@@ -1,0 +1,301 @@
+//! An Accumulo-like sorted, distributed key/value triple store.
+//!
+//! D4M's "distributed" dimension historically fronts Apache Accumulo: a
+//! sorted, distributed key/value store holding associative-array triples,
+//! with Graphulo providing server-side linear algebra (paper §I). The
+//! JVM stack is unavailable here, so this module *is* the substitute
+//! substrate (see DESIGN.md §3), reproducing the interface contract the
+//! paper's ecosystem relies on:
+//!
+//! * **[`Tablet`]** — a sorted in-memory key range (Accumulo tablet):
+//!   `(row, col) → val` in a `BTreeMap`, with extent bounds and size
+//!   accounting.
+//! * **[`Table`]** — a named table: ordered tablets with split points,
+//!   automatic splitting when a tablet exceeds its size threshold,
+//!   range scans, and multi-threaded-friendly (`Mutex` per tablet).
+//! * **[`BatchWriter`]** — buffered, tablet-grouped ingest (the
+//!   Accumulo `BatchWriter` that made the 100M-inserts/s result of the
+//!   D4M lineage possible, scaled down).
+//! * **[`TableStore`]** — the "instance": a named collection of tables,
+//!   including D4M's standard *adjacency + transpose-adjacency* pair so
+//!   both row and column access are sorted scans.
+//!
+//! Triples here are plain strings (Accumulo keys are bytes); conversion
+//! to/from [`crate::assoc::Assoc`] happens at the boundary
+//! ([`Table::scan_to_assoc`], [`TableStore::ingest_assoc`]).
+
+mod table;
+mod tablet;
+mod writer;
+
+pub use table::{ScanRange, Table, TableConfig};
+pub use tablet::Tablet;
+pub use writer::{BatchWriter, WriterConfig};
+
+use crate::assoc::{Aggregator, Assoc, Key, ValsInput};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// A stored triple: `(row, column, value)`, all strings.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Triple {
+    /// Row key.
+    pub row: String,
+    /// Column key.
+    pub col: String,
+    /// Value (string; numeric values are rendered).
+    pub val: String,
+}
+
+impl Triple {
+    /// Construct a triple.
+    pub fn new(row: impl Into<String>, col: impl Into<String>, val: impl Into<String>) -> Self {
+        Triple { row: row.into(), col: col.into(), val: val.into() }
+    }
+
+    /// Approximate in-store size in bytes (key + value lengths).
+    pub fn weight(&self) -> usize {
+        self.row.len() + self.col.len() + self.val.len()
+    }
+}
+
+/// Errors from store operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    /// The named table does not exist.
+    NoSuchTable(String),
+    /// A tablet server was marked offline (failure injection).
+    TabletOffline { table: String, tablet: usize },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::NoSuchTable(t) => write!(f, "no such table: {t}"),
+            StoreError::TabletOffline { table, tablet } => {
+                write!(f, "tablet {tablet} of table {table} is offline")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// A store instance: named tables plus the D4M adjacency/transpose pair
+/// convention (`name` and `name_T`).
+pub struct TableStore {
+    tables: Mutex<BTreeMap<String, Arc<Table>>>,
+    config: TableConfig,
+}
+
+impl TableStore {
+    /// New store whose tables use `config`.
+    pub fn new(config: TableConfig) -> Self {
+        TableStore { tables: Mutex::new(BTreeMap::new()), config }
+    }
+
+    /// New store with default table configuration.
+    pub fn with_defaults() -> Self {
+        Self::new(TableConfig::default())
+    }
+
+    /// Create (or get) a table.
+    pub fn create_table(&self, name: &str) -> Arc<Table> {
+        let mut tables = self.tables.lock().unwrap();
+        tables
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Table::new(name, self.config.clone())))
+            .clone()
+    }
+
+    /// Look up an existing table.
+    pub fn table(&self, name: &str) -> Result<Arc<Table>, StoreError> {
+        self.tables
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| StoreError::NoSuchTable(name.to_string()))
+    }
+
+    /// Delete a table; returns whether it existed.
+    pub fn drop_table(&self, name: &str) -> bool {
+        self.tables.lock().unwrap().remove(name).is_some()
+    }
+
+    /// Names of all tables.
+    pub fn table_names(&self) -> Vec<String> {
+        self.tables.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Create the D4M adjacency pair `name` / `name_T` and ingest an
+    /// associative array into both orientations (the standard D4M
+    /// database layout: transpose table makes column access a sorted
+    /// row scan).
+    pub fn ingest_assoc(&self, name: &str, a: &Assoc) -> (Arc<Table>, Arc<Table>) {
+        let t = self.create_table(name);
+        let tt = self.create_table(&format!("{name}_T"));
+        let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
+        let mut wt = BatchWriter::new(Arc::clone(&tt), WriterConfig::default());
+        for (r, c, v) in a.iter() {
+            let (rs, cs, vs) = (r.to_string(), c.to_string(), v.to_string());
+            w.put(Triple::new(rs.clone(), cs.clone(), vs.clone()));
+            wt.put(Triple::new(cs, rs, vs));
+        }
+        w.flush();
+        wt.flush();
+        (t, tt)
+    }
+
+    /// Read a whole table back as an associative array (values parsed
+    /// numerically when all parse; collisions keep the latest write).
+    pub fn read_assoc(&self, name: &str) -> Result<Assoc, StoreError> {
+        let t = self.table(name)?;
+        Ok(t.scan_to_assoc(ScanRange::all()))
+    }
+}
+
+impl TableStore {
+    /// Persist every table as TSV triples under `dir` (one
+    /// `<table>.tsv` per table) — the snapshot/backup path. Returns the
+    /// number of tables written.
+    pub fn snapshot(&self, dir: impl AsRef<std::path::Path>) -> std::io::Result<usize> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let tables: Vec<Arc<Table>> =
+            self.tables.lock().unwrap().values().cloned().collect();
+        for t in &tables {
+            use std::io::Write;
+            let path = dir.join(format!("{}.tsv", t.name()));
+            let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+            for tr in t.scan(ScanRange::all()) {
+                writeln!(w, "{}\t{}\t{}", tr.row, tr.col, tr.val)?;
+            }
+            w.flush()?;
+        }
+        Ok(tables.len())
+    }
+
+    /// Restore tables from a [`TableStore::snapshot`] directory
+    /// (creates one table per `*.tsv` file). Returns the table names
+    /// restored.
+    pub fn restore(&self, dir: impl AsRef<std::path::Path>) -> std::io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("tsv") {
+                continue;
+            }
+            let name = path.file_stem().unwrap().to_string_lossy().to_string();
+            let table = self.create_table(&name);
+            let mut w = BatchWriter::new(Arc::clone(&table), WriterConfig::default());
+            for (lineno, line) in std::fs::read_to_string(&path)?.lines().enumerate() {
+                if line.is_empty() {
+                    continue;
+                }
+                let mut parts = line.splitn(3, '\t');
+                match (parts.next(), parts.next(), parts.next()) {
+                    (Some(r), Some(c), Some(v)) => w.put(Triple::new(r, c, v)),
+                    _ => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!("{}:{}: bad triple", path.display(), lineno + 1),
+                        ))
+                    }
+                }
+            }
+            w.flush();
+            names.push(name);
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+/// Convert scanned triples into an [`Assoc`] (numeric when every value
+/// parses as a number; `Last` aggregation — later writes win, matching
+/// store overwrite semantics).
+pub fn triples_to_assoc(triples: &[Triple]) -> Assoc {
+    let rows: Vec<Key> = triples.iter().map(|t| Key::str(t.row.as_str())).collect();
+    let cols: Vec<Key> = triples.iter().map(|t| Key::str(t.col.as_str())).collect();
+    let numeric: Option<Vec<f64>> = triples.iter().map(|t| t.val.parse::<f64>().ok()).collect();
+    let vals = match numeric {
+        Some(nums) => ValsInput::Num(nums),
+        None => ValsInput::Str(triples.iter().map(|t| t.val.clone()).collect()),
+    };
+    Assoc::try_new(rows, cols, vals, Aggregator::Last).expect("scan triples are consistent")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc::Assoc;
+
+    #[test]
+    fn create_and_lookup_tables() {
+        let store = TableStore::with_defaults();
+        store.create_table("edges");
+        assert!(store.table("edges").is_ok());
+        assert!(matches!(store.table("nope"), Err(StoreError::NoSuchTable(_))));
+        assert_eq!(store.table_names(), vec!["edges".to_string()]);
+        assert!(store.drop_table("edges"));
+        assert!(!store.drop_table("edges"));
+    }
+
+    #[test]
+    fn ingest_and_read_roundtrip() {
+        let store = TableStore::with_defaults();
+        let a = Assoc::from_triples(
+            &["r1", "r1", "r2"],
+            &["c1", "c2", "c1"],
+            &["x", "y", "z"][..],
+        );
+        store.ingest_assoc("t", &a);
+        let back = store.read_assoc("t").unwrap();
+        assert_eq!(back, a);
+        // Transpose table holds the transposed array.
+        let back_t = store.read_assoc("t_T").unwrap();
+        assert_eq!(back_t, a.transpose());
+    }
+
+    #[test]
+    fn numeric_roundtrip() {
+        let store = TableStore::with_defaults();
+        let a = Assoc::from_triples(&["r1", "r2"], &["c", "c"], vec![1.5, 2.0]);
+        store.ingest_assoc("n", &a);
+        let back = store.read_assoc("n").unwrap();
+        assert!(back.is_numeric());
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn triples_to_assoc_last_wins() {
+        let ts = vec![
+            Triple::new("r", "c", "1"),
+            Triple::new("r", "c", "2"), // overwrite
+        ];
+        let a = triples_to_assoc(&ts);
+        assert_eq!(a.get_num("r", "c"), Some(2.0));
+    }
+
+    #[test]
+    fn triple_weight() {
+        assert_eq!(Triple::new("ab", "c", "defg").weight(), 7);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let store = TableStore::with_defaults();
+        let a = Assoc::from_triples(&["r1", "r2"], &["c1", "c2"], &["x", "y"][..]);
+        store.ingest_assoc("edges", &a);
+        let dir = std::env::temp_dir().join("d4m-snapshot-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(store.snapshot(&dir).unwrap(), 2); // edges + edges_T
+
+        let fresh = TableStore::with_defaults();
+        let names = fresh.restore(&dir).unwrap();
+        assert_eq!(names, vec!["edges".to_string(), "edges_T".to_string()]);
+        assert_eq!(fresh.read_assoc("edges").unwrap(), a);
+        assert_eq!(fresh.read_assoc("edges_T").unwrap(), a.transpose());
+    }
+}

@@ -1,0 +1,345 @@
+//! A table: an ordered collection of tablets with automatic splitting.
+//!
+//! Mirrors Accumulo's model: a table starts as one tablet spanning the
+//! whole row space; when a tablet's stored bytes exceed
+//! [`TableConfig::split_threshold`], it splits at its median row. Each
+//! tablet has its own lock, so concurrent writers to different key
+//! ranges do not contend — the property the ingest pipeline's sharding
+//! exploits.
+
+use super::tablet::Tablet;
+use super::{StoreError, Triple};
+use crate::assoc::Assoc;
+use std::sync::{Mutex, RwLock};
+
+/// Table tuning knobs.
+#[derive(Debug, Clone)]
+pub struct TableConfig {
+    /// Tablet size (bytes) that triggers a split.
+    pub split_threshold: usize,
+    /// Artificial per-batch write latency in microseconds (failure /
+    /// slow-server injection for tests and backpressure demos).
+    pub write_latency_us: u64,
+}
+
+impl Default for TableConfig {
+    fn default() -> Self {
+        TableConfig { split_threshold: 4 << 20, write_latency_us: 0 }
+    }
+}
+
+/// A scan range over rows: `[lo, hi)`, unbounded when `None`.
+#[derive(Debug, Clone, Default)]
+pub struct ScanRange {
+    /// Inclusive lower row bound.
+    pub lo: Option<String>,
+    /// Exclusive upper row bound.
+    pub hi: Option<String>,
+}
+
+impl ScanRange {
+    /// The full-table range.
+    pub fn all() -> Self {
+        ScanRange::default()
+    }
+
+    /// Rows in `[lo, hi)`.
+    pub fn rows(lo: impl Into<String>, hi: impl Into<String>) -> Self {
+        ScanRange { lo: Some(lo.into()), hi: Some(hi.into()) }
+    }
+
+    /// Exactly one row.
+    pub fn single(row: impl Into<String>) -> Self {
+        let row = row.into();
+        let mut hi = row.clone();
+        hi.push('\0');
+        ScanRange { lo: Some(row), hi: Some(hi) }
+    }
+}
+
+/// A named table of sorted tablets.
+pub struct Table {
+    name: String,
+    config: TableConfig,
+    /// Tablets in row order. The `RwLock` guards the tablet *list*
+    /// (splits); each tablet has its own `Mutex` for cell data.
+    tablets: RwLock<Vec<Mutex<Tablet>>>,
+}
+
+impl Table {
+    /// New table with a single unbounded tablet.
+    pub fn new(name: &str, config: TableConfig) -> Self {
+        Table {
+            name: name.to_string(),
+            config,
+            tablets: RwLock::new(vec![Mutex::new(Tablet::new(None, None))]),
+        }
+    }
+
+    /// Table name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of tablets (grows as the table splits).
+    pub fn tablet_count(&self) -> usize {
+        self.tablets.read().unwrap().len()
+    }
+
+    /// Index of the tablet whose extent contains `row`.
+    fn locate(tablets: &[Mutex<Tablet>], row: &str) -> usize {
+        // Binary search on lower bounds: find the last tablet whose
+        // lo <= row. Tablets are in row order; the first has lo = None.
+        let mut lo = 0usize;
+        let mut hi = tablets.len();
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            let t = tablets[mid].lock().unwrap();
+            match t.lo.as_deref() {
+                Some(bound) if row < bound => hi = mid,
+                _ => lo = mid,
+            }
+        }
+        lo
+    }
+
+    /// Write a batch of triples (grouped internally by tablet). Returns
+    /// the number written. Triples for offline tablets produce an error.
+    pub fn write_batch(&self, batch: Vec<Triple>) -> Result<usize, StoreError> {
+        if self.config.write_latency_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.config.write_latency_us));
+        }
+        let mut written = 0;
+        {
+            let tablets = self.tablets.read().unwrap();
+            // Group by destination tablet to take each lock once.
+            let mut grouped: Vec<Vec<Triple>> = (0..tablets.len()).map(|_| Vec::new()).collect();
+            for t in batch {
+                let idx = Self::locate(&tablets, &t.row);
+                grouped[idx].push(t);
+            }
+            for (idx, group) in grouped.into_iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let mut tab = tablets[idx].lock().unwrap();
+                if tab.offline {
+                    return Err(StoreError::TabletOffline {
+                        table: self.name.clone(),
+                        tablet: idx,
+                    });
+                }
+                for t in group {
+                    tab.put(t);
+                    written += 1;
+                }
+            }
+        }
+        self.maybe_split();
+        Ok(written)
+    }
+
+    /// Split any tablet exceeding the size threshold (one pass; called
+    /// after each batch, so growth beyond 2× the threshold is bounded).
+    fn maybe_split(&self) {
+        let needs_split = {
+            let tablets = self.tablets.read().unwrap();
+            tablets.iter().enumerate().find_map(|(i, t)| {
+                let t = t.lock().unwrap();
+                (t.weight() > self.config.split_threshold).then(|| i)
+            })
+        };
+        if let Some(idx) = needs_split {
+            let mut tablets = self.tablets.write().unwrap();
+            // Re-check under the write lock.
+            let split = {
+                let mut tab = tablets[idx].lock().unwrap();
+                if tab.weight() <= self.config.split_threshold {
+                    None
+                } else {
+                    tab.median_row().map(|m| tab.split_at(&m))
+                }
+            };
+            if let Some(right) = split {
+                tablets.insert(idx + 1, Mutex::new(right));
+            }
+        }
+    }
+
+    /// Scan a row range, returning sorted triples.
+    pub fn scan(&self, range: ScanRange) -> Vec<Triple> {
+        let tablets = self.tablets.read().unwrap();
+        let mut out = Vec::new();
+        for t in tablets.iter() {
+            let tab = t.lock().unwrap();
+            // Skip tablets entirely outside the range.
+            if let (Some(hi), Some(tlo)) = (&range.hi, &tab.lo) {
+                if tlo.as_str() >= hi.as_str() {
+                    break;
+                }
+            }
+            if let (Some(lo), Some(thi)) = (&range.lo, &tab.hi) {
+                if thi.as_str() <= lo.as_str() {
+                    continue;
+                }
+            }
+            tab.scan_into(range.lo.as_deref(), range.hi.as_deref(), &mut out);
+        }
+        out
+    }
+
+    /// Point lookup.
+    pub fn get(&self, row: &str, col: &str) -> Option<String> {
+        let tablets = self.tablets.read().unwrap();
+        let idx = Self::locate(&tablets, row);
+        let tab = tablets[idx].lock().unwrap();
+        tab.get(row, col).map(str::to_string)
+    }
+
+    /// Delete a cell; returns whether it existed.
+    pub fn delete(&self, row: &str, col: &str) -> bool {
+        let tablets = self.tablets.read().unwrap();
+        let idx = Self::locate(&tablets, row);
+        let mut tab = tablets[idx].lock().unwrap();
+        tab.delete(row, col)
+    }
+
+    /// Total stored cells across tablets.
+    pub fn len(&self) -> usize {
+        let tablets = self.tablets.read().unwrap();
+        tablets.iter().map(|t| t.lock().unwrap().len()).sum()
+    }
+
+    /// True when no cells are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The current split points (for pipeline range-sharding).
+    pub fn split_points(&self) -> Vec<String> {
+        let tablets = self.tablets.read().unwrap();
+        tablets
+            .iter()
+            .filter_map(|t| t.lock().unwrap().lo.clone())
+            .collect()
+    }
+
+    /// Scan into an associative array.
+    pub fn scan_to_assoc(&self, range: ScanRange) -> Assoc {
+        super::triples_to_assoc(&self.scan(range))
+    }
+
+    /// Failure injection: mark a tablet offline/online.
+    pub fn set_tablet_offline(&self, idx: usize, offline: bool) {
+        let tablets = self.tablets.read().unwrap();
+        if let Some(t) = tablets.get(idx) {
+            t.lock().unwrap().offline = offline;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_table() -> Table {
+        // Tiny split threshold so splits actually happen in tests.
+        Table::new("t", TableConfig { split_threshold: 64, write_latency_us: 0 })
+    }
+
+    fn batch(n: usize) -> Vec<Triple> {
+        (0..n).map(|i| Triple::new(format!("row{i:04}"), "c", "value")).collect()
+    }
+
+    #[test]
+    fn write_and_point_get() {
+        let t = small_table();
+        t.write_batch(vec![Triple::new("r", "c", "v")]).unwrap();
+        assert_eq!(t.get("r", "c"), Some("v".into()));
+        assert_eq!(t.get("r", "x"), None);
+        assert!(t.delete("r", "c"));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn splits_on_growth_and_stays_scannable() {
+        let t = small_table();
+        t.write_batch(batch(100)).unwrap();
+        assert!(t.tablet_count() > 1, "expected splits, got 1 tablet");
+        assert_eq!(t.len(), 100);
+        // Scan returns everything, sorted.
+        let all = t.scan(ScanRange::all());
+        assert_eq!(all.len(), 100);
+        assert!(all.windows(2).all(|w| w[0] <= w[1]));
+        // Point gets route across split tablets.
+        assert_eq!(t.get("row0000", "c"), Some("value".into()));
+        assert_eq!(t.get("row0099", "c"), Some("value".into()));
+    }
+
+    #[test]
+    fn ranged_scans() {
+        let t = small_table();
+        t.write_batch(batch(50)).unwrap();
+        let r = t.scan(ScanRange::rows("row0010", "row0020"));
+        assert_eq!(r.len(), 10);
+        assert_eq!(r[0].row, "row0010");
+        assert_eq!(r[9].row, "row0019");
+        let single = t.scan(ScanRange::single("row0033"));
+        assert_eq!(single.len(), 1);
+    }
+
+    #[test]
+    fn overwrite_keeps_single_cell() {
+        let t = small_table();
+        t.write_batch(vec![Triple::new("r", "c", "1")]).unwrap();
+        t.write_batch(vec![Triple::new("r", "c", "2")]).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get("r", "c"), Some("2".into()));
+    }
+
+    #[test]
+    fn offline_tablet_rejects_writes() {
+        let t = small_table();
+        t.write_batch(batch(10)).unwrap();
+        t.set_tablet_offline(0, true);
+        let err = t.write_batch(vec![Triple::new("row0000", "c", "v")]).unwrap_err();
+        assert!(matches!(err, StoreError::TabletOffline { .. }));
+        t.set_tablet_offline(0, false);
+        assert!(t.write_batch(vec![Triple::new("row0000", "c", "v")]).is_ok());
+    }
+
+    #[test]
+    fn split_points_reflect_tablets() {
+        let t = small_table();
+        t.write_batch(batch(100)).unwrap();
+        let sp = t.split_points();
+        assert_eq!(sp.len(), t.tablet_count() - 1);
+        assert!(sp.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn concurrent_writers() {
+        use std::sync::Arc;
+        let t = Arc::new(small_table());
+        let mut handles = Vec::new();
+        for w in 0..4 {
+            let t = Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    t.write_batch(vec![Triple::new(
+                        format!("w{w}-row{i:03}"),
+                        "c",
+                        "v",
+                    )])
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 200);
+        let all = t.scan(ScanRange::all());
+        assert!(all.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,231 @@
+//! A tablet: one sorted key range of a table (the Accumulo unit of
+//! distribution and recovery).
+
+use super::Triple;
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+/// Sorted `(row, col) → val` map covering the half-open row range
+/// `[lo, hi)` (`None` = unbounded on that side).
+#[derive(Debug, Default)]
+pub struct Tablet {
+    /// Inclusive lower row bound (`None` = -∞).
+    pub lo: Option<String>,
+    /// Exclusive upper row bound (`None` = +∞).
+    pub hi: Option<String>,
+    entries: BTreeMap<(Box<str>, Box<str>), Box<str>>,
+    weight: usize,
+    /// Failure-injection flag: an offline tablet rejects reads/writes.
+    pub offline: bool,
+}
+
+impl Tablet {
+    /// New tablet covering `[lo, hi)`.
+    pub fn new(lo: Option<String>, hi: Option<String>) -> Self {
+        Tablet { lo, hi, ..Default::default() }
+    }
+
+    /// Whether `row` falls inside this tablet's extent.
+    pub fn contains(&self, row: &str) -> bool {
+        let above_lo = self.lo.as_deref().is_none_or(|lo| row >= lo);
+        let below_hi = self.hi.as_deref().is_none_or(|hi| row < hi);
+        above_lo && below_hi
+    }
+
+    /// Insert (overwriting any existing value). Returns the previous
+    /// value if the cell existed.
+    pub fn put(&mut self, t: Triple) -> Option<Box<str>> {
+        debug_assert!(self.contains(&t.row), "triple routed to wrong tablet");
+        let val_len = t.val.len();
+        let full_weight = t.weight();
+        let prev = self
+            .entries
+            .insert((t.row.into_boxed_str(), t.col.into_boxed_str()), t.val.into_boxed_str());
+        match &prev {
+            // Replacement: keys already counted, only the value delta.
+            Some(old) => self.weight = self.weight - old.len() + val_len,
+            None => self.weight += full_weight,
+        }
+        prev
+    }
+
+    /// Point lookup.
+    pub fn get(&self, row: &str, col: &str) -> Option<&str> {
+        self.entries.get(&(row.into(), col.into())).map(|v| v.as_ref())
+    }
+
+    /// Delete a cell; returns whether it existed.
+    pub fn delete(&mut self, row: &str, col: &str) -> bool {
+        if let Some(v) = self.entries.remove(&(row.into(), col.into())) {
+            self.weight -= row.len() + col.len() + v.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Scan rows in `[lo, hi)` (clamped to the tablet extent), in sorted
+    /// order, appending to `out`.
+    pub fn scan_into(&self, lo: Option<&str>, hi: Option<&str>, out: &mut Vec<Triple>) {
+        let start: Bound<(Box<str>, Box<str>)> = match lo {
+            Some(lo) => Bound::Included((lo.into(), "".into())),
+            None => Bound::Unbounded,
+        };
+        for ((r, c), v) in self.entries.range((start, Bound::Unbounded)) {
+            if let Some(hi) = hi {
+                if r.as_ref() >= hi {
+                    break;
+                }
+            }
+            out.push(Triple::new(r.as_ref(), c.as_ref(), v.as_ref()));
+        }
+    }
+
+    /// Number of stored cells.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the tablet holds no cells.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Approximate stored bytes (the split trigger).
+    pub fn weight(&self) -> usize {
+        self.weight
+    }
+
+    /// The median row key — the split point used when this tablet grows
+    /// past the size threshold. `None` for tablets with < 2 distinct rows.
+    pub fn median_row(&self) -> Option<String> {
+        if self.entries.len() < 2 {
+            return None;
+        }
+        let mid = self.entries.len() / 2;
+        let (row, _) = self.entries.keys().nth(mid)?.clone();
+        // Splitting at the first row would create an empty left tablet.
+        let first = self.entries.keys().next().map(|(r, _)| r.clone())?;
+        if row == first {
+            return None;
+        }
+        Some(row.into())
+    }
+
+    /// Split at `row`: self keeps `[lo, row)`, the returned tablet holds
+    /// `[row, hi)`.
+    pub fn split_at(&mut self, row: &str) -> Tablet {
+        let right_entries: BTreeMap<(Box<str>, Box<str>), Box<str>> =
+            self.entries.split_off(&(row.into(), "".into()));
+        let right_weight: usize =
+            right_entries.iter().map(|((r, c), v)| r.len() + c.len() + v.len()).sum();
+        self.weight -= right_weight;
+        let right = Tablet {
+            lo: Some(row.to_string()),
+            hi: self.hi.take(),
+            entries: right_entries,
+            weight: right_weight,
+            offline: false,
+        };
+        self.hi = Some(row.to_string());
+        right
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: &str, c: &str, v: &str) -> Triple {
+        Triple::new(r, c, v)
+    }
+
+    #[test]
+    fn put_get_delete() {
+        let mut tab = Tablet::new(None, None);
+        assert!(tab.put(t("r1", "c1", "v1")).is_none());
+        assert_eq!(tab.get("r1", "c1"), Some("v1"));
+        // Overwrite returns previous.
+        assert_eq!(tab.put(t("r1", "c1", "v2")).as_deref(), Some("v1"));
+        assert_eq!(tab.get("r1", "c1"), Some("v2"));
+        assert!(tab.delete("r1", "c1"));
+        assert!(!tab.delete("r1", "c1"));
+        assert!(tab.is_empty());
+        assert_eq!(tab.weight(), 0);
+    }
+
+    #[test]
+    fn contains_respects_bounds() {
+        let tab = Tablet::new(Some("m".into()), Some("t".into()));
+        assert!(tab.contains("m"));
+        assert!(tab.contains("s"));
+        assert!(!tab.contains("t")); // exclusive hi
+        assert!(!tab.contains("a"));
+        let unbounded = Tablet::new(None, None);
+        assert!(unbounded.contains(""));
+        assert!(unbounded.contains("zzz"));
+    }
+
+    #[test]
+    fn scan_sorted_and_ranged() {
+        let mut tab = Tablet::new(None, None);
+        for (r, c) in [("b", "1"), ("a", "2"), ("c", "1"), ("a", "1")] {
+            tab.put(t(r, c, "v"));
+        }
+        let mut all = Vec::new();
+        tab.scan_into(None, None, &mut all);
+        let keys: Vec<(String, String)> =
+            all.iter().map(|t| (t.row.clone(), t.col.clone())).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("a".into(), "1".into()),
+                ("a".into(), "2".into()),
+                ("b".into(), "1".into()),
+                ("c".into(), "1".into())
+            ]
+        );
+        let mut ranged = Vec::new();
+        tab.scan_into(Some("b"), Some("c"), &mut ranged);
+        assert_eq!(ranged.len(), 1);
+        assert_eq!(ranged[0].row, "b");
+    }
+
+    #[test]
+    fn split_partitions_entries() {
+        let mut tab = Tablet::new(None, None);
+        for r in ["a", "b", "c", "d"] {
+            tab.put(t(r, "c", "v"));
+        }
+        let median = tab.median_row().unwrap();
+        assert_eq!(median, "c");
+        let right = tab.split_at(&median);
+        assert_eq!(tab.len(), 2);
+        assert_eq!(right.len(), 2);
+        assert_eq!(tab.hi.as_deref(), Some("c"));
+        assert_eq!(right.lo.as_deref(), Some("c"));
+        assert!(tab.contains("b") && !tab.contains("c"));
+        assert!(right.contains("c") && right.contains("zzz"));
+        // Weights are consistent with contents.
+        let mut sum = 0;
+        let mut out = Vec::new();
+        tab.scan_into(None, None, &mut out);
+        right.scan_into(None, None, &mut out);
+        for tr in &out {
+            sum += tr.weight();
+        }
+        assert_eq!(sum, tab.weight() + right.weight());
+    }
+
+    #[test]
+    fn median_row_degenerate() {
+        let mut tab = Tablet::new(None, None);
+        assert!(tab.median_row().is_none());
+        tab.put(t("a", "1", "v"));
+        assert!(tab.median_row().is_none());
+        // All cells in one row → no valid split point.
+        tab.put(t("a", "2", "v"));
+        tab.put(t("a", "3", "v"));
+        assert!(tab.median_row().is_none());
+    }
+}

@@ -1,0 +1,176 @@
+//! Buffered batch writer — the Accumulo `BatchWriter` pattern.
+//!
+//! Mutations accumulate in a local buffer and flush to the table when
+//! the buffer reaches [`WriterConfig::batch_bytes`] (or on `flush`/drop).
+//! Batching amortizes per-write locking and is the single biggest
+//! ingest-throughput lever (the `store_ingest` bench sweeps it).
+
+use super::{StoreError, Table, Triple};
+use std::sync::Arc;
+
+/// Batch-writer tuning.
+#[derive(Debug, Clone)]
+pub struct WriterConfig {
+    /// Flush when buffered triples reach this many bytes.
+    pub batch_bytes: usize,
+    /// Retries for transient (offline-tablet) failures.
+    pub max_retries: usize,
+    /// Backoff between retries.
+    pub retry_backoff: std::time::Duration,
+}
+
+impl Default for WriterConfig {
+    fn default() -> Self {
+        WriterConfig {
+            batch_bytes: 1 << 20,
+            max_retries: 3,
+            retry_backoff: std::time::Duration::from_millis(1),
+        }
+    }
+}
+
+/// Buffered writer bound to one table.
+pub struct BatchWriter {
+    table: Arc<Table>,
+    config: WriterConfig,
+    buffer: Vec<Triple>,
+    buffered_bytes: usize,
+    /// Total triples successfully written.
+    pub written: usize,
+    /// Flushes performed.
+    pub flushes: usize,
+    /// Transient failures retried.
+    pub retries: usize,
+}
+
+impl BatchWriter {
+    /// New writer for `table`.
+    pub fn new(table: Arc<Table>, config: WriterConfig) -> Self {
+        BatchWriter {
+            table,
+            config,
+            buffer: Vec::new(),
+            buffered_bytes: 0,
+            written: 0,
+            flushes: 0,
+            retries: 0,
+        }
+    }
+
+    /// Buffer one triple, flushing if the buffer is full.
+    pub fn put(&mut self, t: Triple) {
+        self.buffered_bytes += t.weight();
+        self.buffer.push(t);
+        if self.buffered_bytes >= self.config.batch_bytes {
+            self.flush();
+        }
+    }
+
+    /// Buffer many triples.
+    pub fn put_all(&mut self, ts: impl IntoIterator<Item = Triple>) {
+        for t in ts {
+            self.put(t);
+        }
+    }
+
+    /// Flush the buffer, retrying transient failures. Panics if the
+    /// table stays unavailable past `max_retries` (matching Accumulo's
+    /// `MutationsRejectedException` being fatal to the writer).
+    pub fn flush(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let mut batch = std::mem::take(&mut self.buffer);
+        self.buffered_bytes = 0;
+        let mut attempt = 0;
+        loop {
+            // `write_batch` consumes its argument, so clone while a retry
+            // is still possible (the final attempt moves the batch).
+            let this_try = if attempt < self.config.max_retries {
+                batch.clone()
+            } else {
+                std::mem::take(&mut batch)
+            };
+            match self.table.write_batch(this_try) {
+                Ok(n) => {
+                    self.written += n;
+                    self.flushes += 1;
+                    return;
+                }
+                Err(StoreError::TabletOffline { .. }) if attempt < self.config.max_retries => {
+                    attempt += 1;
+                    self.retries += 1;
+                    std::thread::sleep(self.config.retry_backoff);
+                    continue;
+                }
+                Err(e) => panic!("batch writer: unrecoverable store error: {e}"),
+            }
+        }
+    }
+}
+
+impl Drop for BatchWriter {
+    fn drop(&mut self) {
+        // Best-effort final flush (ignore failures during unwind).
+        if !std::thread::panicking() {
+            self.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{ScanRange, TableConfig};
+
+    fn table() -> Arc<Table> {
+        Arc::new(Table::new("t", TableConfig::default()))
+    }
+
+    #[test]
+    fn buffers_and_flushes_on_threshold() {
+        let t = table();
+        let mut w = BatchWriter::new(
+            Arc::clone(&t),
+            WriterConfig { batch_bytes: 30, ..Default::default() },
+        );
+        // Each triple is 11 bytes => flush on the 3rd put.
+        for i in 0..3 {
+            w.put(Triple::new(format!("row{i}"), "col", "val"));
+        }
+        assert_eq!(w.flushes, 1);
+        assert_eq!(w.written, 3);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn explicit_flush_and_drop() {
+        let t = table();
+        {
+            let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
+            w.put(Triple::new("a", "b", "c"));
+            w.flush();
+            assert_eq!(t.len(), 1);
+            w.put(Triple::new("d", "e", "f"));
+        } // drop flushes the second triple
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn put_all_bulk() {
+        let t = table();
+        let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
+        w.put_all((0..100).map(|i| Triple::new(format!("r{i}"), "c", "v")));
+        w.flush();
+        assert_eq!(t.len(), 100);
+        assert_eq!(t.scan(ScanRange::all()).len(), 100);
+    }
+
+    #[test]
+    fn empty_flush_is_noop() {
+        let t = table();
+        let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
+        w.flush();
+        assert_eq!(w.flushes, 0);
+    }
+}

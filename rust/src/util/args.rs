@@ -1,0 +1,152 @@
+//! A tiny command-line argument parser.
+//!
+//! `clap` is unavailable offline, so binaries and benches use this
+//! minimal `--flag [value]` parser: flags are `--name value` pairs or
+//! boolean `--name`, and anything else is a positional argument.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of argument strings.
+    ///
+    /// `--key value` binds `key` to `value` unless `value` itself starts
+    /// with `--`, in which case `key` is treated as a boolean flag
+    /// (bound to `"true"`). `--key=value` is also accepted.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    /// Raw string flag value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag: present (or `--name true`) means true.
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Integer flag with default; panics with a clear message on non-integers.
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Float flag with default.
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = parse(&["--n", "12", "--out", "results/x.csv"]);
+        assert_eq!(a.usize_or("n", 0), 12);
+        assert_eq!(a.str_or("out", ""), "results/x.csv");
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--n=7", "--ratio=0.5"]);
+        assert_eq!(a.usize_or("n", 0), 7);
+        assert!((a.f64_or("ratio", 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["--full", "--verbose", "--n", "3"]);
+        assert!(a.flag("full"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("absent"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.str_or("b", ""), "v");
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["cmd", "--k", "v", "file.txt"]);
+        assert_eq!(a.positional(), &["cmd".to_string(), "file.txt".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 42), 42);
+        assert_eq!(a.str_or("s", "d"), "d");
+        assert!((a.f64_or("f", 1.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        let a = parse(&["--n", "xyz"]);
+        a.usize_or("n", 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Human-readable formatting for benchmark / example output.
+
+/// Format a count with thousands separators: `1234567` → `"1,234,567"`.
+pub fn count(n: u64) -> String {
+    let s = n.to_string();
+    let bytes = s.as_bytes();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Format seconds adaptively: `0.0000123` → `"12.30µs"`, `1.5` → `"1.500s"`.
+pub fn seconds(s: f64) -> String {
+    if s < 0.0 || !s.is_finite() {
+        return format!("{s}");
+    }
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Format bytes adaptively with binary units.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+/// Format an operations-per-second rate.
+pub fn rate(ops: f64) -> String {
+    if ops >= 1e9 {
+        format!("{:.2}G/s", ops / 1e9)
+    } else if ops >= 1e6 {
+        format!("{:.2}M/s", ops / 1e6)
+    } else if ops >= 1e3 {
+        format!("{:.2}K/s", ops / 1e3)
+    } else {
+        format!("{ops:.1}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1,000");
+        assert_eq!(count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn seconds_units() {
+        assert_eq!(seconds(2.5), "2.500s");
+        assert_eq!(seconds(0.0025), "2.500ms");
+        assert_eq!(seconds(12.3e-6), "12.30µs");
+        assert_eq!(seconds(5e-9), "5.0ns");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(2048), "2.00KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00MiB");
+    }
+
+    #[test]
+    fn rate_units() {
+        assert_eq!(rate(500.0), "500.0/s");
+        assert_eq!(rate(2_500_000.0), "2.50M/s");
+        assert_eq!(rate(3.2e9), "3.20G/s");
+    }
+}

@@ -1,0 +1,25 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The build environment is fully offline with a minimal vendored crate
+//! set (no `rand`, `clap`, `rayon`, `criterion`, `proptest`), so this
+//! module provides in-repo equivalents:
+//!
+//! * [`prng`] — a seedable SplitMix64 PRNG (workloads, property tests).
+//! * [`timer`] — wall-clock timing helpers with robust repeat-averaging.
+//! * [`args`] — a tiny `--flag value` command-line parser.
+//! * [`pool`] — a scoped thread pool over `std::thread`.
+//! * [`prop`] — a miniature property-based testing harness with
+//!   random case generation and failure reporting.
+//! * [`human`] — human-readable formatting for counts, bytes, seconds.
+
+pub mod args;
+pub mod human;
+pub mod pool;
+pub mod prng;
+pub mod prop;
+pub mod timer;
+
+pub use args::Args;
+pub use pool::ThreadPool;
+pub use prng::SplitMix64;
+pub use timer::{time_op, Stopwatch, Timings};

@@ -1,0 +1,183 @@
+//! A small fixed-size thread pool over `std::thread`.
+//!
+//! Used by the ingest pipeline and the parallel store scanner. Jobs are
+//! `FnOnce` closures; `join` blocks until all submitted jobs complete.
+//! Backpressure between pipeline stages is *not* handled here — that is
+//! the bounded channels in [`crate::pipeline`] — the pool is purely a
+//! worker-thread reuse mechanism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
+    executed: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (`n >= 1`).
+    ///
+    /// The internal job queue is bounded at `4 * n` so a producer that
+    /// outruns the workers blocks in [`ThreadPool::execute`] rather than
+    /// growing memory without bound.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = sync_channel::<Job>(4 * n);
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let executed = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                let executed = Arc::clone(&executed);
+                std::thread::Builder::new()
+                    .name(format!("d4m-pool-{i}"))
+                    .spawn(move || worker_loop(&rx, &in_flight, &executed))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight, executed }
+    }
+
+    /// Pool sized to available parallelism (at least 2).
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.max(2))
+    }
+
+    /// Submit a job; blocks if the queue is full.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.in_flight;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("pool workers exited early");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let (lock, cvar) = &*self.in_flight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+    }
+
+    /// Total number of jobs executed so far.
+    pub fn jobs_executed(&self) -> usize {
+        self.executed.load(Ordering::Relaxed)
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<Job>>,
+    in_flight: &(Mutex<usize>, Condvar),
+    executed: &AtomicUsize,
+) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(job) => {
+                job();
+                executed.fetch_add(1, Ordering::Relaxed);
+                let (lock, cvar) = in_flight;
+                let mut n = lock.lock().unwrap();
+                *n -= 1;
+                if *n == 0 {
+                    cvar.notify_all();
+                }
+            }
+            Err(_) => return, // channel closed: shut down
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join();
+        drop(self.tx.take()); // close channel so workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 1..=100u64 {
+            let sum = Arc::clone(&sum);
+            pool.execute(move || {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(sum.load(Ordering::Relaxed), 5050);
+        assert_eq!(pool.jobs_executed(), 100);
+    }
+
+    #[test]
+    fn join_with_no_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+    }
+
+    #[test]
+    fn join_can_be_called_repeatedly() {
+        let pool = ThreadPool::new(2);
+        for round in 0..3 {
+            let counter = Arc::new(AtomicU64::new(0));
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+            assert_eq!(counter.load(Ordering::Relaxed), 10, "round {round}");
+        }
+    }
+
+    #[test]
+    fn drop_waits_for_completion() {
+        let done = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..8 {
+                let d = Arc::clone(&done);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    d.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop
+        assert_eq!(done.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_workers_panics() {
+        let _ = ThreadPool::new(0);
+    }
+}

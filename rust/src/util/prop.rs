@@ -1,0 +1,150 @@
+//! Miniature property-based testing harness.
+//!
+//! `proptest` is unavailable offline; this provides the subset the test
+//! suite needs: run a property over many randomly generated cases with a
+//! fixed seed (reproducible), report the first failing case's seed and
+//! index so it can be replayed, and provide generators for the key/value
+//! shapes D4M cares about (triple lists, sorted unique key vectors, ...).
+//!
+//! Usage:
+//! ```
+//! use d4m::util::prop::{check, Gen};
+//! check("addition commutes", 200, |g| {
+//!     let a = g.rng().range_i64(-100, 100);
+//!     let b = g.rng().range_i64(-100, 100);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::SplitMix64;
+
+/// Per-case generation context handed to properties.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Case index (0-based) within the `check` run.
+    pub case: usize,
+}
+
+impl Gen {
+    /// The case's deterministic PRNG.
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+
+    /// A vector of length in `[0, max_len]` filled by `f`.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut SplitMix64) -> T) -> Vec<T> {
+        let len = self.rng.below_usize(max_len + 1);
+        (0..len).map(|_| f(&mut self.rng)).collect()
+    }
+
+    /// Random "D4M-ish" key string: small integer rendered as a string.
+    pub fn key_string(&mut self, universe: u64) -> String {
+        self.rng.below(universe.max(1)).to_string()
+    }
+
+    /// Sorted, deduplicated vector of random key strings.
+    pub fn sorted_unique_keys(&mut self, max_len: usize, universe: u64) -> Vec<String> {
+        let mut v = self.vec_of(max_len, |r| r.below(universe.max(1)).to_string());
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Random triple list `(row, col, val)` over a small key universe, so
+    /// collisions (duplicate (row, col)) actually occur.
+    pub fn triples(&mut self, max_len: usize, universe: u64) -> (Vec<String>, Vec<String>, Vec<f64>) {
+        let len = self.rng.below_usize(max_len + 1);
+        let mut rows = Vec::with_capacity(len);
+        let mut cols = Vec::with_capacity(len);
+        let mut vals = Vec::with_capacity(len);
+        for _ in 0..len {
+            rows.push(self.rng.below(universe.max(1)).to_string());
+            cols.push(self.rng.below(universe.max(1)).to_string());
+            vals.push(self.rng.range_i64(1, 100) as f64);
+        }
+        (rows, cols, vals)
+    }
+}
+
+/// Default seed for property runs. Override with `D4M_PROP_SEED` env var
+/// to replay a reported failure.
+fn base_seed() -> u64 {
+    std::env::var("D4M_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD4A7_2022)
+}
+
+/// Run `prop` over `cases` generated cases. Panics (with the case seed)
+/// on the first failure; the property signals failure by panicking.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let seed = base_seed();
+    let mut root = SplitMix64::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen { rng: SplitMix64::new(case_seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (replay with D4M_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("tautology", 50, |g| {
+            let x = g.rng().next_u64();
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_reports() {
+        check("always-fails", 10, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_run() {
+        let mut first: Vec<Vec<String>> = Vec::new();
+        check("collect", 5, |g| {
+            first.push(g.sorted_unique_keys(10, 8));
+        });
+        let mut second: Vec<Vec<String>> = Vec::new();
+        check("collect", 5, |g| {
+            second.push(g.sorted_unique_keys(10, 8));
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn sorted_unique_keys_invariants() {
+        check("sorted-unique", 100, |g| {
+            let keys = g.sorted_unique_keys(32, 16);
+            for w in keys.windows(2) {
+                assert!(w[0] < w[1], "not strictly sorted: {keys:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn triples_have_matching_lengths() {
+        check("triple-lengths", 50, |g| {
+            let (r, c, v) = g.triples(64, 10);
+            assert_eq!(r.len(), c.len());
+            assert_eq!(c.len(), v.len());
+        });
+    }
+}

@@ -1,0 +1,161 @@
+//! Timing helpers for the benchmark harness.
+//!
+//! The paper (§III.A) reports running time in seconds averaged over 10
+//! runs; [`time_op`] mirrors that protocol (configurable warmup + repeat
+//! count) and additionally records min/median so outliers are visible.
+
+use std::time::{Duration, Instant};
+
+/// Statistics from a repeated timing run.
+#[derive(Debug, Clone)]
+pub struct Timings {
+    /// Per-repeat durations, in order of execution.
+    pub samples: Vec<Duration>,
+}
+
+impl Timings {
+    /// Arithmetic mean of the samples, in seconds.
+    pub fn mean_s(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(Duration::as_secs_f64).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Minimum sample, in seconds.
+    pub fn min_s(&self) -> f64 {
+        self.samples
+            .iter()
+            .map(Duration::as_secs_f64)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Median sample, in seconds.
+    pub fn median_s(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = self.samples.iter().map(Duration::as_secs_f64).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+
+    /// Sample standard deviation, in seconds (0 for < 2 samples).
+    pub fn stddev_s(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean_s();
+        let var = self
+            .samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - m;
+                x * x
+            })
+            .sum::<f64>()
+            / (n - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Time `op` with `warmup` untimed runs followed by `repeats` timed runs.
+///
+/// `op` receives the repeat index; its return value is passed to a sink so
+/// the optimizer cannot elide the work.
+pub fn time_op<T>(warmup: usize, repeats: usize, mut op: impl FnMut(usize) -> T) -> Timings {
+    for i in 0..warmup {
+        black_box(op(i));
+    }
+    let mut samples = Vec::with_capacity(repeats);
+    for i in 0..repeats {
+        let t0 = Instant::now();
+        black_box(op(i));
+        samples.push(t0.elapsed());
+    }
+    Timings { samples }
+}
+
+/// Opaque value sink preventing dead-code elimination of benchmark bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A simple running stopwatch for phase timing inside examples.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Reset and return elapsed seconds (lap time).
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_op_runs_expected_counts() {
+        let mut calls = 0usize;
+        let t = time_op(2, 5, |_| {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(t.samples.len(), 5);
+    }
+
+    #[test]
+    fn stats_on_known_samples() {
+        let t = Timings {
+            samples: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30),
+            ],
+        };
+        assert!((t.mean_s() - 0.020).abs() < 1e-9);
+        assert!((t.median_s() - 0.020).abs() < 1e-9);
+        assert!((t.min_s() - 0.010).abs() < 1e-9);
+        assert!(t.stddev_s() > 0.0);
+    }
+
+    #[test]
+    fn empty_timings_are_zero() {
+        let t = Timings { samples: vec![] };
+        assert_eq!(t.mean_s(), 0.0);
+        assert_eq!(t.median_s(), 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let lap = sw.lap_s();
+        assert!(lap >= 0.004);
+        assert!(sw.elapsed_s() < lap);
+    }
+}

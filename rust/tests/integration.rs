@@ -1,0 +1,150 @@
+//! Cross-module integration tests: workload → engines → store →
+//! pipeline → graphulo → runtime, composed the way the examples and
+//! benches compose them.
+
+use d4m::assoc::{Aggregator, Assoc, ValsInput};
+use d4m::baselines::{btree::BTreeEngine, hashmap::HashMapEngine, D4mEngine, Engine};
+use d4m::bench::Workload;
+use d4m::graphulo;
+use d4m::pipeline::{IngestPipeline, PipelineConfig, ShardPolicy};
+use d4m::semiring::PlusTimes;
+use d4m::store::{ScanRange, TableConfig, TableStore, Triple};
+use std::sync::Arc;
+
+/// The three engines agree on every figure op at a real bench scale
+/// (n=8: 2048 triples, genuine collisions), not just the prop-test
+/// micro-scale.
+#[test]
+fn engines_agree_at_bench_scale() {
+    let w = Workload::generate(8, 0xFEED);
+    let d4m = D4mEngine;
+    let hash = HashMapEngine;
+    let btree = BTreeEngine;
+    let ones = w.ones();
+
+    let da = d4m.construct_numeric(&w.rows, &w.cols, &ones);
+    let ha = hash.construct_numeric(&w.rows, &w.cols, &ones);
+    let ba = btree.construct_numeric(&w.rows, &w.cols, &ones);
+    let db = d4m.construct_numeric(&w.rows2, &w.cols2, &ones);
+    let hb = hash.construct_numeric(&w.rows2, &w.cols2, &ones);
+    let bb = btree.construct_numeric(&w.rows2, &w.cols2, &ones);
+    assert_eq!(d4m.nnz(&da), hash.nnz(&ha));
+    assert_eq!(d4m.nnz(&da), btree.nnz(&ba));
+
+    let (dc, hc, bc) = (d4m.add(&da, &db), hash.add(&ha, &hb), btree.add(&ba, &bb));
+    assert_eq!(d4m.nnz(&dc), hash.nnz(&hc));
+    assert_eq!(d4m.checksum(&dc), btree.checksum(&bc));
+
+    let (dm, hm, bm) = (d4m.matmul(&da, &db), hash.matmul(&ha, &hb), btree.matmul(&ba, &bb));
+    assert_eq!(d4m.nnz(&dm), hash.nnz(&hm));
+    assert_eq!(d4m.checksum(&dm), hash.checksum(&hm));
+    assert_eq!(d4m.checksum(&dm), btree.checksum(&bm));
+
+    let (de, he, be) =
+        (d4m.elemmul(&da, &db), hash.elemmul(&ha, &hb), btree.elemmul(&ba, &bb));
+    assert_eq!(d4m.nnz(&de), hash.nnz(&he));
+    assert_eq!(d4m.checksum(&de), btree.checksum(&be));
+}
+
+/// Full loop: Assoc → pipeline ingest (both orientations) → tablet
+/// splits → scan back → identical Assoc; Graphulo degree/TableMult
+/// agree with the in-core algebra.
+#[test]
+fn ingest_scan_roundtrip_with_splits() {
+    let w = Workload::generate(9, 0xBEEF);
+    let a = Assoc::from_triples(&w.rows, &w.cols, ValsInput::NumScalar(1.0));
+
+    let store = TableStore::new(TableConfig { split_threshold: 16 << 10, write_latency_us: 0 });
+    let hits = store.create_table("t");
+    let mut p = IngestPipeline::start(
+        Arc::clone(&hits),
+        PipelineConfig { workers: 3, policy: ShardPolicy::Hash, ..Default::default() },
+    );
+    for (r, c, v) in a.iter() {
+        p.submit(Triple::new(r.to_string(), c.to_string(), v.to_string()));
+    }
+    let report = p.finish();
+    assert_eq!(report.written, a.nnz());
+    assert!(hits.tablet_count() > 1, "expected tablet splits at this scale");
+
+    let back = hits.scan_to_assoc(ScanRange::all());
+    assert_eq!(back, a, "pipeline+store roundtrip must be lossless");
+
+    // Graphulo degree table == algebra count.
+    let deg = store.create_table("deg");
+    let nodes = graphulo::degree_table(&hits, &deg);
+    assert_eq!(nodes, a.row_keys().len());
+    let deg_assoc = store.read_assoc("deg").unwrap();
+    let count = a.count(1);
+    for (r, _, v) in deg_assoc.iter() {
+        assert_eq!(count.get_num(r.clone(), 1i64), v.as_num(), "degree mismatch at {r}");
+    }
+
+    // Server-side TableMult == in-core sqin.
+    let out = store.create_table("ata");
+    graphulo::table_mult(&hits, &hits, &out, &PlusTimes);
+    assert_eq!(store.read_assoc("ata").unwrap(), a.sqin());
+}
+
+/// TSV files written by the assoc layer ingest cleanly through the
+/// store boundary and re-parse numerically.
+#[test]
+fn tsv_store_interop() {
+    let a = Assoc::from_triples(&["r1", "r2", "r3"], &["c1", "c2", "c1"], vec![1.0, 2.5, 3.0]);
+    let dir = std::env::temp_dir().join("d4m-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("interop.tsv");
+    d4m::assoc::write_tsv(&a, &path).unwrap();
+    let b = d4m::assoc::read_tsv(&path, Aggregator::Min).unwrap();
+    assert_eq!(a, b);
+
+    let store = TableStore::with_defaults();
+    store.ingest_assoc("t", &b);
+    assert_eq!(store.read_assoc("t").unwrap(), a);
+    assert_eq!(store.read_assoc("t_T").unwrap(), a.transpose());
+}
+
+/// The PJRT acceleration path agrees with the host algebra on bench
+/// workloads (skips when artifacts are missing).
+#[test]
+fn accel_path_agrees_on_workload() {
+    let Ok(rt) = d4m::runtime::Runtime::load_default() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let w = Workload::generate(7, 0xACCE1);
+    let a = Assoc::from_triples(&w.rows, &w.cols, ValsInput::Num(w.ones()));
+    let b = Assoc::from_triples(&w.rows2, &w.cols2, ValsInput::Num(w.ones()));
+    let want = a.matmul(&b);
+    let (got, stats) = d4m::runtime::accel_matmul(&rt, &a, &b, &PlusTimes).unwrap();
+    assert_eq!(got, want);
+    assert!(stats.kernel_calls > 0);
+}
+
+/// String algebra composes across the whole stack: string construct →
+/// store roundtrip → mask → combine.
+#[test]
+fn string_pipeline_end_to_end() {
+    let w = Workload::generate(6, 0x57);
+    let a = Assoc::try_new(
+        w.rows.iter().map(|s| s.as_str().into()).collect(),
+        w.cols.iter().map(|s| s.as_str().into()).collect(),
+        ValsInput::Str(w.str_vals.clone()),
+        Aggregator::Min,
+    )
+    .unwrap();
+    assert!(a.is_string());
+
+    let store = TableStore::with_defaults();
+    store.ingest_assoc("s", &a);
+    let back = store.read_assoc("s").unwrap();
+    assert_eq!(back, a);
+
+    // Mask by the numeric logical of itself: identity.
+    let masked = back.elemmul(&a.logical());
+    assert_eq!(masked, a);
+
+    // combine with itself under Min: also identity.
+    let combined = a.combine_strings(&a, Aggregator::Min);
+    assert_eq!(combined, a);
+}

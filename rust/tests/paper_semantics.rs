@@ -1,0 +1,243 @@
+//! Executable checks of the specific behaviors the paper's text
+//! promises — each test cites the section it pins down.
+
+use d4m::assoc::{Aggregator, Assoc, Key, Selector, Val, ValsInput, Values};
+use d4m::semiring::{builtin, check_semiring_laws};
+
+fn music() -> Assoc {
+    Assoc::from_triples(
+        &["0294.mp3", "0294.mp3", "0294.mp3", "1829.mp3", "1829.mp3", "1829.mp3", "7802.mp3",
+            "7802.mp3", "7802.mp3"],
+        &["artist", "duration", "genre", "artist", "duration", "genre", "artist", "duration",
+            "genre"],
+        &["Pink Floyd", "6:53", "rock", "Samuel Barber", "8:01", "classical", "Taylor Swift",
+            "10:12", "pop"][..],
+    )
+}
+
+/// §II.A / Fig 2: the four-attribute storage model, including the exact
+/// sorted value pool and the 1-based index correspondence
+/// `A[row[i], col[j]] = val[k] ⇔ adj[i,j] = k + 1`.
+#[test]
+fn fig2_storage_model_exact() {
+    let a = music();
+    let pool: Vec<&str> = a.values().strings().unwrap().iter().map(|s| s.as_ref()).collect();
+    assert_eq!(
+        pool,
+        vec!["10:12", "6:53", "8:01", "Pink Floyd", "Samuel Barber", "Taylor Swift",
+            "classical", "pop", "rock"]
+    );
+    // Fig 2's adj (1-based): [[4, 2, 9], [5, 3, 7], [6, 1, 8]].
+    let expect = [[4.0, 2.0, 9.0], [5.0, 3.0, 7.0], [6.0, 1.0, 8.0]];
+    for (i, row) in expect.iter().enumerate() {
+        for (j, &k) in row.iter().enumerate() {
+            assert_eq!(a.adj().get(i, j), Some(k), "adj[{i},{j}]");
+        }
+    }
+}
+
+/// §I.B: "zeroes are unstored" — for numbers, strings, and after
+/// aggregation cancellation; keys of dropped entries vanish too.
+#[test]
+fn zeros_are_unstored_everywhere() {
+    let num = Assoc::from_triples(&["a", "b"], &["x", "y"], vec![0.0, 1.0]);
+    assert_eq!(num.shape(), (1, 1));
+    let s = Assoc::from_triples(&["a", "b"], &["x", "y"], &["", "v"][..]);
+    assert_eq!(s.shape(), (1, 1));
+    let sum = Assoc::from_triples_agg(&["a", "a"], &["x", "x"], vec![5.0, -5.0], Aggregator::Sum);
+    assert!(sum.is_empty());
+}
+
+/// §II.A: the empty associative array is stored as if numeric.
+#[test]
+fn empty_array_is_numeric() {
+    assert!(Assoc::empty().is_numeric());
+    // Ops producing empty results normalize to the canonical empty.
+    let a = Assoc::from_triples(&["r"], &["c"], &["x"][..]);
+    let b = Assoc::from_triples(&["q"], &["d"], &["y"][..]);
+    let prod = a.elemmul(&b); // disjoint keys
+    assert!(prod.is_empty() && prod.is_numeric());
+    assert_eq!(prod, Assoc::empty());
+}
+
+/// §II.B item 1: string slices are inclusive on the right, unlike
+/// Python ranges.
+#[test]
+fn string_slices_right_inclusive() {
+    let a = music();
+    let sel = a.select(&Selector::range("0294.mp3", "1829.mp3"), &Selector::All);
+    assert!(sel.find_row(&Key::str("1829.mp3")).is_some(), "right endpoint included");
+    // Position ranges stay right-EXclusive (Python semantics).
+    let pos = a.select(&Selector::PosRange(0, 2), &Selector::All);
+    assert_eq!(pos.row_keys().len(), 2);
+}
+
+/// §II.B item 2: integers in extraction are treated as indices of
+/// `A.row`/`A.col`, not as key values.
+#[test]
+fn integers_are_positions_not_keys() {
+    // Array whose keys ARE numbers 5, 6, 7 — positions 0, 1, 2.
+    let a = Assoc::from_triples(&[5i64, 6, 7], &[1i64, 1, 1], 1.0);
+    let by_pos = a.select(&Selector::Positions(vec![0]), &Selector::All);
+    assert_eq!(by_pos.row_keys(), &[Key::num(5.0)]); // index 0 → key 5, not key 0
+    let by_key = a.select(&Selector::keys(&[5i64]), &Selector::All);
+    assert_eq!(by_pos, by_key);
+}
+
+/// §II.A: the aggregate parameter defaults to min and handles
+/// collisions; the paper's examples use an associative, commutative op.
+#[test]
+fn constructor_default_min() {
+    let a = Assoc::from_triples(&["r", "r"], &["c", "c"], vec![9.0, 4.0]);
+    assert_eq!(a.get_num("r", "c"), Some(4.0));
+    let s = Assoc::from_triples(&["r", "r"], &["c", "c"], &["zz", "aa"][..]);
+    assert_eq!(s.get_str("r", "c"), Some("aa"));
+}
+
+/// §II.C.1: string addition concatenates colliding values; "any
+/// collisions ... occur between a value from A and a value from B and
+/// occur at most once for each pair of row and column keys."
+#[test]
+fn string_addition_concatenates() {
+    let a = Assoc::from_triples(&["r"], &["c"], &["left"][..]);
+    let b = Assoc::from_triples(&["r"], &["c"], &["right"][..]);
+    assert_eq!((&a + &b).get_str("r", "c"), Some("leftright"));
+}
+
+/// §II.C.2: the mixed-type element-wise product asymmetry — string ×
+/// numeric masks the string array, numeric × string reduces the string
+/// operand via `.logical()` ("differs in its result").
+#[test]
+fn mixed_elemmul_asymmetry() {
+    let s = music();
+    let m = Assoc::from_triples(&["0294.mp3"], &["genre"], vec![7.0]);
+    let masked = s.elemmul(&m); // string × numeric
+    assert!(masked.is_string());
+    assert_eq!(masked.get_str("0294.mp3", "genre"), Some("rock"));
+    let reduced = m.elemmul(&s); // numeric × string
+    assert!(reduced.is_numeric());
+    assert_eq!(reduced.get_num("0294.mp3", "genre"), Some(7.0)); // 7 × logical(1)
+}
+
+/// §II.C.3: "associative array multiplication is currently defined only
+/// for numerical associative arrays, so string associative arrays are
+/// converted via the .logical() method prior."
+#[test]
+fn matmul_logicalizes_strings() {
+    let s = music();
+    let prod = s.transpose().matmul(&s);
+    assert!(prod.is_numeric());
+    assert_eq!(prod.get_num("artist", "artist"), Some(3.0));
+}
+
+/// §II.C.3: the product contracts over `A.col ∩ B.row` — keys outside
+/// the intersection contribute nothing.
+#[test]
+fn matmul_contracts_intersection_only() {
+    let a = Assoc::from_triples(&["r", "r"], &["shared", "only-a"], vec![2.0, 99.0]);
+    let b = Assoc::from_triples(&["shared", "only-b"], &["c", "c"], vec![5.0, 99.0]);
+    let c = a.matmul(&b);
+    assert_eq!(c.get_num("r", "c"), Some(10.0));
+    assert_eq!(c.nnz(), 1);
+}
+
+/// §II.C.1: condense removes empty rows/columns after addition (the
+/// `good_rows`/`good_cols` indptr trick) — observable as key-space
+/// shrinkage after cancellation.
+#[test]
+fn condense_after_cancellation() {
+    let a = Assoc::from_triples(&["r1", "r2"], &["c1", "c2"], vec![3.0, 1.0]);
+    let b = Assoc::from_triples(&["r1"], &["c1"], vec![-3.0]);
+    let c = &a + &b;
+    assert_eq!(c.shape(), (1, 1));
+    assert_eq!(c.row_keys(), &[Key::str("r2")]);
+    assert_eq!(c.col_keys(), &[Key::str("c2")]);
+}
+
+/// §I.A: every built-in value algebra satisfies the seven semiring
+/// axioms the paper lists.
+#[test]
+fn paper_semiring_axioms() {
+    for s in builtin() {
+        check_semiring_laws(s.as_ref(), &[-3.0, -1.0, 0.0, 1.0, 2.0, 7.0]);
+    }
+}
+
+/// §I.A: the string algebra (⊕ = min w.r.t. dictionary order, ⊗ =
+/// concatenation, 0 = ε) drives element-wise ops on string arrays:
+/// A*B under the string algebra's ⊕... the D4M implementation uses min
+/// for `*` collisions; check min/concat behaviors explicitly.
+#[test]
+fn string_algebra_ops() {
+    let a = Assoc::from_triples(&["r"], &["c"], &["beta"][..]);
+    let b = Assoc::from_triples(&["r"], &["c"], &["alpha"][..]);
+    assert_eq!(a.elemmul(&b).get_str("r", "c"), Some("alpha")); // min
+    assert_eq!((&a + &b).get_str("r", "c"), Some("betaalpha")); // concat (A then B)
+}
+
+/// §II.A constructor form 2: `Assoc(row, col, val, adj=sp_mat)` — the
+/// attribute-level constructor reproduces the same array.
+#[test]
+fn adj_constructor_form() {
+    let a = music();
+    let rebuilt = Assoc::from_parts(
+        a.row_keys().to_vec(),
+        a.col_keys().to_vec(),
+        a.values().clone(),
+        a.adj().clone(),
+    )
+    .unwrap();
+    assert_eq!(rebuilt, a);
+    // Numeric flag variant.
+    let n = Assoc::from_triples(&["x"], &["y"], vec![2.0]);
+    let rebuilt = Assoc::from_parts(
+        n.row_keys().to_vec(),
+        n.col_keys().to_vec(),
+        Values::Numeric,
+        n.adj().clone(),
+    )
+    .unwrap();
+    assert_eq!(rebuilt, n);
+}
+
+/// §I.B: D4M value sets are entirely numeric or entirely string; the
+/// constructor enforces this by construction (ValsInput is one or the
+/// other), and operations yield consistently-typed results.
+#[test]
+fn value_type_consistency() {
+    let s = music();
+    assert!(s.is_string());
+    assert!(s.logical().is_numeric());
+    assert!(s.sqin().is_numeric());
+    assert!(s.count(0).is_numeric());
+    let masked = s.elemmul(&s.logical());
+    assert!(masked.is_string());
+    for (_, _, v) in masked.iter() {
+        assert!(matches!(v, Val::Str(_)));
+    }
+}
+
+/// The paper's Figure-1 tabular rendering round-trips through the
+/// display path (headers + row keys + values all present).
+#[test]
+fn figure1_rendering() {
+    let txt = music().to_string();
+    for needle in ["artist", "duration", "genre", "0294.mp3", "Pink Floyd", "classical"] {
+        assert!(txt.contains(needle), "missing {needle} in rendering");
+    }
+}
+
+/// Broadcasting in the constructor: the paper's
+/// `Assoc(rows, cols, 1)` scalar-value form.
+#[test]
+fn scalar_value_broadcast() {
+    let a = Assoc::try_new(
+        vec!["a".into(), "b".into()],
+        vec!["x".into(), "y".into()],
+        ValsInput::NumScalar(1.0),
+        Aggregator::Min,
+    )
+    .unwrap();
+    assert_eq!(a.nnz(), 2);
+    assert!(a.iter().all(|(_, _, v)| v.as_num() == Some(1.0)));
+}

@@ -1,0 +1,46 @@
+#!/usr/bin/env python3
+"""Render results/*.csv into the markdown tables EXPERIMENTS.md embeds.
+
+Usage: python scripts/summarize_results.py [results_dir]
+Prints one pivoted table (n x engine, mean seconds) per figure CSV.
+"""
+
+import csv
+import os
+import sys
+
+
+def fmt(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}µs"
+
+
+def pivot(path: str) -> str:
+    rows = list(csv.DictReader(open(path)))
+    if not rows:
+        return f"(empty: {path})"
+    engines = list(dict.fromkeys(r["engine"] for r in rows))
+    ns = sorted({int(r["n"]) for r in rows})
+    by = {(int(r["n"]), r["engine"]): float(r["mean_s"]) for r in rows}
+    out = ["| n | " + " | ".join(engines) + " |",
+           "|---|" + "|".join("---" for _ in engines) + "|"]
+    for n in ns:
+        cells = [fmt(by[(n, e)]) if (n, e) in by else "—" for e in engines]
+        out.append(f"| {n} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "results"
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".csv"):
+            print(f"### {f}\n")
+            print(pivot(os.path.join(d, f)))
+            print()
+
+
+if __name__ == "__main__":
+    main()
