@@ -7,20 +7,30 @@
 //! * **CSR-resident vs COO-resident adj** — what D4M.py pays per `@`
 //!   for keeping COO and converting inside each operation (the
 //!   deviation documented in `assoc`'s module docs).
+//! * **thread scaling** — fig6 matmul and fig3 constructor swept over
+//!   worker counts (`threads = 1` is the exact serial code path),
+//!   ending with a serial-vs-parallel speedup line so BENCH captures
+//!   the scaling trajectory over time.
 //!
-//! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]`
+//! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
+//! [--threads-n N]` (`--threads-n` sets the scale of the thread sweep;
+//! default 10, the acceptance workload).
 
-use d4m::assoc::{Assoc, ValsInput};
+use d4m::assoc::{keys_from, Aggregator, Assoc, ValsInput};
 use d4m::bench::{FigureHarness, Workload};
 use d4m::semiring::PlusTimes;
 use d4m::sparse::{spgemm, CooMatrix};
-use d4m::util::{time_op, Args};
+use d4m::util::{time_op, Args, Parallelism};
 
 fn main() {
     let args = Args::from_env();
     let n = args.usize_or("n", 12);
     let repeats = args.usize_or("repeats", 5);
     let out_dir = args.str_or("out", "results");
+    // Non-sweep sections measure the serial baselines unless --threads
+    // overrides; the thread-scaling section below passes Parallelism
+    // explicitly and is unaffected.
+    Parallelism::with_threads(args.usize_or("threads", 1)).set_default();
     let w = Workload::generate(n, 77);
     let ones = w.ones();
     let a = Assoc::from_triples(&w.rows, &w.cols, ValsInput::Num(ones.clone()));
@@ -101,6 +111,66 @@ fn main() {
         c.to_coo() // and back to the resident format
     });
     h.record(n, "matmul-coo-convert", t, 0);
+
+    // --- thread scaling: fig6 matmul + fig3 constructor -----------------
+    // `threads = 1` runs the exact serial code path; other counts are
+    // bit-identical (enforced by tests/parallel_equivalence.rs), so any
+    // delta here is pure scheduling cost / speedup.
+    let tn = args.usize_or("threads-n", 10);
+    let wt = Workload::generate(tn, 77);
+    let tones = vec![1.0; wt.rows.len()];
+    let ta = Assoc::from_triples(&wt.rows, &wt.cols, ValsInput::Num(tones.clone()));
+    let tb = Assoc::from_triples(&wt.rows2, &wt.cols2, ValsInput::Num(tones));
+    let sweep = [1usize, 2, 4, 8];
+    let mut matmul_means = Vec::with_capacity(sweep.len());
+    let mut ctor_means = Vec::with_capacity(sweep.len());
+    for &threads in &sweep {
+        let par = Parallelism::with_threads(threads);
+        let mut nnz = 0usize;
+        let t = time_op(1, repeats, |_| {
+            let c = ta.matmul_par(&tb, par);
+            nnz = c.nnz();
+            c
+        });
+        matmul_means.push(t.mean_s());
+        h.record(tn, &format!("matmul-t{threads}"), t, nnz);
+
+        let mut cnnz = 0usize;
+        let t = time_op(1, repeats, |_| {
+            let c = Assoc::try_new_par(
+                keys_from(&wt.rows),
+                keys_from(&wt.cols),
+                ValsInput::Num(wt.num_vals.clone()),
+                Aggregator::Min,
+                par,
+            )
+            .unwrap();
+            cnnz = c.nnz();
+            c
+        });
+        ctor_means.push(t.mean_s());
+        h.record(tn, &format!("ctor-t{threads}"), t, cnnz);
+    }
+    // Serial-vs-parallel speedup line (parsed by the BENCH capture).
+    let speedup = |means: &[f64], i: usize| {
+        if means[i] > 0.0 {
+            means[0] / means[i]
+        } else {
+            0.0
+        }
+    };
+    println!(
+        "[ablations] threads-sweep n={tn} matmul serial={:.6}s t2={:.2}x t4={:.2}x t8={:.2}x \
+         | ctor serial={:.6}s t2={:.2}x t4={:.2}x t8={:.2}x",
+        matmul_means[0],
+        speedup(&matmul_means, 1),
+        speedup(&matmul_means, 2),
+        speedup(&matmul_means, 3),
+        ctor_means[0],
+        speedup(&ctor_means, 1),
+        speedup(&ctor_means, 2),
+        speedup(&ctor_means, 3),
+    );
 
     h.write_csv(&out_dir).expect("write CSV");
 }

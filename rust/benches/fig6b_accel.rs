@@ -26,6 +26,10 @@ fn main() {
     let args = Args::from_env();
     let repeats = args.usize_or("repeats", 3);
     let out_dir = args.str_or("out", "results");
+    // Pin the host-SpGEMM baseline to the serial code path (like every
+    // figure bench) so the host-vs-PJRT crossover stays comparable;
+    // --threads N opts into parallel measurement.
+    d4m::util::Parallelism::with_threads(args.usize_or("threads", 1)).set_default();
     let rt = match Runtime::load_default() {
         Ok(rt) => rt,
         Err(e) => {

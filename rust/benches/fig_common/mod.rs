@@ -32,6 +32,7 @@ pub enum BinaryOp {
 
 /// Run one figure: sweep `params.ns()`, measure every engine, write CSV.
 pub fn run_figure(id: &str, title: &str, kind: OpKind, params: &BenchParams) {
+    params.apply_parallelism(); // honor --threads for the d4m engine
     let mut harness = FigureHarness::new(id, title);
     for n in params.ns() {
         let w = Workload::generate(n, 0xD4A7_2022 + n as u64);

@@ -26,10 +26,13 @@ pub enum Key {
 
 impl Key {
     /// Build a numeric key; panics on NaN (infinite keys are allowed —
-    /// they are orderable).
+    /// they are orderable). `-0.0` is normalized to `0.0`: the two
+    /// compare equal as keys, so admitting both representations would
+    /// let bit-level digests (see `sorted::keysort`) disagree with
+    /// `Key::cmp` about uniqueness.
     pub fn num(v: f64) -> Key {
         assert!(!v.is_nan(), "NaN cannot be an associative-array key");
-        Key::Num(v)
+        Key::Num(if v == 0.0 { 0.0 } else { v })
     }
 
     /// Build a string key.

@@ -39,6 +39,7 @@ pub use values::{Val, ValsInput, Values};
 
 use crate::sorted::sort_dedup_with_index;
 use crate::sparse::{CooMatrix, CsrMatrix};
+use crate::util::Parallelism;
 
 /// Collision-aggregation policy for the constructor (paper §II.A: "an
 /// associative, commutative binary operation (default min)").
@@ -130,6 +131,20 @@ impl Assoc {
         vals: ValsInput,
         agg: Aggregator,
     ) -> Result<Assoc, AssocError> {
+        Self::try_new_par(rows, cols, vals, agg, Parallelism::current())
+    }
+
+    /// [`Assoc::try_new`] with an explicit thread configuration for the
+    /// key/value-pool sorts (the constructor hot path, Figures 3–4).
+    /// `threads == 1` is the exact serial code path; the result is
+    /// byte-identical for every thread count.
+    pub fn try_new_par(
+        rows: Vec<Key>,
+        cols: Vec<Key>,
+        vals: ValsInput,
+        agg: Aggregator,
+        par: Parallelism,
+    ) -> Result<Assoc, AssocError> {
         // --- broadcast to a common length -----------------------------
         let n = broadcast_len(rows.len(), cols.len(), vals.len()).ok_or(
             AssocError::LengthMismatch { rows: rows.len(), cols: cols.len(), vals: vals.len() },
@@ -142,9 +157,10 @@ impl Assoc {
 
         // --- sort + dedup key spaces (with index maps) -----------------
         // Specialized digest sort (see sorted::keysort) — the generic
-        // permutation sort was ~65% of constructor time in profiles.
-        let (row_keys, rmap) = crate::sorted::sort_dedup_keys(&rows);
-        let (col_keys, cmap) = crate::sorted::sort_dedup_keys(&cols);
+        // permutation sort was ~65% of constructor time in profiles —
+        // shard-parallel when `par` allows.
+        let (row_keys, rmap) = crate::sorted::sort_dedup_keys_par(&rows, par);
+        let (col_keys, cmap) = crate::sorted::sort_dedup_keys_par(&cols, par);
 
         match vals {
             ValsInput::Num(v) => {
@@ -156,10 +172,10 @@ impl Assoc {
             }
             ValsInput::Str(v) => {
                 let v = if v.len() == 1 && n > 1 { vec![v[0].clone(); n] } else { v };
-                Self::build_string(row_keys, col_keys, rmap, cmap, v, agg)
+                Self::build_string(row_keys, col_keys, rmap, cmap, v, agg, par)
             }
             ValsInput::StrScalar(s) => {
-                Self::build_string(row_keys, col_keys, rmap, cmap, vec![s; n], agg)
+                Self::build_string(row_keys, col_keys, rmap, cmap, vec![s; n], agg, par)
             }
         }
     }
@@ -243,6 +259,7 @@ impl Assoc {
         cmap: Vec<usize>,
         vals: Vec<String>,
         agg: Aggregator,
+        par: Parallelism,
     ) -> Result<Assoc, AssocError> {
         if vals.len() != rmap.len() {
             return Err(AssocError::LengthMismatch {
@@ -267,7 +284,7 @@ impl Assoc {
         // Fast path (Min/Max/First/Last): intern values first; because
         // the pool is sorted, lexicographic min/max on strings is
         // numeric min/max on (1-based) pool indices.
-        let (pool, vmap) = crate::sorted::sort_dedup_strs(&vals);
+        let (pool, vmap) = crate::sorted::sort_dedup_strs_par(&vals, par);
         let stored: Vec<f64> = vmap.iter().map(|&k| (k + 1) as f64).collect();
         let agg_fn: fn(f64, f64) -> f64 = match agg {
             Aggregator::Min => f64::min,

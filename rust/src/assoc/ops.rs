@@ -15,12 +15,18 @@
 //!
 //! Every operation is also exposed with an explicit [`Semiring`]
 //! (`add_with`, `elemmul_with`, `matmul_with`) — the paper's future-work
-//! "user-selected semiring operations".
+//! "user-selected semiring operations" — and with an explicit
+//! [`Parallelism`] (`add_par`, `elemmul_par`, `matmul_par`, and the
+//! `*_with_par` forms). The convenience forms use the process-default
+//! parallelism; `threads == 1` always selects the exact serial code
+//! path, and every parallel result is byte-identical to it (enforced by
+//! `rust/tests/parallel_equivalence.rs`).
 
 use super::{Aggregator, Assoc, Key, ValsInput, Values};
 use crate::semiring::{FnSemiring, PlusTimes, Semiring};
 use crate::sorted::{sorted_intersect, sorted_union};
-use crate::sparse::spgemm;
+use crate::sparse::spgemm_par;
+use crate::util::Parallelism;
 
 impl Assoc {
     // ------------------------------------------------------------------
@@ -58,15 +64,26 @@ impl Assoc {
     /// combine by concatenation (paper §II.C.1), with numeric values
     /// rendered to strings first.
     pub fn add(&self, other: &Assoc) -> Assoc {
+        self.add_par(other, Parallelism::current())
+    }
+
+    /// [`Assoc::add`] with an explicit thread configuration.
+    pub fn add_par(&self, other: &Assoc, par: Parallelism) -> Assoc {
         if self.is_string() || other.is_string() {
-            return self.combine_strings(other, Aggregator::Concat(String::new()));
+            return self.combine_strings_par(other, Aggregator::Concat(String::new()), par);
         }
-        self.add_with(other, &PlusTimes)
+        self.add_with_par(other, &PlusTimes, par)
     }
 
     /// Numeric element-wise addition under an explicit semiring's `⊕`
     /// (string operands are `logical()`-ed first).
     pub fn add_with(&self, other: &Assoc, s: &dyn Semiring) -> Assoc {
+        self.add_with_par(other, s, Parallelism::current())
+    }
+
+    /// [`Assoc::add_with`] with an explicit thread configuration: the
+    /// union re-index is serial, the row-wise sparse add fans out.
+    pub fn add_with_par(&self, other: &Assoc, s: &dyn Semiring, par: Parallelism) -> Assoc {
         let a = self.as_numeric();
         let b = other.as_numeric();
         if a.is_empty() {
@@ -84,7 +101,7 @@ impl Assoc {
         // Re-shape and re-index both adjs onto the union key space.
         let ea = a.adj.expand(nrows, ncols, &ru.map_left, &cu.map_left);
         let eb = b.adj.expand(nrows, ncols, &ru.map_right, &cu.map_right);
-        let adj = ea.add(&eb, s).expect("expanded shapes match");
+        let adj = ea.add_par(&eb, s, par).expect("expanded shapes match");
         Assoc { row: ru.keys, col: cu.keys, val: Values::Numeric, adj }.condensed()
     }
 
@@ -93,6 +110,12 @@ impl Assoc {
     /// `Min`/`Max` give element-wise min/max. Values of both operands
     /// are taken as strings (numeric values are rendered).
     pub fn combine_strings(&self, other: &Assoc, agg: Aggregator) -> Assoc {
+        self.combine_strings_par(other, agg, Parallelism::current())
+    }
+
+    /// [`Assoc::combine_strings`] with an explicit thread configuration
+    /// for the rebuild's constructor sorts.
+    pub fn combine_strings_par(&self, other: &Assoc, agg: Aggregator, par: Parallelism) -> Assoc {
         let (mut r1, mut c1, v1) = self.triples();
         let (r2, c2, v2) = other.triples();
         let mut vals = vals_to_strings(v1);
@@ -101,7 +124,7 @@ impl Assoc {
         vals.extend(vals_to_strings(v2));
         // Collisions occur between at most one value from each operand,
         // at most once per key pair (paper §II.C.1).
-        Assoc::try_new(r1, c1, ValsInput::Str(vals), agg)
+        Assoc::try_new_par(r1, c1, ValsInput::Str(vals), agg, par)
             .expect("triples from well-formed operands")
     }
 
@@ -145,17 +168,29 @@ impl Assoc {
     /// * string × string — element-wise lexicographic `min` over the
     ///   intersection (the string algebra's ⊗).
     pub fn elemmul(&self, other: &Assoc) -> Assoc {
+        self.elemmul_par(other, Parallelism::current())
+    }
+
+    /// [`Assoc::elemmul`] with an explicit thread configuration.
+    pub fn elemmul_par(&self, other: &Assoc, par: Parallelism) -> Assoc {
         match (self.is_string(), other.is_string()) {
-            (false, false) => self.elemmul_with(other, &PlusTimes),
-            (true, false) => self.mask_by(other),
-            (false, true) => self.elemmul_with(&other.logical(), &PlusTimes),
-            (true, true) => self.string_elemmul(other),
+            (false, false) => self.elemmul_with_par(other, &PlusTimes, par),
+            (true, false) => self.mask_by(other, par),
+            (false, true) => self.elemmul_with_par(&other.logical(), &PlusTimes, par),
+            (true, true) => self.string_elemmul(other, par),
         }
     }
 
     /// Numeric element-wise multiplication under an explicit semiring's
     /// `⊗` (string operands `logical()`-ed first).
     pub fn elemmul_with(&self, other: &Assoc, s: &dyn Semiring) -> Assoc {
+        self.elemmul_with_par(other, s, Parallelism::current())
+    }
+
+    /// [`Assoc::elemmul_with`] with an explicit thread configuration:
+    /// the intersection re-index is serial, the row-wise sparse
+    /// multiply fans out.
+    pub fn elemmul_with_par(&self, other: &Assoc, s: &dyn Semiring, par: Parallelism) -> Assoc {
         let a = self.as_numeric();
         let b = other.as_numeric();
         let (a, b) = (a.as_ref(), b.as_ref());
@@ -166,12 +201,12 @@ impl Assoc {
         }
         let ga = a.adj.gather(&ri.map_left, &ci.map_left);
         let gb = b.adj.gather(&ri.map_right, &ci.map_right);
-        let adj = ga.multiply(&gb, s).expect("gathered shapes match");
+        let adj = ga.multiply_par(&gb, s, par).expect("gathered shapes match");
         Assoc { row: ri.keys, col: ci.keys, val: Values::Numeric, adj }.condensed()
     }
 
     /// Keep this (string) array's entries wherever `mask` is nonempty.
-    fn mask_by(&self, mask: &Assoc) -> Assoc {
+    fn mask_by(&self, mask: &Assoc, par: Parallelism) -> Assoc {
         let ri = sorted_intersect(&self.row, &mask.row);
         let ci = sorted_intersect(&self.col, &mask.col);
         if ri.keys.is_empty() || ci.keys.is_empty() {
@@ -181,14 +216,14 @@ impl Assoc {
         let gb = mask.logical().adj.gather(&ri.map_right, &ci.map_right);
         // stored-index × 1.0 = stored-index: plus-times multiply keeps
         // the pool pointers intact where the mask is set.
-        let adj = ga.multiply(&gb, &PlusTimes).expect("shapes match");
+        let adj = ga.multiply_par(&gb, &PlusTimes, par).expect("shapes match");
         Assoc { row: ri.keys, col: ci.keys, val: self.val.clone(), adj }
             .condense_pool()
             .condensed()
     }
 
     /// String × string element-wise `min` (the string semiring's ⊗).
-    fn string_elemmul(&self, other: &Assoc) -> Assoc {
+    fn string_elemmul(&self, other: &Assoc, par: Parallelism) -> Assoc {
         // Merge the two pools so lexicographic order is index order.
         let (pa, pb) = (self.pool(), other.pool());
         let merged = sorted_union(pa, pb);
@@ -217,7 +252,7 @@ impl Assoc {
             unreachable!("multiply never calls ⊕")
         }
         let s = FnSemiring::new("string_min", 0.0, f64::NAN, never, idx_min);
-        let adj = ga.multiply(&gb, &s).expect("shapes match");
+        let adj = ga.multiply_par(&gb, &s, par).expect("shapes match");
         Assoc {
             row: ri.keys,
             col: ci.keys,
@@ -240,8 +275,20 @@ impl Assoc {
         self.matmul_with(other, &PlusTimes)
     }
 
+    /// [`Assoc::matmul`] with an explicit thread configuration.
+    pub fn matmul_par(&self, other: &Assoc, par: Parallelism) -> Assoc {
+        self.matmul_with_par(other, &PlusTimes, par)
+    }
+
     /// `A ⊗.⊕ B` under an explicit semiring.
     pub fn matmul_with(&self, other: &Assoc, s: &dyn Semiring) -> Assoc {
+        self.matmul_with_par(other, s, Parallelism::current())
+    }
+
+    /// [`Assoc::matmul_with`] with an explicit thread configuration:
+    /// the contraction re-index is serial, the SpGEMM fans out
+    /// row-partitioned over the pool (bit-identical to serial).
+    pub fn matmul_with_par(&self, other: &Assoc, s: &dyn Semiring, par: Parallelism) -> Assoc {
         let a = self.as_numeric();
         let b = other.as_numeric();
         let (a, b) = (a.as_ref(), b.as_ref());
@@ -254,7 +301,7 @@ impl Assoc {
         let all_cols: Vec<usize> = (0..b.col.len()).collect();
         let ga = a.adj.gather(&all_rows, &k.map_left);
         let gb = b.adj.gather(&k.map_right, &all_cols);
-        let adj = spgemm(&ga, &gb, s).expect("contracted shapes match");
+        let adj = spgemm_par(&ga, &gb, s, par).expect("contracted shapes match");
         Assoc { row: a.row.clone(), col: b.col.clone(), val: Values::Numeric, adj }.condensed()
     }
 

@@ -98,8 +98,15 @@ impl FigureHarness {
 }
 
 /// Standard bench CLI: `--min-n`, `--max-n`, `--repeats`, `--full`,
-/// `--out <dir>`. `--full` runs the paper's full range; the default is
-/// a reduced sweep so `cargo bench` completes quickly.
+/// `--out <dir>`, `--threads <N>`. `--full` runs the paper's full
+/// range; the default is a reduced sweep so `cargo bench` completes
+/// quickly. `--threads` sets the process-default [`Parallelism`] for
+/// the d4m engine; **absent means 1 (the exact serial code paths)** so
+/// the figure CSVs stay comparable with the serial baselines and with
+/// historical captures — pass `--threads N` to opt into parallel
+/// measurement at a fixed worker count.
+///
+/// [`Parallelism`]: crate::util::Parallelism
 pub struct BenchParams {
     /// Smallest n.
     pub min_n: usize,
@@ -109,6 +116,9 @@ pub struct BenchParams {
     pub repeats: usize,
     /// Output directory for CSVs.
     pub out_dir: String,
+    /// Optional worker-count override (`--threads N`; `None` = serial,
+    /// i.e. [`BenchParams::apply_parallelism`] pins `threads = 1`).
+    pub threads: Option<usize>,
 }
 
 impl BenchParams {
@@ -125,7 +135,19 @@ impl BenchParams {
             max_n: args.usize_or("max-n", default_max),
             repeats: args.usize_or("repeats", default_reps),
             out_dir: args.str_or("out", "results"),
+            threads: match args.usize_or("threads", 0) {
+                0 => None,
+                n => Some(n),
+            },
         }
+    }
+
+    /// Install `--threads` as the process-default
+    /// [`crate::util::Parallelism`] — call once at bench start. Without
+    /// the flag the benches pin the serial code paths (`threads = 1`),
+    /// keeping the engine comparison and historical CSVs meaningful.
+    pub fn apply_parallelism(&self) {
+        crate::util::Parallelism::with_threads(self.threads.unwrap_or(1)).set_default();
     }
 
     /// The swept n values.

@@ -22,6 +22,7 @@
 use crate::assoc::Assoc;
 use crate::semiring::Semiring;
 use crate::store::{BatchWriter, ScanRange, Table, Triple, WriterConfig};
+use crate::util::Parallelism;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
@@ -35,9 +36,22 @@ use std::sync::Arc;
 ///
 /// Returns the number of result cells written.
 pub fn table_mult(a: &Table, b: &Table, out: &Arc<Table>, s: &dyn Semiring) -> usize {
+    table_mult_par(a, b, out, s, Parallelism::current())
+}
+
+/// [`table_mult`] with an explicit thread configuration: the two input
+/// scans fan out per tablet; the row-join itself is a single sorted
+/// merge (serial, like Graphulo's iterator).
+pub fn table_mult_par(
+    a: &Table,
+    b: &Table,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    par: Parallelism,
+) -> usize {
     // Stream both tables (sorted by row); join rows with a merge.
-    let ta = a.scan(ScanRange::all());
-    let tb = b.scan(ScanRange::all());
+    let ta = a.scan_par(ScanRange::all(), par);
+    let tb = b.scan_par(ScanRange::all(), par);
     let mut acc: BTreeMap<(String, String), f64> = BTreeMap::new();
     let (mut i, mut j) = (0usize, 0usize);
     while i < ta.len() && j < tb.len() {

@@ -1,0 +1,153 @@
+//! Offline stand-in for the PJRT runtime (compiled when the `accel`
+//! feature is off).
+//!
+//! The real runtime (`src/runtime/mod.rs` + `tile.rs`) drives
+//! AOT-compiled Pallas kernels through the external `xla` crate, which
+//! is unavailable in the offline build image. This stub keeps the
+//! public API surface — [`Runtime`], [`Artifact`], [`AccelStats`],
+//! [`accel_matmul`], [`should_accelerate`] — compiling with zero
+//! dependencies: loading always fails with a clear message, and every
+//! caller in the tree (CLI `info`, the accel example/bench, the
+//! integration test) already treats "runtime unavailable" as a skip.
+//! Build with `--features accel` (after vendoring `xla` and `anyhow`)
+//! to get the real implementation.
+
+use crate::assoc::Assoc;
+use crate::semiring::Semiring;
+use crate::sparse::DenseBlock;
+use std::fmt;
+use std::path::Path;
+
+/// Error type standing in for `anyhow::Error` in the stub build.
+#[derive(Debug, Clone)]
+pub struct RuntimeUnavailable(String);
+
+impl fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeUnavailable {}
+
+/// Stub result alias (the real module uses `anyhow::Result`).
+pub type Result<T> = std::result::Result<T, RuntimeUnavailable>;
+
+/// One AOT artifact as described by `manifest.tsv` (mirror of the real
+/// type; never instantiated by the stub).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    /// Variant name, e.g. `matmul_plus_times_128`.
+    pub name: String,
+    /// `matmul` (2 inputs) or `accum` (3 inputs, fused ⊕ C).
+    pub kind: String,
+    /// Semiring name (matches [`crate::semiring::Semiring::name`]).
+    pub semiring: String,
+    /// Square tile extent S (operands are S×S).
+    pub size: usize,
+    /// Pallas block parameter used at lowering (perf metadata).
+    pub block: usize,
+    /// Number of kernel inputs.
+    pub num_inputs: usize,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+}
+
+/// Instrumentation from one accelerated matmul (mirror of the real
+/// type so callers compile; the stub never produces one).
+#[derive(Debug, Clone, Default)]
+pub struct AccelStats {
+    /// Tile size used.
+    pub tile: usize,
+    /// PJRT kernel invocations.
+    pub kernel_calls: usize,
+    /// Tile steps skipped because an operand tile was all-zero.
+    pub skipped_tiles: usize,
+}
+
+/// Density heuristic shared with the real runtime: the dense path wins
+/// when operands are dense enough that `O(S³)` regular dense work beats
+/// sparse SpGEMM's irregular access.
+pub fn should_accelerate(a: &Assoc, b: &Assoc, threshold: f64) -> bool {
+    DenseBlock::density(a.adj()) >= threshold && DenseBlock::density(b.adj()) >= threshold
+}
+
+/// Stub runtime: construction always fails.
+pub struct Runtime {
+    never: std::convert::Infallible,
+}
+
+impl Runtime {
+    fn unavailable() -> RuntimeUnavailable {
+        RuntimeUnavailable(
+            "PJRT runtime not compiled in: this build has no `xla` dependency; \
+             rebuild with `--features accel` after vendoring the accel crates"
+                .to_string(),
+        )
+    }
+
+    /// Always fails in the stub build (see module docs).
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Err(Self::unavailable())
+    }
+
+    /// Always fails in the stub build (see module docs).
+    pub fn load_default() -> Result<Runtime> {
+        Err(Self::unavailable())
+    }
+
+    /// All artifacts (empty iterator; the stub cannot be constructed).
+    pub fn artifacts(&self) -> std::iter::Empty<&Artifact> {
+        std::iter::empty()
+    }
+
+    /// Artifact lookup by name.
+    pub fn artifact(&self, _name: &str) -> Option<&Artifact> {
+        match self.never {}
+    }
+
+    /// Best matmul artifact for a semiring.
+    pub fn best_matmul(&self, _semiring: &str, _max_size: usize) -> Option<&Artifact> {
+        match self.never {}
+    }
+
+    /// Run a 2-input tile kernel.
+    pub fn run_matmul(&self, _name: &str, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    /// Run a 3-input fused-accumulate tile kernel.
+    pub fn run_accum(&self, _name: &str, _a: &[f32], _b: &[f32], _c: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+/// Stub accelerated matmul — unreachable, since no [`Runtime`] can
+/// exist in the stub build; the signature keeps callers compiling.
+pub fn accel_matmul(
+    rt: &Runtime,
+    _a: &Assoc,
+    _b: &Assoc,
+    _s: &dyn Semiring,
+) -> Result<(Assoc, AccelStats)> {
+    match rt.never {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_message() {
+        let err = Runtime::load_default().unwrap_err();
+        assert!(err.to_string().contains("accel"));
+        assert!(Runtime::load("anywhere").is_err());
+    }
+
+    #[test]
+    fn density_heuristic_still_works() {
+        let dense = Assoc::from_triples(&["a", "a", "b", "b"], &["x", "y", "x", "y"], 1.0);
+        assert!(should_accelerate(&dense, &dense, 0.5));
+        assert!(!should_accelerate(&dense, &dense, 1.5));
+    }
+}

@@ -17,8 +17,19 @@
 //!
 //! Comparisons become branch-predictable `u64` compares with the data
 //! inline in the sorted buffer — no pointer chasing.
+//!
+//! **Parallelism.** [`sort_dedup_keys_par`] / [`sort_dedup_strs_par`]
+//! shard the input into contiguous chunks, run the serial digest sort
+//! on each shard in a pool worker, then fold the shard results together
+//! with [`sorted_union`](super::sorted_union), composing the per-shard
+//! index maps through the union's embedding maps. The output —
+//! canonical sorted-unique keys plus positions — is identical to the
+//! serial path for every thread count, because both compute the same
+//! canonical form.
 
+use super::sorted_union;
 use crate::assoc::Key;
+use crate::util::parallel::{parallel_map_ranges, Parallelism};
 
 /// Order-preserving 64-bit digest of a key, plus whether the digest is
 /// exact (no tie-break needed).
@@ -36,7 +47,10 @@ fn digest(k: &Key) -> (u64, bool) {
             // IEEE total-order: flip all bits for negatives, set the
             // sign bit for positives. Result compared as u64 orders
             // like f64. Shift right 1 to make room for the tag bit.
-            let bits = v.to_bits();
+            // -0.0 (only reachable by building the enum variant
+            // directly; `Key::num` normalizes) must digest like 0.0,
+            // which it equals as a key.
+            let bits = if *v == 0.0 { 0.0f64 } else { *v }.to_bits();
             let ord = if bits >> 63 == 1 { !bits } else { bits | (1 << 63) };
             ((ord >> 1), false) // conservative: tie-break confirms
         }
@@ -142,6 +156,72 @@ pub fn sort_dedup_strs(vals: &[String]) -> (Vec<String>, Vec<usize>) {
     (unique, index_map)
 }
 
+/// Inputs shorter than this sort faster serially than the fan-out costs.
+const PAR_MIN_LEN: usize = 512;
+
+/// [`sort_dedup_keys`] with an explicit thread configuration:
+/// shard-sort + union-merge (see the module docs). `threads == 1` is
+/// the exact serial code path.
+pub fn sort_dedup_keys_par(keys: &[Key], par: Parallelism) -> (Vec<Key>, Vec<usize>) {
+    shard_sort_dedup(keys, par, sort_dedup_keys)
+}
+
+/// [`sort_dedup_strs`] with an explicit thread configuration.
+pub fn sort_dedup_strs_par(vals: &[String], par: Parallelism) -> (Vec<String>, Vec<usize>) {
+    shard_sort_dedup(vals, par, sort_dedup_strs)
+}
+
+/// Shard-parallel sort+dedup: run `serial` on contiguous shards, fold
+/// the shard uniques with [`sorted_union`], and compose each shard's
+/// index map through the union embeddings. Produces the same canonical
+/// `(unique_sorted, index_map)` as `serial` on the whole input.
+fn shard_sort_dedup<T, F>(items: &[T], par: Parallelism, serial: F) -> (Vec<T>, Vec<usize>)
+where
+    T: Ord + Clone + Send + Sync,
+    F: Fn(&[T]) -> (Vec<T>, Vec<usize>) + Sync,
+{
+    let n = items.len();
+    if par.is_serial() || n < PAR_MIN_LEN {
+        return serial(items);
+    }
+    let ranges = par.chunk_ranges(n);
+    if ranges.len() <= 1 {
+        return serial(items);
+    }
+    let shards: Vec<(Vec<T>, Vec<usize>)> =
+        parallel_map_ranges(ranges.clone(), |r| serial(&items[r]));
+
+    // Fold the shard uniques left-to-right. `remaps[s][i]` tracks where
+    // shard s's i-th unique key currently sits in the accumulated union.
+    let mut shard_maps: Vec<Vec<usize>> = Vec::with_capacity(shards.len());
+    let mut remaps: Vec<Vec<usize>> = Vec::with_capacity(shards.len());
+    let mut acc: Vec<T> = Vec::new();
+    for (uniq, map) in shards {
+        if acc.is_empty() {
+            remaps.push((0..uniq.len()).collect());
+            acc = uniq;
+        } else {
+            let u = sorted_union(&acc, &uniq);
+            for rm in &mut remaps {
+                for v in rm.iter_mut() {
+                    *v = u.map_left[*v];
+                }
+            }
+            remaps.push(u.map_right);
+            acc = u.keys;
+        }
+        shard_maps.push(map);
+    }
+
+    let mut index_map = vec![0usize; n];
+    for ((range, rm), smap) in ranges.into_iter().zip(&remaps).zip(&shard_maps) {
+        for (off, p) in range.enumerate() {
+            index_map[p] = rm[smap[off]];
+        }
+    }
+    (acc, index_map)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +292,61 @@ mod tests {
             assert_eq!(m1, m2, "index map mismatch");
             assert!(is_sorted_unique(&u1));
         });
+    }
+
+    #[test]
+    fn prop_parallel_matches_serial() {
+        check("sort_dedup_*_par == serial", 30, |g| {
+            // Length above PAR_MIN_LEN so shards actually fan out.
+            let len = PAR_MIN_LEN + g.rng().below_usize(1500);
+            let keys: Vec<Key> = (0..len)
+                .map(|_| {
+                    if g.rng().chance(0.5) {
+                        Key::str(g.rng().below(200).to_string())
+                    } else {
+                        Key::num(g.rng().range_i64(-100, 100) as f64)
+                    }
+                })
+                .collect();
+            let strs: Vec<String> = (0..len).map(|_| g.rng().ascii_lower(8)).collect();
+            let (ku, km) = sort_dedup_keys(&keys);
+            let (su, sm) = sort_dedup_strs(&strs);
+            for threads in [2, 4, 7] {
+                let par = Parallelism::with_threads(threads);
+                let (ku2, km2) = sort_dedup_keys_par(&keys, par);
+                assert_eq!(ku, ku2, "keys unique t={threads}");
+                assert_eq!(km, km2, "keys map t={threads}");
+                let (su2, sm2) = sort_dedup_strs_par(&strs, par);
+                assert_eq!(su, su2, "strs unique t={threads}");
+                assert_eq!(sm, sm2, "strs map t={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn negative_zero_keys_dedup_identically() {
+        // -0.0 == 0.0 as keys; serial and parallel paths must agree on
+        // a single unique entry (regression: bit-level digests used to
+        // split what Key::cmp merges).
+        let mut keys: Vec<Key> = Vec::new();
+        for i in 0..600 {
+            keys.push(Key::num(if i % 3 == 0 { -0.0 } else { 0.0 }));
+            keys.push(Key::num((i % 7) as f64));
+        }
+        let (u1, m1) = sort_dedup_keys(&keys);
+        assert!(is_sorted_unique(&u1), "serial unique list must be strictly sorted");
+        for threads in [2, 4, 7] {
+            let (u2, m2) = sort_dedup_keys_par(&keys, Parallelism::with_threads(threads));
+            assert_eq!(u1, u2, "t={threads}");
+            assert_eq!(m1, m2, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_path_small_input_falls_back() {
+        let keys: Vec<Key> = ["b", "a", "b"].iter().map(|s| Key::str(*s)).collect();
+        let (u, m) = sort_dedup_keys_par(&keys, Parallelism::with_threads(4));
+        assert_eq!((u, m), sort_dedup_keys(&keys));
     }
 
     #[test]

@@ -21,7 +21,9 @@ mod keysort;
 mod merge;
 mod search;
 
-pub use keysort::{sort_dedup_keys, sort_dedup_strs};
+pub use keysort::{
+    sort_dedup_keys, sort_dedup_keys_par, sort_dedup_strs, sort_dedup_strs_par,
+};
 pub use merge::{sorted_intersect, sorted_union, Intersection, Union};
 pub use search::{lower_bound, range_indices, upper_bound};
 

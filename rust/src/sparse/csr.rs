@@ -8,6 +8,8 @@
 
 use super::{CooMatrix, CscMatrix, SparseError};
 use crate::semiring::Semiring;
+use crate::util::parallel::{parallel_map_ranges, Parallelism};
+use std::ops::Range;
 
 /// Sparse matrix in CSR format.
 ///
@@ -142,8 +144,21 @@ impl CsrMatrix {
         self.to_csc().transpose_view()
     }
 
-    /// Element-wise addition under `s` (union merge per row, §II.C.1).
+    /// Element-wise addition under `s` (union merge per row, §II.C.1),
+    /// at the process-default parallelism.
     pub fn add(&self, other: &CsrMatrix, s: &dyn Semiring) -> Result<CsrMatrix, SparseError> {
+        self.add_par(other, s, Parallelism::current())
+    }
+
+    /// [`CsrMatrix::add`] with an explicit thread configuration. Rows
+    /// are independent under the union merge, so chunks fan out and the
+    /// stitched result is bit-identical to the serial path.
+    pub fn add_par(
+        &self,
+        other: &CsrMatrix,
+        s: &dyn Semiring,
+        par: Parallelism,
+    ) -> Result<CsrMatrix, SparseError> {
         if self.shape() != other.shape() {
             return Err(SparseError::ShapeMismatch {
                 left: self.shape(),
@@ -151,12 +166,81 @@ impl CsrMatrix {
                 op: "add",
             });
         }
-        let zero = s.zero();
+        Ok(self.rowwise_binary_par(other, par, |rows| self.add_rows(other, s, rows)))
+    }
+
+    /// Element-wise multiplication under `s` (intersection merge per
+    /// row, §II.C.2), at the process-default parallelism.
+    pub fn multiply(&self, other: &CsrMatrix, s: &dyn Semiring) -> Result<CsrMatrix, SparseError> {
+        self.multiply_par(other, s, Parallelism::current())
+    }
+
+    /// [`CsrMatrix::multiply`] with an explicit thread configuration
+    /// (bit-identical to serial for every thread count).
+    pub fn multiply_par(
+        &self,
+        other: &CsrMatrix,
+        s: &dyn Semiring,
+        par: Parallelism,
+    ) -> Result<CsrMatrix, SparseError> {
+        if self.shape() != other.shape() {
+            return Err(SparseError::ShapeMismatch {
+                left: self.shape(),
+                right: other.shape(),
+                op: "multiply",
+            });
+        }
+        Ok(self.rowwise_binary_par(other, par, |rows| self.mul_rows(other, s, rows)))
+    }
+
+    /// Shared fan-out/stitch driver for the row-independent binary ops.
+    /// `kernel` computes one contiguous row range; chunk boundaries are
+    /// balanced by the operands' combined nnz and depend only on the
+    /// inputs and `par.threads`, keeping the output deterministic.
+    fn rowwise_binary_par(
+        &self,
+        other: &CsrMatrix,
+        par: Parallelism,
+        kernel: impl Fn(Range<usize>) -> BinChunk + Sync,
+    ) -> CsrMatrix {
+        // Below this combined size the fan-out costs more than the merge.
+        const PAR_MIN_NNZ: usize = 4096;
+        const PAR_MIN_ROWS: usize = 64;
+        let serial = par.is_serial()
+            || self.nrows < PAR_MIN_ROWS
+            || self.nnz() + other.nnz() < PAR_MIN_NNZ;
+        let parts: Vec<BinChunk> = if serial {
+            vec![kernel(0..self.nrows)]
+        } else {
+            let cum: Vec<usize> =
+                (0..=self.nrows).map(|r| self.indptr[r] + other.indptr[r]).collect();
+            parallel_map_ranges(par.chunk_ranges_weighted(&cum), kernel)
+        };
+        let total: usize = parts.iter().map(|p| p.indices.len()).sum();
         let mut indptr = Vec::with_capacity(self.nrows + 1);
-        indptr.push(0);
-        let mut indices = Vec::with_capacity(self.nnz() + other.nnz());
-        let mut data = Vec::with_capacity(self.nnz() + other.nnz());
-        for r in 0..self.nrows {
+        indptr.push(0usize);
+        let mut indices: Vec<u32> = Vec::with_capacity(total);
+        let mut data: Vec<f64> = Vec::with_capacity(total);
+        for part in parts {
+            let base = indices.len();
+            indptr.extend(part.rel_indptr.into_iter().map(|e| base + e));
+            indices.extend_from_slice(&part.indices);
+            data.extend_from_slice(&part.data);
+        }
+        CsrMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data)
+    }
+
+    /// Union-merge kernel over a contiguous row range (the one and only
+    /// `add` inner loop; the serial path runs it over `0..nrows`).
+    fn add_rows(&self, other: &CsrMatrix, s: &dyn Semiring, rows: Range<usize>) -> BinChunk {
+        let zero = s.zero();
+        let mut rel_indptr = Vec::with_capacity(rows.len());
+        // Union output is at most the chunk's combined nnz.
+        let cap = (self.indptr[rows.end] - self.indptr[rows.start])
+            + (other.indptr[rows.end] - other.indptr[rows.start]);
+        let mut indices = Vec::with_capacity(cap);
+        let mut data = Vec::with_capacity(cap);
+        for r in rows {
             let (ai, av) = self.row(r);
             let (bi, bv) = other.row(r);
             let (mut m, mut n) = (0usize, 0usize);
@@ -197,27 +281,19 @@ impl CsrMatrix {
                     data.push(bv[p]);
                 }
             }
-            indptr.push(indices.len());
+            rel_indptr.push(indices.len());
         }
-        Ok(CsrMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data))
+        BinChunk { rel_indptr, indices, data }
     }
 
-    /// Element-wise multiplication under `s` (intersection merge per row,
-    /// §II.C.2).
-    pub fn multiply(&self, other: &CsrMatrix, s: &dyn Semiring) -> Result<CsrMatrix, SparseError> {
-        if self.shape() != other.shape() {
-            return Err(SparseError::ShapeMismatch {
-                left: self.shape(),
-                right: other.shape(),
-                op: "multiply",
-            });
-        }
+    /// Intersection-merge kernel over a contiguous row range (the one
+    /// and only `multiply` inner loop).
+    fn mul_rows(&self, other: &CsrMatrix, s: &dyn Semiring, rows: Range<usize>) -> BinChunk {
         let zero = s.zero();
-        let mut indptr = Vec::with_capacity(self.nrows + 1);
-        indptr.push(0);
+        let mut rel_indptr = Vec::with_capacity(rows.len());
         let mut indices = Vec::new();
         let mut data = Vec::new();
-        for r in 0..self.nrows {
+        for r in rows {
             let (ai, av) = self.row(r);
             let (bi, bv) = other.row(r);
             let (mut m, mut n) = (0usize, 0usize);
@@ -236,9 +312,9 @@ impl CsrMatrix {
                     }
                 }
             }
-            indptr.push(indices.len());
+            rel_indptr.push(indices.len());
         }
-        Ok(CsrMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data))
+        BinChunk { rel_indptr, indices, data }
     }
 
     /// Map stored values through `f`, pruning results equal to `zero`.
@@ -434,6 +510,15 @@ impl CsrMatrix {
     }
 }
 
+/// One row-range's output from a parallel binary-op kernel, stitched in
+/// row order by [`CsrMatrix::rowwise_binary_par`]. `rel_indptr` has no
+/// leading zero; entries are offsets relative to the chunk start.
+struct BinChunk {
+    rel_indptr: Vec<usize>,
+    indices: Vec<u32>,
+    data: Vec<f64>,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -624,6 +709,25 @@ mod tests {
             let a = random_csr(g.rng(), 8, 20);
             let b = random_csr(g.rng(), 8, 20);
             assert_eq!(a.add(&b, &PlusTimes).unwrap(), b.add(&a, &PlusTimes).unwrap());
+        });
+    }
+
+    #[test]
+    fn prop_add_multiply_parallel_match_serial_bitwise() {
+        check("CSR add/multiply par == serial", 20, |g| {
+            // Big enough to clear the PAR_MIN_* gates.
+            let n = 128;
+            let a = random_csr(g.rng(), n, 4000);
+            let b = random_csr(g.rng(), n, 4000);
+            for s in [&PlusTimes as &dyn crate::semiring::Semiring, &MaxPlus, &MinPlus] {
+                let add1 = a.add_par(&b, s, Parallelism::serial()).unwrap();
+                let mul1 = a.multiply_par(&b, s, Parallelism::serial()).unwrap();
+                for threads in [2, 4, 7] {
+                    let par = Parallelism::with_threads(threads);
+                    assert_eq!(add1, a.add_par(&b, s, par).unwrap(), "add t={threads}");
+                    assert_eq!(mul1, a.multiply_par(&b, s, par).unwrap(), "mul t={threads}");
+                }
+            }
         });
     }
 

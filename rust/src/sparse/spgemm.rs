@@ -6,9 +6,20 @@
 //! O(touched) rather than O(ncols). This is the general path of `A @ B`
 //! (paper §II.C.3); the dense-block PJRT kernel in [`crate::runtime`] is
 //! the accelerated alternative for dense operands.
+//!
+//! **Parallelism.** Rows of `C` are independent in Gustavson's
+//! formulation, so [`spgemm_par`] partitions `A`'s rows into contiguous
+//! chunks (balanced by `A`'s nnz), runs the identical per-row kernel in
+//! each pool worker with its own dense accumulator, and stitches the
+//! chunk outputs back in row order. The output is bit-identical to the
+//! serial path for every thread count: chunk boundaries depend only on
+//! the input and `threads`, and within a row the ⊕-accumulation order
+//! is unchanged.
 
 use super::{CsrMatrix, SparseError};
 use crate::semiring::Semiring;
+use crate::util::parallel::{parallel_map_ranges, Parallelism};
+use std::ops::Range;
 
 /// Instrumentation from one SpGEMM call (used by the perf harness).
 #[derive(Debug, Clone, Default)]
@@ -19,25 +30,92 @@ pub struct SpGemmStats {
     pub out_nnz: usize,
 }
 
-/// `C = A ⊗.⊕ B` over semiring `s`. Shapes must contract:
-/// `(m × k) @ (k × n) → (m × n)`.
+/// `C = A ⊗.⊕ B` over semiring `s`, at the process-default parallelism.
+/// Shapes must contract: `(m × k) @ (k × n) → (m × n)`.
 pub fn spgemm(a: &CsrMatrix, b: &CsrMatrix, s: &dyn Semiring) -> Result<CsrMatrix, SparseError> {
-    spgemm_with_stats(a, b, s).map(|(c, _)| c)
+    spgemm_par(a, b, s, Parallelism::current())
 }
 
-/// [`spgemm`] with operation counts.
+/// [`spgemm`] with an explicit thread configuration. `threads == 1` is
+/// the exact serial code path; any other count produces a bit-identical
+/// result (see the module docs).
+pub fn spgemm_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+) -> Result<CsrMatrix, SparseError> {
+    spgemm_with_stats_par(a, b, s, par).map(|(c, _)| c)
+}
+
+/// [`spgemm`] with operation counts, at the process-default parallelism.
 pub fn spgemm_with_stats(
     a: &CsrMatrix,
     b: &CsrMatrix,
     s: &dyn Semiring,
+) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
+    spgemm_with_stats_par(a, b, s, Parallelism::current())
+}
+
+/// Rows below this count are not worth a fan-out (pool dispatch costs
+/// more than the row work saved).
+const PAR_MIN_ROWS: usize = 64;
+
+/// [`spgemm_par`] with operation counts.
+pub fn spgemm_with_stats_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
 ) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     if ka != kb {
         return Err(SparseError::ShapeMismatch { left: a.shape(), right: b.shape(), op: "spgemm" });
     }
-    let zero = s.zero();
+    let parts: Vec<RowChunk> = if par.is_serial() || m < PAR_MIN_ROWS {
+        vec![gustavson_rows(a, b, s, 0..m)]
+    } else {
+        // Chunk boundaries balanced by A's nnz (a pure function of the
+        // input and `threads`, so the stitched output is deterministic).
+        let ranges = par.chunk_ranges_weighted(a.indptr());
+        parallel_map_ranges(ranges, |rows| gustavson_rows(a, b, s, rows))
+    };
+
+    // Stitch chunk outputs in row order.
+    let total: usize = parts.iter().map(|p| p.indices.len()).sum();
+    let mut indptr = Vec::with_capacity(m + 1);
+    indptr.push(0usize);
+    let mut indices: Vec<u32> = Vec::with_capacity(total);
+    let mut data: Vec<f64> = Vec::with_capacity(total);
     let mut stats = SpGemmStats::default();
+    for part in parts {
+        let base = indices.len();
+        indptr.extend(part.rel_indptr.into_iter().map(|e| base + e));
+        indices.extend_from_slice(&part.indices);
+        data.extend_from_slice(&part.data);
+        stats.mults += part.mults;
+    }
+    stats.out_nnz = data.len();
+    Ok((CsrMatrix::from_parts(m, n, indptr, indices, data), stats))
+}
+
+/// Output of [`gustavson_rows`] for one contiguous row range.
+struct RowChunk {
+    /// `rel_indptr[j]` = entries emitted after finishing the range's
+    /// `j`-th row (no leading 0; offset by the stitch base).
+    rel_indptr: Vec<usize>,
+    indices: Vec<u32>,
+    data: Vec<f64>,
+    mults: u64,
+}
+
+/// The Gustavson kernel over a contiguous row range of `A` — the one
+/// and only SpGEMM inner loop; the serial path runs it over `0..m`.
+fn gustavson_rows(a: &CsrMatrix, b: &CsrMatrix, s: &dyn Semiring, rows: Range<usize>) -> RowChunk {
+    let n = b.shape().1;
+    let zero = s.zero();
+    let mut mults = 0u64;
 
     // Dense accumulator row + touched-column list. `occupied` marks which
     // accumulator slots are live so nonstandard zeros (e.g. min-plus +inf)
@@ -46,18 +124,17 @@ pub fn spgemm_with_stats(
     let mut occupied = vec![false; n];
     let mut touched: Vec<u32> = Vec::new();
 
-    let mut indptr = Vec::with_capacity(m + 1);
-    indptr.push(0usize);
+    let mut rel_indptr = Vec::with_capacity(rows.len());
     // (Measured: pre-reserving the output vectors gives <1% here — the
     // dense-accumulator inner loop dominates — so no size estimate.)
     let mut indices: Vec<u32> = Vec::new();
     let mut data: Vec<f64> = Vec::new();
 
-    for i in 0..m {
+    for i in rows {
         let (acols, avals) = a.row(i);
         for (kk, av) in acols.iter().zip(avals) {
             let (bcols, bvals) = b.row(*kk as usize);
-            stats.mults += bcols.len() as u64;
+            mults += bcols.len() as u64;
             for (c, bv) in bcols.iter().zip(bvals) {
                 let prod = s.mul(*av, *bv);
                 let ci = *c as usize;
@@ -82,10 +159,9 @@ pub fn spgemm_with_stats(
             acc[ci] = zero;
         }
         touched.clear();
-        indptr.push(indices.len());
+        rel_indptr.push(indices.len());
     }
-    stats.out_nnz = data.len();
-    Ok((CsrMatrix::from_parts(m, n, indptr, indices, data), stats))
+    RowChunk { rel_indptr, indices, data, mults }
 }
 
 #[cfg(test)]
@@ -227,6 +303,38 @@ mod tests {
                             s.name()
                         );
                     }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_parallel_matches_serial_bitwise() {
+        // The determinism contract: any thread count, same bytes. Runs
+        // above PAR_MIN_ROWS so the fan-out actually happens.
+        check("spgemm_par == spgemm serial", 20, |g| {
+            let m = 200;
+            let k = 64;
+            let n = 96;
+            let mk_mat = |r: &mut SplitMix64, rows: usize, cols: usize, nnz: usize| {
+                let mut t = Vec::new();
+                for _ in 0..nnz {
+                    t.push((r.below_usize(rows), r.below_usize(cols), r.range_i64(1, 9) as f64));
+                }
+                from_triples(rows, cols, &t)
+            };
+            let a = mk_mat(g.rng(), m, k, 800);
+            let b = mk_mat(g.rng(), k, n, 500);
+            for s in [&PlusTimes as &dyn Semiring, &MaxPlus, &MinPlus, &MaxMin] {
+                let (serial, st1) =
+                    spgemm_with_stats_par(&a, &b, s, Parallelism::serial()).unwrap();
+                for threads in [2, 4, 7] {
+                    let (par, st2) =
+                        spgemm_with_stats_par(&a, &b, s, Parallelism::with_threads(threads))
+                            .unwrap();
+                    assert_eq!(serial, par, "{} at {threads} threads", s.name());
+                    assert_eq!(st1.mults, st2.mults);
+                    assert_eq!(st1.out_nnz, st2.out_nnz);
                 }
             }
         });

@@ -216,6 +216,12 @@ impl TableStore {
 /// parses as a number; `Last` aggregation — later writes win, matching
 /// store overwrite semantics).
 pub fn triples_to_assoc(triples: &[Triple]) -> Assoc {
+    triples_to_assoc_par(triples, crate::util::Parallelism::current())
+}
+
+/// [`triples_to_assoc`] with an explicit thread configuration for the
+/// constructor rebuild.
+pub fn triples_to_assoc_par(triples: &[Triple], par: crate::util::Parallelism) -> Assoc {
     let rows: Vec<Key> = triples.iter().map(|t| Key::str(t.row.as_str())).collect();
     let cols: Vec<Key> = triples.iter().map(|t| Key::str(t.col.as_str())).collect();
     let numeric: Option<Vec<f64>> = triples.iter().map(|t| t.val.parse::<f64>().ok()).collect();
@@ -223,7 +229,8 @@ pub fn triples_to_assoc(triples: &[Triple]) -> Assoc {
         Some(nums) => ValsInput::Num(nums),
         None => ValsInput::Str(triples.iter().map(|t| t.val.clone()).collect()),
     };
-    Assoc::try_new(rows, cols, vals, Aggregator::Last).expect("scan triples are consistent")
+    Assoc::try_new_par(rows, cols, vals, Aggregator::Last, par)
+        .expect("scan triples are consistent")
 }
 
 #[cfg(test)]

@@ -10,6 +10,8 @@
 use super::tablet::Tablet;
 use super::{StoreError, Triple};
 use crate::assoc::Assoc;
+use crate::util::parallel::parallel_map_ranges;
+use crate::util::Parallelism;
 use std::sync::{Mutex, RwLock};
 
 /// Table tuning knobs.
@@ -166,13 +168,48 @@ impl Table {
         }
     }
 
-    /// Scan a row range, returning sorted triples.
+    /// Scan a row range, returning sorted triples, at the
+    /// process-default parallelism.
     pub fn scan(&self, range: ScanRange) -> Vec<Triple> {
+        self.scan_par(range, Parallelism::current())
+    }
+
+    /// [`Table::scan`] with an explicit thread configuration: one job
+    /// per in-range tablet, stitched back in tablet (= row) order so
+    /// the output is byte-identical to the serial scan. Tablets each
+    /// carry their own lock, so workers never contend with each other
+    /// (only with writers to the same tablet).
+    pub fn scan_par(&self, range: ScanRange, par: Parallelism) -> Vec<Triple> {
         let tablets = self.tablets.read().unwrap();
-        let mut out = Vec::new();
-        for t in tablets.iter() {
+        if par.is_serial() {
+            // Exact serial code path: check bounds and scan each tablet
+            // under a single lock acquisition.
+            let mut out = Vec::new();
+            for t in tablets.iter() {
+                let tab = t.lock().unwrap();
+                // Skip tablets entirely outside the range.
+                if let (Some(hi), Some(tlo)) = (&range.hi, &tab.lo) {
+                    if tlo.as_str() >= hi.as_str() {
+                        break;
+                    }
+                }
+                if let (Some(lo), Some(thi)) = (&range.lo, &tab.hi) {
+                    if thi.as_str() <= lo.as_str() {
+                        continue;
+                    }
+                }
+                tab.scan_into(range.lo.as_deref(), range.hi.as_deref(), &mut out);
+            }
+            return out;
+        }
+        // In-range tablet indices, in row order (tablet extents are
+        // sorted, so the first tablet past `hi` ends the walk). The
+        // bounds read here cannot go stale before the fan-out below:
+        // tablet extents only change on split, and splits take the
+        // tablets *write* lock, excluded while we hold the read lock.
+        let mut live: Vec<usize> = Vec::new();
+        for (i, t) in tablets.iter().enumerate() {
             let tab = t.lock().unwrap();
-            // Skip tablets entirely outside the range.
             if let (Some(hi), Some(tlo)) = (&range.hi, &tab.lo) {
                 if tlo.as_str() >= hi.as_str() {
                     break;
@@ -183,7 +220,31 @@ impl Table {
                     continue;
                 }
             }
-            tab.scan_into(range.lo.as_deref(), range.hi.as_deref(), &mut out);
+            live.push(i);
+        }
+        if live.len() <= 1 {
+            let mut out = Vec::new();
+            for &i in &live {
+                let tab = tablets[i].lock().unwrap();
+                tab.scan_into(range.lo.as_deref(), range.hi.as_deref(), &mut out);
+            }
+            return out;
+        }
+        // One job per contiguous *group* of tablets, at most
+        // `par.threads` groups — the knob bounds the fan-out, and
+        // stitching groups in order preserves row order.
+        let parts: Vec<Vec<Triple>> =
+            parallel_map_ranges(par.chunk_ranges(live.len()), |group| {
+                let mut part = Vec::new();
+                for j in group {
+                    let tab = tablets[live[j]].lock().unwrap();
+                    tab.scan_into(range.lo.as_deref(), range.hi.as_deref(), &mut part);
+                }
+                part
+            });
+        let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+        for part in parts {
+            out.extend(part);
         }
         out
     }
@@ -227,6 +288,12 @@ impl Table {
     /// Scan into an associative array.
     pub fn scan_to_assoc(&self, range: ScanRange) -> Assoc {
         super::triples_to_assoc(&self.scan(range))
+    }
+
+    /// [`Table::scan_to_assoc`] with an explicit thread configuration
+    /// for both the fan-out scan and the constructor rebuild.
+    pub fn scan_to_assoc_par(&self, range: ScanRange, par: Parallelism) -> Assoc {
+        super::triples_to_assoc_par(&self.scan_par(range, par), par)
     }
 
     /// Failure injection: mark a tablet offline/online.

@@ -8,18 +8,23 @@
 //! * [`timer`] — wall-clock timing helpers with robust repeat-averaging.
 //! * [`args`] — a tiny `--flag value` command-line parser.
 //! * [`pool`] — a scoped thread pool over `std::thread`.
+//! * [`parallel`] — the [`parallel::Parallelism`] knob plus the
+//!   deterministic fork-join helpers used by the parallel compute
+//!   kernels (SpGEMM, constructor key sort, tablet scans).
 //! * [`prop`] — a miniature property-based testing harness with
 //!   random case generation and failure reporting.
 //! * [`human`] — human-readable formatting for counts, bytes, seconds.
 
 pub mod args;
 pub mod human;
+pub mod parallel;
 pub mod pool;
 pub mod prng;
 pub mod prop;
 pub mod timer;
 
 pub use args::Args;
+pub use parallel::Parallelism;
 pub use pool::ThreadPool;
 pub use prng::SplitMix64;
 pub use timer::{time_op, Stopwatch, Timings};

@@ -1,0 +1,263 @@
+//! Parallelism configuration and deterministic fork-join helpers.
+//!
+//! The compute hot paths (SpGEMM, the constructor key sort, tablet
+//! scans) fan work out over the shared [`ThreadPool`], but every
+//! parallel path in this crate obeys one contract: **the result is
+//! byte-identical to the serial path**, for any thread count. That is
+//! achieved structurally — work is split into contiguous chunks whose
+//! boundaries depend only on the input and the configured thread count,
+//! each chunk is computed independently, and results are stitched back
+//! in chunk order. No atomics-order or scheduling nondeterminism can
+//! reach the output; `rust/tests/parallel_equivalence.rs` enforces the
+//! contract for every figure op and builtin semiring.
+//!
+//! [`Parallelism`] is the one knob: `threads == 1` selects the exact
+//! serial code path (not a one-chunk parallel run), the default tracks
+//! the machine's available cores, and benches sweep it via `--threads`.
+
+use super::pool::ThreadPool;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Thread-count configuration for the parallel compute paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Worker count to fan out to. `1` means "run the serial code
+    /// path"; `0` is normalized to `1` at construction.
+    pub threads: usize,
+}
+
+/// Global default thread count; `0` = track available parallelism.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+impl Parallelism {
+    /// The exact serial code path.
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// One worker per available core (at least 1).
+    pub fn auto() -> Parallelism {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Parallelism { threads: n.max(1) }
+    }
+
+    /// An explicit worker count (`0` is clamped to `1`).
+    pub fn with_threads(n: usize) -> Parallelism {
+        Parallelism { threads: n.max(1) }
+    }
+
+    /// The process-wide default used by the convenience entry points
+    /// (`Assoc::matmul`, `Table::scan`, …): [`Parallelism::auto`]
+    /// unless overridden by [`Parallelism::set_default`].
+    pub fn current() -> Parallelism {
+        match DEFAULT_THREADS.load(Ordering::Relaxed) {
+            0 => Parallelism::auto(),
+            n => Parallelism { threads: n },
+        }
+    }
+
+    /// Install `self` as the process-wide default (benches use this to
+    /// sweep `--threads`). Affects only entry points that don't take an
+    /// explicit `Parallelism`.
+    pub fn set_default(self) {
+        DEFAULT_THREADS.store(self.threads, Ordering::Relaxed);
+    }
+
+    /// True when this configuration selects the serial code path.
+    pub fn is_serial(&self) -> bool {
+        self.threads <= 1
+    }
+
+    /// Split `0..n` into at most `threads` contiguous ranges of
+    /// near-equal length (deterministic in `n` and `threads` only).
+    /// Empty for `n == 0`.
+    pub fn chunk_ranges(&self, n: usize) -> Vec<Range<usize>> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let k = self.threads.max(1).min(n);
+        let base = n / k;
+        let extra = n % k;
+        let mut out = Vec::with_capacity(k);
+        let mut start = 0usize;
+        for i in 0..k {
+            let len = base + usize::from(i < extra);
+            out.push(start..start + len);
+            start += len;
+        }
+        out
+    }
+
+    /// Split `0..cum.len()-1` into at most `threads` contiguous ranges
+    /// balanced by a cumulative weight vector (`cum[i]` = total weight
+    /// of items `0..i`, e.g. a CSR `indptr`). Deterministic in `cum`
+    /// and `threads` only. Empty when there are no items.
+    pub fn chunk_ranges_weighted(&self, cum: &[usize]) -> Vec<Range<usize>> {
+        let n = cum.len().saturating_sub(1);
+        if n == 0 {
+            return Vec::new();
+        }
+        let total = cum[n];
+        if total == 0 {
+            return self.chunk_ranges(n);
+        }
+        let k = self.threads.max(1).min(n);
+        let mut out = Vec::with_capacity(k);
+        let mut start = 0usize;
+        for i in 1..=k {
+            if start == n {
+                break;
+            }
+            let end = if i == k {
+                n
+            } else {
+                let target = ((total as u128 * i as u128) / k as u128) as usize;
+                cum.partition_point(|&c| c < target).clamp(start + 1, n)
+            };
+            out.push(start..end);
+            start = end;
+        }
+        out
+    }
+}
+
+/// The process-wide compute pool, created on first use and sized to the
+/// available cores. Shared by every parallel kernel; chunk counts (not
+/// worker counts) control per-op parallelism, so a smaller
+/// [`Parallelism`] simply submits fewer, larger jobs.
+pub fn global_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::default_size)
+}
+
+/// Run `f` over each range on the global pool, returning results **in
+/// range order**. Falls back to inline execution for 0 or 1 ranges.
+///
+/// A panic inside `f` is re-raised on the caller with its original
+/// payload (the remaining chunks still run to completion first — the
+/// pool's workers catch unwinds).
+///
+/// Kernel jobs must be pure compute: a job that itself blocks on the
+/// pool (submits and joins) could deadlock a saturated pool, so the
+/// parallel kernels never nest.
+pub fn parallel_map_ranges<R, F>(ranges: Vec<Range<usize>>, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(Range<usize>) -> R + Sync,
+{
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<std::thread::Result<R>>> = ranges.iter().map(|_| None).collect();
+    {
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .zip(ranges)
+            .map(|(slot, range)| {
+                Box::new(move || {
+                    *slot = Some(std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        move || f(range),
+                    )));
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        global_pool().run_scoped(jobs);
+    }
+    slots
+        .into_iter()
+        .map(|s| match s.expect("batch job ran to completion") {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for threads in [1, 2, 3, 7, 16] {
+            for n in [0usize, 1, 2, 7, 100, 101] {
+                let ranges = Parallelism::with_threads(threads).chunk_ranges(n);
+                let mut next = 0usize;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "contiguous");
+                    assert!(r.end > r.start, "non-empty chunk");
+                    next = r.end;
+                }
+                assert_eq!(next, n, "covers 0..{n} at {threads} threads");
+                assert!(ranges.len() <= threads.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_weighted_cover_and_balance() {
+        // Heavily skewed weights: all mass in the last item.
+        let cum = vec![0usize, 0, 0, 0, 100];
+        let ranges = Parallelism::with_threads(4).chunk_ranges_weighted(&cum);
+        let mut next = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, next);
+            assert!(r.end > r.start);
+            next = r.end;
+        }
+        assert_eq!(next, 4);
+        // Uniform weights split evenly.
+        let cum: Vec<usize> = (0..=8).map(|i| i * 10).collect();
+        let ranges = Parallelism::with_threads(2).chunk_ranges_weighted(&cum);
+        assert_eq!(ranges, vec![0..4, 4..8]);
+        // Zero total weight falls back to count-based chunks.
+        let ranges = Parallelism::with_threads(2).chunk_ranges_weighted(&[0, 0, 0]);
+        assert_eq!(ranges, vec![0..1, 1..2]);
+        // No items.
+        assert!(Parallelism::with_threads(4).chunk_ranges_weighted(&[0]).is_empty());
+        assert!(Parallelism::with_threads(4).chunk_ranges_weighted(&[]).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_ranges_orders_results() {
+        let ranges = Parallelism::with_threads(4).chunk_ranges(1000);
+        let sums = parallel_map_ranges(ranges.clone(), |r| r.sum::<usize>());
+        assert_eq!(sums.len(), ranges.len());
+        assert_eq!(sums.iter().sum::<usize>(), (0..1000).sum::<usize>());
+        // Results line up with their ranges, not with completion order.
+        for (r, s) in ranges.into_iter().zip(&sums) {
+            assert_eq!(*s, r.sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn kernel_panic_propagates_with_payload() {
+        let result = std::panic::catch_unwind(|| {
+            let ranges = Parallelism::with_threads(4).chunk_ranges(100);
+            parallel_map_ranges(ranges, |r| {
+                if r.contains(&50) {
+                    panic!("chunk failure at 50");
+                }
+                r.len()
+            })
+        });
+        let payload = result.expect_err("must propagate the chunk panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("chunk failure at 50"), "payload preserved, got {msg:?}");
+    }
+
+    #[test]
+    fn serial_flag_and_defaults() {
+        assert!(Parallelism::serial().is_serial());
+        assert!(!Parallelism::with_threads(4).is_serial());
+        assert_eq!(Parallelism::with_threads(0).threads, 1);
+        assert!(Parallelism::current().threads >= 1);
+    }
+}

@@ -1,10 +1,18 @@
 //! A small fixed-size thread pool over `std::thread`.
 //!
-//! Used by the ingest pipeline and the parallel store scanner. Jobs are
-//! `FnOnce` closures; `join` blocks until all submitted jobs complete.
-//! Backpressure between pipeline stages is *not* handled here — that is
-//! the bounded channels in [`crate::pipeline`] — the pool is purely a
-//! worker-thread reuse mechanism.
+//! Used by the parallel compute kernels (via
+//! [`crate::util::parallel::global_pool`]), the parallel store scanner,
+//! and available to the ingest pipeline. Jobs are `FnOnce` closures;
+//! `join` blocks until all submitted jobs complete, and
+//! [`ThreadPool::run_scoped`] extends that to borrowing (non-`'static`)
+//! jobs for fork-join kernels. Backpressure between pipeline stages is
+//! *not* handled here — that is the bounded channels in
+//! [`crate::pipeline`] — the pool is purely a worker-thread reuse
+//! mechanism.
+//!
+//! A job that panics does not poison the pool: the worker catches the
+//! unwind, counts it in [`ThreadPool::jobs_panicked`], and keeps
+//! serving, so `join` always returns.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -19,6 +27,7 @@ pub struct ThreadPool {
     workers: Vec<JoinHandle<()>>,
     in_flight: Arc<(Mutex<usize>, Condvar)>,
     executed: Arc<AtomicUsize>,
+    panicked: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -33,18 +42,20 @@ impl ThreadPool {
         let rx = Arc::new(Mutex::new(rx));
         let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
         let executed = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicUsize::new(0));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let in_flight = Arc::clone(&in_flight);
                 let executed = Arc::clone(&executed);
+                let panicked = Arc::clone(&panicked);
                 std::thread::Builder::new()
                     .name(format!("d4m-pool-{i}"))
-                    .spawn(move || worker_loop(&rx, &in_flight, &executed))
+                    .spawn(move || worker_loop(&rx, &in_flight, &executed, &panicked))
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, in_flight, executed }
+        ThreadPool { tx: Some(tx), workers, in_flight, executed, panicked }
     }
 
     /// Pool sized to available parallelism (at least 2).
@@ -79,12 +90,71 @@ impl ThreadPool {
     pub fn jobs_executed(&self) -> usize {
         self.executed.load(Ordering::Relaxed)
     }
+
+    /// Number of executed jobs that panicked (caught, not fatal).
+    pub fn jobs_panicked(&self) -> usize {
+        self.panicked.load(Ordering::Relaxed)
+    }
+
+    /// Submit a batch of *borrowing* jobs and block until every job in
+    /// **this batch** has finished — the fork-join primitive behind the
+    /// parallel compute kernels. Completion is tracked per batch, so
+    /// concurrent `run_scoped` callers (or unrelated `execute` jobs) on
+    /// the shared pool never stall each other's return.
+    ///
+    /// Unlike [`ThreadPool::execute`], jobs need not be `'static`: they
+    /// may borrow from the caller's stack, which is safe because this
+    /// method does not return until every batch job has run to
+    /// completion (a panicking job still counts as complete — the
+    /// batch counter is decremented by a drop guard that runs during
+    /// unwinding — its output is simply never produced).
+    ///
+    /// Jobs must not themselves submit to (and wait on) this pool:
+    /// nested fork-join on a saturated pool can deadlock.
+    pub fn run_scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        /// Decrements the batch counter on drop — also during unwind.
+        struct BatchGuard(Arc<(Mutex<usize>, Condvar)>);
+        impl Drop for BatchGuard {
+            fn drop(&mut self) {
+                let (lock, cvar) = &*self.0;
+                let mut n = lock.lock().unwrap();
+                *n -= 1;
+                if *n == 0 {
+                    cvar.notify_all();
+                }
+            }
+        }
+
+        let batch = Arc::new((Mutex::new(jobs.len()), Condvar::new()));
+        for job in jobs {
+            let guard = BatchGuard(Arc::clone(&batch));
+            let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let _guard = guard;
+                job();
+            });
+            // SAFETY: the transmute only erases the `'env` lifetime
+            // bound. The wait below blocks until this batch's counter
+            // reaches zero, and every job decrements it exactly once
+            // (via the drop guard, even on panic — worker_loop catches
+            // the unwind), so no job can outlive the borrows it
+            // captures.
+            let wrapped: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(wrapped) };
+            self.execute(wrapped);
+        }
+        let (lock, cvar) = &*batch;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+    }
 }
 
 fn worker_loop(
     rx: &Mutex<Receiver<Job>>,
     in_flight: &(Mutex<usize>, Condvar),
     executed: &AtomicUsize,
+    panicked: &AtomicUsize,
 ) {
     loop {
         let job = {
@@ -93,8 +163,13 @@ fn worker_loop(
         };
         match job {
             Ok(job) => {
-                job();
+                // Catch panics so one bad job can't wedge `join` (the
+                // in-flight count must reach zero even on unwind).
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                 executed.fetch_add(1, Ordering::Relaxed);
+                if outcome.is_err() {
+                    panicked.fetch_add(1, Ordering::Relaxed);
+                }
                 let (lock, cvar) = in_flight;
                 let mut n = lock.lock().unwrap();
                 *n -= 1;
@@ -179,5 +254,53 @@ mod tests {
     #[should_panic]
     fn zero_workers_panics() {
         let _ = ThreadPool::new(0);
+    }
+
+    #[test]
+    fn run_scoped_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let input: Vec<u64> = (0..100).collect();
+        let mut partials = [0u64; 4];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = partials
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    let chunk = &input[i * 25..(i + 1) * 25];
+                    Box::new(move || *slot = chunk.iter().sum()) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(partials.iter().sum::<u64>(), 4950);
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge_join() {
+        let pool = ThreadPool::new(2);
+        let ok = Arc::new(AtomicU64::new(0));
+        for i in 0..10 {
+            let ok = Arc::clone(&ok);
+            pool.execute(move || {
+                if i == 3 {
+                    panic!("injected failure");
+                }
+                ok.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join(); // must return despite the panic
+        assert_eq!(ok.load(Ordering::Relaxed), 9);
+        assert_eq!(pool.jobs_panicked(), 1);
+        assert_eq!(pool.jobs_executed(), 10);
+        // The pool still works after a panic.
+        let again = Arc::new(AtomicU64::new(0));
+        for _ in 0..5 {
+            let a = Arc::clone(&again);
+            pool.execute(move || {
+                a.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(again.load(Ordering::Relaxed), 5);
     }
 }

@@ -1,0 +1,416 @@
+//! Determinism-first equivalence suite for the parallel compute core.
+//!
+//! Contract under test: for every figure operation (constructor with
+//! numeric and string values, `+`, `*`, `@`) and every builtin
+//! semiring, the parallel result at `threads ∈ {2, 4, 7}` is
+//! **byte-identical** to the `threads == 1` (exact serial code path)
+//! result — same keys, same value pool, same adj triples bit-for-bit,
+//! same checksum. Checked at bench scale (`Workload::generate`) and on
+//! adversarial shapes (empty, 1×n, n×1, all-collisions), plus the
+//! parallel tablet scan against the serial scan.
+
+use d4m::assoc::{Aggregator, Assoc, Key, ValsInput};
+use d4m::bench::Workload;
+use d4m::semiring::{MaxMin, MaxPlus, MinPlus, PlusTimes, Semiring};
+use d4m::store::{ScanRange, Table, TableConfig, Triple};
+use d4m::util::Parallelism;
+
+/// Thread counts exercised against the serial baseline. 7 is
+/// deliberately not a power of two (uneven chunk boundaries).
+const THREADS: [usize; 3] = [2, 4, 7];
+
+fn builtin_semirings() -> Vec<Box<dyn Semiring>> {
+    vec![Box::new(PlusTimes), Box::new(MaxPlus), Box::new(MinPlus), Box::new(MaxMin)]
+}
+
+fn keys(ss: &[String]) -> Vec<Key> {
+    ss.iter().map(|s| Key::str(s.as_str())).collect()
+}
+
+/// Byte-level fingerprint of an `Assoc`: every attribute the paper
+/// stores, with values taken as raw bits (so `-0.0` vs `0.0` or NaN
+/// payload drift would be caught, unlike `f64` equality).
+#[derive(Debug, PartialEq, Eq)]
+struct Fingerprint {
+    rows: Vec<String>,
+    cols: Vec<String>,
+    numeric: bool,
+    pool: Vec<String>,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    value_bits: Vec<u64>,
+    checksum: u64,
+}
+
+fn fingerprint(a: &Assoc) -> Fingerprint {
+    let rows: Vec<String> = a.row_keys().iter().map(|k| k.to_string()).collect();
+    let cols: Vec<String> = a.col_keys().iter().map(|k| k.to_string()).collect();
+    let pool: Vec<String> = a
+        .values()
+        .strings()
+        .map(|p| p.iter().map(|s| s.to_string()).collect())
+        .unwrap_or_default();
+    let indptr = a.adj().indptr().to_vec();
+    let indices = a.adj().indices().to_vec();
+    let value_bits: Vec<u64> = a.adj().values().iter().map(|v| v.to_bits()).collect();
+
+    // FNV-1a over the serialized attributes.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for s in rows.iter().chain(&cols).chain(&pool) {
+        eat(s.as_bytes());
+        eat(&[0xff]);
+    }
+    for &p in &indptr {
+        eat(&(p as u64).to_le_bytes());
+    }
+    for &c in &indices {
+        eat(&c.to_le_bytes());
+    }
+    for &v in &value_bits {
+        eat(&v.to_le_bytes());
+    }
+    Fingerprint {
+        rows,
+        cols,
+        numeric: a.is_numeric(),
+        pool,
+        indptr,
+        indices,
+        value_bits,
+        checksum: h,
+    }
+}
+
+/// Assert byte-identity (readable structural diff first, then the
+/// bit-exact fingerprint including the checksum).
+fn assert_identical(serial: &Assoc, parallel: &Assoc, ctx: &str) {
+    assert_eq!(serial, parallel, "{ctx}: structural mismatch");
+    assert_eq!(fingerprint(serial), fingerprint(parallel), "{ctx}: fingerprint mismatch");
+}
+
+// ---------------------------------------------------------------------
+// Constructor (Figures 3–4)
+// ---------------------------------------------------------------------
+
+#[test]
+fn construct_numeric_equivalence_bench_scale() {
+    let w = Workload::generate(8, 0xC0FF_EE01);
+    for agg in [
+        Aggregator::Min,
+        Aggregator::Max,
+        Aggregator::Sum,
+        Aggregator::Prod,
+        Aggregator::First,
+        Aggregator::Last,
+    ] {
+        let serial = Assoc::try_new_par(
+            keys(&w.rows),
+            keys(&w.cols),
+            ValsInput::Num(w.num_vals.clone()),
+            agg.clone(),
+            Parallelism::serial(),
+        )
+        .unwrap();
+        for t in THREADS {
+            let par = Assoc::try_new_par(
+                keys(&w.rows),
+                keys(&w.cols),
+                ValsInput::Num(w.num_vals.clone()),
+                agg.clone(),
+                Parallelism::with_threads(t),
+            )
+            .unwrap();
+            assert_identical(&serial, &par, &format!("construct numeric {agg:?} t={t}"));
+        }
+    }
+}
+
+#[test]
+fn construct_string_equivalence_bench_scale() {
+    let w = Workload::generate(8, 0xC0FF_EE02);
+    for agg in [
+        Aggregator::Min,
+        Aggregator::Max,
+        Aggregator::First,
+        Aggregator::Last,
+        Aggregator::Concat(";".into()),
+    ] {
+        let serial = Assoc::try_new_par(
+            keys(&w.rows),
+            keys(&w.cols),
+            ValsInput::Str(w.str_vals.clone()),
+            agg.clone(),
+            Parallelism::serial(),
+        )
+        .unwrap();
+        for t in THREADS {
+            let par = Assoc::try_new_par(
+                keys(&w.rows),
+                keys(&w.cols),
+                ValsInput::Str(w.str_vals.clone()),
+                agg.clone(),
+                Parallelism::with_threads(t),
+            )
+            .unwrap();
+            assert_identical(&serial, &par, &format!("construct string {agg:?} t={t}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Binary figure ops (Figures 5–7) over every builtin semiring
+// ---------------------------------------------------------------------
+
+/// Bench-scale numeric operands (n = 10 is the acceptance workload;
+/// large enough that every parallel gate actually fans out).
+fn bench_operands() -> (Assoc, Assoc) {
+    let w = Workload::generate(10, 0xD4A7_0001);
+    let a = Assoc::try_new_par(
+        keys(&w.rows),
+        keys(&w.cols),
+        ValsInput::Num(w.num_vals.clone()),
+        Aggregator::Min,
+        Parallelism::serial(),
+    )
+    .unwrap();
+    let b = Assoc::try_new_par(
+        keys(&w.rows2),
+        keys(&w.cols2),
+        ValsInput::Num(w.num_vals.clone()),
+        Aggregator::Min,
+        Parallelism::serial(),
+    )
+    .unwrap();
+    (a, b)
+}
+
+#[test]
+fn add_equivalence_all_semirings() {
+    let (a, b) = bench_operands();
+    for s in builtin_semirings() {
+        let serial = a.add_with_par(&b, s.as_ref(), Parallelism::serial());
+        for t in THREADS {
+            let par = a.add_with_par(&b, s.as_ref(), Parallelism::with_threads(t));
+            assert_identical(&serial, &par, &format!("add {} t={t}", s.name()));
+        }
+    }
+}
+
+#[test]
+fn elemmul_equivalence_all_semirings() {
+    let (a, b) = bench_operands();
+    for s in builtin_semirings() {
+        let serial = a.elemmul_with_par(&b, s.as_ref(), Parallelism::serial());
+        for t in THREADS {
+            let par = a.elemmul_with_par(&b, s.as_ref(), Parallelism::with_threads(t));
+            assert_identical(&serial, &par, &format!("elemmul {} t={t}", s.name()));
+        }
+    }
+}
+
+#[test]
+fn matmul_equivalence_all_semirings() {
+    let (a, b) = bench_operands();
+    for s in builtin_semirings() {
+        let serial = a.matmul_with_par(&b, s.as_ref(), Parallelism::serial());
+        assert!(!serial.is_empty(), "matmul workload must produce output");
+        for t in THREADS {
+            let par = a.matmul_with_par(&b, s.as_ref(), Parallelism::with_threads(t));
+            assert_identical(&serial, &par, &format!("matmul {} t={t}", s.name()));
+        }
+    }
+}
+
+#[test]
+fn string_ops_equivalence() {
+    // String `+` (concat combine), string `*` (lex min), string × mask.
+    let w = Workload::generate(8, 0xD4A7_0002);
+    let mk = |rows: &[String], cols: &[String], par: Parallelism| {
+        Assoc::try_new_par(
+            keys(rows),
+            keys(cols),
+            ValsInput::Str(w.str_vals.clone()),
+            Aggregator::Min,
+            par,
+        )
+        .unwrap()
+    };
+    let a = mk(&w.rows, &w.cols, Parallelism::serial());
+    let b = mk(&w.rows2, &w.cols2, Parallelism::serial());
+    let mask = Assoc::try_new_par(
+        keys(&w.rows2),
+        keys(&w.cols2),
+        ValsInput::NumScalar(1.0),
+        Aggregator::Min,
+        Parallelism::serial(),
+    )
+    .unwrap();
+    let add1 = a.add_par(&b, Parallelism::serial());
+    let mul1 = a.elemmul_par(&b, Parallelism::serial());
+    let msk1 = a.elemmul_par(&mask, Parallelism::serial());
+    for t in THREADS {
+        let par = Parallelism::with_threads(t);
+        assert_identical(&add1, &a.add_par(&b, par), &format!("string add t={t}"));
+        assert_identical(&mul1, &a.elemmul_par(&b, par), &format!("string elemmul t={t}"));
+        assert_identical(&msk1, &a.elemmul_par(&mask, par), &format!("string mask t={t}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adversarial shapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn adversarial_empty_operands() {
+    let e = Assoc::empty();
+    let (a, _) = bench_operands();
+    for t in THREADS {
+        let par = Parallelism::with_threads(t);
+        assert_identical(&e.matmul_par(&e, Parallelism::serial()), &e.matmul_par(&e, par), "∅@∅");
+        assert_identical(&a.add_par(&e, Parallelism::serial()), &a.add_par(&e, par), "A+∅");
+        assert_identical(
+            &a.elemmul_par(&e, Parallelism::serial()),
+            &a.elemmul_par(&e, par),
+            "A*∅",
+        );
+        // Empty constructor inputs.
+        let c = Assoc::try_new_par(
+            Vec::new(),
+            Vec::new(),
+            ValsInput::Num(Vec::new()),
+            Aggregator::Min,
+            par,
+        )
+        .unwrap();
+        assert_identical(&e, &c, "empty constructor");
+    }
+}
+
+#[test]
+fn adversarial_single_row_and_single_column() {
+    // Big enough to clear every parallel gate, small enough that the
+    // n×n outer product below stays cheap.
+    let n = 600usize;
+    let wide_cols: Vec<String> = (0..n).map(|i| format!("c{i:05}")).collect();
+    let one_row: Vec<String> = vec!["r".to_string(); n];
+    let vals: Vec<f64> = (0..n).map(|i| (i % 97 + 1) as f64).collect();
+
+    // 1×n and n×1 constructors.
+    let mk = |rows: &[String], cols: &[String], par: Parallelism| {
+        Assoc::try_new_par(
+            keys(rows),
+            keys(cols),
+            ValsInput::Num(vals.clone()),
+            Aggregator::Sum,
+            par,
+        )
+        .unwrap()
+    };
+    let wide1 = mk(&one_row, &wide_cols, Parallelism::serial());
+    let tall1 = mk(&wide_cols, &one_row, Parallelism::serial());
+    assert_eq!(wide1.shape(), (1, n));
+    assert_eq!(tall1.shape(), (n, 1));
+    // (1×n) @ (n×1) → 1×1 and (n×1) @ (1×n) → n×n contraction shapes.
+    let dot1 = wide1.matmul_par(&tall1, Parallelism::serial());
+    let outer1 = tall1.matmul_par(&wide1, Parallelism::serial());
+    for t in THREADS {
+        let par = Parallelism::with_threads(t);
+        assert_identical(&wide1, &mk(&one_row, &wide_cols, par), &format!("1×n ctor t={t}"));
+        assert_identical(&tall1, &mk(&wide_cols, &one_row, par), &format!("n×1 ctor t={t}"));
+        assert_identical(&dot1, &wide1.matmul_par(&tall1, par), &format!("1×n @ n×1 t={t}"));
+        assert_identical(&outer1, &tall1.matmul_par(&wide1, par), &format!("n×1 @ 1×n t={t}"));
+    }
+}
+
+#[test]
+fn adversarial_all_collisions() {
+    // Every triple lands on the same (row, col) cell.
+    let n = 2000usize;
+    let rows: Vec<String> = vec!["r".to_string(); n];
+    let cols: Vec<String> = vec!["c".to_string(); n];
+    let vals: Vec<f64> = (0..n).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
+    for agg in [Aggregator::Min, Aggregator::Max, Aggregator::Sum, Aggregator::Last] {
+        let serial = Assoc::try_new_par(
+            keys(&rows),
+            keys(&cols),
+            ValsInput::Num(vals.clone()),
+            agg.clone(),
+            Parallelism::serial(),
+        )
+        .unwrap();
+        for t in THREADS {
+            let par = Assoc::try_new_par(
+                keys(&rows),
+                keys(&cols),
+                ValsInput::Num(vals.clone()),
+                agg.clone(),
+                Parallelism::with_threads(t),
+            )
+            .unwrap();
+            assert_identical(&serial, &par, &format!("all-collisions {agg:?} t={t}"));
+        }
+    }
+    // String flavour: identical keys, colliding string values.
+    let svals: Vec<String> = (0..n).map(|i| format!("v{:03}", i % 50)).collect();
+    let serial = Assoc::try_new_par(
+        keys(&rows),
+        keys(&cols),
+        ValsInput::Str(svals.clone()),
+        Aggregator::Min,
+        Parallelism::serial(),
+    )
+    .unwrap();
+    for t in THREADS {
+        let par = Assoc::try_new_par(
+            keys(&rows),
+            keys(&cols),
+            ValsInput::Str(svals.clone()),
+            Aggregator::Min,
+            Parallelism::with_threads(t),
+        )
+        .unwrap();
+        assert_identical(&serial, &par, &format!("all-collisions string t={t}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parallel tablet scan
+// ---------------------------------------------------------------------
+
+#[test]
+fn table_scan_equivalence_across_tablets() {
+    // Small split threshold → many tablets, so the scan really fans
+    // out. Splits happen at most once per write_batch call, so write
+    // many small batches.
+    let table = Table::new("t", TableConfig { split_threshold: 512, write_latency_us: 0 });
+    let triples: Vec<Triple> = (0..2000)
+        .map(|i| Triple::new(format!("row{i:05}"), format!("c{}", i % 7), format!("v{i}")))
+        .collect();
+    for chunk in triples.chunks(10) {
+        table.write_batch(chunk.to_vec()).unwrap();
+    }
+    assert!(table.tablet_count() > 4, "expected many tablets, got {}", table.tablet_count());
+
+    let full1 = table.scan_par(ScanRange::all(), Parallelism::serial());
+    assert_eq!(full1.len(), 2000);
+    let ranged = ScanRange::rows("row00500", "row01500");
+    let ranged1 = table.scan_par(ranged.clone(), Parallelism::serial());
+    assert_eq!(ranged1.len(), 1000);
+    let assoc1 = table.scan_to_assoc_par(ScanRange::all(), Parallelism::serial());
+    for t in THREADS {
+        let par = Parallelism::with_threads(t);
+        assert_eq!(full1, table.scan_par(ScanRange::all(), par), "full scan t={t}");
+        assert_eq!(ranged1, table.scan_par(ranged.clone(), par), "ranged scan t={t}");
+        assert_identical(
+            &assoc1,
+            &table.scan_to_assoc_par(ScanRange::all(), par),
+            &format!("scan_to_assoc t={t}"),
+        );
+    }
+}

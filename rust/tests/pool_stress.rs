@@ -1,0 +1,151 @@
+//! Concurrency stress tests for the thread pool and the ingest
+//! pipeline: saturate bounded queues well past their depth, assert no
+//! deadlock (every body runs under a watchdog so a hang fails fast
+//! instead of wedging CI), every job executes exactly once, and the
+//! pipeline's queue-full stall accounting fires under a tiny
+//! `queue_depth`.
+
+use d4m::assoc::{Aggregator, Assoc, ValsInput};
+use d4m::bench::Workload;
+use d4m::pipeline::{IngestPipeline, PipelineConfig};
+use d4m::store::{Table, TableConfig, Triple, WriterConfig};
+use d4m::util::{Parallelism, ThreadPool};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Run `body` on a helper thread and fail fast if it exceeds
+/// `timeout` — a deadlock shows up as a clean test failure, not a hung
+/// test runner. Generous bounds: these bodies finish in well under a
+/// second on any machine; the timeout only trips on a real hang.
+fn with_watchdog(name: &str, timeout: Duration, body: impl FnOnce() + Send + 'static) {
+    let handle = std::thread::Builder::new()
+        .name(format!("stress-{name}"))
+        .spawn(body)
+        .expect("spawn stress body");
+    let start = Instant::now();
+    while !handle.is_finished() {
+        assert!(
+            start.elapsed() <= timeout,
+            "{name}: suspected deadlock — still running after {timeout:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.join().unwrap_or_else(|e| std::panic::resume_unwind(e));
+}
+
+#[test]
+fn pool_saturation_runs_every_job_exactly_once() {
+    with_watchdog("pool-saturation", Duration::from_secs(60), || {
+        // 2 workers → bounded queue of 8 jobs; submit 10 000 so the
+        // producer repeatedly blocks on a full queue.
+        let pool = ThreadPool::new(2);
+        let n_jobs = 10_000usize;
+        let per_job: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n_jobs).map(|_| AtomicUsize::new(0)).collect());
+        for i in 0..n_jobs {
+            let per_job = Arc::clone(&per_job);
+            pool.execute(move || {
+                per_job[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(pool.jobs_executed(), n_jobs);
+        assert_eq!(pool.jobs_panicked(), 0);
+        for (i, c) in per_job.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "job {i} ran a wrong number of times");
+        }
+    });
+}
+
+#[test]
+fn pool_saturation_from_many_producers() {
+    with_watchdog("pool-multi-producer", Duration::from_secs(60), || {
+        let pool = Arc::new(ThreadPool::new(2));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let producers: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let counter = Arc::clone(&counter);
+                std::thread::spawn(move || {
+                    for _ in 0..2_500 {
+                        let counter = Arc::clone(&counter);
+                        pool.execute(move || {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().expect("producer panicked");
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 10_000);
+        assert_eq!(pool.jobs_executed(), 10_000);
+    });
+}
+
+#[test]
+fn concurrent_parallel_kernels_share_the_global_pool() {
+    // Several threads running parallel matmuls at once must neither
+    // deadlock the shared pool nor corrupt each other's chunk slots.
+    with_watchdog("concurrent-kernels", Duration::from_secs(120), || {
+        let w = Workload::generate(8, 0x5A5A);
+        let a = Arc::new(
+            Assoc::try_new_par(
+                w.rows.iter().map(|s| s.as_str().into()).collect(),
+                w.cols.iter().map(|s| s.as_str().into()).collect(),
+                ValsInput::Num(w.num_vals.clone()),
+                Aggregator::Min,
+                Parallelism::serial(),
+            )
+            .unwrap(),
+        );
+        let expect = Arc::new(a.matmul_par(&a, Parallelism::serial()));
+        let runners: Vec<_> = (0..4)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                let expect = Arc::clone(&expect);
+                std::thread::spawn(move || {
+                    for t in [2usize, 4, 7] {
+                        let got = a.matmul_par(&a, Parallelism::with_threads(t));
+                        assert_eq!(got, *expect, "concurrent matmul t={t}");
+                    }
+                })
+            })
+            .collect();
+        for r in runners {
+            r.join().expect("kernel runner panicked");
+        }
+    });
+}
+
+#[test]
+fn pipeline_tiny_queue_counts_stalls_and_loses_nothing() {
+    with_watchdog("pipeline-backpressure", Duration::from_secs(120), || {
+        // Slow table writes + queue_depth 1 + tiny write buffer: the
+        // producer must hit the queue-full path many times, and every
+        // triple must still land exactly once.
+        let table = Arc::new(Table::new(
+            "t",
+            TableConfig { split_threshold: 1 << 16, write_latency_us: 200 },
+        ));
+        let mut p = IngestPipeline::start(
+            Arc::clone(&table),
+            PipelineConfig {
+                workers: 2,
+                queue_depth: 1,
+                writer: WriterConfig { batch_bytes: 256, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let n = 4_000usize;
+        p.submit_all((0..n).map(|i| Triple::new(format!("row{i:06}"), "c", "v")));
+        let report = p.finish();
+        assert_eq!(report.submitted, n);
+        assert_eq!(report.written, n, "no triple may be dropped or duplicated");
+        assert!(report.stalls > 0, "tiny queue must produce queue-full stalls");
+        assert_eq!(table.len(), n);
+    });
+}
