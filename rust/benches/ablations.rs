@@ -11,16 +11,26 @@
 //!   worker counts (`threads = 1` is the exact serial code path),
 //!   ending with a serial-vs-parallel speedup line so BENCH captures
 //!   the scaling trajectory over time.
+//! * **accumulator policy** — the adaptive SpGEMM engine vs the PR 1
+//!   dense-scratch kernel (`AccumulatorPolicy::Dense`) on a
+//!   hypersparse (1 nnz/row) workload, the regime the D4M papers show
+//!   associative-array products live in.
+//!
+//! Besides the CSV, the run writes the machine-readable perf
+//! trajectory `BENCH_PR2.json` (op, scale, threads, ns/op, speedup)
+//! for `scripts/summarize_results.py` and the CI artifact.
 //!
 //! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
-//! [--threads-n N]` (`--threads-n` sets the scale of the thread sweep;
-//! default 10, the acceptance workload).
+//! [--threads-n N] [--hyper-scale S]` (`--threads-n` sets the scale of
+//! the thread sweep; default 10, the acceptance workload.
+//! `--hyper-scale` sets the hypersparse matmul to 2^S rows; default
+//! 14).
 
 use d4m::assoc::{keys_from, Aggregator, Assoc, ValsInput};
-use d4m::bench::{FigureHarness, Workload};
+use d4m::bench::{BenchRecord, FigureHarness, Workload};
 use d4m::semiring::PlusTimes;
-use d4m::sparse::{spgemm, CooMatrix};
-use d4m::util::{time_op, Args, Parallelism};
+use d4m::sparse::{spgemm, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix};
+use d4m::util::{time_op, Args, Parallelism, SplitMix64};
 
 fn main() {
     let args = Args::from_env();
@@ -171,6 +181,80 @@ fn main() {
         speedup(&ctor_means, 2),
         speedup(&ctor_means, 3),
     );
+    let mut records: Vec<BenchRecord> = Vec::new();
+    for (i, &threads) in sweep.iter().enumerate() {
+        records.push(BenchRecord {
+            op: "matmul".into(),
+            scale: tn,
+            threads,
+            ns_per_op: matmul_means[i] * 1e9,
+            speedup: speedup(&matmul_means, i),
+        });
+        records.push(BenchRecord {
+            op: "constructor".into(),
+            scale: tn,
+            threads,
+            ns_per_op: ctor_means[i] * 1e9,
+            speedup: speedup(&ctor_means, i),
+        });
+    }
+
+    // --- accumulator policy: adaptive engine vs PR-1 dense scratch ------
+    // Hypersparse workload (1 nnz per row, the associative-array regime):
+    // the dense kernel pays an O(ncols) scratch row and scattered
+    // accumulator traffic per chunk; the adaptive engine's copy/sort/hash
+    // rows never touch O(ncols) state. Outputs are bit-identical (also
+    // enforced by tests/parallel_equivalence.rs), so the delta is pure
+    // accumulator cost.
+    let hscale = args.usize_or("hyper-scale", 14);
+    let hn = 1usize << hscale;
+    let mut rng = SplitMix64::new(0xAB1A7E5);
+    let hrows: Vec<usize> = (0..hn).collect();
+    let hcols: Vec<usize> = (0..hn).map(|_| rng.below_usize(hn)).collect();
+    let hvals: Vec<f64> = (0..hn).map(|i| (i % 9 + 1) as f64).collect();
+    let ha = CooMatrix::from_triples_aggregate(hn, hn, &hrows, &hcols, &hvals, 0.0, |x, _| x)
+        .expect("hypersparse triples")
+        .to_csr();
+    for &threads in &[1usize, 4] {
+        let par = Parallelism::with_threads(threads);
+        let policies = [
+            ("hyper-dense", AccumulatorPolicy::Dense),
+            ("hyper-adaptive", AccumulatorPolicy::Adaptive),
+        ];
+        let mut means = Vec::with_capacity(policies.len());
+        for &(label, policy) in &policies {
+            let mut nnz = 0usize;
+            let t = time_op(1, repeats, |_| {
+                let (c, _) = spgemm_with_policy_par(&ha, &ha, &PlusTimes, par, policy)
+                    .expect("square shapes");
+                nnz = c.nnz();
+                c
+            });
+            means.push(t.mean_s());
+            h.record(hscale, &format!("{label}-t{threads}"), t, nnz);
+        }
+        let hyper_speedup = if means[1] > 0.0 { means[0] / means[1] } else { 0.0 };
+        println!(
+            "[ablations] hypersparse 2^{hscale} t{threads}: dense={:.6}s adaptive={:.6}s \
+             adaptive-speedup={hyper_speedup:.2}x",
+            means[0], means[1],
+        );
+        records.push(BenchRecord {
+            op: "hypersparse-matmul-dense".into(),
+            scale: hscale,
+            threads,
+            ns_per_op: means[0] * 1e9,
+            speedup: 1.0,
+        });
+        records.push(BenchRecord {
+            op: "hypersparse-matmul-adaptive".into(),
+            scale: hscale,
+            threads,
+            ns_per_op: means[1] * 1e9,
+            speedup: hyper_speedup,
+        });
+    }
 
     h.write_csv(&out_dir).expect("write CSV");
+    d4m::bench::write_bench_json(&out_dir, "BENCH_PR2.json", &records).expect("write JSON");
 }

@@ -95,7 +95,24 @@ impl Assoc {
         if rpos.is_empty() || cpos.is_empty() {
             return Assoc::empty();
         }
-        let adj = self.adj.gather(&rpos, &cpos);
+        // Column-only selection (`A[:, keys]`): a full-length resolved
+        // row list is sorted, deduplicated and in-bounds, hence the
+        // identity — use the column-driven gather through the adj's
+        // cached transpose dual instead of scanning every row. Taken
+        // when the dual already exists, or when the selection is narrow
+        // enough that building it costs no more than one row scan; the
+        // dual then stays cached on `self`, so repeated column
+        // extractions amortize the build (the deliberate memoization
+        // bet: one extra retained copy of the adj arrays buys O(nnz)
+        // → O(selected) on every later column access). Either path
+        // yields bit-identical output.
+        let col_driven = rpos.len() == self.row.len()
+            && (self.adj.has_cached_dual() || cpos.len() * 4 <= self.col.len());
+        let adj = if col_driven {
+            self.adj.gather_cols(&cpos)
+        } else {
+            self.adj.gather(&rpos, &cpos)
+        };
         let row = rpos.iter().map(|&p| self.row[p].clone()).collect();
         let col = cpos.iter().map(|&p| self.col[p].clone()).collect();
         Assoc { row, col, val: self.val.clone(), adj }

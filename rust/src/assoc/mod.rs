@@ -248,7 +248,7 @@ impl Assoc {
             agg_fn,
         )
         .expect("index maps are in bounds by construction");
-        let adj = coo.to_csr();
+        let adj = coo.into_csr();
         Ok(Assoc { row: row_keys, col: col_keys, val: Values::Numeric, adj }.condensed())
     }
 
@@ -310,7 +310,7 @@ impl Assoc {
             row: row_keys,
             col: col_keys,
             val: Values::Strings(pool.into_iter().map(String::into_boxed_str).collect()),
-            adj: coo.to_csr(),
+            adj: coo.into_csr(),
         };
         Ok(assoc.strip_empty_string().condense_pool().condensed())
     }
@@ -363,7 +363,7 @@ impl Assoc {
             row: row_keys,
             col: col_keys,
             val: Values::Strings(pool.into_iter().map(String::into_boxed_str).collect()),
-            adj: coo.to_csr(),
+            adj: coo.into_csr(),
         };
         assoc.strip_empty_string().condense_pool().condensed()
     }

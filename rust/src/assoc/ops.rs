@@ -297,9 +297,17 @@ impl Assoc {
         if k.keys.is_empty() {
             return Assoc::empty();
         }
-        let all_rows: Vec<usize> = (0..a.row.len()).collect();
+        // Restricting A to the contraction columns keeps all rows: when
+        // A's transpose dual is already cached (A was transposed or
+        // column-indexed earlier), the column-driven gather skips the
+        // full row scan. Bit-identical either way.
+        let ga = if a.adj.has_cached_dual() {
+            a.adj.gather_cols(&k.map_left)
+        } else {
+            let all_rows: Vec<usize> = (0..a.row.len()).collect();
+            a.adj.gather(&all_rows, &k.map_left)
+        };
         let all_cols: Vec<usize> = (0..b.col.len()).collect();
-        let ga = a.adj.gather(&all_rows, &k.map_left);
         let gb = b.adj.gather(&k.map_right, &all_cols);
         let adj = spgemm_par(&ga, &gb, s, par).expect("contracted shapes match");
         Assoc { row: a.row.clone(), col: b.col.clone(), val: Values::Numeric, adj }.condensed()

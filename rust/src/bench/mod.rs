@@ -16,6 +16,7 @@ pub use workload::Workload;
 
 use crate::util::human;
 use crate::util::timer::Timings;
+use crate::util::Json;
 use std::io::Write;
 
 /// One measured point of a figure series.
@@ -97,6 +98,54 @@ impl FigureHarness {
     }
 }
 
+/// One machine-readable performance record — the unit of the repo's
+/// perf-trajectory files (`BENCH_PR2.json`, …), consumed by
+/// `scripts/summarize_results.py` and archived as a CI artifact.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Operation label, e.g. `"hypersparse-matmul-adaptive"`.
+    pub op: String,
+    /// Problem scale exponent (workload is ~2ⁿ-sized).
+    pub scale: usize,
+    /// Worker count the measurement ran at.
+    pub threads: usize,
+    /// Mean wall-clock per operation, in nanoseconds.
+    pub ns_per_op: f64,
+    /// Speedup vs the record's baseline (the baseline itself records
+    /// `1.0`; see each bench's printed legend for what it compares).
+    pub speedup: f64,
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("op".into(), Json::str(&self.op)),
+            ("scale".into(), Json::Num(self.scale as f64)),
+            ("threads".into(), Json::Num(self.threads as f64)),
+            ("ns_per_op".into(), Json::Num(self.ns_per_op)),
+            ("speedup".into(), Json::Num(self.speedup)),
+        ])
+    }
+}
+
+/// Write `<dir>/<name>` as `{"schema": "d4m-bench-v1", "records":
+/// [...]}` — the machine-readable companion to the figure CSVs.
+pub fn write_bench_json(
+    dir: &str,
+    name: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = std::path::Path::new(dir).join(name);
+    let doc = Json::Obj(vec![
+        ("schema".into(), Json::str("d4m-bench-v1")),
+        ("records".into(), Json::Arr(records.iter().map(BenchRecord::to_json).collect())),
+    ]);
+    std::fs::write(&path, doc.render() + "\n")?;
+    println!("[bench] wrote {}", path.display());
+    Ok(path)
+}
+
 /// Standard bench CLI: `--min-n`, `--max-n`, `--repeats`, `--full`,
 /// `--out <dir>`, `--threads <N>`. `--full` runs the paper's full
 /// range; the default is a reduced sweep so `cargo bench` completes
@@ -144,10 +193,13 @@ impl BenchParams {
 
     /// Install `--threads` as the process-default
     /// [`crate::util::Parallelism`] — call once at bench start. Without
-    /// the flag the benches pin the serial code paths (`threads = 1`),
+    /// the flag, a `D4M_THREADS` environment variable applies; with
+    /// neither, the benches pin the serial code paths (`threads = 1`),
     /// keeping the engine comparison and historical CSVs meaningful.
     pub fn apply_parallelism(&self) {
-        crate::util::Parallelism::with_threads(self.threads.unwrap_or(1)).set_default();
+        let threads =
+            self.threads.or_else(crate::util::Parallelism::env_threads).unwrap_or(1);
+        crate::util::Parallelism::with_threads(threads).set_default();
     }
 
     /// The swept n values.
@@ -173,5 +225,24 @@ mod tests {
         assert_eq!(content.lines().count(), 3);
         assert!(content.contains("figtest,5,d4m-rs"));
         assert_eq!(h.points().len(), 2);
+    }
+
+    #[test]
+    fn bench_json_has_schema_and_fields() {
+        let recs = vec![BenchRecord {
+            op: "hypersparse-matmul-adaptive".into(),
+            scale: 14,
+            threads: 4,
+            ns_per_op: 1234.5,
+            speedup: 1.75,
+        }];
+        let dir = std::env::temp_dir().join("d4m-bench-json-test");
+        let path = write_bench_json(dir.to_str().unwrap(), "BENCH_TEST.json", &recs).unwrap();
+        let content = std::fs::read_to_string(path).unwrap();
+        assert!(content.contains("\"schema\":\"d4m-bench-v1\""));
+        assert!(content.contains("\"op\":\"hypersparse-matmul-adaptive\""));
+        assert!(content.contains("\"scale\":14"));
+        assert!(content.contains("\"threads\":4"));
+        assert!(content.contains("\"speedup\":1.75"));
     }
 }

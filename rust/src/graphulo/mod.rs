@@ -21,6 +21,7 @@
 
 use crate::assoc::Assoc;
 use crate::semiring::Semiring;
+use crate::sparse::{spgemm_par, CooMatrix, CsrMatrix};
 use crate::store::{BatchWriter, ScanRange, Table, Triple, WriterConfig};
 use crate::util::Parallelism;
 use std::collections::{BTreeMap, BTreeSet};
@@ -40,8 +41,14 @@ pub fn table_mult(a: &Table, b: &Table, out: &Arc<Table>, s: &dyn Semiring) -> u
 }
 
 /// [`table_mult`] with an explicit thread configuration: the two input
-/// scans fan out per tablet; the row-join itself is a single sorted
-/// merge (serial, like Graphulo's iterator).
+/// scans fan out per tablet, and the contraction itself runs on the
+/// adaptive SpGEMM engine — both scans are indexed into hypersparse CSR
+/// matrices over the shared (sorted) row dimension, `AᵀB` is one
+/// `spgemm_par` call against `A`'s cached transpose dual, and the
+/// result streams back out as triples. This replaces the old
+/// string-keyed `BTreeMap` outer-product accumulation (one map probe
+/// per ⊗) and is numerically identical to it: per output cell, partial
+/// products still combine in ascending row-key order.
 pub fn table_mult_par(
     a: &Table,
     b: &Table,
@@ -49,50 +56,94 @@ pub fn table_mult_par(
     s: &dyn Semiring,
     par: Parallelism,
 ) -> usize {
-    // Stream both tables (sorted by row); join rows with a merge.
     let ta = a.scan_par(ScanRange::all(), par);
     let tb = b.scan_par(ScanRange::all(), par);
-    let mut acc: BTreeMap<(String, String), f64> = BTreeMap::new();
-    let (mut i, mut j) = (0usize, 0usize);
-    while i < ta.len() && j < tb.len() {
-        let (ra, rb) = (&ta[i].row, &tb[j].row);
-        match ra.cmp(rb) {
-            std::cmp::Ordering::Less => i += 1,
-            std::cmp::Ordering::Greater => j += 1,
-            std::cmp::Ordering::Equal => {
-                // Rows match: form the outer product of this row's cells.
-                let row = ra.clone();
-                let a_start = i;
-                while i < ta.len() && ta[i].row == row {
-                    i += 1;
-                }
-                let b_start = j;
-                while j < tb.len() && tb[j].row == row {
-                    j += 1;
-                }
-                for ai in a_start..i {
-                    let av: f64 = ta[ai].val.parse().unwrap_or(0.0);
-                    for bj in b_start..j {
-                        let bv: f64 = tb[bj].val.parse().unwrap_or(0.0);
-                        let prod = s.mul(av, bv);
-                        acc.entry((ta[ai].col.clone(), tb[bj].col.clone()))
-                            .and_modify(|x| *x = s.add(*x, prod))
-                            .or_insert(prod);
-                    }
-                }
-            }
-        }
+    // Shared contraction dimension: merged distinct row keys (scans are
+    // sorted by row, so this is a linear merge).
+    let rows = merge_distinct(&distinct_rows(&ta), &distinct_rows(&tb));
+    if rows.is_empty() {
+        return 0;
     }
+    let (ma, cols_a) = scan_to_csr(&ta, &rows);
+    let (mb, cols_b) = scan_to_csr(&tb, &rows);
+    // `Aᵀ` row c1 walks the rows containing c1 in ascending key order —
+    // the same ⊕ order the streaming row-join produced.
+    let at = ma.transpose_cached();
+    let c = spgemm_par(at, &mb, s, par).expect("shared row dimension");
     let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
-    let mut cells = 0;
-    for ((c1, c2), v) in acc {
-        if v != s.zero() {
-            w.put(Triple::new(c1, c2, format_num(v)));
-            cells += 1;
+    let mut cells = 0usize;
+    for (i, &c1) in cols_a.iter().enumerate() {
+        let (cj, cv) = c.row(i);
+        for (j, v) in cj.iter().zip(cv) {
+            if *v != s.zero() {
+                w.put(Triple::new(c1, cols_b[*j as usize], format_num(*v)));
+                cells += 1;
+            }
         }
     }
     w.flush();
     cells
+}
+
+/// Distinct row keys of a (row-sorted) scan, in order.
+fn distinct_rows(scan: &[Triple]) -> Vec<&str> {
+    let mut out: Vec<&str> = Vec::new();
+    for t in scan {
+        if out.last() != Some(&t.row.as_str()) {
+            out.push(t.row.as_str());
+        }
+    }
+    out
+}
+
+/// Merge two sorted, distinct key lists into their sorted union.
+fn merge_distinct<'a>(x: &[&'a str], y: &[&'a str]) -> Vec<&'a str> {
+    let mut out = Vec::with_capacity(x.len().max(y.len()));
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < x.len() || j < y.len() {
+        let next = match (x.get(i), y.get(j)) {
+            (Some(&a), Some(&b)) => a.min(b),
+            (Some(&a), None) => a,
+            (None, Some(&b)) => b,
+            (None, None) => unreachable!(),
+        };
+        if i < x.len() && x[i] == next {
+            i += 1;
+        }
+        if j < y.len() && y[j] == next {
+            j += 1;
+        }
+        out.push(next);
+    }
+    out
+}
+
+/// Index a (row, col)-sorted scan into a CSR matrix over the given
+/// sorted row key space (a superset of the scan's rows). Returns the
+/// matrix and its sorted distinct column keys. Values parse like the
+/// streaming join did (`unwrap_or(0.0)`), and parsed zeros stay stored
+/// so non-plus-times semirings see exactly the cells the table holds.
+fn scan_to_csr<'a>(scan: &'a [Triple], rows: &[&str]) -> (CsrMatrix, Vec<&'a str>) {
+    let mut cols: Vec<&str> = scan.iter().map(|t| t.col.as_str()).collect();
+    cols.sort_unstable();
+    cols.dedup();
+    let mut ri: Vec<u32> = Vec::with_capacity(scan.len());
+    let mut ci: Vec<u32> = Vec::with_capacity(scan.len());
+    let mut vals: Vec<f64> = Vec::with_capacity(scan.len());
+    let mut rp = 0usize;
+    for t in scan {
+        // Scan rows are sorted and `rows` is a sorted superset, so the
+        // cursor only moves forward.
+        while rows[rp] != t.row.as_str() {
+            rp += 1;
+        }
+        let c = cols.binary_search(&t.col.as_str()).expect("column collected above");
+        ri.push(rp as u32);
+        ci.push(c as u32);
+        vals.push(t.val.parse().unwrap_or(0.0));
+    }
+    let m = CooMatrix::from_sorted_parts(rows.len(), cols.len(), ri, ci, vals).into_csr();
+    (m, cols)
 }
 
 /// Build degree tables from an edge table: `(node, "deg", count)`.

@@ -164,8 +164,10 @@ impl CooMatrix {
         None
     }
 
-    /// Convert to CSR. O(nnz) — entries are already row-major sorted.
-    pub fn to_csr(&self) -> CsrMatrix {
+    /// The CSR row-pointer array for the (already row-major sorted)
+    /// entries: exactly `nrows + 1` slots, built by one counting pass —
+    /// no incremental growth.
+    fn csr_indptr(&self) -> Vec<usize> {
         let mut indptr = vec![0usize; self.nrows + 1];
         for &r in &self.rows {
             indptr[r as usize + 1] += 1;
@@ -173,13 +175,23 @@ impl CooMatrix {
         for i in 0..self.nrows {
             indptr[i + 1] += indptr[i];
         }
-        CsrMatrix::from_parts(
-            self.nrows,
-            self.ncols,
-            indptr,
-            self.cols.clone(),
-            self.data.clone(),
-        )
+        indptr
+    }
+
+    /// Convert to CSR. O(nnz) — entries are already row-major sorted,
+    /// and the column/value arrays are cloned at exactly their final
+    /// size.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let indptr = self.csr_indptr();
+        CsrMatrix::from_parts(self.nrows, self.ncols, indptr, self.cols.clone(), self.data.clone())
+    }
+
+    /// Convert to CSR, consuming `self`: the column and value arrays
+    /// move without any copy (the `Assoc` constructor's path — COO is
+    /// only an ingest intermediate there).
+    pub fn into_csr(self) -> CsrMatrix {
+        let indptr = self.csr_indptr();
+        CsrMatrix::from_parts(self.nrows, self.ncols, indptr, self.cols, self.data)
     }
 
     /// Transpose (swaps shape; re-sorts entries col-major → row-major).
@@ -311,6 +323,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(clippy::identity_op, clippy::erasing_op)] // spelled-out row*stride+col indexing
     fn to_dense_layout() {
         let m = simple();
         let d = m.to_dense(0.0);
@@ -318,6 +331,13 @@ mod tests {
         assert_eq!(d[0 * 4 + 1], 8.0);
         assert_eq!(d[1 * 4 + 0], 2.0);
         assert_eq!(d[2 * 4 + 3], 7.0);
+    }
+
+    #[test]
+    fn into_csr_matches_to_csr() {
+        let m = simple();
+        let by_ref = m.to_csr();
+        assert_eq!(m.into_csr(), by_ref);
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! Mostly a transpose-view companion to [`CsrMatrix`]: `condense` uses
 //! its `indptr` for the nonempty-column test (the paper's
 //! `csc_cols[:-1] < csc_cols[1:]`), and `transpose` is a free
-//! reinterpretation of CSC as CSR.
+//! reinterpretation of CSC as CSR. Since PR 2, `CsrMatrix::to_csc`
+//! copies out of the CSR's memoized transpose dual rather than
+//! re-scattering, so repeated CSC requests are O(nnz) memcpy.
 
 use super::CsrMatrix;
 

@@ -5,24 +5,75 @@
 //! §II.C.2), plus the `indptr`-based nonempty row/column detection that
 //! powers `Assoc::condense` — the exact `csr_rows[:-1] < csr_rows[1:]`
 //! trick of the paper.
+//!
+//! **Cached dual.** The transpose (equivalently, the CSC form read as
+//! CSR) is computed at most once per matrix and memoized behind a
+//! [`OnceLock`]: [`CsrMatrix::transpose`], [`CsrMatrix::to_csc`], and
+//! the column gather [`CsrMatrix::gather_cols`] all share it, so
+//! transpose-then-multiply patterns (`sqin`, graphulo `table_mult`) and
+//! repeated column indexing pay the O(nnz + ncols) conversion once.
+//! The cache needs no invalidation: a `CsrMatrix` is immutable after
+//! construction (every operation builds a new matrix), and `Clone`
+//! starts with an empty cell. Equality and `Debug` ignore the cache.
 
 use super::{CooMatrix, CscMatrix, SparseError};
 use crate::semiring::Semiring;
 use crate::util::parallel::{parallel_map_ranges, Parallelism};
 use std::ops::Range;
+use std::sync::OnceLock;
 
 /// Sparse matrix in CSR format.
 ///
 /// Invariants: `indptr.len() == nrows + 1`, `indptr` non-decreasing,
 /// column indices strictly increasing within each row, stored values
 /// never equal to the semiring zero of the op that produced them.
-#[derive(Debug, Clone, PartialEq)]
 pub struct CsrMatrix {
     nrows: usize,
     ncols: usize,
     indptr: Vec<usize>,
     indices: Vec<u32>,
     data: Vec<f64>,
+    /// Lazily-computed transpose (the CSC dual read row-major). Boxed to
+    /// break the recursive type; never compared, printed, or cloned.
+    dual: OnceLock<Box<CsrMatrix>>,
+}
+
+impl Clone for CsrMatrix {
+    /// Structural clone; the dual cache starts empty (cloning it would
+    /// double the copy cost for a cache the clone may never use).
+    fn clone(&self) -> Self {
+        CsrMatrix {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            data: self.data.clone(),
+            dual: OnceLock::new(),
+        }
+    }
+}
+
+impl PartialEq for CsrMatrix {
+    /// Structural equality only — the dual cache is derived state.
+    fn eq(&self, other: &Self) -> bool {
+        self.nrows == other.nrows
+            && self.ncols == other.ncols
+            && self.indptr == other.indptr
+            && self.indices == other.indices
+            && self.data == other.data
+    }
+}
+
+impl std::fmt::Debug for CsrMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CsrMatrix")
+            .field("nrows", &self.nrows)
+            .field("ncols", &self.ncols)
+            .field("indptr", &self.indptr)
+            .field("indices", &self.indices)
+            .field("data", &self.data)
+            .finish()
+    }
 }
 
 impl CsrMatrix {
@@ -43,7 +94,7 @@ impl CsrMatrix {
             let row = &indices[indptr[r]..indptr[r + 1]];
             debug_assert!(row.windows(2).all(|w| w[0] < w[1]), "row {r} not strictly sorted");
         }
-        CsrMatrix { nrows, ncols, indptr, indices, data }
+        CsrMatrix { nrows, ncols, indptr, indices, data, dual: OnceLock::new() }
     }
 
     /// Empty matrix of the given shape.
@@ -54,6 +105,7 @@ impl CsrMatrix {
             indptr: vec![0; nrows + 1],
             indices: Vec::new(),
             data: Vec::new(),
+            dual: OnceLock::new(),
         }
     }
 
@@ -114,9 +166,21 @@ impl CsrMatrix {
         )
     }
 
-    /// Convert to CSC (used by `condense` for the column test and by
-    /// column slicing). O(nnz + ncols).
-    pub fn to_csc(&self) -> CscMatrix {
+    /// The transpose, computed once per matrix and cached (the CSC dual
+    /// read row-major). O(nnz + ncols) on first use, O(1) after; safe
+    /// for concurrent first use (the `OnceLock` keeps one winner).
+    pub fn transpose_cached(&self) -> &CsrMatrix {
+        self.dual.get_or_init(|| Box::new(self.compute_dual()))
+    }
+
+    /// Whether the transpose/CSC dual has already been materialized
+    /// (callers use this to pick between row- and column-major plans).
+    pub fn has_cached_dual(&self) -> bool {
+        self.dual.get().is_some()
+    }
+
+    /// Counting-sort scatter into the transpose. O(nnz + ncols).
+    fn compute_dual(&self) -> CsrMatrix {
         let mut indptr = vec![0usize; self.ncols + 1];
         for &c in &self.indices {
             indptr[c as usize + 1] += 1;
@@ -136,12 +200,29 @@ impl CsrMatrix {
                 data[q] = self.data[p];
             }
         }
-        CscMatrix::from_parts(self.nrows, self.ncols, indptr, indices, data)
+        CsrMatrix::from_parts(self.ncols, self.nrows, indptr, indices, data)
     }
 
-    /// Transpose via CSC reinterpretation. O(nnz + ncols).
+    /// Convert to CSC: a copy of the cached dual's arrays reinterpreted
+    /// column-major. First call O(nnz + ncols), repeats O(nnz) memcpy.
+    pub fn to_csc(&self) -> CscMatrix {
+        let d = self.transpose_cached();
+        CscMatrix::from_parts(
+            self.nrows,
+            self.ncols,
+            d.indptr.clone(),
+            d.indices.clone(),
+            d.data.clone(),
+        )
+    }
+
+    /// Transpose (an owned copy of the cached dual). Repeated calls on
+    /// the same matrix are O(nnz) memcpy instead of a re-scatter; the
+    /// returned matrix builds its own dual lazily if ever asked (an
+    /// eager back-seed would cost every one-shot caller an extra
+    /// retained O(nnz) copy).
     pub fn transpose(&self) -> CsrMatrix {
-        self.to_csc().transpose_view()
+        self.transpose_cached().clone()
     }
 
     /// Element-wise addition under `s` (union merge per row, §II.C.1),
@@ -291,8 +372,11 @@ impl CsrMatrix {
     fn mul_rows(&self, other: &CsrMatrix, s: &dyn Semiring, rows: Range<usize>) -> BinChunk {
         let zero = s.zero();
         let mut rel_indptr = Vec::with_capacity(rows.len());
-        let mut indices = Vec::new();
-        let mut data = Vec::new();
+        // Intersection output is at most the smaller operand's chunk nnz.
+        let cap = (self.indptr[rows.end] - self.indptr[rows.start])
+            .min(other.indptr[rows.end] - other.indptr[rows.start]);
+        let mut indices = Vec::with_capacity(cap);
+        let mut data = Vec::with_capacity(cap);
         for r in rows {
             let (ai, av) = self.row(r);
             let (bi, bv) = other.row(r);
@@ -371,8 +455,13 @@ impl CsrMatrix {
         }
         let mut indptr = Vec::with_capacity(self.nrows + 1);
         indptr.push(0usize);
-        let mut indices = Vec::new();
-        let mut data = Vec::new();
+        // Upper bound: the kept rows' stored entries.
+        let cap: usize = (0..self.nrows)
+            .filter(|&r| row_mask[r])
+            .map(|r| self.indptr[r + 1] - self.indptr[r])
+            .sum();
+        let mut indices = Vec::with_capacity(cap);
+        let mut data = Vec::with_capacity(cap);
         for r in 0..self.nrows {
             if !row_mask[r] {
                 continue;
@@ -387,6 +476,7 @@ impl CsrMatrix {
             }
             indptr.push(indices.len());
         }
+        shrink_loose(&mut indices, &mut data);
         let nrows = indptr.len() - 1;
         CsrMatrix::from_parts(nrows, ncols as usize, indptr, indices, data)
     }
@@ -402,6 +492,15 @@ impl CsrMatrix {
     /// path (duplicates / arbitrary order, reachable via user
     /// selectors) keeps the old→positions multimap.
     pub fn gather(&self, rows: &[usize], cols: &[usize]) -> CsrMatrix {
+        // Upper bound on the gathered nnz: the selected rows' stored
+        // entries (exact when every column survives).
+        let cap: usize = rows
+            .iter()
+            .map(|&r| {
+                assert!(r < self.nrows);
+                self.indptr[r + 1] - self.indptr[r]
+            })
+            .sum();
         let monotone_unique = cols.windows(2).all(|w| w[0] < w[1]);
         if monotone_unique {
             // Dense old→new map; u32::MAX = dropped.
@@ -412,10 +511,9 @@ impl CsrMatrix {
             }
             let mut indptr = Vec::with_capacity(rows.len() + 1);
             indptr.push(0usize);
-            let mut indices: Vec<u32> = Vec::new();
-            let mut data: Vec<f64> = Vec::new();
+            let mut indices: Vec<u32> = Vec::with_capacity(cap);
+            let mut data: Vec<f64> = Vec::with_capacity(cap);
             for &old_r in rows {
-                assert!(old_r < self.nrows);
                 let (ci, cv) = self.row(old_r);
                 for (c, v) in ci.iter().zip(cv) {
                     let nc = col_map[*c as usize];
@@ -426,6 +524,7 @@ impl CsrMatrix {
                 }
                 indptr.push(indices.len());
             }
+            shrink_loose(&mut indices, &mut data);
             return CsrMatrix::from_parts(rows.len(), cols.len(), indptr, indices, data);
         }
         // General path: old col -> list of new positions.
@@ -436,8 +535,8 @@ impl CsrMatrix {
         }
         let mut indptr = Vec::with_capacity(rows.len() + 1);
         indptr.push(0usize);
-        let mut indices: Vec<u32> = Vec::new();
-        let mut data: Vec<f64> = Vec::new();
+        let mut indices: Vec<u32> = Vec::with_capacity(cap);
+        let mut data: Vec<f64> = Vec::with_capacity(cap);
         let mut scratch: Vec<(u32, f64)> = Vec::new();
         for &old_r in rows {
             assert!(old_r < self.nrows);
@@ -455,7 +554,46 @@ impl CsrMatrix {
             }
             indptr.push(indices.len());
         }
+        shrink_loose(&mut indices, &mut data);
         CsrMatrix::from_parts(rows.len(), cols.len(), indptr, indices, data)
+    }
+
+    /// Column gather through the cached dual: bit-identical to
+    /// `gather(&[0, 1, …, nrows-1], cols)` but column-driven, so it
+    /// costs O(|cols| + nnz(selected) + nrows) instead of scanning every
+    /// stored entry — the win for narrow column indexing (`A[:, keys]`)
+    /// and for the `A.col ∩ B.row` restriction inside `@` once the dual
+    /// exists. `cols` must be strictly increasing (the shape every
+    /// selector resolution and sorted-intersection map produces).
+    pub fn gather_cols(&self, cols: &[usize]) -> CsrMatrix {
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "gather_cols needs sorted cols");
+        let t = self.transpose_cached();
+        let mut indptr = vec![0usize; self.nrows + 1];
+        for &c in cols {
+            assert!(c < self.ncols);
+            for &r in t.row(c).0 {
+                indptr[r as usize + 1] += 1;
+            }
+        }
+        for i in 0..self.nrows {
+            indptr[i + 1] += indptr[i];
+        }
+        let nnz = indptr[self.nrows];
+        let mut indices = vec![0u32; nnz];
+        let mut data = vec![0f64; nnz];
+        let mut next = indptr.clone();
+        // Scattering columns in increasing order keeps each output row's
+        // entries in increasing (renumbered) column order.
+        for (new_c, &c) in cols.iter().enumerate() {
+            let (ri, rv) = t.row(c);
+            for (r, v) in ri.iter().zip(rv) {
+                let q = next[*r as usize];
+                next[*r as usize] += 1;
+                indices[q] = new_c as u32;
+                data[q] = *v;
+            }
+        }
+        CsrMatrix::from_parts(self.nrows, cols.len(), indptr, indices, data)
     }
 
     /// Reshape into a larger key space: entry `(r, c)` moves to
@@ -507,6 +645,18 @@ impl CsrMatrix {
             out[c] = s.add(out[c], v);
         }
         out
+    }
+}
+
+/// Release over-allocation when a conservative reserve turned out loose
+/// (> 2× the final size). `gather`/`select` results are long-lived — a
+/// loose upper-bound capacity would stay pinned for the matrix's
+/// lifetime, unlike the transient per-chunk buffers the kernels stitch
+/// and drop.
+fn shrink_loose(indices: &mut Vec<u32>, data: &mut Vec<f64>) {
+    if indices.capacity() > 2 * indices.len() {
+        indices.shrink_to_fit();
+        data.shrink_to_fit();
     }
 }
 
@@ -736,6 +886,47 @@ mod tests {
         check("CSR -> CSC -> CSR identity", 100, |g| {
             let a = random_csr(g.rng(), 10, 40);
             assert_eq!(a.to_csc().to_csr(), a);
+        });
+    }
+
+    #[test]
+    fn dual_cache_lifecycle() {
+        let mut r = SplitMix64::new(11);
+        let m = random_csr(&mut r, 8, 24);
+        assert!(!m.has_cached_dual());
+        let t1 = m.transpose();
+        assert!(m.has_cached_dual());
+        // The returned transpose builds its own dual lazily.
+        assert!(!t1.has_cached_dual());
+        assert_eq!(t1.transpose(), m);
+        assert!(t1.has_cached_dual());
+        // Repeat calls hit the cache and stay equal.
+        assert_eq!(m.transpose(), t1);
+        // Clones and equality ignore the cache.
+        let c = m.clone();
+        assert!(!c.has_cached_dual());
+        assert_eq!(c, m);
+    }
+
+    #[test]
+    fn prop_gather_cols_matches_row_gather() {
+        check("gather_cols == gather(identity, cols)", 100, |g| {
+            let n = 12;
+            let a = random_csr(g.rng(), n, 50);
+            // A sorted, unique random column subset.
+            let mut cols: Vec<usize> =
+                (0..n).filter(|_| g.rng().chance(0.5)).collect();
+            if cols.is_empty() {
+                cols.push(g.rng().below_usize(n));
+            }
+            let identity: Vec<usize> = (0..n).collect();
+            let expect = a.gather(&identity, &cols);
+            let got = a.gather_cols(&cols);
+            assert_eq!(expect, got);
+            let bits = |m: &CsrMatrix| -> Vec<u64> {
+                m.values().iter().map(|v| v.to_bits()).collect()
+            };
+            assert_eq!(bits(&expect), bits(&got));
         });
     }
 }

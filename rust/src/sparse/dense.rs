@@ -68,9 +68,11 @@ impl DenseBlock {
     /// pruning entries equal to `zero`.
     pub fn gather_to_csr(&self, m: usize, n: usize, zero: f64) -> CsrMatrix {
         assert!(m <= self.nrows && n <= self.ncols);
-        let mut rows = Vec::new();
-        let mut cols = Vec::new();
-        let mut vals = Vec::new();
+        // Reserve the worst case (fully dense region) so the push loop
+        // never reallocates; blocks are small fixed tiles.
+        let mut rows = Vec::with_capacity(m * n);
+        let mut cols = Vec::with_capacity(m * n);
+        let mut vals = Vec::with_capacity(m * n);
         for r in 0..m {
             for c in 0..n {
                 let v = self.data[r * self.ncols + c] as f64;
@@ -83,7 +85,7 @@ impl DenseBlock {
         }
         CooMatrix::from_triples_aggregate(m, n, &rows, &cols, &vals, zero, |a, _| a)
             .expect("gather triples are well-formed")
-            .to_csr()
+            .into_csr()
     }
 
     /// Density of the leading `m × n` region of a CSR matrix — the

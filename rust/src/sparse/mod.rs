@@ -33,7 +33,10 @@ pub use coo::CooMatrix;
 pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use dense::DenseBlock;
-pub use spgemm::{spgemm, spgemm_par, spgemm_with_stats, spgemm_with_stats_par, SpGemmStats};
+pub use spgemm::{
+    spgemm, spgemm_par, spgemm_with_policy_par, spgemm_with_stats, spgemm_with_stats_par,
+    AccumulatorPolicy, SpGemmStats,
+};
 
 /// Errors from sparse-matrix constructors and shape checks.
 #[derive(Debug, Clone, PartialEq, Eq)]

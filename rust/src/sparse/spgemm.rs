@@ -1,20 +1,46 @@
-//! Sparse general matrix-matrix multiply (SpGEMM) over a semiring.
+//! Sparse general matrix-matrix multiply (SpGEMM) over a semiring —
+//! the adaptive two-phase engine behind `A @ B` (paper §II.C.3).
 //!
-//! Gustavson's row-wise algorithm with a dense accumulator: for each row
-//! `i` of `A`, accumulate `⊕_k A[i,k] ⊗ B[k,:]` into a dense scratch row,
-//! tracking which columns were touched so the scratch can be reset in
-//! O(touched) rather than O(ncols). This is the general path of `A @ B`
-//! (paper §II.C.3); the dense-block PJRT kernel in [`crate::runtime`] is
-//! the accelerated alternative for dense operands.
+//! **Phase 1 (symbolic).** One O(nnz(A)) pass computes, per output row,
+//! the flop count `f(i) = Σ_{k ∈ A[i,:]} nnz(B[k,:])` — simultaneously
+//! an exact ⊗ count, an upper bound `min(f, ncols)` on the row's output
+//! size, and the work weight used to balance parallel chunks. The
+//! numeric phase allocates each chunk's output from the summed bound up
+//! front, so output vectors never grow mid-kernel.
 //!
-//! **Parallelism.** Rows of `C` are independent in Gustavson's
-//! formulation, so [`spgemm_par`] partitions `A`'s rows into contiguous
-//! chunks (balanced by `A`'s nnz), runs the identical per-row kernel in
-//! each pool worker with its own dense accumulator, and stitches the
-//! chunk outputs back in row order. The output is bit-identical to the
-//! serial path for every thread count: chunk boundaries depend only on
-//! the input and `threads`, and within a row the ⊕-accumulation order
-//! is unchanged.
+//! **Phase 2 (numeric).** Gustavson's row-wise algorithm, with the
+//! accumulator chosen **per row** from the symbolic density estimate
+//! (associative-array workloads are hypersparse — Julia D4M
+//! arXiv:1608.04041, D4M 3.0 arXiv:1702.03253 — so a one-size dense
+//! scratch row wastes O(ncols) memory traffic on most rows):
+//!
+//! * **copy** — rows with a single stored `A` entry (the hypersparse
+//!   common case) are a scaled copy of one `B` row: no accumulator at
+//!   all.
+//! * **sort** — rows with at most [`SORT_MAX_FLOPS`] products collect
+//!   `(col, product)` pairs and combine them with one small sort.
+//! * **hash** — sparse rows (`f · 8 < ncols`) scatter into an
+//!   open-addressing table sized from the symbolic bound (load ≤ ½, so
+//!   probes terminate and the table never rehashes mid-row).
+//! * **dense** — dense-ish rows keep PR 1's dense scratch row +
+//!   touched list (reset in O(touched)); the scratch is allocated
+//!   lazily, so hypersparse inputs never pay the O(ncols) footprint.
+//!
+//! All scratch is reused across rows within a worker. The policy can be
+//! forced via [`AccumulatorPolicy`] ([`spgemm_with_policy_par`]) — the
+//! ablation benches pin [`AccumulatorPolicy::Dense`] to measure against
+//! the PR 1 kernel, and the equivalence suite cross-checks every
+//! policy.
+//!
+//! **Determinism.** Within a row, every accumulator combines the
+//! products of a given output column in identical ⊗-traversal order
+//! (the order `A[i,:]` walks `B`'s rows), and rows are emitted in
+//! sorted column order — so all policies, and every thread count, are
+//! **bit-identical** to the serial dense path. Chunk boundaries depend
+//! only on the input and `threads` (flop-weighted), and chunk outputs
+//! are stitched in row order; `tests/parallel_equivalence.rs` enforces
+//! the contract across policies, thread counts, semirings, and
+//! adversarial (hypersparse / power-law / empty-band) shapes.
 
 use super::{CsrMatrix, SparseError};
 use crate::semiring::Semiring;
@@ -28,7 +54,45 @@ pub struct SpGemmStats {
     pub mults: u64,
     /// Stored entries in the output.
     pub out_nnz: usize,
+    /// Rows handled by the single-entry copy path.
+    pub rows_copy: usize,
+    /// Rows handled by the sort accumulator.
+    pub rows_sort: usize,
+    /// Rows handled by the hash accumulator.
+    pub rows_hash: usize,
+    /// Rows handled by the dense scratch row.
+    pub rows_dense: usize,
 }
+
+/// Accumulator selection for the numeric phase. [`Adaptive`] picks per
+/// row from the symbolic flop/density estimate; the forced variants pin
+/// one accumulator for every row (benchmarks and the equivalence suite
+/// — all variants produce bit-identical output).
+///
+/// [`Adaptive`]: AccumulatorPolicy::Adaptive
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AccumulatorPolicy {
+    /// Per-row selection (copy / sort / hash / dense) — the default.
+    #[default]
+    Adaptive,
+    /// Dense scratch row for every row (the PR 1 kernel).
+    Dense,
+    /// Sort accumulator for every row.
+    Sort,
+    /// Hash accumulator for every row.
+    Hash,
+}
+
+/// Rows whose flop count is at most this use the sort accumulator under
+/// [`AccumulatorPolicy::Adaptive`] (a handful of products combine
+/// faster in a small sorted list than through any table).
+pub const SORT_MAX_FLOPS: usize = 32;
+
+/// Under [`AccumulatorPolicy::Adaptive`], rows with
+/// `flops * HASH_DENSITY_FACTOR < ncols` (and more than
+/// [`SORT_MAX_FLOPS`] flops) use the hash accumulator; denser rows use
+/// the dense scratch.
+pub const HASH_DENSITY_FACTOR: usize = 8;
 
 /// `C = A ⊗.⊕ B` over semiring `s`, at the process-default parallelism.
 /// Shapes must contract: `(m × k) @ (k × n) → (m × n)`.
@@ -57,29 +121,49 @@ pub fn spgemm_with_stats(
     spgemm_with_stats_par(a, b, s, Parallelism::current())
 }
 
-/// Rows below this count are not worth a fan-out (pool dispatch costs
-/// more than the row work saved).
-const PAR_MIN_ROWS: usize = 64;
-
-/// [`spgemm_par`] with operation counts.
+/// [`spgemm_par`] with operation counts (adaptive accumulator policy).
 pub fn spgemm_with_stats_par(
     a: &CsrMatrix,
     b: &CsrMatrix,
     s: &dyn Semiring,
     par: Parallelism,
 ) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
+    spgemm_with_policy_par(a, b, s, par, AccumulatorPolicy::Adaptive)
+}
+
+/// Rows below this count are not worth a fan-out (pool dispatch costs
+/// more than the row work saved).
+const PAR_MIN_ROWS: usize = 64;
+
+/// The full engine entry point: [`spgemm_par`] with an explicit
+/// [`AccumulatorPolicy`]. Every policy yields bit-identical output; the
+/// forced variants exist for benchmarking and cross-checking.
+pub fn spgemm_with_policy_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+    policy: AccumulatorPolicy,
+) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     if ka != kb {
         return Err(SparseError::ShapeMismatch { left: a.shape(), right: b.shape(), op: "spgemm" });
     }
+
+    // Symbolic phase: per-row flop counts and output-size bounds.
+    let (cum_flops, cum_bound) = symbolic(a, b);
+
     let parts: Vec<RowChunk> = if par.is_serial() || m < PAR_MIN_ROWS {
-        vec![gustavson_rows(a, b, s, 0..m)]
+        vec![numeric_rows(a, b, s, 0..m, &cum_flops, &cum_bound, policy)]
     } else {
-        // Chunk boundaries balanced by A's nnz (a pure function of the
-        // input and `threads`, so the stitched output is deterministic).
-        let ranges = par.chunk_ranges_weighted(a.indptr());
-        parallel_map_ranges(ranges, |rows| gustavson_rows(a, b, s, rows))
+        // Chunk boundaries balanced by the symbolic flop counts (a pure
+        // function of the input and `threads`, so the stitched output
+        // is deterministic).
+        let ranges = par.chunk_ranges_weighted(&cum_flops);
+        parallel_map_ranges(ranges, |rows| {
+            numeric_rows(a, b, s, rows, &cum_flops, &cum_bound, policy)
+        })
     };
 
     // Stitch chunk outputs in row order.
@@ -94,74 +178,284 @@ pub fn spgemm_with_stats_par(
         indptr.extend(part.rel_indptr.into_iter().map(|e| base + e));
         indices.extend_from_slice(&part.indices);
         data.extend_from_slice(&part.data);
-        stats.mults += part.mults;
+        stats.mults += part.stats.mults;
+        stats.rows_copy += part.stats.rows_copy;
+        stats.rows_sort += part.stats.rows_sort;
+        stats.rows_hash += part.stats.rows_hash;
+        stats.rows_dense += part.stats.rows_dense;
     }
     stats.out_nnz = data.len();
     Ok((CsrMatrix::from_parts(m, n, indptr, indices, data), stats))
 }
 
-/// Output of [`gustavson_rows`] for one contiguous row range.
+/// Symbolic pass: `cum_flops[i]` = total products of rows `0..i`, and
+/// `cum_bound[i]` = total output-size upper bound `Σ min(f, ncols)` of
+/// rows `0..i` — both cumulative so chunk weights and chunk allocation
+/// sizes are O(1) range differences.
+fn symbolic(a: &CsrMatrix, b: &CsrMatrix) -> (Vec<usize>, Vec<usize>) {
+    let m = a.shape().0;
+    let n = b.shape().1;
+    let bptr = b.indptr();
+    let mut cum_flops = Vec::with_capacity(m + 1);
+    let mut cum_bound = Vec::with_capacity(m + 1);
+    cum_flops.push(0usize);
+    cum_bound.push(0usize);
+    let (mut tf, mut tb) = (0usize, 0usize);
+    for r in 0..m {
+        let (acols, _) = a.row(r);
+        let f: usize = acols.iter().map(|&k| bptr[k as usize + 1] - bptr[k as usize]).sum();
+        tf += f;
+        tb += f.min(n);
+        cum_flops.push(tf);
+        cum_bound.push(tb);
+    }
+    (cum_flops, cum_bound)
+}
+
+/// Output of [`numeric_rows`] for one contiguous row range.
 struct RowChunk {
     /// `rel_indptr[j]` = entries emitted after finishing the range's
     /// `j`-th row (no leading 0; offset by the stitch base).
     rel_indptr: Vec<usize>,
     indices: Vec<u32>,
     data: Vec<f64>,
-    mults: u64,
+    stats: SpGemmStats,
 }
 
-/// The Gustavson kernel over a contiguous row range of `A` — the one
-/// and only SpGEMM inner loop; the serial path runs it over `0..m`.
-fn gustavson_rows(a: &CsrMatrix, b: &CsrMatrix, s: &dyn Semiring, rows: Range<usize>) -> RowChunk {
+/// Which accumulator a row runs on.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RowKind {
+    Copy,
+    Sort,
+    Hash,
+    Dense,
+}
+
+/// Per-worker scratch, reused across rows within a chunk. Everything is
+/// allocated lazily (and the dense scratch only on the first dense
+/// row), so hypersparse chunks never touch O(ncols) memory.
+struct Scratch {
+    // Dense accumulator row + touched-column list. `occupied` marks
+    // which slots are live so nonstandard zeros (e.g. min-plus +inf)
+    // need no sentinel trickery.
+    acc: Vec<f64>,
+    occupied: Vec<bool>,
+    touched: Vec<u32>,
+    // Open-addressing hash accumulator: `hkeys[slot] == u32::MAX` means
+    // empty (valid: column indices never exceed `u32::MAX - 1` because
+    // extents are capped at `u32::MAX`). `hslots` records used slots in
+    // insertion order for O(touched) clearing.
+    hkeys: Vec<u32>,
+    hvals: Vec<f64>,
+    hslots: Vec<u32>,
+    hemit: Vec<(u32, u32)>,
+    // Sort accumulator: `(col << 32 | seq, product)` — the sequence
+    // number makes the unstable sort order-preserving per column.
+    items: Vec<(u64, f64)>,
+}
+
+impl Scratch {
+    fn new() -> Scratch {
+        Scratch {
+            acc: Vec::new(),
+            occupied: Vec::new(),
+            touched: Vec::new(),
+            hkeys: Vec::new(),
+            hvals: Vec::new(),
+            hslots: Vec::new(),
+            hemit: Vec::new(),
+            items: Vec::new(),
+        }
+    }
+
+    /// Grow the dense scratch to `n` columns (first dense row only).
+    fn ensure_dense(&mut self, n: usize, zero: f64) {
+        if self.acc.len() < n {
+            self.acc = vec![zero; n];
+            self.occupied = vec![false; n];
+        }
+    }
+
+    /// Size the hash table for a row with at most `bound` distinct
+    /// columns, keeping load ≤ ½ so probe chains terminate without
+    /// rehashing. Growing only happens between rows, when the table is
+    /// empty.
+    fn ensure_hash(&mut self, bound: usize) {
+        let want = (2 * bound.max(1)).next_power_of_two();
+        if self.hkeys.len() < want {
+            self.hkeys = vec![u32::MAX; want];
+            self.hvals = vec![0.0; want];
+        }
+    }
+}
+
+/// The numeric phase over a contiguous row range of `A` — the serial
+/// path runs it over `0..m`. Output vectors are allocated once from the
+/// symbolic bound and never grow (debug-asserted).
+fn numeric_rows(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    rows: Range<usize>,
+    cum_flops: &[usize],
+    cum_bound: &[usize],
+    policy: AccumulatorPolicy,
+) -> RowChunk {
     let n = b.shape().1;
     let zero = s.zero();
-    let mut mults = 0u64;
+    let mut stats = SpGemmStats::default();
+    let mut scratch = Scratch::new();
 
-    // Dense accumulator row + touched-column list. `occupied` marks which
-    // accumulator slots are live so nonstandard zeros (e.g. min-plus +inf)
-    // need no sentinel trickery.
-    let mut acc = vec![zero; n];
-    let mut occupied = vec![false; n];
-    let mut touched: Vec<u32> = Vec::new();
-
+    let cap = cum_bound[rows.end] - cum_bound[rows.start];
     let mut rel_indptr = Vec::with_capacity(rows.len());
-    // (Measured: pre-reserving the output vectors gives <1% here — the
-    // dense-accumulator inner loop dominates — so no size estimate.)
-    let mut indices: Vec<u32> = Vec::new();
-    let mut data: Vec<f64> = Vec::new();
+    let mut indices: Vec<u32> = Vec::with_capacity(cap);
+    let mut data: Vec<f64> = Vec::with_capacity(cap);
 
     for i in rows {
+        let flops = cum_flops[i + 1] - cum_flops[i];
+        if flops == 0 {
+            rel_indptr.push(indices.len());
+            continue;
+        }
         let (acols, avals) = a.row(i);
-        for (kk, av) in acols.iter().zip(avals) {
-            let (bcols, bvals) = b.row(*kk as usize);
-            mults += bcols.len() as u64;
-            for (c, bv) in bcols.iter().zip(bvals) {
-                let prod = s.mul(*av, *bv);
-                let ci = *c as usize;
-                if occupied[ci] {
-                    acc[ci] = s.add(acc[ci], prod);
+        let kind = match policy {
+            AccumulatorPolicy::Dense => RowKind::Dense,
+            AccumulatorPolicy::Sort => RowKind::Sort,
+            AccumulatorPolicy::Hash => RowKind::Hash,
+            AccumulatorPolicy::Adaptive => {
+                if acols.len() == 1 {
+                    RowKind::Copy
+                } else if flops <= SORT_MAX_FLOPS {
+                    RowKind::Sort
+                } else if flops.saturating_mul(HASH_DENSITY_FACTOR) < n {
+                    RowKind::Hash
                 } else {
-                    occupied[ci] = true;
-                    acc[ci] = prod;
-                    touched.push(*c);
+                    RowKind::Dense
                 }
             }
-        }
-        // Emit the row in sorted column order and reset the scratch.
-        touched.sort_unstable();
-        for &c in &touched {
-            let ci = c as usize;
-            if acc[ci] != zero {
-                indices.push(c);
-                data.push(acc[ci]);
+        };
+        stats.mults += flops as u64;
+        match kind {
+            RowKind::Copy => {
+                stats.rows_copy += 1;
+                // One stored A entry: the row is a scaled copy of one B
+                // row, already in sorted column order.
+                let av = avals[0];
+                let (bcols, bvals) = b.row(acols[0] as usize);
+                for (c, bv) in bcols.iter().zip(bvals) {
+                    let prod = s.mul(av, *bv);
+                    if prod != zero {
+                        indices.push(*c);
+                        data.push(prod);
+                    }
+                }
             }
-            occupied[ci] = false;
-            acc[ci] = zero;
+            RowKind::Sort => {
+                stats.rows_sort += 1;
+                scratch.items.clear();
+                let mut seq = 0u32;
+                for (kk, av) in acols.iter().zip(avals) {
+                    let (bcols, bvals) = b.row(*kk as usize);
+                    for (c, bv) in bcols.iter().zip(bvals) {
+                        scratch.items.push((((*c as u64) << 32) | seq as u64, s.mul(*av, *bv)));
+                        seq = seq.wrapping_add(1);
+                    }
+                }
+                // The seq suffix makes keys unique, so the unstable sort
+                // preserves ⊗-traversal order within each column.
+                scratch.items.sort_unstable_by_key(|e| e.0);
+                let mut p = 0usize;
+                while p < scratch.items.len() {
+                    let col = (scratch.items[p].0 >> 32) as u32;
+                    let mut acc = scratch.items[p].1;
+                    p += 1;
+                    while p < scratch.items.len() && (scratch.items[p].0 >> 32) as u32 == col {
+                        acc = s.add(acc, scratch.items[p].1);
+                        p += 1;
+                    }
+                    if acc != zero {
+                        indices.push(col);
+                        data.push(acc);
+                    }
+                }
+            }
+            RowKind::Hash => {
+                stats.rows_hash += 1;
+                scratch.ensure_hash(flops.min(n));
+                let mask = scratch.hkeys.len() - 1;
+                for (kk, av) in acols.iter().zip(avals) {
+                    let (bcols, bvals) = b.row(*kk as usize);
+                    for (c, bv) in bcols.iter().zip(bvals) {
+                        let prod = s.mul(*av, *bv);
+                        let mut slot =
+                            ((*c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize & mask;
+                        loop {
+                            let key = scratch.hkeys[slot];
+                            if key == *c {
+                                scratch.hvals[slot] = s.add(scratch.hvals[slot], prod);
+                                break;
+                            }
+                            if key == u32::MAX {
+                                scratch.hkeys[slot] = *c;
+                                scratch.hvals[slot] = prod;
+                                scratch.hslots.push(slot as u32);
+                                break;
+                            }
+                            slot = (slot + 1) & mask;
+                        }
+                    }
+                }
+                // Emit in sorted column order and clear the used slots.
+                scratch.hemit.clear();
+                for &slot in &scratch.hslots {
+                    scratch.hemit.push((scratch.hkeys[slot as usize], slot));
+                }
+                scratch.hemit.sort_unstable();
+                for &(c, slot) in &scratch.hemit {
+                    let v = scratch.hvals[slot as usize];
+                    if v != zero {
+                        indices.push(c);
+                        data.push(v);
+                    }
+                    scratch.hkeys[slot as usize] = u32::MAX;
+                }
+                scratch.hslots.clear();
+            }
+            RowKind::Dense => {
+                stats.rows_dense += 1;
+                scratch.ensure_dense(n, zero);
+                for (kk, av) in acols.iter().zip(avals) {
+                    let (bcols, bvals) = b.row(*kk as usize);
+                    for (c, bv) in bcols.iter().zip(bvals) {
+                        let prod = s.mul(*av, *bv);
+                        let ci = *c as usize;
+                        if scratch.occupied[ci] {
+                            scratch.acc[ci] = s.add(scratch.acc[ci], prod);
+                        } else {
+                            scratch.occupied[ci] = true;
+                            scratch.acc[ci] = prod;
+                            scratch.touched.push(*c);
+                        }
+                    }
+                }
+                // Emit in sorted column order and reset the scratch.
+                scratch.touched.sort_unstable();
+                for &c in &scratch.touched {
+                    let ci = c as usize;
+                    if scratch.acc[ci] != zero {
+                        indices.push(c);
+                        data.push(scratch.acc[ci]);
+                    }
+                    scratch.occupied[ci] = false;
+                    scratch.acc[ci] = zero;
+                }
+                scratch.touched.clear();
+            }
         }
-        touched.clear();
         rel_indptr.push(indices.len());
     }
-    RowChunk { rel_indptr, indices, data, mults }
+    debug_assert!(indices.len() <= cap, "symbolic output bound violated");
+    RowChunk { rel_indptr, indices, data, stats }
 }
 
 #[cfg(test)]
@@ -179,6 +473,17 @@ mod tests {
         CooMatrix::from_triples_aggregate(m, n, &rows, &cols, &vals, 0.0, |a, b| a + b)
             .unwrap()
             .to_csr()
+    }
+
+    /// Structural + raw-bit equality (catches `-0.0` vs `0.0` drift
+    /// that `f64` equality would hide).
+    fn assert_bits_equal(x: &CsrMatrix, y: &CsrMatrix, ctx: &str) {
+        assert_eq!(x.shape(), y.shape(), "{ctx}: shape");
+        assert_eq!(x.indptr(), y.indptr(), "{ctx}: indptr");
+        assert_eq!(x.indices(), y.indices(), "{ctx}: indices");
+        let xb: Vec<u64> = x.values().iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u64> = y.values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "{ctx}: value bits");
     }
 
     /// O(m·k·n) reference matmul over a semiring, via dense views.
@@ -269,6 +574,68 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_policy_counters() {
+        // 1000 output columns. Row 0: one A entry → copy. Row 1: two
+        // small B rows (4 flops ≤ SORT_MAX_FLOPS) → sort. Row 2: 40
+        // flops, 40·8 < 1000 → hash. Row 3: 200 flops, 200·8 ≥ 1000 →
+        // dense. Row 4: no entries → skipped entirely.
+        let n = 1000usize;
+        let mut bt: Vec<(usize, usize, f64)> = Vec::new();
+        for j in 0..2 {
+            bt.push((0, j, 1.0)); // B row 0: 2 entries
+            bt.push((1, j + 2, 1.0)); // B row 1: 2 entries
+        }
+        for j in 0..40 {
+            bt.push((2, j * 3, 1.0)); // B row 2: 40 entries
+        }
+        for j in 0..100 {
+            bt.push((3, j * 5, 1.0)); // B row 3: 100 entries
+            bt.push((4, j * 7, 1.0)); // B row 4: 100 entries
+        }
+        let b = from_triples(5, n, &bt);
+        let a = from_triples(
+            5,
+            5,
+            &[
+                (0, 3, 2.0), // copy: single entry
+                (1, 0, 1.0),
+                (1, 1, 1.0), // sort: 2 + 2 = 4 flops
+                (2, 2, 1.0),
+                (2, 0, 1.0), // hash: 40 + 2 = 42 flops? 42·8 = 336 < 1000
+                (3, 3, 1.0),
+                (3, 4, 1.0), // dense: 100 + 100 = 200 flops, 1600 ≥ 1000
+            ],
+        );
+        let (_, stats) = spgemm_with_stats(&a, &b, &PlusTimes).unwrap();
+        assert_eq!(stats.rows_copy, 1);
+        assert_eq!(stats.rows_sort, 1);
+        assert_eq!(stats.rows_hash, 1);
+        assert_eq!(stats.rows_dense, 1);
+        assert_eq!(stats.mults, 100 + 4 + 42 + 200);
+    }
+
+    #[test]
+    fn forced_policies_bit_identical_small() {
+        let a = from_triples(3, 4, &[(0, 0, 2.0), (0, 3, 1.0), (1, 2, 5.0), (2, 1, -1.0)]);
+        let b = from_triples(4, 3, &[(0, 0, 1.0), (1, 2, 4.0), (2, 1, 3.0), (3, 0, -2.0)]);
+        let (base, _) = spgemm_with_policy_par(
+            &a,
+            &b,
+            &PlusTimes,
+            Parallelism::serial(),
+            AccumulatorPolicy::Adaptive,
+        )
+        .unwrap();
+        for policy in
+            [AccumulatorPolicy::Dense, AccumulatorPolicy::Sort, AccumulatorPolicy::Hash]
+        {
+            let (c, _) =
+                spgemm_with_policy_par(&a, &b, &PlusTimes, Parallelism::serial(), policy).unwrap();
+            assert_bits_equal(&base, &c, &format!("{policy:?}"));
+        }
+    }
+
+    #[test]
     fn prop_matches_dense_reference_all_semirings() {
         check("spgemm == dense reference", 120, |g| {
             let m = 6;
@@ -335,6 +702,58 @@ mod tests {
                     assert_eq!(serial, par, "{} at {threads} threads", s.name());
                     assert_eq!(st1.mults, st2.mults);
                     assert_eq!(st1.out_nnz, st2.out_nnz);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_all_policies_match_all_threads() {
+        // The accumulator contract: every forced policy, at every
+        // thread count, is bit-identical to the serial adaptive run.
+        check("accumulator policies bit-identical", 12, |g| {
+            let m = 120;
+            let k = 50;
+            let n = 80;
+            let mk_mat = |r: &mut SplitMix64, rows: usize, cols: usize, nnz: usize| {
+                let mut t = Vec::new();
+                for _ in 0..nnz {
+                    t.push((r.below_usize(rows), r.below_usize(cols), r.range_i64(1, 9) as f64));
+                }
+                from_triples(rows, cols, &t)
+            };
+            let a = mk_mat(g.rng(), m, k, 400);
+            let b = mk_mat(g.rng(), k, n, 300);
+            for s in [&PlusTimes as &dyn Semiring, &MaxPlus, &MinPlus, &MaxMin] {
+                let (base, _) = spgemm_with_policy_par(
+                    &a,
+                    &b,
+                    s,
+                    Parallelism::serial(),
+                    AccumulatorPolicy::Adaptive,
+                )
+                .unwrap();
+                for policy in [
+                    AccumulatorPolicy::Adaptive,
+                    AccumulatorPolicy::Dense,
+                    AccumulatorPolicy::Sort,
+                    AccumulatorPolicy::Hash,
+                ] {
+                    for threads in [1usize, 3, 7] {
+                        let (c, _) = spgemm_with_policy_par(
+                            &a,
+                            &b,
+                            s,
+                            Parallelism::with_threads(threads),
+                            policy,
+                        )
+                        .unwrap();
+                        assert_bits_equal(
+                            &base,
+                            &c,
+                            &format!("{} {policy:?} t={threads}", s.name()),
+                        );
+                    }
                 }
             }
         });

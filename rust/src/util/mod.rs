@@ -14,9 +14,12 @@
 //! * [`prop`] — a miniature property-based testing harness with
 //!   random case generation and failure reporting.
 //! * [`human`] — human-readable formatting for counts, bytes, seconds.
+//! * [`json`] — minimal JSON emission for machine-readable artifacts
+//!   (the benchmark trajectory files).
 
 pub mod args;
 pub mod human;
+pub mod json;
 pub mod parallel;
 pub mod pool;
 pub mod prng;
@@ -24,6 +27,7 @@ pub mod prop;
 pub mod timer;
 
 pub use args::Args;
+pub use json::Json;
 pub use parallel::Parallelism;
 pub use pool::ThreadPool;
 pub use prng::SplitMix64;

@@ -14,6 +14,9 @@
 //! [`Parallelism`] is the one knob: `threads == 1` selects the exact
 //! serial code path (not a one-chunk parallel run), the default tracks
 //! the machine's available cores, and benches sweep it via `--threads`.
+//! A `D4M_THREADS` environment variable pins the default without flag
+//! plumbing (CI, scripts); an explicit `--threads` / `set_default`
+//! still wins.
 
 use super::pool::ThreadPool;
 use std::ops::Range;
@@ -48,12 +51,34 @@ impl Parallelism {
         Parallelism { threads: n.max(1) }
     }
 
+    /// The worker count pinned by the `D4M_THREADS` environment
+    /// variable, if set to a positive integer (cached at first read —
+    /// the variable is process-configuration, not a runtime knob).
+    /// Lets CI and scripts pin parallelism without flag plumbing; an
+    /// explicit CLI `--threads` still wins because it installs a
+    /// process default via [`Parallelism::set_default`].
+    pub fn env_threads() -> Option<usize> {
+        static ENV: OnceLock<usize> = OnceLock::new();
+        let n = *ENV.get_or_init(|| {
+            std::env::var("D4M_THREADS")
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .unwrap_or(0)
+        });
+        (n > 0).then_some(n)
+    }
+
     /// The process-wide default used by the convenience entry points
-    /// (`Assoc::matmul`, `Table::scan`, …): [`Parallelism::auto`]
-    /// unless overridden by [`Parallelism::set_default`].
+    /// (`Assoc::matmul`, `Table::scan`, …): the value installed by
+    /// [`Parallelism::set_default`] if any, else the `D4M_THREADS`
+    /// environment variable ([`Parallelism::env_threads`]), else
+    /// [`Parallelism::auto`].
     pub fn current() -> Parallelism {
         match DEFAULT_THREADS.load(Ordering::Relaxed) {
-            0 => Parallelism::auto(),
+            0 => match Parallelism::env_threads() {
+                Some(n) => Parallelism { threads: n },
+                None => Parallelism::auto(),
+            },
             n => Parallelism { threads: n },
         }
     }
@@ -259,5 +284,21 @@ mod tests {
         assert!(!Parallelism::with_threads(4).is_serial());
         assert_eq!(Parallelism::with_threads(0).threads, 1);
         assert!(Parallelism::current().threads >= 1);
+    }
+
+    #[test]
+    fn env_threads_is_cached_and_below_default_in_precedence() {
+        // The cached env read is stable across calls.
+        assert_eq!(Parallelism::env_threads(), Parallelism::env_threads());
+        // An installed process default beats the environment…
+        Parallelism::with_threads(3).set_default();
+        assert_eq!(Parallelism::current().threads, 3);
+        // …and clearing it falls back to D4M_THREADS, then auto.
+        Parallelism { threads: 0 }.set_default();
+        let cur = Parallelism::current().threads;
+        match Parallelism::env_threads() {
+            Some(n) => assert_eq!(cur, n),
+            None => assert!(cur >= 1),
+        }
     }
 }

@@ -8,12 +8,20 @@
 //! same checksum. Checked at bench scale (`Workload::generate`) and on
 //! adversarial shapes (empty, 1×n, n×1, all-collisions), plus the
 //! parallel tablet scan against the serial scan.
+//!
+//! The SpGEMM section extends the contract across the adaptive
+//! engine's accumulator policies: on hypersparse (1 nnz/row),
+//! power-law-row, and empty-row-band shapes, every forced policy
+//! (dense / sort / hash) must agree bit-for-bit with each other, with
+//! the adaptive selection, and with the serial path, for every builtin
+//! semiring and thread count.
 
 use d4m::assoc::{Aggregator, Assoc, Key, ValsInput};
 use d4m::bench::Workload;
 use d4m::semiring::{MaxMin, MaxPlus, MinPlus, PlusTimes, Semiring};
+use d4m::sparse::{spgemm_with_policy_par, AccumulatorPolicy, CooMatrix, CsrMatrix};
 use d4m::store::{ScanRange, Table, TableConfig, Triple};
-use d4m::util::Parallelism;
+use d4m::util::{Parallelism, SplitMix64};
 
 /// Thread counts exercised against the serial baseline. 7 is
 /// deliberately not a power of two (uneven chunk boundaries).
@@ -377,6 +385,147 @@ fn adversarial_all_collisions() {
         .unwrap();
         assert_identical(&serial, &par, &format!("all-collisions string t={t}"));
     }
+}
+
+// ---------------------------------------------------------------------
+// SpGEMM accumulator policies on hypersparse / skewed shapes
+// ---------------------------------------------------------------------
+
+/// Structural + raw-bit CSR equality (catches `-0.0` vs `0.0` and NaN
+/// payload drift that `f64` equality would hide).
+fn assert_csr_bits(x: &CsrMatrix, y: &CsrMatrix, ctx: &str) {
+    assert_eq!(x.shape(), y.shape(), "{ctx}: shape");
+    assert_eq!(x.indptr(), y.indptr(), "{ctx}: indptr");
+    assert_eq!(x.indices(), y.indices(), "{ctx}: indices");
+    let xb: Vec<u64> = x.values().iter().map(|v| v.to_bits()).collect();
+    let yb: Vec<u64> = y.values().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(xb, yb, "{ctx}: value bits");
+}
+
+fn csr_from(n: usize, t: &[(usize, usize, f64)]) -> CsrMatrix {
+    let rows: Vec<usize> = t.iter().map(|x| x.0).collect();
+    let cols: Vec<usize> = t.iter().map(|x| x.1).collect();
+    let vals: Vec<f64> = t.iter().map(|x| x.2).collect();
+    CooMatrix::from_triples_aggregate(n, n, &rows, &cols, &vals, 0.0, f64::min)
+        .unwrap()
+        .to_csr()
+}
+
+/// Exactly one stored entry per row — the hypersparse extreme (the
+/// adaptive engine's copy path on every row).
+fn one_nnz_per_row(n: usize, seed: u64) -> CsrMatrix {
+    let mut r = SplitMix64::new(seed);
+    let t: Vec<(usize, usize, f64)> =
+        (0..n).map(|i| (i, r.below_usize(n), (i % 7 + 1) as f64)).collect();
+    csr_from(n, &t)
+}
+
+/// Power-law row sizes: a few very dense rows, a long 1-entry tail —
+/// one matrix that exercises the dense, hash, sort, and copy paths.
+fn power_law_rows(n: usize, seed: u64) -> CsrMatrix {
+    let mut r = SplitMix64::new(seed);
+    let mut t = Vec::new();
+    for i in 0..n {
+        // Row degree halves every few rows: n/2, then /4, … down to 1.
+        let deg = (n >> (1 + i / 3).min(usize::BITS as usize - 1)).max(1);
+        for _ in 0..deg {
+            t.push((i, r.below_usize(n), (i % 5 + 1) as f64));
+        }
+    }
+    csr_from(n, &t)
+}
+
+/// A contiguous band of entirely empty rows between two sparse bands
+/// (empty rows must emit nothing and cost nothing, at any chunking).
+fn empty_row_band(n: usize, seed: u64) -> CsrMatrix {
+    let mut r = SplitMix64::new(seed);
+    let mut t = Vec::new();
+    for i in 0..n {
+        if i >= n / 4 && i < 3 * n / 4 {
+            continue;
+        }
+        for _ in 0..3 {
+            t.push((i, r.below_usize(n), (i % 11 + 1) as f64));
+        }
+    }
+    csr_from(n, &t)
+}
+
+#[test]
+fn spgemm_policies_agree_on_adversarial_shapes() {
+    let n = 300usize;
+    let shapes: Vec<(&str, CsrMatrix, CsrMatrix)> = vec![
+        ("hypersparse @ hypersparse", one_nnz_per_row(n, 1), one_nnz_per_row(n, 2)),
+        ("power-law @ power-law", power_law_rows(n, 3), power_law_rows(n, 4)),
+        ("empty-band @ empty-band", empty_row_band(n, 5), empty_row_band(n, 6)),
+        ("power-law @ hypersparse", power_law_rows(n, 7), one_nnz_per_row(n, 8)),
+        ("hypersparse @ empty-band", one_nnz_per_row(n, 9), empty_row_band(n, 10)),
+    ];
+    for (name, a, b) in &shapes {
+        for s in builtin_semirings() {
+            let (base, base_stats) = spgemm_with_policy_par(
+                a,
+                b,
+                s.as_ref(),
+                Parallelism::serial(),
+                AccumulatorPolicy::Adaptive,
+            )
+            .unwrap();
+            for policy in [
+                AccumulatorPolicy::Adaptive,
+                AccumulatorPolicy::Dense,
+                AccumulatorPolicy::Sort,
+                AccumulatorPolicy::Hash,
+            ] {
+                for t in [1usize, 2, 4, 7] {
+                    let (c, stats) = spgemm_with_policy_par(
+                        a,
+                        b,
+                        s.as_ref(),
+                        Parallelism::with_threads(t),
+                        policy,
+                    )
+                    .unwrap();
+                    let ctx = format!("{name} {} {policy:?} t={t}", s.name());
+                    assert_csr_bits(&base, &c, &ctx);
+                    assert_eq!(base_stats.mults, stats.mults, "{ctx}: flop count");
+                    assert_eq!(base_stats.out_nnz, stats.out_nnz, "{ctx}: out nnz");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn spgemm_adaptive_uses_expected_paths() {
+    // The hypersparse shape must ride the copy path; the power-law
+    // shape must spread across at least three accumulators — guards
+    // against the policy heuristic silently collapsing to one kernel.
+    let n = 300usize;
+    let hyper = one_nnz_per_row(n, 21);
+    let (_, st) = spgemm_with_policy_par(
+        &hyper,
+        &hyper,
+        &PlusTimes,
+        Parallelism::serial(),
+        AccumulatorPolicy::Adaptive,
+    )
+    .unwrap();
+    assert_eq!(st.rows_sort + st.rows_hash + st.rows_dense, 0, "hypersparse is all copy rows");
+    assert!(st.rows_copy > 0);
+
+    let pow = power_law_rows(n, 22);
+    let (_, st) = spgemm_with_policy_par(
+        &pow,
+        &pow,
+        &PlusTimes,
+        Parallelism::serial(),
+        AccumulatorPolicy::Adaptive,
+    )
+    .unwrap();
+    let kinds = [st.rows_copy, st.rows_sort, st.rows_hash, st.rows_dense];
+    let used = kinds.iter().filter(|&&k| k > 0).count();
+    assert!(used >= 3, "power-law rows should mix accumulators, got {kinds:?}");
 }
 
 // ---------------------------------------------------------------------

@@ -1,11 +1,14 @@
 #!/usr/bin/env python3
-"""Render results/*.csv into the markdown tables EXPERIMENTS.md embeds.
+"""Render results/*.csv and results/BENCH_*.json into markdown tables.
 
 Usage: python scripts/summarize_results.py [results_dir]
-Prints one pivoted table (n x engine, mean seconds) per figure CSV.
+Prints one pivoted table (n x engine, mean seconds) per figure CSV, and
+one record table per machine-readable bench JSON (schema d4m-bench-v1:
+op, scale, threads, ns/op, speedup).
 """
 
 import csv
+import json
 import os
 import sys
 
@@ -33,12 +36,35 @@ def pivot(path: str) -> str:
     return "\n".join(out)
 
 
+def bench_json(path: str) -> str:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "d4m-bench-v1":
+        return f"(unknown schema in {path}: {doc.get('schema')!r})"
+    records = doc.get("records", [])
+    if not records:
+        return f"(empty: {path})"
+    out = ["| op | scale | threads | time/op | speedup |",
+           "|---|---|---|---|---|"]
+    for r in records:
+        out.append(
+            f"| {r['op']} | {r['scale']} | {r['threads']} "
+            f"| {fmt(r['ns_per_op'] * 1e-9)} | {r['speedup']:.2f}x |"
+        )
+    return "\n".join(out)
+
+
 def main() -> None:
     d = sys.argv[1] if len(sys.argv) > 1 else "results"
     for f in sorted(os.listdir(d)):
+        path = os.path.join(d, f)
         if f.endswith(".csv"):
             print(f"### {f}\n")
-            print(pivot(os.path.join(d, f)))
+            print(pivot(path))
+            print()
+        elif f.endswith(".json"):
+            print(f"### {f}\n")
+            print(bench_json(path))
             print()
 
 
