@@ -8,8 +8,10 @@
 //! 2. **Ingest** it through the sharded, backpressured pipeline into
 //!    the Accumulo-sim table store (adjacency + transpose tables),
 //!    reporting throughput, stalls, shard balance and tablet splits.
-//! 3. **Query** with Graphulo server-side kernels (degree tables, BFS)
-//!    and scan-to-Assoc + the associative-array algebra (facets, AᵀA).
+//! 3. **Query** with Graphulo server-side kernels (degree tables, BFS),
+//!    the server-side iterator stack (filtered streaming scans, combiner
+//!    pushdown, masked TableMult), and scan-to-Assoc + the
+//!    associative-array algebra (facets, AᵀA).
 //! 4. **Accelerate**: run the correlation matmul on the PJRT dense-
 //!    block path (AOT Pallas kernel) and cross-check it against host
 //!    SpGEMM — proving artifacts, runtime and algebra compose.
@@ -23,7 +25,9 @@ use d4m::bench::Workload;
 use d4m::graphulo;
 use d4m::pipeline::{IngestPipeline, PipelineConfig, ShardPolicy};
 use d4m::semiring::PlusTimes;
-use d4m::store::{ScanRange, TableConfig, TableStore, Triple};
+use d4m::store::{
+    CellFilter, KeyMatch, RowReduce, ScanRange, ScanSpec, TableConfig, TableStore, Triple,
+};
 use d4m::util::{human, time_op, SplitMix64, Stopwatch};
 use std::sync::Arc;
 
@@ -104,6 +108,60 @@ fn main() {
 
     let frontier = graphulo::bfs(&hits, &[best.0.replace("/page", "client").clone()], 1);
     println!("bfs sanity: {} frontiers from a client seed", frontier.len());
+
+    // ---- server-side iterator stack: filtered streaming scans -----------
+    // A filtered scan runs *inside* the scan stack (Accumulo-style
+    // iterator pushdown): the column window seeks past out-of-range
+    // cells in the tablets, the glob filter drops non-matching cells
+    // before they reach the client, and nothing materializes a full
+    // Vec<Triple> — the stream is consumed one cell at a time.
+    let sw = Stopwatch::start();
+    let spec = ScanSpec::over(ScanRange::all().with_cols("/page000", "/page020"))
+        .filtered(CellFilter::col(KeyMatch::Glob("/page00??".into())));
+    let mut kept = 0usize;
+    for t in hits.scan_stream(spec) {
+        debug_assert!(t.col.starts_with("/page00"));
+        kept += 1;
+    }
+    println!(
+        "\nstreaming filtered scan: {kept} hits on /page00?? urls in {} (no materialization)",
+        human::seconds(sw.elapsed_s())
+    );
+    // A combiner stage collapses each row server-side: per-client hit
+    // counts without shipping the hit cells at all.
+    let sw = Stopwatch::start();
+    let spec = ScanSpec::all().reduced(RowReduce::Count { out_col: "hits".into() });
+    let mut busiest = (String::new(), 0u64);
+    for t in hits.scan_stream(spec) {
+        let n: u64 = t.val.parse().unwrap_or(0);
+        if n > busiest.1 {
+            busiest = (t.row, n);
+        }
+    }
+    println!(
+        "combiner scan: busiest client {} with {} hits in {}",
+        busiest.0,
+        busiest.1,
+        human::seconds(sw.elapsed_s())
+    );
+
+    // ---- masked TableMult: compute only the columns the sink keeps ------
+    // TableMult(hits, hits) = AᵀA over urls; the sink mask restricts the
+    // output columns to the /page00?? urls, so ~99% of the co-visitation
+    // flops are never executed (masked SpGEMM under the hood).
+    let cov_masked = store.create_table("covisit_page00x");
+    let sw = Stopwatch::start();
+    let cells = graphulo::table_mult_masked(
+        &hits,
+        &hits,
+        &cov_masked,
+        &PlusTimes,
+        &KeyMatch::Glob("/page00??".into()),
+    );
+    println!(
+        "masked TableMult: {cells} url co-visitation cells for /page00?? sinks in {}",
+        human::seconds(sw.elapsed_s())
+    );
 
     // ---- scan → Assoc → algebra -----------------------------------------
     let sw = Stopwatch::start();

@@ -15,21 +15,37 @@
 //!   dense-scratch kernel (`AccumulatorPolicy::Dense`) on a
 //!   hypersparse (1 nnz/row) workload, the regime the D4M papers show
 //!   associative-array products live in.
+//! * **masked TableMult** — the sink-filtered multiply
+//!   (`graphulo::table_mult_masked`, masked SpGEMM under the hood) vs
+//!   computing the full product and filtering afterwards. The kept
+//!   cells are bit-identical by contract; with a ~10%-density sink mask
+//!   the masked path must be **≥ 1.5× faster** (asserted — this is the
+//!   PR's acceptance number, enforced on every CI bench smoke).
+//! * **streaming vs materializing scan** — a column-windowed filtered
+//!   scan consumed off the iterator stack vs materializing the full
+//!   `Vec<Triple>` and filtering client-side.
 //!
 //! Besides the CSV, the run writes the machine-readable perf
-//! trajectory `BENCH_PR2.json` (op, scale, threads, ns/op, speedup)
-//! for `scripts/summarize_results.py` and the CI artifact.
+//! trajectories `BENCH_PR2.json` (thread sweep + accumulator policies,
+//! schema-compatible with the PR 2 capture) and `BENCH_PR3.json`
+//! (accumulator-policy row counters as extras, masked-vs-unmasked
+//! TableMult, streaming-vs-materializing scans) for
+//! `scripts/summarize_results.py` and the CI artifacts.
 //!
 //! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
-//! [--threads-n N] [--hyper-scale S]` (`--threads-n` sets the scale of
-//! the thread sweep; default 10, the acceptance workload.
-//! `--hyper-scale` sets the hypersparse matmul to 2^S rows; default
-//! 14).
+//! [--threads-n N] [--hyper-scale S] [--mask-scale S]
+//! [--stream-scale S]` (`--threads-n` sets the scale of the thread
+//! sweep; default 10, the acceptance workload. `--hyper-scale` sets
+//! the hypersparse matmul to 2^S rows; default 14. `--mask-scale` /
+//! `--stream-scale` size the masked-TableMult and scan sections to
+//! 2^S triples; defaults 12 and 13).
 
 use d4m::assoc::{keys_from, Aggregator, Assoc, ValsInput};
 use d4m::bench::{BenchRecord, FigureHarness, Workload};
+use d4m::graphulo;
 use d4m::semiring::PlusTimes;
 use d4m::sparse::{spgemm, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix};
+use d4m::store::{CellFilter, KeyMatch, ScanRange, ScanSpec, TableConfig, TableStore, Triple};
 use d4m::util::{time_op, Args, Parallelism, SplitMix64};
 
 fn main() {
@@ -183,20 +199,20 @@ fn main() {
     );
     let mut records: Vec<BenchRecord> = Vec::new();
     for (i, &threads) in sweep.iter().enumerate() {
-        records.push(BenchRecord {
-            op: "matmul".into(),
-            scale: tn,
+        records.push(BenchRecord::new(
+            "matmul",
+            tn,
             threads,
-            ns_per_op: matmul_means[i] * 1e9,
-            speedup: speedup(&matmul_means, i),
-        });
-        records.push(BenchRecord {
-            op: "constructor".into(),
-            scale: tn,
+            matmul_means[i] * 1e9,
+            speedup(&matmul_means, i),
+        ));
+        records.push(BenchRecord::new(
+            "constructor",
+            tn,
             threads,
-            ns_per_op: ctor_means[i] * 1e9,
-            speedup: speedup(&ctor_means, i),
-        });
+            ctor_means[i] * 1e9,
+            speedup(&ctor_means, i),
+        ));
     }
 
     // --- accumulator policy: adaptive engine vs PR-1 dense scratch ------
@@ -215,6 +231,7 @@ fn main() {
     let ha = CooMatrix::from_triples_aggregate(hn, hn, &hrows, &hcols, &hvals, 0.0, |x, _| x)
         .expect("hypersparse triples")
         .to_csr();
+    let mut records3: Vec<BenchRecord> = Vec::new();
     for &threads in &[1usize, 4] {
         let par = Parallelism::with_threads(threads);
         let policies = [
@@ -222,15 +239,19 @@ fn main() {
             ("hyper-adaptive", AccumulatorPolicy::Adaptive),
         ];
         let mut means = Vec::with_capacity(policies.len());
+        let mut stats_of = Vec::with_capacity(policies.len());
         for &(label, policy) in &policies {
             let mut nnz = 0usize;
+            let mut last_stats = None;
             let t = time_op(1, repeats, |_| {
-                let (c, _) = spgemm_with_policy_par(&ha, &ha, &PlusTimes, par, policy)
+                let (c, st) = spgemm_with_policy_par(&ha, &ha, &PlusTimes, par, policy)
                     .expect("square shapes");
                 nnz = c.nnz();
+                last_stats = Some(st);
                 c
             });
             means.push(t.mean_s());
+            stats_of.push(last_stats.expect("at least one repeat"));
             h.record(hscale, &format!("{label}-t{threads}"), t, nnz);
         }
         let hyper_speedup = if means[1] > 0.0 { means[0] / means[1] } else { 0.0 };
@@ -239,22 +260,182 @@ fn main() {
              adaptive-speedup={hyper_speedup:.2}x",
             means[0], means[1],
         );
-        records.push(BenchRecord {
-            op: "hypersparse-matmul-dense".into(),
-            scale: hscale,
+        records.push(BenchRecord::new(
+            "hypersparse-matmul-dense",
+            hscale,
             threads,
-            ns_per_op: means[0] * 1e9,
-            speedup: 1.0,
-        });
-        records.push(BenchRecord {
-            op: "hypersparse-matmul-adaptive".into(),
-            scale: hscale,
+            means[0] * 1e9,
+            1.0,
+        ));
+        records.push(BenchRecord::new(
+            "hypersparse-matmul-adaptive",
+            hscale,
             threads,
-            ns_per_op: means[1] * 1e9,
-            speedup: hyper_speedup,
-        });
+            means[1] * 1e9,
+            hyper_speedup,
+        ));
+        // PR 3 trajectory: the same points, with the per-row
+        // accumulator-policy counters threaded through as extras.
+        for (i, op) in
+            ["hypersparse-matmul-dense", "hypersparse-matmul-adaptive"].iter().enumerate()
+        {
+            let st = &stats_of[i];
+            let sp = if i == 0 { 1.0 } else { hyper_speedup };
+            records3.push(
+                BenchRecord::new(op, hscale, threads, means[i] * 1e9, sp)
+                    .with_extra("mults", st.mults as f64)
+                    .with_extra("out_nnz", st.out_nnz as f64)
+                    .with_extra("rows_copy", st.rows_copy as f64)
+                    .with_extra("rows_sort", st.rows_sort as f64)
+                    .with_extra("rows_hash", st.rows_hash as f64)
+                    .with_extra("rows_dense", st.rows_dense as f64),
+            );
+        }
     }
+
+    // --- masked TableMult: sink-filter pushdown vs unmasked-then-filter -
+    // A bipartite hit table (2^mask-scale triples over 1000 columns);
+    // the sink mask keeps the "c0*" prefix — 100 of 1000 columns, a 10%-
+    // density mask. The masked multiply must be bit-identical to
+    // full-multiply-then-filter and ≥ 1.5× faster (the PR acceptance
+    // number, asserted below so the CI bench smoke enforces it).
+    let mscale = args.usize_or("mask-scale", 12);
+    let mn = 1usize << mscale;
+    // These sections run at the process default installed above, so the
+    // records carry the *actual* worker count, not a hardcoded 1.
+    let bench_threads = Parallelism::current().threads;
+    let store = TableStore::new(TableConfig::default());
+    {
+        let mut rng = SplitMix64::new(0x5EED_3A5C);
+        let rows: Vec<String> = (0..mn).map(|i| format!("r{:04}", i % (mn / 16).max(1))).collect();
+        let cols: Vec<String> = (0..mn).map(|_| format!("c{:03}", rng.below(1000))).collect();
+        let hits = Assoc::from_triples(&rows, &cols, 1.0);
+        store.ingest_assoc("hits", &hits);
+    }
+    let hits = store.table("hits").expect("ingested above");
+    let keep = KeyMatch::Glob("c0*".into());
+    let out_m = store.create_table("ata_masked");
+    let mut masked_cells = 0usize;
+    let t_masked = time_op(1, repeats, |_| {
+        masked_cells = graphulo::table_mult_masked(&hits, &hits, &out_m, &PlusTimes, &keep);
+        masked_cells
+    });
+    h.record(mscale, "tablemult-masked", t_masked.clone(), masked_cells);
+    let out_f = store.create_table("ata_full");
+    let mut full_cells = 0usize;
+    let t_full = time_op(1, repeats, |_| {
+        full_cells = graphulo::table_mult(&hits, &hits, &out_f, &PlusTimes);
+        // The client-side alternative: stream the full product back
+        // through a filtered scan to obtain the kept cells. (No second
+        // table write — the baseline pays only what unmasked-then-filter
+        // inherently costs: full compute, full sink write, one filtered
+        // read.)
+        let spec = ScanSpec::all().filtered(CellFilter::col(KeyMatch::Glob("c0*".into())));
+        let mut kept = 0usize;
+        for tr in out_f.scan_stream(spec) {
+            kept += tr.val.len();
+        }
+        kept
+    });
+    h.record(mscale, "tablemult-unmasked-filter", t_full.clone(), full_cells);
+    let masked: Vec<Triple> = out_m.scan(ScanRange::all());
+    let filter_spec = ScanSpec::all().filtered(CellFilter::col(KeyMatch::Glob("c0*".into())));
+    let filtered: Vec<Triple> = out_f.scan_stream(filter_spec).collect();
+    assert_eq!(masked, filtered, "masked TableMult must be bit-identical to unmasked-then-filter");
+    let mask_speedup = if t_masked.mean_s() > 0.0 {
+        t_full.mean_s() / t_masked.mean_s()
+    } else {
+        0.0
+    };
+    println!(
+        "[ablations] masked tablemult 2^{mscale}: unmasked+filter={:.6}s masked={:.6}s \
+         speedup={mask_speedup:.2}x (kept {}/{} cells)",
+        t_full.mean_s(),
+        t_masked.mean_s(),
+        masked.len(),
+        full_cells,
+    );
+    assert!(
+        mask_speedup >= 1.5,
+        "masked TableMult speedup {mask_speedup:.2}x below the 1.5x acceptance threshold"
+    );
+    let (full_ns, masked_ns) = (t_full.mean_s() * 1e9, t_masked.mean_s() * 1e9);
+    records3.push(
+        BenchRecord::new("tablemult-unmasked-filter", mscale, bench_threads, full_ns, 1.0)
+            .with_extra("out_cells", full_cells as f64),
+    );
+    records3.push(
+        BenchRecord::new("tablemult-masked", mscale, bench_threads, masked_ns, mask_speedup)
+            .with_extra("out_cells", masked.len() as f64),
+    );
+
+    // --- streaming vs materializing scan ---------------------------------
+    // A column-windowed scan (~10% of columns in range) consumed off the
+    // stack vs materializing the whole table and filtering client-side.
+    // The stack's tablet cursor seeks past out-of-window cells, so the
+    // streaming path never even constructs the dropped triples.
+    let sscale = args.usize_or("stream-scale", 13);
+    let sn = 1usize << sscale;
+    {
+        let mut rng = SplitMix64::new(0x5CAB_5CAB);
+        let rows: Vec<String> = (0..sn).map(|i| format!("r{:05}", i % (sn / 8).max(1))).collect();
+        let cols: Vec<String> = (0..sn).map(|_| format!("c{:03}", rng.below(1000))).collect();
+        let logs = Assoc::from_triples(&rows, &cols, 1.0);
+        store.ingest_assoc("logs", &logs);
+    }
+    let logs = store.table("logs").expect("ingested above");
+    let window = ScanRange::all().with_cols("c000", "c100");
+    let mut stream_cells = 0usize;
+    let t_stream = time_op(1, repeats, |_| {
+        let mut count = 0usize;
+        let mut bytes = 0usize;
+        for tr in logs.scan_stream(ScanSpec::over(window.clone())) {
+            count += 1;
+            bytes += tr.val.len();
+        }
+        stream_cells = count;
+        bytes
+    });
+    h.record(sscale, "scan-streaming", t_stream.clone(), stream_cells);
+    let mut mat_cells = 0usize;
+    let t_mat = time_op(1, repeats, |_| {
+        // Materialize everything, then filter client-side.
+        let all = logs.scan(ScanRange::all());
+        let mut count = 0usize;
+        let mut bytes = 0usize;
+        for tr in &all {
+            if tr.col.as_str() >= "c000" && tr.col.as_str() < "c100" {
+                count += 1;
+                bytes += tr.val.len();
+            }
+        }
+        mat_cells = count;
+        bytes
+    });
+    h.record(sscale, "scan-materialize", t_mat.clone(), mat_cells);
+    assert_eq!(stream_cells, mat_cells, "scan paths must agree on the window");
+    let scan_speedup = if t_stream.mean_s() > 0.0 {
+        t_mat.mean_s() / t_stream.mean_s()
+    } else {
+        0.0
+    };
+    println!(
+        "[ablations] windowed scan 2^{sscale}: materialize+filter={:.6}s streaming={:.6}s \
+         speedup={scan_speedup:.2}x ({stream_cells} cells kept)",
+        t_mat.mean_s(),
+        t_stream.mean_s(),
+    );
+    let (mat_ns, stream_ns) = (t_mat.mean_s() * 1e9, t_stream.mean_s() * 1e9);
+    records3.push(
+        BenchRecord::new("scan-materialize", sscale, bench_threads, mat_ns, 1.0)
+            .with_extra("kept_cells", mat_cells as f64),
+    );
+    records3.push(
+        BenchRecord::new("scan-streaming", sscale, bench_threads, stream_ns, scan_speedup)
+            .with_extra("kept_cells", stream_cells as f64),
+    );
 
     h.write_csv(&out_dir).expect("write CSV");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR2.json", &records).expect("write JSON");
+    d4m::bench::write_bench_json(&out_dir, "BENCH_PR3.json", &records3).expect("write JSON");
 }

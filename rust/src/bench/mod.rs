@@ -114,17 +114,37 @@ pub struct BenchRecord {
     /// Speedup vs the record's baseline (the baseline itself records
     /// `1.0`; see each bench's printed legend for what it compares).
     pub speedup: f64,
+    /// Extra labeled metrics rendered as additional JSON fields —
+    /// e.g. the SpGEMM accumulator-policy row counters
+    /// (`rows_copy`/`rows_sort`/`rows_hash`/`rows_dense`), flop counts,
+    /// or output sizes. Additive within schema `d4m-bench-v1`.
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchRecord {
+    /// A record with no extra metrics.
+    pub fn new(op: &str, scale: usize, threads: usize, ns_per_op: f64, speedup: f64) -> Self {
+        BenchRecord { op: op.to_string(), scale, threads, ns_per_op, speedup, extras: Vec::new() }
+    }
+
+    /// Attach one extra labeled metric (builder style).
+    pub fn with_extra(mut self, key: &str, value: f64) -> Self {
+        self.extras.push((key.to_string(), value));
+        self
+    }
+
     fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut fields = vec![
             ("op".into(), Json::str(&self.op)),
             ("scale".into(), Json::Num(self.scale as f64)),
             ("threads".into(), Json::Num(self.threads as f64)),
             ("ns_per_op".into(), Json::Num(self.ns_per_op)),
             ("speedup".into(), Json::Num(self.speedup)),
-        ])
+        ];
+        for (k, v) in &self.extras {
+            fields.push((k.clone(), Json::Num(*v)));
+        }
+        Json::Obj(fields)
     }
 }
 
@@ -229,13 +249,8 @@ mod tests {
 
     #[test]
     fn bench_json_has_schema_and_fields() {
-        let recs = vec![BenchRecord {
-            op: "hypersparse-matmul-adaptive".into(),
-            scale: 14,
-            threads: 4,
-            ns_per_op: 1234.5,
-            speedup: 1.75,
-        }];
+        let recs = vec![BenchRecord::new("hypersparse-matmul-adaptive", 14, 4, 1234.5, 1.75)
+            .with_extra("rows_copy", 4096.0)];
         let dir = std::env::temp_dir().join("d4m-bench-json-test");
         let path = write_bench_json(dir.to_str().unwrap(), "BENCH_TEST.json", &recs).unwrap();
         let content = std::fs::read_to_string(path).unwrap();
@@ -244,5 +259,6 @@ mod tests {
         assert!(content.contains("\"scale\":14"));
         assert!(content.contains("\"threads\":4"));
         assert!(content.contains("\"speedup\":1.75"));
+        assert!(content.contains("\"rows_copy\":4096"));
     }
 }

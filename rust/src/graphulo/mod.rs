@@ -8,21 +8,30 @@
 //! * [`table_mult`] — server-side `C += Aᵀ ⊗.⊕ B` computed by streaming
 //!   scans (Graphulo's `TableMult`, which contracts over the *row*
 //!   dimension of both inputs — the transpose-free formulation that fits
-//!   a row-sorted store).
+//!   a row-sorted store). [`table_mult_masked`] is the sink-filtered
+//!   variant: the output-column mask rides the masked SpGEMM engine, so
+//!   a multiply whose sink keeps 10% of columns does ~10% of the work.
 //! * [`degree_table`] — out/in degree tables (Graphulo's pre-computed
-//!   degree tables used for query planning).
-//! * [`bfs`] — k-hop breadth-first expansion from a seed set using the
-//!   adjacency + transpose tables.
+//!   degree tables used for query planning), produced entirely by a
+//!   server-side combiner stage ([`RowReduce::Count`]).
+//! * [`bfs`] — k-hop breadth-first expansion from a seed set, driven by
+//!   absolute seeks on one streaming scanner (the Accumulo
+//!   `BatchScanner` row-probe idiom).
 //! * [`jaccard`] — neighborhood Jaccard similarity from the adjacency
 //!   table (a standard Graphulo demo kernel).
 //!
-//! All kernels stream through [`ScanRange`]s and write results back via
-//! a [`BatchWriter`] — no full-table materialization in the "server".
+//! All kernels pull from the server-side iterator stack
+//! ([`crate::store::scan`]) and write results back via a
+//! [`BatchWriter`] — no kernel materializes a full `Vec<Triple>` of its
+//! input; scans stream into the compute structures directly.
 
 use crate::assoc::Assoc;
 use crate::semiring::Semiring;
-use crate::sparse::{spgemm_par, CooMatrix, CsrMatrix};
-use crate::store::{BatchWriter, ScanRange, Table, Triple, WriterConfig};
+use crate::sparse::{spgemm_masked_par, spgemm_par, CooMatrix, CsrMatrix};
+use crate::store::{
+    format_num, BatchWriter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, Table, Triple,
+    WriterConfig,
+};
 use crate::util::Parallelism;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -40,15 +49,13 @@ pub fn table_mult(a: &Table, b: &Table, out: &Arc<Table>, s: &dyn Semiring) -> u
     table_mult_par(a, b, out, s, Parallelism::current())
 }
 
-/// [`table_mult`] with an explicit thread configuration: the two input
-/// scans fan out per tablet, and the contraction itself runs on the
-/// adaptive SpGEMM engine — both scans are indexed into hypersparse CSR
-/// matrices over the shared (sorted) row dimension, `AᵀB` is one
+/// [`table_mult`] with an explicit thread configuration: both scans
+/// stream (serial) or fan out per tablet (parallel) into hypersparse
+/// CSR matrices over the shared (sorted) row dimension, `AᵀB` is one
 /// `spgemm_par` call against `A`'s cached transpose dual, and the
-/// result streams back out as triples. This replaces the old
-/// string-keyed `BTreeMap` outer-product accumulation (one map probe
-/// per ⊗) and is numerically identical to it: per output cell, partial
-/// products still combine in ascending row-key order.
+/// result streams back out as triples. Numerically identical to the
+/// old streaming row-join: per output cell, partial products combine in
+/// ascending row-key order.
 pub fn table_mult_par(
     a: &Table,
     b: &Table,
@@ -56,27 +63,91 @@ pub fn table_mult_par(
     s: &dyn Semiring,
     par: Parallelism,
 ) -> usize {
-    let ta = a.scan_par(ScanRange::all(), par);
-    let tb = b.scan_par(ScanRange::all(), par);
-    // Shared contraction dimension: merged distinct row keys (scans are
-    // sorted by row, so this is a linear merge).
-    let rows = merge_distinct(&distinct_rows(&ta), &distinct_rows(&tb));
-    if rows.is_empty() {
+    table_mult_inner(a, b, out, s, par, None)
+}
+
+/// Sink-filtered [`table_mult`]: compute and write only the output
+/// columns whose key matches `keep` — the Graphulo pattern of a
+/// multiply feeding a filtered sink table. The filter becomes a column
+/// bitmap over `B`'s column keys and rides the masked SpGEMM engine
+/// ([`spgemm_masked_par`]), so excluded columns cost zero flops and
+/// zero output allocation; the kept cells are bit-identical to running
+/// the full multiply and filtering afterwards.
+pub fn table_mult_masked(
+    a: &Table,
+    b: &Table,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    keep: &KeyMatch,
+) -> usize {
+    table_mult_masked_par(a, b, out, s, keep, Parallelism::current())
+}
+
+/// [`table_mult_masked`] with an explicit thread configuration.
+pub fn table_mult_masked_par(
+    a: &Table,
+    b: &Table,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    keep: &KeyMatch,
+    par: Parallelism,
+) -> usize {
+    table_mult_inner(a, b, out, s, par, Some(keep))
+}
+
+fn table_mult_inner(
+    a: &Table,
+    b: &Table,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    par: Parallelism,
+    sink: Option<&KeyMatch>,
+) -> usize {
+    // Stream each scan straight into index/value columns (the serial
+    // path pulls from the stack triple-by-triple; the parallel path
+    // consumes the fanned-out collection without re-allocating it).
+    let mut sa = ScanSide::default();
+    let mut sb = ScanSide::default();
+    if par.is_serial() {
+        for t in a.scan_stream(ScanSpec::all()) {
+            sa.ingest(t);
+        }
+        for t in b.scan_stream(ScanSpec::all()) {
+            sb.ingest(t);
+        }
+    } else {
+        for t in a.scan_par(ScanRange::all(), par) {
+            sa.ingest(t);
+        }
+        for t in b.scan_par(ScanRange::all(), par) {
+            sb.ingest(t);
+        }
+    }
+    if sa.rows.is_empty() && sb.rows.is_empty() {
         return 0;
     }
-    let (ma, cols_a) = scan_to_csr(&ta, &rows);
-    let (mb, cols_b) = scan_to_csr(&tb, &rows);
+    // Shared contraction dimension: merged distinct row keys (scans are
+    // sorted by row, so this is a linear merge).
+    let merged = merge_distinct(&sa.rows, &sb.rows);
+    let (ma, cols_a) = sa.into_csr(&merged);
+    let (mb, cols_b) = sb.into_csr(&merged);
     // `Aᵀ` row c1 walks the rows containing c1 in ascending key order —
     // the same ⊕ order the streaming row-join produced.
     let at = ma.transpose_cached();
-    let c = spgemm_par(at, &mb, s, par).expect("shared row dimension");
+    let c = match sink {
+        None => spgemm_par(at, &mb, s, par).expect("shared row dimension"),
+        Some(keep) => {
+            let mask: Vec<bool> = cols_b.iter().map(|c| keep.matches(c)).collect();
+            spgemm_masked_par(at, &mb, s, par, &mask).expect("shared row dimension")
+        }
+    };
     let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
     let mut cells = 0usize;
-    for (i, &c1) in cols_a.iter().enumerate() {
+    for (i, c1) in cols_a.iter().enumerate() {
         let (cj, cv) = c.row(i);
         for (j, v) in cj.iter().zip(cv) {
             if *v != s.zero() {
-                w.put(Triple::new(c1, cols_b[*j as usize], format_num(*v)));
+                w.put(Triple::new(c1.as_str(), cols_b[*j as usize].as_str(), format_num(*v)));
                 cells += 1;
             }
         }
@@ -85,28 +156,79 @@ pub fn table_mult_par(
     cells
 }
 
-/// Distinct row keys of a (row-sorted) scan, in order.
-fn distinct_rows(scan: &[Triple]) -> Vec<&str> {
-    let mut out: Vec<&str> = Vec::new();
-    for t in scan {
-        if out.last() != Some(&t.row.as_str()) {
-            out.push(t.row.as_str());
+/// One operand of [`table_mult`], accumulated directly from a sorted
+/// triple stream: distinct row keys, per-entry local row index, column
+/// key, and parsed value — no `Triple` structs retained.
+#[derive(Default)]
+struct ScanSide {
+    rows: Vec<String>,
+    row_of: Vec<u32>,
+    cols: Vec<String>,
+    vals: Vec<f64>,
+}
+
+impl ScanSide {
+    /// Fold one streamed triple (stream is (row, col)-sorted). Values
+    /// parse like the old streaming join did (`unwrap_or(0.0)`), and
+    /// parsed zeros stay stored so non-plus-times semirings see exactly
+    /// the cells the table holds.
+    fn ingest(&mut self, t: Triple) {
+        if self.rows.last().map(String::as_str) != Some(t.row.as_str()) {
+            self.rows.push(t.row);
         }
+        self.row_of.push((self.rows.len() - 1) as u32);
+        self.cols.push(t.col);
+        self.vals.push(t.val.parse().unwrap_or(0.0));
     }
-    out
+
+    /// Index into a CSR matrix over `merged` (a sorted superset of
+    /// `self.rows`). Returns the matrix and its sorted distinct column
+    /// keys.
+    fn into_csr(self, merged: &[String]) -> (CsrMatrix, Vec<String>) {
+        // Sort refs, not owned Strings: only the distinct keys (usually
+        // far fewer than nnz) are cloned.
+        let distinct: Vec<String> = {
+            let mut refs: Vec<&str> = self.cols.iter().map(String::as_str).collect();
+            refs.sort_unstable();
+            refs.dedup();
+            refs.iter().map(|s| s.to_string()).collect()
+        };
+        // Local row index → merged row index (both lists sorted).
+        let mut map = vec![0u32; self.rows.len()];
+        let mut p = 0usize;
+        for (i, r) in self.rows.iter().enumerate() {
+            while merged[p] != *r {
+                p += 1;
+            }
+            map[i] = p as u32;
+        }
+        let mut ri: Vec<u32> = Vec::with_capacity(self.row_of.len());
+        let mut ci: Vec<u32> = Vec::with_capacity(self.cols.len());
+        for (k, &own) in self.row_of.iter().enumerate() {
+            ri.push(map[own as usize]);
+            let c = distinct
+                .binary_search_by(|probe| probe.as_str().cmp(self.cols[k].as_str()))
+                .expect("column collected above");
+            ci.push(c as u32);
+        }
+        let m = CooMatrix::from_sorted_parts(merged.len(), distinct.len(), ri, ci, self.vals)
+            .into_csr();
+        (m, distinct)
+    }
 }
 
 /// Merge two sorted, distinct key lists into their sorted union.
-fn merge_distinct<'a>(x: &[&'a str], y: &[&'a str]) -> Vec<&'a str> {
+fn merge_distinct(x: &[String], y: &[String]) -> Vec<String> {
     let mut out = Vec::with_capacity(x.len().max(y.len()));
     let (mut i, mut j) = (0usize, 0usize);
     while i < x.len() || j < y.len() {
         let next = match (x.get(i), y.get(j)) {
-            (Some(&a), Some(&b)) => a.min(b),
-            (Some(&a), None) => a,
-            (None, Some(&b)) => b,
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
             (None, None) => unreachable!(),
-        };
+        }
+        .clone();
         if i < x.len() && x[i] == next {
             i += 1;
         }
@@ -118,65 +240,17 @@ fn merge_distinct<'a>(x: &[&'a str], y: &[&'a str]) -> Vec<&'a str> {
     out
 }
 
-/// Index a (row, col)-sorted scan into a CSR matrix over the given
-/// sorted row key space (a superset of the scan's rows). Returns the
-/// matrix and its sorted distinct column keys. Values parse like the
-/// streaming join did (`unwrap_or(0.0)`), and parsed zeros stay stored
-/// so non-plus-times semirings see exactly the cells the table holds.
-fn scan_to_csr<'a>(scan: &'a [Triple], rows: &[&str]) -> (CsrMatrix, Vec<&'a str>) {
-    let mut cols: Vec<&str> = scan.iter().map(|t| t.col.as_str()).collect();
-    cols.sort_unstable();
-    cols.dedup();
-    let mut ri: Vec<u32> = Vec::with_capacity(scan.len());
-    let mut ci: Vec<u32> = Vec::with_capacity(scan.len());
-    let mut vals: Vec<f64> = Vec::with_capacity(scan.len());
-    let mut rp = 0usize;
-    for t in scan {
-        // Scan rows are sorted and `rows` is a sorted superset, so the
-        // cursor only moves forward.
-        while rows[rp] != t.row.as_str() {
-            rp += 1;
-        }
-        let c = cols.binary_search(&t.col.as_str()).expect("column collected above");
-        ri.push(rp as u32);
-        ci.push(c as u32);
-        vals.push(t.val.parse().unwrap_or(0.0));
-    }
-    let m = CooMatrix::from_sorted_parts(rows.len(), cols.len(), ri, ci, vals).into_csr();
-    (m, cols)
-}
-
 /// Build degree tables from an edge table: `(node, "deg", count)`.
 /// `out_degrees` counts cells per row (out-degree in an adjacency
 /// table); run it on the transpose table for in-degrees.
+///
+/// The count happens *inside* the scan stack — a [`RowReduce::Count`]
+/// combiner collapses each row server-side, so exactly one triple per
+/// node crosses into the writer.
 pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
-    let scan = edges.scan(ScanRange::all());
     let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
-    let mut count = 0usize;
-    let mut nodes = 0usize;
-    let mut current: Option<String> = None;
-    let flush_node = |node: &str, count: usize, w: &mut BatchWriter| {
-        w.put(Triple::new(node, "deg", count.to_string()));
-    };
-    for t in &scan {
-        match &mut current {
-            Some(node) if *node == t.row => count += 1,
-            Some(node) => {
-                flush_node(node, count, &mut w);
-                nodes += 1;
-                current = Some(t.row.clone());
-                count = 1;
-            }
-            None => {
-                current = Some(t.row.clone());
-                count = 1;
-            }
-        }
-    }
-    if let Some(node) = current {
-        flush_node(&node, count, &mut w);
-        nodes += 1;
-    }
+    let spec = ScanSpec::all().reduced(RowReduce::Count { out_col: "deg".into() });
+    let nodes = w.put_scan(edges.scan_stream(spec));
     w.flush();
     nodes
 }
@@ -184,17 +258,27 @@ pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
 /// k-hop BFS from `seeds` over an adjacency table (`row → col` edges).
 /// Returns the set of reached nodes per hop (hop 0 = the seeds that
 /// exist in the table ∪ given set).
+///
+/// One streaming scanner serves every hop: frontiers iterate in sorted
+/// order and [`ScanIter::seek`] jumps the cursor to each frontier row,
+/// so a hop costs one seek + one row read per frontier node instead of
+/// a fresh scan per node.
 pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> {
     let mut frontiers: Vec<BTreeSet<String>> = Vec::with_capacity(hops + 1);
     let mut visited: BTreeSet<String> = seeds.iter().cloned().collect();
     frontiers.push(visited.clone());
     let mut frontier: BTreeSet<String> = visited.clone();
+    let mut stream = adj.scan_stream(ScanSpec::all());
     for _ in 0..hops {
         let mut next = BTreeSet::new();
         for node in &frontier {
-            for t in adj.scan(ScanRange::single(node.clone())) {
+            stream.seek(node, "");
+            while let Some(t) = stream.next_triple() {
+                if t.row != *node {
+                    break;
+                }
                 if !visited.contains(&t.col) {
-                    next.insert(t.col.clone());
+                    next.insert(t.col);
                 }
             }
         }
@@ -212,11 +296,11 @@ pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> 
 /// that share at least one neighbor. Returns an associative array
 /// `J(u, v) = |N(u) ∩ N(v)| / |N(u) ∪ N(v)|` for `u < v`.
 pub fn jaccard(adj: &Table) -> Assoc {
-    let scan = adj.scan(ScanRange::all());
-    // Build neighbor sets.
+    // Build neighbor sets straight off the stream (triples are moved,
+    // not cloned, into the map).
     let mut nbrs: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
-    for t in &scan {
-        nbrs.entry(t.row.clone()).or_default().insert(t.col.clone());
+    for t in adj.scan_stream(ScanSpec::all()) {
+        nbrs.entry(t.row).or_default().insert(t.col);
     }
     // Invert: neighbor -> rows touching it, so only co-neighbor pairs
     // are considered (sparse pair enumeration).
@@ -252,18 +336,10 @@ pub fn jaccard(adj: &Table) -> Assoc {
         .expect("jaccard triples")
 }
 
-fn format_num(v: f64) -> String {
-    if v.fract() == 0.0 && v.abs() < 1e15 {
-        format!("{}", v as i64)
-    } else {
-        format!("{v}")
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::semiring::PlusTimes;
+    use crate::semiring::{MaxPlus, MinPlus, PlusTimes};
     use crate::store::{TableConfig, TableStore};
 
     /// Small directed graph:  a→b, a→c, b→c, c→d.
@@ -353,6 +429,56 @@ mod tests {
         let out = store.create_table("out");
         table_mult(&t, &t, &out, &PlusTimes);
         assert_eq!(store.read_assoc("out").unwrap(), a.sqin());
+    }
+
+    #[test]
+    fn masked_table_mult_equals_filtered_full() {
+        // Masked output cells must be byte-identical to unmasked-then-
+        // filter, across semirings, thread counts, and split tables.
+        let store = TableStore::new(TableConfig { split_threshold: 256, write_latency_us: 0 });
+        let n = 60;
+        let rows: Vec<String> = (0..n).map(|i| format!("r{:02}", i % 12)).collect();
+        let cols: Vec<String> = (0..n).map(|i| format!("c{:02}", (i * 7) % 20)).collect();
+        let a = Assoc::from_triples(&rows, &cols, 2.0);
+        let (t, _) = store.ingest_assoc("m", &a);
+        let keep = KeyMatch::Prefix("c0".into());
+        for s in [&PlusTimes as &dyn Semiring, &MaxPlus, &MinPlus] {
+            let full = store.create_table(&format!("full_{}", s.name()));
+            table_mult(&t, &t, &full, s);
+            let expect: Vec<Triple> = full
+                .scan(ScanRange::all())
+                .into_iter()
+                .filter(|tr| keep.matches(&tr.col))
+                .collect();
+            for threads in [1usize, 2, 4] {
+                let out = store.create_table(&format!("masked_{}_{threads}", s.name()));
+                let cells = table_mult_masked_par(
+                    &t,
+                    &t,
+                    &out,
+                    s,
+                    &keep,
+                    Parallelism::with_threads(threads),
+                );
+                let got = out.scan(ScanRange::all());
+                assert_eq!(got, expect, "{} t={threads}", s.name());
+                assert_eq!(cells, expect.len(), "{} t={threads}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn masked_table_mult_degenerate_masks() {
+        let (store, t, _) = graph_store();
+        let none = store.create_table("none");
+        let keep_none = KeyMatch::Equals("nope".into());
+        assert_eq!(table_mult_masked(&t, &t, &none, &PlusTimes, &keep_none), 0);
+        assert!(store.read_assoc("none").unwrap().is_empty());
+        let all = store.create_table("all");
+        let keep_all = KeyMatch::Glob("*".into());
+        table_mult_masked(&t, &t, &all, &PlusTimes, &keep_all);
+        let a = store.read_assoc("edges").unwrap();
+        assert_eq!(store.read_assoc("all").unwrap(), a.sqin());
     }
 }
 

@@ -16,9 +16,12 @@
 //!   (COO/CSR/CSC, add, elementwise multiply, SpGEMM) standing in for
 //!   SciPy.sparse.
 //! * **[`store`]** — an Accumulo-like sorted, distributed key/value triple
-//!   store (tablets, splits, batch writer, range scans).
-//! * **[`graphulo`]** — Graphulo-style server-side kernels (TableMult,
-//!   degree tables, BFS) over the store.
+//!   store (tablets, splits, batch writer) whose scans run on a
+//!   server-side iterator stack ([`store::scan`]): seekable streaming
+//!   cursors with range, filter, and combiner pushdown.
+//! * **[`graphulo`]** — Graphulo-style server-side kernels (TableMult —
+//!   including the sink-masked variant on masked SpGEMM — degree
+//!   tables, BFS) over the store's scan stack.
 //! * **[`pipeline`]** — the streaming ingest orchestrator: sharding,
 //!   rebalancing and bounded-queue backpressure.
 //! * **[`runtime`]** — PJRT (XLA) runtime that loads AOT-compiled Pallas

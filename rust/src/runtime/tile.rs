@@ -156,9 +156,10 @@ pub fn accel_matmul(
         }
     }
 
-    let adj = CooMatrix::from_triples_aggregate(m, n, &rows_out, &cols_out, &vals_out, zero, |x, _| x)
-        .expect("tile triples are unique and in bounds")
-        .to_csr();
+    let adj =
+        CooMatrix::from_triples_aggregate(m, n, &rows_out, &cols_out, &vals_out, zero, |x, _| x)
+            .expect("tile triples are unique and in bounds")
+            .to_csr();
     let out = Assoc {
         row: a.row_keys().to_vec(),
         col: b.col_keys().to_vec(),

@@ -275,8 +275,9 @@ mod tests {
 
     #[test]
     fn drops_explicit_zero_inputs() {
-        let m = CooMatrix::from_triples_aggregate(2, 2, &[0, 1], &[0, 1], &[0.0, 1.0], 0.0, f64::min)
-            .unwrap();
+        let m =
+            CooMatrix::from_triples_aggregate(2, 2, &[0, 1], &[0, 1], &[0.0, 1.0], 0.0, f64::min)
+                .unwrap();
         assert_eq!(m.nnz(), 1);
         assert_eq!(m.get(1, 1), Some(1.0));
     }

@@ -34,8 +34,9 @@ pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use dense::DenseBlock;
 pub use spgemm::{
-    spgemm, spgemm_par, spgemm_with_policy_par, spgemm_with_stats, spgemm_with_stats_par,
-    AccumulatorPolicy, SpGemmStats,
+    spgemm, spgemm_masked, spgemm_masked_par, spgemm_masked_with_stats_par, spgemm_par,
+    spgemm_with_policy_par, spgemm_with_stats, spgemm_with_stats_par, AccumulatorPolicy,
+    SpGemmStats,
 };
 
 /// Errors from sparse-matrix constructors and shape checks.
@@ -47,6 +48,8 @@ pub enum SparseError {
     IndexOutOfBounds { axis: &'static str, index: usize, extent: usize },
     /// Operand shapes are incompatible for the requested operation.
     ShapeMismatch { left: (usize, usize), right: (usize, usize), op: &'static str },
+    /// A column mask's length disagrees with the operand's column count.
+    MaskLengthMismatch { mask: usize, ncols: usize },
 }
 
 impl std::fmt::Display for SparseError {
@@ -64,6 +67,9 @@ impl std::fmt::Display for SparseError {
                 "shape mismatch for {op}: {}x{} vs {}x{}",
                 left.0, left.1, right.0, right.1
             ),
+            SparseError::MaskLengthMismatch { mask, ncols } => {
+                write!(f, "column mask length {mask} does not match {ncols} columns")
+            }
         }
     }
 }

@@ -32,6 +32,23 @@
 //! the PR 1 kernel, and the equivalence suite cross-checks every
 //! policy.
 //!
+//! **Masked multiply.** [`spgemm_masked_par`] computes only the output
+//! columns a caller's mask keeps — the Graphulo `TableMult`-with-sink-
+//! filter pattern, where a multiply writing into a filtered table
+//! should never compute the cells the sink drops. Output column `j`
+//! depends only on column `j` of `B`, so the mask is applied to `B`'s
+//! stored structure in a single O(nnz(B)) pass before the two phases
+//! run: the symbolic pass then counts zero flops for excluded columns,
+//! the per-chunk allocation bounds shrink to the masked output, and the
+//! numeric inner loops never see an excluded entry. (Testing the bitmap
+//! inside the inner loops instead would pay one branch per *flop* —
+//! once per `A`-row touching the entry — rather than once per stored
+//! `B` entry.) Because each surviving column's ⊗/⊕ order is untouched,
+//! the masked product is **bit-identical** to computing the full
+//! product and dropping the masked-out columns, at ~`mask density` of
+//! the flops and allocation; `tests/parallel_equivalence.rs` enforces
+//! this across semirings, thread counts, and policies.
+//!
 //! **Determinism.** Within a row, every accumulator combines the
 //! products of a given output column in identical ⊗-traversal order
 //! (the order `A[i,:]` walks `B`'s rows), and rows are emitted in
@@ -129,6 +146,76 @@ pub fn spgemm_with_stats_par(
     par: Parallelism,
 ) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
     spgemm_with_policy_par(a, b, s, par, AccumulatorPolicy::Adaptive)
+}
+
+/// Column-masked SpGEMM at the process-default parallelism: compute
+/// only the output columns with `mask[j] == true`. See the module docs
+/// for the contract (bit-identical to multiply-then-drop, ~mask-density
+/// flops).
+pub fn spgemm_masked(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    mask: &[bool],
+) -> Result<CsrMatrix, SparseError> {
+    spgemm_masked_par(a, b, s, Parallelism::current(), mask)
+}
+
+/// [`spgemm_masked`] with an explicit thread configuration.
+pub fn spgemm_masked_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+    mask: &[bool],
+) -> Result<CsrMatrix, SparseError> {
+    spgemm_masked_with_stats_par(a, b, s, par, mask).map(|(c, _)| c)
+}
+
+/// [`spgemm_masked_par`] with operation counts. `stats.mults` counts
+/// only the surviving (mask-true) flops — the work-saved witness the
+/// benches record. `mask.len()` must equal `B`'s column count.
+pub fn spgemm_masked_with_stats_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+    mask: &[bool],
+) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
+    let n = b.shape().1;
+    if mask.len() != n {
+        return Err(SparseError::MaskLengthMismatch { mask: mask.len(), ncols: n });
+    }
+    if mask.iter().all(|&keep| keep) {
+        // Degenerate mask: nothing to restrict, skip the copy.
+        return spgemm_with_policy_par(a, b, s, par, AccumulatorPolicy::Adaptive);
+    }
+    let bm = restrict_cols(b, mask);
+    spgemm_with_policy_par(a, &bm, s, par, AccumulatorPolicy::Adaptive)
+}
+
+/// `B` restricted to mask-true columns: same shape, same column
+/// indices, excluded entries dropped. One counting pass sizes the
+/// output exactly; O(nnz(B)) total.
+fn restrict_cols(b: &CsrMatrix, mask: &[bool]) -> CsrMatrix {
+    let (k, n) = b.shape();
+    let (bptr, bidx, bval) = (b.indptr(), b.indices(), b.values());
+    let keep = bidx.iter().filter(|&&c| mask[c as usize]).count();
+    let mut indptr = Vec::with_capacity(k + 1);
+    indptr.push(0usize);
+    let mut indices: Vec<u32> = Vec::with_capacity(keep);
+    let mut data: Vec<f64> = Vec::with_capacity(keep);
+    for r in 0..k {
+        for p in bptr[r]..bptr[r + 1] {
+            let c = bidx[p];
+            if mask[c as usize] {
+                indices.push(c);
+                data.push(bval[p]);
+            }
+        }
+        indptr.push(indices.len());
+    }
+    CsrMatrix::from_parts(k, n, indptr, indices, data)
 }
 
 /// Rows below this count are not worth a fan-out (pool dispatch costs
@@ -754,6 +841,102 @@ mod tests {
                             &format!("{} {policy:?} t={threads}", s.name()),
                         );
                     }
+                }
+            }
+        });
+    }
+
+    /// Expected masked result: the full product with mask-false columns
+    /// dropped (raw arrays, so the comparison is bit-exact).
+    fn drop_cols_arrays(c: &CsrMatrix, mask: &[bool]) -> (Vec<usize>, Vec<u32>, Vec<u64>) {
+        let mut indptr = vec![0usize];
+        let mut idx: Vec<u32> = Vec::new();
+        let mut bits: Vec<u64> = Vec::new();
+        for r in 0..c.shape().0 {
+            let (ci, cv) = c.row(r);
+            for (col, v) in ci.iter().zip(cv) {
+                if mask[*col as usize] {
+                    idx.push(*col);
+                    bits.push(v.to_bits());
+                }
+            }
+            indptr.push(idx.len());
+        }
+        (indptr, idx, bits)
+    }
+
+    #[test]
+    fn masked_rejects_bad_mask_length() {
+        let a = CsrMatrix::zeros(2, 3);
+        let b = CsrMatrix::zeros(3, 4);
+        let err = spgemm_masked(&a, &b, &PlusTimes, &[true; 3]).unwrap_err();
+        assert!(matches!(err, SparseError::MaskLengthMismatch { mask: 3, ncols: 4 }));
+    }
+
+    #[test]
+    fn masked_small_matches_filtered_full() {
+        let a = from_triples(2, 2, &[(0, 0, 1.0), (0, 1, 2.0), (1, 0, 3.0), (1, 1, 4.0)]);
+        let b = from_triples(2, 3, &[(0, 0, 1.0), (0, 2, 1.0), (1, 1, 5.0), (1, 2, 2.0)]);
+        let mask = [true, false, true];
+        let full = spgemm(&a, &b, &PlusTimes).unwrap();
+        let (ptr, idx, bits) = drop_cols_arrays(&full, &mask);
+        let (got, stats) = spgemm_masked_with_stats_par(
+            &a,
+            &b,
+            &PlusTimes,
+            Parallelism::serial(),
+            &mask,
+        )
+        .unwrap();
+        assert_eq!(got.shape(), full.shape());
+        assert_eq!(got.indptr(), &ptr[..]);
+        assert_eq!(got.indices(), &idx[..]);
+        let gbits: Vec<u64> = got.values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gbits, bits);
+        // Excluded column 1 contributed zero flops: 2 A-entries × 1
+        // surviving B-entry each... row 0 hits B rows 0 and 1 (2 + 1
+        // surviving entries), row 1 the same: 6 total vs 8 unmasked.
+        assert_eq!(stats.mults, 6);
+    }
+
+    #[test]
+    fn masked_all_false_and_all_true() {
+        let a = from_triples(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]);
+        let b = from_triples(2, 2, &[(0, 0, 3.0), (1, 1, 4.0)]);
+        let none = spgemm_masked(&a, &b, &PlusTimes, &[false, false]).unwrap();
+        assert_eq!(none.nnz(), 0);
+        assert_eq!(none.shape(), (2, 2));
+        let all = spgemm_masked(&a, &b, &PlusTimes, &[true, true]).unwrap();
+        assert_eq!(all, spgemm(&a, &b, &PlusTimes).unwrap());
+    }
+
+    #[test]
+    fn prop_masked_matches_filtered_all_semirings() {
+        check("masked spgemm == full-then-drop", 60, |g| {
+            let m = 20;
+            let k = 12;
+            let n = 16;
+            let mk_mat = |r: &mut SplitMix64, rows: usize, cols: usize, nnz: usize| {
+                let mut t = Vec::new();
+                for _ in 0..nnz {
+                    t.push((r.below_usize(rows), r.below_usize(cols), r.range_i64(1, 9) as f64));
+                }
+                from_triples(rows, cols, &t)
+            };
+            let a = mk_mat(g.rng(), m, k, 80);
+            let b = mk_mat(g.rng(), k, n, 60);
+            let mask: Vec<bool> = (0..n).map(|_| g.rng().chance(0.3)).collect();
+            for s in [&PlusTimes as &dyn Semiring, &MaxPlus, &MinPlus, &MaxMin] {
+                let full = spgemm(&a, &b, s).unwrap();
+                let (ptr, idx, bits) = drop_cols_arrays(&full, &mask);
+                for threads in [1usize, 3, 7] {
+                    let got =
+                        spgemm_masked_par(&a, &b, s, Parallelism::with_threads(threads), &mask)
+                            .unwrap();
+                    assert_eq!(got.indptr(), &ptr[..], "{} t={threads}", s.name());
+                    assert_eq!(got.indices(), &idx[..], "{} t={threads}", s.name());
+                    let gbits: Vec<u64> = got.values().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gbits, bits, "{} t={threads}", s.name());
                 }
             }
         });

@@ -19,16 +19,25 @@
 //! * **[`TableStore`]** — the "instance": a named collection of tables,
 //!   including D4M's standard *adjacency + transpose-adjacency* pair so
 //!   both row and column access are sorted scans.
+//! * **[`scan`]** — the server-side iterator stack (Accumulo's
+//!   seek/next iterator model): composable range, filter, and combiner
+//!   stages executed against the tablets, streamed to the consumer
+//!   ([`Table::scan_stream`]) or collected with per-tablet parallel
+//!   fan-out ([`Table::scan_spec_par`]).
 //!
 //! Triples here are plain strings (Accumulo keys are bytes); conversion
 //! to/from [`crate::assoc::Assoc`] happens at the boundary
 //! ([`Table::scan_to_assoc`], [`TableStore::ingest_assoc`]).
 
+pub mod scan;
 mod table;
 mod tablet;
 mod writer;
 
-pub use table::{ScanRange, Table, TableConfig};
+pub use scan::{
+    format_num, CellField, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec,
+};
+pub use table::{Table, TableConfig, TableStream};
 pub use tablet::Tablet;
 pub use writer::{BatchWriter, WriterConfig};
 
@@ -228,6 +237,31 @@ pub fn triples_to_assoc_par(triples: &[Triple], par: crate::util::Parallelism) -
     let vals = match numeric {
         Some(nums) => ValsInput::Num(nums),
         None => ValsInput::Str(triples.iter().map(|t| t.val.clone()).collect()),
+    };
+    Assoc::try_new_par(rows, cols, vals, Aggregator::Last, par)
+        .expect("scan triples are consistent")
+}
+
+/// Build an [`Assoc`] from a triple stream (a [`TableStream`] or any
+/// other [`ScanIter`] consumer) without materializing a `Vec<Triple>`:
+/// triples flow straight into the constructor's key and value columns.
+/// Same semantics as [`triples_to_assoc`].
+pub fn stream_to_assoc(
+    triples: impl Iterator<Item = Triple>,
+    par: crate::util::Parallelism,
+) -> Assoc {
+    let mut rows: Vec<Key> = Vec::new();
+    let mut cols: Vec<Key> = Vec::new();
+    let mut raw: Vec<String> = Vec::new();
+    for t in triples {
+        rows.push(Key::str(t.row));
+        cols.push(Key::str(t.col));
+        raw.push(t.val);
+    }
+    let numeric: Option<Vec<f64>> = raw.iter().map(|v| v.parse::<f64>().ok()).collect();
+    let vals = match numeric {
+        Some(nums) => ValsInput::Num(nums),
+        None => ValsInput::Str(raw),
     };
     Assoc::try_new_par(rows, cols, vals, Aggregator::Last, par)
         .expect("scan triples are consistent")

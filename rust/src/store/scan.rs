@@ -1,0 +1,701 @@
+//! The server-side scan stack — Accumulo's iterator model for this store.
+//!
+//! Accumulo's defining performance trick (and the one the D4M database
+//! papers lean on — "D4M: Bringing Associative Arrays to Database
+//! Engines", "D4M 3.0") is that scans are *iterator stacks executed
+//! inside the tablet servers*: a seekable sorted-key iterator per
+//! tablet, wrapped by range restriction, filters, and combiners, so the
+//! client receives only the cells (or aggregates) it asked for. This
+//! module is that stack for the in-repo store:
+//!
+//! | Accumulo | here |
+//! |----------|------|
+//! | `SortedKeyValueIterator` (seek + next) | [`ScanIter`] |
+//! | `Range` (row + column qualifier bounds) | [`ScanRange`] |
+//! | `ColumnQualifierFilter` / `RegExFilter` | [`CellFilter`] + [`KeyMatch`] |
+//! | `Combiner` (per-key aggregation) | [`RowReduce`] |
+//! | `ScannerOptions` (the configured stack) | [`ScanSpec`] |
+//!
+//! The base of the stack is a *block cursor* over tablet `BTreeMap`s
+//! ([`SliceCursor`] for a pinned tablet list, `TableCursor` in
+//! `table.rs` for the re-locating streaming scanner): it holds no lock
+//! between blocks, resumes by key, and therefore composes with
+//! concurrent writers and tablet splits. Stages wrap the base
+//! generically ([`FilterIter`], [`ReduceIter`]); nothing in the stack
+//! ever materializes the full triple set — consumers pull one triple at
+//! a time.
+//!
+//! **Determinism.** Every stage is a pure, order-preserving function of
+//! the sorted triple stream, rows never span tablets (splits happen at
+//! row boundaries), and the parallel collector in `Table::scan_spec_par`
+//! splits work at tablet boundaries — so a stacked scan is byte-identical
+//! to "naive scan, then filter, then reduce" at every thread count
+//! (`rust/tests/scan_stack.rs` enforces this).
+
+use super::tablet::Tablet;
+use super::Triple;
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+
+/// A scan range: rows in `[lo, hi)` and, within each row, columns in
+/// `[col_lo, col_hi)` — all unbounded when `None`. The column window is
+/// applied *inside* the tablet cursor, which skips to the next row as
+/// soon as a row's window is exhausted (Accumulo's column-qualifier
+/// range seek), so out-of-window cells are never even copied out of the
+/// tablet.
+#[derive(Debug, Clone, Default)]
+pub struct ScanRange {
+    /// Inclusive lower row bound.
+    pub lo: Option<String>,
+    /// Exclusive upper row bound.
+    pub hi: Option<String>,
+    /// Inclusive lower column bound (per row).
+    pub col_lo: Option<String>,
+    /// Exclusive upper column bound (per row).
+    pub col_hi: Option<String>,
+}
+
+impl ScanRange {
+    /// The full-table range.
+    pub fn all() -> Self {
+        ScanRange::default()
+    }
+
+    /// Rows in `[lo, hi)`.
+    pub fn rows(lo: impl Into<String>, hi: impl Into<String>) -> Self {
+        ScanRange { lo: Some(lo.into()), hi: Some(hi.into()), ..ScanRange::default() }
+    }
+
+    /// Exactly one row.
+    pub fn single(row: impl Into<String>) -> Self {
+        let row = row.into();
+        let mut hi = row.clone();
+        hi.push('\0');
+        ScanRange { lo: Some(row), hi: Some(hi), ..ScanRange::default() }
+    }
+
+    /// Restrict this range to columns in `[lo, hi)` within each row.
+    pub fn with_cols(mut self, lo: impl Into<String>, hi: impl Into<String>) -> Self {
+        self.col_lo = Some(lo.into());
+        self.col_hi = Some(hi.into());
+        self
+    }
+
+    /// Whether a tablet extent `[tab_lo, tab_hi)` overlaps the row
+    /// range (the pruning test shared by every scan path).
+    pub fn overlaps_extent(&self, tab_lo: Option<&str>, tab_hi: Option<&str>) -> bool {
+        let past = matches!((self.hi.as_deref(), tab_lo), (Some(hi), Some(tlo)) if tlo >= hi);
+        let before = matches!((self.lo.as_deref(), tab_hi), (Some(lo), Some(thi)) if thi <= lo);
+        !(past || before)
+    }
+}
+
+/// A streaming iterator over sorted triples — the store's analogue of
+/// Accumulo's `SortedKeyValueIterator`. Implementors yield triples in
+/// strictly increasing `(row, col)` order.
+pub trait ScanIter {
+    /// Reposition so the next triple returned is the first one with key
+    /// `>= (row, col)` (clamped to the scan's range). Seeks are
+    /// absolute: they may move forward or backward. Seeking into the
+    /// middle of a row under a [`RowReduce`] stage restarts that row's
+    /// aggregate, so reduced scans should seek to row starts
+    /// (`col = ""`).
+    fn seek(&mut self, row: &str, col: &str);
+
+    /// The next triple, or `None` when the scan is exhausted.
+    fn next_triple(&mut self) -> Option<Triple>;
+}
+
+/// String matcher for filter stages (Accumulo's filter iterators reach
+/// for Java regex; this store keeps an offline-friendly subset).
+#[derive(Debug, Clone)]
+pub enum KeyMatch {
+    /// Exact equality.
+    Equals(String),
+    /// Prefix match.
+    Prefix(String),
+    /// Glob match: `*` = any sequence, `?` = any single char.
+    Glob(String),
+    /// Membership in an explicit key set.
+    In(BTreeSet<String>),
+}
+
+impl KeyMatch {
+    /// Whether `s` matches.
+    pub fn matches(&self, s: &str) -> bool {
+        match self {
+            KeyMatch::Equals(k) => s == k,
+            KeyMatch::Prefix(p) => s.starts_with(p.as_str()),
+            KeyMatch::Glob(p) => glob_match(p, s),
+            KeyMatch::In(set) => set.contains(s),
+        }
+    }
+}
+
+/// Iterative glob matcher (`*` any sequence, `?` any one char) with the
+/// classic single-star backtrack — linear in `s.len()` per star, and
+/// allocation-free (it runs once per cell in the filter hot path).
+/// Operates on bytes; literal multi-byte chars compare bytewise, `?`
+/// consumes one full UTF-8 char, and the backtrack mark only ever
+/// advances from char boundary to char boundary.
+fn glob_match(pat: &str, s: &str) -> bool {
+    let (p, t) = (pat.as_bytes(), s.as_bytes());
+    // UTF-8 sequence length from a leading byte (only ever called on
+    // char boundaries).
+    let char_len = |b: u8| -> usize {
+        match b {
+            x if x < 0x80 => 1,
+            x if x >= 0xF0 => 4,
+            x if x >= 0xE0 => 3,
+            _ => 2,
+        }
+    };
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let mut star: Option<(usize, usize)> = None;
+    while ti < t.len() {
+        if pi < p.len() && p[pi] == b'?' {
+            pi += 1;
+            ti += char_len(t[ti]);
+        } else if pi < p.len() && p[pi] != b'*' && p[pi] == t[ti] {
+            pi += 1;
+            ti += 1;
+        } else if pi < p.len() && p[pi] == b'*' {
+            star = Some((pi, ti));
+            pi += 1;
+        } else if let Some((sp, mark)) = star {
+            let next = mark + char_len(t[mark]);
+            star = Some((sp, next));
+            pi = sp + 1;
+            ti = next;
+        } else {
+            return false;
+        }
+    }
+    p[pi..].iter().all(|&c| c == b'*')
+}
+
+/// Which part of a cell a [`CellFilter`] inspects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellField {
+    /// The row key.
+    Row,
+    /// The column key.
+    Col,
+    /// The stored value.
+    Val,
+}
+
+/// One predicate of a filter stage: match `field` against `matcher`.
+#[derive(Debug, Clone)]
+pub struct CellFilter {
+    /// The cell part under test.
+    pub field: CellField,
+    /// The matcher applied to it.
+    pub matcher: KeyMatch,
+}
+
+impl CellFilter {
+    /// Filter on an arbitrary field.
+    pub fn new(field: CellField, matcher: KeyMatch) -> Self {
+        CellFilter { field, matcher }
+    }
+
+    /// Filter on the row key.
+    pub fn row(matcher: KeyMatch) -> Self {
+        Self::new(CellField::Row, matcher)
+    }
+
+    /// Filter on the column key.
+    pub fn col(matcher: KeyMatch) -> Self {
+        Self::new(CellField::Col, matcher)
+    }
+
+    /// Filter on the value.
+    pub fn val(matcher: KeyMatch) -> Self {
+        Self::new(CellField::Val, matcher)
+    }
+
+    /// Whether `t` passes this filter.
+    pub fn matches(&self, t: &Triple) -> bool {
+        let s = match self.field {
+            CellField::Row => t.row.as_str(),
+            CellField::Col => t.col.as_str(),
+            CellField::Val => t.val.as_str(),
+        };
+        self.matcher.matches(s)
+    }
+}
+
+/// Per-row combiner: collapse each row's (post-filter) cells into one
+/// output triple `(row, out_col, aggregate)` — Accumulo's `Combiner`
+/// specialized to the row axis (the degree-table reduction of the D4M
+/// papers). Values parse as numbers; non-numeric values count as `0`.
+#[derive(Debug, Clone)]
+pub enum RowReduce {
+    /// Cell count per row.
+    Count {
+        /// Output column key.
+        out_col: String,
+    },
+    /// Numeric sum of the row's values.
+    Sum {
+        /// Output column key.
+        out_col: String,
+    },
+    /// Numeric minimum of the row's values.
+    Min {
+        /// Output column key.
+        out_col: String,
+    },
+    /// Numeric maximum of the row's values.
+    Max {
+        /// Output column key.
+        out_col: String,
+    },
+}
+
+impl RowReduce {
+    fn out_col(&self) -> &str {
+        match self {
+            RowReduce::Count { out_col }
+            | RowReduce::Sum { out_col }
+            | RowReduce::Min { out_col }
+            | RowReduce::Max { out_col } => out_col,
+        }
+    }
+}
+
+/// A configured scan stack: range at the bottom, then filters, then an
+/// optional per-row combiner. Built fluently and handed to
+/// `Table::scan_stream` / `Table::scan_spec_par`.
+#[derive(Debug, Clone, Default)]
+pub struct ScanSpec {
+    /// Row + column range (the base of the stack).
+    pub range: ScanRange,
+    /// Filter stages, applied in order (all must pass).
+    pub filters: Vec<CellFilter>,
+    /// Optional combiner stage at the top of the stack.
+    pub reduce: Option<RowReduce>,
+}
+
+impl ScanSpec {
+    /// Scan everything.
+    pub fn all() -> Self {
+        ScanSpec::default()
+    }
+
+    /// Scan over `range`.
+    pub fn over(range: ScanRange) -> Self {
+        ScanSpec { range, ..ScanSpec::default() }
+    }
+
+    /// Add a filter stage.
+    pub fn filtered(mut self, f: CellFilter) -> Self {
+        self.filters.push(f);
+        self
+    }
+
+    /// Set the combiner stage.
+    pub fn reduced(mut self, r: RowReduce) -> Self {
+        self.reduce = Some(r);
+        self
+    }
+}
+
+/// Render a numeric value the way the store writes it (integers without
+/// a trailing `.0`) — shared by the combiner stage and graphulo's
+/// result writers so reduced scans round-trip through tables.
+pub fn format_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stages
+// ---------------------------------------------------------------------
+
+/// Filter stage: passes through triples matching every [`CellFilter`].
+/// An empty filter list is a free passthrough.
+pub struct FilterIter<I> {
+    inner: I,
+    filters: Vec<CellFilter>,
+}
+
+impl<I: ScanIter> FilterIter<I> {
+    /// Wrap `inner` with `filters`.
+    pub fn new(inner: I, filters: Vec<CellFilter>) -> Self {
+        FilterIter { inner, filters }
+    }
+}
+
+impl<I: ScanIter> ScanIter for FilterIter<I> {
+    fn seek(&mut self, row: &str, col: &str) {
+        self.inner.seek(row, col);
+    }
+
+    fn next_triple(&mut self) -> Option<Triple> {
+        loop {
+            let t = self.inner.next_triple()?;
+            if self.filters.iter().all(|f| f.matches(&t)) {
+                return Some(t);
+            }
+        }
+    }
+}
+
+/// Combiner stage: folds each row's cells into one triple as the stream
+/// passes through (constant state — one row in flight). `None` reduce
+/// is a free passthrough.
+pub struct ReduceIter<I> {
+    inner: I,
+    reduce: Option<RowReduce>,
+    row: Option<String>,
+    count: usize,
+    acc: f64,
+    exhausted: bool,
+}
+
+impl<I: ScanIter> ReduceIter<I> {
+    /// Wrap `inner` with an optional combiner.
+    pub fn new(inner: I, reduce: Option<RowReduce>) -> Self {
+        ReduceIter { inner, reduce, row: None, count: 0, acc: 0.0, exhausted: false }
+    }
+
+    /// Emit the in-flight row's aggregate, if any.
+    fn emit(&mut self) -> Option<Triple> {
+        let row = self.row.take()?;
+        let r = self.reduce.as_ref().expect("emit only under a reduce");
+        let val = match r {
+            RowReduce::Count { .. } => self.count.to_string(),
+            _ => format_num(self.acc),
+        };
+        Some(Triple::new(row, r.out_col(), val))
+    }
+
+    /// Start a fresh row aggregate from its first cell.
+    fn start(&mut self, t: &Triple) {
+        self.row = Some(t.row.clone());
+        self.count = 1;
+        self.acc = t.val.parse().unwrap_or(0.0);
+    }
+
+    /// Fold one more cell of the current row.
+    fn fold(&mut self, t: &Triple) {
+        self.count += 1;
+        let v: f64 = t.val.parse().unwrap_or(0.0);
+        match self.reduce.as_ref().expect("fold only under a reduce") {
+            RowReduce::Count { .. } => {}
+            RowReduce::Sum { .. } => self.acc += v,
+            RowReduce::Min { .. } => self.acc = self.acc.min(v),
+            RowReduce::Max { .. } => self.acc = self.acc.max(v),
+        }
+    }
+}
+
+impl<I: ScanIter> ScanIter for ReduceIter<I> {
+    fn seek(&mut self, row: &str, col: &str) {
+        self.inner.seek(row, col);
+        self.row = None;
+        self.count = 0;
+        self.acc = 0.0;
+        self.exhausted = false;
+    }
+
+    fn next_triple(&mut self) -> Option<Triple> {
+        if self.reduce.is_none() {
+            return self.inner.next_triple();
+        }
+        if self.exhausted {
+            return None;
+        }
+        loop {
+            match self.inner.next_triple() {
+                None => {
+                    self.exhausted = true;
+                    return self.emit();
+                }
+                Some(t) => {
+                    if self.row.as_deref() == Some(t.row.as_str()) {
+                        self.fold(&t);
+                    } else {
+                        let out = self.emit();
+                        self.start(&t);
+                        if out.is_some() {
+                            return out;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Base cursor over a pinned tablet list
+// ---------------------------------------------------------------------
+
+/// Triples copied out of a tablet per lock acquisition. Blocks bound
+/// lock hold time (writers interleave between blocks) and amortize the
+/// `BTreeMap` re-seek.
+pub(crate) const SCAN_BLOCK: usize = 2048;
+
+/// Block cursor over an explicit, pinned tablet list — the base
+/// iterator used by `Table::scan_spec_par`, which resolves the in-range
+/// tablets under the table's read lock and hands each parallel worker a
+/// contiguous sub-list. Holds no tablet lock between blocks; resumes by
+/// key.
+pub struct SliceCursor<'t> {
+    tablets: &'t [Mutex<Tablet>],
+    live: Vec<usize>,
+    range: ScanRange,
+    /// Position in `live`.
+    ti: usize,
+    /// Resume key: `(row, col, inclusive)`; `None` = range start.
+    resume: Option<(String, String, bool)>,
+    buf: Vec<Triple>,
+    pos: usize,
+    done: bool,
+}
+
+impl<'t> SliceCursor<'t> {
+    /// Cursor over `live` (indices into `tablets`, in row order),
+    /// restricted to `range`.
+    pub fn new(tablets: &'t [Mutex<Tablet>], live: Vec<usize>, range: ScanRange) -> Self {
+        SliceCursor {
+            tablets,
+            live,
+            range,
+            ti: 0,
+            resume: None,
+            buf: Vec::new(),
+            pos: 0,
+            done: false,
+        }
+    }
+
+    fn refill(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
+        while self.ti < self.live.len() {
+            let tab = self.tablets[self.live[self.ti]].lock().unwrap();
+            let from = self.resume.as_ref().map(|(r, c, inc)| (r.as_str(), c.as_str(), *inc));
+            let exhausted = tab.scan_block(from, &self.range, SCAN_BLOCK, &mut self.buf);
+            drop(tab);
+            if exhausted {
+                // Done with this tablet — advance now so a partial final
+                // block doesn't cost an extra lock + re-seek round trip.
+                self.ti += 1;
+                self.resume = None;
+                if !self.buf.is_empty() {
+                    return;
+                }
+            } else if let Some(last) = self.buf.last() {
+                self.resume = Some((last.row.clone(), last.col.clone(), false));
+                return;
+            }
+        }
+        self.done = true;
+    }
+}
+
+impl ScanIter for SliceCursor<'_> {
+    fn seek(&mut self, row: &str, col: &str) {
+        self.buf.clear();
+        self.pos = 0;
+        self.done = false;
+        // Clamp the target to the range start.
+        let (row, col) = match self.range.lo.as_deref() {
+            Some(lo) if row < lo => (lo, ""),
+            _ => (row, col),
+        };
+        self.resume = Some((row.to_string(), col.to_string(), true));
+        // First tablet whose extent may still hold keys >= row.
+        self.ti = 0;
+        while self.ti < self.live.len() {
+            let tab = self.tablets[self.live[self.ti]].lock().unwrap();
+            let past = tab.hi.as_deref().is_some_and(|hi| hi <= row);
+            drop(tab);
+            if !past {
+                break;
+            }
+            self.ti += 1;
+        }
+    }
+
+    fn next_triple(&mut self) -> Option<Triple> {
+        loop {
+            if self.pos < self.buf.len() {
+                let t = std::mem::replace(&mut self.buf[self.pos], Triple::new("", "", ""));
+                self.pos += 1;
+                return Some(t);
+            }
+            if self.done {
+                return None;
+            }
+            self.refill();
+        }
+    }
+}
+
+/// Run the full stack over a base iterator and collect the result —
+/// the shared consumer behind `Table::scan_spec_par`'s serial path and
+/// each parallel worker.
+pub(crate) fn stack_collect<I: ScanIter>(base: I, spec: &ScanSpec) -> Vec<Triple> {
+    let mut it = ReduceIter::new(FilterIter::new(base, spec.filters.clone()), spec.reduce.clone());
+    let mut out = Vec::new();
+    while let Some(t) = it.next_triple() {
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_matching() {
+        assert!(glob_match("", ""));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("a*c", "abc"));
+        assert!(glob_match("a*c", "ac"));
+        assert!(glob_match("a*c", "axxxc"));
+        assert!(!glob_match("a*c", "abd"));
+        assert!(glob_match("a?c", "abc"));
+        assert!(!glob_match("a?c", "ac"));
+        assert!(glob_match("*page0?", "/page01"));
+        assert!(glob_match("c*1*", "c011x"));
+        assert!(!glob_match("c*1*", "c000"));
+        assert!(glob_match("**a", "a"));
+        assert!(!glob_match("b*", "ab"));
+    }
+
+    #[test]
+    fn key_match_variants() {
+        assert!(KeyMatch::Equals("x".into()).matches("x"));
+        assert!(!KeyMatch::Equals("x".into()).matches("xy"));
+        assert!(KeyMatch::Prefix("ro".into()).matches("row1"));
+        assert!(!KeyMatch::Prefix("ro".into()).matches("r1"));
+        let set: BTreeSet<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
+        assert!(KeyMatch::In(set.clone()).matches("a"));
+        assert!(!KeyMatch::In(set).matches("c"));
+    }
+
+    #[test]
+    fn range_overlap_pruning() {
+        let r = ScanRange::rows("f", "m");
+        assert!(r.overlaps_extent(None, None));
+        assert!(r.overlaps_extent(None, Some("g")));
+        assert!(!r.overlaps_extent(None, Some("f"))); // tablet ends at range start
+        assert!(r.overlaps_extent(Some("l"), None));
+        assert!(!r.overlaps_extent(Some("m"), None)); // tablet starts at range end
+        assert!(ScanRange::all().overlaps_extent(Some("a"), Some("b")));
+    }
+
+    /// Vec-backed ScanIter for stage unit tests.
+    struct VecIter {
+        data: Vec<Triple>,
+        pos: usize,
+    }
+
+    impl ScanIter for VecIter {
+        fn seek(&mut self, row: &str, col: &str) {
+            self.pos =
+                self.data.partition_point(|t| (t.row.as_str(), t.col.as_str()) < (row, col));
+        }
+
+        fn next_triple(&mut self) -> Option<Triple> {
+            let t = self.data.get(self.pos).cloned();
+            self.pos += 1;
+            t
+        }
+    }
+
+    fn cells() -> Vec<Triple> {
+        vec![
+            Triple::new("a", "c1", "1"),
+            Triple::new("a", "c2", "5"),
+            Triple::new("b", "c1", "2"),
+            Triple::new("c", "c3", "4"),
+            Triple::new("c", "c4", "x"),
+        ]
+    }
+
+    #[test]
+    fn filter_stage_keeps_matches() {
+        let mut it = FilterIter::new(
+            VecIter { data: cells(), pos: 0 },
+            vec![CellFilter::col(KeyMatch::Equals("c1".into()))],
+        );
+        let mut got = Vec::new();
+        while let Some(t) = it.next_triple() {
+            got.push((t.row, t.val));
+        }
+        assert_eq!(got, vec![("a".into(), "1".into()), ("b".into(), "2".into())]);
+    }
+
+    #[test]
+    fn reduce_stage_counts_and_sums() {
+        let count = RowReduce::Count { out_col: "n".into() };
+        let mut it = ReduceIter::new(VecIter { data: cells(), pos: 0 }, Some(count));
+        let mut got = Vec::new();
+        while let Some(t) = it.next_triple() {
+            got.push(format!("{}:{}={}", t.row, t.col, t.val));
+        }
+        assert_eq!(got, vec!["a:n=2", "b:n=1", "c:n=2"]);
+
+        let sum = RowReduce::Sum { out_col: "s".into() };
+        let mut it = ReduceIter::new(VecIter { data: cells(), pos: 0 }, Some(sum));
+        let mut got = Vec::new();
+        while let Some(t) = it.next_triple() {
+            got.push(format!("{}={}", t.row, t.val));
+        }
+        // "x" parses as 0.
+        assert_eq!(got, vec!["a=6", "b=2", "c=4"]);
+    }
+
+    #[test]
+    fn reduce_min_max_and_format() {
+        let min = RowReduce::Min { out_col: "m".into() };
+        let mut it = ReduceIter::new(VecIter { data: cells(), pos: 0 }, Some(min));
+        let mut got = Vec::new();
+        while let Some(t) = it.next_triple() {
+            got.push(format!("{}={}", t.row, t.val));
+        }
+        assert_eq!(got, vec!["a=1", "b=2", "c=0"]);
+        assert_eq!(format_num(2.0), "2");
+        assert_eq!(format_num(2.5), "2.5");
+    }
+
+    #[test]
+    fn passthrough_stages_are_identity() {
+        let base = cells();
+        let mut it =
+            ReduceIter::new(FilterIter::new(VecIter { data: cells(), pos: 0 }, Vec::new()), None);
+        let mut got = Vec::new();
+        while let Some(t) = it.next_triple() {
+            got.push(t);
+        }
+        assert_eq!(got, base);
+    }
+
+    #[test]
+    fn stage_seek_forwards_and_resets() {
+        let count = RowReduce::Count { out_col: "n".into() };
+        let mut it = ReduceIter::new(
+            FilterIter::new(VecIter { data: cells(), pos: 0 }, Vec::new()),
+            Some(count),
+        );
+        // Consume one reduced row, seek back to the start: full replay.
+        assert_eq!(it.next_triple().unwrap().row, "a");
+        it.seek("", "");
+        let mut rows = Vec::new();
+        while let Some(t) = it.next_triple() {
+            rows.push(t.row);
+        }
+        assert_eq!(rows, vec!["a", "b", "c"]);
+    }
+}

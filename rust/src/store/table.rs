@@ -6,7 +6,17 @@
 //! tablet has its own lock, so concurrent writers to different key
 //! ranges do not contend — the property the ingest pipeline's sharding
 //! exploits.
+//!
+//! Scans run on the server-side iterator stack (see
+//! [`crate::store::scan`]): [`Table::scan_stream`] returns a streaming,
+//! seekable [`TableStream`]; [`Table::scan_spec_par`] collects a
+//! stacked scan with per-tablet parallel fan-out; and the classic
+//! [`Table::scan`] / [`Table::scan_par`] entry points are thin
+//! consumers of the same stack.
 
+use super::scan::{
+    stack_collect, FilterIter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor,
+};
 use super::tablet::Tablet;
 use super::{StoreError, Triple};
 use crate::assoc::Assoc;
@@ -27,35 +37,6 @@ pub struct TableConfig {
 impl Default for TableConfig {
     fn default() -> Self {
         TableConfig { split_threshold: 4 << 20, write_latency_us: 0 }
-    }
-}
-
-/// A scan range over rows: `[lo, hi)`, unbounded when `None`.
-#[derive(Debug, Clone, Default)]
-pub struct ScanRange {
-    /// Inclusive lower row bound.
-    pub lo: Option<String>,
-    /// Exclusive upper row bound.
-    pub hi: Option<String>,
-}
-
-impl ScanRange {
-    /// The full-table range.
-    pub fn all() -> Self {
-        ScanRange::default()
-    }
-
-    /// Rows in `[lo, hi)`.
-    pub fn rows(lo: impl Into<String>, hi: impl Into<String>) -> Self {
-        ScanRange { lo: Some(lo.into()), hi: Some(hi.into()) }
-    }
-
-    /// Exactly one row.
-    pub fn single(row: impl Into<String>) -> Self {
-        let row = row.into();
-        let mut hi = row.clone();
-        hi.push('\0');
-        ScanRange { lo: Some(row), hi: Some(hi) }
     }
 }
 
@@ -103,6 +84,26 @@ impl Table {
             }
         }
         lo
+    }
+
+    /// Indices of the tablets overlapping `range`'s row bounds, in row
+    /// order — the one range-pruning pass shared by every scan path
+    /// (tablet extents are sorted, so the walk stops at the first
+    /// tablet past `hi`).
+    fn live_tablets(tablets: &[Mutex<Tablet>], range: &ScanRange) -> Vec<usize> {
+        let mut live = Vec::new();
+        for (i, t) in tablets.iter().enumerate() {
+            let tab = t.lock().unwrap();
+            if let (Some(hi), Some(tlo)) = (range.hi.as_deref(), tab.lo.as_deref()) {
+                if tlo >= hi {
+                    break;
+                }
+            }
+            if tab.overlaps(range) {
+                live.push(i);
+            }
+        }
+        live
     }
 
     /// Write a batch of triples (grouped internally by tablet). Returns
@@ -174,79 +175,51 @@ impl Table {
         self.scan_par(range, Parallelism::current())
     }
 
-    /// [`Table::scan`] with an explicit thread configuration: one job
-    /// per in-range tablet, stitched back in tablet (= row) order so
-    /// the output is byte-identical to the serial scan. Tablets each
-    /// carry their own lock, so workers never contend with each other
-    /// (only with writers to the same tablet).
+    /// [`Table::scan`] with an explicit thread configuration — a thin
+    /// consumer of the iterator stack with no filter or combiner
+    /// stages.
     pub fn scan_par(&self, range: ScanRange, par: Parallelism) -> Vec<Triple> {
+        self.scan_spec_par(&ScanSpec::over(range), par)
+    }
+
+    /// Collect a stacked scan (range + filters + combiner) at the
+    /// process-default parallelism.
+    pub fn scan_spec(&self, spec: &ScanSpec) -> Vec<Triple> {
+        self.scan_spec_par(spec, Parallelism::current())
+    }
+
+    /// Collect a stacked scan with an explicit thread configuration:
+    /// the in-range tablets are resolved once (under the tablet-list
+    /// read lock), split into at most `par.threads` contiguous groups,
+    /// and each worker runs the full stack over its group. Tablets
+    /// split at row boundaries and every stage is per-row, so stitching
+    /// the groups in order is byte-identical to the serial stack — and
+    /// to naive scan-then-filter-then-reduce (`tests/scan_stack.rs`).
+    pub fn scan_spec_par(&self, spec: &ScanSpec, par: Parallelism) -> Vec<Triple> {
         let tablets = self.tablets.read().unwrap();
-        if par.is_serial() {
-            // Exact serial code path: check bounds and scan each tablet
-            // under a single lock acquisition.
-            let mut out = Vec::new();
-            for t in tablets.iter() {
-                let tab = t.lock().unwrap();
-                // Skip tablets entirely outside the range.
-                if let (Some(hi), Some(tlo)) = (&range.hi, &tab.lo) {
-                    if tlo.as_str() >= hi.as_str() {
-                        break;
-                    }
-                }
-                if let (Some(lo), Some(thi)) = (&range.lo, &tab.hi) {
-                    if thi.as_str() <= lo.as_str() {
-                        continue;
-                    }
-                }
-                tab.scan_into(range.lo.as_deref(), range.hi.as_deref(), &mut out);
-            }
-            return out;
+        let live = Self::live_tablets(&tablets, &spec.range);
+        if par.is_serial() || live.len() <= 1 {
+            let base = SliceCursor::new(&tablets, live, spec.range.clone());
+            return stack_collect(base, spec);
         }
-        // In-range tablet indices, in row order (tablet extents are
-        // sorted, so the first tablet past `hi` ends the walk). The
-        // bounds read here cannot go stale before the fan-out below:
-        // tablet extents only change on split, and splits take the
-        // tablets *write* lock, excluded while we hold the read lock.
-        let mut live: Vec<usize> = Vec::new();
-        for (i, t) in tablets.iter().enumerate() {
-            let tab = t.lock().unwrap();
-            if let (Some(hi), Some(tlo)) = (&range.hi, &tab.lo) {
-                if tlo.as_str() >= hi.as_str() {
-                    break;
-                }
-            }
-            if let (Some(lo), Some(thi)) = (&range.lo, &tab.hi) {
-                if thi.as_str() <= lo.as_str() {
-                    continue;
-                }
-            }
-            live.push(i);
-        }
-        if live.len() <= 1 {
-            let mut out = Vec::new();
-            for &i in &live {
-                let tab = tablets[i].lock().unwrap();
-                tab.scan_into(range.lo.as_deref(), range.hi.as_deref(), &mut out);
-            }
-            return out;
-        }
-        // One job per contiguous *group* of tablets, at most
-        // `par.threads` groups — the knob bounds the fan-out, and
-        // stitching groups in order preserves row order.
-        let parts: Vec<Vec<Triple>> =
-            parallel_map_ranges(par.chunk_ranges(live.len()), |group| {
-                let mut part = Vec::new();
-                for j in group {
-                    let tab = tablets[live[j]].lock().unwrap();
-                    tab.scan_into(range.lo.as_deref(), range.hi.as_deref(), &mut part);
-                }
-                part
-            });
+        let parts: Vec<Vec<Triple>> = parallel_map_ranges(par.chunk_ranges(live.len()), |group| {
+            let base = SliceCursor::new(&tablets, live[group].to_vec(), spec.range.clone());
+            stack_collect(base, spec)
+        });
         let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
         for part in parts {
             out.extend(part);
         }
         out
+    }
+
+    /// Open a streaming, seekable scan over this table — the stack as
+    /// an iterator. Holds no lock between blocks (the cursor re-locates
+    /// its tablet by key on every refill), so the stream stays valid
+    /// across concurrent writes and tablet splits, and backward seeks
+    /// are allowed.
+    pub fn scan_stream(&self, spec: ScanSpec) -> TableStream<'_> {
+        TableStream::new(self, spec)
     }
 
     /// Point lookup.
@@ -287,13 +260,26 @@ impl Table {
 
     /// Scan into an associative array.
     pub fn scan_to_assoc(&self, range: ScanRange) -> Assoc {
-        super::triples_to_assoc(&self.scan(range))
+        self.scan_spec_to_assoc(&ScanSpec::over(range), Parallelism::current())
     }
 
     /// [`Table::scan_to_assoc`] with an explicit thread configuration
     /// for both the fan-out scan and the constructor rebuild.
     pub fn scan_to_assoc_par(&self, range: ScanRange, par: Parallelism) -> Assoc {
-        super::triples_to_assoc_par(&self.scan_par(range, par), par)
+        self.scan_spec_to_assoc(&ScanSpec::over(range), par)
+    }
+
+    /// Run a stacked scan straight into an associative array. The
+    /// serial path streams — triples flow from the stack directly into
+    /// the constructor's key/value columns, never materializing a
+    /// `Vec<Triple>`; the parallel path fans the collection out per
+    /// tablet group first.
+    pub fn scan_spec_to_assoc(&self, spec: &ScanSpec, par: Parallelism) -> Assoc {
+        if par.is_serial() {
+            super::stream_to_assoc(self.scan_stream(spec.clone()), par)
+        } else {
+            super::stream_to_assoc(self.scan_spec_par(spec, par).into_iter(), par)
+        }
     }
 
     /// Failure injection: mark a tablet offline/online.
@@ -305,9 +291,153 @@ impl Table {
     }
 }
 
+/// Tablet blocks fetched after a seek start small and double up to
+/// [`super::scan::SCAN_BLOCK`] — point-ish reads (BFS row probes) stay
+/// cheap while long scans amortize locking, the classic scanner batch
+/// ramp.
+const STREAM_BLOCK_MIN: usize = 64;
+
+/// The base cursor of a [`TableStream`]: a block cursor that re-locates
+/// its tablet *by key* on every refill instead of pinning the tablet
+/// list, so it holds no table lock between blocks and survives
+/// concurrent splits (Accumulo scanners re-resolve tablet locations the
+/// same way).
+struct TableCursor<'a> {
+    table: &'a Table,
+    range: ScanRange,
+    /// Resume key `(row, col, inclusive)`; `None` = range start.
+    resume: Option<(String, String, bool)>,
+    buf: Vec<Triple>,
+    pos: usize,
+    done: bool,
+    block: usize,
+}
+
+impl<'a> TableCursor<'a> {
+    fn new(table: &'a Table, range: ScanRange) -> Self {
+        TableCursor {
+            table,
+            range,
+            resume: None,
+            buf: Vec::new(),
+            pos: 0,
+            done: false,
+            block: STREAM_BLOCK_MIN,
+        }
+    }
+
+    fn refill(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
+        let tablets = self.table.tablets.read().unwrap();
+        loop {
+            let pos_row = match &self.resume {
+                Some((r, _, _)) => r.as_str(),
+                None => self.range.lo.as_deref().unwrap_or(""),
+            };
+            let idx = Table::locate(&tablets, pos_row);
+            let tab = tablets[idx].lock().unwrap();
+            // The located tablet starts at or past the range end: done.
+            if let (Some(hi), Some(tlo)) = (self.range.hi.as_deref(), tab.lo.as_deref()) {
+                if tlo >= hi {
+                    self.done = true;
+                    return;
+                }
+            }
+            let from = self.resume.as_ref().map(|(r, c, inc)| (r.as_str(), c.as_str(), *inc));
+            let exhausted = tab.scan_block(from, &self.range, self.block, &mut self.buf);
+            if !exhausted {
+                // limit > 0, so a non-exhausted block always has cells.
+                let last = self.buf.last().expect("non-exhausted scan block has cells");
+                self.resume = Some((last.row.clone(), last.col.clone(), false));
+                self.block = (self.block * 2).min(super::scan::SCAN_BLOCK);
+                return;
+            }
+            // This tablet is done for the range — move to the next one
+            // immediately (no extra lock round trip for a partial final
+            // block) or finish the stream.
+            match tab.hi.clone() {
+                None => self.done = true,
+                Some(hi) => {
+                    if self.range.hi.as_deref().is_some_and(|rhi| hi.as_str() >= rhi) {
+                        self.done = true;
+                    } else {
+                        // Continue at the next tablet's first key.
+                        self.resume = Some((hi, String::new(), true));
+                    }
+                }
+            }
+            if self.done || !self.buf.is_empty() {
+                return;
+            }
+        }
+    }
+}
+
+impl ScanIter for TableCursor<'_> {
+    fn seek(&mut self, row: &str, col: &str) {
+        self.buf.clear();
+        self.pos = 0;
+        self.done = false;
+        self.block = STREAM_BLOCK_MIN;
+        let (row, col) = match self.range.lo.as_deref() {
+            Some(lo) if row < lo => (lo, ""),
+            _ => (row, col),
+        };
+        self.resume = Some((row.to_string(), col.to_string(), true));
+    }
+
+    fn next_triple(&mut self) -> Option<Triple> {
+        loop {
+            if self.pos < self.buf.len() {
+                let t = std::mem::replace(&mut self.buf[self.pos], Triple::new("", "", ""));
+                self.pos += 1;
+                return Some(t);
+            }
+            if self.done {
+                return None;
+            }
+            self.refill();
+        }
+    }
+}
+
+/// A streaming stacked scan over a [`Table`]: the full iterator stack
+/// (range cursor → filters → combiner) pulled one triple at a time.
+/// Implements both [`ScanIter`] (seek + next) and [`Iterator`].
+pub struct TableStream<'a> {
+    inner: ReduceIter<FilterIter<TableCursor<'a>>>,
+}
+
+impl<'a> TableStream<'a> {
+    fn new(table: &'a Table, spec: ScanSpec) -> Self {
+        let base = TableCursor::new(table, spec.range);
+        TableStream { inner: ReduceIter::new(FilterIter::new(base, spec.filters), spec.reduce) }
+    }
+}
+
+impl ScanIter for TableStream<'_> {
+    fn seek(&mut self, row: &str, col: &str) {
+        self.inner.seek(row, col);
+    }
+
+    fn next_triple(&mut self) -> Option<Triple> {
+        self.inner.next_triple()
+    }
+}
+
+impl Iterator for TableStream<'_> {
+    type Item = Triple;
+
+    fn next(&mut self) -> Option<Triple> {
+        self.inner.next_triple()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::store::scan::{CellFilter, KeyMatch, RowReduce};
 
     fn small_table() -> Table {
         // Tiny split threshold so splits actually happen in tests.
@@ -356,6 +486,23 @@ mod tests {
     }
 
     #[test]
+    fn column_windowed_scans() {
+        let t = small_table();
+        let mut b = Vec::new();
+        for i in 0..20 {
+            for c in ["a", "b", "c"] {
+                b.push(Triple::new(format!("row{i:04}"), c, "v"));
+            }
+        }
+        t.write_batch(b).unwrap();
+        let win = t.scan(ScanRange::all().with_cols("b", "c"));
+        assert_eq!(win.len(), 20);
+        assert!(win.iter().all(|t| t.col == "b"));
+        let both = t.scan(ScanRange::rows("row0005", "row0010").with_cols("a", "c"));
+        assert_eq!(both.len(), 10);
+    }
+
+    #[test]
     fn overwrite_keeps_single_cell() {
         let t = small_table();
         t.write_batch(vec![Triple::new("r", "c", "1")]).unwrap();
@@ -385,6 +532,62 @@ mod tests {
     }
 
     #[test]
+    fn stream_matches_collect_and_seeks() {
+        let t = small_table();
+        t.write_batch(batch(80)).unwrap();
+        assert!(t.tablet_count() > 1);
+        let collected = t.scan(ScanRange::all());
+        let streamed: Vec<Triple> = t.scan_stream(ScanSpec::all()).collect();
+        assert_eq!(collected, streamed);
+        // Absolute seeks, forward then backward.
+        let mut s = t.scan_stream(ScanSpec::all());
+        s.seek("row0040", "");
+        assert_eq!(s.next_triple().unwrap().row, "row0040");
+        s.seek("row0007", "");
+        assert_eq!(s.next_triple().unwrap().row, "row0007");
+    }
+
+    #[test]
+    fn stacked_scan_filters_and_reduces() {
+        let t = small_table();
+        let mut b = Vec::new();
+        for i in 0..30 {
+            b.push(Triple::new(format!("r{:02}", i % 10), format!("c{i:02}"), "2"));
+        }
+        t.write_batch(b).unwrap();
+        let spec = ScanSpec::all()
+            .filtered(CellFilter::col(KeyMatch::Glob("c*0".into())))
+            .reduced(RowReduce::Sum { out_col: "sum".into() });
+        let got = t.scan_spec(&spec);
+        // Columns c00, c10, c20 → rows r00 and r01... only rows whose
+        // cells include a matching column appear.
+        assert!(got.iter().all(|t| t.col == "sum"));
+        // Cross-check against the naive client-side pipeline.
+        let mut expect: Vec<Triple> = Vec::new();
+        let mut cur: Option<(String, f64)> = None;
+        for tr in t.scan(ScanRange::all()) {
+            if !KeyMatch::Glob("c*0".into()).matches(&tr.col) {
+                continue;
+            }
+            let v: f64 = tr.val.parse().unwrap_or(0.0);
+            match &mut cur {
+                Some((row, acc)) if *row == tr.row => *acc += v,
+                _ => {
+                    if let Some((row, acc)) = cur.take() {
+                        expect.push(Triple::new(row, "sum", crate::store::format_num(acc)));
+                    }
+                    cur = Some((tr.row.clone(), v));
+                }
+            }
+        }
+        if let Some((row, acc)) = cur {
+            expect.push(Triple::new(row, "sum", crate::store::format_num(acc)));
+        }
+        assert_eq!(got, expect);
+        assert!(!got.is_empty());
+    }
+
+    #[test]
     fn concurrent_writers() {
         use std::sync::Arc;
         let t = Arc::new(small_table());
@@ -408,5 +611,26 @@ mod tests {
         assert_eq!(t.len(), 200);
         let all = t.scan(ScanRange::all());
         assert!(all.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn stream_survives_mid_scan_split() {
+        let t = small_table();
+        t.write_batch(batch(20)).unwrap();
+        let mut s = t.scan_stream(ScanSpec::all());
+        let mut got = Vec::new();
+        for _ in 0..5 {
+            got.push(s.next_triple().unwrap());
+        }
+        // Grow the table past more split points while the stream is
+        // open; the cursor re-locates by key and keeps going.
+        t.write_batch((0..40).map(|i| Triple::new(format!("zz{i:03}"), "c", "v")).collect())
+            .unwrap();
+        for tr in s {
+            got.push(tr);
+        }
+        assert!(got.windows(2).all(|w| w[0] < w[1]), "stream stays sorted");
+        assert_eq!(got.iter().filter(|t| t.row.starts_with("zz")).count(), 40);
+        assert_eq!(got.len(), 60);
     }
 }

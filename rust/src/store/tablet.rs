@@ -1,6 +1,7 @@
 //! A tablet: one sorted key range of a table (the Accumulo unit of
 //! distribution and recovery).
 
+use super::scan::ScanRange;
 use super::Triple;
 use std::collections::BTreeMap;
 use std::ops::Bound;
@@ -15,7 +16,10 @@ pub struct Tablet {
     pub hi: Option<String>,
     entries: BTreeMap<(Box<str>, Box<str>), Box<str>>,
     weight: usize,
-    /// Failure-injection flag: an offline tablet rejects reads/writes.
+    /// Failure-injection flag: an offline tablet rejects *writes*
+    /// (`Table::write_batch` errors). Reads and scans are still served
+    /// — the scan stack treats offline as a write-side failure, and
+    /// `tests/scan_stack.rs` pins that contract.
     pub offline: bool,
 }
 
@@ -67,17 +71,82 @@ impl Tablet {
     /// Scan rows in `[lo, hi)` (clamped to the tablet extent), in sorted
     /// order, appending to `out`.
     pub fn scan_into(&self, lo: Option<&str>, hi: Option<&str>, out: &mut Vec<Triple>) {
-        let start: Bound<(Box<str>, Box<str>)> = match lo {
-            Some(lo) => Bound::Included((lo.into(), "".into())),
-            None => Bound::Unbounded,
+        let range = ScanRange {
+            lo: lo.map(String::from),
+            hi: hi.map(String::from),
+            ..ScanRange::default()
         };
-        for ((r, c), v) in self.entries.range((start, Bound::Unbounded)) {
-            if let Some(hi) = hi {
-                if r.as_ref() >= hi {
-                    break;
+        self.scan_block(None, &range, usize::MAX, out);
+    }
+
+    /// Whether this tablet's extent overlaps the row range of `range`.
+    pub fn overlaps(&self, range: &ScanRange) -> bool {
+        range.overlaps_extent(self.lo.as_deref(), self.hi.as_deref())
+    }
+
+    /// Copy up to `limit` in-range cells into `out`, resuming from
+    /// `from = (row, col, inclusive)` (or the range start when `None`)
+    /// — the primitive under the scan stack's block cursors. Applies
+    /// the row range `[lo, hi)` and, per row, the column window
+    /// `[col_lo, col_hi)`; when a row's window is exhausted the scan
+    /// seeks directly to the next row, so out-of-window cells are never
+    /// copied. Returns `true` when no in-range cells remain past the
+    /// copied block (the tablet is exhausted for this range).
+    pub fn scan_block(
+        &self,
+        from: Option<(&str, &str, bool)>,
+        range: &ScanRange,
+        limit: usize,
+        out: &mut Vec<Triple>,
+    ) -> bool {
+        debug_assert!(limit > 0, "scan_block needs room to make progress");
+        let mut start: Bound<(Box<str>, Box<str>)> = match from {
+            Some((r, c, true)) => Bound::Included((r.into(), c.into())),
+            Some((r, c, false)) => Bound::Excluded((r.into(), c.into())),
+            None => match range.lo.as_deref() {
+                Some(lo) => {
+                    Bound::Included((lo.into(), range.col_lo.as_deref().unwrap_or("").into()))
+                }
+                None => Bound::Unbounded,
+            },
+        };
+        let mut emitted = 0usize;
+        loop {
+            // Re-seeks happen only when a row's column window closes.
+            let mut reseek: Option<(Box<str>, Box<str>)> = None;
+            for ((r, c), v) in self.entries.range((start, Bound::Unbounded)) {
+                if let Some(hi) = range.hi.as_deref() {
+                    if r.as_ref() >= hi {
+                        return true;
+                    }
+                }
+                if let Some(cl) = range.col_lo.as_deref() {
+                    if c.as_ref() < cl {
+                        continue;
+                    }
+                }
+                if let Some(ch) = range.col_hi.as_deref() {
+                    if c.as_ref() >= ch {
+                        // This row's window is done: jump to the next
+                        // row's window start.
+                        let mut next_row = r.to_string();
+                        next_row.push('\0');
+                        let col = range.col_lo.as_deref().unwrap_or("");
+                        reseek = Some((next_row.into_boxed_str(), col.into()));
+                        break;
+                    }
+                }
+                out.push(Triple::new(r.as_ref(), c.as_ref(), v.as_ref()));
+                emitted += 1;
+                if emitted == limit {
+                    // Caller resumes after the last emitted key.
+                    return false;
                 }
             }
-            out.push(Triple::new(r.as_ref(), c.as_ref(), v.as_ref()));
+            match reseek {
+                Some(key) => start = Bound::Included(key),
+                None => return true,
+            }
         }
     }
 
@@ -215,6 +284,73 @@ mod tests {
             sum += tr.weight();
         }
         assert_eq!(sum, tab.weight() + right.weight());
+    }
+
+    #[test]
+    fn scan_block_resumes_and_windows() {
+        let mut tab = Tablet::new(None, None);
+        for r in ["a", "b", "c"] {
+            for c in ["c1", "c2", "c3"] {
+                tab.put(t(r, c, "v"));
+            }
+        }
+        // Block-resume walk (limit 2) covers everything exactly once.
+        let range = ScanRange::all();
+        let mut got = Vec::new();
+        let mut from: Option<(String, String)> = None;
+        loop {
+            let mut block = Vec::new();
+            let f = from.as_ref().map(|(r, c)| (r.as_str(), c.as_str(), false));
+            let exhausted = tab.scan_block(f, &range, 2, &mut block);
+            if let Some(last) = block.last() {
+                from = Some((last.row.clone(), last.col.clone()));
+            }
+            let was_empty = block.is_empty();
+            got.extend(block);
+            if exhausted && was_empty {
+                break;
+            }
+        }
+        assert_eq!(got.len(), 9);
+        assert!(got.windows(2).all(|w| w[0] < w[1]));
+
+        // Column window restricts per row and skips ahead.
+        let range = ScanRange::all().with_cols("c2", "c3");
+        let mut win = Vec::new();
+        assert!(tab.scan_block(None, &range, usize::MAX, &mut win));
+        let keys: Vec<(String, String)> = win.into_iter().map(|t| (t.row, t.col)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("a".into(), "c2".into()),
+                ("b".into(), "c2".into()),
+                ("c".into(), "c2".into())
+            ]
+        );
+
+        // Row range + column window + inclusive resume compose.
+        let range = ScanRange::rows("b", "c\0").with_cols("c1", "c3");
+        let mut out = Vec::new();
+        assert!(tab.scan_block(Some(("b", "c2", true)), &range, usize::MAX, &mut out));
+        let keys: Vec<(String, String)> = out.into_iter().map(|t| (t.row, t.col)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("b".into(), "c2".into()),
+                ("c".into(), "c1".into()),
+                ("c".into(), "c2".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn overlaps_matches_range_pruning() {
+        let tab = Tablet::new(Some("m".into()), Some("t".into()));
+        assert!(tab.overlaps(&ScanRange::all()));
+        assert!(tab.overlaps(&ScanRange::rows("a", "n")));
+        assert!(!tab.overlaps(&ScanRange::rows("a", "m")));
+        assert!(!tab.overlaps(&ScanRange::rows("t", "z")));
+        assert!(tab.overlaps(&ScanRange::single("s")));
     }
 
     #[test]

@@ -73,6 +73,19 @@ impl BatchWriter {
         }
     }
 
+    /// Drain a server-side scan stack into this writer (the
+    /// scan-transform-write shape of every Graphulo kernel), returning
+    /// the number of triples buffered. The stream stays block-buffered
+    /// end to end — nothing is materialized beyond the write buffer.
+    pub fn put_scan(&mut self, mut scan: impl super::ScanIter) -> usize {
+        let mut n = 0usize;
+        while let Some(t) = scan.next_triple() {
+            self.put(t);
+            n += 1;
+        }
+        n
+    }
+
     /// Flush the buffer, retrying transient failures. Panics if the
     /// table stays unavailable past `max_retries` (matching Accumulo's
     /// `MutationsRejectedException` being fatal to the writer).

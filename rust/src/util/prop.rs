@@ -52,7 +52,11 @@ impl Gen {
 
     /// Random triple list `(row, col, val)` over a small key universe, so
     /// collisions (duplicate (row, col)) actually occur.
-    pub fn triples(&mut self, max_len: usize, universe: u64) -> (Vec<String>, Vec<String>, Vec<f64>) {
+    pub fn triples(
+        &mut self,
+        max_len: usize,
+        universe: u64,
+    ) -> (Vec<String>, Vec<String>, Vec<f64>) {
         let len = self.rng.below_usize(max_len + 1);
         let mut rows = Vec::with_capacity(len);
         let mut cols = Vec::with_capacity(len);

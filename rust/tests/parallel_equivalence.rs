@@ -19,7 +19,9 @@
 use d4m::assoc::{Aggregator, Assoc, Key, ValsInput};
 use d4m::bench::Workload;
 use d4m::semiring::{MaxMin, MaxPlus, MinPlus, PlusTimes, Semiring};
-use d4m::sparse::{spgemm_with_policy_par, AccumulatorPolicy, CooMatrix, CsrMatrix};
+use d4m::sparse::{
+    spgemm_masked_with_stats_par, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix, CsrMatrix,
+};
 use d4m::store::{ScanRange, Table, TableConfig, Triple};
 use d4m::util::{Parallelism, SplitMix64};
 
@@ -526,6 +528,92 @@ fn spgemm_adaptive_uses_expected_paths() {
     let kinds = [st.rows_copy, st.rows_sort, st.rows_hash, st.rows_dense];
     let used = kinds.iter().filter(|&&k| k > 0).count();
     assert!(used >= 3, "power-law rows should mix accumulators, got {kinds:?}");
+}
+
+// ---------------------------------------------------------------------
+// Masked SpGEMM
+// ---------------------------------------------------------------------
+
+/// Expected masked result: the unmasked product with mask-false columns
+/// dropped, as raw arrays (value bits, so the comparison is bit-exact).
+fn drop_cols_arrays(c: &CsrMatrix, mask: &[bool]) -> (Vec<usize>, Vec<u32>, Vec<u64>) {
+    let mut indptr = vec![0usize];
+    let mut idx: Vec<u32> = Vec::new();
+    let mut bits: Vec<u64> = Vec::new();
+    for r in 0..c.shape().0 {
+        let (ci, cv) = c.row(r);
+        for (col, v) in ci.iter().zip(cv) {
+            if mask[*col as usize] {
+                idx.push(*col);
+                bits.push(v.to_bits());
+            }
+        }
+        indptr.push(idx.len());
+    }
+    (indptr, idx, bits)
+}
+
+#[test]
+fn masked_spgemm_equals_unmasked_then_mask() {
+    // The PR 3 contract: for every adversarial shape, builtin semiring,
+    // mask density, and thread count, the masked multiply is
+    // bit-identical to the unmasked product with the masked-out columns
+    // dropped — and never does more flops than the unmasked run.
+    let n = 300usize;
+    let shapes: Vec<(&str, CsrMatrix, CsrMatrix)> = vec![
+        ("hypersparse @ hypersparse", one_nnz_per_row(n, 31), one_nnz_per_row(n, 32)),
+        ("power-law @ power-law", power_law_rows(n, 33), power_law_rows(n, 34)),
+        ("power-law @ empty-band", power_law_rows(n, 35), empty_row_band(n, 36)),
+    ];
+    let mut rng = SplitMix64::new(0x3A5C_ED);
+    let densities = [0.0f64, 0.1, 0.5, 1.0];
+    for (name, a, b) in &shapes {
+        for &density in &densities {
+            let mask: Vec<bool> = (0..n)
+                .map(|_| match density {
+                    d if d <= 0.0 => false,
+                    d if d >= 1.0 => true,
+                    d => rng.chance(d),
+                })
+                .collect();
+            for s in builtin_semirings() {
+                let (full, full_stats) = spgemm_with_policy_par(
+                    a,
+                    b,
+                    s.as_ref(),
+                    Parallelism::serial(),
+                    AccumulatorPolicy::Adaptive,
+                )
+                .unwrap();
+                let (ptr, idx, bits) = drop_cols_arrays(&full, &mask);
+                for t in [1usize, 2, 4, 7] {
+                    let (got, stats) = spgemm_masked_with_stats_par(
+                        a,
+                        b,
+                        s.as_ref(),
+                        Parallelism::with_threads(t),
+                        &mask,
+                    )
+                    .unwrap();
+                    let ctx = format!("{name} {} density={density} t={t}", s.name());
+                    assert_eq!(got.shape(), full.shape(), "{ctx}: shape");
+                    assert_eq!(got.indptr(), &ptr[..], "{ctx}: indptr");
+                    assert_eq!(got.indices(), &idx[..], "{ctx}: indices");
+                    let gbits: Vec<u64> = got.values().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gbits, bits, "{ctx}: value bits");
+                    assert!(
+                        stats.mults <= full_stats.mults,
+                        "{ctx}: masked flops {} exceed unmasked {}",
+                        stats.mults,
+                        full_stats.mults
+                    );
+                    if density <= 0.0 {
+                        assert_eq!(stats.mults, 0, "{ctx}: empty mask must cost zero flops");
+                    }
+                }
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------

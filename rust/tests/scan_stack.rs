@@ -1,0 +1,257 @@
+//! Equivalence suite for the server-side iterator stack.
+//!
+//! Contract under test: every stacked scan — any combination of row
+//! range, column window, filter stages, and a per-row combiner, at any
+//! thread count, streamed or collected, across tablet splits and
+//! offline tablets — is **byte-identical** to the naive client-side
+//! pipeline: materialize the row range, then filter, then reduce.
+
+use d4m::store::{
+    format_num, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, Table,
+    TableConfig, Triple,
+};
+use d4m::util::prop::check;
+use d4m::util::{Parallelism, SplitMix64};
+
+const THREADS: [usize; 3] = [2, 4, 7];
+
+/// The reference implementation: a plain row-range scan materialized in
+/// full, then client-side column window, filters, and row reduction —
+/// exactly what the stack is supposed to push into the tablets.
+fn naive(table: &Table, spec: &ScanSpec) -> Vec<Triple> {
+    let rows_only = ScanRange {
+        lo: spec.range.lo.clone(),
+        hi: spec.range.hi.clone(),
+        ..ScanRange::default()
+    };
+    let mut cells: Vec<Triple> = table
+        .scan_par(rows_only, Parallelism::serial())
+        .into_iter()
+        .filter(|t| {
+            let in_window = spec.range.col_lo.as_deref().is_none_or(|lo| t.col.as_str() >= lo)
+                && spec.range.col_hi.as_deref().is_none_or(|hi| t.col.as_str() < hi);
+            in_window && spec.filters.iter().all(|f| f.matches(t))
+        })
+        .collect();
+    let Some(reduce) = &spec.reduce else {
+        return cells;
+    };
+    let mut out = Vec::new();
+    let mut cur: Option<(String, usize, f64)> = None;
+    let emit = |row: String, count: usize, acc: f64, out: &mut Vec<Triple>| {
+        let (col, val) = match reduce {
+            RowReduce::Count { out_col } => (out_col.clone(), count.to_string()),
+            RowReduce::Sum { out_col }
+            | RowReduce::Min { out_col }
+            | RowReduce::Max { out_col } => (out_col.clone(), format_num(acc)),
+        };
+        out.push(Triple::new(row, col, val));
+    };
+    for t in cells.drain(..) {
+        let v: f64 = t.val.parse().unwrap_or(0.0);
+        match &mut cur {
+            Some((row, count, acc)) if *row == t.row => {
+                *count += 1;
+                match reduce {
+                    RowReduce::Count { .. } => {}
+                    RowReduce::Sum { .. } => *acc += v,
+                    RowReduce::Min { .. } => *acc = acc.min(v),
+                    RowReduce::Max { .. } => *acc = acc.max(v),
+                }
+            }
+            _ => {
+                if let Some((row, count, acc)) = cur.take() {
+                    emit(row, count, acc, &mut out);
+                }
+                cur = Some((t.row, 1, v));
+            }
+        }
+    }
+    if let Some((row, count, acc)) = cur {
+        emit(row, count, acc, &mut out);
+    }
+    out
+}
+
+/// Random table with many tablets (small split threshold, many small
+/// batches so splits actually trigger).
+fn random_table(rng: &mut SplitMix64, cells: usize) -> Table {
+    let table = Table::new("t", TableConfig { split_threshold: 512, write_latency_us: 0 });
+    let triples: Vec<Triple> = (0..cells)
+        .map(|_| {
+            Triple::new(
+                format!("r{:03}", rng.below(120)),
+                format!("c{:02}", rng.below(24)),
+                format!("{}", rng.range_i64(-50, 100)),
+            )
+        })
+        .collect();
+    for chunk in triples.chunks(16) {
+        table.write_batch(chunk.to_vec()).unwrap();
+    }
+    table
+}
+
+fn random_spec(rng: &mut SplitMix64) -> ScanSpec {
+    let mut range = if rng.chance(0.5) {
+        let lo = rng.below(120);
+        let hi = lo + 1 + rng.below(120 - lo);
+        ScanRange::rows(format!("r{lo:03}"), format!("r{hi:03}"))
+    } else {
+        ScanRange::all()
+    };
+    if rng.chance(0.5) {
+        let lo = rng.below(24);
+        let hi = lo + 1 + rng.below(24 - lo);
+        range = range.with_cols(format!("c{lo:02}"), format!("c{hi:02}"));
+    }
+    let mut spec = ScanSpec::over(range);
+    if rng.chance(0.4) {
+        let matcher = match rng.below(4) {
+            0 => KeyMatch::Prefix("c1".into()),
+            1 => KeyMatch::Glob("c*1".into()),
+            2 => KeyMatch::Glob("c?2".into()),
+            _ => KeyMatch::In(
+                ["c03", "c07", "c11", "c19"].iter().map(|s| s.to_string()).collect(),
+            ),
+        };
+        spec = spec.filtered(CellFilter::col(matcher));
+    }
+    if rng.chance(0.3) {
+        spec = spec.filtered(CellFilter::row(KeyMatch::Glob("r*1".into())));
+    }
+    if rng.chance(0.2) {
+        spec = spec.filtered(CellFilter::val(KeyMatch::Glob("-*".into())));
+    }
+    if rng.chance(0.4) {
+        spec = spec.reduced(match rng.below(4) {
+            0 => RowReduce::Count { out_col: "n".into() },
+            1 => RowReduce::Sum { out_col: "s".into() },
+            2 => RowReduce::Min { out_col: "lo".into() },
+            _ => RowReduce::Max { out_col: "hi".into() },
+        });
+    }
+    spec
+}
+
+#[test]
+fn prop_stacked_scan_equals_naive_pipeline() {
+    check("stacked scan == naive scan-filter-reduce", 40, |g| {
+        let cells = 300 + g.rng().below_usize(500);
+        let table = random_table(g.rng(), cells);
+        assert!(table.tablet_count() > 2, "need real tablet fan-out");
+        let spec = random_spec(g.rng());
+        let expect = naive(&table, &spec);
+        // Serial collect, parallel collect at several thread counts,
+        // and the streaming iterator must all agree byte-for-byte.
+        assert_eq!(
+            expect,
+            table.scan_spec_par(&spec, Parallelism::serial()),
+            "serial stack vs naive ({spec:?})"
+        );
+        for t in THREADS {
+            assert_eq!(
+                expect,
+                table.scan_spec_par(&spec, Parallelism::with_threads(t)),
+                "parallel stack t={t} ({spec:?})"
+            );
+        }
+        let streamed: Vec<Triple> = table.scan_stream(spec.clone()).collect();
+        assert_eq!(expect, streamed, "streamed stack ({spec:?})");
+    });
+}
+
+#[test]
+fn prop_scan_to_assoc_streams_identically() {
+    check("scan_spec_to_assoc streaming == collected", 15, |g| {
+        let table = random_table(g.rng(), 400);
+        let spec = random_spec(g.rng());
+        let serial = table.scan_spec_to_assoc(&spec, Parallelism::serial());
+        for t in THREADS {
+            let par = table.scan_spec_to_assoc(&spec, Parallelism::with_threads(t));
+            assert_eq!(serial, par, "scan_spec_to_assoc t={t}");
+        }
+    });
+}
+
+#[test]
+fn stacked_scan_ignores_offline_flags_like_naive() {
+    // Reads are served regardless of the offline flag (it gates
+    // writes); the stack must behave exactly like the naive scan when
+    // tablets are marked offline mid-table.
+    let mut rng = SplitMix64::new(0x0FF_715);
+    let table = random_table(&mut rng, 600);
+    let tablets = table.tablet_count();
+    assert!(tablets > 3);
+    table.set_tablet_offline(1, true);
+    table.set_tablet_offline(tablets - 1, true);
+    let spec = ScanSpec::all()
+        .filtered(CellFilter::col(KeyMatch::Prefix("c0".into())))
+        .reduced(RowReduce::Count { out_col: "n".into() });
+    let expect = naive(&table, &spec);
+    assert!(!expect.is_empty());
+    for t in [1, 2, 4, 7] {
+        assert_eq!(expect, table.scan_spec_par(&spec, Parallelism::with_threads(t)));
+    }
+    let streamed: Vec<Triple> = table.scan_stream(spec).collect();
+    assert_eq!(expect, streamed);
+}
+
+#[test]
+fn stream_seek_is_absolute_and_bidirectional() {
+    let mut rng = SplitMix64::new(42);
+    let table = random_table(&mut rng, 500);
+    let all = table.scan(ScanRange::all());
+    let mut stream = table.scan_stream(ScanSpec::all());
+    // Forward seek to each of a few sorted positions, then a backward
+    // seek; each must land exactly on the first key >= target.
+    for target in ["r020", "r050", "r110", "r030"] {
+        stream.seek(target, "");
+        let got = stream.next_triple();
+        let expect = all.iter().find(|t| t.row.as_str() >= target).cloned();
+        assert_eq!(got, expect, "seek({target})");
+    }
+}
+
+#[test]
+fn seek_respects_range_clamp() {
+    let mut rng = SplitMix64::new(7);
+    let table = random_table(&mut rng, 300);
+    let range = ScanRange::rows("r040", "r080");
+    let in_range = table.scan(range.clone());
+    let mut stream = table.scan_stream(ScanSpec::over(range));
+    // Seeking before the range start clamps to it...
+    stream.seek("r000", "");
+    assert_eq!(stream.next_triple().as_ref(), in_range.first());
+    // ...and seeking past the range end exhausts the stream.
+    stream.seek("r099", "");
+    assert_eq!(stream.next_triple(), None);
+}
+
+#[test]
+fn filtered_scan_across_many_tablets_and_batches() {
+    // Deterministic layout: every row holds the full column set, so the
+    // expected windowed output is easy to state in closed form.
+    let table = Table::new("t", TableConfig { split_threshold: 384, write_latency_us: 0 });
+    for i in 0..150 {
+        let batch: Vec<Triple> = (0..6)
+            .map(|c| Triple::new(format!("row{i:03}"), format!("c{c}"), format!("{}", i * 10 + c)))
+            .collect();
+        table.write_batch(batch).unwrap();
+    }
+    assert!(table.tablet_count() > 4);
+    let spec = ScanSpec::over(ScanRange::rows("row010", "row140").with_cols("c2", "c5"));
+    let expect_rows = 130usize;
+    let got = table.scan_spec(&spec);
+    assert_eq!(got.len(), expect_rows * 3);
+    assert!(got.iter().all(|t| t.col.as_str() >= "c2" && t.col.as_str() < "c5"));
+    assert!(got.windows(2).all(|w| w[0] < w[1]));
+    // The reduced form: one sum per row over the window.
+    let reduced = table.scan_spec(
+        &ScanSpec::over(ScanRange::rows("row010", "row140").with_cols("c2", "c5"))
+            .reduced(RowReduce::Sum { out_col: "s".into() }),
+    );
+    assert_eq!(reduced.len(), expect_rows);
+    // row010 window = 102 + 103 + 104.
+    assert_eq!(reduced[0], Triple::new("row010", "s", "309"));
+}

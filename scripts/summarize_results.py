@@ -4,7 +4,9 @@
 Usage: python scripts/summarize_results.py [results_dir]
 Prints one pivoted table (n x engine, mean seconds) per figure CSV, and
 one record table per machine-readable bench JSON (schema d4m-bench-v1:
-op, scale, threads, ns/op, speedup).
+op, scale, threads, ns/op, speedup, plus optional extra metric fields —
+e.g. the SpGEMM accumulator-policy row counters — rendered in a trailing
+notes column).
 """
 
 import csv
@@ -36,6 +38,21 @@ def pivot(path: str) -> str:
     return "\n".join(out)
 
 
+CORE_FIELDS = ("op", "scale", "threads", "ns_per_op", "speedup")
+
+
+def extras(record: dict) -> str:
+    """Non-core fields (accumulator counters, cell counts, ...) as k=v."""
+    parts = []
+    for k, v in record.items():
+        if k in CORE_FIELDS:
+            continue
+        if isinstance(v, float) and v == int(v):
+            v = int(v)
+        parts.append(f"{k}={v}")
+    return " ".join(parts) or "—"
+
+
 def bench_json(path: str) -> str:
     with open(path) as f:
         doc = json.load(f)
@@ -44,13 +61,21 @@ def bench_json(path: str) -> str:
     records = doc.get("records", [])
     if not records:
         return f"(empty: {path})"
-    out = ["| op | scale | threads | time/op | speedup |",
-           "|---|---|---|---|---|"]
+    has_extras = any(extras(r) != "—" for r in records)
+    header = "| op | scale | threads | time/op | speedup |"
+    sep = "|---|---|---|---|---|"
+    if has_extras:
+        header += " notes |"
+        sep += "---|"
+    out = [header, sep]
     for r in records:
-        out.append(
+        line = (
             f"| {r['op']} | {r['scale']} | {r['threads']} "
             f"| {fmt(r['ns_per_op'] * 1e-9)} | {r['speedup']:.2f}x |"
         )
+        if has_extras:
+            line += f" {extras(r)} |"
+        out.append(line)
     return "\n".join(out)
 
 
