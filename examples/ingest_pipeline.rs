@@ -135,7 +135,7 @@ fn main() {
     for t in hits.scan_stream(spec) {
         let n: u64 = t.val.parse().unwrap_or(0);
         if n > busiest.1 {
-            busiest = (t.row, n);
+            busiest = (t.row.to_string(), n);
         }
     }
     println!(

@@ -24,29 +24,182 @@
 //! * **streaming vs materializing scan** — a column-windowed filtered
 //!   scan consumed off the iterator stack vs materializing the full
 //!   `Vec<Triple>` and filtering client-side.
+//! * **dictionary-encoded key space (PR 4)** — the end-to-end
+//!   scan→constructor and TableMult pipelines on the dict-encoded path
+//!   (intern to `u32` ids, shared-bytes cells) vs the PR 3 string path
+//!   (per-cell `Key` materialization + digest sort; per-cell string
+//!   binary search in TableMult ingest). Outputs are bit-identical by
+//!   contract; the combined pipeline must be **≥ 1.3× faster**
+//!   (asserted — the PR 4 acceptance number). A counting global
+//!   allocator additionally witnesses the filter pushdown: a highly
+//!   selective streamed scan must allocate *nothing per rejected cell*
+//!   (asserted against the allocation counter).
 //!
 //! Besides the CSV, the run writes the machine-readable perf
 //! trajectories `BENCH_PR2.json` (thread sweep + accumulator policies,
-//! schema-compatible with the PR 2 capture) and `BENCH_PR3.json`
+//! schema-compatible with the PR 2 capture), `BENCH_PR3.json`
 //! (accumulator-policy row counters as extras, masked-vs-unmasked
-//! TableMult, streaming-vs-materializing scans) for
+//! TableMult, streaming-vs-materializing scans) and `BENCH_PR4.json`
+//! (string-vs-dict constructor + TableMult, allocation counters) for
 //! `scripts/summarize_results.py` and the CI artifacts.
 //!
 //! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
 //! [--threads-n N] [--hyper-scale S] [--mask-scale S]
-//! [--stream-scale S]` (`--threads-n` sets the scale of the thread
-//! sweep; default 10, the acceptance workload. `--hyper-scale` sets
-//! the hypersparse matmul to 2^S rows; default 14. `--mask-scale` /
-//! `--stream-scale` size the masked-TableMult and scan sections to
-//! 2^S triples; defaults 12 and 13).
+//! [--stream-scale S] [--dict-scale S]` (`--threads-n` sets the scale
+//! of the thread sweep; default 10, the acceptance workload.
+//! `--hyper-scale` sets the hypersparse matmul to 2^S rows; default
+//! 14. `--mask-scale` / `--stream-scale` / `--dict-scale` size the
+//! masked-TableMult, scan, and dictionary sections to 2^S triples;
+//! defaults 12, 13 and 13).
 
-use d4m::assoc::{keys_from, Aggregator, Assoc, ValsInput};
+use d4m::assoc::{keys_from, Aggregator, Assoc, Key, KeyEncoding, ValsInput};
 use d4m::bench::{BenchRecord, FigureHarness, Workload};
 use d4m::graphulo;
-use d4m::semiring::PlusTimes;
-use d4m::sparse::{spgemm, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix};
-use d4m::store::{CellFilter, KeyMatch, ScanRange, ScanSpec, TableConfig, TableStore, Triple};
+use d4m::semiring::{PlusTimes, Semiring};
+use d4m::sparse::{spgemm, spgemm_par, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix};
+use d4m::store::{
+    format_num, BatchWriter, CellFilter, KeyMatch, ScanRange, ScanSpec, Table, TableConfig,
+    TableStore, Triple, WriterConfig,
+};
 use d4m::util::{time_op, Args, Parallelism, SplitMix64};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Allocation-counting wrapper around the system allocator. The
+/// filter-pushdown acceptance ("zero per-rejected-cell allocation")
+/// can only be witnessed by a real allocator hook; the counter costs
+/// one relaxed atomic per allocation and applies equally to every
+/// section, so relative numbers stay fair.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The PR 3 scan→assoc path, verbatim: materialize the scan, build one
+/// `Key` per cell, digest-sort every cell's keys. **Frozen snapshot**
+/// — `tests/dict_equivalence.rs` carries its twin
+/// (`triples_to_assoc_string_path`); change both together or not at
+/// all.
+fn scan_to_assoc_string_path(table: &Table) -> Assoc {
+    let triples = table.scan_par(ScanRange::all(), Parallelism::serial());
+    let rows: Vec<Key> = triples.iter().map(|t| Key::str(t.row.as_str())).collect();
+    let cols: Vec<Key> = triples.iter().map(|t| Key::str(t.col.as_str())).collect();
+    let numeric: Option<Vec<f64>> = triples.iter().map(|t| t.val.parse::<f64>().ok()).collect();
+    let vals = match numeric {
+        Some(nums) => ValsInput::Num(nums),
+        None => ValsInput::Str(triples.iter().map(|t| t.val.to_string()).collect()),
+    };
+    Assoc::try_new_with(
+        rows,
+        cols,
+        vals,
+        Aggregator::Last,
+        Parallelism::serial(),
+        KeyEncoding::Sort,
+    )
+    .expect("scan triples are consistent")
+}
+
+/// The PR 3 TableMult ingest, verbatim: owned strings, sorted distinct
+/// column list, one string binary search per cell — then the same
+/// SpGEMM and the same write-back, so the delta is pure encoding cost.
+/// **Frozen snapshot** — `tests/dict_equivalence.rs` carries its twin
+/// (`table_mult_string_baseline`); change both together or not at all.
+fn table_mult_string_path(a: &Table, b: &Table, out: &Arc<Table>, s: &dyn Semiring) -> usize {
+    struct Side {
+        rows: Vec<String>,
+        row_of: Vec<u32>,
+        cols: Vec<String>,
+        vals: Vec<f64>,
+    }
+    let ingest = |t: &Table| {
+        let mut side =
+            Side { rows: Vec::new(), row_of: Vec::new(), cols: Vec::new(), vals: Vec::new() };
+        for tr in t.scan_par(ScanRange::all(), Parallelism::serial()) {
+            if side.rows.last().map(String::as_str) != Some(tr.row.as_str()) {
+                side.rows.push(tr.row.to_string());
+            }
+            side.row_of.push((side.rows.len() - 1) as u32);
+            side.cols.push(tr.col.to_string());
+            side.vals.push(tr.val.parse().unwrap_or(0.0));
+        }
+        side
+    };
+    let (sa, sb) = (ingest(a), ingest(b));
+    if sa.rows.is_empty() && sb.rows.is_empty() {
+        return 0;
+    }
+    let mut merged: Vec<String> = sa.rows.iter().chain(&sb.rows).cloned().collect();
+    merged.sort_unstable();
+    merged.dedup();
+    let to_csr = |side: &Side| {
+        let mut distinct: Vec<String> = side.cols.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let rows: Vec<usize> = side
+            .row_of
+            .iter()
+            .map(|&own| merged.binary_search(&side.rows[own as usize]).expect("row merged"))
+            .collect();
+        let cols: Vec<usize> = side
+            .cols
+            .iter()
+            .map(|c| distinct.binary_search(c).expect("col distinct"))
+            .collect();
+        let m = CooMatrix::from_triples_aggregate(
+            merged.len(),
+            distinct.len(),
+            &rows,
+            &cols,
+            &side.vals,
+            0.0,
+            |x, _| x,
+        )
+        .expect("scan triples unique per cell")
+        .into_csr();
+        (m, distinct)
+    };
+    let (ma, cols_a) = to_csr(&sa);
+    let (mb, cols_b) = to_csr(&sb);
+    let at = ma.transpose();
+    let c = spgemm_par(&at, &mb, s, Parallelism::serial()).expect("shared row dimension");
+    let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
+    let mut cells = 0usize;
+    for (i, c1) in cols_a.iter().enumerate() {
+        let (cj, cv) = c.row(i);
+        for (j, v) in cj.iter().zip(cv) {
+            if *v != s.zero() {
+                w.put(Triple::new(c1.as_str(), cols_b[*j as usize].as_str(), format_num(*v)));
+                cells += 1;
+            }
+        }
+    }
+    w.flush();
+    cells
+}
 
 fn main() {
     let args = Args::from_env();
@@ -435,7 +588,180 @@ fn main() {
             .with_extra("kept_cells", stream_cells as f64),
     );
 
+    // --- dictionary-encoded key space: string vs dict pipelines ---------
+    // One workload, two full pipelines, serial both sides:
+    //   string: scan → Vec<Triple> → per-cell Key + digest sort (ctor);
+    //           per-cell string binary-search ingest (TableMult).
+    //   dict:   streamed scan → StrDict intern → id sort (ctor);
+    //           dict-encoded ingest + shared-bytes cells (TableMult).
+    // Outputs are bit-identical (asserted); the combined end-to-end
+    // speedup is the PR 4 acceptance number (≥ 1.3×, asserted).
+    // Workload shape: heavily duplicated keys (degree-4 rows over a
+    // 30-key column space), so the product's write-back — identical in
+    // both paths — stays small and the measured delta is the encoding
+    // cost itself.
+    let dscale = args.usize_or("dict-scale", 13);
+    let dn = 1usize << dscale;
+    let mut records4: Vec<BenchRecord> = Vec::new();
+    {
+        let mut rng = SplitMix64::new(0xD1C7_5EED);
+        let rows: Vec<String> =
+            (0..dn).map(|i| format!("r{:05}", i % (dn / 4).max(1))).collect();
+        let cols: Vec<String> = (0..dn).map(|_| format!("c{:02}", rng.below(30))).collect();
+        let edges = Assoc::from_triples(&rows, &cols, 1.0);
+        store.ingest_assoc("dictbench", &edges);
+    }
+    let dtab = store.table("dictbench").expect("ingested above");
+    let mut ctor_nnz = 0usize;
+    let t_ctor_str = time_op(1, repeats, |_| {
+        let a = scan_to_assoc_string_path(&dtab);
+        ctor_nnz = a.nnz();
+        a
+    });
+    h.record(dscale, "ctor-string", t_ctor_str.clone(), ctor_nnz);
+    let t_ctor_dict = time_op(1, repeats, |_| {
+        let a = dtab.scan_to_assoc_par(ScanRange::all(), Parallelism::serial());
+        ctor_nnz = a.nnz();
+        a
+    });
+    h.record(dscale, "ctor-dict", t_ctor_dict.clone(), ctor_nnz);
+    assert_eq!(
+        scan_to_assoc_string_path(&dtab),
+        dtab.scan_to_assoc_par(ScanRange::all(), Parallelism::serial()),
+        "dict-encoded scan→assoc must be bit-identical to the string path"
+    );
+    let out_ts = store.create_table("dict_tm_string");
+    let mut tm_cells = 0usize;
+    let t_tm_str = time_op(1, repeats, |_| {
+        tm_cells = table_mult_string_path(&dtab, &dtab, &out_ts, &PlusTimes);
+        tm_cells
+    });
+    h.record(dscale, "tablemult-string", t_tm_str.clone(), tm_cells);
+    let out_td = store.create_table("dict_tm_dict");
+    let t_tm_dict = time_op(1, repeats, |_| {
+        tm_cells = graphulo::table_mult_par(
+            &dtab,
+            &dtab,
+            &out_td,
+            &PlusTimes,
+            Parallelism::serial(),
+        );
+        tm_cells
+    });
+    h.record(dscale, "tablemult-dict", t_tm_dict.clone(), tm_cells);
+    assert_eq!(
+        out_ts.scan(ScanRange::all()),
+        out_td.scan(ScanRange::all()),
+        "dict-encoded TableMult must be bit-identical to the string path"
+    );
+    let e2e_str = t_ctor_str.mean_s() + t_tm_str.mean_s();
+    let e2e_dict = t_ctor_dict.mean_s() + t_tm_dict.mean_s();
+    let dict_speedup = if e2e_dict > 0.0 { e2e_str / e2e_dict } else { 0.0 };
+    println!(
+        "[ablations] dict encoding 2^{dscale}: ctor string={:.6}s dict={:.6}s | tablemult \
+         string={:.6}s dict={:.6}s | e2e speedup={dict_speedup:.2}x",
+        t_ctor_str.mean_s(),
+        t_ctor_dict.mean_s(),
+        t_tm_str.mean_s(),
+        t_tm_dict.mean_s(),
+    );
+    assert!(
+        dict_speedup >= 1.3,
+        "dict-encoded ctor+TableMult speedup {dict_speedup:.2}x below the 1.3x acceptance \
+         threshold"
+    );
+    records4.push(
+        BenchRecord::new("ctor-string", dscale, 1, t_ctor_str.mean_s() * 1e9, 1.0)
+            .with_extra("out_nnz", ctor_nnz as f64),
+    );
+    records4.push(
+        BenchRecord::new(
+            "ctor-dict",
+            dscale,
+            1,
+            t_ctor_dict.mean_s() * 1e9,
+            if t_ctor_dict.mean_s() > 0.0 {
+                t_ctor_str.mean_s() / t_ctor_dict.mean_s()
+            } else {
+                0.0
+            },
+        )
+        .with_extra("out_nnz", ctor_nnz as f64),
+    );
+    records4.push(
+        BenchRecord::new("tablemult-string", dscale, 1, t_tm_str.mean_s() * 1e9, 1.0)
+            .with_extra("out_cells", tm_cells as f64),
+    );
+    records4.push(
+        BenchRecord::new(
+            "tablemult-dict",
+            dscale,
+            1,
+            t_tm_dict.mean_s() * 1e9,
+            if t_tm_dict.mean_s() > 0.0 {
+                t_tm_str.mean_s() / t_tm_dict.mean_s()
+            } else {
+                0.0
+            },
+        )
+        .with_extra("out_cells", tm_cells as f64),
+    );
+    records4.push(BenchRecord::new("e2e-dict", dscale, 1, e2e_dict * 1e9, dict_speedup));
+
+    // --- filter pushdown: zero allocation per rejected cell -------------
+    // A streamed scan over the 1000-column `logs` table whose filter
+    // keeps ~1% of cells: filters run beneath the tablet block copy
+    // against the stored bytes, so the ~99% rejected cells must not
+    // allocate at all. The counting allocator witnesses it: total
+    // allocations during the scan stay far below the rejected-cell
+    // count (the old path allocated ≥ 3 strings per scanned cell
+    // before the client-side filter ran).
+    let push_spec =
+        ScanSpec::all().filtered(CellFilter::col(KeyMatch::Prefix("c04".into())));
+    let total_cells = logs.len();
+    let mut kept = 0usize;
+    // Warm-up pass sizes the stream buffers outside the counted window.
+    for _ in logs.scan_stream(push_spec.clone()) {
+        kept += 1;
+    }
+    assert!(kept > 0, "pushdown workload must keep some cells");
+    let before = alloc_count();
+    let mut kept_counted = 0usize;
+    for t in logs.scan_stream(push_spec.clone()) {
+        kept_counted += t.val.len();
+    }
+    let scan_allocs = alloc_count() - before;
+    let rejected = total_cells - kept;
+    println!(
+        "[ablations] filter pushdown 2^{sscale}: {kept}/{total_cells} cells kept, \
+         {scan_allocs} allocations for {rejected} rejected cells ({kept_counted} bytes kept)"
+    );
+    assert!(
+        (scan_allocs as usize) < rejected / 4,
+        "filtered scan allocated {scan_allocs} times for {rejected} rejected cells — \
+         pushdown must not allocate per rejected cell"
+    );
+    let t_push = time_op(1, repeats, |_| {
+        let mut bytes = 0usize;
+        for t in logs.scan_stream(push_spec.clone()) {
+            bytes += t.val.len();
+        }
+        bytes
+    });
+    h.record(sscale, "scan-pushdown", t_push.clone(), kept);
+    records4.push(
+        BenchRecord::new("scan-filter-pushdown", sscale, 1, t_push.mean_s() * 1e9, 1.0)
+            .with_extra("kept_cells", kept as f64)
+            .with_extra("rejected_cells", rejected as f64)
+            .with_extra("scan_allocs", scan_allocs as f64)
+            .with_extra(
+                "allocs_per_rejected",
+                if rejected > 0 { scan_allocs as f64 / rejected as f64 } else { 0.0 },
+            ),
+    );
+
     h.write_csv(&out_dir).expect("write CSV");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR2.json", &records).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR3.json", &records3).expect("write JSON");
+    d4m::bench::write_bench_json(&out_dir, "BENCH_PR4.json", &records4).expect("write JSON");
 }

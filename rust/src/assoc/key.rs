@@ -11,7 +11,6 @@
 //! `NaN` keys are rejected at construction: a NaN would poison the sort
 //! order and can never compare equal to itself on lookup.
 
-use std::borrow::Borrow;
 use std::cmp::Ordering;
 use std::fmt;
 
@@ -54,6 +53,26 @@ impl Key {
             Key::Num(v) => Some(*v),
             Key::Str(_) => None,
         }
+    }
+
+    /// Total-order comparison against a string key, consistent with
+    /// [`Key`]'s `Ord` (every number sorts before every string). This
+    /// is the lookup-safe way to search a **mixed** sorted `&[Key]` by
+    /// `&str` — `keys.binary_search_by(|k| k.cmp_str(probe))` — and
+    /// replaces the former `Borrow<str>` impl, whose empty-string
+    /// sentinel let a numeric key alias `""` (a numeric key now simply
+    /// orders `Less` than any string, including the empty one).
+    pub fn cmp_str(&self, s: &str) -> Ordering {
+        match self {
+            Key::Num(_) => Ordering::Less,
+            Key::Str(me) => me.as_ref().cmp(s),
+        }
+    }
+
+    /// Equality against a string key: true only for an identical
+    /// string key — a numeric key never equals a `&str`, not even `""`.
+    pub fn eq_str(&self, s: &str) -> bool {
+        self.cmp_str(s) == Ordering::Equal
     }
 }
 
@@ -167,16 +186,6 @@ impl From<&Key> for Key {
     }
 }
 
-impl Borrow<str> for Key {
-    /// Allows `&[Key]` lookups by `&str` in sorted containers when every
-    /// key is a string. Numeric keys never equal a `str`, so this borrow
-    /// is only meaningful for string keys; calling it on a numeric key
-    /// returns an empty string sentinel (and will simply fail lookups).
-    fn borrow(&self) -> &str {
-        self.as_str().unwrap_or("")
-    }
-}
-
 /// Convert a slice of key-like things into a `Vec<Key>`.
 pub fn keys_from<K: Into<Key> + Clone>(xs: &[K]) -> Vec<Key> {
     xs.iter().cloned().map(Into::into).collect()
@@ -233,6 +242,34 @@ mod tests {
         set.insert(Key::str("x"));
         assert!(set.contains(&Key::str("x")));
         assert!(!set.contains(&Key::str("y")));
+    }
+
+    #[test]
+    fn cmp_str_is_lookup_safe_on_mixed_slices() {
+        // Regression for the old Borrow<str> sentinel: a numeric key
+        // must never alias "" (it sorts before every string instead).
+        assert_eq!(Key::num(7.0).cmp_str(""), Ordering::Less);
+        assert!(!Key::num(7.0).eq_str(""));
+        assert!(Key::str("").eq_str(""));
+        assert_eq!(Key::str("m").cmp_str("m"), Ordering::Equal);
+        assert_eq!(Key::str("a").cmp_str("m"), Ordering::Less);
+        assert_eq!(Key::str("z").cmp_str("m"), Ordering::Greater);
+        // Mixed sorted slice: numbers first, then strings (Key::Ord).
+        let keys =
+            vec![Key::num(-1.0), Key::num(10.0), Key::str(""), Key::str("0"), Key::str("a")];
+        // cmp_str agrees with Ord on every (key, probe) pair...
+        for probe in ["", "0", "5", "a", "z"] {
+            for k in &keys {
+                assert_eq!(k.cmp_str(probe), k.cmp(&Key::str(probe)), "{k} vs {probe:?}");
+            }
+            // ...so binary search by str finds exactly the string key.
+            let by_str = keys.binary_search_by(|k| k.cmp_str(probe)).ok();
+            let by_key = keys.binary_search(&Key::str(probe)).ok();
+            assert_eq!(by_str, by_key, "probe {probe:?}");
+        }
+        // "" resolves to the empty *string* key, not a numeric key.
+        let hit = keys.binary_search_by(|k| k.cmp_str("")).unwrap();
+        assert_eq!(keys[hit], Key::str(""));
     }
 
     #[test]

@@ -65,6 +65,26 @@ pub enum Aggregator {
     Concat(String),
 }
 
+/// How the constructor canonicalizes its row/column key spaces. Both
+/// encodings produce the **same bytes** for every input and thread
+/// count (`tests/dict_equivalence.rs` enforces it); they differ only in
+/// cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KeyEncoding {
+    /// Dictionary encode (PR 4, the default): intern every key to a
+    /// dense `u32` id in one O(n) hashing pass, sort only the distinct
+    /// keys, resolve ranks through the ids. Strings are compared once
+    /// per *distinct* key — the right cost model for the duplicated key
+    /// spaces of real workloads (the paper's figures have ≥ 8 cells per
+    /// key; scan rebuilds far more).
+    #[default]
+    Dict,
+    /// Digest sort (the PR 1–3 path): sort an order-preserving 64-bit
+    /// digest per input *cell*. Kept as the ablation baseline and for
+    /// workloads with near-unique keys.
+    Sort,
+}
+
 /// Errors from associative-array construction.
 #[derive(Debug, Clone, PartialEq)]
 pub enum AssocError {
@@ -137,13 +157,29 @@ impl Assoc {
     /// [`Assoc::try_new`] with an explicit thread configuration for the
     /// key/value-pool sorts (the constructor hot path, Figures 3–4).
     /// `threads == 1` is the exact serial code path; the result is
-    /// byte-identical for every thread count.
+    /// byte-identical for every thread count. Uses the default
+    /// [`KeyEncoding::Dict`] key canonicalization.
     pub fn try_new_par(
         rows: Vec<Key>,
         cols: Vec<Key>,
         vals: ValsInput,
         agg: Aggregator,
         par: Parallelism,
+    ) -> Result<Assoc, AssocError> {
+        Self::try_new_with(rows, cols, vals, agg, par, KeyEncoding::default())
+    }
+
+    /// [`Assoc::try_new_par`] with an explicit [`KeyEncoding`] — the
+    /// full constructor entry point. Both encodings are bit-identical;
+    /// the choice only moves cost (the ablation benches time them
+    /// against each other).
+    pub fn try_new_with(
+        rows: Vec<Key>,
+        cols: Vec<Key>,
+        vals: ValsInput,
+        agg: Aggregator,
+        par: Parallelism,
+        enc: KeyEncoding,
     ) -> Result<Assoc, AssocError> {
         // --- broadcast to a common length -----------------------------
         let n = broadcast_len(rows.len(), cols.len(), vals.len()).ok_or(
@@ -155,12 +191,17 @@ impl Assoc {
         let rows = broadcast_keys(rows, n);
         let cols = broadcast_keys(cols, n);
 
-        // --- sort + dedup key spaces (with index maps) -----------------
-        // Specialized digest sort (see sorted::keysort) — the generic
-        // permutation sort was ~65% of constructor time in profiles —
-        // shard-parallel when `par` allows.
-        let (row_keys, rmap) = crate::sorted::sort_dedup_keys_par(&rows, par);
-        let (col_keys, cmap) = crate::sorted::sort_dedup_keys_par(&cols, par);
+        // --- canonicalize key spaces (with index maps) -----------------
+        // Dict: intern to u32 ids, sort distinct keys only (encode
+        // once). Sort: specialized digest sort over all cells (see
+        // sorted::keysort — itself ~65% of constructor time in the
+        // pre-digest profiles). Both shard-parallel when `par` allows.
+        let canon = match enc {
+            KeyEncoding::Dict => crate::sorted::encode_keys_par,
+            KeyEncoding::Sort => crate::sorted::sort_dedup_keys_par,
+        };
+        let (row_keys, rmap) = canon(&rows, par);
+        let (col_keys, cmap) = canon(&cols, par);
 
         match vals {
             ValsInput::Num(v) => {
@@ -174,6 +215,58 @@ impl Assoc {
                 let v = if v.len() == 1 && n > 1 { vec![v[0].clone(); n] } else { v };
                 Self::build_string(row_keys, col_keys, rmap, cmap, v, agg, par)
             }
+            ValsInput::StrScalar(s) => {
+                Self::build_string(row_keys, col_keys, rmap, cmap, vec![s; n], agg, par)
+            }
+        }
+    }
+
+    /// Pre-encoded constructor: the caller already canonicalized the
+    /// key spaces — sorted unique `row_keys`/`col_keys` plus a
+    /// per-triple index map into each (`rmap[p]`/`cmap[p]` is triple
+    /// `p`'s key position) — so construction skips the key sort
+    /// entirely. This is the zero-copy landing pad of the
+    /// dictionary-encoded scan path ([`crate::store::stream_to_assoc`]
+    /// interns scan cells to ids and hands the dictionary's sorted
+    /// output straight in here).
+    ///
+    /// Scalar `vals` broadcast to the triple count; `Vec` inputs must
+    /// match `rmap`'s length exactly (no length-1 broadcast — the
+    /// caller encoded per-triple maps, so it knows the length).
+    pub fn try_from_encoded(
+        row_keys: Vec<Key>,
+        col_keys: Vec<Key>,
+        rmap: Vec<usize>,
+        cmap: Vec<usize>,
+        vals: ValsInput,
+        agg: Aggregator,
+        par: Parallelism,
+    ) -> Result<Assoc, AssocError> {
+        let n = rmap.len();
+        if cmap.len() != n || vals.len().is_some_and(|l| l != n) {
+            return Err(AssocError::LengthMismatch {
+                rows: n,
+                cols: cmap.len(),
+                vals: vals.len(),
+            });
+        }
+        if n == 0 {
+            return Ok(Assoc::empty());
+        }
+        if !crate::sorted::is_sorted_unique(&row_keys)
+            || !crate::sorted::is_sorted_unique(&col_keys)
+        {
+            return Err(AssocError::BadParts("encoded keys must be sorted unique".into()));
+        }
+        if rmap.iter().any(|&i| i >= row_keys.len()) || cmap.iter().any(|&i| i >= col_keys.len()) {
+            return Err(AssocError::BadParts("encoded index map out of bounds".into()));
+        }
+        match vals {
+            ValsInput::Num(v) => Self::build_numeric(row_keys, col_keys, rmap, cmap, v, agg),
+            ValsInput::NumScalar(x) => {
+                Self::build_numeric(row_keys, col_keys, rmap, cmap, vec![x; n], agg)
+            }
+            ValsInput::Str(v) => Self::build_string(row_keys, col_keys, rmap, cmap, v, agg, par),
             ValsInput::StrScalar(s) => {
                 Self::build_string(row_keys, col_keys, rmap, cmap, vec![s; n], agg, par)
             }
@@ -830,6 +923,91 @@ pub(crate) mod tests {
         let rows: Vec<f64> = a.row_keys().iter().map(|k| k.as_num().unwrap()).collect();
         assert_eq!(rows, vec![1.0, 2.0, 10.0]); // numeric order, not lex
         assert_eq!(a.get_num(10i64, 1i64), Some(1.0));
+    }
+
+    #[test]
+    fn key_encodings_bit_identical() {
+        // Mixed numeric/string keys, string values, collisions.
+        let rows = vec![Key::str("r2"), Key::num(3.0), Key::str("r2"), Key::num(-1.0)];
+        let cols = vec![Key::num(7.0), Key::str("c"), Key::num(7.0), Key::str("c")];
+        let vals = ValsInput::Str(vec!["x".into(), "y".into(), "a".into(), "z".into()]);
+        let dict = Assoc::try_new_with(
+            rows.clone(),
+            cols.clone(),
+            vals.clone(),
+            Aggregator::Min,
+            Parallelism::serial(),
+            KeyEncoding::Dict,
+        )
+        .unwrap();
+        let sort = Assoc::try_new_with(
+            rows,
+            cols,
+            vals,
+            Aggregator::Min,
+            Parallelism::serial(),
+            KeyEncoding::Sort,
+        )
+        .unwrap();
+        assert_eq!(dict, sort);
+        assert_eq!(dict.get_str("r2", 7.0), Some("a"));
+    }
+
+    #[test]
+    fn try_from_encoded_matches_try_new() {
+        let rows = keys_from(&["b", "a", "b"]);
+        let cols = keys_from(&["y", "x", "x"]);
+        let vals = ValsInput::Num(vec![1.0, 2.0, 3.0]);
+        let expect = Assoc::try_new(rows, cols, vals.clone(), Aggregator::Min).unwrap();
+        // Hand-encoded: row keys a,b; col keys x,y.
+        let got = Assoc::try_from_encoded(
+            keys_from(&["a", "b"]),
+            keys_from(&["x", "y"]),
+            vec![1, 0, 1],
+            vec![1, 0, 0],
+            vals,
+            Aggregator::Min,
+            Parallelism::serial(),
+        )
+        .unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn try_from_encoded_validates() {
+        let err = Assoc::try_from_encoded(
+            keys_from(&["b", "a"]), // unsorted
+            keys_from(&["x"]),
+            vec![0],
+            vec![0],
+            ValsInput::NumScalar(1.0),
+            Aggregator::Min,
+            Parallelism::serial(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, AssocError::BadParts(_)));
+        let err = Assoc::try_from_encoded(
+            keys_from(&["a"]),
+            keys_from(&["x"]),
+            vec![1], // out of bounds
+            vec![0],
+            ValsInput::NumScalar(1.0),
+            Aggregator::Min,
+            Parallelism::serial(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, AssocError::BadParts(_)));
+        let err = Assoc::try_from_encoded(
+            keys_from(&["a"]),
+            keys_from(&["x"]),
+            vec![0, 0],
+            vec![0], // length mismatch
+            ValsInput::NumScalar(1.0),
+            Aggregator::Min,
+            Parallelism::serial(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, AssocError::LengthMismatch { .. }));
     }
 
     #[test]

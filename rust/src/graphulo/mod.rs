@@ -23,18 +23,29 @@
 //! All kernels pull from the server-side iterator stack
 //! ([`crate::store::scan`]) and write results back via a
 //! [`BatchWriter`] — no kernel materializes a full `Vec<Triple>` of its
-//! input; scans stream into the compute structures directly.
+//! input; scans stream into the compute structures directly, and since
+//! PR 4 they stream as *dictionary-encoded id triples*: each side's
+//! column keys are interned to dense `u32` ids through a
+//! [`StrDict`] (cells arrive as shared-bytes handles, so interning is a
+//! pointer clone), and the CSR builders consume ids — string bytes are
+//! touched once per distinct key instead of once per cell.
 
 use crate::assoc::Assoc;
 use crate::semiring::Semiring;
-use crate::sparse::{spgemm_masked_par, spgemm_par, CooMatrix, CsrMatrix};
+use crate::sparse::{spgemm_masked_par, spgemm_par, spgemm_row_masked_par, CooMatrix, CsrMatrix};
 use crate::store::{
-    format_num, BatchWriter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, Table, Triple,
-    WriterConfig,
+    format_num, BatchWriter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, SharedStr, Table,
+    Triple, WriterConfig, SCAN_BLOCK,
 };
+use crate::util::intern::StrDict;
 use crate::util::Parallelism;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
+
+/// Per-stream batch hint for the point-lookup-heavy BFS row probes: a
+/// hop reads a handful of cells per seek, so copying the default
+/// 64-cell opening block per probe is pure waste.
+const BFS_BATCH: usize = 16;
 
 /// Server-side table multiplication (Graphulo `TableMult`):
 /// `C(c1, c2) ⊕= Σ_r Aᵀ(c1, r) ⊗ B(r, c2) = Σ_r A(r, c1) ⊗ B(r, c2)`.
@@ -63,7 +74,7 @@ pub fn table_mult_par(
     s: &dyn Semiring,
     par: Parallelism,
 ) -> usize {
-    table_mult_inner(a, b, out, s, par, None)
+    table_mult_inner(a, b, out, s, par, Sink::None)
 }
 
 /// Sink-filtered [`table_mult`]: compute and write only the output
@@ -92,7 +103,47 @@ pub fn table_mult_masked_par(
     keep: &KeyMatch,
     par: Parallelism,
 ) -> usize {
-    table_mult_inner(a, b, out, s, par, Some(keep))
+    table_mult_inner(a, b, out, s, par, Sink::Col(keep))
+}
+
+/// Row-sink-filtered [`table_mult`]: compute and write only the output
+/// *rows* whose key matches `keep` — the twin of [`table_mult_masked`]
+/// for sinks filtered on the row key space. Output rows of `AᵀB` are
+/// `A`'s column keys, so the filter becomes a row bitmap over `Aᵀ` and
+/// rides the row-masked SpGEMM engine ([`spgemm_row_masked_par`]):
+/// excluded rows cost zero flops and zero output allocation, and the
+/// kept cells are bit-identical to running the full multiply and
+/// filtering afterwards.
+pub fn table_mult_row_masked(
+    a: &Table,
+    b: &Table,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    keep: &KeyMatch,
+) -> usize {
+    table_mult_row_masked_par(a, b, out, s, keep, Parallelism::current())
+}
+
+/// [`table_mult_row_masked`] with an explicit thread configuration.
+pub fn table_mult_row_masked_par(
+    a: &Table,
+    b: &Table,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    keep: &KeyMatch,
+    par: Parallelism,
+) -> usize {
+    table_mult_inner(a, b, out, s, par, Sink::Row(keep))
+}
+
+/// Which output axis a sink filter restricts.
+enum Sink<'a> {
+    /// No sink filter: full product.
+    None,
+    /// Keep only output columns matching the filter (`B`-side mask).
+    Col(&'a KeyMatch),
+    /// Keep only output rows matching the filter (`Aᵀ`-side mask).
+    Row(&'a KeyMatch),
 }
 
 fn table_mult_inner(
@@ -101,18 +152,19 @@ fn table_mult_inner(
     out: &Arc<Table>,
     s: &dyn Semiring,
     par: Parallelism,
-    sink: Option<&KeyMatch>,
+    sink: Sink<'_>,
 ) -> usize {
-    // Stream each scan straight into index/value columns (the serial
-    // path pulls from the stack triple-by-triple; the parallel path
-    // consumes the fanned-out collection without re-allocating it).
+    // Stream each scan straight into dictionary-encoded id/value
+    // columns (the serial path pulls from the stack triple-by-triple at
+    // the full-scan batch size; the parallel path consumes the
+    // fanned-out collection without re-allocating it).
     let mut sa = ScanSide::default();
     let mut sb = ScanSide::default();
     if par.is_serial() {
-        for t in a.scan_stream(ScanSpec::all()) {
+        for t in a.scan_stream(ScanSpec::all().batched(SCAN_BLOCK)) {
             sa.ingest(t);
         }
-        for t in b.scan_stream(ScanSpec::all()) {
+        for t in b.scan_stream(ScanSpec::all().batched(SCAN_BLOCK)) {
             sb.ingest(t);
         }
     } else {
@@ -127,7 +179,7 @@ fn table_mult_inner(
         return 0;
     }
     // Shared contraction dimension: merged distinct row keys (scans are
-    // sorted by row, so this is a linear merge).
+    // sorted by row, so this is a linear merge of pointer handles).
     let merged = merge_distinct(&sa.rows, &sb.rows);
     let (ma, cols_a) = sa.into_csr(&merged);
     let (mb, cols_b) = sb.into_csr(&merged);
@@ -135,10 +187,14 @@ fn table_mult_inner(
     // the same ⊕ order the streaming row-join produced.
     let at = ma.transpose_cached();
     let c = match sink {
-        None => spgemm_par(at, &mb, s, par).expect("shared row dimension"),
-        Some(keep) => {
+        Sink::None => spgemm_par(at, &mb, s, par).expect("shared row dimension"),
+        Sink::Col(keep) => {
             let mask: Vec<bool> = cols_b.iter().map(|c| keep.matches(c)).collect();
             spgemm_masked_par(at, &mb, s, par, &mask).expect("shared row dimension")
+        }
+        Sink::Row(keep) => {
+            let mask: Vec<bool> = cols_a.iter().map(|c| keep.matches(c)).collect();
+            spgemm_row_masked_par(at, &mb, s, par, &mask).expect("shared row dimension")
         }
     };
     let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
@@ -147,7 +203,8 @@ fn table_mult_inner(
         let (cj, cv) = c.row(i);
         for (j, v) in cj.iter().zip(cv) {
             if *v != s.zero() {
-                w.put(Triple::new(c1.as_str(), cols_b[*j as usize].as_str(), format_num(*v)));
+                // Output keys are pointer clones of the scanned bytes.
+                w.put(Triple::new(c1.clone(), cols_b[*j as usize].clone(), format_num(*v)));
                 cells += 1;
             }
         }
@@ -157,13 +214,16 @@ fn table_mult_inner(
 }
 
 /// One operand of [`table_mult`], accumulated directly from a sorted
-/// triple stream: distinct row keys, per-entry local row index, column
-/// key, and parsed value — no `Triple` structs retained.
+/// triple stream as dictionary-encoded ids: distinct row keys (shared
+/// handles), per-entry local row index, a column [`StrDict`] with
+/// per-entry column ids, and parsed values — no `Triple` structs
+/// retained, no string bytes copied, no per-cell string compares.
 #[derive(Default)]
 struct ScanSide {
-    rows: Vec<String>,
+    rows: Vec<SharedStr>,
     row_of: Vec<u32>,
-    cols: Vec<String>,
+    cols: StrDict,
+    col_of: Vec<u32>,
     vals: Vec<f64>,
 }
 
@@ -173,52 +233,46 @@ impl ScanSide {
     /// parsed zeros stay stored so non-plus-times semirings see exactly
     /// the cells the table holds.
     fn ingest(&mut self, t: Triple) {
-        if self.rows.last().map(String::as_str) != Some(t.row.as_str()) {
-            self.rows.push(t.row);
+        let Triple { row, col, val } = t;
+        if self.rows.last() != Some(&row) {
+            self.rows.push(row);
         }
         self.row_of.push((self.rows.len() - 1) as u32);
-        self.cols.push(t.col);
-        self.vals.push(t.val.parse().unwrap_or(0.0));
+        self.col_of.push(self.cols.intern(&col));
+        self.vals.push(val.parse().unwrap_or(0.0));
     }
 
     /// Index into a CSR matrix over `merged` (a sorted superset of
     /// `self.rows`). Returns the matrix and its sorted distinct column
-    /// keys.
-    fn into_csr(self, merged: &[String]) -> (CsrMatrix, Vec<String>) {
-        // Sort refs, not owned Strings: only the distinct keys (usually
-        // far fewer than nnz) are cloned.
-        let distinct: Vec<String> = {
-            let mut refs: Vec<&str> = self.cols.iter().map(String::as_str).collect();
-            refs.sort_unstable();
-            refs.dedup();
-            refs.iter().map(|s| s.to_string()).collect()
-        };
+    /// keys. String bytes are touched once per distinct column here
+    /// (the dictionary sort); per-cell work is two id lookups.
+    fn into_csr(self, merged: &[SharedStr]) -> (CsrMatrix, Vec<SharedStr>) {
+        let ScanSide { rows, row_of, cols, col_of, vals } = self;
+        let (distinct, rank) = cols.into_sorted();
         // Local row index → merged row index (both lists sorted).
-        let mut map = vec![0u32; self.rows.len()];
+        let mut map = vec![0u32; rows.len()];
         let mut p = 0usize;
-        for (i, r) in self.rows.iter().enumerate() {
+        for (i, r) in rows.iter().enumerate() {
             while merged[p] != *r {
                 p += 1;
             }
             map[i] = p as u32;
         }
-        let mut ri: Vec<u32> = Vec::with_capacity(self.row_of.len());
-        let mut ci: Vec<u32> = Vec::with_capacity(self.cols.len());
-        for (k, &own) in self.row_of.iter().enumerate() {
+        let mut ri: Vec<u32> = Vec::with_capacity(row_of.len());
+        let mut ci: Vec<u32> = Vec::with_capacity(col_of.len());
+        for (k, &own) in row_of.iter().enumerate() {
             ri.push(map[own as usize]);
-            let c = distinct
-                .binary_search_by(|probe| probe.as_str().cmp(self.cols[k].as_str()))
-                .expect("column collected above");
-            ci.push(c as u32);
+            ci.push(rank[col_of[k] as usize]);
         }
-        let m = CooMatrix::from_sorted_parts(merged.len(), distinct.len(), ri, ci, self.vals)
+        let m = CooMatrix::from_sorted_parts(merged.len(), distinct.len(), ri, ci, vals)
             .into_csr();
         (m, distinct)
     }
 }
 
-/// Merge two sorted, distinct key lists into their sorted union.
-fn merge_distinct(x: &[String], y: &[String]) -> Vec<String> {
+/// Merge two sorted, distinct key lists into their sorted union
+/// (clones are pointer copies).
+fn merge_distinct(x: &[SharedStr], y: &[SharedStr]) -> Vec<SharedStr> {
     let mut out = Vec::with_capacity(x.len().max(y.len()));
     let (mut i, mut j) = (0usize, 0usize);
     while i < x.len() || j < y.len() {
@@ -249,7 +303,9 @@ fn merge_distinct(x: &[String], y: &[String]) -> Vec<String> {
 /// node crosses into the writer.
 pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
     let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
-    let spec = ScanSpec::all().reduced(RowReduce::Count { out_col: "deg".into() });
+    let spec = ScanSpec::all()
+        .reduced(RowReduce::Count { out_col: "deg".into() })
+        .batched(SCAN_BLOCK);
     let nodes = w.put_scan(edges.scan_stream(spec));
     w.flush();
     nodes
@@ -262,13 +318,15 @@ pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
 /// One streaming scanner serves every hop: frontiers iterate in sorted
 /// order and [`ScanIter::seek`] jumps the cursor to each frontier row,
 /// so a hop costs one seek + one row read per frontier node instead of
-/// a fresh scan per node.
+/// a fresh scan per node. The stream carries a small batch hint
+/// ([`ScanSpec::batched`]) — a row probe reads a handful of cells, so
+/// the default 64-cell opening block per seek would be mostly waste.
 pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> {
     let mut frontiers: Vec<BTreeSet<String>> = Vec::with_capacity(hops + 1);
     let mut visited: BTreeSet<String> = seeds.iter().cloned().collect();
     frontiers.push(visited.clone());
     let mut frontier: BTreeSet<String> = visited.clone();
-    let mut stream = adj.scan_stream(ScanSpec::all());
+    let mut stream = adj.scan_stream(ScanSpec::all().batched(BFS_BATCH));
     for _ in 0..hops {
         let mut next = BTreeSet::new();
         for node in &frontier {
@@ -277,8 +335,8 @@ pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> 
                 if t.row != *node {
                     break;
                 }
-                if !visited.contains(&t.col) {
-                    next.insert(t.col);
+                if !visited.contains(t.col.as_str()) {
+                    next.insert(t.col.to_string());
                 }
             }
         }
@@ -296,10 +354,10 @@ pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> 
 /// that share at least one neighbor. Returns an associative array
 /// `J(u, v) = |N(u) ∩ N(v)| / |N(u) ∪ N(v)|` for `u < v`.
 pub fn jaccard(adj: &Table) -> Assoc {
-    // Build neighbor sets straight off the stream (triples are moved,
-    // not cloned, into the map).
-    let mut nbrs: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
-    for t in adj.scan_stream(ScanSpec::all()) {
+    // Build neighbor sets straight off the stream (shared handles are
+    // moved, not copied, into the map).
+    let mut nbrs: BTreeMap<SharedStr, BTreeSet<SharedStr>> = BTreeMap::new();
+    for t in adj.scan_stream(ScanSpec::all().batched(SCAN_BLOCK)) {
         nbrs.entry(t.row).or_default().insert(t.col);
     }
     // Invert: neighbor -> rows touching it, so only co-neighbor pairs
@@ -325,8 +383,8 @@ pub fn jaccard(adj: &Table) -> Assoc {
     let mut cols = Vec::new();
     let mut vals = Vec::new();
     for ((u, v), i) in inter {
-        let nu = nbrs[&u].len();
-        let nv = nbrs[&v].len();
+        let nu = nbrs[u.as_str()].len();
+        let nv = nbrs[v.as_str()].len();
         let union = nu + nv - i;
         rows.push(crate::assoc::Key::str(u));
         cols.push(crate::assoc::Key::str(v));
@@ -465,6 +523,58 @@ mod tests {
                 assert_eq!(cells, expect.len(), "{} t={threads}", s.name());
             }
         }
+    }
+
+    #[test]
+    fn row_masked_table_mult_equals_filtered_full() {
+        // The row twin: masked output rows must be byte-identical to
+        // unmasked-then-filter-rows, across semirings, thread counts,
+        // and split tables.
+        let store = TableStore::new(TableConfig { split_threshold: 256, write_latency_us: 0 });
+        let n = 60;
+        let rows: Vec<String> = (0..n).map(|i| format!("r{:02}", i % 12)).collect();
+        let cols: Vec<String> = (0..n).map(|i| format!("c{:02}", (i * 7) % 20)).collect();
+        let a = Assoc::from_triples(&rows, &cols, 2.0);
+        let (t, _) = store.ingest_assoc("m", &a);
+        // Output rows of AᵀA are A's column keys: keep the "c0*" band.
+        let keep = KeyMatch::Prefix("c0".into());
+        for s in [&PlusTimes as &dyn Semiring, &MaxPlus, &MinPlus] {
+            let full = store.create_table(&format!("rfull_{}", s.name()));
+            table_mult(&t, &t, &full, s);
+            let expect: Vec<Triple> = full
+                .scan(ScanRange::all())
+                .into_iter()
+                .filter(|tr| keep.matches(&tr.row))
+                .collect();
+            for threads in [1usize, 2, 4] {
+                let out = store.create_table(&format!("rmasked_{}_{threads}", s.name()));
+                let cells = table_mult_row_masked_par(
+                    &t,
+                    &t,
+                    &out,
+                    s,
+                    &keep,
+                    Parallelism::with_threads(threads),
+                );
+                let got = out.scan(ScanRange::all());
+                assert_eq!(got, expect, "{} t={threads}", s.name());
+                assert_eq!(cells, expect.len(), "{} t={threads}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn row_masked_table_mult_degenerate_masks() {
+        let (store, t, _) = graph_store();
+        let none = store.create_table("rnone");
+        let keep_none = KeyMatch::Equals("nope".into());
+        assert_eq!(table_mult_row_masked(&t, &t, &none, &PlusTimes, &keep_none), 0);
+        assert!(store.read_assoc("rnone").unwrap().is_empty());
+        let all = store.create_table("rall");
+        let keep_all = KeyMatch::Glob("*".into());
+        table_mult_row_masked(&t, &t, &all, &PlusTimes, &keep_all);
+        let a = store.read_assoc("edges").unwrap();
+        assert_eq!(store.read_assoc("rall").unwrap(), a.sqin());
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //!   semiring), the paper's central data model, with the four-attribute
 //!   storage layout (`row`, `col`, `val`, `adj`).
 //! * **[`sorted`]** — sorted union / sorted intersection with index maps,
-//!   the algorithmic core of `+`, `*` and `@` (paper §II.C).
+//!   the algorithmic core of `+`, `*` and `@` (paper §II.C), plus the
+//!   dictionary key encoder (`KeyDict`: intern to dense `u32` ids, sort
+//!   distinct keys once — the constructor's default encoding).
 //! * **[`semiring`]** — plus-times, max-plus, min-plus, max-min and the
 //!   string (concat, min) algebra (paper §I.A).
 //! * **[`sparse`]** — a from-scratch sparse linear-algebra substrate
@@ -18,7 +20,10 @@
 //! * **[`store`]** — an Accumulo-like sorted, distributed key/value triple
 //!   store (tablets, splits, batch writer) whose scans run on a
 //!   server-side iterator stack ([`store::scan`]): seekable streaming
-//!   cursors with range, filter, and combiner pushdown.
+//!   cursors with range, filter, and combiner pushdown. Cells are
+//!   shared-bytes handles ([`store::SharedStr`]): a scanned triple is
+//!   three pointer clones, filters evaluate beneath the block copy, and
+//!   the scan→assoc and Graphulo paths consume dictionary-encoded ids.
 //! * **[`graphulo`]** — Graphulo-style server-side kernels (TableMult —
 //!   including the sink-masked variant on masked SpGEMM — degree
 //!   tables, BFS) over the store's scan stack.

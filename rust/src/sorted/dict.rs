@@ -1,0 +1,181 @@
+//! Dictionary encoding for [`Key`] vectors — the constructor's
+//! encode-once path (PR 4).
+//!
+//! The digest sort in [`super::keysort`] already makes the constructor's
+//! sort+dedup cheap *per comparison*, but it still sorts one element per
+//! input **cell**. Associative-array workloads are heavily duplicated
+//! (the paper's Figures 3–4 workload has 8 cells per distinct key;
+//! scan-to-assoc rebuilds commonly have far more), so the asymptotically
+//! right move is the D4M dictionary trick: intern every key to a dense
+//! `u32` id in one O(n) hashing pass, sort only the *distinct* keys,
+//! and recover each input position's rank through the id — strings are
+//! compared (and copied) once per distinct key instead of once per cell.
+//!
+//! [`encode_keys_par`] is a drop-in replacement for
+//! [`super::sort_dedup_keys_par`]: both produce the **canonical**
+//! `(unique_sorted, index_map)` form, so the two paths are bit-identical
+//! for every input and thread count (`tests/dict_equivalence.rs`
+//! enforces this; [`crate::assoc::KeyEncoding`] selects between them).
+
+use super::keysort::{sort_dedup_encoded, sort_dedup_keys};
+use crate::assoc::Key;
+use crate::util::intern::Dict;
+use crate::util::parallel::{parallel_map_ranges, Parallelism};
+
+/// A dense [`Key`] dictionary: the generic intern core
+/// ([`crate::util::intern::Dict`]) instantiated over mixed
+/// numeric/string keys, so the constructor path can encode any key
+/// space. `intern`, the run-of-equal-keys cache, and the dense-id
+/// accessors are the shared machinery; only the [`Key`]-ordered
+/// finalize below is specific to this instantiation.
+pub type KeyDict = Dict<Key>;
+
+impl Dict<Key> {
+    /// Order-preserving finalize: the canonical sorted-unique key list
+    /// plus `rank[id]` = position of key `id` in it (numbers before
+    /// strings — [`Key`]'s total order). The id path composes through
+    /// [`sort_dedup_encoded`].
+    pub fn into_sorted(self) -> (Vec<Key>, Vec<usize>) {
+        sort_dedup_keys(&self.into_keys())
+    }
+}
+
+/// Inputs shorter than this encode faster serially than the fan-out
+/// costs (mirrors `keysort`'s threshold).
+const PAR_MIN_LEN: usize = 512;
+
+/// Dictionary-encoded sort+dedup: same `(unique_sorted, index_map)`
+/// contract (and bit-identical output) as
+/// [`super::sort_dedup_keys_par`], via intern → sort-distinct → rank.
+///
+/// Parallel path: contiguous shards intern into local dictionaries, the
+/// shard dictionaries are concatenated and canonicalized with one
+/// digest sort over the (few) distinct keys, and every position's rank
+/// is recovered through its shard-local id. The output is a pure
+/// function of the input, so every thread count matches the serial
+/// path byte for byte.
+pub fn encode_keys_par(keys: &[Key], par: Parallelism) -> (Vec<Key>, Vec<usize>) {
+    let n = keys.len();
+    if par.is_serial() || n < PAR_MIN_LEN {
+        return encode_keys(keys);
+    }
+    let ranges = par.chunk_ranges(n);
+    if ranges.len() <= 1 {
+        return encode_keys(keys);
+    }
+    let shards: Vec<(Vec<Key>, Vec<u32>)> = parallel_map_ranges(ranges.clone(), |r| {
+        let mut dict = KeyDict::new();
+        let ids: Vec<u32> = keys[r].iter().map(|k| dict.intern(k)).collect();
+        (dict.into_keys(), ids)
+    });
+
+    // Concatenate the shard dictionaries (moves, no clones) and
+    // canonicalize once: `sort_dedup_keys` merges cross-shard
+    // duplicates and yields each concatenated position's rank.
+    let mut offsets = Vec::with_capacity(shards.len());
+    let mut all_dict: Vec<Key> = Vec::with_capacity(shards.iter().map(|(d, _)| d.len()).sum());
+    let mut shard_ids: Vec<Vec<u32>> = Vec::with_capacity(shards.len());
+    for (dict, ids) in shards {
+        offsets.push(all_dict.len());
+        all_dict.extend(dict);
+        shard_ids.push(ids);
+    }
+    let (unique, rank) = sort_dedup_keys(&all_dict);
+
+    let mut index_map = vec![0usize; n];
+    for ((range, ids), off) in ranges.into_iter().zip(&shard_ids).zip(&offsets) {
+        for (p, &id) in range.zip(ids) {
+            index_map[p] = rank[off + id as usize];
+        }
+    }
+    (unique, index_map)
+}
+
+/// Serial dictionary encode (the `threads == 1` code path of
+/// [`encode_keys_par`]).
+pub fn encode_keys(keys: &[Key]) -> (Vec<Key>, Vec<usize>) {
+    let mut dict = KeyDict::new();
+    let ids: Vec<u32> = keys.iter().map(|k| dict.intern(k)).collect();
+    sort_dedup_encoded(&dict.into_keys(), &ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sorted::{is_sorted_unique, sort_dedup_keys_par};
+    use crate::util::prop::check;
+
+    #[test]
+    fn keydict_dense_ids_and_order_preserving_finalize() {
+        let mut d = KeyDict::new();
+        let ks = [Key::str("m"), Key::num(3.0), Key::str("a"), Key::num(3.0), Key::str("m")];
+        let ids: Vec<u32> = ks.iter().map(|k| d.intern(k)).collect();
+        assert_eq!(ids, vec![0, 1, 2, 1, 0]);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.get(1), &Key::num(3.0));
+        let (sorted, rank) = d.into_sorted();
+        // Numbers sort before strings (Key's total order).
+        assert_eq!(sorted, vec![Key::num(3.0), Key::str("a"), Key::str("m")]);
+        assert_eq!(rank, vec![2, 0, 1]);
+        assert!(is_sorted_unique(&sorted));
+    }
+
+    #[test]
+    fn keydict_run_cache() {
+        let mut d = KeyDict::new();
+        for _ in 0..4 {
+            assert_eq!(d.intern(&Key::str("r")), 0);
+        }
+        assert_eq!(d.intern(&Key::num(1.0)), 1);
+        assert_eq!(d.intern(&Key::num(1.0)), 1);
+        assert_eq!(d.intern(&Key::str("r")), 0);
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn keydict_negative_zero_is_one_key() {
+        let mut d = KeyDict::new();
+        let a = d.intern(&Key::num(0.0));
+        let b = d.intern(&Key::Num(-0.0)); // bypasses Key::num normalization
+        assert_eq!(a, b, "-0.0 must intern to the id of 0.0");
+    }
+
+    #[test]
+    fn encode_matches_digest_sort_small() {
+        let keys: Vec<Key> =
+            ["17", "3", "17", "100", "2", "3", "99"].iter().map(|s| Key::str(*s)).collect();
+        assert_eq!(encode_keys(&keys), sort_dedup_keys(&keys));
+    }
+
+    #[test]
+    fn prop_encode_matches_digest_sort_all_threads() {
+        check("encode_keys_par == sort_dedup_keys_par", 40, |g| {
+            let len = g.rng().below_usize(1800);
+            let keys: Vec<Key> = (0..len)
+                .map(|_| match g.rng().below(4) {
+                    0 => Key::str(g.rng().below(40).to_string()),
+                    1 => Key::num(g.rng().range_i64(-40, 40) as f64),
+                    2 => {
+                        let mut s = "sharedprefix".to_string();
+                        s.push_str(&g.rng().below(25).to_string());
+                        Key::str(s)
+                    }
+                    _ => Key::num(g.rng().f64() * 10.0 - 5.0),
+                })
+                .collect();
+            let expect = sort_dedup_keys(&keys);
+            assert_eq!(encode_keys(&keys), expect, "serial encode");
+            for threads in [2, 4, 7] {
+                let par = Parallelism::with_threads(threads);
+                assert_eq!(encode_keys_par(&keys, par), expect, "encode t={threads}");
+                assert_eq!(sort_dedup_keys_par(&keys, par), expect, "digest t={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn encode_empty() {
+        let (u, m) = encode_keys(&[]);
+        assert!(u.is_empty() && m.is_empty());
+    }
+}

@@ -37,9 +37,11 @@ use crate::util::parallel::{parallel_map_ranges, Parallelism};
 /// Layout: bit 63 = tag (0 numeric, 1 string); remaining bits hold the
 /// scaled ordering payload. Exactness: numeric digests lose the f64's
 /// low bit to the tag shift only when the exponent is extreme, so we
-/// keep numerics conservative; string digests are exact iff len ≤ 8
-/// (8-byte prefix with length folded in would misorder, so ties fall
-/// back to a full compare).
+/// keep numerics conservative; string digests are exact iff the key
+/// fits the bit-shifted prefix (len ≤ 7) **and** has no trailing NUL —
+/// zero padding makes `"abc"` and `"abc\0"` digest-equal, so a
+/// trailing NUL must force the tie-break full compare (the same
+/// invariant as `util::intern::digest_sort_strs`).
 #[inline]
 fn digest(k: &Key) -> (u64, bool) {
     match k {
@@ -59,7 +61,12 @@ fn digest(k: &Key) -> (u64, bool) {
             let mut p = [0u8; 8];
             let n = b.len().min(8);
             p[..n].copy_from_slice(&b[..n]);
-            ((1 << 63) | (u64::from_be_bytes(p) >> 1), b.len() <= 7)
+            // Exact only when the whole key fits the (bit-shifted)
+            // prefix AND it has no trailing NUL — zero padding makes
+            // "abc" and "abc\0" digest-equal, so a trailing NUL must
+            // force the tie-break compare.
+            let exact = b.len() <= 7 && b.last() != Some(&0);
+            ((1 << 63) | (u64::from_be_bytes(p) >> 1), exact)
         }
     }
 }
@@ -119,24 +126,10 @@ pub fn sort_dedup_strs(vals: &[String]) -> (Vec<String>, Vec<usize>) {
     if n == 0 {
         return (Vec::new(), Vec::new());
     }
-    let mut tagged: Vec<(u64, u32)> = Vec::with_capacity(n);
-    let mut all_exact = true;
-    for (i, s) in vals.iter().enumerate() {
-        let b = s.as_bytes();
-        let mut p = [0u8; 8];
-        let m = b.len().min(8);
-        p[..m].copy_from_slice(&b[..m]);
-        all_exact &= b.len() <= 8;
-        tagged.push((u64::from_be_bytes(p), i as u32));
-    }
-    if all_exact {
-        tagged.sort_unstable();
-    } else {
-        tagged.sort_unstable_by(|a, b| {
-            a.0.cmp(&b.0)
-                .then_with(|| vals[a.1 as usize].cmp(&vals[b.1 as usize]))
-        });
-    }
+    // The digest-pair sort is shared with `StrDict::into_sorted` (one
+    // home for the prefix/trailing-NUL exactness invariant); when every
+    // digest is exact, dedup below is a pure u64 compare too.
+    let (tagged, all_exact) = crate::util::intern::digest_sort_strs(vals);
     let mut unique: Vec<String> = Vec::new();
     let mut index_map = vec![0usize; n];
     let mut last_digest = 0u64;
@@ -153,6 +146,23 @@ pub fn sort_dedup_strs(vals: &[String]) -> (Vec<String>, Vec<usize>) {
         }
         index_map[p as usize] = unique.len() - 1;
     }
+    (unique, index_map)
+}
+
+/// The id path: canonical `(unique_sorted, index_map)` from a
+/// dictionary encode. `dict` holds the *distinct* keys (any order, no
+/// repeats — a [`crate::sorted::KeyDict`]'s id space) and `ids[p]` is
+/// position `p`'s dense id, so only `dict.len()` keys are sorted and
+/// every input position resolves through an O(1) rank lookup —
+/// bit-identical to [`sort_dedup_keys`] over the decoded input.
+pub fn sort_dedup_encoded(dict: &[Key], ids: &[u32]) -> (Vec<Key>, Vec<usize>) {
+    let (unique, rank) = sort_dedup_keys(dict);
+    debug_assert_eq!(
+        unique.len(),
+        dict.len(),
+        "dictionary ids must be distinct (duplicates would skew ranks)"
+    );
+    let index_map = ids.iter().map(|&id| rank[id as usize]).collect();
     (unique, index_map)
 }
 
@@ -347,6 +357,25 @@ mod tests {
         let keys: Vec<Key> = ["b", "a", "b"].iter().map(|s| Key::str(*s)).collect();
         let (u, m) = sort_dedup_keys_par(&keys, Parallelism::with_threads(4));
         assert_eq!((u, m), sort_dedup_keys(&keys));
+    }
+
+    #[test]
+    fn trailing_nul_keys_stay_distinct() {
+        // "abc" and "abc\0" share a zero-padded prefix; the digest fast
+        // path must not merge or misorder them (regression: exactness
+        // used to consider any ≤7-byte string digest-exact).
+        let keys: Vec<Key> =
+            ["abc\0", "abc", "abc\0\0", "abc"].iter().map(|s| Key::str(*s)).collect();
+        let (u, m) = sort_dedup_keys(&keys);
+        let (u2, m2) = sort_dedup_with_index(&keys);
+        assert_eq!(u, u2);
+        assert_eq!(m, m2);
+        assert_eq!(u.len(), 3);
+        assert!(is_sorted_unique(&u));
+        let strs: Vec<String> = ["abc\0", "abc", "abc\0\0"].iter().map(|s| s.to_string()).collect();
+        let (su, sm) = sort_dedup_strs(&strs);
+        assert_eq!(su, vec!["abc".to_string(), "abc\0".to_string(), "abc\0\0".to_string()]);
+        assert_eq!(sm, vec![1, 0, 2]);
     }
 
     #[test]

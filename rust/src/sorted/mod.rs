@@ -15,14 +15,19 @@
 //!
 //! The module also provides [`sort_dedup_with_index`], the constructor's
 //! workhorse: sort a key list, deduplicate it, and return for each input
-//! position the index of its key in the deduplicated output.
+//! position the index of its key in the deduplicated output — plus the
+//! dictionary-encoded fast path ([`KeyDict`], [`encode_keys_par`],
+//! [`sort_dedup_encoded`]) that interns keys to dense `u32` ids and
+//! sorts only the distinct keys (PR 4's encode-once constructor).
 
+mod dict;
 mod keysort;
 mod merge;
 mod search;
 
+pub use dict::{encode_keys, encode_keys_par, KeyDict};
 pub use keysort::{
-    sort_dedup_keys, sort_dedup_keys_par, sort_dedup_strs, sort_dedup_strs_par,
+    sort_dedup_encoded, sort_dedup_keys, sort_dedup_keys_par, sort_dedup_strs, sort_dedup_strs_par,
 };
 pub use merge::{sorted_intersect, sorted_union, Intersection, Union};
 pub use search::{lower_bound, range_indices, upper_bound};

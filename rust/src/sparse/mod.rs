@@ -35,6 +35,7 @@ pub use csr::CsrMatrix;
 pub use dense::DenseBlock;
 pub use spgemm::{
     spgemm, spgemm_masked, spgemm_masked_par, spgemm_masked_with_stats_par, spgemm_par,
+    spgemm_row_masked, spgemm_row_masked_par, spgemm_row_masked_with_stats_par,
     spgemm_with_policy_par, spgemm_with_stats, spgemm_with_stats_par, AccumulatorPolicy,
     SpGemmStats,
 };
@@ -48,8 +49,10 @@ pub enum SparseError {
     IndexOutOfBounds { axis: &'static str, index: usize, extent: usize },
     /// Operand shapes are incompatible for the requested operation.
     ShapeMismatch { left: (usize, usize), right: (usize, usize), op: &'static str },
-    /// A column mask's length disagrees with the operand's column count.
-    MaskLengthMismatch { mask: usize, ncols: usize },
+    /// A mask's length disagrees with the masked axis's extent
+    /// (`axis` is `"column"` for output-column masks over `B`, `"row"`
+    /// for output-row masks over `A`).
+    MaskLengthMismatch { mask: usize, extent: usize, axis: &'static str },
 }
 
 impl std::fmt::Display for SparseError {
@@ -67,8 +70,8 @@ impl std::fmt::Display for SparseError {
                 "shape mismatch for {op}: {}x{} vs {}x{}",
                 left.0, left.1, right.0, right.1
             ),
-            SparseError::MaskLengthMismatch { mask, ncols } => {
-                write!(f, "column mask length {mask} does not match {ncols} columns")
+            SparseError::MaskLengthMismatch { mask, extent, axis } => {
+                write!(f, "{axis} mask length {mask} does not match {axis} extent {extent}")
             }
         }
     }

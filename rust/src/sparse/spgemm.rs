@@ -49,6 +49,16 @@
 //! the flops and allocation; `tests/parallel_equivalence.rs` enforces
 //! this across semirings, thread counts, and policies.
 //!
+//! [`spgemm_row_masked_par`] is the row twin: output row `i` depends
+//! only on row `i` of `A`, so restricting output rows is one O(nnz(A))
+//! pass that empties the masked-out rows of `A` before the phases run —
+//! excluded rows then cost zero flops and zero allocation (their
+//! symbolic flop count is zero, so the numeric phase skips them
+//! outright), and surviving rows are computed by the byte-identical
+//! code path. Both masks compose in [`crate::graphulo`]: the column
+//! mask serves sink-filtered output *columns*, the row mask
+//! sink-filtered output *rows*.
+//!
 //! **Determinism.** Within a row, every accumulator combines the
 //! products of a given output column in identical ⊗-traversal order
 //! (the order `A[i,:]` walks `B`'s rows), and rows are emitted in
@@ -184,7 +194,7 @@ pub fn spgemm_masked_with_stats_par(
 ) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
     let n = b.shape().1;
     if mask.len() != n {
-        return Err(SparseError::MaskLengthMismatch { mask: mask.len(), ncols: n });
+        return Err(SparseError::MaskLengthMismatch { mask: mask.len(), extent: n, axis: "column" });
     }
     if mask.iter().all(|&keep| keep) {
         // Degenerate mask: nothing to restrict, skip the copy.
@@ -192,6 +202,74 @@ pub fn spgemm_masked_with_stats_par(
     }
     let bm = restrict_cols(b, mask);
     spgemm_with_policy_par(a, &bm, s, par, AccumulatorPolicy::Adaptive)
+}
+
+/// Row-masked SpGEMM at the process-default parallelism: compute only
+/// the output rows with `mask[i] == true` — the twin of
+/// [`spgemm_masked`] for sink filters over the *row* key space. See the
+/// module docs for the contract (bit-identical to multiply-then-drop
+/// rows, zero flops for excluded rows).
+pub fn spgemm_row_masked(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    mask: &[bool],
+) -> Result<CsrMatrix, SparseError> {
+    spgemm_row_masked_par(a, b, s, Parallelism::current(), mask)
+}
+
+/// [`spgemm_row_masked`] with an explicit thread configuration.
+pub fn spgemm_row_masked_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+    mask: &[bool],
+) -> Result<CsrMatrix, SparseError> {
+    spgemm_row_masked_with_stats_par(a, b, s, par, mask).map(|(c, _)| c)
+}
+
+/// [`spgemm_row_masked_par`] with operation counts. `stats.mults`
+/// counts only the surviving (mask-true) rows' flops. `mask.len()` must
+/// equal `A`'s row count.
+pub fn spgemm_row_masked_with_stats_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+    mask: &[bool],
+) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
+    let m = a.shape().0;
+    if mask.len() != m {
+        return Err(SparseError::MaskLengthMismatch { mask: mask.len(), extent: m, axis: "row" });
+    }
+    if mask.iter().all(|&keep| keep) {
+        return spgemm_with_policy_par(a, b, s, par, AccumulatorPolicy::Adaptive);
+    }
+    let am = restrict_rows(a, mask);
+    spgemm_with_policy_par(&am, b, s, par, AccumulatorPolicy::Adaptive)
+}
+
+/// `A` restricted to mask-true rows: same shape, masked-out rows
+/// emptied (their `indptr` span collapses). One pass, O(nnz(A)); the
+/// symbolic phase then assigns excluded rows zero flops, so they cost
+/// nothing downstream.
+fn restrict_rows(a: &CsrMatrix, mask: &[bool]) -> CsrMatrix {
+    let (m, n) = a.shape();
+    let (aptr, aidx, aval) = (a.indptr(), a.indices(), a.values());
+    let keep: usize = (0..m).filter(|&r| mask[r]).map(|r| aptr[r + 1] - aptr[r]).sum();
+    let mut indptr = Vec::with_capacity(m + 1);
+    indptr.push(0usize);
+    let mut indices: Vec<u32> = Vec::with_capacity(keep);
+    let mut data: Vec<f64> = Vec::with_capacity(keep);
+    for r in 0..m {
+        if mask[r] {
+            indices.extend_from_slice(&aidx[aptr[r]..aptr[r + 1]]);
+            data.extend_from_slice(&aval[aptr[r]..aptr[r + 1]]);
+        }
+        indptr.push(indices.len());
+    }
+    CsrMatrix::from_parts(m, n, indptr, indices, data)
 }
 
 /// `B` restricted to mask-true columns: same shape, same column
@@ -870,7 +948,111 @@ mod tests {
         let a = CsrMatrix::zeros(2, 3);
         let b = CsrMatrix::zeros(3, 4);
         let err = spgemm_masked(&a, &b, &PlusTimes, &[true; 3]).unwrap_err();
-        assert!(matches!(err, SparseError::MaskLengthMismatch { mask: 3, ncols: 4 }));
+        assert!(matches!(
+            err,
+            SparseError::MaskLengthMismatch { mask: 3, extent: 4, axis: "column" }
+        ));
+        let err = spgemm_row_masked(&a, &b, &PlusTimes, &[true; 3]).unwrap_err();
+        assert!(matches!(err, SparseError::MaskLengthMismatch { mask: 3, extent: 2, axis: "row" }));
+    }
+
+    /// Expected row-masked result: the full product with mask-false
+    /// rows dropped (raw arrays, bit-exact comparison).
+    fn drop_rows_arrays(c: &CsrMatrix, mask: &[bool]) -> (Vec<usize>, Vec<u32>, Vec<u64>) {
+        let mut indptr = vec![0usize];
+        let mut idx: Vec<u32> = Vec::new();
+        let mut bits: Vec<u64> = Vec::new();
+        for r in 0..c.shape().0 {
+            if mask[r] {
+                let (ci, cv) = c.row(r);
+                idx.extend_from_slice(ci);
+                bits.extend(cv.iter().map(|v| v.to_bits()));
+            }
+            indptr.push(idx.len());
+        }
+        (indptr, idx, bits)
+    }
+
+    #[test]
+    fn row_masked_small_matches_filtered_full() {
+        let a = from_triples(3, 2, &[(0, 0, 1.0), (0, 1, 2.0), (1, 0, 3.0), (2, 1, 4.0)]);
+        let b = from_triples(2, 3, &[(0, 0, 1.0), (0, 2, 1.0), (1, 1, 5.0), (1, 2, 2.0)]);
+        let mask = [true, false, true];
+        let full = spgemm(&a, &b, &PlusTimes).unwrap();
+        let (ptr, idx, bits) = drop_rows_arrays(&full, &mask);
+        let (got, stats) = spgemm_row_masked_with_stats_par(
+            &a,
+            &b,
+            &PlusTimes,
+            Parallelism::serial(),
+            &mask,
+        )
+        .unwrap();
+        assert_eq!(got.shape(), full.shape());
+        assert_eq!(got.indptr(), &ptr[..]);
+        assert_eq!(got.indices(), &idx[..]);
+        let gbits: Vec<u64> = got.values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gbits, bits);
+        // Row 1's two flops are gone: row 0 costs 2 + 2, row 2 costs 2.
+        assert_eq!(stats.mults, 6);
+    }
+
+    #[test]
+    fn row_masked_all_false_and_all_true() {
+        let a = from_triples(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]);
+        let b = from_triples(2, 2, &[(0, 0, 3.0), (1, 1, 4.0)]);
+        let (none, stats) = spgemm_row_masked_with_stats_par(
+            &a,
+            &b,
+            &PlusTimes,
+            Parallelism::serial(),
+            &[false, false],
+        )
+        .unwrap();
+        assert_eq!(none.nnz(), 0);
+        assert_eq!(none.shape(), (2, 2));
+        assert_eq!(stats.mults, 0, "excluded rows must cost zero flops");
+        let all = spgemm_row_masked(&a, &b, &PlusTimes, &[true, true]).unwrap();
+        assert_eq!(all, spgemm(&a, &b, &PlusTimes).unwrap());
+    }
+
+    #[test]
+    fn prop_row_masked_matches_filtered_all_semirings() {
+        check("row-masked spgemm == full-then-drop-rows", 60, |g| {
+            let m = 20;
+            let k = 12;
+            let n = 16;
+            let mk_mat = |r: &mut SplitMix64, rows: usize, cols: usize, nnz: usize| {
+                let mut t = Vec::new();
+                for _ in 0..nnz {
+                    t.push((r.below_usize(rows), r.below_usize(cols), r.range_i64(1, 9) as f64));
+                }
+                from_triples(rows, cols, &t)
+            };
+            let a = mk_mat(g.rng(), m, k, 80);
+            let b = mk_mat(g.rng(), k, n, 60);
+            let mask: Vec<bool> = (0..m).map(|_| g.rng().chance(0.3)).collect();
+            for s in [&PlusTimes as &dyn Semiring, &MaxPlus, &MinPlus, &MaxMin] {
+                let (full, full_stats) =
+                    spgemm_with_stats_par(&a, &b, s, Parallelism::serial()).unwrap();
+                let (ptr, idx, bits) = drop_rows_arrays(&full, &mask);
+                for threads in [1usize, 3, 7] {
+                    let (got, stats) = spgemm_row_masked_with_stats_par(
+                        &a,
+                        &b,
+                        s,
+                        Parallelism::with_threads(threads),
+                        &mask,
+                    )
+                    .unwrap();
+                    assert_eq!(got.indptr(), &ptr[..], "{} t={threads}", s.name());
+                    assert_eq!(got.indices(), &idx[..], "{} t={threads}", s.name());
+                    let gbits: Vec<u64> = got.values().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gbits, bits, "{} t={threads}", s.name());
+                    assert!(stats.mults <= full_stats.mults, "{} t={threads}", s.name());
+                }
+            }
+        });
     }
 
     #[test]

@@ -25,9 +25,14 @@
 //!   ([`Table::scan_stream`]) or collected with per-tablet parallel
 //!   fan-out ([`Table::scan_spec_par`]).
 //!
-//! Triples here are plain strings (Accumulo keys are bytes); conversion
-//! to/from [`crate::assoc::Assoc`] happens at the boundary
-//! ([`Table::scan_to_assoc`], [`TableStore::ingest_assoc`]).
+//! Triples here are strings (Accumulo keys are bytes), stored and
+//! handed out as shared-bytes [`SharedStr`] handles: a cell scanned out
+//! of a tablet is a *pointer* clone of the stored bytes, and stays one
+//! through every scan stage, the constructor, and the Graphulo kernels
+//! (PR 4's zero-copy cell path). Conversion to/from
+//! [`crate::assoc::Assoc`] happens at the boundary
+//! ([`Table::scan_to_assoc`], [`TableStore::ingest_assoc`]), where the
+//! dictionary encoder touches each distinct key once.
 
 pub mod scan;
 mod table;
@@ -36,29 +41,37 @@ mod writer;
 
 pub use scan::{
     format_num, CellField, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec,
+    SCAN_BLOCK,
 };
 pub use table::{Table, TableConfig, TableStream};
 pub use tablet::Tablet;
 pub use writer::{BatchWriter, WriterConfig};
 
 use crate::assoc::{Aggregator, Assoc, Key, ValsInput};
+use crate::util::intern::StrDict;
+pub use crate::util::SharedStr;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-/// A stored triple: `(row, column, value)`, all strings.
+/// A stored triple: `(row, column, value)`, all shared-bytes strings —
+/// cloning a `Triple` is three pointer copies, never a byte copy.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Triple {
     /// Row key.
-    pub row: String,
+    pub row: SharedStr,
     /// Column key.
-    pub col: String,
+    pub col: SharedStr,
     /// Value (string; numeric values are rendered).
-    pub val: String,
+    pub val: SharedStr,
 }
 
 impl Triple {
     /// Construct a triple.
-    pub fn new(row: impl Into<String>, col: impl Into<String>, val: impl Into<String>) -> Self {
+    pub fn new(
+        row: impl Into<SharedStr>,
+        col: impl Into<SharedStr>,
+        val: impl Into<SharedStr>,
+    ) -> Self {
         Triple { row: row.into(), col: col.into(), val: val.into() }
     }
 
@@ -147,7 +160,10 @@ impl TableStore {
         let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
         let mut wt = BatchWriter::new(Arc::clone(&tt), WriterConfig::default());
         for (r, c, v) in a.iter() {
-            let (rs, cs, vs) = (r.to_string(), c.to_string(), v.to_string());
+            // One allocation per key/value; both orientations share it.
+            let rs = SharedStr::from(r.to_string());
+            let cs = SharedStr::from(c.to_string());
+            let vs = SharedStr::from(v.to_string());
             w.put(Triple::new(rs.clone(), cs.clone(), vs.clone()));
             wt.put(Triple::new(cs, rs, vs));
         }
@@ -229,41 +245,48 @@ pub fn triples_to_assoc(triples: &[Triple]) -> Assoc {
 }
 
 /// [`triples_to_assoc`] with an explicit thread configuration for the
-/// constructor rebuild.
+/// constructor rebuild. Triples are pointer clones, so this is the same
+/// dictionary-encoded path as [`stream_to_assoc`].
 pub fn triples_to_assoc_par(triples: &[Triple], par: crate::util::Parallelism) -> Assoc {
-    let rows: Vec<Key> = triples.iter().map(|t| Key::str(t.row.as_str())).collect();
-    let cols: Vec<Key> = triples.iter().map(|t| Key::str(t.col.as_str())).collect();
-    let numeric: Option<Vec<f64>> = triples.iter().map(|t| t.val.parse::<f64>().ok()).collect();
-    let vals = match numeric {
-        Some(nums) => ValsInput::Num(nums),
-        None => ValsInput::Str(triples.iter().map(|t| t.val.clone()).collect()),
-    };
-    Assoc::try_new_par(rows, cols, vals, Aggregator::Last, par)
-        .expect("scan triples are consistent")
+    stream_to_assoc(triples.iter().cloned(), par)
 }
 
 /// Build an [`Assoc`] from a triple stream (a [`TableStream`] or any
-/// other [`ScanIter`] consumer) without materializing a `Vec<Triple>`:
-/// triples flow straight into the constructor's key and value columns.
+/// other [`ScanIter`] consumer) without materializing a `Vec<Triple>` —
+/// and without touching key bytes per cell: every row/column key is
+/// interned to a dense `u32` id through a [`StrDict`] (a pointer clone
+/// of the shared cell bytes on first sight, a hash probe after), the
+/// *distinct* keys are sorted once at the end, and the encoded maps
+/// land in [`Assoc::try_from_encoded`]. Scan streams arrive row-sorted,
+/// so the row dictionary usually finalizes without sorting at all.
 /// Same semantics as [`triples_to_assoc`].
 pub fn stream_to_assoc(
     triples: impl Iterator<Item = Triple>,
     par: crate::util::Parallelism,
 ) -> Assoc {
-    let mut rows: Vec<Key> = Vec::new();
-    let mut cols: Vec<Key> = Vec::new();
-    let mut raw: Vec<String> = Vec::new();
+    let mut rd = StrDict::new();
+    let mut cd = StrDict::new();
+    let mut rid: Vec<u32> = Vec::new();
+    let mut cid: Vec<u32> = Vec::new();
+    let mut raw: Vec<SharedStr> = Vec::new();
     for t in triples {
-        rows.push(Key::str(t.row));
-        cols.push(Key::str(t.col));
+        rid.push(rd.intern(&t.row));
+        cid.push(cd.intern(&t.col));
         raw.push(t.val);
     }
+    let (row_keys, rrank) = rd.into_sorted();
+    let (col_keys, crank) = cd.into_sorted();
+    // Key bytes are copied exactly once per distinct key, here.
+    let row_keys: Vec<Key> = row_keys.iter().map(|s| Key::str(s.as_str())).collect();
+    let col_keys: Vec<Key> = col_keys.iter().map(|s| Key::str(s.as_str())).collect();
+    let rmap: Vec<usize> = rid.iter().map(|&id| rrank[id as usize] as usize).collect();
+    let cmap: Vec<usize> = cid.iter().map(|&id| crank[id as usize] as usize).collect();
     let numeric: Option<Vec<f64>> = raw.iter().map(|v| v.parse::<f64>().ok()).collect();
     let vals = match numeric {
         Some(nums) => ValsInput::Num(nums),
-        None => ValsInput::Str(raw),
+        None => ValsInput::Str(raw.iter().map(|v| v.to_string()).collect()),
     };
-    Assoc::try_new_par(rows, cols, vals, Aggregator::Last, par)
+    Assoc::try_from_encoded(row_keys, col_keys, rmap, cmap, vals, Aggregator::Last, par)
         .expect("scan triples are consistent")
 }
 

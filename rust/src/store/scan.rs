@@ -20,8 +20,14 @@
 //! ([`SliceCursor`] for a pinned tablet list, `TableCursor` in
 //! `table.rs` for the re-locating streaming scanner): it holds no lock
 //! between blocks, resumes by key, and therefore composes with
-//! concurrent writers and tablet splits. Stages wrap the base
-//! generically ([`FilterIter`], [`ReduceIter`]); nothing in the stack
+//! concurrent writers and tablet splits. Filter stages are pushed
+//! *beneath the block copy*: the cursors hand the spec's [`CellFilter`]
+//! list to [`Tablet::scan_block`], which evaluates the matchers against
+//! `&str` borrows of the stored bytes, so a rejected cell is never
+//! copied out of the tablet and allocates nothing (an accepted cell is
+//! three pointer clones of the stored shared bytes). The combiner stage
+//! wraps generically ([`ReduceIter`]; [`FilterIter`] remains for
+//! client-side composition over non-tablet bases); nothing in the stack
 //! ever materializes the full triple set — consumers pull one triple at
 //! a time.
 //!
@@ -33,7 +39,7 @@
 //! (`rust/tests/scan_stack.rs` enforces this).
 
 use super::tablet::Tablet;
-use super::Triple;
+use super::{SharedStr, Triple};
 use std::collections::BTreeSet;
 use std::sync::Mutex;
 
@@ -217,10 +223,17 @@ impl CellFilter {
 
     /// Whether `t` passes this filter.
     pub fn matches(&self, t: &Triple) -> bool {
+        self.matches_parts(&t.row, &t.col, &t.val)
+    }
+
+    /// [`CellFilter::matches`] against borrowed cell parts — the form
+    /// the tablet cursor evaluates *beneath* the block copy, so cells
+    /// can be rejected before any `Triple` (or any allocation) exists.
+    pub fn matches_parts(&self, row: &str, col: &str, val: &str) -> bool {
         let s = match self.field {
-            CellField::Row => t.row.as_str(),
-            CellField::Col => t.col.as_str(),
-            CellField::Val => t.val.as_str(),
+            CellField::Row => row,
+            CellField::Col => col,
+            CellField::Val => val,
         };
         self.matcher.matches(s)
     }
@@ -272,10 +285,19 @@ impl RowReduce {
 pub struct ScanSpec {
     /// Row + column range (the base of the stack).
     pub range: ScanRange,
-    /// Filter stages, applied in order (all must pass).
+    /// Filter stages, applied in order (all must pass) — pushed beneath
+    /// the tablet block copy by the base cursors.
     pub filters: Vec<CellFilter>,
     /// Optional combiner stage at the top of the stack.
     pub reduce: Option<RowReduce>,
+    /// Per-stream batch-size hint: the tablet block size a streaming
+    /// scan starts at after open/seek (clamped to `1..=`[`SCAN_BLOCK`],
+    /// still doubling up to [`SCAN_BLOCK`] as the stream runs). `None`
+    /// uses the default ramp. Small hints fit point-lookup-heavy
+    /// workloads (a BFS hop reads a handful of cells per seek — copying
+    /// a 64-cell block to use 3 is pure waste); [`SCAN_BLOCK`] fits
+    /// full-table scans, which skip the ramp entirely.
+    pub batch: Option<usize>,
 }
 
 impl ScanSpec {
@@ -300,6 +322,12 @@ impl ScanSpec {
         self.reduce = Some(r);
         self
     }
+
+    /// Set the per-stream batch-size hint (see [`ScanSpec::batch`]).
+    pub fn batched(mut self, hint: usize) -> Self {
+        self.batch = Some(hint);
+        self
+    }
 }
 
 /// Render a numeric value the way the store writes it (integers without
@@ -319,6 +347,12 @@ pub fn format_num(v: f64) -> String {
 
 /// Filter stage: passes through triples matching every [`CellFilter`].
 /// An empty filter list is a free passthrough.
+///
+/// The tablet block cursors evaluate spec filters *beneath* the block
+/// copy ([`Tablet::scan_block`]), so table scans no longer stack this
+/// iterator; it remains for client-side composition over arbitrary
+/// [`ScanIter`] bases (and as the reference the pushdown is tested
+/// against).
 pub struct FilterIter<I> {
     inner: I,
     filters: Vec<CellFilter>,
@@ -352,7 +386,7 @@ impl<I: ScanIter> ScanIter for FilterIter<I> {
 pub struct ReduceIter<I> {
     inner: I,
     reduce: Option<RowReduce>,
-    row: Option<String>,
+    row: Option<SharedStr>,
     count: usize,
     acc: f64,
     exhausted: bool,
@@ -439,62 +473,85 @@ impl<I: ScanIter> ScanIter for ReduceIter<I> {
 
 /// Triples copied out of a tablet per lock acquisition. Blocks bound
 /// lock hold time (writers interleave between blocks) and amortize the
-/// `BTreeMap` re-seek.
-pub(crate) const SCAN_BLOCK: usize = 2048;
+/// `BTreeMap` re-seek. Doubles as the *examined*-cells floor of
+/// [`Tablet::scan_block`]'s per-call cap — a selective pushed-down
+/// filter yields the lock after examining this many cells even when it
+/// emitted none — and as the ceiling of the per-stream batch-size ramp
+/// ([`ScanSpec::batch`]).
+pub const SCAN_BLOCK: usize = 2048;
 
 /// Block cursor over an explicit, pinned tablet list — the base
 /// iterator used by `Table::scan_spec_par`, which resolves the in-range
 /// tablets under the table's read lock and hands each parallel worker a
 /// contiguous sub-list. Holds no tablet lock between blocks; resumes by
-/// key.
+/// key; evaluates the spec's filters beneath the tablet block copy.
 pub struct SliceCursor<'t> {
     tablets: &'t [Mutex<Tablet>],
     live: Vec<usize>,
     range: ScanRange,
+    filters: Vec<CellFilter>,
     /// Position in `live`.
     ti: usize,
     /// Resume key: `(row, col, inclusive)`; `None` = range start.
-    resume: Option<(String, String, bool)>,
+    resume: Option<(SharedStr, SharedStr, bool)>,
+    /// Current block, reversed so consuming is a pop (a move, not a
+    /// clone — the cell stays a pointer handle end to end).
     buf: Vec<Triple>,
-    pos: usize,
     done: bool,
 }
 
 impl<'t> SliceCursor<'t> {
     /// Cursor over `live` (indices into `tablets`, in row order),
-    /// restricted to `range`.
-    pub fn new(tablets: &'t [Mutex<Tablet>], live: Vec<usize>, range: ScanRange) -> Self {
+    /// restricted to `range`, with `filters` pushed into the tablet
+    /// block scan.
+    pub fn new(
+        tablets: &'t [Mutex<Tablet>],
+        live: Vec<usize>,
+        range: ScanRange,
+        filters: Vec<CellFilter>,
+    ) -> Self {
         SliceCursor {
             tablets,
             live,
             range,
+            filters,
             ti: 0,
             resume: None,
             buf: Vec::new(),
-            pos: 0,
             done: false,
         }
     }
 
     fn refill(&mut self) {
         self.buf.clear();
-        self.pos = 0;
         while self.ti < self.live.len() {
             let tab = self.tablets[self.live[self.ti]].lock().unwrap();
             let from = self.resume.as_ref().map(|(r, c, inc)| (r.as_str(), c.as_str(), *inc));
-            let exhausted = tab.scan_block(from, &self.range, SCAN_BLOCK, &mut self.buf);
+            let more =
+                tab.scan_block(from, &self.range, &self.filters, SCAN_BLOCK, &mut self.buf);
             drop(tab);
-            if exhausted {
-                // Done with this tablet — advance now so a partial final
-                // block doesn't cost an extra lock + re-seek round trip.
-                self.ti += 1;
-                self.resume = None;
-                if !self.buf.is_empty() {
-                    return;
+            match more {
+                None => {
+                    // Done with this tablet — advance now so a partial
+                    // final block doesn't cost an extra lock + re-seek
+                    // round trip.
+                    self.ti += 1;
+                    self.resume = None;
+                    if !self.buf.is_empty() {
+                        self.buf.reverse();
+                        return;
+                    }
                 }
-            } else if let Some(last) = self.buf.last() {
-                self.resume = Some((last.row.clone(), last.col.clone(), false));
-                return;
+                Some((row, col)) => {
+                    self.resume = Some((row, col, false));
+                    if !self.buf.is_empty() {
+                        self.buf.reverse();
+                        return;
+                    }
+                    // The examined cap fired on an all-rejected block:
+                    // loop — the lock was released above, so writers
+                    // interleave here.
+                }
             }
         }
         self.done = true;
@@ -504,14 +561,13 @@ impl<'t> SliceCursor<'t> {
 impl ScanIter for SliceCursor<'_> {
     fn seek(&mut self, row: &str, col: &str) {
         self.buf.clear();
-        self.pos = 0;
         self.done = false;
         // Clamp the target to the range start.
         let (row, col) = match self.range.lo.as_deref() {
             Some(lo) if row < lo => (lo, ""),
             _ => (row, col),
         };
-        self.resume = Some((row.to_string(), col.to_string(), true));
+        self.resume = Some((row.into(), col.into(), true));
         // First tablet whose extent may still hold keys >= row.
         self.ti = 0;
         while self.ti < self.live.len() {
@@ -527,9 +583,7 @@ impl ScanIter for SliceCursor<'_> {
 
     fn next_triple(&mut self) -> Option<Triple> {
         loop {
-            if self.pos < self.buf.len() {
-                let t = std::mem::replace(&mut self.buf[self.pos], Triple::new("", "", ""));
-                self.pos += 1;
+            if let Some(t) = self.buf.pop() {
                 return Some(t);
             }
             if self.done {
@@ -540,11 +594,12 @@ impl ScanIter for SliceCursor<'_> {
     }
 }
 
-/// Run the full stack over a base iterator and collect the result —
-/// the shared consumer behind `Table::scan_spec_par`'s serial path and
-/// each parallel worker.
+/// Run the stack over a base iterator that already applies the spec's
+/// filters (both block cursors do) and collect the result — the shared
+/// consumer behind `Table::scan_spec_par`'s serial path and each
+/// parallel worker.
 pub(crate) fn stack_collect<I: ScanIter>(base: I, spec: &ScanSpec) -> Vec<Triple> {
-    let mut it = ReduceIter::new(FilterIter::new(base, spec.filters.clone()), spec.reduce.clone());
+    let mut it = ReduceIter::new(base, spec.reduce.clone());
     let mut out = Vec::new();
     while let Some(t) = it.next_triple() {
         out.push(t);

@@ -15,10 +15,10 @@
 //! consumers of the same stack.
 
 use super::scan::{
-    stack_collect, FilterIter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor,
+    stack_collect, CellFilter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor, SCAN_BLOCK,
 };
 use super::tablet::Tablet;
-use super::{StoreError, Triple};
+use super::{SharedStr, StoreError, Triple};
 use crate::assoc::Assoc;
 use crate::util::parallel::parallel_map_ranges;
 use crate::util::Parallelism;
@@ -199,11 +199,17 @@ impl Table {
         let tablets = self.tablets.read().unwrap();
         let live = Self::live_tablets(&tablets, &spec.range);
         if par.is_serial() || live.len() <= 1 {
-            let base = SliceCursor::new(&tablets, live, spec.range.clone());
+            let base =
+                SliceCursor::new(&tablets, live, spec.range.clone(), spec.filters.clone());
             return stack_collect(base, spec);
         }
         let parts: Vec<Vec<Triple>> = parallel_map_ranges(par.chunk_ranges(live.len()), |group| {
-            let base = SliceCursor::new(&tablets, live[group].to_vec(), spec.range.clone());
+            let base = SliceCursor::new(
+                &tablets,
+                live[group].to_vec(),
+                spec.range.clone(),
+                spec.filters.clone(),
+            );
             stack_collect(base, spec)
         });
         let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
@@ -271,12 +277,14 @@ impl Table {
 
     /// Run a stacked scan straight into an associative array. The
     /// serial path streams — triples flow from the stack directly into
-    /// the constructor's key/value columns, never materializing a
-    /// `Vec<Triple>`; the parallel path fans the collection out per
-    /// tablet group first.
+    /// the dictionary encoder, never materializing a `Vec<Triple>`
+    /// (full-scan batch hint applied unless the spec sets its own); the
+    /// parallel path fans the collection out per tablet group first.
     pub fn scan_spec_to_assoc(&self, spec: &ScanSpec, par: Parallelism) -> Assoc {
         if par.is_serial() {
-            super::stream_to_assoc(self.scan_stream(spec.clone()), par)
+            let mut spec = spec.clone();
+            spec.batch.get_or_insert(SCAN_BLOCK);
+            super::stream_to_assoc(self.scan_stream(spec), par)
         } else {
             super::stream_to_assoc(self.scan_spec_par(spec, par).into_iter(), par)
         }
@@ -292,45 +300,58 @@ impl Table {
 }
 
 /// Tablet blocks fetched after a seek start small and double up to
-/// [`super::scan::SCAN_BLOCK`] — point-ish reads (BFS row probes) stay
-/// cheap while long scans amortize locking, the classic scanner batch
-/// ramp.
+/// [`SCAN_BLOCK`] — point-ish reads (BFS row probes) stay cheap while
+/// long scans amortize locking, the classic scanner batch ramp. A
+/// [`ScanSpec::batch`] hint overrides this starting size per stream.
 const STREAM_BLOCK_MIN: usize = 64;
 
 /// The base cursor of a [`TableStream`]: a block cursor that re-locates
 /// its tablet *by key* on every refill instead of pinning the tablet
 /// list, so it holds no table lock between blocks and survives
 /// concurrent splits (Accumulo scanners re-resolve tablet locations the
-/// same way).
+/// same way). Spec filters are evaluated beneath the tablet block copy.
 struct TableCursor<'a> {
     table: &'a Table,
     range: ScanRange,
+    filters: Vec<CellFilter>,
     /// Resume key `(row, col, inclusive)`; `None` = range start.
-    resume: Option<(String, String, bool)>,
+    resume: Option<(SharedStr, SharedStr, bool)>,
+    /// Current block, reversed so consuming is a move-out pop.
     buf: Vec<Triple>,
-    pos: usize,
     done: bool,
     block: usize,
+    /// Block size installed after open/seek (the batch ramp start).
+    block_min: usize,
 }
 
 impl<'a> TableCursor<'a> {
-    fn new(table: &'a Table, range: ScanRange) -> Self {
+    fn new(
+        table: &'a Table,
+        range: ScanRange,
+        filters: Vec<CellFilter>,
+        batch: Option<usize>,
+    ) -> Self {
+        let block_min = batch.unwrap_or(STREAM_BLOCK_MIN).clamp(1, SCAN_BLOCK);
         TableCursor {
             table,
             range,
+            filters,
             resume: None,
             buf: Vec::new(),
-            pos: 0,
             done: false,
-            block: STREAM_BLOCK_MIN,
+            block: block_min,
+            block_min,
         }
     }
 
     fn refill(&mut self) {
         self.buf.clear();
-        self.pos = 0;
-        let tablets = self.table.tablets.read().unwrap();
+        // Both locks (tablet-list read lock, tablet mutex) are taken
+        // and released per iteration, so writers and splits interleave
+        // even when a selective filter needs several all-rejected
+        // blocks to find the next match.
         loop {
+            let tablets = self.table.tablets.read().unwrap();
             let pos_row = match &self.resume {
                 Some((r, _, _)) => r.as_str(),
                 None => self.range.lo.as_deref().unwrap_or(""),
@@ -345,13 +366,18 @@ impl<'a> TableCursor<'a> {
                 }
             }
             let from = self.resume.as_ref().map(|(r, c, inc)| (r.as_str(), c.as_str(), *inc));
-            let exhausted = tab.scan_block(from, &self.range, self.block, &mut self.buf);
-            if !exhausted {
-                // limit > 0, so a non-exhausted block always has cells.
-                let last = self.buf.last().expect("non-exhausted scan block has cells");
-                self.resume = Some((last.row.clone(), last.col.clone(), false));
-                self.block = (self.block * 2).min(super::scan::SCAN_BLOCK);
-                return;
+            let more =
+                tab.scan_block(from, &self.range, &self.filters, self.block, &mut self.buf);
+            if let Some((row, col)) = more {
+                self.resume = Some((row, col, false));
+                if !self.buf.is_empty() {
+                    self.block = (self.block * 2).min(SCAN_BLOCK);
+                    self.buf.reverse();
+                    return;
+                }
+                // Examined cap fired on an all-rejected block: release
+                // the locks and keep scanning from the resume key.
+                continue;
             }
             // This tablet is done for the range — move to the next one
             // immediately (no extra lock round trip for a partial final
@@ -363,11 +389,12 @@ impl<'a> TableCursor<'a> {
                         self.done = true;
                     } else {
                         // Continue at the next tablet's first key.
-                        self.resume = Some((hi, String::new(), true));
+                        self.resume = Some((hi.into(), "".into(), true));
                     }
                 }
             }
             if self.done || !self.buf.is_empty() {
+                self.buf.reverse();
                 return;
             }
         }
@@ -377,21 +404,18 @@ impl<'a> TableCursor<'a> {
 impl ScanIter for TableCursor<'_> {
     fn seek(&mut self, row: &str, col: &str) {
         self.buf.clear();
-        self.pos = 0;
         self.done = false;
-        self.block = STREAM_BLOCK_MIN;
+        self.block = self.block_min;
         let (row, col) = match self.range.lo.as_deref() {
             Some(lo) if row < lo => (lo, ""),
             _ => (row, col),
         };
-        self.resume = Some((row.to_string(), col.to_string(), true));
+        self.resume = Some((row.into(), col.into(), true));
     }
 
     fn next_triple(&mut self) -> Option<Triple> {
         loop {
-            if self.pos < self.buf.len() {
-                let t = std::mem::replace(&mut self.buf[self.pos], Triple::new("", "", ""));
-                self.pos += 1;
+            if let Some(t) = self.buf.pop() {
                 return Some(t);
             }
             if self.done {
@@ -403,16 +427,17 @@ impl ScanIter for TableCursor<'_> {
 }
 
 /// A streaming stacked scan over a [`Table`]: the full iterator stack
-/// (range cursor → filters → combiner) pulled one triple at a time.
-/// Implements both [`ScanIter`] (seek + next) and [`Iterator`].
+/// (range cursor with pushed-down filters → combiner) pulled one triple
+/// at a time. Implements both [`ScanIter`] (seek + next) and
+/// [`Iterator`].
 pub struct TableStream<'a> {
-    inner: ReduceIter<FilterIter<TableCursor<'a>>>,
+    inner: ReduceIter<TableCursor<'a>>,
 }
 
 impl<'a> TableStream<'a> {
     fn new(table: &'a Table, spec: ScanSpec) -> Self {
-        let base = TableCursor::new(table, spec.range);
-        TableStream { inner: ReduceIter::new(FilterIter::new(base, spec.filters), spec.reduce) }
+        let base = TableCursor::new(table, spec.range, spec.filters, spec.batch);
+        TableStream { inner: ReduceIter::new(base, spec.reduce) }
     }
 }
 
@@ -564,7 +589,7 @@ mod tests {
         assert!(got.iter().all(|t| t.col == "sum"));
         // Cross-check against the naive client-side pipeline.
         let mut expect: Vec<Triple> = Vec::new();
-        let mut cur: Option<(String, f64)> = None;
+        let mut cur: Option<(SharedStr, f64)> = None;
         for tr in t.scan(ScanRange::all()) {
             if !KeyMatch::Glob("c*0".into()).matches(&tr.col) {
                 continue;
@@ -585,6 +610,22 @@ mod tests {
         }
         assert_eq!(got, expect);
         assert!(!got.is_empty());
+    }
+
+    #[test]
+    fn batch_hints_do_not_change_results() {
+        let t = small_table();
+        t.write_batch(batch(80)).unwrap();
+        let expect: Vec<Triple> = t.scan_stream(ScanSpec::all()).collect();
+        // Any hint (clamped to 1..=SCAN_BLOCK) yields identical bytes;
+        // the hint only moves lock/copy granularity.
+        for hint in [1usize, 2, 7, 64, 100_000] {
+            let got: Vec<Triple> = t.scan_stream(ScanSpec::all().batched(hint)).collect();
+            assert_eq!(got, expect, "hint={hint}");
+            let mut s = t.scan_stream(ScanSpec::all().batched(hint));
+            s.seek("row0040", "");
+            assert_eq!(s.next_triple().unwrap().row, "row0040", "hint={hint}");
+        }
     }
 
     #[test]

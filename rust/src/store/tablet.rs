@@ -1,20 +1,21 @@
 //! A tablet: one sorted key range of a table (the Accumulo unit of
 //! distribution and recovery).
 
-use super::scan::ScanRange;
-use super::Triple;
+use super::scan::{CellFilter, ScanRange};
+use super::{SharedStr, Triple};
 use std::collections::BTreeMap;
 use std::ops::Bound;
 
 /// Sorted `(row, col) → val` map covering the half-open row range
-/// `[lo, hi)` (`None` = unbounded on that side).
+/// `[lo, hi)` (`None` = unbounded on that side). Cells are stored as
+/// shared-bytes [`SharedStr`]s, so scanning one out is a pointer clone.
 #[derive(Debug, Default)]
 pub struct Tablet {
     /// Inclusive lower row bound (`None` = -∞).
     pub lo: Option<String>,
     /// Exclusive upper row bound (`None` = +∞).
     pub hi: Option<String>,
-    entries: BTreeMap<(Box<str>, Box<str>), Box<str>>,
+    entries: BTreeMap<(SharedStr, SharedStr), SharedStr>,
     weight: usize,
     /// Failure-injection flag: an offline tablet rejects *writes*
     /// (`Table::write_batch` errors). Reads and scans are still served
@@ -38,13 +39,11 @@ impl Tablet {
 
     /// Insert (overwriting any existing value). Returns the previous
     /// value if the cell existed.
-    pub fn put(&mut self, t: Triple) -> Option<Box<str>> {
+    pub fn put(&mut self, t: Triple) -> Option<SharedStr> {
         debug_assert!(self.contains(&t.row), "triple routed to wrong tablet");
         let val_len = t.val.len();
         let full_weight = t.weight();
-        let prev = self
-            .entries
-            .insert((t.row.into_boxed_str(), t.col.into_boxed_str()), t.val.into_boxed_str());
+        let prev = self.entries.insert((t.row, t.col), t.val);
         match &prev {
             // Replacement: keys already counted, only the value delta.
             Some(old) => self.weight = self.weight - old.len() + val_len,
@@ -55,7 +54,7 @@ impl Tablet {
 
     /// Point lookup.
     pub fn get(&self, row: &str, col: &str) -> Option<&str> {
-        self.entries.get(&(row.into(), col.into())).map(|v| v.as_ref())
+        self.entries.get(&(row.into(), col.into())).map(|v| v.as_str())
     }
 
     /// Delete a cell; returns whether it existed.
@@ -76,7 +75,8 @@ impl Tablet {
             hi: hi.map(String::from),
             ..ScanRange::default()
         };
-        self.scan_block(None, &range, usize::MAX, out);
+        let more = self.scan_block(None, &range, &[], usize::MAX, out);
+        debug_assert!(more.is_none(), "an unbounded unfiltered scan_block must exhaust");
     }
 
     /// Whether this tablet's extent overlaps the row range of `range`.
@@ -84,23 +84,37 @@ impl Tablet {
         range.overlaps_extent(self.lo.as_deref(), self.hi.as_deref())
     }
 
-    /// Copy up to `limit` in-range cells into `out`, resuming from
-    /// `from = (row, col, inclusive)` (or the range start when `None`)
-    /// — the primitive under the scan stack's block cursors. Applies
-    /// the row range `[lo, hi)` and, per row, the column window
-    /// `[col_lo, col_hi)`; when a row's window is exhausted the scan
-    /// seeks directly to the next row, so out-of-window cells are never
-    /// copied. Returns `true` when no in-range cells remain past the
-    /// copied block (the tablet is exhausted for this range).
+    /// Copy up to `limit` in-range, filter-passing cells into `out`,
+    /// resuming from `from = (row, col, inclusive)` (or the range start
+    /// when `None`) — the primitive under the scan stack's block
+    /// cursors. Applies the row range `[lo, hi)`, per row the column
+    /// window `[col_lo, col_hi)` (when a row's window is exhausted the
+    /// scan seeks directly to the next row, so out-of-window cells are
+    /// never copied), and `filters` — evaluated against `&str` borrows
+    /// of the stored bytes *before* a `Triple` is built, so a rejected
+    /// cell allocates nothing and never leaves the tablet. An emitted
+    /// cell is three pointer clones of the stored [`SharedStr`]s.
+    ///
+    /// Returns `None` when no in-range cells remain past the copied
+    /// block (the tablet is exhausted for this range), or the resume
+    /// key — the caller continues *exclusively after* it — when the
+    /// block filled: either `limit` cells were emitted, or
+    /// `max(limit, SCAN_BLOCK)` cells were examined. The examined cap
+    /// keeps one call's lock hold bounded even when a selective filter
+    /// rejects everything it walks (the cursors re-acquire locks
+    /// between calls, so writers and splits interleave with filtered
+    /// scans exactly as with plain ones).
     pub fn scan_block(
         &self,
         from: Option<(&str, &str, bool)>,
         range: &ScanRange,
+        filters: &[CellFilter],
         limit: usize,
         out: &mut Vec<Triple>,
-    ) -> bool {
+    ) -> Option<(SharedStr, SharedStr)> {
         debug_assert!(limit > 0, "scan_block needs room to make progress");
-        let mut start: Bound<(Box<str>, Box<str>)> = match from {
+        let examine_cap = limit.max(super::scan::SCAN_BLOCK);
+        let mut start: Bound<(SharedStr, SharedStr)> = match from {
             Some((r, c, true)) => Bound::Included((r.into(), c.into())),
             Some((r, c, false)) => Bound::Excluded((r.into(), c.into())),
             None => match range.lo.as_deref() {
@@ -111,41 +125,54 @@ impl Tablet {
             },
         };
         let mut emitted = 0usize;
+        let mut examined = 0usize;
         loop {
-            // Re-seeks happen only when a row's column window closes.
-            let mut reseek: Option<(Box<str>, Box<str>)> = None;
+            // Re-seeks happen only when a row's column window closes
+            // (cells the reseek jumps over are never examined).
+            let mut reseek: Option<(SharedStr, SharedStr)> = None;
             for ((r, c), v) in self.entries.range((start, Bound::Unbounded)) {
                 if let Some(hi) = range.hi.as_deref() {
-                    if r.as_ref() >= hi {
-                        return true;
+                    if r.as_str() >= hi {
+                        return None;
                     }
                 }
-                if let Some(cl) = range.col_lo.as_deref() {
-                    if c.as_ref() < cl {
-                        continue;
+                examined += 1;
+                let keep = match range.col_lo.as_deref() {
+                    Some(cl) if c.as_str() < cl => false,
+                    _ => {
+                        if let Some(ch) = range.col_hi.as_deref() {
+                            if c.as_str() >= ch {
+                                if examined >= examine_cap {
+                                    // The cap bounds window-skip walks
+                                    // too: a reseek-per-row stride must
+                                    // not extend this lock hold.
+                                    return Some((r.clone(), c.clone()));
+                                }
+                                // This row's window is done: jump to
+                                // the next row's window start.
+                                let mut next_row = r.to_string();
+                                next_row.push('\0');
+                                let col = range.col_lo.as_deref().unwrap_or("");
+                                reseek = Some((next_row.into(), col.into()));
+                                break;
+                            }
+                        }
+                        // Rejected beneath the copy: no allocation.
+                        filters.iter().all(|f| f.matches_parts(r, c, v))
                     }
+                };
+                if keep {
+                    out.push(Triple { row: r.clone(), col: c.clone(), val: v.clone() });
+                    emitted += 1;
                 }
-                if let Some(ch) = range.col_hi.as_deref() {
-                    if c.as_ref() >= ch {
-                        // This row's window is done: jump to the next
-                        // row's window start.
-                        let mut next_row = r.to_string();
-                        next_row.push('\0');
-                        let col = range.col_lo.as_deref().unwrap_or("");
-                        reseek = Some((next_row.into_boxed_str(), col.into()));
-                        break;
-                    }
-                }
-                out.push(Triple::new(r.as_ref(), c.as_ref(), v.as_ref()));
-                emitted += 1;
-                if emitted == limit {
-                    // Caller resumes after the last emitted key.
-                    return false;
+                if emitted == limit || examined >= examine_cap {
+                    // Caller resumes after the last examined key.
+                    return Some((r.clone(), c.clone()));
                 }
             }
             match reseek {
                 Some(key) => start = Bound::Included(key),
-                None => return true,
+                None => return None,
             }
         }
     }
@@ -178,13 +205,13 @@ impl Tablet {
         if row == first {
             return None;
         }
-        Some(row.into())
+        Some(row.to_string())
     }
 
     /// Split at `row`: self keeps `[lo, row)`, the returned tablet holds
     /// `[row, hi)`.
     pub fn split_at(&mut self, row: &str) -> Tablet {
-        let right_entries: BTreeMap<(Box<str>, Box<str>), Box<str>> =
+        let right_entries: BTreeMap<(SharedStr, SharedStr), SharedStr> =
             self.entries.split_off(&(row.into(), "".into()));
         let right_weight: usize =
             right_entries.iter().map(|((r, c), v)| r.len() + c.len() + v.len()).sum();
@@ -243,7 +270,7 @@ mod tests {
         }
         let mut all = Vec::new();
         tab.scan_into(None, None, &mut all);
-        let keys: Vec<(String, String)> =
+        let keys: Vec<(SharedStr, SharedStr)> =
             all.iter().map(|t| (t.row.clone(), t.col.clone())).collect();
         assert_eq!(
             keys,
@@ -294,21 +321,19 @@ mod tests {
                 tab.put(t(r, c, "v"));
             }
         }
-        // Block-resume walk (limit 2) covers everything exactly once.
+        // Block-resume walk (limit 2) covers everything exactly once,
+        // continuing from each block's returned resume key.
         let range = ScanRange::all();
         let mut got = Vec::new();
-        let mut from: Option<(String, String)> = None;
+        let mut from: Option<(SharedStr, SharedStr)> = None;
         loop {
             let mut block = Vec::new();
             let f = from.as_ref().map(|(r, c)| (r.as_str(), c.as_str(), false));
-            let exhausted = tab.scan_block(f, &range, 2, &mut block);
-            if let Some(last) = block.last() {
-                from = Some((last.row.clone(), last.col.clone()));
-            }
-            let was_empty = block.is_empty();
+            let more = tab.scan_block(f, &range, &[], 2, &mut block);
             got.extend(block);
-            if exhausted && was_empty {
-                break;
+            match more {
+                Some(key) => from = Some(key),
+                None => break,
             }
         }
         assert_eq!(got.len(), 9);
@@ -317,8 +342,8 @@ mod tests {
         // Column window restricts per row and skips ahead.
         let range = ScanRange::all().with_cols("c2", "c3");
         let mut win = Vec::new();
-        assert!(tab.scan_block(None, &range, usize::MAX, &mut win));
-        let keys: Vec<(String, String)> = win.into_iter().map(|t| (t.row, t.col)).collect();
+        assert!(tab.scan_block(None, &range, &[], usize::MAX, &mut win).is_none());
+        let keys: Vec<(SharedStr, SharedStr)> = win.into_iter().map(|t| (t.row, t.col)).collect();
         assert_eq!(
             keys,
             vec![
@@ -331,8 +356,10 @@ mod tests {
         // Row range + column window + inclusive resume compose.
         let range = ScanRange::rows("b", "c\0").with_cols("c1", "c3");
         let mut out = Vec::new();
-        assert!(tab.scan_block(Some(("b", "c2", true)), &range, usize::MAX, &mut out));
-        let keys: Vec<(String, String)> = out.into_iter().map(|t| (t.row, t.col)).collect();
+        assert!(tab
+            .scan_block(Some(("b", "c2", true)), &range, &[], usize::MAX, &mut out)
+            .is_none());
+        let keys: Vec<(SharedStr, SharedStr)> = out.into_iter().map(|t| (t.row, t.col)).collect();
         assert_eq!(
             keys,
             vec![
@@ -341,6 +368,85 @@ mod tests {
                 ("c".into(), "c2".into())
             ]
         );
+    }
+
+    #[test]
+    fn scan_block_pushes_filters_beneath_the_copy() {
+        use crate::store::scan::KeyMatch;
+        let mut tab = Tablet::new(None, None);
+        for r in ["a", "b", "c"] {
+            for c in ["c1", "c2", "c3"] {
+                tab.put(t(r, c, &format!("{r}{c}")));
+            }
+        }
+        // Filtered block scan emits only matches; limit counts emitted
+        // cells, and the returned resume key continues the walk.
+        let filters = vec![CellFilter::col(KeyMatch::Equals("c2".into()))];
+        let range = ScanRange::all();
+        let mut block = Vec::new();
+        let more = tab.scan_block(None, &range, &filters, 2, &mut block);
+        let (rr, rc) = more.expect("a third match remains");
+        assert_eq!(block.len(), 2);
+        assert!(block.iter().all(|t| t.col == "c2"));
+        let mut rest = Vec::new();
+        let more = tab.scan_block(
+            Some((rr.as_str(), rc.as_str(), false)),
+            &range,
+            &filters,
+            usize::MAX,
+            &mut rest,
+        );
+        assert!(more.is_none());
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0], t("c", "c2", "cc2"));
+        // Emitted cells share bytes with the store (pointer clones).
+        let again = tab.get("c", "c2").map(str::to_string);
+        assert_eq!(again.as_deref(), Some("cc2"));
+        // Value filters see the stored value beneath the copy too.
+        let vf = vec![CellFilter::val(KeyMatch::Glob("b*".into()))];
+        let mut vals = Vec::new();
+        assert!(tab.scan_block(None, &range, &vf, usize::MAX, &mut vals).is_none());
+        assert_eq!(vals.len(), 3);
+        assert!(vals.iter().all(|t| t.row == "b"));
+    }
+
+    #[test]
+    fn scan_block_caps_examined_cells_per_lock_hold() {
+        use crate::store::scan::{KeyMatch, SCAN_BLOCK};
+        let mut tab = Tablet::new(None, None);
+        for i in 0..(SCAN_BLOCK + 500) {
+            tab.put(t(&format!("r{i:05}"), "c", "v"));
+        }
+        // A filter that rejects everything must still yield after
+        // examining max(limit, SCAN_BLOCK) cells — one lock hold never
+        // walks the whole tablet.
+        let reject_all = vec![CellFilter::col(KeyMatch::Equals("nope".into()))];
+        let range = ScanRange::all();
+        let mut out = Vec::new();
+        let more = tab.scan_block(None, &range, &reject_all, 64, &mut out);
+        let (rr, rc) = more.expect("cap must fire before exhaustion");
+        assert!(out.is_empty(), "every examined cell was rejected");
+        assert_eq!(rr.as_str(), format!("r{:05}", SCAN_BLOCK - 1));
+        assert_eq!(rc.as_str(), "c");
+        // Resuming from the returned key walks the tail and exhausts.
+        let more = tab.scan_block(
+            Some((rr.as_str(), rc.as_str(), false)),
+            &range,
+            &reject_all,
+            64,
+            &mut out,
+        );
+        assert!(more.is_none());
+        assert!(out.is_empty());
+        // The cap also bounds window-reseek walks: every row's window
+        // closes immediately here (all columns sort above it), so the
+        // call strides row to row — and must still yield at the cap.
+        let window = ScanRange::all().with_cols("a", "b");
+        let mut out2 = Vec::new();
+        let more = tab.scan_block(None, &window, &[], 64, &mut out2);
+        let (wr, _) = more.expect("cap must fire during a reseek walk");
+        assert!(out2.is_empty());
+        assert_eq!(wr.as_str(), format!("r{:05}", SCAN_BLOCK - 1));
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! Shared-bytes strings and string interning — the dictionary-encoded
+//! key space of PR 4.
+//!
+//! D4M's performance story is *encode once*: map string keys onto dense
+//! integer indices at the boundary, then run every kernel on integers
+//! (the Julia D4M paper, arXiv:1608.04041, credits its constructor wins
+//! to exactly this; D4M 3.0, arXiv:1702.03253, pushes the dictionary
+//! into the server). This module supplies the two primitives the rest
+//! of the crate builds that on:
+//!
+//! * [`SharedStr`] — an `Arc<str>`-backed immutable string, the cell
+//!   representation of the triple store. Cloning is a pointer copy
+//!   (one atomic increment), so a cell can flow from the tablet
+//!   `BTreeMap` through every scan stage and into the compute kernels
+//!   without its bytes ever being copied.
+//! * [`StrDict`] — a dense `str ↔ u32` dictionary with an
+//!   order-preserving finalize ([`StrDict::into_sorted`]): intern every
+//!   occurrence, touch the bytes once per *distinct* key, and recover
+//!   the canonical sorted-unique key list plus an `id → rank` map at
+//!   the end.
+//!
+//! Hashing uses [`FxHasher64`], a Fx-style multiply-xor hasher —
+//! interning sits on the per-cell ingest path, where SipHash's
+//! per-byte cost is measurable. The dictionary is not exposed to
+//! untrusted inputs, so HashDoS resistance is not a concern here.
+
+use std::borrow::Borrow;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::{BuildHasherDefault, Hash, Hasher};
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// An immutable, cheaply clonable string: `Arc<str>` with string-like
+/// ergonomics. Equality, ordering, and hashing all delegate to the
+/// underlying bytes, so `SharedStr` is a drop-in key for sorted and
+/// hashed containers (and `Borrow<str>` makes `&str` lookups work).
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SharedStr(Arc<str>);
+
+impl SharedStr {
+    /// View as `&str`.
+    #[inline]
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+
+    /// Whether two handles share one allocation (diagnostics only —
+    /// equal content in distinct allocations compares equal).
+    pub fn ptr_eq(&self, other: &SharedStr) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+impl Deref for SharedStr {
+    type Target = str;
+
+    #[inline]
+    fn deref(&self) -> &str {
+        &self.0
+    }
+}
+
+impl Borrow<str> for SharedStr {
+    #[inline]
+    fn borrow(&self) -> &str {
+        &self.0
+    }
+}
+
+impl AsRef<str> for SharedStr {
+    #[inline]
+    fn as_ref(&self) -> &str {
+        &self.0
+    }
+}
+
+impl From<&str> for SharedStr {
+    fn from(s: &str) -> SharedStr {
+        SharedStr(Arc::from(s))
+    }
+}
+
+impl From<String> for SharedStr {
+    fn from(s: String) -> SharedStr {
+        SharedStr(Arc::from(s))
+    }
+}
+
+impl From<&String> for SharedStr {
+    fn from(s: &String) -> SharedStr {
+        SharedStr(Arc::from(s.as_str()))
+    }
+}
+
+impl From<Box<str>> for SharedStr {
+    fn from(s: Box<str>) -> SharedStr {
+        SharedStr(Arc::from(s))
+    }
+}
+
+impl From<Arc<str>> for SharedStr {
+    fn from(s: Arc<str>) -> SharedStr {
+        SharedStr(s)
+    }
+}
+
+impl From<&SharedStr> for SharedStr {
+    fn from(s: &SharedStr) -> SharedStr {
+        s.clone()
+    }
+}
+
+impl PartialEq<str> for SharedStr {
+    fn eq(&self, other: &str) -> bool {
+        self.as_str() == other
+    }
+}
+
+impl PartialEq<&str> for SharedStr {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl PartialEq<String> for SharedStr {
+    fn eq(&self, other: &String) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+impl PartialEq<SharedStr> for str {
+    fn eq(&self, other: &SharedStr) -> bool {
+        self == other.as_str()
+    }
+}
+
+impl PartialEq<SharedStr> for &str {
+    fn eq(&self, other: &SharedStr) -> bool {
+        *self == other.as_str()
+    }
+}
+
+impl PartialEq<SharedStr> for String {
+    fn eq(&self, other: &SharedStr) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+impl fmt::Display for SharedStr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self.as_str(), f)
+    }
+}
+
+impl fmt::Debug for SharedStr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.as_str(), f)
+    }
+}
+
+/// Fx-style 64-bit hasher (the rustc-hash recipe): fold each 8-byte
+/// word with a rotate-xor-multiply round. Several times faster than the
+/// default SipHash on short keys, which matters because interning runs
+/// once per *cell* on the ingest paths.
+#[derive(Default)]
+pub struct FxHasher64 {
+    hash: u64,
+}
+
+/// The multiplicative constant of the Fx round (golden-ratio based).
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher64 {
+    #[inline]
+    fn round(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(FX_SEED);
+    }
+}
+
+impl Hasher for FxHasher64 {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.round(u64::from_le_bytes(c.try_into().expect("8-byte chunk")));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rest.len()].copy_from_slice(rest);
+            // Fold the tail length in so "a" and "a\0" differ.
+            tail[7] = rest.len() as u8;
+            self.round(u64::from_le_bytes(tail));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.round(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.round(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.round(v as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// `BuildHasher` for [`FxHasher64`]-keyed maps.
+pub type FxBuild = BuildHasherDefault<FxHasher64>;
+
+/// Hash anything with the crate's Fx hasher — the dictionary's probe
+/// key. (`SharedStr` and `&str` hash identically because `SharedStr`'s
+/// `Hash` delegates to the underlying `str`.)
+fn fx_hash<Q: Hash + ?Sized>(q: &Q) -> u64 {
+    let mut h = FxHasher64::default();
+    q.hash(&mut h);
+    h.finish()
+}
+
+/// Order the positions of `items` by byte-lexicographic string order
+/// with the digest-pair trick shared by every string sort in the crate
+/// ([`StrDict::into_sorted`] here, `sort_dedup_strs` in
+/// `sorted::keysort`): tag each string with its first 8 bytes
+/// (big-endian, zero-padded) and sort the `(digest, index)` pairs.
+/// When every digest is *exact* — the string fits the prefix **and**
+/// has no trailing NUL (zero padding would make `"abc"` and `"abc\0"`
+/// digest-equal) — the sort is pure `u64` compares; otherwise digest
+/// ties fall back to a full compare. Returns the sorted pairs plus the
+/// exactness flag (exact digests ⇒ digest equality *is* string
+/// equality, which the dedup in `sorted::keysort` exploits). Keeping
+/// this in one place keeps the exactness invariant from drifting
+/// between copies.
+pub(crate) fn digest_sort_strs<S: AsRef<str>>(items: &[S]) -> (Vec<(u64, u32)>, bool) {
+    let mut tagged: Vec<(u64, u32)> = Vec::with_capacity(items.len());
+    let mut all_exact = true;
+    for (i, s) in items.iter().enumerate() {
+        let b = s.as_ref().as_bytes();
+        let mut p = [0u8; 8];
+        let m = b.len().min(8);
+        p[..m].copy_from_slice(&b[..m]);
+        all_exact &= b.len() <= 8 && b.last() != Some(&0);
+        tagged.push((u64::from_be_bytes(p), i as u32));
+    }
+    if all_exact {
+        tagged.sort_unstable();
+    } else {
+        tagged.sort_unstable_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then_with(|| items[a.1 as usize].as_ref().cmp(items[b.1 as usize].as_ref()))
+        });
+    }
+    (tagged, all_exact)
+}
+
+/// A dense dictionary over any hashable key: first-appearance order
+/// `u32` ids with clone-once interning — the single home for the
+/// intern machinery behind both [`StrDict`] (shared-bytes scan keys)
+/// and [`crate::sorted::KeyDict`] (mixed numeric/string [`Key`]s in
+/// the constructor).
+///
+/// Interning an already-known key is a hash probe; interning a new one
+/// clones the key **exactly once** — `keys` is the sole owner, and the
+/// probe index maps the key's 64-bit Fx hash to its id (the
+/// vanishingly rare genuine hash collisions overflow into a linear
+/// list, so correctness never rests on hash uniqueness). A one-entry
+/// "last id" cache makes runs of equal keys (sorted scan streams group
+/// cells by row) skip the hash entirely.
+///
+/// [`Key`]: crate::assoc::Key
+pub struct Dict<K> {
+    keys: Vec<K>,
+    /// Key hash → id of the first key interned with that hash.
+    map: HashMap<u64, u32, FxBuild>,
+    /// Ids whose hash collided with an earlier, different key.
+    overflow: Vec<u32>,
+    last: u32,
+}
+
+impl<K> Default for Dict<K> {
+    fn default() -> Self {
+        Dict::new()
+    }
+}
+
+impl<K> Dict<K> {
+    /// Empty dictionary.
+    pub fn new() -> Dict<K> {
+        Dict { keys: Vec::new(), map: HashMap::default(), overflow: Vec::new(), last: u32::MAX }
+    }
+
+    /// Empty dictionary expecting about `n` distinct keys.
+    pub fn with_capacity(n: usize) -> Dict<K> {
+        Dict {
+            keys: Vec::with_capacity(n),
+            map: HashMap::with_capacity_and_hasher(n, FxBuild::default()),
+            overflow: Vec::new(),
+            last: u32::MAX,
+        }
+    }
+
+    /// Number of distinct keys interned.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when nothing has been interned.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// The key for `id` (ids are dense: `0..len`).
+    pub fn get(&self, id: u32) -> &K {
+        &self.keys[id as usize]
+    }
+
+    /// The distinct keys in first-appearance order (the id space).
+    pub fn keys(&self) -> &[K] {
+        &self.keys
+    }
+
+    /// Consume the dictionary into its distinct keys (first-appearance
+    /// order).
+    pub fn into_keys(self) -> Vec<K> {
+        self.keys
+    }
+
+    /// The shared probe: find the id whose key satisfies `eq` under
+    /// hash `h`, or assign the next dense id to `make()`.
+    fn lookup_or_insert(
+        &mut self,
+        h: u64,
+        eq: impl Fn(&K) -> bool,
+        make: impl FnOnce() -> K,
+    ) -> u32 {
+        match self.map.entry(h) {
+            Entry::Vacant(v) => {
+                let id = self.keys.len() as u32;
+                self.keys.push(make());
+                v.insert(id);
+                id
+            }
+            Entry::Occupied(o) => {
+                let id0 = *o.get();
+                if eq(&self.keys[id0 as usize]) {
+                    return id0;
+                }
+                // A genuine 64-bit hash collision: keep correctness
+                // with a linear overflow list (its length is the
+                // number of collisions ever seen — effectively zero).
+                if let Some(&id) =
+                    self.overflow.iter().find(|&&id| eq(&self.keys[id as usize]))
+                {
+                    return id;
+                }
+                let id = self.keys.len() as u32;
+                self.keys.push(make());
+                self.overflow.push(id);
+                id
+            }
+        }
+    }
+}
+
+impl<K: Hash + Eq + Clone> Dict<K> {
+    /// Intern a key: its dense id, assigned (and the key cloned, once)
+    /// on first sight.
+    pub fn intern(&mut self, k: &K) -> u32 {
+        if let Some(prev) = self.keys.get(self.last as usize) {
+            if prev == k {
+                return self.last;
+            }
+        }
+        let id = self.lookup_or_insert(fx_hash(k), |key| key == k, || k.clone());
+        self.last = id;
+        id
+    }
+}
+
+/// A dense string dictionary: [`Dict`] over shared-bytes keys, so
+/// interning never copies string bytes (new keys are pointer clones),
+/// plus `&str` lookups and an order-preserving finalize.
+pub type StrDict = Dict<SharedStr>;
+
+impl Dict<SharedStr> {
+    /// Intern by `&str` — allocates a [`SharedStr`] only for keys not
+    /// seen before (`&str` and `SharedStr` hash identically, so both
+    /// intern forms address one probe index).
+    pub fn intern_str(&mut self, s: &str) -> u32 {
+        if let Some(prev) = self.keys.get(self.last as usize) {
+            if prev == s {
+                return self.last;
+            }
+        }
+        let id = self.lookup_or_insert(fx_hash(s), |key| key == s, || SharedStr::from(s));
+        self.last = id;
+        id
+    }
+
+    /// Order-preserving finalize: `(sorted_keys, rank)` where
+    /// `sorted_keys` is the canonical sorted-unique key list and
+    /// `rank[id]` is the position of key `id` in it. When keys were
+    /// interned in sorted order (a sorted scan stream's row keys), the
+    /// sort is skipped entirely; otherwise the shared digest-pair sort
+    /// orders the (distinct) keys.
+    pub fn into_sorted(self) -> (Vec<SharedStr>, Vec<u32>) {
+        let n = self.keys.len();
+        if self.keys.windows(2).all(|w| w[0] < w[1]) {
+            return (self.keys, (0..n as u32).collect());
+        }
+        let (tagged, _) = digest_sort_strs(&self.keys);
+        let mut rank = vec![0u32; n];
+        let mut sorted = Vec::with_capacity(n);
+        for (pos, &(_, id)) in tagged.iter().enumerate() {
+            rank[id as usize] = pos as u32;
+            sorted.push(self.keys[id as usize].clone());
+        }
+        (sorted, rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_str_basics() {
+        let a = SharedStr::from("hello");
+        let b = a.clone();
+        assert!(a.ptr_eq(&b));
+        assert_eq!(a, b);
+        assert_eq!(a, "hello");
+        assert_eq!("hello", a);
+        assert_eq!(a, "hello".to_string());
+        assert_eq!(a.as_str(), "hello");
+        assert_eq!(a.len(), 5); // str methods via Deref
+        assert!(a < SharedStr::from("world"));
+        let c = SharedStr::from("hello".to_string());
+        assert_eq!(a, c);
+        assert!(!a.ptr_eq(&c));
+        assert_eq!(format!("{a}"), "hello");
+        assert_eq!(format!("{a:?}"), "\"hello\"");
+    }
+
+    #[test]
+    fn shared_str_hash_matches_str_for_borrow() {
+        // Borrow<str> contract: hash(SharedStr) == hash(its str).
+        use std::hash::{BuildHasher, Hash, Hasher};
+        let bh = std::collections::hash_map::RandomState::new();
+        let shared = SharedStr::from("abc");
+        let mut h1 = bh.build_hasher();
+        shared.hash(&mut h1);
+        let mut h2 = bh.build_hasher();
+        "abc".hash(&mut h2);
+        assert_eq!(h1.finish(), h2.finish());
+        // And the practical consequence: &str lookups in hashed maps.
+        let mut m: HashMap<SharedStr, i32> = HashMap::new();
+        m.insert(SharedStr::from("k"), 7);
+        assert_eq!(m.get("k"), Some(&7));
+    }
+
+    #[test]
+    fn fx_hasher_distinguishes_lengths_and_content() {
+        let h = |b: &[u8]| {
+            let mut s = FxHasher64::default();
+            s.write(b);
+            s.finish()
+        };
+        assert_ne!(h(b"a"), h(b"b"));
+        assert_ne!(h(b"a"), h(b"a\0"));
+        assert_ne!(h(b"12345678"), h(b"123456789"));
+        assert_eq!(h(b"same-bytes"), h(b"same-bytes"));
+    }
+
+    #[test]
+    fn dict_assigns_dense_first_appearance_ids() {
+        let mut d = StrDict::new();
+        let b = SharedStr::from("b");
+        let a = SharedStr::from("a");
+        assert_eq!(d.intern(&b), 0);
+        assert_eq!(d.intern(&a), 1);
+        assert_eq!(d.intern(&b), 0);
+        assert_eq!(d.intern_str("a"), 1);
+        assert_eq!(d.intern_str("c"), 2);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.get(0), &b);
+        // Interning shares bytes with the first occurrence.
+        assert!(d.get(0).ptr_eq(&b));
+    }
+
+    #[test]
+    fn dict_run_cache_hits_equal_runs() {
+        let mut d = StrDict::new();
+        let r = SharedStr::from("row1");
+        for _ in 0..5 {
+            assert_eq!(d.intern(&r), 0);
+        }
+        assert_eq!(d.intern_str("row2"), 1);
+        assert_eq!(d.intern_str("row2"), 1);
+        assert_eq!(d.intern(&r), 0);
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn into_sorted_is_order_preserving() {
+        let mut d = StrDict::new();
+        for s in ["m", "a", "zz", "a", "k", "m"] {
+            d.intern_str(s);
+        }
+        // ids: m=0, a=1, zz=2, k=3
+        let (sorted, rank) = d.into_sorted();
+        let got: Vec<&str> = sorted.iter().map(|s| s.as_str()).collect();
+        assert_eq!(got, vec!["a", "k", "m", "zz"]);
+        assert_eq!(rank, vec![2, 0, 3, 1]);
+        for (id, &r) in rank.iter().enumerate() {
+            assert_eq!(sorted[r as usize].as_str(), ["m", "a", "zz", "k"][id]);
+        }
+    }
+
+    #[test]
+    fn into_sorted_skips_sort_when_presorted() {
+        let mut d = StrDict::new();
+        for s in ["a", "b", "c"] {
+            d.intern_str(s);
+        }
+        let (sorted, rank) = d.into_sorted();
+        assert_eq!(rank, vec![0, 1, 2]);
+        let got: Vec<&str> = sorted.iter().map(|s| s.as_str()).collect();
+        assert_eq!(got, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn into_sorted_resolves_long_prefix_ties() {
+        let mut d = StrDict::new();
+        for s in ["aaaaaaaaZZ", "aaaaaaaaAA", "aaaaaaaa"] {
+            d.intern_str(s);
+        }
+        let (sorted, rank) = d.into_sorted();
+        let got: Vec<&str> = sorted.iter().map(|s| s.as_str()).collect();
+        assert_eq!(got, vec!["aaaaaaaa", "aaaaaaaaAA", "aaaaaaaaZZ"]);
+        assert_eq!(rank, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn into_sorted_keeps_trailing_nul_keys_distinct() {
+        // "abc" vs "abc\0": equal zero-padded digests must fall back to
+        // the full compare, not id order.
+        let mut d = StrDict::new();
+        for s in ["abc\0", "abc"] {
+            d.intern_str(s);
+        }
+        let (sorted, rank) = d.into_sorted();
+        let got: Vec<&str> = sorted.iter().map(|s| s.as_str()).collect();
+        assert_eq!(got, vec!["abc", "abc\0"]);
+        assert_eq!(rank, vec![1, 0]);
+    }
+
+    #[test]
+    fn empty_dict() {
+        let d = StrDict::new();
+        assert!(d.is_empty());
+        let (sorted, rank) = d.into_sorted();
+        assert!(sorted.is_empty());
+        assert!(rank.is_empty());
+    }
+}

@@ -16,9 +16,13 @@
 //! * [`human`] — human-readable formatting for counts, bytes, seconds.
 //! * [`json`] — minimal JSON emission for machine-readable artifacts
 //!   (the benchmark trajectory files).
+//! * [`intern`] — [`intern::SharedStr`] shared-bytes strings and the
+//!   [`intern::StrDict`] dense string dictionary (the PR 4 key
+//!   encoding), plus the fast Fx-style hasher they ride on.
 
 pub mod args;
 pub mod human;
+pub mod intern;
 pub mod json;
 pub mod parallel;
 pub mod pool;
@@ -27,6 +31,7 @@ pub mod prop;
 pub mod timer;
 
 pub use args::Args;
+pub use intern::{SharedStr, StrDict};
 pub use json::Json;
 pub use parallel::Parallelism;
 pub use pool::ThreadPool;

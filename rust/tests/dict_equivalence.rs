@@ -1,0 +1,353 @@
+//! Equivalence suite for the dictionary-encoded key space (PR 4).
+//!
+//! Contract under test: encoding keys through a dictionary (intern to
+//! dense `u32` ids, sort distinct keys, resolve ranks) is **byte-
+//! identical** to the PR 1–3 digest-sort path — for the constructor
+//! over mixed numeric/string key spaces and every aggregator, for the
+//! scan→assoc rebuild across tablet splits and offline tablets, and for
+//! the Graphulo `TableMult` ingest — at every thread count. Both paths
+//! compute the same canonical form, so any divergence is a bug in one
+//! of them.
+
+use d4m::assoc::{Aggregator, Assoc, Key, KeyEncoding, ValsInput};
+use d4m::graphulo;
+use d4m::semiring::{MaxPlus, PlusTimes, Semiring};
+use d4m::sorted::KeyDict;
+use d4m::sparse::{spgemm_par, CooMatrix};
+use d4m::store::{format_num, ScanRange, ScanSpec, Table, TableConfig, TableStore, Triple};
+use d4m::util::prop::check;
+use d4m::util::{Parallelism, SplitMix64};
+
+const THREADS: [usize; 3] = [2, 4, 7];
+
+/// Bit-exact associative-array comparison: attributes, structure, and
+/// raw value bits (catches `-0.0` drift that `PartialEq` would hide).
+fn assert_identical(a: &Assoc, b: &Assoc, ctx: &str) {
+    assert_eq!(a.row_keys(), b.row_keys(), "{ctx}: row keys");
+    assert_eq!(a.col_keys(), b.col_keys(), "{ctx}: col keys");
+    assert_eq!(a.values(), b.values(), "{ctx}: value pool");
+    assert_eq!(a.adj().indptr(), b.adj().indptr(), "{ctx}: indptr");
+    assert_eq!(a.adj().indices(), b.adj().indices(), "{ctx}: indices");
+    let ab: Vec<u64> = a.adj().values().iter().map(|v| v.to_bits()).collect();
+    let bb: Vec<u64> = b.adj().values().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ab, bb, "{ctx}: adj value bits");
+}
+
+fn random_mixed_keys(rng: &mut SplitMix64, len: usize) -> Vec<Key> {
+    (0..len)
+        .map(|_| match rng.below(5) {
+            0 => Key::str(rng.below(30).to_string()),
+            1 => Key::num(rng.range_i64(-30, 30) as f64),
+            2 => {
+                // Long keys with shared prefixes force digest tie-breaks.
+                let mut s = "sharedprefix".to_string();
+                s.push_str(&rng.below(20).to_string());
+                Key::str(s)
+            }
+            3 => Key::num(rng.f64() * 8.0 - 4.0),
+            _ => Key::str(format!("k{:03}", rng.below(40))),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_dict_constructor_matches_sort_encoding() {
+    // Every aggregator, numeric and string values, mixed key spaces,
+    // serial + parallel: Dict and Sort encodings must agree byte for
+    // byte (both compute the canonical sorted-unique key form).
+    check("ctor Dict == Sort encoding", 30, |g| {
+        let len = 1 + g.rng().below_usize(1600);
+        let rows = random_mixed_keys(g.rng(), len);
+        let cols = random_mixed_keys(g.rng(), len);
+        let numeric = g.rng().chance(0.5);
+        let (vals, aggs): (ValsInput, Vec<Aggregator>) = if numeric {
+            (
+                ValsInput::Num((0..len).map(|_| g.rng().range_i64(-9, 9) as f64).collect()),
+                vec![
+                    Aggregator::Min,
+                    Aggregator::Max,
+                    Aggregator::Sum,
+                    Aggregator::Prod,
+                    Aggregator::First,
+                    Aggregator::Last,
+                ],
+            )
+        } else {
+            (
+                ValsInput::Str((0..len).map(|_| g.rng().ascii_lower(6)).collect()),
+                vec![
+                    Aggregator::Min,
+                    Aggregator::Max,
+                    Aggregator::First,
+                    Aggregator::Last,
+                    Aggregator::Concat(";".into()),
+                ],
+            )
+        };
+        for agg in aggs {
+            let sort = Assoc::try_new_with(
+                rows.clone(),
+                cols.clone(),
+                vals.clone(),
+                agg.clone(),
+                Parallelism::serial(),
+                KeyEncoding::Sort,
+            )
+            .unwrap();
+            let dict = Assoc::try_new_with(
+                rows.clone(),
+                cols.clone(),
+                vals.clone(),
+                agg.clone(),
+                Parallelism::serial(),
+                KeyEncoding::Dict,
+            )
+            .unwrap();
+            assert_identical(&sort, &dict, &format!("serial {agg:?}"));
+            for t in THREADS {
+                let par = Parallelism::with_threads(t);
+                let dict_par = Assoc::try_new_with(
+                    rows.clone(),
+                    cols.clone(),
+                    vals.clone(),
+                    agg.clone(),
+                    par,
+                    KeyEncoding::Dict,
+                )
+                .unwrap();
+                assert_identical(&sort, &dict_par, &format!("t={t} {agg:?}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn keydict_order_preservation_against_full_sort() {
+    // KeyDict's finalize must rank ids exactly as a full sort of the
+    // decoded keys would — including -0.0/0.0 merging and numbers-
+    // before-strings ordering.
+    let mut rng = SplitMix64::new(0xD1C7);
+    for round in 0..50 {
+        let keys = random_mixed_keys(&mut rng, 1 + (round * 7) % 300);
+        let mut dict = KeyDict::new();
+        let ids: Vec<u32> = keys.iter().map(|k| dict.intern(k)).collect();
+        // Decode through the dictionary: bit-exact round trip.
+        for (k, &id) in keys.iter().zip(&ids) {
+            assert_eq!(dict.get(id), k, "round {round}");
+        }
+        let (sorted, rank) = dict.into_sorted();
+        assert!(sorted.windows(2).all(|w| w[0] < w[1]), "round {round}: sorted unique");
+        // Every input position resolves to its key's sorted position.
+        let expect = d4m::sorted::sort_dedup_keys(&keys);
+        assert_eq!(sorted, expect.0, "round {round}: unique keys");
+        for (p, &id) in ids.iter().enumerate() {
+            assert_eq!(rank[id as usize], expect.1[p], "round {round} pos {p}");
+        }
+    }
+}
+
+/// Random store table with real tablet fan-out: numeric-looking string
+/// keys (which must stay *strings* — "10" < "2" lexically — through any
+/// encoding), numeric and non-numeric values, overwrites.
+fn random_table(rng: &mut SplitMix64, cells: usize, numeric_vals: bool) -> Table {
+    let table = Table::new("t", TableConfig { split_threshold: 512, write_latency_us: 0 });
+    let triples: Vec<Triple> = (0..cells)
+        .map(|_| {
+            let val = if numeric_vals {
+                format!("{}", rng.range_i64(-50, 100))
+            } else {
+                format!("v{}", rng.below(40))
+            };
+            Triple::new(
+                format!("{}", rng.below(90)), // numeric-looking string rows
+                format!("c{:02}", rng.below(24)),
+                val,
+            )
+        })
+        .collect();
+    for chunk in triples.chunks(16) {
+        table.write_batch(chunk.to_vec()).unwrap();
+    }
+    table
+}
+
+/// The PR 3 scan→assoc path, verbatim: materialize per-cell `Key`s and
+/// digest-sort them (`KeyEncoding::Sort`), `Last` aggregation.
+/// **Frozen snapshot** — `benches/ablations.rs` carries its twin
+/// (`scan_to_assoc_string_path`); change both together or not at all.
+fn triples_to_assoc_string_path(triples: &[Triple], par: Parallelism) -> Assoc {
+    let rows: Vec<Key> = triples.iter().map(|t| Key::str(t.row.as_str())).collect();
+    let cols: Vec<Key> = triples.iter().map(|t| Key::str(t.col.as_str())).collect();
+    let numeric: Option<Vec<f64>> = triples.iter().map(|t| t.val.parse::<f64>().ok()).collect();
+    let vals = match numeric {
+        Some(nums) => ValsInput::Num(nums),
+        None => ValsInput::Str(triples.iter().map(|t| t.val.to_string()).collect()),
+    };
+    Assoc::try_new_with(rows, cols, vals, Aggregator::Last, par, KeyEncoding::Sort)
+        .expect("scan triples are consistent")
+}
+
+#[test]
+fn prop_scan_to_assoc_dict_matches_string_path() {
+    check("scan→assoc dict == string path", 12, |g| {
+        let numeric = g.rng().chance(0.5);
+        let table = random_table(g.rng(), 300 + g.rng().below_usize(400), numeric);
+        assert!(table.tablet_count() > 2, "need real tablet fan-out");
+        // Offline flags gate writes, not reads — scans must not care.
+        table.set_tablet_offline(0, true);
+        let expect =
+            triples_to_assoc_string_path(&table.scan(ScanRange::all()), Parallelism::serial());
+        // Serial streaming (dict path, no Vec<Triple>) and parallel
+        // fan-out at every thread count.
+        assert_identical(
+            &table.scan_to_assoc_par(ScanRange::all(), Parallelism::serial()),
+            &expect,
+            "serial stream",
+        );
+        for t in THREADS {
+            assert_identical(
+                &table.scan_to_assoc_par(ScanRange::all(), Parallelism::with_threads(t)),
+                &expect,
+                &format!("t={t}"),
+            );
+        }
+        // A filtered, windowed stacked scan takes the same dict path.
+        let spec = ScanSpec::over(ScanRange::all().with_cols("c05", "c20"));
+        let filtered: Vec<Triple> = table.scan_spec(&spec);
+        let expect_f = triples_to_assoc_string_path(&filtered, Parallelism::serial());
+        for t in [1usize, 4] {
+            assert_identical(
+                &table.scan_spec_to_assoc(&spec, Parallelism::with_threads(t)),
+                &expect_f,
+                &format!("filtered t={t}"),
+            );
+        }
+    });
+}
+
+/// The PR 3 TableMult ingestion, verbatim: owned strings, per-cell
+/// binary search into the sorted distinct column list, then the same
+/// SpGEMM — the string baseline the dict-encoded kernel must match.
+/// **Frozen snapshot** — `benches/ablations.rs` carries its twin
+/// (`table_mult_string_path`); change both together or not at all.
+fn table_mult_string_baseline(a: &Table, b: &Table, s: &dyn Semiring) -> Vec<Triple> {
+    struct Side {
+        rows: Vec<String>,
+        row_of: Vec<u32>,
+        cols: Vec<String>,
+        vals: Vec<f64>,
+    }
+    let ingest = |t: &Table| {
+        let mut side =
+            Side { rows: Vec::new(), row_of: Vec::new(), cols: Vec::new(), vals: Vec::new() };
+        for tr in t.scan(ScanRange::all()) {
+            if side.rows.last().map(String::as_str) != Some(tr.row.as_str()) {
+                side.rows.push(tr.row.to_string());
+            }
+            side.row_of.push((side.rows.len() - 1) as u32);
+            side.cols.push(tr.col.to_string());
+            side.vals.push(tr.val.parse().unwrap_or(0.0));
+        }
+        side
+    };
+    let (sa, sb) = (ingest(a), ingest(b));
+    if sa.rows.is_empty() && sb.rows.is_empty() {
+        return Vec::new();
+    }
+    let mut merged: Vec<String> = sa.rows.iter().chain(&sb.rows).cloned().collect();
+    merged.sort_unstable();
+    merged.dedup();
+    let to_csr = |side: &Side| {
+        let mut distinct: Vec<String> = side.cols.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let rows: Vec<usize> = side
+            .row_of
+            .iter()
+            .map(|&own| {
+                merged.binary_search(&side.rows[own as usize]).expect("row in merged set")
+            })
+            .collect();
+        let cols: Vec<usize> = side
+            .cols
+            .iter()
+            .map(|c| distinct.binary_search(c).expect("col in distinct set"))
+            .collect();
+        let m = CooMatrix::from_triples_aggregate(
+            merged.len(),
+            distinct.len(),
+            &rows,
+            &cols,
+            &side.vals,
+            0.0,
+            |x, _| x,
+        )
+        .expect("scan triples are unique per (row, col)")
+        .into_csr();
+        (m, distinct)
+    };
+    let (ma, cols_a) = to_csr(&sa);
+    let (mb, cols_b) = to_csr(&sb);
+    let at = ma.transpose();
+    let c = spgemm_par(&at, &mb, s, Parallelism::serial()).expect("shared row dimension");
+    let mut out = Vec::new();
+    for (i, c1) in cols_a.iter().enumerate() {
+        let (cj, cv) = c.row(i);
+        for (j, v) in cj.iter().zip(cv) {
+            if *v != s.zero() {
+                out.push(Triple::new(c1.as_str(), cols_b[*j as usize].as_str(), format_num(*v)));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[test]
+fn prop_table_mult_dict_matches_string_baseline() {
+    check("TableMult dict == string baseline", 8, |g| {
+        let store = TableStore::new(TableConfig { split_threshold: 384, write_latency_us: 0 });
+        let n = 120 + g.rng().below_usize(120);
+        let rows: Vec<String> = (0..n).map(|_| format!("r{:02}", g.rng().below(24))).collect();
+        let cols: Vec<String> = (0..n).map(|_| format!("c{:02}", g.rng().below(18))).collect();
+        let vals: Vec<f64> = (0..n).map(|_| g.rng().range_i64(1, 9) as f64).collect();
+        let a = Assoc::try_new(
+            d4m::assoc::keys_from(&rows),
+            d4m::assoc::keys_from(&cols),
+            ValsInput::Num(vals),
+            Aggregator::Last,
+        )
+        .unwrap();
+        let (t, _) = store.ingest_assoc("edges", &a);
+        assert!(t.tablet_count() > 1, "need split tables");
+        for s in [&PlusTimes as &dyn Semiring, &MaxPlus] {
+            let expect = table_mult_string_baseline(&t, &t, s);
+            assert!(!expect.is_empty());
+            for threads in [1usize, 2, 7] {
+                let out = store.create_table(&format!("out_{}_{threads}", s.name()));
+                let cells = graphulo::table_mult_par(
+                    &t,
+                    &t,
+                    &out,
+                    s,
+                    Parallelism::with_threads(threads),
+                );
+                let got = out.scan(ScanRange::all());
+                assert_eq!(got, expect, "{} t={threads}", s.name());
+                assert_eq!(cells, expect.len(), "{} t={threads}", s.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn shared_cells_survive_table_mutation() {
+    // A scanned triple owns its bytes (shared, not borrowed): deleting
+    // the cell from the table must not invalidate the scanned copy.
+    let table = Table::new("t", TableConfig::default());
+    table.write_batch(vec![Triple::new("r", "c", "hello")]).unwrap();
+    let scanned = table.scan(ScanRange::all());
+    assert!(table.delete("r", "c"));
+    assert_eq!(scanned[0].val, "hello");
+    assert_eq!(scanned[0].row, "r");
+}

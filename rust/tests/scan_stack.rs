@@ -7,7 +7,7 @@
 //! pipeline: materialize the row range, then filter, then reduce.
 
 use d4m::store::{
-    format_num, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, Table,
+    format_num, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, SharedStr, Table,
     TableConfig, Triple,
 };
 use d4m::util::prop::check;
@@ -37,8 +37,8 @@ fn naive(table: &Table, spec: &ScanSpec) -> Vec<Triple> {
         return cells;
     };
     let mut out = Vec::new();
-    let mut cur: Option<(String, usize, f64)> = None;
-    let emit = |row: String, count: usize, acc: f64, out: &mut Vec<Triple>| {
+    let mut cur: Option<(SharedStr, usize, f64)> = None;
+    let emit = |row: SharedStr, count: usize, acc: f64, out: &mut Vec<Triple>| {
         let (col, val) = match reduce {
             RowReduce::Count { out_col } => (out_col.clone(), count.to_string()),
             RowReduce::Sum { out_col }
@@ -130,6 +130,11 @@ fn random_spec(rng: &mut SplitMix64) -> ScanSpec {
             2 => RowReduce::Min { out_col: "lo".into() },
             _ => RowReduce::Max { out_col: "hi".into() },
         });
+    }
+    if rng.chance(0.5) {
+        // Batch hints move lock/copy granularity only — results must
+        // stay byte-identical (including hints past the clamp range).
+        spec = spec.batched(1 + rng.below_usize(4000));
     }
     spec
 }

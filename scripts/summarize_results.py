@@ -79,8 +79,40 @@ def bench_json(path: str) -> str:
     return "\n".join(out)
 
 
+# Acceptance-number ops: (op, human label, threshold asserted in-bench).
+ACCEPTANCE = {
+    "hypersparse-matmul-adaptive": ("adaptive vs dense hypersparse SpGEMM", 1.3),
+    "tablemult-masked": ("masked vs unmasked TableMult", 1.5),
+    "e2e-dict": ("dict-encoded vs string ctor+TableMult (end-to-end)", 1.3),
+}
+
+
+def highlights(paths: list) -> str:
+    """One line per acceptance-relevant record across the bench JSONs."""
+    out = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if doc.get("schema") != "d4m-bench-v1":
+            continue
+        for r in doc.get("records", []):
+            if r.get("op") in ACCEPTANCE:
+                label, floor = ACCEPTANCE[r["op"]]
+                mark = "ok" if r.get("speedup", 0.0) >= floor else "BELOW FLOOR"
+                out.append(
+                    f"- {label}: {r['speedup']:.2f}x "
+                    f"(floor {floor}x, threads={r.get('threads')}, "
+                    f"scale={r.get('scale')}) [{mark}]"
+                )
+    return "\n".join(out)
+
+
 def main() -> None:
     d = sys.argv[1] if len(sys.argv) > 1 else "results"
+    json_paths = []
     for f in sorted(os.listdir(d)):
         path = os.path.join(d, f)
         if f.endswith(".csv"):
@@ -91,6 +123,12 @@ def main() -> None:
             print(f"### {f}\n")
             print(bench_json(path))
             print()
+            json_paths.append(path)
+    hl = highlights(json_paths)
+    if hl:
+        print("### acceptance highlights\n")
+        print(hl)
+        print()
 
 
 if __name__ == "__main__":
