@@ -8,10 +8,11 @@
 //! 2. **Ingest** it through the sharded, backpressured pipeline into
 //!    the Accumulo-sim table store (adjacency + transpose tables),
 //!    reporting throughput, stalls, shard balance and tablet splits.
-//! 3. **Query** with Graphulo server-side kernels (degree tables, BFS),
-//!    the server-side iterator stack (filtered streaming scans, combiner
-//!    pushdown, masked TableMult), and scan-to-Assoc + the
-//!    associative-array algebra (facets, AᵀA).
+//! 3. **Query** with Graphulo server-side kernels (degree tables,
+//!    one-scan-per-hop BFS, seeded jaccard), the server-side iterator
+//!    stack (filtered streaming scans, multi-range BatchScanner-style
+//!    scans, combiner pushdown, masked TableMult), and scan-to-Assoc +
+//!    the associative-array algebra (facets, AᵀA).
 //! 4. **Accelerate**: run the correlation matmul on the PJRT dense-
 //!    block path (AOT Pallas kernel) and cross-check it against host
 //!    SpGEMM — proving artifacts, runtime and algebra compose.
@@ -106,8 +107,21 @@ fn main() {
     }
     println!("hottest url: {} with {} distinct clients", best.0, best.1);
 
-    let frontier = graphulo::bfs(&hits, &[best.0.replace("/page", "client").clone()], 1);
-    println!("bfs sanity: {} frontiers from a client seed", frontier.len());
+    // BFS hops are one stacked multi-range scan each (the BatchScanner
+    // idiom): the frontier becomes a coalesced range set the tablet
+    // walk hops beneath the block copy. Hop 0 probes the seeds against
+    // the table, so the bogus seed is dropped instead of reported as
+    // reached.
+    let seeds: Vec<String> =
+        vec!["client00000".into(), "client00001".into(), "no-such-client".into()];
+    let frontier = graphulo::bfs(&hits, &seeds, 1);
+    println!(
+        "bfs: {}/{} seeds exist in the table; 1-hop frontier reaches {} urls (one stacked \
+         scan per hop)",
+        frontier[0].len(),
+        seeds.len(),
+        frontier.get(1).map_or(0, |f| f.len()),
+    );
 
     // ---- server-side iterator stack: filtered streaming scans -----------
     // A filtered scan runs *inside* the scan stack (Accumulo-style
@@ -125,6 +139,35 @@ fn main() {
     }
     println!(
         "\nstreaming filtered scan: {kept} hits on /page00?? urls in {} (no materialization)",
+        human::seconds(sw.elapsed_s())
+    );
+    // A multi-range stacked scan serves two disjoint url bands in one
+    // pass over the transpose table (`ScanSpec::ranges`): the tablet
+    // walk hops the gap between the bands beneath the block copy, so
+    // the out-of-band urls are never copied.
+    let sw = Stopwatch::start();
+    let spec = ScanSpec::ranges([
+        ScanRange::rows("/page000", "/page001"),
+        ScanRange::rows("/page020", "/page021"),
+    ]);
+    let mut band_hits = 0usize;
+    for t in hits_t.scan_stream(spec) {
+        debug_assert!(t.row.starts_with("/page000") || t.row.starts_with("/page020"));
+        band_hits += 1;
+    }
+    println!(
+        "multi-range scan: {band_hits} hits across two url bands in {} (one stacked pass)",
+        human::seconds(sw.elapsed_s())
+    );
+    // Seeded jaccard rides the same multi-range machinery: url↔url
+    // co-visitor similarity restricted to a seed set of urls.
+    let sw = Stopwatch::start();
+    let url_seeds: Vec<String> = (0..10).map(|i| format!("/page{i:04}")).collect();
+    let j = graphulo::jaccard_seeded(&hits_t, &url_seeds).expect("consistent jaccard triples");
+    println!(
+        "seeded jaccard: {} similar url pairs among {} seed urls in {}",
+        j.nnz(),
+        url_seeds.len(),
         human::seconds(sw.elapsed_s())
     );
     // A combiner stage collapses each row server-side: per-client hit

@@ -35,22 +35,33 @@
 //!   selective streamed scan must allocate *nothing per rejected cell*
 //!   (asserted against the allocation counter).
 //!
+//! * **BFS frontier strategy (PR 5)** — one stacked multi-range scan
+//!   per hop (`graphulo::bfs` handing the frontier to the stack as a
+//!   coalesced `ScanSpec::ranges` set) vs the frozen pre-PR 5 baseline
+//!   issuing one absolute seek per frontier node. Frontiers are
+//!   identical by contract; at a 1 000-node frontier the one-scan path
+//!   must be **≥ 1.4× faster** (asserted — the PR 5 acceptance
+//!   number, enforced on every CI bench smoke).
+//!
 //! Besides the CSV, the run writes the machine-readable perf
 //! trajectories `BENCH_PR2.json` (thread sweep + accumulator policies,
 //! schema-compatible with the PR 2 capture), `BENCH_PR3.json`
 //! (accumulator-policy row counters as extras, masked-vs-unmasked
-//! TableMult, streaming-vs-materializing scans) and `BENCH_PR4.json`
-//! (string-vs-dict constructor + TableMult, allocation counters) for
+//! TableMult, streaming-vs-materializing scans), `BENCH_PR4.json`
+//! (string-vs-dict constructor + TableMult, allocation counters) and
+//! `BENCH_PR5.json` (per-seek vs one-scan BFS frontiers) for
 //! `scripts/summarize_results.py` and the CI artifacts.
 //!
 //! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
 //! [--threads-n N] [--hyper-scale S] [--mask-scale S]
-//! [--stream-scale S] [--dict-scale S]` (`--threads-n` sets the scale
-//! of the thread sweep; default 10, the acceptance workload.
-//! `--hyper-scale` sets the hypersparse matmul to 2^S rows; default
-//! 14. `--mask-scale` / `--stream-scale` / `--dict-scale` size the
-//! masked-TableMult, scan, and dictionary sections to 2^S triples;
-//! defaults 12, 13 and 13).
+//! [--stream-scale S] [--dict-scale S] [--bfs-scale S]` (`--threads-n`
+//! sets the scale of the thread sweep; default 10, the acceptance
+//! workload. `--hyper-scale` sets the hypersparse matmul to 2^S rows;
+//! default 14. `--mask-scale` / `--stream-scale` / `--dict-scale` size
+//! the masked-TableMult, scan, and dictionary sections to 2^S triples;
+//! defaults 12, 13 and 13. `--bfs-scale` sizes the BFS graph to 2^S
+//! nodes (degree 4); default 13 — the seed frontier stays pinned at
+//! 1 000 nodes, the acceptance shape).
 
 use d4m::assoc::{keys_from, Aggregator, Assoc, Key, KeyEncoding, ValsInput};
 use d4m::bench::{BenchRecord, FigureHarness, Workload};
@@ -58,11 +69,12 @@ use d4m::graphulo;
 use d4m::semiring::{PlusTimes, Semiring};
 use d4m::sparse::{spgemm, spgemm_par, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix};
 use d4m::store::{
-    format_num, BatchWriter, CellFilter, KeyMatch, ScanRange, ScanSpec, Table, TableConfig,
-    TableStore, Triple, WriterConfig,
+    format_num, BatchWriter, CellFilter, KeyMatch, ScanIter, ScanRange, ScanSpec, Table,
+    TableConfig, TableStore, Triple, WriterConfig,
 };
 use d4m::util::{time_op, Args, Parallelism, SplitMix64};
 use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -199,6 +211,42 @@ fn table_mult_string_path(a: &Table, b: &Table, out: &Arc<Table>, s: &dyn Semiri
     }
     w.flush();
     cells
+}
+
+/// The pre-PR 5 BFS, verbatim: one streaming scanner, one absolute
+/// seek + row read per frontier node per hop, small per-probe batch
+/// hint. **Frozen snapshot** — the baseline the one-scan-per-hop BFS
+/// is measured against; its hop-0 behavior (seeds pushed unprobed)
+/// only matches `graphulo::bfs` when every seed has an adjacency row,
+/// which the benchmark workload guarantees.
+fn bfs_per_seek(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> {
+    const BFS_BATCH: usize = 16;
+    let mut frontiers: Vec<BTreeSet<String>> = Vec::with_capacity(hops + 1);
+    let mut visited: BTreeSet<String> = seeds.iter().cloned().collect();
+    frontiers.push(visited.clone());
+    let mut frontier: BTreeSet<String> = visited.clone();
+    let mut stream = adj.scan_stream(ScanSpec::all().batched(BFS_BATCH));
+    for _ in 0..hops {
+        let mut next = BTreeSet::new();
+        for node in &frontier {
+            stream.seek(node, "");
+            while let Some(t) = stream.next_triple() {
+                if t.row != *node {
+                    break;
+                }
+                if !visited.contains(t.col.as_str()) {
+                    next.insert(t.col.to_string());
+                }
+            }
+        }
+        visited.extend(next.iter().cloned());
+        frontiers.push(next.clone());
+        if next.is_empty() {
+            break;
+        }
+        frontier = next;
+    }
+    frontiers
 }
 
 fn main() {
@@ -760,8 +808,88 @@ fn main() {
             ),
     );
 
+    // --- BFS frontier: one stacked multi-range scan vs per-node seeks ---
+    // A degree-4 random digraph (2^bfs-scale nodes; every node has
+    // out-edges, so hop 0 matches the frozen baseline bit-for-bit) and
+    // a 1 000-node seed frontier. The per-seek baseline pays one
+    // absolute seek — two lock acquisitions, a tablet locate, a B-tree
+    // descent, a fresh opening block — per frontier node per hop; the
+    // PR 5 path hands the whole frontier to the stack as one sorted,
+    // coalesced range set and the tablet walk hops the gaps beneath the
+    // block copy. Frontiers are identical by contract; the one-scan
+    // path must be **≥ 1.4× faster** (the PR 5 acceptance number,
+    // asserted below so the CI bench smoke enforces it).
+    let bscale = args.usize_or("bfs-scale", 13);
+    let bn = 1usize << bscale;
+    let frontier_n = 1000usize.min(bn);
+    let bfs_table = Arc::new(Table::new(
+        "bfsgraph",
+        TableConfig { split_threshold: 64 << 10, write_latency_us: 0 },
+    ));
+    {
+        let mut rng = SplitMix64::new(0xBF5_F805);
+        let mut w = BatchWriter::new(Arc::clone(&bfs_table), WriterConfig::default());
+        for i in 0..bn {
+            for _ in 0..4 {
+                w.put(Triple::new(
+                    format!("n{i:06}"),
+                    format!("n{:06}", rng.below_usize(bn)),
+                    "1",
+                ));
+            }
+        }
+        w.flush();
+    }
+    let seeds: Vec<String> =
+        (0..frontier_n).map(|i| format!("n{:06}", i * (bn / frontier_n))).collect();
+    let bfs_hops = 2usize;
+    let mut seek_frontiers = Vec::new();
+    let t_seek = time_op(1, repeats, |_| {
+        seek_frontiers = bfs_per_seek(&bfs_table, &seeds, bfs_hops);
+        seek_frontiers.len()
+    });
+    let mut scan_frontiers = Vec::new();
+    let t_scan = time_op(1, repeats, |_| {
+        scan_frontiers = graphulo::bfs(&bfs_table, &seeds, bfs_hops);
+        scan_frontiers.len()
+    });
+    assert_eq!(
+        seek_frontiers, scan_frontiers,
+        "one-scan BFS must reach exactly the per-seek frontiers"
+    );
+    let reached: usize = scan_frontiers.iter().map(BTreeSet::len).sum();
+    h.record(bscale, "bfs-per-seek", t_seek.clone(), reached);
+    h.record(bscale, "bfs-one-scan", t_scan.clone(), reached);
+    let bfs_speedup =
+        if t_scan.mean_s() > 0.0 { t_seek.mean_s() / t_scan.mean_s() } else { 0.0 };
+    println!(
+        "[ablations] bfs 2^{bscale} nodes, {frontier_n}-seed frontier, {bfs_hops} hops: \
+         per-seek={:.6}s one-scan={:.6}s speedup={bfs_speedup:.2}x ({reached} nodes reached, \
+         {} tablets)",
+        t_seek.mean_s(),
+        t_scan.mean_s(),
+        bfs_table.tablet_count(),
+    );
+    assert!(
+        bfs_speedup >= 1.4,
+        "one-scan BFS speedup {bfs_speedup:.2}x below the 1.4x acceptance threshold"
+    );
+    let records5: Vec<BenchRecord> = vec![
+        BenchRecord::new("bfs-per-seek", bscale, 1, t_seek.mean_s() * 1e9, 1.0)
+            .with_extra("frontier_nodes", frontier_n as f64)
+            .with_extra("hops", bfs_hops as f64)
+            .with_extra("reached_nodes", reached as f64)
+            .with_extra("edge_cells", bfs_table.len() as f64),
+        BenchRecord::new("bfs-one-scan", bscale, 1, t_scan.mean_s() * 1e9, bfs_speedup)
+            .with_extra("frontier_nodes", frontier_n as f64)
+            .with_extra("hops", bfs_hops as f64)
+            .with_extra("reached_nodes", reached as f64)
+            .with_extra("edge_cells", bfs_table.len() as f64),
+    ];
+
     h.write_csv(&out_dir).expect("write CSV");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR2.json", &records).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR3.json", &records3).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR4.json", &records4).expect("write JSON");
+    d4m::bench::write_bench_json(&out_dir, "BENCH_PR5.json", &records5).expect("write JSON");
 }

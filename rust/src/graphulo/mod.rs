@@ -14,11 +14,13 @@
 //! * [`degree_table`] — out/in degree tables (Graphulo's pre-computed
 //!   degree tables used for query planning), produced entirely by a
 //!   server-side combiner stage ([`RowReduce::Count`]).
-//! * [`bfs`] — k-hop breadth-first expansion from a seed set, driven by
-//!   absolute seeks on one streaming scanner (the Accumulo
-//!   `BatchScanner` row-probe idiom).
+//! * [`bfs`] — k-hop breadth-first expansion from a seed set: each hop
+//!   is **one stacked multi-range scan** over the frontier rows (the
+//!   Accumulo `BatchScanner` idiom — the servers hop the range set
+//!   beneath the block copy), not a seek per node.
 //! * [`jaccard`] — neighborhood Jaccard similarity from the adjacency
-//!   table (a standard Graphulo demo kernel).
+//!   table (a standard Graphulo demo kernel); [`jaccard_seeded`] is the
+//!   node-subset variant riding a multi-range scan.
 //!
 //! All kernels pull from the server-side iterator stack
 //! ([`crate::store::scan`]) and write results back via a
@@ -30,22 +32,17 @@
 //! pointer clone), and the CSR builders consume ids — string bytes are
 //! touched once per distinct key instead of once per cell.
 
-use crate::assoc::Assoc;
+use crate::assoc::{Assoc, AssocError};
 use crate::semiring::Semiring;
 use crate::sparse::{spgemm_masked_par, spgemm_par, spgemm_row_masked_par, CooMatrix, CsrMatrix};
 use crate::store::{
-    format_num, BatchWriter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, SharedStr, Table,
-    Triple, WriterConfig, SCAN_BLOCK,
+    format_num, BatchWriter, CellFilter, KeyMatch, RowReduce, ScanRange, ScanSpec, SharedStr,
+    Table, Triple, WriterConfig, SCAN_BLOCK,
 };
 use crate::util::intern::StrDict;
 use crate::util::Parallelism;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
-
-/// Per-stream batch hint for the point-lookup-heavy BFS row probes: a
-/// hop reads a handful of cells per seek, so copying the default
-/// 64-cell opening block per probe is pure waste.
-const BFS_BATCH: usize = 16;
 
 /// Server-side table multiplication (Graphulo `TableMult`):
 /// `C(c1, c2) ⊕= Σ_r Aᵀ(c1, r) ⊗ B(r, c2) = Σ_r A(r, c1) ⊗ B(r, c2)`.
@@ -79,11 +76,15 @@ pub fn table_mult_par(
 
 /// Sink-filtered [`table_mult`]: compute and write only the output
 /// columns whose key matches `keep` — the Graphulo pattern of a
-/// multiply feeding a filtered sink table. The filter becomes a column
-/// bitmap over `B`'s column keys and rides the masked SpGEMM engine
-/// ([`spgemm_masked_par`]), so excluded columns cost zero flops and
-/// zero output allocation; the kept cells are bit-identical to running
-/// the full multiply and filtering afterwards.
+/// multiply feeding a filtered sink table. The filter is pushed all the
+/// way into the scans (since PR 5): `B` is scanned with the column
+/// filter beneath the tablet block copy, and when the surviving row
+/// subset is selective `A` is scanned over a multi-range set of `B`'s
+/// surviving contraction rows only, so doomed cells are never copied
+/// and emptied rows are never visited. The
+/// masked SpGEMM engine ([`spgemm_masked_par`]) still guards the
+/// compute stage; the kept cells are bit-identical to running the full
+/// multiply and filtering afterwards.
 pub fn table_mult_masked(
     a: &Table,
     b: &Table,
@@ -109,9 +110,13 @@ pub fn table_mult_masked_par(
 /// Row-sink-filtered [`table_mult`]: compute and write only the output
 /// *rows* whose key matches `keep` — the twin of [`table_mult_masked`]
 /// for sinks filtered on the row key space. Output rows of `AᵀB` are
-/// `A`'s column keys, so the filter becomes a row bitmap over `Aᵀ` and
-/// rides the row-masked SpGEMM engine ([`spgemm_row_masked_par`]):
-/// excluded rows cost zero flops and zero output allocation, and the
+/// `A`'s column keys, so the filter rides `A`'s scan (a pushed-down
+/// column filter: doomed cells are rejected beneath the tablet block
+/// copy) and, when the surviving subset is selective, `B` is scanned
+/// over a multi-range set of `A`'s surviving contraction rows only —
+/// rows the mask will drop are never scanned
+/// (since PR 5). The row-masked SpGEMM engine
+/// ([`spgemm_row_masked_par`]) still guards the compute stage, and the
 /// kept cells are bit-identical to running the full multiply and
 /// filtering afterwards.
 pub fn table_mult_row_masked(
@@ -154,27 +159,46 @@ fn table_mult_inner(
     par: Parallelism,
     sink: Sink<'_>,
 ) -> usize {
-    // Stream each scan straight into dictionary-encoded id/value
-    // columns (the serial path pulls from the stack triple-by-triple at
-    // the full-scan batch size; the parallel path consumes the
-    // fanned-out collection without re-allocating it).
-    let mut sa = ScanSide::default();
-    let mut sb = ScanSide::default();
-    if par.is_serial() {
-        for t in a.scan_stream(ScanSpec::all().batched(SCAN_BLOCK)) {
-            sa.ingest(t);
+    // Sink pushdown into the scans themselves. A sink filter dooms
+    // input cells before they are read: under `Sink::Row` an `A` cell
+    // whose *column* key the mask drops can only feed dropped output
+    // rows, so the filter rides `A`'s scan (rejected beneath the tablet
+    // block copy — no copy, no allocation), and `B` is then scanned
+    // over a multi-range set of `A`'s surviving contraction rows only —
+    // rows the mask emptied are never scanned at all (when the subset
+    // is selective; see `row_restricted_spec`). `Sink::Col` is
+    // the mirror image. Dropped cells contribute only to dropped
+    // outputs, so the kept cells stay bit-identical to the full
+    // multiply (the masked SpGEMM below still guards the contract).
+    let (sa, sb) = match &sink {
+        Sink::None => (ingest_side(a, ScanSpec::all(), par), ingest_side(b, ScanSpec::all(), par)),
+        Sink::Row(keep) => {
+            let sa = ingest_side(
+                a,
+                ScanSpec::all().filtered(CellFilter::col((*keep).clone())),
+                par,
+            );
+            let sb = if sa.rows.is_empty() {
+                ScanSide::default()
+            } else {
+                ingest_side(b, row_restricted_spec(&sa.rows, b), par)
+            };
+            (sa, sb)
         }
-        for t in b.scan_stream(ScanSpec::all().batched(SCAN_BLOCK)) {
-            sb.ingest(t);
+        Sink::Col(keep) => {
+            let sb = ingest_side(
+                b,
+                ScanSpec::all().filtered(CellFilter::col((*keep).clone())),
+                par,
+            );
+            let sa = if sb.rows.is_empty() {
+                ScanSide::default()
+            } else {
+                ingest_side(a, row_restricted_spec(&sb.rows, a), par)
+            };
+            (sa, sb)
         }
-    } else {
-        for t in a.scan_par(ScanRange::all(), par) {
-            sa.ingest(t);
-        }
-        for t in b.scan_par(ScanRange::all(), par) {
-            sb.ingest(t);
-        }
-    }
+    };
     if sa.rows.is_empty() && sb.rows.is_empty() {
         return 0;
     }
@@ -184,7 +208,10 @@ fn table_mult_inner(
     let (ma, cols_a) = sa.into_csr(&merged);
     let (mb, cols_b) = sb.into_csr(&merged);
     // `Aᵀ` row c1 walks the rows containing c1 in ascending key order —
-    // the same ⊕ order the streaming row-join produced.
+    // the same ⊕ order the streaming row-join produced. The scans above
+    // already restricted the masked inputs, so the bitmaps below are
+    // all-true; they stay wired as the compute-stage guard of the
+    // multiply-then-drop contract.
     let at = ma.transpose_cached();
     let c = match sink {
         Sink::None => spgemm_par(at, &mb, s, par).expect("shared row dimension"),
@@ -211,6 +238,42 @@ fn table_mult_inner(
     }
     w.flush();
     cells
+}
+
+/// Stream one operand's stacked scan into a [`ScanSide`] — `spec`
+/// carries the sink pushdown (filters and/or a restricting range set);
+/// the serial path pulls from the stack triple-by-triple at the
+/// full-scan batch size, the parallel path consumes the fanned-out
+/// collection without re-allocating it.
+fn ingest_side(t: &Table, spec: ScanSpec, par: Parallelism) -> ScanSide {
+    let mut side = ScanSide::default();
+    if par.is_serial() {
+        for tr in t.scan_stream(spec.batched(SCAN_BLOCK)) {
+            side.ingest(tr);
+        }
+    } else {
+        for tr in t.scan_spec_par(&spec, par) {
+            side.ingest(tr);
+        }
+    }
+    side
+}
+
+/// A spec scanning exactly the given sorted, distinct rows — one
+/// [`ScanRange::single`] per row, coalesced into a multi-range set
+/// (adjacent keys merge; the tablet walk hops the gaps beneath the
+/// block copy) — when the subset is *selective*. Each range costs two
+/// small allocations plus pruning work, so a subset that is not
+/// clearly small relative to the operand's stored cells would make
+/// the range set pure overhead; those fall back to the full scan,
+/// which yields the identical product (cells in non-surviving rows
+/// contribute only to products that do not exist).
+fn row_restricted_spec(rows: &[SharedStr], operand: &Table) -> ScanSpec {
+    if rows.len().saturating_mul(8) <= operand.len() {
+        ScanSpec::ranges(rows.iter().map(|r| ScanRange::single(r.as_str())))
+    } else {
+        ScanSpec::all()
+    }
 }
 
 /// One operand of [`table_mult`], accumulated directly from a sorted
@@ -312,32 +375,79 @@ pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
 }
 
 /// k-hop BFS from `seeds` over an adjacency table (`row → col` edges).
-/// Returns the set of reached nodes per hop (hop 0 = the seeds that
-/// exist in the table ∪ given set).
+/// Returns the set of reached nodes per hop. **Hop 0 is the seeds that
+/// exist in the table**: the first stacked multi-range scan probes
+/// every seed row, and seeds with no adjacency row (absent from the
+/// table, or present only as edge *targets* — probing the column space
+/// would take the transpose table) are dropped. Dropped seeds never
+/// enter the visited set, so a reachable one is still discovered at
+/// its true hop distance.
 ///
-/// One streaming scanner serves every hop: frontiers iterate in sorted
-/// order and [`ScanIter::seek`] jumps the cursor to each frontier row,
-/// so a hop costs one seek + one row read per frontier node instead of
-/// a fresh scan per node. The stream carries a small batch hint
-/// ([`ScanSpec::batched`]) — a row probe reads a handful of cells, so
-/// the default 64-cell opening block per seek would be mostly waste.
+/// Every hop is **one stacked scan**: the frontier becomes a sorted,
+/// coalesced range set ([`ScanSpec::ranges()`], one
+/// [`ScanRange::single`] per frontier row — the Accumulo
+/// `BatchScanner` idiom) and the tablet cursors hop from range to
+/// range beneath the block copy, so a 1 000-node frontier costs one
+/// scan, not 1 000 seeks. The first scan does double duty: the rows it
+/// yields *are* the present seeds (hop 0) and their columns are hop 1,
+/// so the seed rows are walked once, not twice. A `hops == 0` call
+/// probes existence alone, pushing a [`RowReduce::Count`] combiner
+/// into the stack so exactly one triple per present seed crosses to
+/// the client.
 pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> {
+    let seed_spec =
+        || ScanSpec::ranges(seeds.iter().map(ScanRange::single)).batched(SCAN_BLOCK);
     let mut frontiers: Vec<BTreeSet<String>> = Vec::with_capacity(hops + 1);
-    let mut visited: BTreeSet<String> = seeds.iter().cloned().collect();
-    frontiers.push(visited.clone());
-    let mut frontier: BTreeSet<String> = visited.clone();
-    let mut stream = adj.scan_stream(ScanSpec::all().batched(BFS_BATCH));
-    for _ in 0..hops {
+    if hops == 0 {
+        // Existence probe only: one triple per present seed row.
+        let hop0: BTreeSet<String> = if seeds.is_empty() {
+            BTreeSet::new()
+        } else {
+            adj.scan_stream(
+                seed_spec().reduced(RowReduce::Count { out_col: String::new() }),
+            )
+            .map(|t| t.row.to_string())
+            .collect()
+        };
+        frontiers.push(hop0);
+        return frontiers;
+    }
+    // One scan yields hop 0 (the seed rows that exist) and hop 1 (their
+    // neighbors); the presence set is complete only after the scan, so
+    // the visited filter is applied as one set subtraction.
+    let mut present: BTreeSet<String> = BTreeSet::new();
+    let mut cols: BTreeSet<String> = BTreeSet::new();
+    if !seeds.is_empty() {
+        let mut last_row: Option<SharedStr> = None;
+        for t in adj.scan_stream(seed_spec()) {
+            if last_row.as_deref() != Some(t.row.as_str()) {
+                present.insert(t.row.to_string());
+                last_row = Some(t.row.clone());
+            }
+            if !cols.contains(t.col.as_str()) {
+                cols.insert(t.col.to_string());
+            }
+        }
+    }
+    for p in &present {
+        cols.remove(p.as_str());
+    }
+    let next = cols;
+    let mut visited = present.clone();
+    frontiers.push(present);
+    visited.extend(next.iter().cloned());
+    frontiers.push(next.clone());
+    if next.is_empty() {
+        return frontiers;
+    }
+    let mut frontier = next;
+    for _ in 1..hops {
         let mut next = BTreeSet::new();
-        for node in &frontier {
-            stream.seek(node, "");
-            while let Some(t) = stream.next_triple() {
-                if t.row != *node {
-                    break;
-                }
-                if !visited.contains(t.col.as_str()) {
-                    next.insert(t.col.to_string());
-                }
+        let spec =
+            ScanSpec::ranges(frontier.iter().map(ScanRange::single)).batched(SCAN_BLOCK);
+        for t in adj.scan_stream(spec) {
+            if !visited.contains(t.col.as_str()) && !next.contains(t.col.as_str()) {
+                next.insert(t.col.to_string());
             }
         }
         visited.extend(next.iter().cloned());
@@ -352,12 +462,28 @@ pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> 
 
 /// Jaccard similarity of the out-neighborhoods of every pair of nodes
 /// that share at least one neighbor. Returns an associative array
-/// `J(u, v) = |N(u) ∩ N(v)| / |N(u) ∪ N(v)|` for `u < v`.
-pub fn jaccard(adj: &Table) -> Assoc {
+/// `J(u, v) = |N(u) ∩ N(v)| / |N(u) ∪ N(v)|` for `u < v`, or the
+/// constructor error if the collected triples are inconsistent (the
+/// kernel no longer panics on them).
+pub fn jaccard(adj: &Table) -> Result<Assoc, AssocError> {
+    jaccard_over(adj, ScanSpec::all())
+}
+
+/// Seeded [`jaccard`]: similarities among `nodes` only. The scan is
+/// one stacked multi-range pass over the node rows
+/// ([`ScanSpec::ranges()`]) — rows outside the subset are never copied
+/// out of the tablets, and absent nodes simply contribute nothing.
+/// `J(u, v)` depends only on `N(u)` and `N(v)`, so for pairs inside
+/// the subset the values are bit-identical to the full kernel's.
+pub fn jaccard_seeded(adj: &Table, nodes: &[String]) -> Result<Assoc, AssocError> {
+    jaccard_over(adj, ScanSpec::ranges(nodes.iter().map(ScanRange::single)))
+}
+
+fn jaccard_over(adj: &Table, spec: ScanSpec) -> Result<Assoc, AssocError> {
     // Build neighbor sets straight off the stream (shared handles are
     // moved, not copied, into the map).
     let mut nbrs: BTreeMap<SharedStr, BTreeSet<SharedStr>> = BTreeMap::new();
-    for t in adj.scan_stream(ScanSpec::all().batched(SCAN_BLOCK)) {
+    for t in adj.scan_stream(spec.batched(SCAN_BLOCK)) {
         nbrs.entry(t.row).or_default().insert(t.col);
     }
     // Invert: neighbor -> rows touching it, so only co-neighbor pairs
@@ -368,30 +494,29 @@ pub fn jaccard(adj: &Table) -> Assoc {
             inv.entry(n.as_str()).or_default().push(u.as_str());
         }
     }
-    let mut inter: BTreeMap<(String, String), usize> = BTreeMap::new();
-    for (_, us) in inv {
+    // Intersection counts keyed by *borrowed* ids: incrementing a pair
+    // allocates nothing (the old map keyed by owned `String` pairs paid
+    // two fresh allocations per co-neighbor increment).
+    let mut inter: BTreeMap<(&str, &str), usize> = BTreeMap::new();
+    for us in inv.values() {
         for (ai, u) in us.iter().enumerate() {
             for v in &us[ai + 1..] {
-                inter
-                    .entry((u.to_string(), v.to_string()))
-                    .and_modify(|c| *c += 1)
-                    .or_insert(1);
+                *inter.entry((u, v)).or_insert(0) += 1;
             }
         }
     }
-    let mut rows = Vec::new();
-    let mut cols = Vec::new();
-    let mut vals = Vec::new();
+    let mut rows = Vec::with_capacity(inter.len());
+    let mut cols = Vec::with_capacity(inter.len());
+    let mut vals = Vec::with_capacity(inter.len());
     for ((u, v), i) in inter {
-        let nu = nbrs[u.as_str()].len();
-        let nv = nbrs[v.as_str()].len();
+        let nu = nbrs[u].len();
+        let nv = nbrs[v].len();
         let union = nu + nv - i;
         rows.push(crate::assoc::Key::str(u));
         cols.push(crate::assoc::Key::str(v));
         vals.push(i as f64 / union as f64);
     }
     Assoc::try_new(rows, cols, crate::assoc::ValsInput::Num(vals), crate::assoc::Aggregator::First)
-        .expect("jaccard triples")
 }
 
 #[cfg(test)]
@@ -465,13 +590,120 @@ mod tests {
     }
 
     #[test]
+    fn bfs_hop0_probes_the_table() {
+        // Regression (PR 5): the documented contract is that hop 0
+        // holds only the seeds that exist in the table — the old code
+        // pushed every seed into frontiers[0] and visited unprobed.
+        let (_, t, _) = graph_store();
+        let seeds = ["zz".to_string(), "a".to_string(), "d".to_string()];
+        let fr = bfs(&t, &seeds, 3);
+        // "zz" appears nowhere; "d" exists only as an edge target (no
+        // adjacency row): both are dropped from hop 0.
+        assert_eq!(fr[0], ["a".to_string()].into_iter().collect());
+        assert_eq!(fr[1], ["b".to_string(), "c".to_string()].into_iter().collect());
+        // Because "d" never entered the visited set, it is discovered
+        // at its true hop distance from the surviving seed.
+        assert_eq!(fr[2], ["d".to_string()].into_iter().collect());
+        // All seeds absent → hop 0 empty, expansion stops immediately.
+        let none = bfs(&t, &["nope".to_string()], 3);
+        assert!(none[0].is_empty());
+        assert_eq!(none.len(), 2);
+        assert!(none[1].is_empty());
+        // No seeds at all behaves identically.
+        let empty = bfs(&t, &[], 3);
+        assert!(empty[0].is_empty() && empty.len() == 2);
+        // hops == 0 is a pure existence probe (Count-reduced scan).
+        let zero = bfs(&t, &seeds, 0);
+        assert_eq!(zero.len(), 1);
+        assert_eq!(zero[0], ["a".to_string()].into_iter().collect());
+        assert!(bfs(&t, &[], 0).len() == 1 && bfs(&t, &[], 0)[0].is_empty());
+    }
+
+    #[test]
     fn jaccard_shared_neighbors() {
         let (_, t, _) = graph_store();
-        let j = jaccard(&t);
+        let j = jaccard(&t).unwrap();
         // N(a) = {b, c}, N(b) = {c}: intersection 1, union 2 → 0.5.
         assert_eq!(j.get_num("a", "b"), Some(0.5));
         // a and c share no out-neighbors → no entry.
         assert_eq!(j.get_num("a", "c"), None);
+    }
+
+    #[test]
+    fn jaccard_matches_naive_pairwise_baseline() {
+        // Pin the borrowed-key rework bit-identical to the definition:
+        // J(u, v) over every pair of rows sharing a neighbor, keys and
+        // values exactly as the pre-PR 5 string-keyed path produced.
+        let store = TableStore::with_defaults();
+        let n = 30;
+        let rows: Vec<String> = (0..n).map(|i| format!("u{:02}", i % 9)).collect();
+        let cols: Vec<String> = (0..n).map(|i| format!("w{:02}", (i * 5) % 11)).collect();
+        let a = Assoc::from_triples(&rows, &cols, 1.0);
+        let (t, _) = store.ingest_assoc("g", &a);
+        let mut nbrs: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        for tr in t.scan_stream(ScanSpec::all()) {
+            nbrs.entry(tr.row.to_string()).or_default().insert(tr.col.to_string());
+        }
+        let mut er = Vec::new();
+        let mut ec = Vec::new();
+        let mut ev = Vec::new();
+        let keys: Vec<&String> = nbrs.keys().collect();
+        for (i, u) in keys.iter().enumerate() {
+            for v in &keys[i + 1..] {
+                let inter = nbrs[*u].intersection(&nbrs[*v]).count();
+                if inter == 0 {
+                    continue;
+                }
+                let union = nbrs[*u].len() + nbrs[*v].len() - inter;
+                er.push(crate::assoc::Key::str(u.as_str()));
+                ec.push(crate::assoc::Key::str(v.as_str()));
+                ev.push(inter as f64 / union as f64);
+            }
+        }
+        let expect = Assoc::try_new(
+            er,
+            ec,
+            crate::assoc::ValsInput::Num(ev),
+            crate::assoc::Aggregator::First,
+        )
+        .unwrap();
+        assert_eq!(jaccard(&t).unwrap(), expect);
+    }
+
+    #[test]
+    fn jaccard_seeded_matches_full_on_subset_pairs() {
+        let store = TableStore::with_defaults();
+        let n = 40;
+        let rows: Vec<String> = (0..n).map(|i| format!("u{:02}", i % 10)).collect();
+        let cols: Vec<String> = (0..n).map(|i| format!("w{:02}", (i * 3) % 13)).collect();
+        let a = Assoc::from_triples(&rows, &cols, 1.0);
+        let (t, _) = store.ingest_assoc("g", &a);
+        let full = jaccard(&t).unwrap();
+        // Subset incl. an absent node: seeded == full restricted to
+        // pairs with both endpoints inside the subset.
+        let subset: Vec<String> =
+            ["u01", "u03", "u04", "u07", "absent"].iter().map(|s| s.to_string()).collect();
+        let seeded = jaccard_seeded(&t, &subset).unwrap();
+        let in_subset = |k: &crate::assoc::Key| {
+            subset.iter().any(|s| k.cmp_str(s.as_str()) == std::cmp::Ordering::Equal)
+        };
+        for (u, v, val) in full.iter() {
+            let expect_val = seeded.get_num(u, v);
+            if in_subset(u) && in_subset(v) {
+                assert_eq!(expect_val, val.as_num(), "pair ({u:?}, {v:?})");
+            } else {
+                assert_eq!(expect_val, None, "pair ({u:?}, {v:?}) outside subset");
+            }
+        }
+        // Every seeded pair appears in the full result.
+        for (u, v, val) in seeded.iter() {
+            assert_eq!(full.get_num(u, v), val.as_num());
+        }
+        // Seeding with every row reproduces the full kernel exactly.
+        let all_rows: Vec<String> = (0..10).map(|i| format!("u{i:02}")).collect();
+        assert_eq!(jaccard_seeded(&t, &all_rows).unwrap(), full);
+        // Empty subset → empty result.
+        assert!(jaccard_seeded(&t, &[]).unwrap().is_empty());
     }
 
     #[test]

@@ -20,10 +20,12 @@
 //!   including D4M's standard *adjacency + transpose-adjacency* pair so
 //!   both row and column access are sorted scans.
 //! * **[`scan`]** — the server-side iterator stack (Accumulo's
-//!   seek/next iterator model): composable range, filter, and combiner
-//!   stages executed against the tablets, streamed to the consumer
-//!   ([`Table::scan_stream`]) or collected with per-tablet parallel
-//!   fan-out ([`Table::scan_spec_par`]).
+//!   seek/next iterator model): composable range-set, filter, and
+//!   combiner stages executed against the tablets, streamed to the
+//!   consumer ([`Table::scan_stream`]) or collected with per-tablet
+//!   parallel fan-out ([`Table::scan_spec_par`]). A spec carries a
+//!   sorted, coalesced *set* of ranges ([`ScanSpec::ranges()`], the
+//!   Accumulo `BatchScanner` idiom), served in one stacked pass.
 //!
 //! Triples here are strings (Accumulo keys are bytes), stored and
 //! handed out as shared-bytes [`SharedStr`] handles: a cell scanned out
@@ -40,8 +42,8 @@ mod tablet;
 mod writer;
 
 pub use scan::{
-    format_num, CellField, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec,
-    SCAN_BLOCK,
+    coalesce_ranges, format_num, CellField, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange,
+    ScanSpec, SCAN_BLOCK,
 };
 pub use table::{Table, TableConfig, TableStream};
 pub use tablet::Tablet;

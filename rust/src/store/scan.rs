@@ -12,6 +12,7 @@
 //! |----------|------|
 //! | `SortedKeyValueIterator` (seek + next) | [`ScanIter`] |
 //! | `Range` (row + column qualifier bounds) | [`ScanRange`] |
+//! | `BatchScanner` (a *set* of ranges per scan) | [`ScanSpec::ranges()`] (sorted, coalesced multi-range spec) |
 //! | `ColumnQualifierFilter` / `RegExFilter` | [`CellFilter`] + [`KeyMatch`] |
 //! | `Combiner` (per-key aggregation) | [`RowReduce`] |
 //! | `ScannerOptions` (the configured stack) | [`ScanSpec`] |
@@ -25,7 +26,12 @@
 //! list to [`Tablet::scan_block`], which evaluates the matchers against
 //! `&str` borrows of the stored bytes, so a rejected cell is never
 //! copied out of the tablet and allocates nothing (an accepted cell is
-//! three pointer clones of the stored shared bytes). The combiner stage
+//! three pointer clones of the stored shared bytes). Range hopping
+//! happens down there too: a spec carries a sorted, coalesced *set* of
+//! ranges, and when the tablet walk leaves one range's row span it
+//! re-seeks the B-tree straight to the next range's start — one resume
+//! key serves the whole set, so a thousand-row BFS frontier is one
+//! stacked scan, not a thousand seeks. The combiner stage
 //! wraps generically ([`ReduceIter`]; [`FilterIter`] remains for
 //! client-side composition over non-tablet bases); nothing in the stack
 //! ever materializes the full triple set — consumers pull one triple at
@@ -94,6 +100,131 @@ impl ScanRange {
         let before = matches!((self.lo.as_deref(), tab_hi), (Some(lo), Some(thi)) if thi <= lo);
         !(past || before)
     }
+
+    /// Whether both ranges carry the same per-row column window (the
+    /// precondition for merging their row spans).
+    fn same_window(&self, other: &ScanRange) -> bool {
+        self.col_lo == other.col_lo && self.col_hi == other.col_hi
+    }
+}
+
+/// Order two exclusive upper bounds where `None` = +∞.
+fn hi_cmp(a: Option<&str>, b: Option<&str>) -> std::cmp::Ordering {
+    match (a, b) {
+        (None, None) => std::cmp::Ordering::Equal,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (Some(x), Some(y)) => x.cmp(y),
+    }
+}
+
+/// Normalize a range set for a multi-range scan: sort, and merge
+/// overlapping or adjacent row spans that carry the same column window
+/// (`[a, b) ∪ [b, c) = [a, c)`; Accumulo's `Range.mergeOverlapping`).
+/// Ranges with *different* column windows are never merged — the scan
+/// walk unions them cell-by-cell instead. The result is sorted by row
+/// lower bound (`None` first), the order [`Tablet::scan_block`]'s
+/// range-hopping walk requires.
+pub fn coalesce_ranges(mut ranges: Vec<ScanRange>) -> Vec<ScanRange> {
+    // Window-major sort puts every mergeable pair adjacent; row-minor
+    // keeps each window class in walk order for the merge pass.
+    ranges.sort_by(|a, b| {
+        (a.col_lo.as_deref(), a.col_hi.as_deref(), a.lo.as_deref())
+            .cmp(&(b.col_lo.as_deref(), b.col_hi.as_deref(), b.lo.as_deref()))
+            .then_with(|| hi_cmp(a.hi.as_deref(), b.hi.as_deref()))
+    });
+    let mut out: Vec<ScanRange> = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        if let Some(last) = out.last_mut() {
+            // Same window and the row spans touch (last.hi = None covers
+            // everything after it; r.lo = None implies last.lo = None).
+            let touches = last.same_window(&r)
+                && match last.hi.as_deref() {
+                    None => true,
+                    Some(h) => r.lo.as_deref().is_none_or(|lo| lo <= h),
+                };
+            if touches {
+                if hi_cmp(r.hi.as_deref(), last.hi.as_deref()).is_gt() {
+                    last.hi = r.hi;
+                }
+                continue;
+            }
+        }
+        out.push(r);
+    }
+    // Global walk order: row lower bound, ties broken deterministically.
+    out.sort_by(|a, b| {
+        a.lo.as_deref()
+            .cmp(&b.lo.as_deref())
+            .then_with(|| hi_cmp(a.hi.as_deref(), b.hi.as_deref()))
+            .then_with(|| {
+                (a.col_lo.as_deref(), a.col_hi.as_deref())
+                    .cmp(&(b.col_lo.as_deref(), b.col_hi.as_deref()))
+            })
+    });
+    out
+}
+
+/// Ensure a range set satisfies the walk's lo-sorted invariant,
+/// normalizing hand-built specs that bypassed [`ScanSpec::ranges()`]
+/// (`ScanSpec.ranges` is a public field): well-formed sets pay one
+/// ordering check; misordered ones are coalesced — without this, the
+/// tablet walk's monotonic range advance would silently drop cells.
+pub(crate) fn ensure_walk_order(ranges: Vec<ScanRange>) -> Vec<ScanRange> {
+    if ranges.windows(2).all(|w| w[0].lo <= w[1].lo) {
+        ranges
+    } else {
+        coalesce_ranges(ranges)
+    }
+}
+
+/// The overall exclusive row upper bound of a sorted range set
+/// (`None` = unbounded). Callers must pass a non-empty set.
+pub(crate) fn ranges_row_hi(ranges: &[ScanRange]) -> Option<&str> {
+    let mut hi = ranges[0].hi.as_deref();
+    for r in &ranges[1..] {
+        if hi_cmp(r.hi.as_deref(), hi).is_gt() {
+            hi = r.hi.as_deref();
+        }
+    }
+    hi
+}
+
+/// Snap `row` forward onto a sorted range set: `Some(row)` when some
+/// range's row span contains it, the next range's lower bound when it
+/// sits in a gap, `None` when it lies past every range.
+pub(crate) fn snap_row<'a>(ranges: &'a [ScanRange], row: &'a str) -> Option<&'a str> {
+    for r in ranges {
+        if r.hi.as_deref().is_some_and(|hi| row >= hi) {
+            continue;
+        }
+        return match r.lo.as_deref() {
+            Some(lo) if row < lo => Some(lo),
+            _ => Some(row),
+        };
+    }
+    None
+}
+
+/// The column position a fresh walk of `row` starts at: the smallest
+/// column-window start among the ranges whose row span contains `row`
+/// (`""` when any containing window is unbounded below, or when no
+/// range contains the row — the walk's own range hop corrects that).
+pub(crate) fn start_col<'a>(ranges: &'a [ScanRange], row: &str) -> &'a str {
+    let mut best: Option<&str> = None;
+    for r in ranges {
+        if r.lo.as_deref().is_some_and(|lo| row < lo) {
+            break;
+        }
+        if r.hi.as_deref().is_some_and(|hi| row >= hi) {
+            continue;
+        }
+        let cl = r.col_lo.as_deref().unwrap_or("");
+        if best.is_none_or(|b| cl < b) {
+            best = Some(cl);
+        }
+    }
+    best.unwrap_or("")
 }
 
 /// A streaming iterator over sorted triples — the store's analogue of
@@ -278,13 +409,19 @@ impl RowReduce {
     }
 }
 
-/// A configured scan stack: range at the bottom, then filters, then an
-/// optional per-row combiner. Built fluently and handed to
+/// A configured scan stack: a *range set* at the bottom, then filters,
+/// then an optional per-row combiner. Built fluently and handed to
 /// `Table::scan_stream` / `Table::scan_spec_par`.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ScanSpec {
-    /// Row + column range (the base of the stack).
-    pub range: ScanRange,
+    /// The range set at the base of the stack — sorted and coalesced
+    /// ([`coalesce_ranges`]); the scan yields the sorted, deduplicated
+    /// union of the per-range cells in one pass (Accumulo's
+    /// `BatchScanner` handing the servers a set of `Range`s at once).
+    /// One full range scans everything; an **empty set scans nothing**
+    /// (the union of zero ranges). Build through [`ScanSpec::over`] /
+    /// [`ScanSpec::ranges()`] to keep the invariant.
+    pub ranges: Vec<ScanRange>,
     /// Filter stages, applied in order (all must pass) — pushed beneath
     /// the tablet block copy by the base cursors.
     pub filters: Vec<CellFilter>,
@@ -294,10 +431,23 @@ pub struct ScanSpec {
     /// scan starts at after open/seek (clamped to `1..=`[`SCAN_BLOCK`],
     /// still doubling up to [`SCAN_BLOCK`] as the stream runs). `None`
     /// uses the default ramp. Small hints fit point-lookup-heavy
-    /// workloads (a BFS hop reads a handful of cells per seek — copying
-    /// a 64-cell block to use 3 is pure waste); [`SCAN_BLOCK`] fits
-    /// full-table scans, which skip the ramp entirely.
+    /// workloads (a row probe reads a handful of cells per seek —
+    /// copying a 64-cell block to use 3 is pure waste); [`SCAN_BLOCK`]
+    /// fits full-table and bulk multi-range scans, which skip the ramp
+    /// entirely.
     pub batch: Option<usize>,
+}
+
+impl Default for ScanSpec {
+    /// Scan everything (one unbounded range).
+    fn default() -> Self {
+        ScanSpec {
+            ranges: vec![ScanRange::all()],
+            filters: Vec::new(),
+            reduce: None,
+            batch: None,
+        }
+    }
 }
 
 impl ScanSpec {
@@ -306,9 +456,21 @@ impl ScanSpec {
         ScanSpec::default()
     }
 
-    /// Scan over `range`.
+    /// Scan over a single `range`.
     pub fn over(range: ScanRange) -> Self {
-        ScanSpec { range, ..ScanSpec::default() }
+        ScanSpec { ranges: vec![range], ..ScanSpec::default() }
+    }
+
+    /// Scan over the union of `ranges` in one stacked pass — the
+    /// `BatchScanner` multi-range spec. The set is sorted and
+    /// overlapping/adjacent same-window ranges are merged
+    /// ([`coalesce_ranges`]), so results are the sorted, deduplicated
+    /// union of the per-range scans; an empty iterator scans nothing.
+    pub fn ranges(ranges: impl IntoIterator<Item = ScanRange>) -> Self {
+        ScanSpec {
+            ranges: coalesce_ranges(ranges.into_iter().collect()),
+            ..ScanSpec::default()
+        }
     }
 
     /// Add a filter stage.
@@ -488,7 +650,7 @@ pub const SCAN_BLOCK: usize = 2048;
 pub struct SliceCursor<'t> {
     tablets: &'t [Mutex<Tablet>],
     live: Vec<usize>,
-    range: ScanRange,
+    ranges: Vec<ScanRange>,
     filters: Vec<CellFilter>,
     /// Position in `live`.
     ti: usize,
@@ -502,23 +664,24 @@ pub struct SliceCursor<'t> {
 
 impl<'t> SliceCursor<'t> {
     /// Cursor over `live` (indices into `tablets`, in row order),
-    /// restricted to `range`, with `filters` pushed into the tablet
-    /// block scan.
+    /// restricted to the sorted, coalesced range set `ranges`, with
+    /// `filters` pushed into the tablet block scan.
     pub fn new(
         tablets: &'t [Mutex<Tablet>],
         live: Vec<usize>,
-        range: ScanRange,
+        ranges: Vec<ScanRange>,
         filters: Vec<CellFilter>,
     ) -> Self {
+        let done = ranges.is_empty();
         SliceCursor {
             tablets,
             live,
-            range,
+            ranges,
             filters,
             ti: 0,
             resume: None,
             buf: Vec::new(),
-            done: false,
+            done,
         }
     }
 
@@ -528,7 +691,7 @@ impl<'t> SliceCursor<'t> {
             let tab = self.tablets[self.live[self.ti]].lock().unwrap();
             let from = self.resume.as_ref().map(|(r, c, inc)| (r.as_str(), c.as_str(), *inc));
             let more =
-                tab.scan_block(from, &self.range, &self.filters, SCAN_BLOCK, &mut self.buf);
+                tab.scan_block(from, &self.ranges, &self.filters, SCAN_BLOCK, &mut self.buf);
             drop(tab);
             match more {
                 None => {
@@ -561,9 +724,14 @@ impl<'t> SliceCursor<'t> {
 impl ScanIter for SliceCursor<'_> {
     fn seek(&mut self, row: &str, col: &str) {
         self.buf.clear();
+        if self.ranges.is_empty() {
+            self.done = true;
+            return;
+        }
         self.done = false;
-        // Clamp the target to the range start.
-        let (row, col) = match self.range.lo.as_deref() {
+        // Clamp the target to the range-set start (targets inside a gap
+        // are hopped forward by the tablet walk itself).
+        let (row, col) = match self.ranges[0].lo.as_deref() {
             Some(lo) if row < lo => (lo, ""),
             _ => (row, col),
         };
@@ -637,6 +805,81 @@ mod tests {
         let set: BTreeSet<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
         assert!(KeyMatch::In(set.clone()).matches("a"));
         assert!(!KeyMatch::In(set).matches("c"));
+    }
+
+    #[test]
+    fn coalesce_merges_sorts_and_keeps_windows_apart() {
+        // Overlapping + adjacent same-window ranges merge.
+        let got = coalesce_ranges(vec![
+            ScanRange::rows("m", "p"),
+            ScanRange::rows("a", "c"),
+            ScanRange::rows("b", "d"),
+            ScanRange::rows("d", "f"),
+        ]);
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].lo.as_deref(), got[0].hi.as_deref()), (Some("a"), Some("f")));
+        assert_eq!((got[1].lo.as_deref(), got[1].hi.as_deref()), (Some("m"), Some("p")));
+        // Duplicate singles collapse.
+        let got = coalesce_ranges(vec![ScanRange::single("r"), ScanRange::single("r")]);
+        assert_eq!(got.len(), 1);
+        // Unbounded-above swallows everything after it.
+        let got = coalesce_ranges(vec![
+            ScanRange { lo: Some("c".into()), hi: None, ..ScanRange::default() },
+            ScanRange::rows("d", "f"),
+        ]);
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].lo.as_deref(), got[0].hi.as_deref()), (Some("c"), None));
+        // A contained range disappears into its container.
+        let got = coalesce_ranges(vec![ScanRange::rows("a", "z"), ScanRange::rows("b", "c")]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].hi.as_deref(), Some("z"));
+        // Different column windows never merge, even on touching rows.
+        let got = coalesce_ranges(vec![
+            ScanRange::rows("a", "c").with_cols("x", "y"),
+            ScanRange::rows("c", "e"),
+        ]);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].col_lo.as_deref(), Some("x"));
+        assert!(got[1].col_lo.is_none());
+        // Empty in, empty out.
+        assert!(coalesce_ranges(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn range_set_helpers() {
+        let rs = coalesce_ranges(vec![ScanRange::rows("a", "c"), ScanRange::rows("f", "h")]);
+        assert_eq!(ranges_row_hi(&rs), Some("h"));
+        assert_eq!(
+            ranges_row_hi(&[ScanRange::rows("a", "c"), ScanRange::all()]),
+            None
+        );
+        // snap_row: inside, gap, before, past.
+        assert_eq!(snap_row(&rs, "b"), Some("b"));
+        assert_eq!(snap_row(&rs, "d"), Some("f"));
+        assert_eq!(snap_row(&rs, ""), Some("a"));
+        assert_eq!(snap_row(&rs, "x"), None);
+        // start_col picks the smallest containing window start.
+        let ws = coalesce_ranges(vec![
+            ScanRange::rows("a", "m").with_cols("q", "r"),
+            ScanRange::rows("b", "m").with_cols("c", "d"),
+        ]);
+        assert_eq!(start_col(&ws, "a"), "q");
+        assert_eq!(start_col(&ws, "b"), "c");
+        assert_eq!(start_col(&ws, "z"), "");
+    }
+
+    #[test]
+    fn spec_ranges_builder_and_empty_set() {
+        let spec = ScanSpec::ranges([
+            ScanRange::single("b"),
+            ScanRange::single("a"),
+            ScanRange::single("b"),
+        ]);
+        assert_eq!(spec.ranges.len(), 2);
+        assert_eq!(spec.ranges[0].lo.as_deref(), Some("a"));
+        // Default spec scans everything; an explicit empty set, nothing.
+        assert_eq!(ScanSpec::all().ranges.len(), 1);
+        assert!(ScanSpec::ranges(Vec::new()).ranges.is_empty());
     }
 
     #[test]

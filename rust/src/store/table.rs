@@ -15,7 +15,8 @@
 //! consumers of the same stack.
 
 use super::scan::{
-    stack_collect, CellFilter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor, SCAN_BLOCK,
+    self, stack_collect, CellFilter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor,
+    SCAN_BLOCK,
 };
 use super::tablet::Tablet;
 use super::{SharedStr, StoreError, Triple};
@@ -86,20 +87,51 @@ impl Table {
         lo
     }
 
-    /// Indices of the tablets overlapping `range`'s row bounds, in row
-    /// order — the one range-pruning pass shared by every scan path
-    /// (tablet extents are sorted, so the walk stops at the first
-    /// tablet past `hi`).
-    fn live_tablets(tablets: &[Mutex<Tablet>], range: &ScanRange) -> Vec<usize> {
+    /// Indices of the tablets overlapping any range of the (sorted,
+    /// coalesced) range set, in row order — the one range-pruning pass
+    /// shared by every scan path. Tablet extents are sorted, so the
+    /// walk stops at the first tablet past the set's overall upper
+    /// bound; tablets sitting in the gaps between ranges are pruned.
+    fn live_tablets(tablets: &[Mutex<Tablet>], ranges: &[ScanRange]) -> Vec<usize> {
+        if ranges.is_empty() {
+            return Vec::new();
+        }
+        let set_hi = scan::ranges_row_hi(ranges);
         let mut live = Vec::new();
+        // Ranges are lo-sorted and tablet extents ascend, so a range
+        // ending at or before this tablet's lo is dead for every later
+        // tablet too — the dead prefix is skipped once, and the
+        // per-tablet walk stops at the first range past the tablet's
+        // hi, keeping the pass ~O(tablets + ranges) for the disjoint
+        // sets the coalescer produces.
+        let mut first = 0usize;
         for (i, t) in tablets.iter().enumerate() {
             let tab = t.lock().unwrap();
-            if let (Some(hi), Some(tlo)) = (range.hi.as_deref(), tab.lo.as_deref()) {
+            if let (Some(hi), Some(tlo)) = (set_hi, tab.lo.as_deref()) {
                 if tlo >= hi {
                     break;
                 }
             }
-            if tab.overlaps(range) {
+            if let Some(tlo) = tab.lo.as_deref() {
+                while first < ranges.len()
+                    && ranges[first].hi.as_deref().is_some_and(|hi| hi <= tlo)
+                {
+                    first += 1;
+                }
+            }
+            let mut overlap = false;
+            for r in &ranges[first..] {
+                if let (Some(thi), Some(rlo)) = (tab.hi.as_deref(), r.lo.as_deref()) {
+                    if rlo >= thi {
+                        break;
+                    }
+                }
+                if tab.overlaps(r) {
+                    overlap = true;
+                    break;
+                }
+            }
+            if overlap {
                 live.push(i);
             }
         }
@@ -196,18 +228,20 @@ impl Table {
     /// the groups in order is byte-identical to the serial stack — and
     /// to naive scan-then-filter-then-reduce (`tests/scan_stack.rs`).
     pub fn scan_spec_par(&self, spec: &ScanSpec, par: Parallelism) -> Vec<Triple> {
+        // Hand-built specs may bypass the builder's sorted invariant;
+        // normalize once before pruning (which assumes the order too).
+        let ranges = scan::ensure_walk_order(spec.ranges.clone());
         let tablets = self.tablets.read().unwrap();
-        let live = Self::live_tablets(&tablets, &spec.range);
+        let live = Self::live_tablets(&tablets, &ranges);
         if par.is_serial() || live.len() <= 1 {
-            let base =
-                SliceCursor::new(&tablets, live, spec.range.clone(), spec.filters.clone());
+            let base = SliceCursor::new(&tablets, live, ranges, spec.filters.clone());
             return stack_collect(base, spec);
         }
         let parts: Vec<Vec<Triple>> = parallel_map_ranges(par.chunk_ranges(live.len()), |group| {
             let base = SliceCursor::new(
                 &tablets,
                 live[group].to_vec(),
-                spec.range.clone(),
+                ranges.clone(),
                 spec.filters.clone(),
             );
             stack_collect(base, spec)
@@ -312,7 +346,10 @@ const STREAM_BLOCK_MIN: usize = 64;
 /// same way). Spec filters are evaluated beneath the tablet block copy.
 struct TableCursor<'a> {
     table: &'a Table,
-    range: ScanRange,
+    /// Sorted, coalesced range set (empty = scan nothing).
+    ranges: Vec<ScanRange>,
+    /// The set's overall exclusive row upper bound (`None` = +∞).
+    set_hi: Option<String>,
     filters: Vec<CellFilter>,
     /// Resume key `(row, col, inclusive)`; `None` = range start.
     resume: Option<(SharedStr, SharedStr, bool)>,
@@ -327,18 +364,22 @@ struct TableCursor<'a> {
 impl<'a> TableCursor<'a> {
     fn new(
         table: &'a Table,
-        range: ScanRange,
+        ranges: Vec<ScanRange>,
         filters: Vec<CellFilter>,
         batch: Option<usize>,
     ) -> Self {
         let block_min = batch.unwrap_or(STREAM_BLOCK_MIN).clamp(1, SCAN_BLOCK);
+        let ranges = scan::ensure_walk_order(ranges);
+        let done = ranges.is_empty();
+        let set_hi = if done { None } else { scan::ranges_row_hi(&ranges).map(String::from) };
         TableCursor {
             table,
-            range,
+            ranges,
+            set_hi,
             filters,
             resume: None,
             buf: Vec::new(),
-            done: false,
+            done,
             block: block_min,
             block_min,
         }
@@ -351,15 +392,41 @@ impl<'a> TableCursor<'a> {
         // even when a selective filter needs several all-rejected
         // blocks to find the next match.
         loop {
+            // Snap the position onto the range set first, so a resume
+            // key sitting in a gap between ranges locates the next
+            // range's tablet directly instead of walking every tablet
+            // under the gap.
+            let snapped: Option<Option<(SharedStr, SharedStr)>> = {
+                let pos_row = match &self.resume {
+                    Some((r, _, _)) => r.as_str(),
+                    None => self.ranges[0].lo.as_deref().unwrap_or(""),
+                };
+                match scan::snap_row(&self.ranges, pos_row) {
+                    None => None,
+                    Some(s) if s != pos_row => {
+                        Some(Some((s.into(), scan::start_col(&self.ranges, s).into())))
+                    }
+                    Some(_) => Some(None),
+                }
+            };
+            match snapped {
+                // Past every range: exhausted.
+                None => {
+                    self.done = true;
+                    return;
+                }
+                Some(Some((row, col))) => self.resume = Some((row, col, true)),
+                Some(None) => {}
+            }
             let tablets = self.table.tablets.read().unwrap();
             let pos_row = match &self.resume {
                 Some((r, _, _)) => r.as_str(),
-                None => self.range.lo.as_deref().unwrap_or(""),
+                None => self.ranges[0].lo.as_deref().unwrap_or(""),
             };
             let idx = Table::locate(&tablets, pos_row);
             let tab = tablets[idx].lock().unwrap();
-            // The located tablet starts at or past the range end: done.
-            if let (Some(hi), Some(tlo)) = (self.range.hi.as_deref(), tab.lo.as_deref()) {
+            // The located tablet starts at or past the set's end: done.
+            if let (Some(hi), Some(tlo)) = (self.set_hi.as_deref(), tab.lo.as_deref()) {
                 if tlo >= hi {
                     self.done = true;
                     return;
@@ -367,7 +434,7 @@ impl<'a> TableCursor<'a> {
             }
             let from = self.resume.as_ref().map(|(r, c, inc)| (r.as_str(), c.as_str(), *inc));
             let more =
-                tab.scan_block(from, &self.range, &self.filters, self.block, &mut self.buf);
+                tab.scan_block(from, &self.ranges, &self.filters, self.block, &mut self.buf);
             if let Some((row, col)) = more {
                 self.resume = Some((row, col, false));
                 if !self.buf.is_empty() {
@@ -379,13 +446,13 @@ impl<'a> TableCursor<'a> {
                 // the locks and keep scanning from the resume key.
                 continue;
             }
-            // This tablet is done for the range — move to the next one
-            // immediately (no extra lock round trip for a partial final
-            // block) or finish the stream.
+            // This tablet is done for the range set — move to the next
+            // one immediately (no extra lock round trip for a partial
+            // final block) or finish the stream.
             match tab.hi.clone() {
                 None => self.done = true,
                 Some(hi) => {
-                    if self.range.hi.as_deref().is_some_and(|rhi| hi.as_str() >= rhi) {
+                    if self.set_hi.as_deref().is_some_and(|rhi| hi.as_str() >= rhi) {
                         self.done = true;
                     } else {
                         // Continue at the next tablet's first key.
@@ -404,9 +471,13 @@ impl<'a> TableCursor<'a> {
 impl ScanIter for TableCursor<'_> {
     fn seek(&mut self, row: &str, col: &str) {
         self.buf.clear();
+        if self.ranges.is_empty() {
+            self.done = true;
+            return;
+        }
         self.done = false;
         self.block = self.block_min;
-        let (row, col) = match self.range.lo.as_deref() {
+        let (row, col) = match self.ranges[0].lo.as_deref() {
             Some(lo) if row < lo => (lo, ""),
             _ => (row, col),
         };
@@ -436,7 +507,7 @@ pub struct TableStream<'a> {
 
 impl<'a> TableStream<'a> {
     fn new(table: &'a Table, spec: ScanSpec) -> Self {
-        let base = TableCursor::new(table, spec.range, spec.filters, spec.batch);
+        let base = TableCursor::new(table, spec.ranges, spec.filters, spec.batch);
         TableStream { inner: ReduceIter::new(base, spec.reduce) }
     }
 }
@@ -626,6 +697,78 @@ mod tests {
             s.seek("row0040", "");
             assert_eq!(s.next_triple().unwrap().row, "row0040", "hint={hint}");
         }
+    }
+
+    #[test]
+    fn multi_range_scans_across_split_tablets() {
+        let t = small_table();
+        t.write_batch(batch(100)).unwrap();
+        assert!(t.tablet_count() > 1);
+        let spec = ScanSpec::ranges([
+            ScanRange::rows("row0070", "row0080"),
+            ScanRange::single("row0042"),
+            ScanRange::rows("row0000", "row0010"),
+        ]);
+        // Collected, parallel, and streamed walks all agree and equal
+        // the sorted union of the per-range scans.
+        let mut expect = t.scan(ScanRange::rows("row0000", "row0010"));
+        expect.extend(t.scan(ScanRange::single("row0042")));
+        expect.extend(t.scan(ScanRange::rows("row0070", "row0080")));
+        let got = t.scan_spec(&spec);
+        assert_eq!(got, expect);
+        assert_eq!(got.len(), 21);
+        let streamed: Vec<Triple> = t.scan_stream(spec.clone()).collect();
+        assert_eq!(streamed, expect);
+        for threads in [2usize, 4] {
+            assert_eq!(t.scan_spec_par(&spec, Parallelism::with_threads(threads)), expect);
+        }
+        // Seeking into a gap lands on the next range's first cell.
+        let mut s = t.scan_stream(spec);
+        s.seek("row0050", "");
+        assert_eq!(s.next_triple().unwrap().row, "row0070");
+        // An empty range set scans nothing, streamed or collected.
+        assert!(t.scan_spec(&ScanSpec::ranges(Vec::new())).is_empty());
+        assert!(t.scan_stream(ScanSpec::ranges(Vec::new())).next().is_none());
+        // A hand-built spec that bypassed the builder's sort is
+        // normalized at the scan entry points, not silently mis-walked.
+        let hand = ScanSpec {
+            ranges: vec![
+                ScanRange::rows("row0070", "row0080"),
+                ScanRange::rows("row0000", "row0010"),
+            ],
+            ..ScanSpec::default()
+        };
+        let mut expect2 = t.scan(ScanRange::rows("row0000", "row0010"));
+        expect2.extend(t.scan(ScanRange::rows("row0070", "row0080")));
+        assert_eq!(t.scan_spec(&hand), expect2);
+        let hand_streamed: Vec<Triple> = t.scan_stream(hand).collect();
+        assert_eq!(hand_streamed, expect2);
+    }
+
+    #[test]
+    fn multi_range_stacks_with_filters_and_combiners() {
+        let t = small_table();
+        let mut b = Vec::new();
+        for i in 0..40 {
+            for c in ["c1", "c2", "c3"] {
+                b.push(Triple::new(format!("r{i:02}"), c, "2"));
+            }
+        }
+        t.write_batch(b).unwrap();
+        let spec = ScanSpec::ranges([
+            ScanRange::rows("r00", "r05"),
+            ScanRange::rows("r30", "r33"),
+        ])
+        .filtered(CellFilter::col(KeyMatch::In(
+            ["c1", "c3"].iter().map(|s| s.to_string()).collect(),
+        )))
+        .reduced(RowReduce::Sum { out_col: "s".into() });
+        let got = t.scan_spec(&spec);
+        // 5 + 3 rows, each summing two kept cells of value 2.
+        assert_eq!(got.len(), 8);
+        assert!(got.iter().all(|t| t.col == "s" && t.val == "4"));
+        assert_eq!(got[0].row, "r00");
+        assert_eq!(got[7].row, "r32");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! A tablet: one sorted key range of a table (the Accumulo unit of
 //! distribution and recovery).
 
-use super::scan::{CellFilter, ScanRange};
+use super::scan::{self, CellFilter, ScanRange};
 use super::{SharedStr, Triple};
 use std::collections::BTreeMap;
 use std::ops::Bound;
@@ -75,7 +75,7 @@ impl Tablet {
             hi: hi.map(String::from),
             ..ScanRange::default()
         };
-        let more = self.scan_block(None, &range, &[], usize::MAX, out);
+        let more = self.scan_block(None, std::slice::from_ref(&range), &[], usize::MAX, out);
         debug_assert!(more.is_none(), "an unbounded unfiltered scan_block must exhaust");
     }
 
@@ -85,20 +85,27 @@ impl Tablet {
     }
 
     /// Copy up to `limit` in-range, filter-passing cells into `out`,
-    /// resuming from `from = (row, col, inclusive)` (or the range start
-    /// when `None`) — the primitive under the scan stack's block
-    /// cursors. Applies the row range `[lo, hi)`, per row the column
-    /// window `[col_lo, col_hi)` (when a row's window is exhausted the
-    /// scan seeks directly to the next row, so out-of-window cells are
-    /// never copied), and `filters` — evaluated against `&str` borrows
-    /// of the stored bytes *before* a `Triple` is built, so a rejected
-    /// cell allocates nothing and never leaves the tablet. An emitted
-    /// cell is three pointer clones of the stored [`SharedStr`]s.
+    /// resuming from `from = (row, col, inclusive)` (or the range-set
+    /// start when `None`) — the primitive under the scan stack's block
+    /// cursors. `ranges` is a sorted, coalesced range set
+    /// ([`crate::store::scan::coalesce_ranges`]); the walk yields the
+    /// sorted, deduplicated union of the per-range cells in one pass,
+    /// hopping closed ranges *beneath* the block copy: when the walk
+    /// leaves the last open range's row span it re-seeks the `BTreeMap`
+    /// straight to the next range's start, so cells in the gaps between
+    /// ranges cost one examined key each (the multi-range analogue of
+    /// the column-window seek). Per containing range the column window
+    /// `[col_lo, col_hi)` applies (a row whose windows are exhausted
+    /// seeks directly to the next row), and `filters` are evaluated
+    /// against `&str` borrows of the stored bytes *before* a `Triple`
+    /// is built, so a rejected cell allocates nothing and never leaves
+    /// the tablet. An emitted cell is three pointer clones of the
+    /// stored [`SharedStr`]s.
     ///
     /// Returns `None` when no in-range cells remain past the copied
-    /// block (the tablet is exhausted for this range), or the resume
-    /// key — the caller continues *exclusively after* it — when the
-    /// block filled: either `limit` cells were emitted, or
+    /// block (the tablet is exhausted for this range set), or the
+    /// resume key — the caller continues *exclusively after* it — when
+    /// the block filled: either `limit` cells were emitted, or
     /// `max(limit, SCAN_BLOCK)` cells were examined. The examined cap
     /// keeps one call's lock hold bounded even when a selective filter
     /// rejects everything it walks (the cursors re-acquire locks
@@ -107,61 +114,113 @@ impl Tablet {
     pub fn scan_block(
         &self,
         from: Option<(&str, &str, bool)>,
-        range: &ScanRange,
+        ranges: &[ScanRange],
         filters: &[CellFilter],
         limit: usize,
         out: &mut Vec<Triple>,
     ) -> Option<(SharedStr, SharedStr)> {
         debug_assert!(limit > 0, "scan_block needs room to make progress");
-        let examine_cap = limit.max(super::scan::SCAN_BLOCK);
+        // The walk's monotonic range advance and gap hops assume the
+        // set is sorted by row lower bound — hand-built `ScanSpec`s
+        // that bypass `ScanSpec::ranges()` would otherwise silently
+        // drop cells.
+        debug_assert!(
+            ranges.windows(2).all(|w| w[0].lo <= w[1].lo),
+            "scan_block needs a lo-sorted range set (build specs via ScanSpec::ranges)"
+        );
+        if ranges.is_empty() {
+            return None;
+        }
+        let examine_cap = limit.max(scan::SCAN_BLOCK);
         let mut start: Bound<(SharedStr, SharedStr)> = match from {
             Some((r, c, true)) => Bound::Included((r.into(), c.into())),
             Some((r, c, false)) => Bound::Excluded((r.into(), c.into())),
-            None => match range.lo.as_deref() {
-                Some(lo) => {
-                    Bound::Included((lo.into(), range.col_lo.as_deref().unwrap_or("").into()))
-                }
+            None => match ranges[0].lo.as_deref() {
+                Some(lo) => Bound::Included((lo.into(), scan::start_col(ranges, lo).into())),
                 None => Bound::Unbounded,
             },
         };
+        // First range whose row span may still lie ahead; rows only
+        // move forward, so this never rewinds.
+        let mut ri = 0usize;
         let mut emitted = 0usize;
         let mut examined = 0usize;
         loop {
-            // Re-seeks happen only when a row's column window closes
-            // (cells the reseek jumps over are never examined).
+            // Re-seeks happen when a row's column windows close or the
+            // walk falls in a gap between ranges (cells the reseek
+            // jumps over are never examined).
             let mut reseek: Option<(SharedStr, SharedStr)> = None;
             for ((r, c), v) in self.entries.range((start, Bound::Unbounded)) {
-                if let Some(hi) = range.hi.as_deref() {
-                    if r.as_str() >= hi {
-                        return None;
-                    }
+                while ri < ranges.len()
+                    && ranges[ri].hi.as_deref().is_some_and(|hi| r.as_str() >= hi)
+                {
+                    ri += 1;
+                }
+                if ri == ranges.len() {
+                    // Past every range: exhausted.
+                    return None;
                 }
                 examined += 1;
-                let keep = match range.col_lo.as_deref() {
-                    Some(cl) if c.as_str() < cl => false,
-                    _ => {
-                        if let Some(ch) = range.col_hi.as_deref() {
-                            if c.as_str() >= ch {
-                                if examined >= examine_cap {
-                                    // The cap bounds window-skip walks
-                                    // too: a reseek-per-row stride must
-                                    // not extend this lock hold.
-                                    return Some((r.clone(), c.clone()));
-                                }
-                                // This row's window is done: jump to
-                                // the next row's window start.
-                                let mut next_row = r.to_string();
-                                next_row.push('\0');
-                                let col = range.col_lo.as_deref().unwrap_or("");
-                                reseek = Some((next_row.into(), col.into()));
-                                break;
-                            }
+                if let Some(lo) = ranges[ri].lo.as_deref() {
+                    if r.as_str() < lo {
+                        // In the gap before the next range: hop to its
+                        // start beneath the copy.
+                        if examined >= examine_cap {
+                            return Some((r.clone(), c.clone()));
                         }
-                        // Rejected beneath the copy: no allocation.
-                        filters.iter().all(|f| f.matches_parts(r, c, v))
+                        reseek = Some((lo.into(), scan::start_col(&ranges[ri..], lo).into()));
+                        break;
                     }
-                };
-                if keep {
+                }
+                // The row is inside at least one range. Column
+                // decision over every range containing it: in any
+                // window → candidate; below every open window → hop to
+                // the nearest window start; past them all → next row.
+                let mut in_window = false;
+                let mut next_col: Option<&str> = None;
+                for rg in &ranges[ri..] {
+                    if rg.lo.as_deref().is_some_and(|lo| r.as_str() < lo) {
+                        break;
+                    }
+                    if rg.hi.as_deref().is_some_and(|hi| r.as_str() >= hi) {
+                        continue;
+                    }
+                    let below = rg.col_lo.as_deref().is_some_and(|cl| c.as_str() < cl);
+                    let above = rg.col_hi.as_deref().is_some_and(|ch| c.as_str() >= ch);
+                    if !below && !above {
+                        in_window = true;
+                        break;
+                    }
+                    if below {
+                        let cl = rg.col_lo.as_deref().expect("below implies a lower bound");
+                        if next_col.is_none_or(|n| cl < n) {
+                            next_col = Some(cl);
+                        }
+                    }
+                }
+                if !in_window {
+                    if examined >= examine_cap {
+                        // The cap bounds window-skip and gap walks too:
+                        // a reseek-per-row stride must not extend this
+                        // lock hold.
+                        return Some((r.clone(), c.clone()));
+                    }
+                    match next_col {
+                        // A window opens later in this row.
+                        Some(nc) => reseek = Some((r.clone(), nc.into())),
+                        // Every window on this row is done: jump to the
+                        // next row's window start.
+                        None => {
+                            let mut next_row = r.to_string();
+                            next_row.push('\0');
+                            let col = scan::start_col(&ranges[ri..], &next_row);
+                            reseek = Some((next_row.into(), col.into()));
+                        }
+                    }
+                    break;
+                }
+                // Rejected beneath the copy: no allocation.
+                if filters.iter().all(|f| f.matches_parts(r, c, v)) {
                     out.push(Triple { row: r.clone(), col: c.clone(), val: v.clone() });
                     emitted += 1;
                 }
@@ -329,7 +388,7 @@ mod tests {
         loop {
             let mut block = Vec::new();
             let f = from.as_ref().map(|(r, c)| (r.as_str(), c.as_str(), false));
-            let more = tab.scan_block(f, &range, &[], 2, &mut block);
+            let more = tab.scan_block(f, std::slice::from_ref(&range), &[], 2, &mut block);
             got.extend(block);
             match more {
                 Some(key) => from = Some(key),
@@ -342,7 +401,9 @@ mod tests {
         // Column window restricts per row and skips ahead.
         let range = ScanRange::all().with_cols("c2", "c3");
         let mut win = Vec::new();
-        assert!(tab.scan_block(None, &range, &[], usize::MAX, &mut win).is_none());
+        assert!(tab
+            .scan_block(None, std::slice::from_ref(&range), &[], usize::MAX, &mut win)
+            .is_none());
         let keys: Vec<(SharedStr, SharedStr)> = win.into_iter().map(|t| (t.row, t.col)).collect();
         assert_eq!(
             keys,
@@ -357,7 +418,13 @@ mod tests {
         let range = ScanRange::rows("b", "c\0").with_cols("c1", "c3");
         let mut out = Vec::new();
         assert!(tab
-            .scan_block(Some(("b", "c2", true)), &range, &[], usize::MAX, &mut out)
+            .scan_block(
+                Some(("b", "c2", true)),
+                std::slice::from_ref(&range),
+                &[],
+                usize::MAX,
+                &mut out,
+            )
             .is_none());
         let keys: Vec<(SharedStr, SharedStr)> = out.into_iter().map(|t| (t.row, t.col)).collect();
         assert_eq!(
@@ -384,14 +451,14 @@ mod tests {
         let filters = vec![CellFilter::col(KeyMatch::Equals("c2".into()))];
         let range = ScanRange::all();
         let mut block = Vec::new();
-        let more = tab.scan_block(None, &range, &filters, 2, &mut block);
+        let more = tab.scan_block(None, std::slice::from_ref(&range), &filters, 2, &mut block);
         let (rr, rc) = more.expect("a third match remains");
         assert_eq!(block.len(), 2);
         assert!(block.iter().all(|t| t.col == "c2"));
         let mut rest = Vec::new();
         let more = tab.scan_block(
             Some((rr.as_str(), rc.as_str(), false)),
-            &range,
+            std::slice::from_ref(&range),
             &filters,
             usize::MAX,
             &mut rest,
@@ -405,7 +472,9 @@ mod tests {
         // Value filters see the stored value beneath the copy too.
         let vf = vec![CellFilter::val(KeyMatch::Glob("b*".into()))];
         let mut vals = Vec::new();
-        assert!(tab.scan_block(None, &range, &vf, usize::MAX, &mut vals).is_none());
+        assert!(tab
+            .scan_block(None, std::slice::from_ref(&range), &vf, usize::MAX, &mut vals)
+            .is_none());
         assert_eq!(vals.len(), 3);
         assert!(vals.iter().all(|t| t.row == "b"));
     }
@@ -423,7 +492,7 @@ mod tests {
         let reject_all = vec![CellFilter::col(KeyMatch::Equals("nope".into()))];
         let range = ScanRange::all();
         let mut out = Vec::new();
-        let more = tab.scan_block(None, &range, &reject_all, 64, &mut out);
+        let more = tab.scan_block(None, std::slice::from_ref(&range), &reject_all, 64, &mut out);
         let (rr, rc) = more.expect("cap must fire before exhaustion");
         assert!(out.is_empty(), "every examined cell was rejected");
         assert_eq!(rr.as_str(), format!("r{:05}", SCAN_BLOCK - 1));
@@ -431,7 +500,7 @@ mod tests {
         // Resuming from the returned key walks the tail and exhausts.
         let more = tab.scan_block(
             Some((rr.as_str(), rc.as_str(), false)),
-            &range,
+            std::slice::from_ref(&range),
             &reject_all,
             64,
             &mut out,
@@ -443,10 +512,87 @@ mod tests {
         // call strides row to row — and must still yield at the cap.
         let window = ScanRange::all().with_cols("a", "b");
         let mut out2 = Vec::new();
-        let more = tab.scan_block(None, &window, &[], 64, &mut out2);
+        let more = tab.scan_block(None, std::slice::from_ref(&window), &[], 64, &mut out2);
         let (wr, _) = more.expect("cap must fire during a reseek walk");
         assert!(out2.is_empty());
         assert_eq!(wr.as_str(), format!("r{:05}", SCAN_BLOCK - 1));
+    }
+
+    #[test]
+    fn scan_block_hops_ranges_beneath_the_copy() {
+        use crate::store::scan::coalesce_ranges;
+        let mut tab = Tablet::new(None, None);
+        for r in ["a", "b", "c", "d", "e", "f"] {
+            for c in ["c1", "c2"] {
+                tab.put(t(r, c, "v"));
+            }
+        }
+        // Two disjoint row ranges: the walk unions them in one pass.
+        let ranges =
+            coalesce_ranges(vec![ScanRange::rows("e", "g"), ScanRange::rows("b", "c")]);
+        let mut got = Vec::new();
+        assert!(tab.scan_block(None, &ranges, &[], usize::MAX, &mut got).is_none());
+        let rows: Vec<&str> = got.iter().map(|t| t.row.as_str()).collect();
+        assert_eq!(rows, vec!["b", "b", "e", "e", "f", "f"]);
+        // Block-resume walk (limit 2) crosses the gap and covers each
+        // cell exactly once.
+        let mut stepped = Vec::new();
+        let mut from: Option<(SharedStr, SharedStr)> = None;
+        loop {
+            let mut block = Vec::new();
+            let f = from.as_ref().map(|(r, c)| (r.as_str(), c.as_str(), false));
+            let more = tab.scan_block(f, &ranges, &[], 2, &mut block);
+            stepped.extend(block);
+            match more {
+                Some(key) => from = Some(key),
+                None => break,
+            }
+        }
+        assert_eq!(stepped, got);
+        // Single-row ranges (the BFS frontier shape).
+        let singles = coalesce_ranges(vec![ScanRange::single("f"), ScanRange::single("a")]);
+        let mut probe = Vec::new();
+        assert!(tab.scan_block(None, &singles, &[], usize::MAX, &mut probe).is_none());
+        let keys: Vec<&str> = probe.iter().map(|t| t.row.as_str()).collect();
+        assert_eq!(keys, vec!["a", "a", "f", "f"]);
+        // An empty range set scans nothing.
+        let mut none = Vec::new();
+        assert!(tab.scan_block(None, &[], &[], usize::MAX, &mut none).is_none());
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn scan_block_unions_overlapping_column_windows() {
+        use crate::store::scan::coalesce_ranges;
+        let mut tab = Tablet::new(None, None);
+        for r in ["a", "b"] {
+            for c in ["c1", "c2", "c3", "c4", "c5"] {
+                tab.put(t(r, c, "v"));
+            }
+        }
+        // Two windows over the same (full) row span: per row, the walk
+        // hops from window to window (a multi-column-window scan).
+        let ranges = coalesce_ranges(vec![
+            ScanRange::all().with_cols("c4", "c5"),
+            ScanRange::all().with_cols("c1", "c2"),
+        ]);
+        assert_eq!(ranges.len(), 2);
+        let mut got = Vec::new();
+        assert!(tab.scan_block(None, &ranges, &[], usize::MAX, &mut got).is_none());
+        let keys: Vec<(&str, &str)> =
+            got.iter().map(|t| (t.row.as_str(), t.col.as_str())).collect();
+        assert_eq!(
+            keys,
+            vec![("a", "c1"), ("a", "c4"), ("b", "c1"), ("b", "c4")]
+        );
+        // Overlapping windows emit each cell once (dedup by walk).
+        let ranges = coalesce_ranges(vec![
+            ScanRange::all().with_cols("c1", "c3"),
+            ScanRange::all().with_cols("c2", "c4"),
+        ]);
+        let mut got = Vec::new();
+        assert!(tab.scan_block(None, &ranges, &[], usize::MAX, &mut got).is_none());
+        assert_eq!(got.iter().filter(|t| t.row == "a").count(), 3); // c1, c2, c3
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Equivalence suite for the server-side iterator stack.
 //!
-//! Contract under test: every stacked scan — any combination of row
-//! range, column window, filter stages, and a per-row combiner, at any
-//! thread count, streamed or collected, across tablet splits and
-//! offline tablets — is **byte-identical** to the naive client-side
-//! pipeline: materialize the row range, then filter, then reduce.
+//! Contract under test: every stacked scan — any *set* of ranges
+//! (including overlapping row spans and distinct column windows),
+//! filter stages, and a per-row combiner, at any thread count, streamed
+//! or collected, across tablet splits and offline tablets — is
+//! **byte-identical** to the naive client-side pipeline: materialize
+//! each range in full, take the sorted-dedup union, then filter, then
+//! reduce.
 
 use d4m::store::{
     format_num, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, SharedStr, Table,
@@ -15,24 +17,31 @@ use d4m::util::{Parallelism, SplitMix64};
 
 const THREADS: [usize; 3] = [2, 4, 7];
 
-/// The reference implementation: a plain row-range scan materialized in
-/// full, then client-side column window, filters, and row reduction —
-/// exactly what the stack is supposed to push into the tablets.
+/// The reference implementation: each range materialized by a plain
+/// row scan, client-side column window per range, sorted-dedup union
+/// across ranges, then filters and row reduction — exactly what the
+/// stack is supposed to push into the tablets.
 fn naive(table: &Table, spec: &ScanSpec) -> Vec<Triple> {
-    let rows_only = ScanRange {
-        lo: spec.range.lo.clone(),
-        hi: spec.range.hi.clone(),
-        ..ScanRange::default()
-    };
-    let mut cells: Vec<Triple> = table
-        .scan_par(rows_only, Parallelism::serial())
-        .into_iter()
-        .filter(|t| {
-            let in_window = spec.range.col_lo.as_deref().is_none_or(|lo| t.col.as_str() >= lo)
-                && spec.range.col_hi.as_deref().is_none_or(|hi| t.col.as_str() < hi);
-            in_window && spec.filters.iter().all(|f| f.matches(t))
-        })
-        .collect();
+    let mut cells: Vec<Triple> = Vec::new();
+    for range in &spec.ranges {
+        let rows_only = ScanRange {
+            lo: range.lo.clone(),
+            hi: range.hi.clone(),
+            ..ScanRange::default()
+        };
+        cells.extend(table.scan_par(rows_only, Parallelism::serial()).into_iter().filter(
+            |t| {
+                range.col_lo.as_deref().is_none_or(|lo| t.col.as_str() >= lo)
+                    && range.col_hi.as_deref().is_none_or(|hi| t.col.as_str() < hi)
+            },
+        ));
+    }
+    // Sorted-dedup union of the per-range results (cells are unique per
+    // (row, col); a cell caught by two ranges appears once).
+    cells.sort();
+    cells.dedup_by(|x, y| x.row == y.row && x.col == y.col);
+    let mut cells: Vec<Triple> =
+        cells.into_iter().filter(|t| spec.filters.iter().all(|f| f.matches(t))).collect();
     let Some(reduce) = &spec.reduce else {
         return cells;
     };
@@ -92,7 +101,9 @@ fn random_table(rng: &mut SplitMix64, cells: usize) -> Table {
     table
 }
 
-fn random_spec(rng: &mut SplitMix64) -> ScanSpec {
+/// One random range: half the time row-bounded, half the time a column
+/// window on top.
+fn random_range(rng: &mut SplitMix64) -> ScanRange {
     let mut range = if rng.chance(0.5) {
         let lo = rng.below(120);
         let hi = lo + 1 + rng.below(120 - lo);
@@ -105,7 +116,26 @@ fn random_spec(rng: &mut SplitMix64) -> ScanSpec {
         let hi = lo + 1 + rng.below(24 - lo);
         range = range.with_cols(format!("c{lo:02}"), format!("c{hi:02}"));
     }
-    let mut spec = ScanSpec::over(range);
+    range
+}
+
+fn random_spec(rng: &mut SplitMix64) -> ScanSpec {
+    // A third of the specs carry a multi-range set: point ranges, row
+    // spans, and windowed ranges, freely overlapping.
+    let mut spec = if rng.chance(0.33) {
+        let k = 1 + rng.below_usize(6);
+        let mut ranges = Vec::with_capacity(k);
+        for _ in 0..k {
+            if rng.chance(0.4) {
+                ranges.push(ScanRange::single(format!("r{:03}", rng.below(120))));
+            } else {
+                ranges.push(random_range(rng));
+            }
+        }
+        ScanSpec::ranges(ranges)
+    } else {
+        ScanSpec::over(random_range(rng))
+    };
     if rng.chance(0.4) {
         let matcher = match rng.below(4) {
             0 => KeyMatch::Prefix("c1".into()),
@@ -230,6 +260,179 @@ fn seek_respects_range_clamp() {
     assert_eq!(stream.next_triple().as_ref(), in_range.first());
     // ...and seeking past the range end exhausts the stream.
     stream.seek("r099", "");
+    assert_eq!(stream.next_triple(), None);
+}
+
+// ---------------------------------------------------------------------
+// Multi-range (BatchScanner) section
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_multirange_scan_equals_union_of_per_range_scans() {
+    // The PR 5 contract: a stacked multi-range scan is byte-identical
+    // to the sorted-dedup union of the equivalent single-range stacked
+    // scans — across splits, filter stacks, batch hints, and every
+    // thread count, streamed or collected.
+    check("multi-range scan == sorted-dedup union of per-range scans", 30, |g| {
+        let cells = 300 + g.rng().below_usize(500);
+        let table = random_table(g.rng(), cells);
+        assert!(table.tablet_count() > 2, "need real tablet fan-out");
+        let k = 1 + g.rng().below_usize(7);
+        let mut ranges = Vec::with_capacity(k);
+        for _ in 0..k {
+            if g.rng().chance(0.5) {
+                ranges.push(ScanRange::single(format!("r{:03}", g.rng().below(120))));
+            } else {
+                ranges.push(random_range(g.rng()));
+            }
+        }
+        let mut filters = Vec::new();
+        if g.rng().chance(0.4) {
+            filters.push(CellFilter::row(KeyMatch::Glob("r*1".into())));
+        }
+        if g.rng().chance(0.3) {
+            filters.push(CellFilter::val(KeyMatch::Glob("-*".into())));
+        }
+        // Union of the single-range stacked scans (same filter stack).
+        let mut expect: Vec<Triple> = Vec::new();
+        for r in &ranges {
+            let mut single = ScanSpec::over(r.clone());
+            single.filters = filters.clone();
+            expect.extend(table.scan_spec_par(&single, Parallelism::serial()));
+        }
+        expect.sort();
+        expect.dedup_by(|x, y| x.row == y.row && x.col == y.col);
+        // One stacked multi-range scan, every consumption mode.
+        let mut spec = ScanSpec::ranges(ranges);
+        spec.filters = filters;
+        if g.rng().chance(0.5) {
+            spec = spec.batched(1 + g.rng().below_usize(4000));
+        }
+        assert_eq!(expect, table.scan_spec_par(&spec, Parallelism::serial()), "serial");
+        for t in THREADS {
+            assert_eq!(
+                expect,
+                table.scan_spec_par(&spec, Parallelism::with_threads(t)),
+                "threads={t}"
+            );
+        }
+        let streamed: Vec<Triple> = table.scan_stream(spec.clone()).collect();
+        assert_eq!(expect, streamed, "streamed");
+        // And the generalized naive pipeline agrees (window per range).
+        assert_eq!(expect, naive(&table, &spec), "naive union");
+    });
+}
+
+#[test]
+fn prop_multirange_stacks_with_combiners() {
+    // Combiners fold the *union*: a row split across two ranges with
+    // different column windows aggregates once, over the union of its
+    // in-window cells.
+    check("multi-range scan + combiner == naive union-reduce", 20, |g| {
+        let table = random_table(g.rng(), 500);
+        let k = 2 + g.rng().below_usize(4);
+        let ranges: Vec<ScanRange> = (0..k).map(|_| random_range(g.rng())).collect();
+        let mut spec = ScanSpec::ranges(ranges).reduced(match g.rng().below(4) {
+            0 => RowReduce::Count { out_col: "n".into() },
+            1 => RowReduce::Sum { out_col: "s".into() },
+            2 => RowReduce::Min { out_col: "lo".into() },
+            _ => RowReduce::Max { out_col: "hi".into() },
+        });
+        if g.rng().chance(0.4) {
+            spec = spec.filtered(CellFilter::col(KeyMatch::Prefix("c1".into())));
+        }
+        let expect = naive(&table, &spec);
+        assert_eq!(expect, table.scan_spec_par(&spec, Parallelism::serial()), "serial");
+        for t in THREADS {
+            assert_eq!(
+                expect,
+                table.scan_spec_par(&spec, Parallelism::with_threads(t)),
+                "threads={t}"
+            );
+        }
+        let streamed: Vec<Triple> = table.scan_stream(spec.clone()).collect();
+        assert_eq!(expect, streamed, "streamed");
+    });
+}
+
+#[test]
+fn multirange_scan_ignores_offline_flags_like_naive() {
+    // Offline gates writes only; a multi-range scan must read through
+    // offline tablets exactly like the naive union.
+    let mut rng = SplitMix64::new(0x0FF_716);
+    let table = random_table(&mut rng, 600);
+    let tablets = table.tablet_count();
+    assert!(tablets > 3);
+    table.set_tablet_offline(0, true);
+    table.set_tablet_offline(tablets / 2, true);
+    let spec = ScanSpec::ranges([
+        ScanRange::rows("r000", "r030"),
+        ScanRange::rows("r050", "r080").with_cols("c05", "c15"),
+        ScanRange::single("r100"),
+    ])
+    .filtered(CellFilter::col(KeyMatch::Prefix("c0".into())));
+    let expect = naive(&table, &spec);
+    assert!(!expect.is_empty());
+    for t in [1, 2, 4, 7] {
+        assert_eq!(expect, table.scan_spec_par(&spec, Parallelism::with_threads(t)));
+    }
+    let streamed: Vec<Triple> = table.scan_stream(spec).collect();
+    assert_eq!(expect, streamed);
+}
+
+#[test]
+fn multirange_stream_survives_mid_scan_split() {
+    let table = Table::new("t", TableConfig { split_threshold: 512, write_latency_us: 0 });
+    for i in 0..60 {
+        table
+            .write_batch(vec![Triple::new(format!("a{i:03}"), "c", "v")])
+            .unwrap();
+    }
+    // Ranges over the existing prefix and one that only fills later.
+    let spec = ScanSpec::ranges([
+        ScanRange::rows("a000", "a020"),
+        ScanRange::rows("z000", "z040"),
+    ]);
+    let mut s = table.scan_stream(spec.clone());
+    let mut got = Vec::new();
+    for _ in 0..5 {
+        got.push(s.next_triple().unwrap());
+    }
+    // Grow the table across more split points while the stream is open;
+    // the cursor re-locates by key and hops into the late range.
+    table
+        .write_batch((0..40).map(|i| Triple::new(format!("z{i:03}"), "c", "v")).collect())
+        .unwrap();
+    for tr in s {
+        got.push(tr);
+    }
+    assert!(got.windows(2).all(|w| w[0] < w[1]), "stream stays sorted");
+    assert_eq!(got.iter().filter(|t| t.row.starts_with('a')).count(), 20);
+    assert_eq!(got.iter().filter(|t| t.row.starts_with('z')).count(), 40);
+    // A fresh scan agrees with the naive union on the final state.
+    assert_eq!(table.scan_spec(&spec), naive(&table, &spec));
+}
+
+#[test]
+fn multirange_seek_lands_on_next_range() {
+    let mut rng = SplitMix64::new(99);
+    let table = random_table(&mut rng, 400);
+    let spec = ScanSpec::ranges([
+        ScanRange::rows("r010", "r020"),
+        ScanRange::rows("r060", "r070"),
+    ]);
+    let expect = naive(&table, &spec);
+    let mut stream = table.scan_stream(spec);
+    // Seek into the gap: the stream resumes at the second range.
+    stream.seek("r040", "");
+    let got = stream.next_triple();
+    let gap_expect = expect.iter().find(|t| t.row.as_str() >= "r060").cloned();
+    assert_eq!(got, gap_expect);
+    // Seek before everything clamps to the set start.
+    stream.seek("", "");
+    assert_eq!(stream.next_triple().as_ref(), expect.first());
+    // Seek past everything exhausts.
+    stream.seek("r999", "");
     assert_eq!(stream.next_triple(), None);
 }
 

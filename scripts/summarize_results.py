@@ -84,6 +84,7 @@ ACCEPTANCE = {
     "hypersparse-matmul-adaptive": ("adaptive vs dense hypersparse SpGEMM", 1.3),
     "tablemult-masked": ("masked vs unmasked TableMult", 1.5),
     "e2e-dict": ("dict-encoded vs string ctor+TableMult (end-to-end)", 1.3),
+    "bfs-one-scan": ("one-scan BFS frontier vs per-node seeks", 1.4),
 }
 
 
