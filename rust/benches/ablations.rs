@@ -43,25 +43,36 @@
 //!   must be **≥ 1.4× faster** (asserted — the PR 5 acceptance
 //!   number, enforced on every CI bench smoke).
 //!
+//! * **Durable tier (PR 6)** — WAL-backed ingest, checkpoint recovery,
+//!   and run-backed scans. Recovering a checkpointed table directory
+//!   (immutable sorted runs + an empty log) must be **≥ 5× faster**
+//!   than re-ingesting the workload through the durable write path,
+//!   and a full scan served from runs must stay **within 1.1×** of the
+//!   all-in-memory scan (speedup ≥ 0.91×, bit-identical output) —
+//!   both asserted, the PR 6 acceptance numbers.
+//!
 //! Besides the CSV, the run writes the machine-readable perf
 //! trajectories `BENCH_PR2.json` (thread sweep + accumulator policies,
 //! schema-compatible with the PR 2 capture), `BENCH_PR3.json`
 //! (accumulator-policy row counters as extras, masked-vs-unmasked
 //! TableMult, streaming-vs-materializing scans), `BENCH_PR4.json`
-//! (string-vs-dict constructor + TableMult, allocation counters) and
-//! `BENCH_PR5.json` (per-seek vs one-scan BFS frontiers) for
-//! `scripts/summarize_results.py` and the CI artifacts.
+//! (string-vs-dict constructor + TableMult, allocation counters),
+//! `BENCH_PR5.json` (per-seek vs one-scan BFS frontiers) and
+//! `BENCH_PR6.json` (durable ingest, checkpoint recovery, run-backed
+//! scans) for `scripts/summarize_results.py` and the CI artifacts.
 //!
 //! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
 //! [--threads-n N] [--hyper-scale S] [--mask-scale S]
-//! [--stream-scale S] [--dict-scale S] [--bfs-scale S]` (`--threads-n`
+//! [--stream-scale S] [--dict-scale S] [--bfs-scale S]
+//! [--wal-scale S]` (`--threads-n`
 //! sets the scale of the thread sweep; default 10, the acceptance
 //! workload. `--hyper-scale` sets the hypersparse matmul to 2^S rows;
 //! default 14. `--mask-scale` / `--stream-scale` / `--dict-scale` size
 //! the masked-TableMult, scan, and dictionary sections to 2^S triples;
 //! defaults 12, 13 and 13. `--bfs-scale` sizes the BFS graph to 2^S
 //! nodes (degree 4); default 13 — the seed frontier stays pinned at
-//! 1 000 nodes, the acceptance shape).
+//! 1 000 nodes, the acceptance shape. `--wal-scale` sizes the durable
+//! tier section to 2^S triples; default 13).
 
 use d4m::assoc::{keys_from, Aggregator, Assoc, Key, KeyEncoding, ValsInput};
 use d4m::bench::{BenchRecord, FigureHarness, Workload};
@@ -69,8 +80,8 @@ use d4m::graphulo;
 use d4m::semiring::{PlusTimes, Semiring};
 use d4m::sparse::{spgemm, spgemm_par, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix};
 use d4m::store::{
-    format_num, BatchWriter, CellFilter, KeyMatch, ScanIter, ScanRange, ScanSpec, Table,
-    TableConfig, TableStore, Triple, WriterConfig,
+    format_num, BatchWriter, CellFilter, FsyncPolicy, KeyMatch, ScanIter, ScanRange, ScanSpec,
+    Table, TableConfig, TableStore, Triple, WriterConfig,
 };
 use d4m::util::{time_op, Args, Parallelism, SplitMix64};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -887,9 +898,138 @@ fn main() {
             .with_extra("edge_cells", bfs_table.len() as f64),
     ];
 
+    // --- durable tier: WAL ingest, checkpoint recovery, run-backed
+    // scans (PR 6). Two acceptance numbers, both asserted:
+    //   * recovering a checkpointed directory (sorted runs + an empty
+    //     log) must be >= 5x faster than re-ingesting the same workload
+    //     through the durable write path — the point of minor
+    //     compaction is that a restart loads packed runs instead of
+    //     replaying history one memtable insert at a time;
+    //   * a full scan of the recovered, run-backed table must stay
+    //     within 1.1x of the all-in-memory scan (speedup >= 0.91x) —
+    //     tiering must not tax readers.
+    let wscale = args.usize_or("wal-scale", 13);
+    let wn = 1usize << wscale;
+    let wal_dir = std::env::temp_dir().join(format!("d4m-ablations-wal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&wal_dir);
+    let wal_triples: Vec<Triple> = {
+        let mut rng = SplitMix64::new(0x3A1_5EED);
+        (0..wn)
+            .map(|i| {
+                Triple::new(
+                    format!("r{:06}", i % (wn / 8).max(1)),
+                    format!("c{:02}", rng.below(24)),
+                    format!("{}", rng.below(100)),
+                )
+            })
+            .collect()
+    };
+    // Durable ingest: every repeat starts a fresh table (Table::durable
+    // truncates the log), so each measures the full WAL-then-memtable
+    // write path over the whole workload.
+    let mut ingest_cells = 0usize;
+    let t_wal_ingest = time_op(1, repeats, |_| {
+        let t = Table::durable("walbench", TableConfig::default(), &wal_dir, FsyncPolicy::Never)
+            .expect("durable table");
+        ingest_cells = 0;
+        for chunk in wal_triples.chunks(64) {
+            ingest_cells += t.write_batch(chunk.to_vec()).expect("wal ingest");
+        }
+        t.sync().expect("wal sync");
+        ingest_cells
+    });
+    // Checkpoint the last ingest (freeze the memtable into runs), then
+    // recover once untimed: that first recovery replays the log and
+    // starts a fresh one, leaving the steady state a restart actually
+    // sees — runs plus an empty log.
+    {
+        let t = Table::durable("walbench", TableConfig::default(), &wal_dir, FsyncPolicy::Never)
+            .expect("durable table");
+        for chunk in wal_triples.chunks(64) {
+            t.write_batch(chunk.to_vec()).expect("wal ingest");
+        }
+        t.minor_compact().expect("minor compact");
+    }
+    let warm = Table::recover("walbench", TableConfig::default(), &wal_dir, FsyncPolicy::Never)
+        .expect("warm recover");
+    let wal_runs = warm.run_count();
+    drop(warm);
+    let t_wal_recover = time_op(1, repeats, |_| {
+        let t = Table::recover("walbench", TableConfig::default(), &wal_dir, FsyncPolicy::Never)
+            .expect("recover");
+        t.run_count()
+    });
+    // Reader-side cost of the tiering: the recovered table serves every
+    // cell out of runs; the flat table holds the same cells in its
+    // memtable. Outputs are bit-identical by contract.
+    let tiered = Table::recover("walbench", TableConfig::default(), &wal_dir, FsyncPolicy::Never)
+        .expect("recover");
+    let mem_table = Table::new("walmem", TableConfig::default());
+    for chunk in wal_triples.chunks(64) {
+        mem_table.write_batch(chunk.to_vec()).expect("ingest");
+    }
+    let mem_cells = mem_table.scan_par(ScanRange::all(), Parallelism::serial());
+    assert_eq!(
+        mem_cells,
+        tiered.scan_par(ScanRange::all(), Parallelism::serial()),
+        "run-backed scan must be bit-identical to the in-memory scan"
+    );
+    let wal_cells = mem_cells.len();
+    let mut scanned = 0usize;
+    let t_scan_mem = time_op(1, repeats, |_| {
+        scanned = mem_table.scan_par(ScanRange::all(), Parallelism::serial()).len();
+        scanned
+    });
+    let t_scan_run = time_op(1, repeats, |_| {
+        scanned = tiered.scan_par(ScanRange::all(), Parallelism::serial()).len();
+        scanned
+    });
+    let _ = std::fs::remove_dir_all(&wal_dir);
+    h.record(wscale, "wal-ingest", t_wal_ingest.clone(), ingest_cells);
+    h.record(wscale, "wal-recover", t_wal_recover.clone(), wal_cells);
+    h.record(wscale, "scan-in-memory", t_scan_mem.clone(), wal_cells);
+    h.record(wscale, "run-backed-scan", t_scan_run.clone(), wal_cells);
+    let recover_speedup = if t_wal_recover.mean_s() > 0.0 {
+        t_wal_ingest.mean_s() / t_wal_recover.mean_s()
+    } else {
+        0.0
+    };
+    let runscan_speedup =
+        if t_scan_run.mean_s() > 0.0 { t_scan_mem.mean_s() / t_scan_run.mean_s() } else { 0.0 };
+    println!(
+        "[ablations] durable 2^{wscale} triples ({wal_cells} cells, {wal_runs} runs): \
+         ingest={:.6}s recover={:.6}s ({recover_speedup:.2}x) scan mem={:.6}s \
+         run-backed={:.6}s ({runscan_speedup:.2}x)",
+        t_wal_ingest.mean_s(),
+        t_wal_recover.mean_s(),
+        t_scan_mem.mean_s(),
+        t_scan_run.mean_s(),
+    );
+    assert!(
+        recover_speedup >= 5.0,
+        "checkpoint recovery speedup {recover_speedup:.2}x below the 5x acceptance threshold"
+    );
+    assert!(
+        runscan_speedup >= 0.91,
+        "run-backed scan at {runscan_speedup:.2}x of in-memory is outside the 1.1x budget"
+    );
+    let records6: Vec<BenchRecord> = vec![
+        BenchRecord::new("wal-ingest", wscale, 1, t_wal_ingest.mean_s() * 1e9, 1.0)
+            .with_extra("cells", ingest_cells as f64),
+        BenchRecord::new("wal-recover", wscale, 1, t_wal_recover.mean_s() * 1e9, recover_speedup)
+            .with_extra("cells", wal_cells as f64)
+            .with_extra("runs", wal_runs as f64),
+        BenchRecord::new("scan-in-memory", wscale, 1, t_scan_mem.mean_s() * 1e9, 1.0)
+            .with_extra("cells", wal_cells as f64),
+        BenchRecord::new("run-backed-scan", wscale, 1, t_scan_run.mean_s() * 1e9, runscan_speedup)
+            .with_extra("cells", wal_cells as f64)
+            .with_extra("runs", wal_runs as f64),
+    ];
+
     h.write_csv(&out_dir).expect("write CSV");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR2.json", &records).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR3.json", &records3).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR4.json", &records4).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR5.json", &records5).expect("write JSON");
+    d4m::bench::write_bench_json(&out_dir, "BENCH_PR6.json", &records6).expect("write JSON");
 }

@@ -31,6 +31,12 @@
 //! [`StrDict`] (cells arrive as shared-bytes handles, so interning is a
 //! pointer clone), and the CSR builders consume ids — string bytes are
 //! touched once per distinct key instead of once per cell.
+//!
+//! The kernels are oblivious to the storage tiering underneath (PR 6):
+//! an input table whose cells live partly in frozen runs scans
+//! byte-identically to an all-in-memory one, so every kernel here works
+//! unchanged over compacted tables (pinned by the compacted-input
+//! equivalence test below and `tests/scan_stack.rs`).
 
 use crate::assoc::{Assoc, AssocError};
 use crate::semiring::Semiring;
@@ -551,6 +557,30 @@ mod tests {
         // Cross-check against the in-core algebra.
         let a = store.read_assoc("edges").unwrap();
         assert_eq!(ata, a.sqin());
+    }
+
+    #[test]
+    fn kernels_agree_on_compacted_inputs() {
+        // PR 6: inputs may be served from memtable+run stacks; kernel
+        // output must not depend on where the cells physically live.
+        let (store, t, _) = graph_store();
+        let out_mem = store.create_table("ata_mem");
+        table_mult(&t, &t, &out_mem, &PlusTimes);
+        let expect_bfs = bfs(&t, &["a".to_string()], 3);
+        let expect_deg = {
+            let d = store.create_table("deg_mem");
+            degree_table(&t, &d);
+            d.scan(ScanRange::all())
+        };
+        t.minor_compact().unwrap();
+        assert!(t.run_count() >= 1, "input should now be run-backed");
+        let out_run = store.create_table("ata_run");
+        table_mult(&t, &t, &out_run, &PlusTimes);
+        assert_eq!(out_run.scan(ScanRange::all()), out_mem.scan(ScanRange::all()));
+        assert_eq!(bfs(&t, &["a".to_string()], 3), expect_bfs);
+        let d = store.create_table("deg_run");
+        degree_table(&t, &d);
+        assert_eq!(d.scan(ScanRange::all()), expect_deg);
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Major compaction: merging a tablet's layers under a combiner and a
+//! version-retention rule.
+//!
+//! Accumulo applies its iterator stack *at compaction time* as well as
+//! at scan time: the versioning iterator keeps the newest `N` versions
+//! of each key, deletion markers swallow what they mask, and configured
+//! combiners fold a key's versions into one cell as files merge
+//! (arXiv:1508.07371 §II). [`CompactionSpec`] is that configuration
+//! here, and [`merge_cells`] is the merge itself, shared by
+//! [`super::Tablet::compact`].
+//!
+//! The combiner path re-uses the *scan-time* [`ReduceIter`] verbatim
+//! (fed by a slice-backed [`ScanIter`]), so a combiner applied at merge
+//! is bit-identical to the same combiner applied at scan — the
+//! equivalence `tests/scan_stack.rs` pins for every [`RowReduce`].
+
+use super::run::RunCell;
+use super::scan::{ReduceIter, RowReduce, ScanIter};
+use super::Triple;
+
+/// What a major compaction applies while merging layers.
+#[derive(Debug, Clone)]
+pub struct CompactionSpec {
+    /// Optional row combiner folded in at merge time. The merged run
+    /// then stores the *reduced* rows (one `(row, out_col)` cell per
+    /// row), exactly what scanning the uncompacted tablet through
+    /// [`crate::store::ScanSpec::reduced`] would emit.
+    pub reduce: Option<RowReduce>,
+    /// Newest versions of each `(row, col)` retained in the merged run
+    /// (Accumulo's versioning iterator; minimum 1). Ignored when
+    /// `reduce` folds rows down to single cells anyway.
+    pub max_versions: usize,
+}
+
+impl Default for CompactionSpec {
+    /// Accumulo's default table configuration: no combiner, keep only
+    /// the newest version.
+    fn default() -> Self {
+        CompactionSpec { reduce: None, max_versions: 1 }
+    }
+}
+
+/// [`ScanIter`] over an in-memory sorted triple list — the adapter that
+/// lets compaction drive the scan stack's [`ReduceIter`] over already
+/// merged cells.
+struct SliceIter {
+    data: Vec<Triple>,
+    pos: usize,
+}
+
+impl ScanIter for SliceIter {
+    fn seek(&mut self, row: &str, col: &str) {
+        self.pos = self
+            .data
+            .partition_point(|t| (t.row.as_str(), t.col.as_str()) < (row, col));
+    }
+
+    fn next_triple(&mut self) -> Option<Triple> {
+        let t = self.data.get(self.pos)?.clone();
+        self.pos += 1;
+        Some(t)
+    }
+}
+
+/// Merge collected cell versions under `spec`.
+///
+/// `cells` must be sorted by `(row, col)` with each key's versions
+/// adjacent and **newest first** (the priority order
+/// [`super::Tablet::compact`] builds), tombstones included. The merge:
+///
+/// 1. truncates each key's version list at its first tombstone (the
+///    marker masks everything older, then — this being a full-extent
+///    compaction — is itself dropped);
+/// 2. keeps at most `max_versions` surviving versions per key;
+/// 3. if a combiner is configured, folds the newest visible version of
+///    each key through the real scan-stack [`ReduceIter`] instead, so
+///    the output is the reduced row set.
+pub(crate) fn merge_cells(cells: Vec<RunCell>, spec: &CompactionSpec) -> Vec<RunCell> {
+    debug_assert!(cells
+        .windows(2)
+        .all(|w| (w[0].0.as_str(), w[0].1.as_str()) <= (w[1].0.as_str(), w[1].1.as_str())));
+    if let Some(reduce) = &spec.reduce {
+        // Newest visible version per key — what a scan of the
+        // uncompacted tablet would stream into its ReduceIter.
+        let mut newest: Vec<Triple> = Vec::new();
+        each_group(&cells, |group| {
+            if let (r, c, Some(v)) = &group[0] {
+                newest.push(Triple { row: r.clone(), col: c.clone(), val: v.clone() });
+            }
+        });
+        let mut folded = ReduceIter::new(SliceIter { data: newest, pos: 0 }, Some(reduce.clone()));
+        let mut out: Vec<RunCell> = Vec::new();
+        while let Some(t) = folded.next_triple() {
+            out.push((t.row, t.col, Some(t.val)));
+        }
+        return out;
+    }
+    let keep = spec.max_versions.max(1);
+    let mut out: Vec<RunCell> = Vec::new();
+    each_group(&cells, |group| {
+        for cell in group.iter().take_while(|c| c.2.is_some()).take(keep) {
+            out.push(cell.clone());
+        }
+    });
+    out
+}
+
+/// Call `f` once per maximal same-key group of `cells` (sorted input).
+fn each_group(cells: &[RunCell], mut f: impl FnMut(&[RunCell])) {
+    let mut i = 0usize;
+    while i < cells.len() {
+        let key = (cells[i].0.as_str(), cells[i].1.as_str());
+        let mut j = i + 1;
+        while j < cells.len() && (cells[j].0.as_str(), cells[j].1.as_str()) == key {
+            j += 1;
+        }
+        f(&cells[i..j]);
+        i = j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SharedStr;
+
+    fn cell(r: &str, c: &str, v: Option<&str>) -> RunCell {
+        (r.into(), c.into(), v.map(SharedStr::from))
+    }
+
+    #[test]
+    fn tombstone_masks_older_versions_then_drops() {
+        let cells = vec![
+            cell("a", "x", Some("3")), // newest
+            cell("a", "x", None),      // delete below it
+            cell("a", "x", Some("1")), // masked
+            cell("b", "y", None),      // deleted outright
+            cell("b", "y", Some("9")),
+        ];
+        let out = merge_cells(cells, &CompactionSpec { reduce: None, max_versions: 10 });
+        assert_eq!(out, vec![cell("a", "x", Some("3"))]);
+    }
+
+    #[test]
+    fn max_versions_trims_each_group() {
+        let cells = vec![
+            cell("a", "x", Some("3")),
+            cell("a", "x", Some("2")),
+            cell("a", "x", Some("1")),
+            cell("b", "y", Some("7")),
+        ];
+        let out = merge_cells(cells, &CompactionSpec { reduce: None, max_versions: 2 });
+        assert_eq!(
+            out,
+            vec![cell("a", "x", Some("3")), cell("a", "x", Some("2")), cell("b", "y", Some("7"))]
+        );
+        // max_versions is clamped to ≥ 1.
+        let cells = vec![cell("a", "x", Some("3")), cell("a", "x", Some("2"))];
+        let out = merge_cells(cells, &CompactionSpec { reduce: None, max_versions: 0 });
+        assert_eq!(out, vec![cell("a", "x", Some("3"))]);
+    }
+
+    #[test]
+    fn reduce_folds_newest_visible_versions() {
+        let cells = vec![
+            cell("a", "x", Some("3")),
+            cell("a", "x", Some("1")), // shadowed: must not count
+            cell("a", "y", Some("4")),
+            cell("a", "z", None), // deleted: must not count
+            cell("b", "x", Some("5")),
+        ];
+        let spec = CompactionSpec {
+            reduce: Some(RowReduce::Sum { out_col: "sum".into() }),
+            max_versions: 1,
+        };
+        let out = merge_cells(cells, &spec);
+        assert_eq!(out, vec![cell("a", "sum", Some("7")), cell("b", "sum", Some("5"))]);
+    }
+}

@@ -35,18 +35,32 @@
 //! [`crate::assoc::Assoc`] happens at the boundary
 //! ([`Table::scan_to_assoc`], [`TableStore::ingest_assoc`]), where the
 //! dictionary encoder touches each distinct key once.
+//!
+//! **Durability** (PR 6) gives the store Accumulo's tiered write path:
+//! a [`wal`] write-ahead log in front of the memtables, minor
+//! compactions freezing memtables into immutable dictionary-encoded
+//! sorted runs, and major compactions merging runs under a combiner
+//! and version-retention rule ([`CompactionSpec`]). Open durable tables
+//! with [`TableStore::durable`]; reopen a directory after a crash with
+//! [`TableStore::recover`].
 
+mod compact;
+mod run;
 pub mod scan;
 mod table;
 mod tablet;
+pub mod wal;
 mod writer;
 
+pub use compact::CompactionSpec;
+pub use run::{Run, RunCursor};
 pub use scan::{
     coalesce_ranges, format_num, CellField, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange,
     ScanSpec, SCAN_BLOCK,
 };
 pub use table::{Table, TableConfig, TableStream};
 pub use tablet::Tablet;
+pub use wal::FsyncPolicy;
 pub use writer::{BatchWriter, WriterConfig};
 
 use crate::assoc::{Aggregator, Assoc, Key, ValsInput};
@@ -90,6 +104,10 @@ pub enum StoreError {
     NoSuchTable(String),
     /// A tablet server was marked offline (failure injection).
     TabletOffline { table: String, tablet: usize },
+    /// A durable-storage I/O failure (WAL append, run write), with the
+    /// failing operation's context. Carried as a rendered string so the
+    /// error stays `Clone + PartialEq` like the rest of the enum.
+    Io { context: String },
 }
 
 impl std::fmt::Display for StoreError {
@@ -99,6 +117,7 @@ impl std::fmt::Display for StoreError {
             StoreError::TabletOffline { table, tablet } => {
                 write!(f, "tablet {tablet} of table {table} is offline")
             }
+            StoreError::Io { context } => write!(f, "storage i/o error: {context}"),
         }
     }
 }
@@ -110,12 +129,15 @@ impl std::error::Error for StoreError {}
 pub struct TableStore {
     tables: Mutex<BTreeMap<String, Arc<Table>>>,
     config: TableConfig,
+    /// Durable root + fsync policy: when set, every table lives in its
+    /// own `<root>/<name>/` directory with a WAL and run files.
+    durable: Option<(std::path::PathBuf, FsyncPolicy)>,
 }
 
 impl TableStore {
     /// New store whose tables use `config`.
     pub fn new(config: TableConfig) -> Self {
-        TableStore { tables: Mutex::new(BTreeMap::new()), config }
+        TableStore { tables: Mutex::new(BTreeMap::new()), config, durable: None }
     }
 
     /// New store with default table configuration.
@@ -123,12 +145,78 @@ impl TableStore {
         Self::new(TableConfig::default())
     }
 
-    /// Create (or get) a table.
+    /// New durable store rooted at `dir`: each created table gets its
+    /// own subdirectory (`<dir>/<name>/`) holding a write-ahead log and
+    /// its compacted runs. Table names are used as directory names.
+    /// Reopen an existing root with [`TableStore::recover`].
+    pub fn durable(
+        dir: impl AsRef<std::path::Path>,
+        config: TableConfig,
+        policy: FsyncPolicy,
+    ) -> std::io::Result<Self> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut store = Self::new(config);
+        store.durable = Some((dir.to_path_buf(), policy));
+        Ok(store)
+    }
+
+    /// Reopen a durable store root with default configuration and
+    /// [`FsyncPolicy::Never`]: every subdirectory of `dir` is recovered
+    /// as a table (runs loaded, WAL suffix replayed).
+    pub fn recover(dir: impl AsRef<std::path::Path>) -> std::io::Result<Self> {
+        Self::recover_with(dir, TableConfig::default(), FsyncPolicy::Never)
+    }
+
+    /// [`TableStore::recover`] with explicit table configuration and
+    /// fsync policy. Non-directory entries under the root are skipped;
+    /// a non-UTF-8 directory name is an `InvalidData` error (it cannot
+    /// name a table).
+    pub fn recover_with(
+        dir: impl AsRef<std::path::Path>,
+        config: TableConfig,
+        policy: FsyncPolicy,
+    ) -> std::io::Result<Self> {
+        let dir = dir.as_ref();
+        let store = Self::durable(dir, config, policy)?;
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if !entry.file_type()?.is_dir() {
+                continue;
+            }
+            let name = entry.file_name().into_string().map_err(|raw| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("non-UTF-8 table directory name: {raw:?}"),
+                )
+            })?;
+            let table =
+                Table::recover(&name, store.config.clone(), &entry.path(), policy)?;
+            store.tables.lock().unwrap().insert(name, Arc::new(table));
+        }
+        Ok(store)
+    }
+
+    /// Create (or get) a table. On a durable store this creates the
+    /// table's directory and write-ahead log; an I/O failure there
+    /// panics with context (use [`TableStore::recover`] to reopen
+    /// existing tables instead of re-creating them).
     pub fn create_table(&self, name: &str) -> Arc<Table> {
         let mut tables = self.tables.lock().unwrap();
         tables
             .entry(name.to_string())
-            .or_insert_with(|| Arc::new(Table::new(name, self.config.clone())))
+            .or_insert_with(|| {
+                let table = match &self.durable {
+                    Some((root, policy)) => {
+                        Table::durable(name, self.config.clone(), &root.join(name), *policy)
+                            .unwrap_or_else(|e| {
+                                panic!("creating durable table '{name}': {e}")
+                            })
+                    }
+                    None => Table::new(name, self.config.clone()),
+                };
+                Arc::new(table)
+            })
             .clone()
     }
 
@@ -205,15 +293,30 @@ impl TableStore {
 
     /// Restore tables from a [`TableStore::snapshot`] directory
     /// (creates one table per `*.tsv` file). Returns the table names
-    /// restored.
+    /// restored. Directories and files without a `.tsv` extension are
+    /// skipped; a `.tsv` file whose stem is not UTF-8 is an
+    /// `InvalidData` error (it cannot name a table) rather than a
+    /// silently mangled lossy name.
     pub fn restore(&self, dir: impl AsRef<std::path::Path>) -> std::io::Result<Vec<String>> {
         let mut names = Vec::new();
         for entry in std::fs::read_dir(dir)? {
-            let path = entry?.path();
+            let entry = entry?;
+            if !entry.file_type()?.is_file() {
+                continue;
+            }
+            let path = entry.path();
             if path.extension().and_then(|e| e.to_str()) != Some("tsv") {
                 continue;
             }
-            let name = path.file_stem().unwrap().to_string_lossy().to_string();
+            let name = match path.file_stem().and_then(|s| s.to_str()) {
+                Some(stem) => stem.to_string(),
+                None => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("non-UTF-8 snapshot file name: {}", path.display()),
+                    ))
+                }
+            };
             let table = self.create_table(&name);
             let mut w = BatchWriter::new(Arc::clone(&table), WriterConfig::default());
             for (lineno, line) in std::fs::read_to_string(&path)?.lines().enumerate() {
@@ -363,5 +466,61 @@ mod tests {
         assert_eq!(names, vec!["edges".to_string(), "edges_T".to_string()]);
         assert_eq!(fresh.read_assoc("edges").unwrap(), a);
         assert_eq!(fresh.read_assoc("edges_T").unwrap(), a.transpose());
+    }
+
+    #[test]
+    fn restore_skips_stray_entries() {
+        // Regression: restore used to panic (file_stem().unwrap()) on
+        // odd directory entries and lossy-coerce non-UTF-8 names.
+        let store = TableStore::with_defaults();
+        let a = Assoc::from_triples(&["r"], &["c"], &["v"][..]);
+        store.ingest_assoc("edges", &a);
+        let dir = std::env::temp_dir().join("d4m-restore-stray-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        store.snapshot(&dir).unwrap();
+        // Stray non-snapshot entries that must be skipped, not tripped
+        // over: a lockfile, a dotfile, and a subdirectory named like a
+        // snapshot.
+        std::fs::write(dir.join("LOCK"), b"pid 1234").unwrap();
+        std::fs::write(dir.join(".hidden"), b"").unwrap();
+        std::fs::create_dir(dir.join("not-a-table.tsv")).unwrap();
+        let fresh = TableStore::with_defaults();
+        let names = fresh.restore(&dir).unwrap();
+        assert_eq!(names, vec!["edges".to_string(), "edges_T".to_string()]);
+        assert_eq!(fresh.read_assoc("edges").unwrap(), a);
+        // A non-UTF-8 *.tsv name is a typed error, not a mangled table.
+        #[cfg(unix)]
+        {
+            use std::os::unix::ffi::OsStrExt;
+            let bad = dir.join(std::ffi::OsStr::from_bytes(b"bad\xff.tsv"));
+            std::fs::write(&bad, b"r\tc\tv\n").unwrap();
+            let err = TableStore::with_defaults().restore(&dir).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn durable_store_recovers_tables() {
+        let dir = std::env::temp_dir().join("d4m-durable-store-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = Assoc::from_triples(&["r1", "r2"], &["c1", "c2"], vec![1.0, 2.0]);
+        {
+            let store =
+                TableStore::durable(&dir, TableConfig::default(), FsyncPolicy::Never).unwrap();
+            store.ingest_assoc("edges", &a);
+            // One table checkpointed to runs, the other left WAL-only:
+            // recovery must handle both layouts.
+            store.table("edges").unwrap().minor_compact().unwrap();
+            store.table("edges").unwrap().sync().unwrap();
+            store.table("edges_T").unwrap().sync().unwrap();
+        }
+        let back = TableStore::recover(&dir).unwrap();
+        let mut names = back.table_names();
+        names.sort();
+        assert_eq!(names, vec!["edges".to_string(), "edges_T".to_string()]);
+        assert_eq!(back.read_assoc("edges").unwrap(), a);
+        assert_eq!(back.read_assoc("edges_T").unwrap(), a.transpose());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

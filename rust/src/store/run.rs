@@ -1,0 +1,453 @@
+//! Immutable sorted runs: frozen tablets as dictionary-encoded blocks.
+//!
+//! Accumulo's minor compaction writes a tablet's in-memory map to an
+//! immutable sorted file (an RFile); scans then merge the memory map
+//! with the files (arXiv:1508.07371 §II). A [`Run`] is that file's
+//! in-process form, and it closes the PR 4 follow-up of spilling the
+//! [`StrDict`] into the store layer (the D4M 3.0 server-side dictionary,
+//! arXiv:1702.03253): a run stores `u32` id triples over one sorted
+//! per-run string pool, so id order *is* string order and the merge
+//! walk compares pooled `&str`s without per-cell allocation.
+//!
+//! A run may hold several versions of a key (newest first) when major
+//! compaction retains `max_versions > 1`, and it may hold tombstones
+//! ([`TOMBSTONE`] value id) masking older runs — exactly Accumulo's
+//! deletion markers.
+//!
+//! ## File format (`run-<seq>.run`)
+//!
+//! ```text
+//! [8-byte magic "D4MRUN01"]
+//! [u64 seq][u64 watermark]
+//! [u32 pool_len] pool_len × ([u32 len][bytes])
+//! [u32 ntriples] ntriples × ([u32 row][u32 col][u32 val])
+//! [u32 crc32(everything after the magic)]
+//! ```
+//!
+//! All integers little-endian; the CRC guards the whole body so a torn
+//! or bit-flipped run file fails loudly at [`Run::load`] instead of
+//! serving wrong cells.
+
+use super::wal::crc32;
+use crate::util::intern::StrDict;
+use crate::util::SharedStr;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+/// Magic bytes opening every run file (format version 01).
+pub const RUN_MAGIC: &[u8; 8] = b"D4MRUN01";
+
+/// Value id marking a deletion tombstone (never a real pool id).
+pub const TOMBSTONE: u32 = u32::MAX;
+
+/// Sanity cap on pool and triple counts read from disk.
+const MAX_COUNT: u32 = 1 << 28;
+
+/// One cell as frozen: key plus value, `None` value = tombstone.
+pub type RunCell = (SharedStr, SharedStr, Option<SharedStr>);
+
+/// An immutable, dictionary-encoded sorted block of cells.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Run {
+    seq: u64,
+    watermark: u64,
+    /// Sorted distinct strings; `u32` id order equals string order.
+    pool: Vec<SharedStr>,
+    /// `(row, col, val)` pool ids, sorted by `(row, col)`; duplicate
+    /// keys are adjacent, newest version first. `val == TOMBSTONE`
+    /// marks a deletion.
+    triples: Vec<(u32, u32, u32)>,
+}
+
+impl Run {
+    /// Freeze `cells` into a run. `cells` must be sorted by `(row,
+    /// col)` with duplicate keys newest-first — the order every caller
+    /// (tablet freeze, major compaction) produces naturally.
+    ///
+    /// `seq` names the run file; `watermark` is the highest WAL
+    /// sequence number whose effects the run captures (recovery skips
+    /// WAL records at or below the minimum live watermark).
+    pub fn from_cells(seq: u64, watermark: u64, cells: &[RunCell]) -> Run {
+        debug_assert!(cells
+            .windows(2)
+            .all(|w| (w[0].0.as_str(), w[0].1.as_str()) <= (w[1].0.as_str(), w[1].1.as_str())));
+        let mut dict = StrDict::new();
+        let raw: Vec<(u32, u32, u32)> = cells
+            .iter()
+            .map(|(r, c, v)| {
+                (
+                    dict.intern(r),
+                    dict.intern(c),
+                    v.as_ref().map_or(TOMBSTONE, |v| dict.intern(v)),
+                )
+            })
+            .collect();
+        // `into_sorted` yields the pool in string order plus the
+        // monotone old-id → rank map; remapping ids through it keeps
+        // the (row, col) sort *and* the stable newest-first order of
+        // duplicate keys (no re-sort happens).
+        let (pool, rank) = dict.into_sorted();
+        let triples = raw
+            .into_iter()
+            .map(|(r, c, v)| {
+                let v = if v == TOMBSTONE { TOMBSTONE } else { rank[v as usize] };
+                (rank[r as usize], rank[c as usize], v)
+            })
+            .collect();
+        Run { seq, watermark, pool, triples }
+    }
+
+    /// The run's file sequence number (unique per table, increasing).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Highest WAL sequence number this run's contents cover.
+    pub fn watermark(&self) -> u64 {
+        self.watermark
+    }
+
+    /// Number of stored cells (tombstones included).
+    pub fn len(&self) -> usize {
+        self.triples.len()
+    }
+
+    /// Whether the run stores no cells at all.
+    pub fn is_empty(&self) -> bool {
+        self.triples.is_empty()
+    }
+
+    /// Key of cell `i` as pooled strings.
+    #[inline]
+    pub fn key(&self, i: usize) -> (&SharedStr, &SharedStr) {
+        let (r, c, _) = self.triples[i];
+        (&self.pool[r as usize], &self.pool[c as usize])
+    }
+
+    /// Value of cell `i`; `None` for a tombstone.
+    #[inline]
+    pub fn val(&self, i: usize) -> Option<&SharedStr> {
+        let (_, _, v) = self.triples[i];
+        if v == TOMBSTONE {
+            None
+        } else {
+            Some(&self.pool[v as usize])
+        }
+    }
+
+    #[inline]
+    fn key_str(&self, i: usize) -> (&str, &str) {
+        let (r, c) = self.key(i);
+        (r.as_str(), c.as_str())
+    }
+
+    /// Index of the first cell at or after `(row, col)` (`inclusive`)
+    /// or strictly after the *whole version group* of `(row, col)`
+    /// (`!inclusive`). Pool ids sort like strings, so this is a plain
+    /// binary search over pooled `&str`s.
+    pub fn lower_bound(&self, row: &str, col: &str, inclusive: bool) -> usize {
+        if inclusive {
+            self.partition(|k| k < (row, col))
+        } else {
+            self.partition(|k| k <= (row, col))
+        }
+    }
+
+    #[inline]
+    fn partition(&self, pred: impl Fn((&str, &str)) -> bool) -> usize {
+        let mut lo = 0usize;
+        let mut hi = self.triples.len();
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if pred(self.key_str(mid)) {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Half-open index range of cells whose row lies in `[lo, hi)`
+    /// (either bound `None` = unbounded) — the clamp that keeps a
+    /// cloned run from leaking cells outside a split tablet's extent.
+    pub fn extent_range(&self, lo: Option<&str>, hi: Option<&str>) -> (usize, usize) {
+        let start = match lo {
+            Some(lo) => self.partition(|(r, _)| r < lo),
+            None => 0,
+        };
+        let end = match hi {
+            Some(hi) => self.partition(|(r, _)| r < hi),
+            None => self.triples.len(),
+        };
+        (start, end.max(start))
+    }
+
+    /// Newest version of `(row, col)` in this run: `None` if the run
+    /// has no cell for the key, `Some(None)` if the newest version is
+    /// a tombstone, `Some(Some(val))` otherwise.
+    pub fn get(&self, row: &str, col: &str) -> Option<Option<&SharedStr>> {
+        let i = self.lower_bound(row, col, true);
+        if i < self.triples.len() && self.key_str(i) == (row, col) {
+            Some(self.val(i))
+        } else {
+            None
+        }
+    }
+
+    /// Number of stored versions of `(row, col)` (tombstones counted).
+    pub fn versions(&self, row: &str, col: &str) -> usize {
+        self.lower_bound(row, col, false) - self.lower_bound(row, col, true)
+    }
+
+    /// Serialize to `path` (see the module docs for the format).
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let mut body = Vec::with_capacity(32 + self.pool.len() * 12 + self.triples.len() * 12);
+        body.extend_from_slice(&self.seq.to_le_bytes());
+        body.extend_from_slice(&self.watermark.to_le_bytes());
+        body.extend_from_slice(&(self.pool.len() as u32).to_le_bytes());
+        for s in &self.pool {
+            body.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            body.extend_from_slice(s.as_bytes());
+        }
+        body.extend_from_slice(&(self.triples.len() as u32).to_le_bytes());
+        for &(r, c, v) in &self.triples {
+            body.extend_from_slice(&r.to_le_bytes());
+            body.extend_from_slice(&c.to_le_bytes());
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(RUN_MAGIC)?;
+        f.write_all(&body)?;
+        f.write_all(&crc32(&body).to_le_bytes())?;
+        f.flush()?;
+        f.get_ref().sync_data()
+    }
+
+    /// Load a run from `path`, validating magic, CRC, and id bounds.
+    /// Unlike the WAL, a damaged run file is a hard
+    /// [`io::ErrorKind::InvalidData`] error: runs are written atomically
+    /// after an fsync, so torn runs are not an expected crash state.
+    pub fn load(path: &Path) -> io::Result<Run> {
+        let bad = |msg: &str| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("{}: {msg}", path.display()))
+        };
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        if bytes.len() < RUN_MAGIC.len() + 4 || &bytes[..RUN_MAGIC.len()] != RUN_MAGIC {
+            return Err(bad("not a d4m run file (bad magic or too short)"));
+        }
+        let body = &bytes[RUN_MAGIC.len()..bytes.len() - 4];
+        let stored_crc =
+            u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().expect("4 bytes"));
+        if crc32(body) != stored_crc {
+            return Err(bad("run body failed its checksum"));
+        }
+        struct Reader<'a> {
+            buf: &'a [u8],
+            pos: usize,
+        }
+        impl<'a> Reader<'a> {
+            fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+                let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len())?;
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Some(s)
+            }
+            fn u32(&mut self) -> Option<u32> {
+                self.take(4).map(|b| u32::from_le_bytes(b.try_into().expect("4 bytes")))
+            }
+            fn u64(&mut self) -> Option<u64> {
+                self.take(8).map(|b| u64::from_le_bytes(b.try_into().expect("8 bytes")))
+            }
+        }
+        let mut rd = Reader { buf: body, pos: 0 };
+        let parse = |rd: &mut Reader<'_>| -> Option<Result<Run, &'static str>> {
+            let seq = rd.u64()?;
+            let watermark = rd.u64()?;
+            let pool_len = rd.u32()?;
+            if pool_len > MAX_COUNT {
+                return Some(Err("run pool count out of range"));
+            }
+            let mut pool = Vec::with_capacity(pool_len as usize);
+            for _ in 0..pool_len {
+                let len = rd.u32()? as usize;
+                match std::str::from_utf8(rd.take(len)?) {
+                    Ok(s) => pool.push(SharedStr::from(s)),
+                    Err(_) => return Some(Err("run pool entry is not UTF-8")),
+                }
+            }
+            let ntriples = rd.u32()?;
+            if ntriples > MAX_COUNT {
+                return Some(Err("run triple count out of range"));
+            }
+            let mut triples = Vec::with_capacity(ntriples as usize);
+            for _ in 0..ntriples {
+                let (r, c, v) = (rd.u32()?, rd.u32()?, rd.u32()?);
+                let in_pool = |id: u32| (id as usize) < pool.len();
+                if !in_pool(r) || !in_pool(c) || (v != TOMBSTONE && !in_pool(v)) {
+                    return Some(Err("run triple id out of pool range"));
+                }
+                triples.push((r, c, v));
+            }
+            Some(Ok(Run { seq, watermark, pool, triples }))
+        };
+        let run = match parse(&mut rd) {
+            None => return Err(bad("run body truncated")),
+            Some(Err(msg)) => return Err(bad(msg)),
+            Some(Ok(run)) => run,
+        };
+        if rd.pos != body.len() {
+            return Err(bad("trailing bytes after run body"));
+        }
+        Ok(run)
+    }
+}
+
+/// Forward cursor over a run's cells within an extent-clamped index
+/// window. Borrowed views live as long as the run (`'r`), independent
+/// of the cursor borrow — the merge walk peeks several cursors at once.
+#[derive(Debug)]
+pub struct RunCursor<'r> {
+    run: &'r Run,
+    pos: usize,
+    end: usize,
+}
+
+impl<'r> RunCursor<'r> {
+    /// Cursor over `run` positioned at `pos`, bounded by `end`.
+    pub fn new(run: &'r Run, pos: usize, end: usize) -> RunCursor<'r> {
+        RunCursor { run, pos: pos.min(end), end }
+    }
+
+    /// Current cell, or `None` past the window. The value is `None`
+    /// for a tombstone.
+    #[inline]
+    pub fn peek(&self) -> Option<(&'r SharedStr, &'r SharedStr, Option<&'r SharedStr>)> {
+        if self.pos >= self.end {
+            return None;
+        }
+        let (r, c) = self.run.key(self.pos);
+        Some((r, c, self.run.val(self.pos)))
+    }
+
+    /// Step past the *entire version group* of the current key, so the
+    /// cursor only ever exposes each key's newest version.
+    pub fn advance_key(&mut self) {
+        if self.pos >= self.end {
+            return;
+        }
+        // `key_str` borrows from `self.run: &'r Run`, not from the
+        // cursor, so the key stays valid while `pos` moves. Version
+        // groups are tiny (≤ max_versions); linear step.
+        let key = self.run.key_str(self.pos);
+        while self.pos < self.end && self.run.key_str(self.pos) == key {
+            self.pos += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(r: &str, c: &str, v: Option<&str>) -> RunCell {
+        (r.into(), c.into(), v.map(SharedStr::from))
+    }
+
+    fn sample() -> Run {
+        Run::from_cells(
+            7,
+            42,
+            &[
+                cell("a", "x", Some("1")),
+                cell("a", "y", None), // tombstone
+                cell("b", "x", Some("3")),
+                cell("b", "x", Some("2")), // older version, newest first
+                cell("d", "z", Some("4")),
+            ],
+        )
+    }
+
+    #[test]
+    fn from_cells_preserves_order_and_versions() {
+        let run = sample();
+        assert_eq!((run.seq(), run.watermark(), run.len()), (7, 42, 5));
+        let keys: Vec<(String, String)> = (0..run.len())
+            .map(|i| {
+                let (r, c) = run.key(i);
+                (r.to_string(), c.to_string())
+            })
+            .collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("a".into(), "x".into()),
+                ("a".into(), "y".into()),
+                ("b".into(), "x".into()),
+                ("b".into(), "x".into()),
+                ("d".into(), "z".into()),
+            ]
+        );
+        // Newest-first duplicate order survived the dictionary remap.
+        assert_eq!(run.val(2).map(|v| v.as_str()), Some("3"));
+        assert_eq!(run.val(3).map(|v| v.as_str()), Some("2"));
+        assert_eq!(run.val(1), None);
+    }
+
+    #[test]
+    fn lookup_and_bounds() {
+        let run = sample();
+        assert_eq!(run.get("a", "x").unwrap().unwrap().as_str(), "1");
+        assert_eq!(run.get("a", "y"), Some(None)); // tombstone visible
+        assert_eq!(run.get("b", "x").unwrap().unwrap().as_str(), "3"); // newest
+        assert_eq!(run.get("c", "q"), None);
+        assert_eq!(run.versions("b", "x"), 2);
+        assert_eq!(run.versions("a", "x"), 1);
+        assert_eq!(run.lower_bound("b", "x", true), 2);
+        assert_eq!(run.lower_bound("b", "x", false), 4); // past the group
+        assert_eq!(run.extent_range(Some("b"), Some("d")), (2, 4));
+        assert_eq!(run.extent_range(None, None), (0, 5));
+        assert_eq!(run.extent_range(Some("e"), None), (5, 5));
+    }
+
+    #[test]
+    fn cursor_exposes_newest_per_key() {
+        let run = sample();
+        let (start, end) = run.extent_range(None, None);
+        let mut cur = RunCursor::new(&run, start, end);
+        let mut seen = Vec::new();
+        while let Some((r, c, v)) = cur.peek() {
+            seen.push((r.to_string(), c.to_string(), v.map(|v| v.to_string())));
+            cur.advance_key();
+        }
+        assert_eq!(
+            seen,
+            vec![
+                ("a".into(), "x".into(), Some("1".into())),
+                ("a".into(), "y".into(), None),
+                ("b".into(), "x".into(), Some("3".into())), // newest of the pair
+                ("d".into(), "z".into(), Some("4".into())),
+            ]
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_corruption() {
+        let dir = std::env::temp_dir().join("d4m-run-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.run");
+        let run = sample();
+        run.save(&path).unwrap();
+        assert_eq!(Run::load(&path).unwrap(), run);
+        // Flip a byte in the body: load must fail the checksum.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(Run::load(&path).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        // Not a run file at all.
+        std::fs::write(&path, b"garbage").unwrap();
+        assert_eq!(Run::load(&path).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+}

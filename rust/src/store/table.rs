@@ -14,16 +14,41 @@
 //! [`Table::scan`] / [`Table::scan_par`] entry points are thin
 //! consumers of the same stack.
 
+use super::compact::CompactionSpec;
+use super::run::Run;
 use super::scan::{
     self, stack_collect, CellFilter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor,
     SCAN_BLOCK,
 };
 use super::tablet::Tablet;
+use super::wal::{self, FsyncPolicy, WalOp, WalWriter};
 use super::{SharedStr, StoreError, Triple};
 use crate::assoc::Assoc;
 use crate::util::parallel::parallel_map_ranges;
 use crate::util::Parallelism;
-use std::sync::{Mutex, RwLock};
+use std::collections::BTreeSet;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// WAL file name inside a durable table's directory.
+const WAL_FILE: &str = "wal.log";
+/// Manifest file name: one live run file name per line, rewritten
+/// atomically (tmp + rename) after every compaction. Run files are
+/// never deleted — a superseded run simply drops out of the manifest
+/// (orphan cleanup is future work; see ROADMAP).
+const MANIFEST_FILE: &str = "MANIFEST";
+
+/// Durability attachment of a [`Table`]: its directory and write-ahead
+/// log. The WAL mutex is the *group-commit serialization point* — it is
+/// held across append **and** memtable apply, so log order equals apply
+/// order, and across a whole minor compaction, so run watermarks are
+/// exact.
+struct DurableState {
+    dir: PathBuf,
+    wal: Mutex<WalWriter>,
+}
 
 /// Table tuning knobs.
 #[derive(Debug, Clone)]
@@ -48,16 +73,122 @@ pub struct Table {
     /// Tablets in row order. The `RwLock` guards the tablet *list*
     /// (splits); each tablet has its own `Mutex` for cell data.
     tablets: RwLock<Vec<Mutex<Tablet>>>,
+    /// WAL + directory when the table is durable ([`Table::durable`] /
+    /// [`Table::recover`]); `None` for the classic in-memory table.
+    durable: Option<DurableState>,
+    /// Monotone run-file sequence allocator (also orders runs by age).
+    run_seq: AtomicU64,
 }
 
 impl Table {
-    /// New table with a single unbounded tablet.
+    /// New in-memory table with a single unbounded tablet. Writes are
+    /// not logged; see [`Table::durable`] for the WAL-backed variant.
     pub fn new(name: &str, config: TableConfig) -> Self {
         Table {
             name: name.to_string(),
             config,
             tablets: RwLock::new(vec![Mutex::new(Tablet::new(None, None))]),
+            durable: None,
+            run_seq: AtomicU64::new(0),
         }
+    }
+
+    /// New durable table rooted at `dir`: a fresh write-ahead log is
+    /// created there (truncating any previous one) and every
+    /// [`Table::write_batch`] / [`Table::delete`] is appended to it
+    /// before touching the memtables. Use [`Table::recover`] to reopen
+    /// an existing directory instead.
+    pub fn durable(
+        name: &str,
+        config: TableConfig,
+        dir: &Path,
+        policy: FsyncPolicy,
+    ) -> io::Result<Table> {
+        std::fs::create_dir_all(dir)?;
+        let wal = WalWriter::create(&dir.join(WAL_FILE), policy)?;
+        let mut table = Table::new(name, config);
+        table.durable = Some(DurableState { dir: dir.to_path_buf(), wal: Mutex::new(wal) });
+        Ok(table)
+    }
+
+    /// Reopen a durable table from `dir`: load the manifest's runs,
+    /// replay the WAL suffix past the oldest run watermark, then
+    /// checkpoint the replayed state and start a fresh log.
+    ///
+    /// Replay starts at `min` run watermark (not `max`): after a major
+    /// compaction the single merged run carries the newest watermark,
+    /// but re-applying *older* already-frozen records is safe — replay
+    /// is in log order, so puts are idempotent and deletes converge —
+    /// while skipping records a lagging tablet never froze would lose
+    /// data. Crash-safety ordering inside recovery itself: the replayed
+    /// memtable is frozen to runs and the manifest rewritten *before*
+    /// the old WAL is truncated, so a crash mid-recovery only ever
+    /// re-replays (converging), never loses acknowledged records.
+    pub fn recover(
+        name: &str,
+        config: TableConfig,
+        dir: &Path,
+        policy: FsyncPolicy,
+    ) -> io::Result<Table> {
+        let wal_path = dir.join(WAL_FILE);
+        let replay = if wal_path.exists() {
+            wal::replay(&wal_path)?
+        } else {
+            wal::WalReplay { records: Vec::new(), truncated: false }
+        };
+        let mut runs: Vec<Run> = Vec::new();
+        let manifest = dir.join(MANIFEST_FILE);
+        if manifest.exists() {
+            for line in std::fs::read_to_string(&manifest)?.lines() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                runs.push(Run::load(&dir.join(line))?);
+            }
+        }
+        runs.sort_by_key(Run::seq);
+        let wmin = runs.iter().map(Run::watermark).min().unwrap_or(0);
+        let wmax = runs.iter().map(Run::watermark).max().unwrap_or(0);
+        let max_run_seq = runs.iter().map(Run::seq).max().unwrap_or(0);
+        let table = Table::new(name, config);
+        table.run_seq.store(max_run_seq, Ordering::SeqCst);
+        {
+            // Freshly built table: exactly one unbounded tablet.
+            let tablets = table.tablets.read().unwrap();
+            let mut tab = tablets[0].lock().unwrap();
+            for run in runs {
+                tab.attach_run(Arc::new(run));
+            }
+        }
+        let mut last_seq = wmax;
+        for rec in &replay.records {
+            if rec.seq <= wmin {
+                continue; // Already durable in every run.
+            }
+            last_seq = last_seq.max(rec.seq);
+            match &rec.op {
+                WalOp::Put(batch) => {
+                    table
+                        .apply_batch(batch.clone())
+                        .expect("recovery writes hit no offline tablet");
+                }
+                WalOp::Delete { row, col } => {
+                    table.apply_delete(row, col);
+                }
+            }
+        }
+        // Checkpoint replayed state BEFORE truncating the log.
+        let frozen = table.freeze_all(last_seq, Some(dir))?;
+        if frozen > 0 {
+            table.write_manifest(dir)?;
+        }
+        let mut wal = WalWriter::create(&wal_path, policy)?;
+        wal.set_last_seq(last_seq);
+        Ok(Table {
+            durable: Some(DurableState { dir: dir.to_path_buf(), wal: Mutex::new(wal) }),
+            ..table
+        })
     }
 
     /// Table name.
@@ -140,7 +271,29 @@ impl Table {
 
     /// Write a batch of triples (grouped internally by tablet). Returns
     /// the number written. Triples for offline tablets produce an error.
+    ///
+    /// On a durable table the batch is appended to the write-ahead log
+    /// *first*, and the WAL lock is held across the memtable apply so
+    /// log order equals apply order (group commit). A log I/O failure
+    /// surfaces as [`StoreError::Io`] before any memtable mutates. A
+    /// batch that then fails on an offline tablet has already been
+    /// logged: recovery replays it in full — offline is transient
+    /// write-side backpressure, not a durable rejection.
     pub fn write_batch(&self, batch: Vec<Triple>) -> Result<usize, StoreError> {
+        let Some(d) = &self.durable else {
+            return self.apply_batch(batch);
+        };
+        let mut wal = d.wal.lock().unwrap();
+        if !batch.is_empty() {
+            wal.append_put(&batch).map_err(|e| StoreError::Io {
+                context: format!("wal append for table '{}': {e}", self.name),
+            })?;
+        }
+        self.apply_batch(batch)
+    }
+
+    /// The memtable half of [`Table::write_batch`] (no logging).
+    fn apply_batch(&self, batch: Vec<Triple>) -> Result<usize, StoreError> {
         if self.config.write_latency_us > 0 {
             std::thread::sleep(std::time::Duration::from_micros(self.config.write_latency_us));
         }
@@ -270,8 +423,24 @@ impl Table {
         tab.get(row, col).map(str::to_string)
     }
 
-    /// Delete a cell; returns whether it existed.
+    /// Delete a cell; returns whether it was visible before.
+    ///
+    /// On a durable table the delete is logged first (under the same
+    /// group-commit lock as [`Table::write_batch`]). The `bool` return
+    /// leaves no error channel, so a WAL I/O failure here panics with
+    /// context rather than silently dropping the log record.
     pub fn delete(&self, row: &str, col: &str) -> bool {
+        let Some(d) = &self.durable else {
+            return self.apply_delete(row, col);
+        };
+        let mut wal = d.wal.lock().unwrap();
+        wal.append_delete(row, col)
+            .unwrap_or_else(|e| panic!("wal append (delete) for table '{}': {e}", self.name));
+        self.apply_delete(row, col)
+    }
+
+    /// The memtable half of [`Table::delete`] (no logging).
+    fn apply_delete(&self, row: &str, col: &str) -> bool {
         let tablets = self.tablets.read().unwrap();
         let idx = Self::locate(&tablets, row);
         let mut tab = tablets[idx].lock().unwrap();
@@ -324,13 +493,162 @@ impl Table {
         }
     }
 
-    /// Failure injection: mark a tablet offline/online.
+    /// Failure injection: mark a tablet offline/online. Offline blocks
+    /// *writes* only; reads, scans, and compactions still serve.
     pub fn set_tablet_offline(&self, idx: usize, offline: bool) {
         let tablets = self.tablets.read().unwrap();
         if let Some(t) = tablets.get(idx) {
             t.lock().unwrap().offline = offline;
         }
     }
+
+    /// Minor compaction: freeze every tablet's memtable into an
+    /// immutable sorted run (Accumulo's memtable flush). Returns the
+    /// number of runs written.
+    ///
+    /// On a durable table the WAL lock is held throughout, the log is
+    /// synced first, and the new runs carry `last_seq` as their
+    /// watermark — every record at or below it is now in a run, so
+    /// recovery may skip that log prefix. The manifest is rewritten
+    /// after the run files land. On an in-memory table this just
+    /// freezes (watermark 0, nothing persisted) so scan tests can stack
+    /// memtable-over-run states without a filesystem.
+    pub fn minor_compact(&self) -> io::Result<usize> {
+        let Some(d) = &self.durable else {
+            return self.freeze_all(0, None);
+        };
+        let mut wal = d.wal.lock().unwrap();
+        wal.sync()?;
+        let watermark = wal.last_seq();
+        let written = self.freeze_all(watermark, Some(&d.dir))?;
+        if written > 0 {
+            self.write_manifest(&d.dir)?;
+        }
+        Ok(written)
+    }
+
+    /// Major compaction: merge each tablet's full layer stack (memtable
+    /// + tombstones + all runs) into one run per tablet, applying
+    /// `spec`'s combiner and version-retention rule at merge time.
+    /// Tombstones and the cells they mask are gone afterwards. Returns
+    /// the number of merged runs produced (empty tablets produce none).
+    pub fn major_compact(&self, spec: &CompactionSpec) -> io::Result<usize> {
+        let Some(d) = &self.durable else {
+            return self.compact_all(spec, 0, None);
+        };
+        let mut wal = d.wal.lock().unwrap();
+        wal.sync()?;
+        let watermark = wal.last_seq();
+        let written = self.compact_all(spec, watermark, Some(&d.dir))?;
+        // Rewrite unconditionally: compaction may have *removed* every
+        // run (all cells deleted), and the manifest must drop them.
+        self.write_manifest(&d.dir)?;
+        Ok(written)
+    }
+
+    /// Freeze every non-empty tablet memtable into a run, saving each
+    /// to `dir` when given. Caller holds the WAL lock on durable paths.
+    fn freeze_all(&self, watermark: u64, dir: Option<&Path>) -> io::Result<usize> {
+        let tablets = self.tablets.read().unwrap();
+        let mut written = 0usize;
+        for t in tablets.iter() {
+            let mut tab = t.lock().unwrap();
+            let seq = self.run_seq.fetch_add(1, Ordering::SeqCst) + 1;
+            if let Some(run) = tab.freeze(seq, watermark) {
+                if let Some(dir) = dir {
+                    run.save(&dir.join(run_file_name(run.seq())))?;
+                }
+                written += 1;
+            }
+        }
+        Ok(written)
+    }
+
+    /// Merge every tablet's layers down to (at most) one run each.
+    fn compact_all(
+        &self,
+        spec: &CompactionSpec,
+        watermark: u64,
+        dir: Option<&Path>,
+    ) -> io::Result<usize> {
+        let tablets = self.tablets.read().unwrap();
+        let mut written = 0usize;
+        for t in tablets.iter() {
+            let mut tab = t.lock().unwrap();
+            let seq = self.run_seq.fetch_add(1, Ordering::SeqCst) + 1;
+            if let Some(run) = tab.compact(spec, seq, watermark) {
+                if let Some(dir) = dir {
+                    run.save(&dir.join(run_file_name(run.seq())))?;
+                }
+                written += 1;
+            }
+        }
+        Ok(written)
+    }
+
+    /// Rewrite the manifest to the set of currently attached run files
+    /// (post-split tablets share runs; the `BTreeSet` dedups). Written
+    /// to a temp file then renamed, so readers see old-or-new, never a
+    /// torn list.
+    fn write_manifest(&self, dir: &Path) -> io::Result<()> {
+        let mut names: BTreeSet<u64> = BTreeSet::new();
+        {
+            let tablets = self.tablets.read().unwrap();
+            for t in tablets.iter() {
+                let tab = t.lock().unwrap();
+                for run in tab.runs() {
+                    names.insert(run.seq());
+                }
+            }
+        }
+        let mut body = String::new();
+        for seq in names {
+            body.push_str(&run_file_name(seq));
+            body.push('\n');
+        }
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, body)?;
+        std::fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
+        Ok(())
+    }
+
+    /// Number of distinct runs attached across tablets.
+    pub fn run_count(&self) -> usize {
+        let tablets = self.tablets.read().unwrap();
+        let mut seqs: BTreeSet<u64> = BTreeSet::new();
+        for t in tablets.iter() {
+            let tab = t.lock().unwrap();
+            for run in tab.runs() {
+                seqs.insert(run.seq());
+            }
+        }
+        seqs.len()
+    }
+
+    /// Stored versions of one cell across the tablet's layer stack
+    /// (tombstones count) — observability for the versioning-iterator
+    /// retention tests.
+    pub fn cell_versions(&self, row: &str, col: &str) -> usize {
+        let tablets = self.tablets.read().unwrap();
+        let idx = Self::locate(&tablets, row);
+        let tab = tablets[idx].lock().unwrap();
+        tab.cell_versions(row, col)
+    }
+
+    /// Force the WAL to stable storage regardless of the configured
+    /// [`FsyncPolicy`]. No-op on in-memory tables.
+    pub fn sync(&self) -> io::Result<()> {
+        if let Some(d) = &self.durable {
+            d.wal.lock().unwrap().sync()?;
+        }
+        Ok(())
+    }
+}
+
+/// Run file name for a run sequence number (zero-padded so manifests
+/// and directory listings sort by age).
+fn run_file_name(seq: u64) -> String {
+    format!("run-{seq:08}.run")
 }
 
 /// Tablet blocks fetched after a seek start small and double up to
@@ -795,6 +1113,104 @@ mod tests {
         assert_eq!(t.len(), 200);
         let all = t.scan(ScanRange::all());
         assert!(all.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join("d4m-table-tests")
+            .join(format!("{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn durable_roundtrip_recovers_everything() {
+        let dir = temp_dir("roundtrip");
+        {
+            let t =
+                Table::durable("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+            t.write_batch(batch(30)).unwrap();
+            assert!(t.delete("row0003", "c"));
+            t.sync().unwrap();
+        }
+        let r = Table::recover("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(r.len(), 29);
+        assert_eq!(r.get("row0000", "c"), Some("value".into()));
+        assert_eq!(r.get("row0003", "c"), None);
+        // Recovery checkpointed into runs + a fresh (empty) log; a
+        // second recovery replays nothing and still agrees.
+        let expect = r.scan(ScanRange::all());
+        drop(r);
+        let r2 = Table::recover("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(r2.scan(ScanRange::all()), expect);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn minor_compact_preserves_scans_and_survives_recovery() {
+        let dir = temp_dir("minor");
+        let cfg = TableConfig { split_threshold: 64, write_latency_us: 0 };
+        let t = Table::durable("t", cfg.clone(), &dir, FsyncPolicy::Never).unwrap();
+        t.write_batch(batch(40)).unwrap();
+        assert!(t.tablet_count() > 1);
+        let before = t.scan(ScanRange::all());
+        assert!(t.minor_compact().unwrap() >= 1);
+        assert!(t.run_count() >= 1);
+        // Run-backed scans are byte-identical to the memtable scan.
+        assert_eq!(t.scan(ScanRange::all()), before);
+        // Layer new writes over the runs: overwrite shadows, delete
+        // tombstones a run-resident cell.
+        t.write_batch(vec![Triple::new("row0005", "c", "v2")]).unwrap();
+        assert_eq!(t.get("row0005", "c"), Some("v2".into()));
+        assert!(t.delete("row0006", "c"));
+        assert_eq!(t.get("row0006", "c"), None);
+        assert_eq!(t.len(), 39);
+        let expect = t.scan(ScanRange::all());
+        drop(t);
+        let r = Table::recover("t", cfg, &dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(r.scan(ScanRange::all()), expect);
+        assert_eq!(r.get("row0006", "c"), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn major_compact_purges_tombstones_and_applies_retention() {
+        let dir = temp_dir("major");
+        let t = Table::durable("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+        t.write_batch(vec![Triple::new("a", "x", "1")]).unwrap();
+        t.minor_compact().unwrap();
+        t.write_batch(vec![Triple::new("a", "x", "2")]).unwrap();
+        t.minor_compact().unwrap();
+        t.write_batch(vec![Triple::new("a", "x", "3"), Triple::new("b", "y", "9")]).unwrap();
+        assert_eq!(t.cell_versions("a", "x"), 3);
+        assert!(t.delete("b", "y"));
+        t.major_compact(&CompactionSpec { reduce: None, max_versions: 2 }).unwrap();
+        assert_eq!(t.run_count(), 1);
+        assert_eq!(t.cell_versions("a", "x"), 2);
+        assert_eq!(t.get("a", "x"), Some("3".into()));
+        assert_eq!(t.get("b", "y"), None);
+        assert_eq!(t.len(), 1);
+        drop(t);
+        let r = Table::recover("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(r.get("a", "x"), Some("3".into()));
+        assert_eq!(r.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn in_memory_compaction_needs_no_directory() {
+        let t = small_table();
+        t.write_batch(batch(50)).unwrap();
+        let before = t.scan(ScanRange::all());
+        assert!(t.minor_compact().unwrap() >= 1);
+        assert_eq!(t.scan(ScanRange::all()), before);
+        // Overwrites land in the memtable above the frozen runs.
+        t.write_batch(batch(50)).unwrap();
+        assert_eq!(t.scan(ScanRange::all()), before);
+        t.major_compact(&CompactionSpec::default()).unwrap();
+        assert_eq!(t.scan(ScanRange::all()), before);
+        assert_eq!(t.len(), 50);
     }
 
     #[test]

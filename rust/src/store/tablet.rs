@@ -1,14 +1,27 @@
 //! A tablet: one sorted key range of a table (the Accumulo unit of
 //! distribution and recovery).
+//!
+//! Since PR 6 a tablet is an LSM level stack, not just a map: the
+//! `BTreeMap` is the *memtable*, and beneath it sit zero or more
+//! immutable sorted [`Run`]s produced by minor compaction
+//! ([`Tablet::freeze`]). Reads and scans merge the layers newest-first
+//! (memtable over newest run over older runs), with a tombstone set
+//! masking run cells that were deleted after their run froze — the
+//! Accumulo memory-map-plus-RFiles read path.
 
+use super::compact::{self, CompactionSpec};
+use super::run::{Run, RunCell, RunCursor};
 use super::scan::{self, CellFilter, ScanRange};
 use super::{SharedStr, Triple};
-use std::collections::BTreeMap;
+use std::collections::{btree_map, btree_set, BTreeMap, BTreeSet};
+use std::iter::Peekable;
 use std::ops::Bound;
+use std::sync::Arc;
 
 /// Sorted `(row, col) → val` map covering the half-open row range
-/// `[lo, hi)` (`None` = unbounded on that side). Cells are stored as
-/// shared-bytes [`SharedStr`]s, so scanning one out is a pointer clone.
+/// `[lo, hi)` (`None` = unbounded on that side), stacked over the
+/// tablet's frozen [`Run`]s. Cells are stored as shared-bytes
+/// [`SharedStr`]s, so scanning one out is a pointer clone.
 #[derive(Debug, Default)]
 pub struct Tablet {
     /// Inclusive lower row bound (`None` = -∞).
@@ -16,11 +29,22 @@ pub struct Tablet {
     /// Exclusive upper row bound (`None` = +∞).
     pub hi: Option<String>,
     entries: BTreeMap<(SharedStr, SharedStr), SharedStr>,
+    /// Tombstones masking cells that live in `runs`: a delete that hits
+    /// a run-resident cell cannot remove it (runs are immutable), so it
+    /// records a marker here instead. Invariant: disjoint from
+    /// `entries` (a put clears the key's tombstone), and empty while
+    /// `runs` is empty (nothing to mask).
+    deletes: BTreeSet<(SharedStr, SharedStr)>,
+    /// Frozen immutable runs, oldest first / **newest last**. Shared
+    /// (`Arc`) because a split clones the stack into both children and
+    /// open scans pin a snapshot. Reads clamp each run to the tablet's
+    /// extent so post-split children never double-serve cells.
+    runs: Vec<Arc<Run>>,
     weight: usize,
     /// Failure-injection flag: an offline tablet rejects *writes*
-    /// (`Table::write_batch` errors). Reads and scans are still served
-    /// — the scan stack treats offline as a write-side failure, and
-    /// `tests/scan_stack.rs` pins that contract.
+    /// (`Table::write_batch` errors). Reads, scans, and compactions are
+    /// still served — the scan stack treats offline as a write-side
+    /// failure, and `tests/scan_stack.rs` pins that contract.
     pub offline: bool,
 }
 
@@ -38,9 +62,14 @@ impl Tablet {
     }
 
     /// Insert (overwriting any existing value). Returns the previous
-    /// value if the cell existed.
+    /// *memtable* value if the cell existed there (run-resident values
+    /// are shadowed, not read back).
     pub fn put(&mut self, t: Triple) -> Option<SharedStr> {
         debug_assert!(self.contains(&t.row), "triple routed to wrong tablet");
+        if !self.deletes.is_empty() {
+            // A new write un-deletes the key (pointer-clone probe).
+            self.deletes.remove(&(t.row.clone(), t.col.clone()));
+        }
         let val_len = t.val.len();
         let full_weight = t.weight();
         let prev = self.entries.insert((t.row, t.col), t.val);
@@ -52,19 +81,45 @@ impl Tablet {
         prev
     }
 
-    /// Point lookup.
-    pub fn get(&self, row: &str, col: &str) -> Option<&str> {
-        self.entries.get(&(row.into(), col.into())).map(|v| v.as_str())
+    /// Newest run-resident decision for `(row, col)`: `None` if no run
+    /// stores the key, `Some(None)` if the newest storing run holds a
+    /// tombstone, `Some(Some(val))` otherwise. Point ops skip extent
+    /// clamping — routing guarantees the key is in-extent.
+    fn run_lookup(&self, row: &str, col: &str) -> Option<Option<&SharedStr>> {
+        self.runs.iter().rev().find_map(|run| run.get(row, col))
     }
 
-    /// Delete a cell; returns whether it existed.
+    /// Point lookup, merging memtable over tombstones over runs.
+    pub fn get(&self, row: &str, col: &str) -> Option<&str> {
+        if let Some(v) = self.entries.get(&(row.into(), col.into())) {
+            return Some(v.as_str());
+        }
+        if self.runs.is_empty() || self.deletes.contains(&(row.into(), col.into())) {
+            return None;
+        }
+        match self.run_lookup(row, col) {
+            Some(Some(v)) => Some(v.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Delete a cell; returns whether it was *visible* before (in the
+    /// memtable, or live in a run and not already tombstoned). Removing
+    /// only the memtable entry would resurrect any run-resident value
+    /// beneath it, so when runs hold the key a tombstone is recorded.
     pub fn delete(&mut self, row: &str, col: &str) -> bool {
-        if let Some(v) = self.entries.remove(&(row.into(), col.into())) {
+        let had_mem = if let Some(v) = self.entries.remove(&(row.into(), col.into())) {
             self.weight -= row.len() + col.len() + v.len();
             true
         } else {
             false
+        };
+        if self.runs.is_empty() {
+            return had_mem;
         }
+        let live_in_runs = matches!(self.run_lookup(row, col), Some(Some(_)));
+        let newly_masked = live_in_runs && self.deletes.insert((row.into(), col.into()));
+        had_mem || newly_masked
     }
 
     /// Scan rows in `[lo, hi)` (clamped to the tablet extent), in sorted
@@ -148,9 +203,13 @@ impl Tablet {
         loop {
             // Re-seeks happen when a row's column windows close or the
             // walk falls in a gap between ranges (cells the reseek
-            // jumps over are never examined).
+            // jumps over are never examined). The walk itself runs over
+            // the merged view: memtable over tombstones over runs
+            // (newest run wins), so a block is the same sorted stream a
+            // pure-memtable tablet would serve.
             let mut reseek: Option<(SharedStr, SharedStr)> = None;
-            for ((r, c), v) in self.entries.range((start, Bound::Unbounded)) {
+            let mut merged = Merged::new(self, start);
+            while let Some((r, c, v)) = merged.next() {
                 while ri < ranges.len()
                     && ranges[ri].hi.as_deref().is_some_and(|hi| r.as_str() >= hi)
                 {
@@ -236,23 +295,41 @@ impl Tablet {
         }
     }
 
-    /// Number of stored cells.
+    /// Number of *visible* cells. With no runs this is the memtable
+    /// length (O(1)); with runs it walks the merged view (O(cells)) so
+    /// shadowed versions and tombstoned cells are not double-counted.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        if self.runs.is_empty() {
+            return self.entries.len();
+        }
+        let mut merged = Merged::new(self, Bound::Unbounded);
+        let mut n = 0usize;
+        while merged.next().is_some() {
+            n += 1;
+        }
+        n
     }
 
-    /// True when the tablet holds no cells.
+    /// True when the tablet serves no visible cells.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        if self.runs.is_empty() {
+            return self.entries.is_empty();
+        }
+        Merged::new(self, Bound::Unbounded).next().is_none()
     }
 
-    /// Approximate stored bytes (the split trigger).
+    /// Approximate stored bytes of the **memtable only** (the split and
+    /// minor-compaction trigger). Frozen runs don't count: they are
+    /// immutable, and the thresholds exist to bound mutable state.
     pub fn weight(&self) -> usize {
         self.weight
     }
 
-    /// The median row key — the split point used when this tablet grows
-    /// past the size threshold. `None` for tablets with < 2 distinct rows.
+    /// The median **memtable** row key — the split point used when this
+    /// tablet grows past the size threshold. `None` for tablets with
+    /// < 2 distinct memtable rows. Run-resident rows don't vote: splits
+    /// exist to bound mutable state, and both children keep serving the
+    /// shared runs clamped to their extents.
     pub fn median_row(&self) -> Option<String> {
         if self.entries.len() < 2 {
             return None;
@@ -268,10 +345,13 @@ impl Tablet {
     }
 
     /// Split at `row`: self keeps `[lo, row)`, the returned tablet holds
-    /// `[row, hi)`.
+    /// `[row, hi)`. Both children share the run stack (`Arc` clones);
+    /// extent clamping keeps each child serving only its half of every
+    /// run.
     pub fn split_at(&mut self, row: &str) -> Tablet {
         let right_entries: BTreeMap<(SharedStr, SharedStr), SharedStr> =
             self.entries.split_off(&(row.into(), "".into()));
+        let right_deletes = self.deletes.split_off(&(row.into(), "".into()));
         let right_weight: usize =
             right_entries.iter().map(|((r, c), v)| r.len() + c.len() + v.len()).sum();
         self.weight -= right_weight;
@@ -279,11 +359,232 @@ impl Tablet {
             lo: Some(row.to_string()),
             hi: self.hi.take(),
             entries: right_entries,
+            deletes: right_deletes,
+            runs: self.runs.clone(),
             weight: right_weight,
             offline: false,
         };
         self.hi = Some(row.to_string());
         right
+    }
+
+    /// The tablet's frozen runs, oldest first (shared snapshots).
+    pub(crate) fn runs(&self) -> &[Arc<Run>] {
+        &self.runs
+    }
+
+    /// Attach an already-built run as the newest layer below the
+    /// memtable — the recovery path ([`super::Table::recover`] loads
+    /// run files oldest-to-newest and stacks them here).
+    pub(crate) fn attach_run(&mut self, run: Arc<Run>) {
+        self.runs.push(run);
+    }
+
+    /// Merge the memtable and tombstones into `cells` (sorted by key,
+    /// values `None` for tombstones), clearing both. Tombstones are
+    /// kept only when `keep_tombstones` (they mask older runs; with no
+    /// older layer they mask nothing).
+    fn drain_memtable(&mut self, keep_tombstones: bool) -> Vec<RunCell> {
+        let mut cells: Vec<RunCell> =
+            Vec::with_capacity(self.entries.len() + self.deletes.len());
+        let mut ents = std::mem::take(&mut self.entries).into_iter().peekable();
+        let mut dels = std::mem::take(&mut self.deletes).into_iter().peekable();
+        loop {
+            // Disjoint sorted sequences (the put/delete invariant), so
+            // a plain two-pointer merge keeps (row, col) order.
+            let take_entry = match (ents.peek(), dels.peek()) {
+                (Some((ek, _)), Some(dk)) => ek < dk,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if take_entry {
+                let ((r, c), v) = ents.next().expect("peeked");
+                cells.push((r, c, Some(v)));
+            } else {
+                let (r, c) = dels.next().expect("peeked");
+                if keep_tombstones {
+                    cells.push((r, c, None));
+                }
+            }
+        }
+        self.weight = 0;
+        cells
+    }
+
+    /// Minor compaction: freeze the memtable (and tombstone set) into a
+    /// new immutable run stacked as the newest layer. Returns the run
+    /// (for the caller to persist), or `None` when there was nothing to
+    /// freeze. `seq` names the run; `watermark` is the WAL sequence
+    /// number its contents cover.
+    pub fn freeze(&mut self, seq: u64, watermark: u64) -> Option<Arc<Run>> {
+        if self.entries.is_empty() && self.deletes.is_empty() {
+            return None;
+        }
+        let cells = self.drain_memtable(!self.runs.is_empty());
+        if cells.is_empty() {
+            return None;
+        }
+        let run = Arc::new(Run::from_cells(seq, watermark, &cells));
+        self.runs.push(Arc::clone(&run));
+        Some(run)
+    }
+
+    /// Major compaction: merge the memtable and **all** runs into one
+    /// fresh run, applying `spec`'s combiner and max-versions rule at
+    /// merge time (Accumulo's versioning iterator). This is a *full*
+    /// compaction over the tablet's whole extent, so surviving
+    /// tombstones are dropped — nothing older exists for them to mask.
+    /// Returns the merged run (`None` if the tablet ends up empty; its
+    /// run stack is cleared either way).
+    pub fn compact(&mut self, spec: &CompactionSpec, seq: u64, watermark: u64) -> Option<Arc<Run>> {
+        // Collect every stored version, newest layer first: memtable
+        // (with its tombstones), then runs newest → oldest, each
+        // clamped to the extent. A stable key-only sort then groups
+        // versions while preserving that priority order.
+        let mut cells = self.drain_memtable(true);
+        let (lo, hi) = (self.lo.clone(), self.hi.clone());
+        for run in self.runs.iter().rev() {
+            let (start, end) = run.extent_range(lo.as_deref(), hi.as_deref());
+            for i in start..end {
+                let (r, c) = run.key(i);
+                cells.push((r.clone(), c.clone(), run.val(i).cloned()));
+            }
+        }
+        cells.sort_by(|a, b| (a.0.as_str(), a.1.as_str()).cmp(&(b.0.as_str(), b.1.as_str())));
+        let merged = compact::merge_cells(cells, spec);
+        self.runs.clear();
+        if merged.is_empty() {
+            return None;
+        }
+        let run = Arc::new(Run::from_cells(seq, watermark, &merged));
+        self.runs.push(Arc::clone(&run));
+        Some(run)
+    }
+
+    /// Number of *stored* versions of `(row, col)` across the memtable
+    /// and every run (tombstones included, shadowing ignored) — the
+    /// retention witness for the max-versions compaction rule.
+    pub fn cell_versions(&self, row: &str, col: &str) -> usize {
+        let mem = usize::from(self.entries.contains_key(&(row.into(), col.into())))
+            + usize::from(self.deletes.contains(&(row.into(), col.into())));
+        mem + self.runs.iter().map(|run| run.versions(row, col)).sum::<usize>()
+    }
+}
+
+/// Merged forward walk over a tablet's layers from a start bound:
+/// memtable over tombstones over runs (newest run wins), yielding only
+/// *visible* cells in `(row, col)` order. Borrowed views live as long
+/// as the tablet borrow (`'t`), so the caller can hold a yielded cell
+/// while the walk advances.
+struct Merged<'t> {
+    mem: Peekable<btree_map::Range<'t, (SharedStr, SharedStr), SharedStr>>,
+    del: Peekable<btree_set::Range<'t, (SharedStr, SharedStr)>>,
+    runs: Vec<RunCursor<'t>>,
+    /// No runs → the walk is exactly the memtable range (fast path: no
+    /// per-cell key comparisons).
+    simple: bool,
+}
+
+impl<'t> Merged<'t> {
+    fn new(tablet: &'t Tablet, start: Bound<(SharedStr, SharedStr)>) -> Merged<'t> {
+        let simple = tablet.runs.is_empty();
+        // The run cursors need the bound as (row, col, inclusive); an
+        // exclusive resume skips the key's whole version group (every
+        // version is superseded once the key was served).
+        let probe: Option<(SharedStr, SharedStr, bool)> = match &start {
+            Bound::Included((r, c)) => Some((r.clone(), c.clone(), true)),
+            Bound::Excluded((r, c)) => Some((r.clone(), c.clone(), false)),
+            Bound::Unbounded => None,
+        };
+        let mut runs = Vec::with_capacity(tablet.runs.len());
+        if !simple {
+            for run in &tablet.runs {
+                let (ext_start, ext_end) =
+                    run.extent_range(tablet.lo.as_deref(), tablet.hi.as_deref());
+                let pos = match &probe {
+                    Some((r, c, inclusive)) => {
+                        run.lower_bound(r, c, *inclusive).max(ext_start)
+                    }
+                    None => ext_start,
+                };
+                runs.push(RunCursor::new(run, pos, ext_end));
+            }
+        }
+        Merged {
+            mem: tablet.entries.range((start.clone(), Bound::Unbounded)).peekable(),
+            del: tablet.deletes.range((start, Bound::Unbounded)).peekable(),
+            runs,
+            simple,
+        }
+    }
+
+    /// Next visible cell, or `None` when every layer is exhausted.
+    fn next(&mut self) -> Option<(&'t SharedStr, &'t SharedStr, &'t SharedStr)> {
+        if self.simple {
+            return self.mem.next().map(|((r, c), v)| (r, c, v));
+        }
+        loop {
+            // Peeked items are tuples of `Copy` references with
+            // lifetime `'t`, so `.copied()` escapes the peek borrow.
+            let mem_peek = self.mem.peek().copied();
+            let del_peek = self.del.peek().copied();
+            let mut min: Option<(&'t str, &'t str)> = None;
+            let mut consider = |key: (&'t str, &'t str), min: &mut Option<(&'t str, &'t str)>| {
+                if min.is_none_or(|m| key < m) {
+                    *min = Some(key);
+                }
+            };
+            if let Some(((r, c), _)) = mem_peek {
+                consider((r.as_str(), c.as_str()), &mut min);
+            }
+            if let Some((r, c)) = del_peek {
+                consider((r.as_str(), c.as_str()), &mut min);
+            }
+            for cur in &self.runs {
+                if let Some((r, c, _)) = cur.peek() {
+                    consider((r.as_str(), c.as_str()), &mut min);
+                }
+            }
+            let min = min?;
+            // Advance every run cursor sitting on the min key (each
+            // skips its whole version group) so no layer serves a
+            // shadowed version later. The peeked refs point into the
+            // runs' pools ('t), not into the cursors, so they survive
+            // the advance.
+            let mut run_winner: Option<(&'t SharedStr, &'t SharedStr, Option<&'t SharedStr>)> =
+                None;
+            for cur in &mut self.runs {
+                if let Some((r, c, v)) = cur.peek() {
+                    if (r.as_str(), c.as_str()) == min {
+                        // Iterating oldest → newest: the last hit is the
+                        // newest run's decision.
+                        run_winner = Some((r, c, v));
+                        cur.advance_key();
+                    }
+                }
+            }
+            if let Some(((r, c), v)) = mem_peek {
+                if (r.as_str(), c.as_str()) == min {
+                    self.mem.next();
+                    return Some((r, c, v));
+                }
+            }
+            if let Some((r, c)) = del_peek {
+                if (r.as_str(), c.as_str()) == min {
+                    // Tombstone: the key is deleted; skip it.
+                    self.del.next();
+                    continue;
+                }
+            }
+            match run_winner {
+                Some((r, c, Some(v))) => return Some((r, c, v)),
+                // Newest run version is a tombstone: skip the key.
+                // (`None` is unreachable — the min key came from some
+                // layer — but skipping is the safe decode.)
+                _ => continue,
+            }
+        }
     }
 }
 

@@ -1,0 +1,483 @@
+//! Write-ahead log: the durability backbone of the tiered store.
+//!
+//! Accumulo logs every mutation to a write-ahead log before applying it
+//! to the in-memory map, so a crash loses nothing that was acknowledged
+//! (arXiv:1508.07371 §II). This module is that log for the d4m store:
+//! [`WalWriter`] appends length-prefixed, CRC-checksummed records;
+//! [`replay`] reads them back, stopping cleanly at the first torn or
+//! corrupt record (the tail a crash can leave behind is *expected*, not
+//! an error).
+//!
+//! ## File format
+//!
+//! ```text
+//! [8-byte magic "D4MWAL01"]
+//! repeated records:
+//!   [u32 len][u32 crc32(payload)][payload; len bytes]
+//! payload:
+//!   [u64 seq][u8 op][u32 count][strings...]
+//!   op 1 = put batch: count triples, each row/col/val as [u32 len][bytes]
+//!   op 2 = delete:    count == 1, row + col as [u32 len][bytes]
+//! ```
+//!
+//! All integers are little-endian. `seq` is strictly increasing within a
+//! log; run watermarks (see [`super::run`]) reference these sequence
+//! numbers so recovery knows which log suffix is not yet frozen into
+//! runs.
+
+use super::{SharedStr, Triple};
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Magic bytes opening every WAL file (format version 01).
+pub const WAL_MAGIC: &[u8; 8] = b"D4MWAL01";
+
+/// Largest accepted record payload (64 MiB) — a sanity cap so a corrupt
+/// length prefix cannot trigger a huge allocation during replay.
+const MAX_RECORD_LEN: u32 = 64 << 20;
+
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) lookup table,
+/// built at compile time so the store stays dependency-free.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) of `bytes` — the checksum guarding each WAL record and
+/// each run file footer.
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// When the WAL forces data to disk. Accumulo exposes the same knob as
+/// its `sync`/`flush` durability levels: group-committing callers trade
+/// a bounded window of acknowledged-but-unsynced mutations for
+/// throughput.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// Never fsync explicitly; the OS flushes on its own schedule.
+    /// Fastest; a *machine* crash may lose the buffered tail (a process
+    /// crash loses nothing once the buffer is flushed on drop).
+    #[default]
+    Never,
+    /// Fsync after every appended record. Slowest, strongest.
+    Always,
+    /// Fsync after every `n` appended records.
+    EveryN(usize),
+}
+
+/// Appender over one table's WAL file.
+///
+/// Not internally synchronized: the owning [`super::Table`] wraps it in
+/// a mutex and holds that lock across append **and** memtable apply, so
+/// log order equals apply order (the invariant recovery relies on).
+#[derive(Debug)]
+pub struct WalWriter {
+    out: BufWriter<File>,
+    policy: FsyncPolicy,
+    /// Records appended since the last fsync (for `EveryN`).
+    pending: usize,
+    last_seq: u64,
+}
+
+impl WalWriter {
+    /// Create a fresh WAL at `path` (truncating any existing file) and
+    /// write the header.
+    pub fn create(path: &Path, policy: FsyncPolicy) -> io::Result<WalWriter> {
+        let mut out = BufWriter::new(File::create(path)?);
+        out.write_all(WAL_MAGIC)?;
+        Ok(WalWriter { out, policy, pending: 0, last_seq: 0 })
+    }
+
+    /// Reopen `path` for appending after recovery. `last_seq` is the
+    /// highest sequence number already durable (from replay and run
+    /// watermarks); new records continue from there.
+    pub fn open_append(path: &Path, policy: FsyncPolicy, last_seq: u64) -> io::Result<WalWriter> {
+        let file = OpenOptions::new().append(true).open(path)?;
+        Ok(WalWriter { out: BufWriter::new(file), policy, pending: 0, last_seq })
+    }
+
+    /// Highest sequence number appended (or adopted at open).
+    pub fn last_seq(&self) -> u64 {
+        self.last_seq
+    }
+
+    /// Adopt `seq` as the highest already-durable sequence number (the
+    /// recovery path starts a fresh log but must keep numbering past
+    /// the run watermarks it restored).
+    pub(crate) fn set_last_seq(&mut self, seq: u64) {
+        self.last_seq = self.last_seq.max(seq);
+    }
+
+    fn write_record(&mut self, payload: &[u8]) -> io::Result<()> {
+        debug_assert!(payload.len() as u64 <= MAX_RECORD_LEN as u64);
+        self.out.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.out.write_all(&crc32(payload).to_le_bytes())?;
+        self.out.write_all(payload)?;
+        self.pending += 1;
+        match self.policy {
+            FsyncPolicy::Never => Ok(()),
+            FsyncPolicy::Always => self.sync(),
+            FsyncPolicy::EveryN(n) => {
+                if self.pending >= n.max(1) {
+                    self.sync()
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Append one put batch; returns the record's sequence number.
+    pub fn append_put(&mut self, batch: &[Triple]) -> io::Result<u64> {
+        self.last_seq += 1;
+        let mut payload = Vec::with_capacity(16 + batch.iter().map(Triple::weight).sum::<usize>());
+        payload.extend_from_slice(&self.last_seq.to_le_bytes());
+        payload.push(1u8);
+        payload.extend_from_slice(&(batch.len() as u32).to_le_bytes());
+        for t in batch {
+            for s in [t.row.as_str(), t.col.as_str(), t.val.as_str()] {
+                payload.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                payload.extend_from_slice(s.as_bytes());
+            }
+        }
+        self.write_record(&payload)?;
+        Ok(self.last_seq)
+    }
+
+    /// Append one delete record; returns its sequence number.
+    pub fn append_delete(&mut self, row: &str, col: &str) -> io::Result<u64> {
+        self.last_seq += 1;
+        let mut payload = Vec::with_capacity(32 + row.len() + col.len());
+        payload.extend_from_slice(&self.last_seq.to_le_bytes());
+        payload.push(2u8);
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        for s in [row, col] {
+            payload.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            payload.extend_from_slice(s.as_bytes());
+        }
+        self.write_record(&payload)?;
+        Ok(self.last_seq)
+    }
+
+    /// Flush buffered bytes and fsync file data to disk.
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.out.flush()?;
+        self.out.get_ref().sync_data()?;
+        self.pending = 0;
+        Ok(())
+    }
+}
+
+impl Drop for WalWriter {
+    fn drop(&mut self) {
+        // Best effort: push buffered records to the OS so a clean
+        // process exit loses nothing even under `FsyncPolicy::Never`.
+        let _ = self.out.flush();
+    }
+}
+
+/// One mutation read back from the log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalOp {
+    /// A batch of puts, in original order.
+    Put(Vec<Triple>),
+    /// A single-cell delete.
+    Delete {
+        /// Row key of the deleted cell.
+        row: SharedStr,
+        /// Column key of the deleted cell.
+        col: SharedStr,
+    },
+}
+
+/// One replayed record: its sequence number and operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalRecord {
+    /// Sequence number assigned at append time.
+    pub seq: u64,
+    /// The logged mutation.
+    pub op: WalOp,
+}
+
+/// Result of reading a WAL back: every record up to the first damaged
+/// one, plus whether damage was found.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalReplay {
+    /// Intact records, in log order.
+    pub records: Vec<WalRecord>,
+    /// `true` if the file ended mid-record or a record failed its
+    /// checksum — the surviving prefix in `records` is still valid.
+    pub truncated: bool,
+}
+
+/// Reader cursor over a byte buffer; `None` means "ran off the end",
+/// which replay treats as a torn tail.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    fn string(&mut self) -> Option<SharedStr> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        std::str::from_utf8(bytes).ok().map(SharedStr::from)
+    }
+}
+
+/// Decode one record payload. `None` = malformed (treated as a torn
+/// record by `replay`).
+fn decode_payload(payload: &[u8]) -> Option<WalRecord> {
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let seq = c.u64()?;
+    let op = c.u8()?;
+    let count = c.u32()? as usize;
+    let op = match op {
+        1 => {
+            let mut batch = Vec::with_capacity(count.min(1 << 20));
+            for _ in 0..count {
+                let row = c.string()?;
+                let col = c.string()?;
+                let val = c.string()?;
+                batch.push(Triple { row, col, val });
+            }
+            WalOp::Put(batch)
+        }
+        2 => {
+            if count != 1 {
+                return None;
+            }
+            WalOp::Delete { row: c.string()?, col: c.string()? }
+        }
+        _ => return None,
+    };
+    if c.pos != payload.len() {
+        return None; // trailing garbage inside a "valid" record
+    }
+    Some(WalRecord { seq, op })
+}
+
+/// Read every intact record from the WAL at `path`.
+///
+/// Stops cleanly (returning `truncated = true`) at the first short,
+/// over-long, checksum-failing or undecodable record — the state a
+/// crash mid-append legitimately leaves. A file too short to hold the
+/// header replays as empty-and-truncated. A full-size header with the
+/// wrong magic is a real error ([`io::ErrorKind::InvalidData`]): that
+/// file is not a WAL at all.
+pub fn replay(path: &Path) -> io::Result<WalReplay> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < WAL_MAGIC.len() {
+        return Ok(WalReplay { records: Vec::new(), truncated: true });
+    }
+    if &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{}: not a d4m WAL (bad magic)", path.display()),
+        ));
+    }
+    let mut c = Cursor { buf: &bytes, pos: WAL_MAGIC.len() };
+    let mut records = Vec::new();
+    let mut last_seq = 0u64;
+    loop {
+        if c.pos == bytes.len() {
+            return Ok(WalReplay { records, truncated: false });
+        }
+        let header = (|c: &mut Cursor| Some((c.u32()?, c.u32()?)))(&mut c);
+        let (len, crc) = match header {
+            Some(h) => h,
+            None => return Ok(WalReplay { records, truncated: true }),
+        };
+        if len > MAX_RECORD_LEN {
+            return Ok(WalReplay { records, truncated: true });
+        }
+        let payload = match c.take(len as usize) {
+            Some(p) => p,
+            None => return Ok(WalReplay { records, truncated: true }),
+        };
+        if crc32(payload) != crc {
+            return Ok(WalReplay { records, truncated: true });
+        }
+        match decode_payload(payload) {
+            Some(rec) if rec.seq > last_seq => {
+                last_seq = rec.seq;
+                records.push(rec);
+            }
+            // Non-increasing seq or undecodable payload: corrupt tail.
+            _ => return Ok(WalReplay { records, truncated: true }),
+        }
+    }
+}
+
+/// Byte spans `(offset, len)` of each intact record in the WAL at
+/// `path`, header excluded (the first offset is the magic length).
+/// The crash-injection harness uses these to truncate at exact record
+/// boundaries and to flip bytes inside specific records.
+pub fn record_spans(path: &Path) -> io::Result<Vec<(u64, u64)>> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    let mut spans = Vec::new();
+    if bytes.len() < WAL_MAGIC.len() || &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+        return Ok(spans);
+    }
+    let mut c = Cursor { buf: &bytes, pos: WAL_MAGIC.len() };
+    loop {
+        let start = c.pos as u64;
+        let header = (|c: &mut Cursor| Some((c.u32()?, c.u32()?)))(&mut c);
+        let (len, crc) = match header {
+            Some(h) if h.0 <= MAX_RECORD_LEN => h,
+            _ => return Ok(spans),
+        };
+        let payload = match c.take(len as usize) {
+            Some(p) => p,
+            None => return Ok(spans),
+        };
+        if crc32(payload) != crc {
+            return Ok(spans);
+        }
+        spans.push((start, c.pos as u64 - start));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_wal(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("d4m-wal-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn t(r: &str, c: &str, v: &str) -> Triple {
+        Triple::new(r, c, v)
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE CRC-32 check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let path = temp_wal("roundtrip.log");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        let s1 = w.append_put(&[t("a", "x", "1"), t("b", "y", "2")]).unwrap();
+        let s2 = w.append_delete("a", "x").unwrap();
+        let s3 = w.append_put(&[t("c", "z", "3")]).unwrap();
+        assert_eq!((s1, s2, s3), (1, 2, 3));
+        w.sync().unwrap();
+        let rp = replay(&path).unwrap();
+        assert!(!rp.truncated);
+        assert_eq!(rp.records.len(), 3);
+        assert_eq!(rp.records[0].seq, 1);
+        assert_eq!(rp.records[0].op, WalOp::Put(vec![t("a", "x", "1"), t("b", "y", "2")]));
+        assert_eq!(rp.records[1].op, WalOp::Delete { row: "a".into(), col: "x".into() });
+        assert_eq!(rp.records[2].op, WalOp::Put(vec![t("c", "z", "3")]));
+    }
+
+    #[test]
+    fn reopen_append_continues_sequence() {
+        let path = temp_wal("reopen.log");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        w.append_put(&[t("a", "x", "1")]).unwrap();
+        drop(w);
+        let mut w = WalWriter::open_append(&path, FsyncPolicy::Always, 1).unwrap();
+        assert_eq!(w.append_put(&[t("b", "y", "2")]).unwrap(), 2);
+        drop(w);
+        let rp = replay(&path).unwrap();
+        assert!(!rp.truncated);
+        assert_eq!(rp.records.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn truncation_mid_record_keeps_prefix() {
+        let path = temp_wal("trunc.log");
+        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        w.append_put(&[t("a", "x", "1")]).unwrap();
+        w.append_put(&[t("b", "y", "2")]).unwrap();
+        drop(w);
+        let spans = record_spans(&path).unwrap();
+        assert_eq!(spans.len(), 2);
+        // Cut into the middle of the second record.
+        let cut = spans[1].0 + spans[1].1 / 2;
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..cut as usize]).unwrap();
+        let rp = replay(&path).unwrap();
+        assert!(rp.truncated);
+        assert_eq!(rp.records.len(), 1);
+        assert_eq!(rp.records[0].op, WalOp::Put(vec![t("a", "x", "1")]));
+    }
+
+    #[test]
+    fn corruption_stops_replay_at_bad_record() {
+        let path = temp_wal("corrupt.log");
+        let mut w = WalWriter::create(&path, FsyncPolicy::EveryN(2)).unwrap();
+        w.append_put(&[t("a", "x", "1")]).unwrap();
+        w.append_put(&[t("b", "y", "2")]).unwrap();
+        w.append_put(&[t("c", "z", "3")]).unwrap();
+        drop(w);
+        let spans = record_spans(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one payload byte inside the second record.
+        let idx = (spans[1].0 + 10) as usize;
+        bytes[idx] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let rp = replay(&path).unwrap();
+        assert!(rp.truncated);
+        assert_eq!(rp.records.len(), 1);
+    }
+
+    #[test]
+    fn empty_and_foreign_files() {
+        let path = temp_wal("short.log");
+        std::fs::write(&path, b"D4M").unwrap();
+        let rp = replay(&path).unwrap();
+        assert!(rp.truncated && rp.records.is_empty());
+        let path = temp_wal("foreign.log");
+        std::fs::write(&path, b"NOTAWAL!more bytes here").unwrap();
+        assert_eq!(replay(&path).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+}

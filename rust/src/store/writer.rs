@@ -88,7 +88,9 @@ impl BatchWriter {
 
     /// Flush the buffer, retrying transient failures. Panics if the
     /// table stays unavailable past `max_retries` (matching Accumulo's
-    /// `MutationsRejectedException` being fatal to the writer).
+    /// `MutationsRejectedException` being fatal to the writer). A
+    /// durable table's [`StoreError::Io`] (WAL append failure) is *not*
+    /// transient and takes the same fatal path immediately.
     pub fn flush(&mut self) {
         if self.buffer.is_empty() {
             return;
@@ -119,6 +121,14 @@ impl BatchWriter {
                 Err(e) => panic!("batch writer: unrecoverable store error: {e}"),
             }
         }
+    }
+
+    /// Flush, then force the table's write-ahead log to stable storage
+    /// (no-op for in-memory tables) — the writer-side durability
+    /// barrier: when this returns, every `put` so far survives a crash.
+    pub fn sync(&mut self) -> std::io::Result<()> {
+        self.flush();
+        self.table.sync()
     }
 }
 
@@ -185,5 +195,24 @@ mod tests {
         let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
         w.flush();
         assert_eq!(w.flushes, 0);
+    }
+
+    #[test]
+    fn sync_is_a_durability_barrier() {
+        use crate::store::FsyncPolicy;
+        let dir = std::env::temp_dir().join("d4m-writer-sync-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = Arc::new(
+            Table::durable("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap(),
+        );
+        let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
+        w.put(Triple::new("a", "b", "c"));
+        w.sync().unwrap();
+        assert_eq!(t.len(), 1);
+        drop(w);
+        drop(t);
+        let r = Table::recover("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(r.get("a", "b"), Some("c".into()));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -23,6 +23,12 @@
 //! interning sits on the per-cell ingest path, where SipHash's
 //! per-byte cost is measurable. The dictionary is not exposed to
 //! untrusted inputs, so HashDoS resistance is not a concern here.
+//!
+//! PR 6 spills this dictionary into the storage layer: an immutable
+//! sorted run ([`crate::store::Run`]) is built by interning a frozen
+//! memtable's rows, columns, and values through one [`StrDict`], so a
+//! run on disk is a string pool plus `u32` id triples — the on-disk
+//! shape of the same encode-once idea.
 
 use std::borrow::Borrow;
 use std::collections::hash_map::Entry;
@@ -414,6 +420,12 @@ impl Dict<SharedStr> {
     /// interned in sorted order (a sorted scan stream's row keys), the
     /// sort is skipped entirely; otherwise the shared digest-pair sort
     /// orders the (distinct) keys.
+    ///
+    /// After the remap, comparing two ranks *is* comparing the two
+    /// keys' bytes (`rank[a] < rank[b] ⟺ key(a) < key(b)`), so a cell
+    /// block already sorted by its string keys stays sorted as rank
+    /// tuples — the property [`crate::store::Run`] relies on to
+    /// dictionary-encode a frozen memtable without re-sorting it.
     pub fn into_sorted(self) -> (Vec<SharedStr>, Vec<u32>) {
         let n = self.keys.len();
         if self.keys.windows(2).all(|w| w[0] < w[1]) {

@@ -9,8 +9,8 @@
 //! reduce.
 
 use d4m::store::{
-    format_num, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, SharedStr, Table,
-    TableConfig, Triple,
+    format_num, CellFilter, CompactionSpec, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec,
+    SharedStr, Table, TableConfig, Triple,
 };
 use d4m::util::prop::check;
 use d4m::util::{Parallelism, SplitMix64};
@@ -462,4 +462,189 @@ fn filtered_scan_across_many_tablets_and_batches() {
     assert_eq!(reduced.len(), expect_rows);
     // row010 window = 102 + 103 + 104.
     assert_eq!(reduced[0], Triple::new("row010", "s", "309"));
+}
+
+// ---------------------------------------------------------------------
+// Compaction equivalence section (PR 6)
+// ---------------------------------------------------------------------
+//
+// Contract: storage tiering is invisible to every reader. A table whose
+// cells are spread over memtable + tombstones + frozen runs scans
+// byte-identically — under any range set, filter/combiner stack, batch
+// hint, thread count, streamed or collected — to a mirror table holding
+// the same logical cells entirely in memory. And a combiner applied at
+// *merge* time (major compaction) is bit-identical to the same combiner
+// applied at *scan* time, for every `RowReduce`.
+
+/// Build two tables with identical logical content from one op stream:
+/// `tiered` gets minor compactions (and occasionally a logically-
+/// invisible major compaction) interleaved with the writes, plus
+/// deletes that land as tombstones over its runs; `flat` applies the
+/// same puts and deletes purely in memory. Also asserts the two
+/// tables' `delete` return values agree — the tombstone path must
+/// report visible-before exactly like the memtable path.
+fn mirrored_tables(rng: &mut SplitMix64, cells: usize) -> (Table, Table) {
+    let cfg = TableConfig { split_threshold: 512, write_latency_us: 0 };
+    let tiered = Table::new("tiered", cfg.clone());
+    let flat = Table::new("flat", cfg);
+    let triples: Vec<Triple> = (0..cells)
+        .map(|_| {
+            Triple::new(
+                format!("r{:03}", rng.below(120)),
+                format!("c{:02}", rng.below(24)),
+                format!("{}", rng.range_i64(-50, 100)),
+            )
+        })
+        .collect();
+    let chunks: Vec<&[Triple]> = triples.chunks(16).collect();
+    let mid = chunks.len() / 2;
+    for (i, chunk) in chunks.iter().enumerate() {
+        tiered.write_batch(chunk.to_vec()).unwrap();
+        flat.write_batch(chunk.to_vec()).unwrap();
+        // One guaranteed freeze at the midpoint plus random ones, so
+        // the memtable always layers over at least one run.
+        if i == mid || rng.chance(0.15) {
+            tiered.minor_compact().unwrap();
+        }
+        if rng.chance(0.08) {
+            tiered.major_compact(&CompactionSpec::default()).unwrap();
+        }
+        if rng.chance(0.4) {
+            let row = format!("r{:03}", rng.below(120));
+            let col = format!("c{:02}", rng.below(24));
+            let a = tiered.delete(&row, &col);
+            let b = flat.delete(&row, &col);
+            assert_eq!(a, b, "delete({row},{col}) visibility must not depend on tiering");
+        }
+    }
+    (tiered, flat)
+}
+
+#[test]
+fn prop_tiered_scan_equals_flat_scan() {
+    check("memtable+runs stacked scan == all-in-memory scan", 25, |g| {
+        let cells = 300 + g.rng().below_usize(400);
+        let (tiered, flat) = mirrored_tables(g.rng(), cells);
+        assert!(tiered.run_count() > 0, "need a real run stack");
+        assert_eq!(tiered.len(), flat.len(), "merged len counts visible cells once");
+        let spec = random_spec(g.rng());
+        let expect = flat.scan_spec_par(&spec, Parallelism::serial());
+        assert_eq!(expect, tiered.scan_spec_par(&spec, Parallelism::serial()), "serial");
+        for t in THREADS {
+            assert_eq!(
+                expect,
+                tiered.scan_spec_par(&spec, Parallelism::with_threads(t)),
+                "threads={t} ({spec:?})"
+            );
+        }
+        let streamed: Vec<Triple> = tiered.scan_stream(spec.clone()).collect();
+        assert_eq!(expect, streamed, "streamed ({spec:?})");
+        // The naive pipeline over the tiered table agrees too (its row
+        // scans walk the same merged cursor).
+        assert_eq!(naive(&tiered, &spec), naive(&flat, &spec), "naive over tiered");
+    });
+}
+
+#[test]
+fn prop_tiered_multirange_with_offline_tablets() {
+    // Multi-range sets + offline tablets over the layer stack: offline
+    // gates writes only, and range pruning must clamp run cursors to
+    // tablet extents (post-split tablets share runs — without the
+    // clamp, cells would be served twice).
+    check("tiered multi-range scan across offline tablets", 15, |g| {
+        let (tiered, flat) = mirrored_tables(g.rng(), 500);
+        assert!(tiered.tablet_count() > 2, "need post-split shared runs");
+        tiered.set_tablet_offline(0, true);
+        tiered.set_tablet_offline(tiered.tablet_count() / 2, true);
+        let k = 2 + g.rng().below_usize(5);
+        let mut ranges = Vec::with_capacity(k);
+        for _ in 0..k {
+            if g.rng().chance(0.4) {
+                ranges.push(ScanRange::single(format!("r{:03}", g.rng().below(120))));
+            } else {
+                ranges.push(random_range(g.rng()));
+            }
+        }
+        let mut spec = ScanSpec::ranges(ranges);
+        if g.rng().chance(0.5) {
+            spec = spec.filtered(CellFilter::col(KeyMatch::Prefix("c1".into())));
+        }
+        let expect = flat.scan_spec_par(&spec, Parallelism::serial());
+        for t in [1, 2, 4, 7] {
+            assert_eq!(
+                expect,
+                tiered.scan_spec_par(&spec, Parallelism::with_threads(t)),
+                "threads={t}"
+            );
+        }
+        let streamed: Vec<Triple> = tiered.scan_stream(spec).collect();
+        assert_eq!(expect, streamed, "streamed");
+    });
+}
+
+#[test]
+fn stream_survives_mid_scan_compactions() {
+    // A stream holds no lock between blocks and re-locates by key, so
+    // minor and major compactions may land mid-scan without the stream
+    // skipping, duplicating, or reordering a single cell.
+    let mut rng = SplitMix64::new(0xC0_46);
+    let table = random_table(&mut rng, 500);
+    let expect = table.scan(ScanRange::all());
+    let mut s = table.scan_stream(ScanSpec::all());
+    let mut got = Vec::new();
+    for _ in 0..expect.len() / 3 {
+        got.push(s.next_triple().unwrap());
+    }
+    table.minor_compact().unwrap();
+    assert!(table.run_count() > 0);
+    for _ in 0..expect.len() / 3 {
+        got.push(s.next_triple().unwrap());
+    }
+    table.major_compact(&CompactionSpec::default()).unwrap();
+    for tr in s {
+        got.push(tr);
+    }
+    assert_eq!(got, expect, "mid-scan compactions changed the stream");
+}
+
+#[test]
+fn combiner_at_merge_equals_combiner_at_scan() {
+    // Accumulo applies combiners at compaction time as well as scan
+    // time; the two must agree bit-for-bit for every RowReduce. The
+    // merge path feeds the *same* ReduceIter as the scan path, so this
+    // pins value formatting too (e.g. float rendering of sums).
+    let reduces = [
+        RowReduce::Count { out_col: "n".into() },
+        RowReduce::Sum { out_col: "s".into() },
+        RowReduce::Min { out_col: "lo".into() },
+        RowReduce::Max { out_col: "hi".into() },
+    ];
+    for (i, reduce) in reduces.into_iter().enumerate() {
+        let mut rng = SplitMix64::new(0x6E56 + i as u64);
+        let table = random_table(&mut rng, 400);
+        // Layer the input: freeze, then overwrite some cells and delete
+        // a few, so the merge sees shadowed versions and tombstones.
+        table.minor_compact().unwrap();
+        for _ in 0..40 {
+            table
+                .write_batch(vec![Triple::new(
+                    format!("r{:03}", rng.below(120)),
+                    format!("c{:02}", rng.below(24)),
+                    format!("{}", rng.range_i64(-50, 100)),
+                )])
+                .unwrap();
+        }
+        for _ in 0..20 {
+            table.delete(&format!("r{:03}", rng.below(120)), &format!("c{:02}", rng.below(24)));
+        }
+        let expect = table.scan_spec(&ScanSpec::all().reduced(reduce.clone()));
+        assert!(!expect.is_empty());
+        table
+            .major_compact(&CompactionSpec { reduce: Some(reduce.clone()), max_versions: 1 })
+            .unwrap();
+        // The merged run *stores* the reduced rows: a plain scan now
+        // returns exactly what the scan-time combiner produced.
+        let got = table.scan(ScanRange::all());
+        assert_eq!(got, expect, "merge-time {reduce:?} != scan-time");
+    }
 }

@@ -85,6 +85,8 @@ ACCEPTANCE = {
     "tablemult-masked": ("masked vs unmasked TableMult", 1.5),
     "e2e-dict": ("dict-encoded vs string ctor+TableMult (end-to-end)", 1.3),
     "bfs-one-scan": ("one-scan BFS frontier vs per-node seeks", 1.4),
+    "wal-recover": ("checkpoint recovery vs durable re-ingest", 5.0),
+    "run-backed-scan": ("run-backed vs all-in-memory scan", 0.91),
 }
 
 
