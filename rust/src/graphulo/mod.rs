@@ -242,7 +242,7 @@ fn table_mult_inner(
             }
         }
     }
-    w.flush();
+    w.flush().expect("spgemm sink flush");
     cells
 }
 
@@ -376,7 +376,7 @@ pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
         .reduced(RowReduce::Count { out_col: "deg".into() })
         .batched(SCAN_BLOCK);
     let nodes = w.put_scan(edges.scan_stream(spec));
-    w.flush();
+    w.flush().expect("degree table flush");
     nodes
 }
 

@@ -128,7 +128,7 @@ impl IngestPipeline {
                         count += batch.len();
                         writer.put_all(batch);
                     }
-                    writer.flush();
+                    writer.flush().expect("ingest worker flush");
                     (count, writer.flushes)
                 })
                 .expect("spawn ingest worker");

@@ -1,0 +1,554 @@
+//! The storage I/O boundary: everything in `store/` that touches the
+//! filesystem goes through [`StorageIo`].
+//!
+//! Two implementations exist: [`RealIo`] (plain `std::fs`) and
+//! [`FaultyIo`], a deterministic fault injector that counts every I/O
+//! operation and fails chosen operation indices according to a
+//! [`FaultPlan`] — transient errors, permanent errors, short writes,
+//! fsync failures, ENOSPC, and silent payload corruption. Because the
+//! operation counter is the schedule key, a `(workload, plan)` pair
+//! reproduces the exact same failure on every run; `tests/fault_injection.rs`
+//! sweeps a fault over *every* operation index of a workload and asserts
+//! the store stays prefix-consistent.
+//!
+//! [`StorageIo::write_atomic`] is the tmp + fsync + rename idiom used for
+//! run files and the manifest: readers observe either the old bytes or
+//! the complete new bytes, never a torn file.
+
+use std::collections::BTreeMap;
+use std::fmt::Debug;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// An open, writable storage file (WAL segment or similar append
+/// stream). Writes are unbuffered from the caller's point of view: when
+/// `write_all` returns `Ok`, the bytes have been handed to the OS.
+pub trait StorageFile: Send + Debug {
+    /// Write all of `buf` at the current position.
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()>;
+    /// Flush file *data* to stable storage (`fdatasync`).
+    fn sync_data(&mut self) -> io::Result<()>;
+    /// Truncate the file to `len` bytes and reposition the write cursor
+    /// at the new end — used to repair a torn tail before re-appending.
+    fn truncate(&mut self, len: u64) -> io::Result<()>;
+    /// Current size of the file in bytes (metadata read, not counted as
+    /// a faultable operation).
+    fn size(&self) -> io::Result<u64>;
+}
+
+/// The filesystem surface the durable tier is allowed to use.
+pub trait StorageIo: Send + Sync + Debug {
+    /// Create (truncate) `path` for writing.
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StorageFile>>;
+    /// Open `path` for appending (created if absent).
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn StorageFile>>;
+    /// Read the entire file.
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Atomically replace `path` with `bytes`: write `<path>.tmp`, fsync
+    /// it, rename over `path`. Readers never see a partial file.
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> io::Result<()>;
+    /// Delete a file.
+    fn remove_file(&self, path: &Path) -> io::Result<()>;
+    /// Rename a file (same directory; used to quarantine corrupt files).
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// List a directory as `(file_name, is_dir)` pairs. Non-UTF-8 names
+    /// are an `InvalidData` error (nothing in the store writes them).
+    fn read_dir(&self, dir: &Path) -> io::Result<Vec<(String, bool)>>;
+    /// Whether `path` exists (metadata probe, not counted as faultable).
+    fn exists(&self, path: &Path) -> bool;
+    /// Create `path` and any missing parents.
+    fn create_dir_all(&self, path: &Path) -> io::Result<()>;
+}
+
+/// Append `.tmp` to the file name (keeping the original extension, so
+/// `run-00000001.run` becomes `run-00000001.run.tmp` — invisible to the
+/// `run-*.run` orphan-GC pattern).
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_owned();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+// ---------------------------------------------------------------- RealIo
+
+/// The production [`StorageIo`]: plain `std::fs`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RealIo;
+
+#[derive(Debug)]
+struct RealFile(File);
+
+impl StorageFile for RealFile {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.0.write_all(buf)
+    }
+
+    fn sync_data(&mut self) -> io::Result<()> {
+        self.0.sync_data()
+    }
+
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        self.0.set_len(len)?;
+        // Reposition explicitly: on non-append handles `set_len` leaves
+        // the cursor where it was, which could be past the new end.
+        self.0.seek(SeekFrom::Start(len)).map(|_| ())
+    }
+
+    fn size(&self) -> io::Result<u64> {
+        self.0.metadata().map(|m| m.len())
+    }
+}
+
+impl StorageIo for RealIo {
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StorageFile>> {
+        Ok(Box::new(RealFile(File::create(path)?)))
+    }
+
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn StorageFile>> {
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Box::new(RealFile(f)))
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        File::open(path)?.read_to_end(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        let tmp = tmp_path(path);
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, path)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn read_dir(&self, dir: &Path) -> io::Result<Vec<(String, bool)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name().into_string().map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 file name in store directory")
+            })?;
+            out.push((name, entry.file_type()?.is_dir()));
+        }
+        Ok(out)
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        path.exists()
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(path)
+    }
+}
+
+// --------------------------------------------------------------- FaultyIo
+
+/// What an injected fault does to the operation it lands on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail with a retryable error (`ErrorKind::Interrupted`) before any
+    /// side effect.
+    Transient,
+    /// Fail with a non-retryable error (`ErrorKind::Other`) before any
+    /// side effect — models a dead device.
+    Permanent,
+    /// For writes: persist only the first half of the payload, then fail
+    /// with a retryable error (a torn append). Other operations degrade
+    /// to [`FaultKind::Transient`].
+    ShortWrite,
+    /// For `sync_data`: the flush fails retryably (data may or may not
+    /// have reached the platter). Other operations degrade to
+    /// [`FaultKind::Transient`].
+    FsyncFail,
+    /// Fail with `ErrorKind::StorageFull` (ENOSPC) before any side
+    /// effect — permanent under the retry taxonomy.
+    Enospc,
+    /// Silent payload corruption: the operation *succeeds* but one byte
+    /// of the written (or read) payload is flipped. Non-payload
+    /// operations are unaffected.
+    Corrupt,
+}
+
+/// A deterministic fault schedule keyed by global operation index (the
+/// [`FaultyIo`] counter value at the moment the operation runs).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    at: BTreeMap<u64, FaultKind>,
+    sticky_from: Option<(u64, FaultKind)>,
+    every: Option<(u64, FaultKind)>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults; useful for counting operations).
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Fault exactly operation `op`.
+    pub fn fail_at(mut self, op: u64, kind: FaultKind) -> Self {
+        self.at.insert(op, kind);
+        self
+    }
+
+    /// Fault operation `op` and every operation after it (a device that
+    /// dies and stays dead).
+    pub fn fail_from(mut self, op: u64, kind: FaultKind) -> Self {
+        self.sticky_from = Some((op, kind));
+        self
+    }
+
+    /// Fault every `period`-th operation (indices `period-1`,
+    /// `2*period-1`, ...).
+    pub fn fail_every(mut self, period: u64, kind: FaultKind) -> Self {
+        self.every = Some((period.max(1), kind));
+        self
+    }
+
+    fn fault_for(&self, op: u64) -> Option<FaultKind> {
+        if let Some((from, kind)) = self.sticky_from {
+            if op >= from {
+                return Some(kind);
+            }
+        }
+        if let Some(kind) = self.at.get(&op) {
+            return Some(*kind);
+        }
+        if let Some((period, kind)) = self.every {
+            if (op + 1) % period == 0 {
+                return Some(kind);
+            }
+        }
+        None
+    }
+}
+
+#[derive(Debug)]
+struct FaultState {
+    plan: Mutex<FaultPlan>,
+    counter: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultState {
+    /// Count this operation and return the fault scheduled for it, if
+    /// any.
+    fn next_fault(&self) -> Option<FaultKind> {
+        let op = self.counter.fetch_add(1, Ordering::SeqCst);
+        let fault = self.plan.lock().unwrap().fault_for(op);
+        if fault.is_some() {
+            self.injected.fetch_add(1, Ordering::SeqCst);
+        }
+        fault
+    }
+
+    fn error(kind: FaultKind) -> io::Error {
+        match kind {
+            FaultKind::Transient | FaultKind::ShortWrite | FaultKind::FsyncFail => {
+                io::Error::new(io::ErrorKind::Interrupted, "injected transient fault")
+            }
+            FaultKind::Permanent => io::Error::other("injected permanent fault"),
+            FaultKind::Enospc => {
+                io::Error::new(io::ErrorKind::StorageFull, "injected ENOSPC")
+            }
+            FaultKind::Corrupt => unreachable!("corruption succeeds silently"),
+        }
+    }
+}
+
+/// Flip one byte in the middle of `bytes` (no-op on empty payloads).
+fn corrupt(bytes: &mut [u8]) {
+    if !bytes.is_empty() {
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+    }
+}
+
+/// A [`StorageIo`] wrapping [`RealIo`] that injects scheduled faults.
+///
+/// Every faultable operation — file creates/opens, reads, writes,
+/// fsyncs, truncates, renames, removals, directory scans — increments a
+/// global counter; the [`FaultPlan`] decides per index whether (and how)
+/// the operation fails. Metadata probes (`exists`, `size`) are not
+/// counted so schedules stay stable across incidental checks.
+#[derive(Debug)]
+pub struct FaultyIo {
+    inner: RealIo,
+    state: Arc<FaultState>,
+}
+
+impl FaultyIo {
+    /// Build an injector around the given plan. Returned as `Arc` so the
+    /// caller can keep a handle for counters/rescheduling while the
+    /// store owns it as an `Arc<dyn StorageIo>`.
+    pub fn new(plan: FaultPlan) -> Arc<Self> {
+        Arc::new(FaultyIo {
+            inner: RealIo,
+            state: Arc::new(FaultState {
+                plan: Mutex::new(plan),
+                counter: AtomicU64::new(0),
+                injected: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// Operations counted so far.
+    pub fn ops(&self) -> u64 {
+        self.state.counter.load(Ordering::SeqCst)
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.state.injected.load(Ordering::SeqCst)
+    }
+
+    /// Schedule an additional one-shot fault at absolute index `op`.
+    pub fn schedule(&self, op: u64, kind: FaultKind) {
+        self.state.plan.lock().unwrap().at.insert(op, kind);
+    }
+
+    /// Fault every operation from now on (sticky device death).
+    pub fn fail_from_now(&self, kind: FaultKind) {
+        let now = self.ops();
+        self.state.plan.lock().unwrap().sticky_from = Some((now, kind));
+    }
+
+    /// Drop all scheduled faults (the device "recovers").
+    pub fn clear(&self) {
+        *self.state.plan.lock().unwrap() = FaultPlan::new();
+    }
+}
+
+#[derive(Debug)]
+struct FaultyFile {
+    inner: Box<dyn StorageFile>,
+    state: Arc<FaultState>,
+}
+
+impl StorageFile for FaultyFile {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        match self.state.next_fault() {
+            None => self.inner.write_all(buf),
+            Some(FaultKind::Corrupt) => {
+                let mut copy = buf.to_vec();
+                corrupt(&mut copy);
+                self.inner.write_all(&copy)
+            }
+            Some(FaultKind::ShortWrite) => {
+                // Persist a torn prefix, then fail retryably: the caller
+                // must repair the tail before re-appending.
+                let half = buf.len() / 2;
+                self.inner.write_all(&buf[..half])?;
+                Err(FaultState::error(FaultKind::ShortWrite))
+            }
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn sync_data(&mut self) -> io::Result<()> {
+        match self.state.next_fault() {
+            None | Some(FaultKind::Corrupt) => self.inner.sync_data(),
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        match self.state.next_fault() {
+            None | Some(FaultKind::Corrupt) => self.inner.truncate(len),
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn size(&self) -> io::Result<u64> {
+        self.inner.size()
+    }
+}
+
+impl StorageIo for FaultyIo {
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StorageFile>> {
+        match self.state.next_fault() {
+            None | Some(FaultKind::Corrupt) => {
+                let inner = self.inner.create(path)?;
+                Ok(Box::new(FaultyFile { inner, state: Arc::clone(&self.state) }))
+            }
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn StorageFile>> {
+        match self.state.next_fault() {
+            None | Some(FaultKind::Corrupt) => {
+                let inner = self.inner.open_append(path)?;
+                Ok(Box::new(FaultyFile { inner, state: Arc::clone(&self.state) }))
+            }
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        match self.state.next_fault() {
+            None => self.inner.read(path),
+            Some(FaultKind::Corrupt) => {
+                let mut bytes = self.inner.read(path)?;
+                corrupt(&mut bytes);
+                Ok(bytes)
+            }
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        match self.state.next_fault() {
+            None => self.inner.write_atomic(path, bytes),
+            Some(FaultKind::Corrupt) => {
+                let mut copy = bytes.to_vec();
+                corrupt(&mut copy);
+                self.inner.write_atomic(path, &copy)
+            }
+            // Short writes cannot tear an atomic replace — the rename
+            // never happens — so every failing kind leaves the old file.
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        match self.state.next_fault() {
+            None | Some(FaultKind::Corrupt) => self.inner.remove_file(path),
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        match self.state.next_fault() {
+            None | Some(FaultKind::Corrupt) => self.inner.rename(from, to),
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn read_dir(&self, dir: &Path) -> io::Result<Vec<(String, bool)>> {
+        match self.state.next_fault() {
+            None | Some(FaultKind::Corrupt) => self.inner.read_dir(dir),
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        self.inner.exists(path)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        match self.state.next_fault() {
+            None | Some(FaultKind::Corrupt) => self.inner.create_dir_all(path),
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("d4m-io-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_atomic_replaces_whole_file() {
+        let d = tmp_dir("atomic");
+        let p = d.join("m");
+        RealIo.write_atomic(&p, b"one").unwrap();
+        assert_eq!(RealIo.read(&p).unwrap(), b"one");
+        RealIo.write_atomic(&p, b"two-longer").unwrap();
+        assert_eq!(RealIo.read(&p).unwrap(), b"two-longer");
+        assert!(!RealIo.exists(&tmp_path(&p)));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn truncate_repositions_cursor() {
+        let d = tmp_dir("trunc");
+        let p = d.join("f");
+        let mut f = RealIo.create(&p).unwrap();
+        f.write_all(b"hello world").unwrap();
+        f.truncate(5).unwrap();
+        f.write_all(b"!").unwrap();
+        drop(f);
+        assert_eq!(RealIo.read(&p).unwrap(), b"hello!");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn fault_plan_schedules_deterministically() {
+        let plan = FaultPlan::new()
+            .fail_at(3, FaultKind::Transient)
+            .fail_every(10, FaultKind::Enospc)
+            .fail_from(25, FaultKind::Permanent);
+        assert_eq!(plan.fault_for(3), Some(FaultKind::Transient));
+        assert_eq!(plan.fault_for(9), Some(FaultKind::Enospc));
+        assert_eq!(plan.fault_for(19), Some(FaultKind::Enospc));
+        assert_eq!(plan.fault_for(4), None);
+        assert_eq!(plan.fault_for(25), Some(FaultKind::Permanent));
+        assert_eq!(plan.fault_for(400), Some(FaultKind::Permanent));
+    }
+
+    #[test]
+    fn short_write_tears_then_fails() {
+        let d = tmp_dir("short");
+        let p = d.join("f");
+        let io = FaultyIo::new(FaultPlan::new().fail_at(1, FaultKind::ShortWrite));
+        let mut f = io.create(&p).unwrap(); // op 0
+        let err = f.write_all(b"abcdefgh").unwrap_err(); // op 1: torn
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        f.truncate(0).unwrap(); // repair
+        f.write_all(b"abcdefgh").unwrap();
+        drop(f);
+        assert_eq!(RealIo.read(&p).unwrap(), b"abcdefgh");
+        assert_eq!(io.injected(), 1);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_flips_one_byte_silently() {
+        let d = tmp_dir("corrupt");
+        let p = d.join("f");
+        let io = FaultyIo::new(FaultPlan::new().fail_at(0, FaultKind::Corrupt));
+        io.write_atomic(&p, b"abcd").unwrap(); // succeeds, payload damaged
+        let got = RealIo.read(&p).unwrap();
+        assert_ne!(got, b"abcd");
+        assert_eq!(got.len(), 4);
+        assert_eq!(got.iter().zip(b"abcd").filter(|(a, b)| a != b).count(), 1);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn runtime_scheduling_and_recovery() {
+        let d = tmp_dir("sched");
+        let io = FaultyIo::new(FaultPlan::new());
+        io.write_atomic(&d.join("a"), b"x").unwrap();
+        io.fail_from_now(FaultKind::Permanent);
+        assert!(io.write_atomic(&d.join("b"), b"y").is_err());
+        assert!(io.read(&d.join("a")).is_err());
+        io.clear();
+        assert_eq!(io.read(&d.join("a")).unwrap(), b"x");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -43,8 +43,19 @@
 //! and version-retention rule ([`CompactionSpec`]). Open durable tables
 //! with [`TableStore::durable`]; reopen a directory after a crash with
 //! [`TableStore::recover`].
+//!
+//! **Fault tolerance** (PR 7) puts a pluggable [`StorageIo`] backend
+//! beneath the durable tier. Storage calls run under a deterministic
+//! seeded [`crate::util::retry::RetryPolicy`]; recovery *quarantines*
+//! corrupt files (moved aside, reported via [`Table::health`]) instead
+//! of failing; a failed compaction leaves memtables and the manifest
+//! untouched and is safely re-runnable; and a permanent WAL failure
+//! moves the table down a degradation ladder ([`TableHealth`]) rather
+//! than panicking. [`FaultyIo`] injects scheduled faults
+//! deterministically for the `tests/fault_injection.rs` suite.
 
 mod compact;
+pub mod io;
 mod run;
 pub mod scan;
 mod table;
@@ -53,12 +64,13 @@ pub mod wal;
 mod writer;
 
 pub use compact::CompactionSpec;
+pub use io::{FaultKind, FaultPlan, FaultyIo, RealIo, StorageFile, StorageIo};
 pub use run::{Run, RunCursor};
 pub use scan::{
     coalesce_ranges, format_num, CellField, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange,
     ScanSpec, SCAN_BLOCK,
 };
-pub use table::{Table, TableConfig, TableStream};
+pub use table::{DurableOptions, HealthReport, Table, TableConfig, TableHealth, TableStream};
 pub use tablet::Tablet;
 pub use wal::FsyncPolicy;
 pub use writer::{BatchWriter, WriterConfig};
@@ -104,10 +116,33 @@ pub enum StoreError {
     NoSuchTable(String),
     /// A tablet server was marked offline (failure injection).
     TabletOffline { table: String, tablet: usize },
-    /// A durable-storage I/O failure (WAL append, run write), with the
-    /// failing operation's context. Carried as a rendered string so the
-    /// error stays `Clone + PartialEq` like the rest of the enum.
-    Io { context: String },
+    /// A durable-storage I/O failure (WAL append, run write) that
+    /// survived the retry schedule, with the failing operation's
+    /// context. `transient` carries the
+    /// [`crate::util::retry::ErrorClass`]: `true` means the retry
+    /// budget ran out on a retryable condition and the *next* attempt
+    /// may succeed ([`BatchWriter`] re-flushes these); `false` means
+    /// the storage said no definitively. Carried as a rendered string
+    /// so the error stays `Clone + PartialEq` like the rest of the
+    /// enum.
+    Io { context: String, transient: bool },
+    /// The table moved down the degradation ladder (permanent WAL
+    /// failure without in-memory fallback) and rejects writes; reads
+    /// and scans still serve.
+    Degraded { table: String, state: TableHealth },
+}
+
+impl StoreError {
+    /// Whether retrying the failed operation may succeed: offline
+    /// tablets come back ([`Table::set_tablet_offline`]) and
+    /// transient I/O heals; degraded tables and permanent I/O do not.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            StoreError::TabletOffline { .. } => true,
+            StoreError::Io { transient, .. } => *transient,
+            StoreError::NoSuchTable(_) | StoreError::Degraded { .. } => false,
+        }
+    }
 }
 
 impl std::fmt::Display for StoreError {
@@ -117,21 +152,36 @@ impl std::fmt::Display for StoreError {
             StoreError::TabletOffline { table, tablet } => {
                 write!(f, "tablet {tablet} of table {table} is offline")
             }
-            StoreError::Io { context } => write!(f, "storage i/o error: {context}"),
+            StoreError::Io { context, transient } => {
+                let class = if *transient { "transient" } else { "permanent" };
+                write!(f, "storage i/o error ({class}): {context}")
+            }
+            StoreError::Degraded { table, state } => {
+                write!(f, "table {table} is {state} and rejects writes")
+            }
         }
     }
 }
 
 impl std::error::Error for StoreError {}
 
+/// Durable root settings shared by every table a [`TableStore`]
+/// creates: the root directory, the fsync policy, and the storage
+/// backend / retry / degradation options.
+struct DurableRoot {
+    dir: std::path::PathBuf,
+    policy: FsyncPolicy,
+    opts: DurableOptions,
+}
+
 /// A store instance: named tables plus the D4M adjacency/transpose pair
 /// convention (`name` and `name_T`).
 pub struct TableStore {
     tables: Mutex<BTreeMap<String, Arc<Table>>>,
     config: TableConfig,
-    /// Durable root + fsync policy: when set, every table lives in its
-    /// own `<root>/<name>/` directory with a WAL and run files.
-    durable: Option<(std::path::PathBuf, FsyncPolicy)>,
+    /// Durable root: when set, every table lives in its own
+    /// `<root>/<name>/` directory with a WAL and run files.
+    durable: Option<DurableRoot>,
 }
 
 impl TableStore {
@@ -154,10 +204,22 @@ impl TableStore {
         config: TableConfig,
         policy: FsyncPolicy,
     ) -> std::io::Result<Self> {
+        Self::durable_with(dir, config, policy, DurableOptions::default())
+    }
+
+    /// [`TableStore::durable`] with explicit [`DurableOptions`] (storage
+    /// backend, retry schedule, degradation mode) applied to every table
+    /// this store creates or recovers.
+    pub fn durable_with(
+        dir: impl AsRef<std::path::Path>,
+        config: TableConfig,
+        policy: FsyncPolicy,
+        opts: DurableOptions,
+    ) -> std::io::Result<Self> {
         let dir = dir.as_ref();
-        std::fs::create_dir_all(dir)?;
+        opts.retry.run("create store root", || opts.io.create_dir_all(dir))?;
         let mut store = Self::new(config);
-        store.durable = Some((dir.to_path_buf(), policy));
+        store.durable = Some(DurableRoot { dir: dir.to_path_buf(), policy, opts });
         Ok(store)
     }
 
@@ -177,21 +239,32 @@ impl TableStore {
         config: TableConfig,
         policy: FsyncPolicy,
     ) -> std::io::Result<Self> {
+        Self::recover_with_opts(dir, config, policy, DurableOptions::default())
+    }
+
+    /// [`TableStore::recover_with`] with explicit [`DurableOptions`]:
+    /// every table directory is recovered through the given storage
+    /// backend and retry schedule (per-table quarantine reports are
+    /// available via each table's [`Table::health`]).
+    pub fn recover_with_opts(
+        dir: impl AsRef<std::path::Path>,
+        config: TableConfig,
+        policy: FsyncPolicy,
+        opts: DurableOptions,
+    ) -> std::io::Result<Self> {
         let dir = dir.as_ref();
-        let store = Self::durable(dir, config, policy)?;
-        for entry in std::fs::read_dir(dir)? {
-            let entry = entry?;
-            if !entry.file_type()?.is_dir() {
+        let store = Self::durable_with(dir, config, policy, opts.clone())?;
+        for (name, is_dir) in opts.io.read_dir(dir)? {
+            if !is_dir {
                 continue;
             }
-            let name = entry.file_name().into_string().map_err(|raw| {
-                std::io::Error::new(
-                    std::io::ErrorKind::InvalidData,
-                    format!("non-UTF-8 table directory name: {raw:?}"),
-                )
-            })?;
-            let table =
-                Table::recover(&name, store.config.clone(), &entry.path(), policy)?;
+            let table = Table::recover_with(
+                &name,
+                store.config.clone(),
+                &dir.join(&name),
+                policy,
+                opts.clone(),
+            )?;
             store.tables.lock().unwrap().insert(name, Arc::new(table));
         }
         Ok(store)
@@ -199,25 +272,34 @@ impl TableStore {
 
     /// Create (or get) a table. On a durable store this creates the
     /// table's directory and write-ahead log; an I/O failure there
-    /// panics with context (use [`TableStore::recover`] to reopen
+    /// panics with context (use [`TableStore::try_create_table`] for
+    /// the fallible variant, and [`TableStore::recover`] to reopen
     /// existing tables instead of re-creating them).
     pub fn create_table(&self, name: &str) -> Arc<Table> {
+        self.try_create_table(name)
+            .unwrap_or_else(|e| panic!("creating durable table '{name}': {e}"))
+    }
+
+    /// Create (or get) a table, surfacing durable-setup I/O failures
+    /// (directory or WAL creation after retries) instead of panicking.
+    pub fn try_create_table(&self, name: &str) -> std::io::Result<Arc<Table>> {
         let mut tables = self.tables.lock().unwrap();
-        tables
-            .entry(name.to_string())
-            .or_insert_with(|| {
-                let table = match &self.durable {
-                    Some((root, policy)) => {
-                        Table::durable(name, self.config.clone(), &root.join(name), *policy)
-                            .unwrap_or_else(|e| {
-                                panic!("creating durable table '{name}': {e}")
-                            })
-                    }
-                    None => Table::new(name, self.config.clone()),
-                };
-                Arc::new(table)
-            })
-            .clone()
+        if let Some(t) = tables.get(name) {
+            return Ok(t.clone());
+        }
+        let table = match &self.durable {
+            Some(root) => Table::durable_with(
+                name,
+                self.config.clone(),
+                &root.dir.join(name),
+                root.policy,
+                root.opts.clone(),
+            )?,
+            None => Table::new(name, self.config.clone()),
+        };
+        let table = Arc::new(table);
+        tables.insert(name.to_string(), table.clone());
+        Ok(table)
     }
 
     /// Look up an existing table.
@@ -257,8 +339,8 @@ impl TableStore {
             w.put(Triple::new(rs.clone(), cs.clone(), vs.clone()));
             wt.put(Triple::new(cs, rs, vs));
         }
-        w.flush();
-        wt.flush();
+        w.flush().expect("ingest flush");
+        wt.flush().expect("ingest flush (transpose)");
         (t, tt)
     }
 
@@ -334,7 +416,7 @@ impl TableStore {
                     }
                 }
             }
-            w.flush();
+            w.flush().map_err(std::io::Error::other)?;
             names.push(name);
         }
         names.sort();

@@ -28,10 +28,11 @@
 //! or bit-flipped run file fails loudly at [`Run::load`] instead of
 //! serving wrong cells.
 
+use super::io::{RealIo, StorageIo};
 use super::wal::crc32;
 use crate::util::intern::StrDict;
 use crate::util::SharedStr;
-use std::io::{self, Read, Write};
+use std::io;
 use std::path::Path;
 
 /// Magic bytes opening every run file (format version 01).
@@ -202,38 +203,49 @@ impl Run {
 
     /// Serialize to `path` (see the module docs for the format).
     pub fn save(&self, path: &Path) -> io::Result<()> {
-        let mut body = Vec::with_capacity(32 + self.pool.len() * 12 + self.triples.len() * 12);
-        body.extend_from_slice(&self.seq.to_le_bytes());
-        body.extend_from_slice(&self.watermark.to_le_bytes());
-        body.extend_from_slice(&(self.pool.len() as u32).to_le_bytes());
+        self.save_with(&RealIo, path)
+    }
+
+    /// [`Run::save`] through an explicit [`StorageIo`]. The whole file
+    /// (magic + body + CRC) is built in memory and installed with
+    /// [`StorageIo::write_atomic`] — a crash or failure mid-save leaves
+    /// either the old file or nothing, never a torn run.
+    pub fn save_with(&self, io: &dyn StorageIo, path: &Path) -> io::Result<()> {
+        let mut bytes = Vec::with_capacity(48 + self.pool.len() * 12 + self.triples.len() * 12);
+        bytes.extend_from_slice(RUN_MAGIC);
+        bytes.extend_from_slice(&self.seq.to_le_bytes());
+        bytes.extend_from_slice(&self.watermark.to_le_bytes());
+        bytes.extend_from_slice(&(self.pool.len() as u32).to_le_bytes());
         for s in &self.pool {
-            body.extend_from_slice(&(s.len() as u32).to_le_bytes());
-            body.extend_from_slice(s.as_bytes());
+            bytes.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(s.as_bytes());
         }
-        body.extend_from_slice(&(self.triples.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&(self.triples.len() as u32).to_le_bytes());
         for &(r, c, v) in &self.triples {
-            body.extend_from_slice(&r.to_le_bytes());
-            body.extend_from_slice(&c.to_le_bytes());
-            body.extend_from_slice(&v.to_le_bytes());
+            bytes.extend_from_slice(&r.to_le_bytes());
+            bytes.extend_from_slice(&c.to_le_bytes());
+            bytes.extend_from_slice(&v.to_le_bytes());
         }
-        let mut f = io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(RUN_MAGIC)?;
-        f.write_all(&body)?;
-        f.write_all(&crc32(&body).to_le_bytes())?;
-        f.flush()?;
-        f.get_ref().sync_data()
+        let crc = crc32(&bytes[RUN_MAGIC.len()..]);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        io.write_atomic(path, &bytes)
     }
 
     /// Load a run from `path`, validating magic, CRC, and id bounds.
     /// Unlike the WAL, a damaged run file is a hard
     /// [`io::ErrorKind::InvalidData`] error: runs are written atomically
-    /// after an fsync, so torn runs are not an expected crash state.
+    /// after an fsync, so torn runs are not an expected crash state —
+    /// recovery quarantines such files instead of serving wrong cells.
     pub fn load(path: &Path) -> io::Result<Run> {
+        Self::load_with(&RealIo, path)
+    }
+
+    /// [`Run::load`] through an explicit [`StorageIo`].
+    pub fn load_with(io: &dyn StorageIo, path: &Path) -> io::Result<Run> {
         let bad = |msg: &str| {
             io::Error::new(io::ErrorKind::InvalidData, format!("{}: {msg}", path.display()))
         };
-        let mut bytes = Vec::new();
-        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        let bytes = io.read(path)?;
         if bytes.len() < RUN_MAGIC.len() + 4 || &bytes[..RUN_MAGIC.len()] != RUN_MAGIC {
             return Err(bad("not a d4m run file (bad magic or too short)"));
         }

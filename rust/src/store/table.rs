@@ -15,6 +15,7 @@
 //! consumers of the same stack.
 
 use super::compact::CompactionSpec;
+use super::io::{RealIo, StorageIo};
 use super::run::Run;
 use super::scan::{
     self, stack_collect, CellFilter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor,
@@ -25,6 +26,7 @@ use super::wal::{self, FsyncPolicy, WalOp, WalWriter};
 use super::{SharedStr, StoreError, Triple};
 use crate::assoc::Assoc;
 use crate::util::parallel::parallel_map_ranges;
+use crate::util::retry::{classify, ErrorClass, RetryPolicy};
 use crate::util::Parallelism;
 use std::collections::BTreeSet;
 use std::io;
@@ -35,19 +37,108 @@ use std::sync::{Arc, Mutex, RwLock};
 /// WAL file name inside a durable table's directory.
 const WAL_FILE: &str = "wal.log";
 /// Manifest file name: one live run file name per line, rewritten
-/// atomically (tmp + rename) after every compaction. Run files are
-/// never deleted — a superseded run simply drops out of the manifest
-/// (orphan cleanup is future work; see ROADMAP).
+/// atomically (tmp + fsync + rename) after every compaction. A
+/// superseded run drops out of the manifest and its file is deleted by
+/// the orphan GC pass that follows each successful rewrite.
 const MANIFEST_FILE: &str = "MANIFEST";
 
-/// Durability attachment of a [`Table`]: its directory and write-ahead
-/// log. The WAL mutex is the *group-commit serialization point* — it is
-/// held across append **and** memtable apply, so log order equals apply
-/// order, and across a whole minor compaction, so run watermarks are
-/// exact.
+/// Degradation ladder of a durable table. The table only ever moves
+/// *down* the ladder at runtime (recovery starts a fresh table at
+/// [`TableHealth::Healthy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TableHealth {
+    /// The write-ahead log is accepting appends; full durability.
+    #[default]
+    Healthy,
+    /// The WAL failed permanently and
+    /// [`DurableOptions::fallback_to_memory`] is off: reads, scans and
+    /// compaction queries keep serving, writes are rejected with
+    /// [`StoreError::Degraded`].
+    DegradedReadOnly,
+    /// The WAL failed permanently and the table fell back to in-memory
+    /// operation: reads *and* writes keep working, but new writes are
+    /// not logged ([`HealthReport::non_durable_writes`] counts them)
+    /// and [`Table::sync`] reports the condition.
+    InMemoryOnly,
+}
+
+impl std::fmt::Display for TableHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TableHealth::Healthy => "healthy",
+            TableHealth::DegradedReadOnly => "degraded-read-only",
+            TableHealth::InMemoryOnly => "in-memory-only",
+        })
+    }
+}
+
+/// Snapshot of a durable table's fault-tolerance state (see
+/// [`Table::health`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HealthReport {
+    /// Current rung on the degradation ladder.
+    pub state: TableHealth,
+    /// File names quarantined during recovery (runs failing their
+    /// checksum, a foreign WAL, a non-UTF-8 manifest), moved aside as
+    /// `<name>.quarantined` and excluded from the recovered table.
+    pub quarantined: Vec<String>,
+    /// Most recent storage error, rendered with context.
+    pub last_error: Option<String>,
+    /// Mutations applied without logging while
+    /// [`TableHealth::InMemoryOnly`].
+    pub non_durable_writes: u64,
+    /// Orphan run files deleted by GC passes on this handle.
+    pub orphans_removed: u64,
+}
+
+/// How a durable table talks to storage: the backend, the retry
+/// schedule, and what to do when the log dies.
+#[derive(Debug, Clone)]
+pub struct DurableOptions {
+    /// Storage backend — [`RealIo`] in production, a
+    /// [`super::io::FaultyIo`] under fault injection.
+    pub io: Arc<dyn StorageIo>,
+    /// Retry schedule for WAL appends/syncs, run saves, manifest
+    /// rewrites, and recovery reads. [`RetryPolicy::none`] reproduces
+    /// the raw single-attempt behavior.
+    pub retry: RetryPolicy,
+    /// On a permanent WAL failure: `true` drops to
+    /// [`TableHealth::InMemoryOnly`] (writes keep working, non-durably);
+    /// `false` (default) drops to [`TableHealth::DegradedReadOnly`].
+    pub fallback_to_memory: bool,
+}
+
+impl Default for DurableOptions {
+    fn default() -> Self {
+        DurableOptions {
+            io: Arc::new(RealIo),
+            retry: RetryPolicy::default(),
+            fallback_to_memory: false,
+        }
+    }
+}
+
+/// Durability attachment of a [`Table`]: its directory, storage
+/// backend, write-ahead log, and health. The WAL mutex is the
+/// *group-commit serialization point* — it is held across append
+/// **and** memtable apply, so log order equals apply order, and across
+/// a whole minor compaction, so run watermarks are exact. Lock order:
+/// `wal` before `health`.
 struct DurableState {
     dir: PathBuf,
+    io: Arc<dyn StorageIo>,
+    retry: RetryPolicy,
+    fallback_to_memory: bool,
     wal: Mutex<WalWriter>,
+    health: Mutex<HealthReport>,
+}
+
+/// The durable half of a checkpoint pass: where runs and the manifest
+/// are saved, and under which retry schedule.
+struct CheckpointCtx<'a> {
+    io: &'a dyn StorageIo,
+    retry: &'a RetryPolicy,
+    dir: &'a Path,
 }
 
 /// Table tuning knobs.
@@ -104,10 +195,31 @@ impl Table {
         dir: &Path,
         policy: FsyncPolicy,
     ) -> io::Result<Table> {
-        std::fs::create_dir_all(dir)?;
-        let wal = WalWriter::create(&dir.join(WAL_FILE), policy)?;
+        Self::durable_with(name, config, dir, policy, DurableOptions::default())
+    }
+
+    /// [`Table::durable`] with explicit [`DurableOptions`]: the storage
+    /// backend, retry schedule, and degradation mode.
+    pub fn durable_with(
+        name: &str,
+        config: TableConfig,
+        dir: &Path,
+        policy: FsyncPolicy,
+        opts: DurableOptions,
+    ) -> io::Result<Table> {
+        opts.retry.run("create table dir", || opts.io.create_dir_all(dir))?;
+        let wal = opts
+            .retry
+            .run("wal create", || WalWriter::create(&*opts.io, &dir.join(WAL_FILE), policy))?;
         let mut table = Table::new(name, config);
-        table.durable = Some(DurableState { dir: dir.to_path_buf(), wal: Mutex::new(wal) });
+        table.durable = Some(DurableState {
+            dir: dir.to_path_buf(),
+            io: Arc::clone(&opts.io),
+            retry: opts.retry,
+            fallback_to_memory: opts.fallback_to_memory,
+            wal: Mutex::new(wal),
+            health: Mutex::new(HealthReport::default()),
+        });
         Ok(table)
     }
 
@@ -130,25 +242,98 @@ impl Table {
         dir: &Path,
         policy: FsyncPolicy,
     ) -> io::Result<Table> {
+        Self::recover_with(name, config, dir, policy, DurableOptions::default())
+    }
+
+    /// [`Table::recover`] with explicit [`DurableOptions`].
+    ///
+    /// **Corruption quarantine**: a run file that fails its checksum
+    /// (`InvalidData`) or vanished under a listed name (`NotFound`,
+    /// e.g. a crash landed between a previous quarantine rename and the
+    /// manifest rewrite) is moved aside as `<name>.quarantined` and
+    /// excluded; the table degrades to WAL + memtable + surviving runs
+    /// and the quarantined names are reported via [`Table::health`]. A
+    /// structurally invalid WAL or a non-UTF-8 manifest is quarantined
+    /// the same way, so recovery never panics on damaged files. When
+    /// anything was quarantined the replay lower bound drops to zero:
+    /// every record the log still holds is re-applied (idempotently),
+    /// restoring content the quarantined run also covered whenever the
+    /// log still has it.
+    ///
+    /// Crash-safety ordering inside recovery itself: the replayed
+    /// memtable is frozen to runs and the manifest rewritten *before*
+    /// the old WAL is truncated (the fresh log is created last), so a
+    /// crash mid-recovery — even a second one — only ever re-replays
+    /// (converging), never loses acknowledged records.
+    pub fn recover_with(
+        name: &str,
+        config: TableConfig,
+        dir: &Path,
+        policy: FsyncPolicy,
+        opts: DurableOptions,
+    ) -> io::Result<Table> {
+        let io: &dyn StorageIo = &*opts.io;
+        let retry = &opts.retry;
+        let mut report = HealthReport::default();
+        retry.run("create table dir", || io.create_dir_all(dir))?;
+
+        // Manifest → run list, quarantining structural damage.
+        let manifest_path = dir.join(MANIFEST_FILE);
+        let mut run_names: Vec<String> = Vec::new();
+        if io.exists(&manifest_path) {
+            let bytes = retry.run("manifest read", || io.read(&manifest_path))?;
+            match String::from_utf8(bytes) {
+                Ok(body) => run_names.extend(
+                    body.lines().map(str::trim).filter(|l| !l.is_empty()).map(String::from),
+                ),
+                Err(_) => quarantine_file(io, dir, MANIFEST_FILE, &mut report, "not UTF-8"),
+            }
+        }
+
+        // Load every listed run, quarantining damaged or missing files.
+        let mut runs: Vec<Run> = Vec::new();
+        for rn in &run_names {
+            let path = dir.join(rn);
+            match retry.run("run load", || Run::load_with(io, &path)) {
+                Ok(run) => runs.push(run),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::InvalidData | io::ErrorKind::NotFound
+                    ) =>
+                {
+                    quarantine_file(io, dir, rn, &mut report, &e.to_string());
+                }
+                Err(e) => return Err(e),
+            }
+        }
+
+        // Replay the WAL. A torn tail is the normal crash state (the
+        // intact prefix is used as-is); a file that is not a WAL at all
+        // is quarantined.
         let wal_path = dir.join(WAL_FILE);
-        let replay = if wal_path.exists() {
-            wal::replay(&wal_path)?
+        let replay = if io.exists(&wal_path) {
+            match retry.run("wal replay", || wal::replay_with(io, &wal_path)) {
+                Ok(rp) => rp,
+                Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                    quarantine_file(io, dir, WAL_FILE, &mut report, &e.to_string());
+                    wal::WalReplay { records: Vec::new(), truncated: true }
+                }
+                Err(e) => return Err(e),
+            }
         } else {
             wal::WalReplay { records: Vec::new(), truncated: false }
         };
-        let mut runs: Vec<Run> = Vec::new();
-        let manifest = dir.join(MANIFEST_FILE);
-        if manifest.exists() {
-            for line in std::fs::read_to_string(&manifest)?.lines() {
-                let line = line.trim();
-                if line.is_empty() {
-                    continue;
-                }
-                runs.push(Run::load(&dir.join(line))?);
-            }
-        }
+
         runs.sort_by_key(Run::seq);
-        let wmin = runs.iter().map(Run::watermark).min().unwrap_or(0);
+        // Replay lower bound: normally the *min* surviving watermark
+        // (see `recover`'s original rationale); zero when anything was
+        // quarantined, so the log backfills what the lost run covered.
+        let wmin = if report.quarantined.is_empty() {
+            runs.iter().map(Run::watermark).min().unwrap_or(0)
+        } else {
+            0
+        };
         let wmax = runs.iter().map(Run::watermark).max().unwrap_or(0);
         let max_run_seq = runs.iter().map(Run::seq).max().unwrap_or(0);
         let table = Table::new(name, config);
@@ -164,7 +349,7 @@ impl Table {
         let mut last_seq = wmax;
         for rec in &replay.records {
             if rec.seq <= wmin {
-                continue; // Already durable in every run.
+                continue; // Already durable in every surviving run.
             }
             last_seq = last_seq.max(rec.seq);
             match &rec.op {
@@ -178,15 +363,30 @@ impl Table {
                 }
             }
         }
-        // Checkpoint replayed state BEFORE truncating the log.
-        let frozen = table.freeze_all(last_seq, Some(dir))?;
-        if frozen > 0 {
-            table.write_manifest(dir)?;
+        // Checkpoint replayed state BEFORE truncating the log. The
+        // manifest is rewritten whenever it must change: new frozen
+        // runs, or quarantined names to drop from the list.
+        let ctx = CheckpointCtx { io, retry, dir };
+        let frozen = table.checkpoint_tablets(Some(&ctx), None, last_seq)?;
+        if frozen > 0 || !report.quarantined.is_empty() {
+            table.write_manifest(&ctx)?;
         }
-        let mut wal = WalWriter::create(&wal_path, policy)?;
+        // Collect orphans left by crashes, quarantine, or compaction
+        // (best-effort: a missed orphan costs disk, never correctness).
+        if let Ok(removed) = table.gc_orphan_runs(&ctx) {
+            report.orphans_removed += removed as u64;
+        }
+        let mut wal = retry.run("wal create", || WalWriter::create(io, &wal_path, policy))?;
         wal.set_last_seq(last_seq);
         Ok(Table {
-            durable: Some(DurableState { dir: dir.to_path_buf(), wal: Mutex::new(wal) }),
+            durable: Some(DurableState {
+                dir: dir.to_path_buf(),
+                io: Arc::clone(&opts.io),
+                retry: retry.clone(),
+                fallback_to_memory: opts.fallback_to_memory,
+                wal: Mutex::new(wal),
+                health: Mutex::new(report),
+            }),
             ..table
         })
     }
@@ -284,12 +484,59 @@ impl Table {
             return self.apply_batch(batch);
         };
         let mut wal = d.wal.lock().unwrap();
+        // Copy the rung out before matching: holding the health guard
+        // through the arms would deadlock `note_wal_failure` below.
+        let state = d.health.lock().unwrap().state;
+        match state {
+            TableHealth::Healthy => {}
+            TableHealth::InMemoryOnly => {
+                d.health.lock().unwrap().non_durable_writes += 1;
+                return self.apply_batch(batch);
+            }
+            TableHealth::DegradedReadOnly => {
+                return Err(StoreError::Degraded { table: self.name.clone(), state });
+            }
+        }
         if !batch.is_empty() {
-            wal.append_put(&batch).map_err(|e| StoreError::Io {
-                context: format!("wal append for table '{}': {e}", self.name),
-            })?;
+            if let Err(e) = d.retry.run("wal append", || wal.append_put(&batch)) {
+                self.note_wal_failure(d, "wal append", e)?;
+                // Fallback accepted the failure: apply non-durably.
+                d.health.lock().unwrap().non_durable_writes += 1;
+                return self.apply_batch(batch);
+            }
         }
         self.apply_batch(batch)
+    }
+
+    /// Record a post-retry WAL failure and decide the table's fate.
+    /// Transient failures (retry budget exhausted on a retryable error)
+    /// keep the table [`TableHealth::Healthy`] — the *next* write may
+    /// succeed — and surface as a retryable [`StoreError::Io`].
+    /// Permanent failures move the table down the degradation ladder:
+    /// `Ok(())` means the caller should proceed non-durably
+    /// ([`DurableOptions::fallback_to_memory`]), `Err` means the write
+    /// is rejected. Caller holds the WAL lock; `health` is taken here
+    /// (lock order: wal before health).
+    fn note_wal_failure(
+        &self,
+        d: &DurableState,
+        what: &str,
+        e: io::Error,
+    ) -> Result<(), StoreError> {
+        let transient = classify(&e) == ErrorClass::Transient;
+        let context = format!("{what} for table '{}': {e}", self.name);
+        let mut health = d.health.lock().unwrap();
+        health.last_error = Some(context.clone());
+        if transient {
+            return Err(StoreError::Io { context, transient: true });
+        }
+        if d.fallback_to_memory {
+            health.state = TableHealth::InMemoryOnly;
+            Ok(())
+        } else {
+            health.state = TableHealth::DegradedReadOnly;
+            Err(StoreError::Io { context, transient: false })
+        }
     }
 
     /// The memtable half of [`Table::write_batch`] (no logging).
@@ -426,17 +673,31 @@ impl Table {
     /// Delete a cell; returns whether it was visible before.
     ///
     /// On a durable table the delete is logged first (under the same
-    /// group-commit lock as [`Table::write_batch`]). The `bool` return
-    /// leaves no error channel, so a WAL I/O failure here panics with
-    /// context rather than silently dropping the log record.
-    pub fn delete(&self, row: &str, col: &str) -> bool {
+    /// group-commit lock as [`Table::write_batch`]) and a post-retry
+    /// WAL failure follows the same degradation ladder: transient
+    /// errors surface as retryable [`StoreError::Io`], permanent ones
+    /// flip the table to in-memory operation or reject the delete.
+    pub fn delete(&self, row: &str, col: &str) -> Result<bool, StoreError> {
         let Some(d) = &self.durable else {
-            return self.apply_delete(row, col);
+            return Ok(self.apply_delete(row, col));
         };
         let mut wal = d.wal.lock().unwrap();
-        wal.append_delete(row, col)
-            .unwrap_or_else(|e| panic!("wal append (delete) for table '{}': {e}", self.name));
-        self.apply_delete(row, col)
+        let state = d.health.lock().unwrap().state;
+        match state {
+            TableHealth::Healthy => {}
+            TableHealth::InMemoryOnly => {
+                d.health.lock().unwrap().non_durable_writes += 1;
+                return Ok(self.apply_delete(row, col));
+            }
+            TableHealth::DegradedReadOnly => {
+                return Err(StoreError::Degraded { table: self.name.clone(), state });
+            }
+        }
+        if let Err(e) = d.retry.run("wal append", || wal.append_delete(row, col)) {
+            self.note_wal_failure(d, "wal append (delete)", e)?;
+            d.health.lock().unwrap().non_durable_writes += 1;
+        }
+        Ok(self.apply_delete(row, col))
     }
 
     /// The memtable half of [`Table::delete`] (no logging).
@@ -513,16 +774,25 @@ impl Table {
     /// after the run files land. On an in-memory table this just
     /// freezes (watermark 0, nothing persisted) so scan tests can stack
     /// memtable-over-run states without a filesystem.
+    /// **Failure isolation**: a failed save (post-retry) aborts the
+    /// pass with `Err`, leaving the failing tablet's memtable *and* the
+    /// manifest untouched — runs are built from a non-destructive
+    /// snapshot and installed only after their file is durably on disk.
+    /// Earlier tablets may have frozen, but the WAL still covers their
+    /// records (it is only truncated at recovery), so the compaction is
+    /// safely re-runnable and a crash loses nothing.
     pub fn minor_compact(&self) -> io::Result<usize> {
         let Some(d) = &self.durable else {
-            return self.freeze_all(0, None);
+            return self.checkpoint_tablets(None, None, 0);
         };
         let mut wal = d.wal.lock().unwrap();
-        wal.sync()?;
+        self.sync_locked(d, &mut wal)?;
         let watermark = wal.last_seq();
-        let written = self.freeze_all(watermark, Some(&d.dir))?;
+        let ctx = CheckpointCtx { io: &*d.io, retry: &d.retry, dir: &d.dir };
+        let written = self.checkpoint_tablets(Some(&ctx), None, watermark)?;
         if written > 0 {
-            self.write_manifest(&d.dir)?;
+            self.write_manifest(&ctx)?;
+            self.collect_orphans(d, &ctx);
         }
         Ok(written)
     }
@@ -532,65 +802,89 @@ impl Table {
     /// `spec`'s combiner and version-retention rule at merge time.
     /// Tombstones and the cells they mask are gone afterwards. Returns
     /// the number of merged runs produced (empty tablets produce none).
+    /// Shares [`Table::minor_compact`]'s failure isolation: a failed
+    /// save leaves the tablet's layers and the manifest untouched, and
+    /// the pass is safely re-runnable.
     pub fn major_compact(&self, spec: &CompactionSpec) -> io::Result<usize> {
         let Some(d) = &self.durable else {
-            return self.compact_all(spec, 0, None);
+            return self.checkpoint_tablets(None, Some(spec), 0);
         };
         let mut wal = d.wal.lock().unwrap();
-        wal.sync()?;
+        self.sync_locked(d, &mut wal)?;
         let watermark = wal.last_seq();
-        let written = self.compact_all(spec, watermark, Some(&d.dir))?;
+        let ctx = CheckpointCtx { io: &*d.io, retry: &d.retry, dir: &d.dir };
+        let written = self.checkpoint_tablets(Some(&ctx), Some(spec), watermark)?;
         // Rewrite unconditionally: compaction may have *removed* every
         // run (all cells deleted), and the manifest must drop them.
-        self.write_manifest(&d.dir)?;
+        self.write_manifest(&ctx)?;
+        self.collect_orphans(d, &ctx);
         Ok(written)
     }
 
-    /// Freeze every non-empty tablet memtable into a run, saving each
-    /// to `dir` when given. Caller holds the WAL lock on durable paths.
-    fn freeze_all(&self, watermark: u64, dir: Option<&Path>) -> io::Result<usize> {
-        let tablets = self.tablets.read().unwrap();
-        let mut written = 0usize;
-        for t in tablets.iter() {
-            let mut tab = t.lock().unwrap();
-            let seq = self.run_seq.fetch_add(1, Ordering::SeqCst) + 1;
-            if let Some(run) = tab.freeze(seq, watermark) {
-                if let Some(dir) = dir {
-                    run.save(&dir.join(run_file_name(run.seq())))?;
-                }
-                written += 1;
-            }
-        }
-        Ok(written)
-    }
-
-    /// Merge every tablet's layers down to (at most) one run each.
-    fn compact_all(
+    /// One checkpoint pass over every tablet — the engine behind minor
+    /// (freeze, `spec` = `None`) and major (merge, `spec` = `Some`)
+    /// compaction, durable (`ctx` = `Some`) or in-memory. Per tablet:
+    /// build the run cells from a non-destructive snapshot, save the
+    /// run file under the retry schedule, and only then commit the
+    /// mutation (clear memtable / swap run list). The save failing
+    /// leaves that tablet byte-identical; the error propagates
+    /// immediately with later tablets untouched too. Caller holds the
+    /// WAL lock on durable paths. Returns the number of runs produced.
+    fn checkpoint_tablets(
         &self,
-        spec: &CompactionSpec,
+        ctx: Option<&CheckpointCtx<'_>>,
+        spec: Option<&CompactionSpec>,
         watermark: u64,
-        dir: Option<&Path>,
     ) -> io::Result<usize> {
         let tablets = self.tablets.read().unwrap();
         let mut written = 0usize;
         for t in tablets.iter() {
             let mut tab = t.lock().unwrap();
-            let seq = self.run_seq.fetch_add(1, Ordering::SeqCst) + 1;
-            if let Some(run) = tab.compact(spec, seq, watermark) {
-                if let Some(dir) = dir {
-                    run.save(&dir.join(run_file_name(run.seq())))?;
+            let Some(ctx) = ctx else {
+                // In-memory: no file to fail, mutate directly.
+                let seq = self.run_seq.fetch_add(1, Ordering::SeqCst) + 1;
+                let produced = match spec {
+                    None => tab.freeze(seq, watermark).is_some(),
+                    Some(spec) => tab.compact(spec, seq, watermark).is_some(),
+                };
+                if produced {
+                    written += 1;
                 }
-                written += 1;
+                continue;
+            };
+            let cells = match spec {
+                None => tab.freeze_cells(),
+                Some(spec) => tab.compact_cells(spec),
+            };
+            if cells.is_empty() {
+                if spec.is_some() {
+                    // Merged-empty: visible state is already empty
+                    // (tombstones consumed everything), so dropping the
+                    // old layers commits nothing new — and on a crash
+                    // before the manifest rewrite, WAL + old runs
+                    // reconverge to the same emptiness.
+                    tab.install_compacted(None);
+                }
+                continue;
             }
+            let seq = self.run_seq.fetch_add(1, Ordering::SeqCst) + 1;
+            let run = Arc::new(Run::from_cells(seq, watermark, &cells));
+            let path = ctx.dir.join(run_file_name(seq));
+            ctx.retry.run("run save", || run.save_with(ctx.io, &path))?;
+            match spec {
+                None => tab.complete_freeze(Arc::clone(&run)),
+                Some(_) => tab.install_compacted(Some(Arc::clone(&run))),
+            }
+            written += 1;
         }
         Ok(written)
     }
 
     /// Rewrite the manifest to the set of currently attached run files
     /// (post-split tablets share runs; the `BTreeSet` dedups). Written
-    /// to a temp file then renamed, so readers see old-or-new, never a
-    /// torn list.
-    fn write_manifest(&self, dir: &Path) -> io::Result<()> {
+    /// atomically (temp + fsync + rename), so readers see old-or-new,
+    /// never a torn list.
+    fn write_manifest(&self, ctx: &CheckpointCtx<'_>) -> io::Result<()> {
         let mut names: BTreeSet<u64> = BTreeSet::new();
         {
             let tablets = self.tablets.read().unwrap();
@@ -606,10 +900,56 @@ impl Table {
             body.push_str(&run_file_name(seq));
             body.push('\n');
         }
-        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
-        std::fs::write(&tmp, body)?;
-        std::fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
-        Ok(())
+        let path = ctx.dir.join(MANIFEST_FILE);
+        ctx.retry.run("manifest write", || ctx.io.write_atomic(&path, body.as_bytes()))
+    }
+
+    /// Delete run files in the table directory that no live reference
+    /// knows: not listed in the on-disk manifest *and* not attached to
+    /// any tablet (the union guards against a garbled manifest read
+    /// deleting live data). Also sweeps stale `run-*.run.tmp` saves.
+    /// Quarantined files (`*.quarantined`) are preserved for forensics.
+    /// Best-effort: per-file errors are swallowed — a missed orphan
+    /// costs disk, never correctness. Returns the number removed.
+    fn gc_orphan_runs(&self, ctx: &CheckpointCtx<'_>) -> io::Result<usize> {
+        let mut live: BTreeSet<String> = BTreeSet::new();
+        if let Ok(bytes) = ctx.io.read(&ctx.dir.join(MANIFEST_FILE)) {
+            if let Ok(body) = String::from_utf8(bytes) {
+                let names = body.lines().map(str::trim).filter(|l| !l.is_empty());
+                live.extend(names.map(String::from));
+            }
+        }
+        {
+            let tablets = self.tablets.read().unwrap();
+            for t in tablets.iter() {
+                let tab = t.lock().unwrap();
+                for run in tab.runs() {
+                    live.insert(run_file_name(run.seq()));
+                }
+            }
+        }
+        let mut removed = 0usize;
+        for (name, is_dir) in ctx.io.read_dir(ctx.dir)? {
+            if is_dir {
+                continue;
+            }
+            let orphan_run = is_run_file_name(&name) && !live.contains(&name);
+            let stale_tmp = name.strip_suffix(".tmp").is_some_and(is_run_file_name);
+            if (orphan_run || stale_tmp) && ctx.io.remove_file(&ctx.dir.join(&name)).is_ok() {
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Run the orphan GC pass and fold the count into the health
+    /// report. Best-effort (see [`Table::gc_orphan_runs`]).
+    fn collect_orphans(&self, d: &DurableState, ctx: &CheckpointCtx<'_>) {
+        if let Ok(removed) = self.gc_orphan_runs(ctx) {
+            if removed > 0 {
+                d.health.lock().unwrap().orphans_removed += removed as u64;
+            }
+        }
     }
 
     /// Number of distinct runs attached across tablets.
@@ -636,12 +976,59 @@ impl Table {
     }
 
     /// Force the WAL to stable storage regardless of the configured
-    /// [`FsyncPolicy`]. No-op on in-memory tables.
+    /// [`FsyncPolicy`]. No-op on in-memory tables. On a degraded table
+    /// this reports the condition as an error — callers relying on
+    /// `sync()` for a durability guarantee are told it no longer holds.
     pub fn sync(&self) -> io::Result<()> {
-        if let Some(d) = &self.durable {
-            d.wal.lock().unwrap().sync()?;
+        let Some(d) = &self.durable else {
+            return Ok(());
+        };
+        let mut wal = d.wal.lock().unwrap();
+        {
+            let health = d.health.lock().unwrap();
+            if health.state != TableHealth::Healthy {
+                return Err(io::Error::other(format!(
+                    "table '{}' is {}: {}",
+                    self.name,
+                    health.state,
+                    health.last_error.as_deref().unwrap_or("no error recorded")
+                )));
+            }
         }
-        Ok(())
+        self.sync_locked(d, &mut wal)
+    }
+
+    /// The locked half of [`Table::sync`]: sync under retry, and on a
+    /// *permanent* post-retry failure move the table down the
+    /// degradation ladder (fsync lying about durability is not
+    /// recoverable by writing more). Caller holds the WAL lock.
+    fn sync_locked(&self, d: &DurableState, wal: &mut WalWriter) -> io::Result<()> {
+        match d.retry.run("wal sync", || wal.sync()) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let mut health = d.health.lock().unwrap();
+                health.last_error = Some(format!("wal sync for table '{}': {e}", self.name));
+                if classify(&e) == ErrorClass::Permanent {
+                    health.state = if d.fallback_to_memory {
+                        TableHealth::InMemoryOnly
+                    } else {
+                        TableHealth::DegradedReadOnly
+                    };
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Snapshot this table's fault-tolerance state: the degradation
+    /// rung, quarantined files, last storage error, and the
+    /// non-durable-write / orphan-GC counters. In-memory tables report
+    /// a default (healthy, empty) report.
+    pub fn health(&self) -> HealthReport {
+        match &self.durable {
+            Some(d) => d.health.lock().unwrap().clone(),
+            None => HealthReport::default(),
+        }
     }
 }
 
@@ -649,6 +1036,32 @@ impl Table {
 /// and directory listings sort by age).
 fn run_file_name(seq: u64) -> String {
     format!("run-{seq:08}.run")
+}
+
+/// True for names minted by [`run_file_name`] (`run-NNNNNNNN.run`,
+/// zero-padded to at least 8 digits) — the orphan GC's whitelist, so it
+/// never touches foreign files that happen to live in the directory.
+fn is_run_file_name(name: &str) -> bool {
+    name.strip_prefix("run-")
+        .and_then(|s| s.strip_suffix(".run"))
+        .is_some_and(|digits| digits.len() >= 8 && digits.bytes().all(|b| b.is_ascii_digit()))
+}
+
+/// Move `dir/name` aside as `dir/name.quarantined` (best-effort — the
+/// file may already be gone) and record it in the health report.
+fn quarantine_file(
+    io: &dyn StorageIo,
+    dir: &Path,
+    name: &str,
+    report: &mut HealthReport,
+    why: &str,
+) {
+    let from = dir.join(name);
+    if io.exists(&from) {
+        let _ = io.rename(&from, &dir.join(format!("{name}.quarantined")));
+    }
+    report.quarantined.push(name.to_string());
+    report.last_error = Some(format!("{name} quarantined: {why}"));
 }
 
 /// Tablet blocks fetched after a seek start small and double up to
@@ -868,7 +1281,7 @@ mod tests {
         t.write_batch(vec![Triple::new("r", "c", "v")]).unwrap();
         assert_eq!(t.get("r", "c"), Some("v".into()));
         assert_eq!(t.get("r", "x"), None);
-        assert!(t.delete("r", "c"));
+        assert!(t.delete("r", "c").unwrap());
         assert!(t.is_empty());
     }
 
@@ -1131,7 +1544,7 @@ mod tests {
             let t =
                 Table::durable("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
             t.write_batch(batch(30)).unwrap();
-            assert!(t.delete("row0003", "c"));
+            assert!(t.delete("row0003", "c").unwrap());
             t.sync().unwrap();
         }
         let r = Table::recover("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
@@ -1163,7 +1576,7 @@ mod tests {
         // tombstones a run-resident cell.
         t.write_batch(vec![Triple::new("row0005", "c", "v2")]).unwrap();
         assert_eq!(t.get("row0005", "c"), Some("v2".into()));
-        assert!(t.delete("row0006", "c"));
+        assert!(t.delete("row0006", "c").unwrap());
         assert_eq!(t.get("row0006", "c"), None);
         assert_eq!(t.len(), 39);
         let expect = t.scan(ScanRange::all());
@@ -1184,7 +1597,7 @@ mod tests {
         t.minor_compact().unwrap();
         t.write_batch(vec![Triple::new("a", "x", "3"), Triple::new("b", "y", "9")]).unwrap();
         assert_eq!(t.cell_versions("a", "x"), 3);
-        assert!(t.delete("b", "y"));
+        assert!(t.delete("b", "y").unwrap());
         t.major_compact(&CompactionSpec { reduce: None, max_versions: 2 }).unwrap();
         assert_eq!(t.run_count(), 1);
         assert_eq!(t.cell_versions("a", "x"), 2);

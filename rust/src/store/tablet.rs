@@ -380,53 +380,118 @@ impl Tablet {
         self.runs.push(run);
     }
 
-    /// Merge the memtable and tombstones into `cells` (sorted by key,
-    /// values `None` for tombstones), clearing both. Tombstones are
-    /// kept only when `keep_tombstones` (they mask older runs; with no
-    /// older layer they mask nothing).
-    fn drain_memtable(&mut self, keep_tombstones: bool) -> Vec<RunCell> {
+    /// Merge the memtable and tombstones into a sorted cell list
+    /// (values `None` for tombstones) **without mutating the tablet** —
+    /// the build half of the build/persist/commit compaction protocol.
+    /// Tombstones are kept only when `keep_tombstones` (they mask older
+    /// runs; with no older layer they mask nothing). Cells are pointer
+    /// clones of the stored [`SharedStr`]s.
+    fn memtable_cells(&self, keep_tombstones: bool) -> Vec<RunCell> {
         let mut cells: Vec<RunCell> =
             Vec::with_capacity(self.entries.len() + self.deletes.len());
-        let mut ents = std::mem::take(&mut self.entries).into_iter().peekable();
-        let mut dels = std::mem::take(&mut self.deletes).into_iter().peekable();
+        let mut ents = self.entries.iter().peekable();
+        let mut dels = self.deletes.iter().peekable();
         loop {
             // Disjoint sorted sequences (the put/delete invariant), so
             // a plain two-pointer merge keeps (row, col) order.
             let take_entry = match (ents.peek(), dels.peek()) {
-                (Some((ek, _)), Some(dk)) => ek < dk,
+                (Some((ek, _)), Some(dk)) => *ek < *dk,
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
                 (None, None) => break,
             };
             if take_entry {
                 let ((r, c), v) = ents.next().expect("peeked");
-                cells.push((r, c, Some(v)));
+                cells.push((r.clone(), c.clone(), Some(v.clone())));
             } else {
                 let (r, c) = dels.next().expect("peeked");
                 if keep_tombstones {
-                    cells.push((r, c, None));
+                    cells.push((r.clone(), c.clone(), None));
                 }
             }
         }
-        self.weight = 0;
         cells
+    }
+
+    /// Drop the memtable state (entries, tombstones, weight). The
+    /// commit half of a freeze — call only after the frozen run has
+    /// been durably persisted (or when provably empty).
+    fn clear_memtable(&mut self) {
+        self.entries.clear();
+        self.deletes.clear();
+        self.weight = 0;
+    }
+
+    /// Build the cell list a minor compaction would freeze, without
+    /// touching tablet state. Returns an empty list when there is
+    /// nothing worth freezing (dangling tombstones with no runs beneath
+    /// them mask nothing and are not freezable content).
+    pub(crate) fn freeze_cells(&self) -> Vec<RunCell> {
+        self.memtable_cells(!self.runs.is_empty())
+    }
+
+    /// Commit a successful freeze: clear the memtable and stack `run`
+    /// as the newest layer. The caller guarantees `run` was built from
+    /// [`Tablet::freeze_cells`] on this exact state and has been
+    /// persisted (when durability is in play) — a failed persist must
+    /// *not* call this, leaving the tablet untouched and re-runnable.
+    pub(crate) fn complete_freeze(&mut self, run: Arc<Run>) {
+        self.clear_memtable();
+        self.runs.push(run);
+    }
+
+    /// Build the fully-merged cell list a major compaction would write,
+    /// applying `spec`'s combiner and max-versions rule, without
+    /// touching tablet state — the build half of
+    /// [`Tablet::install_compacted`].
+    pub(crate) fn compact_cells(&self, spec: &CompactionSpec) -> Vec<RunCell> {
+        // Collect every stored version, newest layer first: memtable
+        // (with its tombstones), then runs newest → oldest, each
+        // clamped to the extent. A stable key-only sort then groups
+        // versions while preserving that priority order.
+        let mut cells = self.memtable_cells(true);
+        for run in self.runs.iter().rev() {
+            let (start, end) = run.extent_range(self.lo.as_deref(), self.hi.as_deref());
+            for i in start..end {
+                let (r, c) = run.key(i);
+                cells.push((r.clone(), c.clone(), run.val(i).cloned()));
+            }
+        }
+        cells.sort_by(|a, b| (a.0.as_str(), a.1.as_str()).cmp(&(b.0.as_str(), b.1.as_str())));
+        compact::merge_cells(cells, spec)
+    }
+
+    /// Commit a successful major compaction: drop the memtable and the
+    /// whole run stack, installing `run` (built from
+    /// [`Tablet::compact_cells`] on this exact state) as the only
+    /// layer — or nothing when the merge came out empty. As with
+    /// [`Tablet::complete_freeze`], a failed persist skips this call
+    /// and the tablet keeps serving its old layers.
+    pub(crate) fn install_compacted(&mut self, run: Option<Arc<Run>>) {
+        self.clear_memtable();
+        self.runs.clear();
+        if let Some(run) = run {
+            self.runs.push(run);
+        }
     }
 
     /// Minor compaction: freeze the memtable (and tombstone set) into a
     /// new immutable run stacked as the newest layer. Returns the run
     /// (for the caller to persist), or `None` when there was nothing to
     /// freeze. `seq` names the run; `watermark` is the WAL sequence
-    /// number its contents cover.
+    /// number its contents cover. In-memory path: build and commit in
+    /// one step (durable tables persist between the two halves via
+    /// [`Tablet::freeze_cells`] / [`Tablet::complete_freeze`]).
     pub fn freeze(&mut self, seq: u64, watermark: u64) -> Option<Arc<Run>> {
-        if self.entries.is_empty() && self.deletes.is_empty() {
-            return None;
-        }
-        let cells = self.drain_memtable(!self.runs.is_empty());
+        let cells = self.freeze_cells();
         if cells.is_empty() {
+            // Nothing freezable; dangling tombstones (if any) mask
+            // nothing and are dropped with the memtable.
+            self.clear_memtable();
             return None;
         }
         let run = Arc::new(Run::from_cells(seq, watermark, &cells));
-        self.runs.push(Arc::clone(&run));
+        self.complete_freeze(Arc::clone(&run));
         Some(run)
     }
 
@@ -438,27 +503,13 @@ impl Tablet {
     /// Returns the merged run (`None` if the tablet ends up empty; its
     /// run stack is cleared either way).
     pub fn compact(&mut self, spec: &CompactionSpec, seq: u64, watermark: u64) -> Option<Arc<Run>> {
-        // Collect every stored version, newest layer first: memtable
-        // (with its tombstones), then runs newest → oldest, each
-        // clamped to the extent. A stable key-only sort then groups
-        // versions while preserving that priority order.
-        let mut cells = self.drain_memtable(true);
-        let (lo, hi) = (self.lo.clone(), self.hi.clone());
-        for run in self.runs.iter().rev() {
-            let (start, end) = run.extent_range(lo.as_deref(), hi.as_deref());
-            for i in start..end {
-                let (r, c) = run.key(i);
-                cells.push((r.clone(), c.clone(), run.val(i).cloned()));
-            }
-        }
-        cells.sort_by(|a, b| (a.0.as_str(), a.1.as_str()).cmp(&(b.0.as_str(), b.1.as_str())));
-        let merged = compact::merge_cells(cells, spec);
-        self.runs.clear();
+        let merged = self.compact_cells(spec);
         if merged.is_empty() {
+            self.install_compacted(None);
             return None;
         }
         let run = Arc::new(Run::from_cells(seq, watermark, &merged));
-        self.runs.push(Arc::clone(&run));
+        self.install_compacted(Some(Arc::clone(&run)));
         Some(run)
     }
 

@@ -25,9 +25,9 @@
 //! numbers so recovery knows which log suffix is not yet frozen into
 //! runs.
 
+use super::io::{RealIo, StorageFile, StorageIo};
 use super::{SharedStr, Triple};
-use std::fs::{File, OpenOptions};
-use std::io::{self, BufWriter, Read, Write};
+use std::io;
 use std::path::Path;
 
 /// Magic bytes opening every WAL file (format version 01).
@@ -72,8 +72,9 @@ pub(crate) fn crc32(bytes: &[u8]) -> u32 {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum FsyncPolicy {
     /// Never fsync explicitly; the OS flushes on its own schedule.
-    /// Fastest; a *machine* crash may lose the buffered tail (a process
-    /// crash loses nothing once the buffer is flushed on drop).
+    /// Fastest; a *machine* crash may lose the OS-buffered tail (every
+    /// record is handed to the OS at append time, so a process crash
+    /// loses nothing).
     #[default]
     Never,
     /// Fsync after every appended record. Slowest, strongest.
@@ -87,30 +88,57 @@ pub enum FsyncPolicy {
 /// Not internally synchronized: the owning [`super::Table`] wraps it in
 /// a mutex and holds that lock across append **and** memtable apply, so
 /// log order equals apply order (the invariant recovery relies on).
+///
+/// Appends are retry-safe: each record is written with a single
+/// `write_all` and the writer tracks `durable_len`, the byte offset of
+/// the last fully-appended record. A failed (possibly short) write marks
+/// the tail dirty, and the next append first truncates back to
+/// `durable_len` — so a retried append can never land a good record
+/// after torn bytes, which replay would silently discard.
 #[derive(Debug)]
 pub struct WalWriter {
-    out: BufWriter<File>,
+    file: Box<dyn StorageFile>,
     policy: FsyncPolicy,
     /// Records appended since the last fsync (for `EveryN`).
     pending: usize,
     last_seq: u64,
+    /// File length through the last fully-written record.
+    durable_len: u64,
+    /// A failed append may have left torn bytes past `durable_len`;
+    /// repair (truncate) before the next append.
+    tail_dirty: bool,
 }
 
 impl WalWriter {
     /// Create a fresh WAL at `path` (truncating any existing file) and
     /// write the header.
-    pub fn create(path: &Path, policy: FsyncPolicy) -> io::Result<WalWriter> {
-        let mut out = BufWriter::new(File::create(path)?);
-        out.write_all(WAL_MAGIC)?;
-        Ok(WalWriter { out, policy, pending: 0, last_seq: 0 })
+    pub fn create(io: &dyn StorageIo, path: &Path, policy: FsyncPolicy) -> io::Result<WalWriter> {
+        let mut file = io.create(path)?;
+        file.write_all(WAL_MAGIC)?;
+        Ok(WalWriter {
+            file,
+            policy,
+            pending: 0,
+            last_seq: 0,
+            durable_len: WAL_MAGIC.len() as u64,
+            tail_dirty: false,
+        })
     }
 
     /// Reopen `path` for appending after recovery. `last_seq` is the
     /// highest sequence number already durable (from replay and run
-    /// watermarks); new records continue from there.
-    pub fn open_append(path: &Path, policy: FsyncPolicy, last_seq: u64) -> io::Result<WalWriter> {
-        let file = OpenOptions::new().append(true).open(path)?;
-        Ok(WalWriter { out: BufWriter::new(file), policy, pending: 0, last_seq })
+    /// watermarks); new records continue from there. The current file
+    /// length is adopted as the durable tail — callers reopen only logs
+    /// whose tail they have verified via [`replay`].
+    pub fn open_append(
+        io: &dyn StorageIo,
+        path: &Path,
+        policy: FsyncPolicy,
+        last_seq: u64,
+    ) -> io::Result<WalWriter> {
+        let file = io.open_append(path)?;
+        let durable_len = file.size()?;
+        Ok(WalWriter { file, policy, pending: 0, last_seq, durable_len, tail_dirty: false })
     }
 
     /// Highest sequence number appended (or adopted at open).
@@ -125,11 +153,29 @@ impl WalWriter {
         self.last_seq = self.last_seq.max(seq);
     }
 
+    /// Truncate any torn bytes a failed append left past the last
+    /// complete record. Idempotent; called automatically before the
+    /// next append after a failure.
+    pub fn repair(&mut self) -> io::Result<()> {
+        if self.tail_dirty {
+            self.file.truncate(self.durable_len)?;
+            self.tail_dirty = false;
+        }
+        Ok(())
+    }
+
     fn write_record(&mut self, payload: &[u8]) -> io::Result<()> {
         debug_assert!(payload.len() as u64 <= MAX_RECORD_LEN as u64);
-        self.out.write_all(&(payload.len() as u32).to_le_bytes())?;
-        self.out.write_all(&crc32(payload).to_le_bytes())?;
-        self.out.write_all(payload)?;
+        self.repair()?;
+        let mut buf = Vec::with_capacity(8 + payload.len());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&crc32(payload).to_le_bytes());
+        buf.extend_from_slice(payload);
+        if let Err(e) = self.file.write_all(&buf) {
+            self.tail_dirty = true;
+            return Err(e);
+        }
+        self.durable_len += buf.len() as u64;
         self.pending += 1;
         match self.policy {
             FsyncPolicy::Never => Ok(()),
@@ -176,20 +222,17 @@ impl WalWriter {
         Ok(self.last_seq)
     }
 
-    /// Flush buffered bytes and fsync file data to disk.
+    /// Fsync file data to disk. Every appended record has already been
+    /// handed to the OS (no user-space buffer), so this only forces the
+    /// kernel cache down.
+    ///
+    /// A failed sync leaves the log *structurally* intact — the record
+    /// bytes are fully written — so callers may simply retry the append
+    /// or the sync; re-appended batches replay idempotently.
     pub fn sync(&mut self) -> io::Result<()> {
-        self.out.flush()?;
-        self.out.get_ref().sync_data()?;
+        self.file.sync_data()?;
         self.pending = 0;
         Ok(())
-    }
-}
-
-impl Drop for WalWriter {
-    fn drop(&mut self) {
-        // Best effort: push buffered records to the OS so a clean
-        // process exit loses nothing even under `FsyncPolicy::Never`.
-        let _ = self.out.flush();
     }
 }
 
@@ -305,8 +348,13 @@ fn decode_payload(payload: &[u8]) -> Option<WalRecord> {
 /// wrong magic is a real error ([`io::ErrorKind::InvalidData`]): that
 /// file is not a WAL at all.
 pub fn replay(path: &Path) -> io::Result<WalReplay> {
-    let mut bytes = Vec::new();
-    File::open(path)?.read_to_end(&mut bytes)?;
+    replay_with(&RealIo, path)
+}
+
+/// [`replay`] through an explicit [`StorageIo`] (the recovery path,
+/// which must observe injected faults).
+pub fn replay_with(io: &dyn StorageIo, path: &Path) -> io::Result<WalReplay> {
+    let bytes = io.read(path)?;
     if bytes.len() < WAL_MAGIC.len() {
         return Ok(WalReplay { records: Vec::new(), truncated: true });
     }
@@ -354,8 +402,7 @@ pub fn replay(path: &Path) -> io::Result<WalReplay> {
 /// The crash-injection harness uses these to truncate at exact record
 /// boundaries and to flip bytes inside specific records.
 pub fn record_spans(path: &Path) -> io::Result<Vec<(u64, u64)>> {
-    let mut bytes = Vec::new();
-    File::open(path)?.read_to_end(&mut bytes)?;
+    let bytes = std::fs::read(path)?;
     let mut spans = Vec::new();
     if bytes.len() < WAL_MAGIC.len() || &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
         return Ok(spans);
@@ -403,7 +450,7 @@ mod tests {
     #[test]
     fn append_replay_roundtrip() {
         let path = temp_wal("roundtrip.log");
-        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        let mut w = WalWriter::create(&RealIo, &path, FsyncPolicy::Never).unwrap();
         let s1 = w.append_put(&[t("a", "x", "1"), t("b", "y", "2")]).unwrap();
         let s2 = w.append_delete("a", "x").unwrap();
         let s3 = w.append_put(&[t("c", "z", "3")]).unwrap();
@@ -421,10 +468,10 @@ mod tests {
     #[test]
     fn reopen_append_continues_sequence() {
         let path = temp_wal("reopen.log");
-        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        let mut w = WalWriter::create(&RealIo, &path, FsyncPolicy::Never).unwrap();
         w.append_put(&[t("a", "x", "1")]).unwrap();
         drop(w);
-        let mut w = WalWriter::open_append(&path, FsyncPolicy::Always, 1).unwrap();
+        let mut w = WalWriter::open_append(&RealIo, &path, FsyncPolicy::Always, 1).unwrap();
         assert_eq!(w.append_put(&[t("b", "y", "2")]).unwrap(), 2);
         drop(w);
         let rp = replay(&path).unwrap();
@@ -435,7 +482,7 @@ mod tests {
     #[test]
     fn truncation_mid_record_keeps_prefix() {
         let path = temp_wal("trunc.log");
-        let mut w = WalWriter::create(&path, FsyncPolicy::Never).unwrap();
+        let mut w = WalWriter::create(&RealIo, &path, FsyncPolicy::Never).unwrap();
         w.append_put(&[t("a", "x", "1")]).unwrap();
         w.append_put(&[t("b", "y", "2")]).unwrap();
         drop(w);
@@ -454,7 +501,7 @@ mod tests {
     #[test]
     fn corruption_stops_replay_at_bad_record() {
         let path = temp_wal("corrupt.log");
-        let mut w = WalWriter::create(&path, FsyncPolicy::EveryN(2)).unwrap();
+        let mut w = WalWriter::create(&RealIo, &path, FsyncPolicy::EveryN(2)).unwrap();
         w.append_put(&[t("a", "x", "1")]).unwrap();
         w.append_put(&[t("b", "y", "2")]).unwrap();
         w.append_put(&[t("c", "z", "3")]).unwrap();
@@ -479,5 +526,26 @@ mod tests {
         let path = temp_wal("foreign.log");
         std::fs::write(&path, b"NOTAWAL!more bytes here").unwrap();
         assert_eq!(replay(&path).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn torn_append_repairs_before_retry() {
+        use crate::store::io::{FaultKind, FaultPlan, FaultyIo};
+        let path = temp_wal("torn-retry.log");
+        // Op 0 = create, op 1 = magic write, op 2 = first record write.
+        let io = FaultyIo::new(FaultPlan::new().fail_at(3, FaultKind::ShortWrite));
+        let mut w = WalWriter::create(&*io, &path, FsyncPolicy::Never).unwrap();
+        w.append_put(&[t("a", "x", "1")]).unwrap();
+        // Second append tears mid-record...
+        let err = w.append_put(&[t("b", "y", "2")]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        // ...and the retry truncates the torn tail before re-appending,
+        // so replay sees both records intact (and no duplicates).
+        assert_eq!(w.append_put(&[t("b", "y", "2")]).unwrap(), 3);
+        drop(w);
+        let rp = replay(&path).unwrap();
+        assert!(!rp.truncated);
+        assert_eq!(rp.records.len(), 2);
+        assert_eq!(rp.records[1].op, WalOp::Put(vec![t("b", "y", "2")]));
     }
 }

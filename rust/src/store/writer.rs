@@ -57,12 +57,14 @@ impl BatchWriter {
         }
     }
 
-    /// Buffer one triple, flushing if the buffer is full.
+    /// Buffer one triple, flushing if the buffer is full. A failed
+    /// threshold flush keeps the data buffered (see [`BatchWriter::flush`]);
+    /// the error resurfaces on the next explicit `flush`/`sync`.
     pub fn put(&mut self, t: Triple) {
         self.buffered_bytes += t.weight();
         self.buffer.push(t);
         if self.buffered_bytes >= self.config.batch_bytes {
-            self.flush();
+            let _ = self.flush();
         }
     }
 
@@ -86,48 +88,52 @@ impl BatchWriter {
         n
     }
 
-    /// Flush the buffer, retrying transient failures. Panics if the
-    /// table stays unavailable past `max_retries` (matching Accumulo's
-    /// `MutationsRejectedException` being fatal to the writer). A
-    /// durable table's [`StoreError::Io`] (WAL append failure) is *not*
-    /// transient and takes the same fatal path immediately.
-    pub fn flush(&mut self) {
+    /// Flush the buffer, retrying transient failures (offline tablets,
+    /// retryable storage I/O) up to `max_retries` with `retry_backoff`
+    /// between attempts. Returns the number of triples written.
+    ///
+    /// On failure the buffered mutations are **retained**: the error is
+    /// returned, nothing is lost, and a later `flush` (after the tablet
+    /// comes back or the storage heals) retries the same data. This is
+    /// the writer-side half of graceful degradation — Accumulo's
+    /// `MutationsRejectedException` without the data loss.
+    pub fn flush(&mut self) -> Result<usize, StoreError> {
         if self.buffer.is_empty() {
-            return;
+            return Ok(0);
         }
-        let mut batch = std::mem::take(&mut self.buffer);
-        self.buffered_bytes = 0;
         let mut attempt = 0;
         loop {
-            // `write_batch` consumes its argument, so clone while a retry
-            // is still possible (the final attempt moves the batch).
-            let this_try = if attempt < self.config.max_retries {
-                batch.clone()
-            } else {
-                std::mem::take(&mut batch)
-            };
-            match self.table.write_batch(this_try) {
+            // `write_batch` consumes its argument, so the buffer is
+            // cloned per attempt and only cleared on success.
+            match self.table.write_batch(self.buffer.clone()) {
                 Ok(n) => {
+                    self.buffer.clear();
+                    self.buffered_bytes = 0;
                     self.written += n;
                     self.flushes += 1;
-                    return;
+                    return Ok(n);
                 }
-                Err(StoreError::TabletOffline { .. }) if attempt < self.config.max_retries => {
+                Err(e) if e.is_transient() && attempt < self.config.max_retries => {
                     attempt += 1;
                     self.retries += 1;
                     std::thread::sleep(self.config.retry_backoff);
                     continue;
                 }
-                Err(e) => panic!("batch writer: unrecoverable store error: {e}"),
+                Err(e) => return Err(e),
             }
         }
+    }
+
+    /// Triples currently buffered (retained across failed flushes).
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
     }
 
     /// Flush, then force the table's write-ahead log to stable storage
     /// (no-op for in-memory tables) — the writer-side durability
     /// barrier: when this returns, every `put` so far survives a crash.
     pub fn sync(&mut self) -> std::io::Result<()> {
-        self.flush();
+        self.flush().map_err(std::io::Error::other)?;
         self.table.sync()
     }
 }
@@ -136,7 +142,7 @@ impl Drop for BatchWriter {
     fn drop(&mut self) {
         // Best-effort final flush (ignore failures during unwind).
         if !std::thread::panicking() {
-            self.flush();
+            let _ = self.flush();
         }
     }
 }
@@ -172,7 +178,7 @@ mod tests {
         {
             let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
             w.put(Triple::new("a", "b", "c"));
-            w.flush();
+            w.flush().unwrap();
             assert_eq!(t.len(), 1);
             w.put(Triple::new("d", "e", "f"));
         } // drop flushes the second triple
@@ -184,7 +190,7 @@ mod tests {
         let t = table();
         let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
         w.put_all((0..100).map(|i| Triple::new(format!("r{i}"), "c", "v")));
-        w.flush();
+        w.flush().unwrap();
         assert_eq!(t.len(), 100);
         assert_eq!(t.scan(ScanRange::all()).len(), 100);
     }
@@ -193,8 +199,37 @@ mod tests {
     fn empty_flush_is_noop() {
         let t = table();
         let mut w = BatchWriter::new(Arc::clone(&t), WriterConfig::default());
-        w.flush();
+        assert_eq!(w.flush().unwrap(), 0);
         assert_eq!(w.flushes, 0);
+    }
+
+    #[test]
+    fn failed_flush_retains_buffer_for_retry() {
+        // Regression: a flush that exhausts its retries must keep the
+        // buffered mutations so a later flush (after the failure heals)
+        // writes them — not silently drop or panic.
+        let t = table();
+        t.set_tablet_offline(0, true);
+        let mut w = BatchWriter::new(
+            Arc::clone(&t),
+            WriterConfig {
+                max_retries: 1,
+                retry_backoff: std::time::Duration::from_millis(0),
+                ..Default::default()
+            },
+        );
+        w.put(Triple::new("a", "b", "c"));
+        let err = w.flush().unwrap_err();
+        assert!(err.is_transient(), "offline tablet is retryable: {err}");
+        assert_eq!(w.buffered(), 1, "buffer retained after failed flush");
+        assert_eq!(w.written, 0);
+        assert_eq!(t.len(), 0);
+        // The failure heals; the same writer delivers the same data.
+        t.set_tablet_offline(0, false);
+        assert_eq!(w.flush().unwrap(), 1);
+        assert_eq!(w.buffered(), 0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get("a", "b"), Some("c".into()));
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //!   kernels (SpGEMM, constructor key sort, tablet scans).
 //! * [`prop`] — a miniature property-based testing harness with
 //!   random case generation and failure reporting.
+//! * [`retry`] — the storage error taxonomy
+//!   (transient/permanent classification) and a deterministic
+//!   seeded-jitter retry-with-backoff policy.
 //! * [`human`] — human-readable formatting for counts, bytes, seconds.
 //! * [`json`] — minimal JSON emission for machine-readable artifacts
 //!   (the benchmark trajectory files).
@@ -28,6 +31,7 @@ pub mod parallel;
 pub mod pool;
 pub mod prng;
 pub mod prop;
+pub mod retry;
 pub mod timer;
 
 pub use args::Args;
@@ -36,4 +40,5 @@ pub use json::Json;
 pub use parallel::Parallelism;
 pub use pool::ThreadPool;
 pub use prng::SplitMix64;
+pub use retry::{ErrorClass, RetryPolicy};
 pub use timer::{time_op, Stopwatch, Timings};

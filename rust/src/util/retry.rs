@@ -1,0 +1,224 @@
+//! Deterministic retry-with-backoff and the storage error taxonomy.
+//!
+//! Every fallible storage operation in the durable tier is classified as
+//! either **transient** (worth retrying: interrupted syscalls, timeouts,
+//! contention) or **permanent** (retrying cannot help: corruption, a full
+//! disk, missing files). [`RetryPolicy::run`] wraps an operation with a
+//! bounded, seeded-jitter exponential backoff loop: permanent errors
+//! surface immediately, transient errors are retried until the budget is
+//! exhausted. The jitter is driven by [`SplitMix64`], so a given policy
+//! produces the same delay schedule on every execution — fault-injection
+//! tests and production behave identically.
+
+use std::io;
+use std::time::Duration;
+
+use crate::util::SplitMix64;
+
+/// Whether an I/O error is worth retrying.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Retrying may succeed (interrupted call, timeout, transient
+    /// contention).
+    Transient,
+    /// Retrying cannot help (corruption, full disk, missing file,
+    /// permission, unclassified failures).
+    Permanent,
+}
+
+/// Classify an `io::Error` into the transient/permanent taxonomy.
+///
+/// The mapping is deliberately conservative: only error kinds that name a
+/// *momentary* condition are transient; everything else — including
+/// `StorageFull` (ENOSPC) and `InvalidData` (corruption) — is permanent,
+/// so a retry loop never spins on a dead disk or a bad checksum.
+pub fn classify(e: &io::Error) -> ErrorClass {
+    match e.kind() {
+        io::ErrorKind::Interrupted | io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => {
+            ErrorClass::Transient
+        }
+        _ => ErrorClass::Permanent,
+    }
+}
+
+/// A bounded, deterministic retry schedule for storage operations.
+///
+/// `budget` is the number of *re*-attempts after the first try (a budget
+/// of 3 means at most 4 attempts). Delays grow exponentially from
+/// `base_backoff`, are capped at `max_backoff`, and are jittered into
+/// `[0.5, 1.0]×` of the nominal delay by a [`SplitMix64`] stream seeded
+/// from `seed` — fully deterministic, no wall-clock input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Number of retries after the first attempt.
+    pub budget: u32,
+    /// Nominal delay before the first retry; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Upper bound on any single delay.
+    pub max_backoff: Duration,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            budget: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+            seed: 0xD4A7_B0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries: the operation runs exactly once.
+    /// This is the "PR 6 path" — the raw storage call with no policy
+    /// layer on top.
+    pub fn none() -> Self {
+        RetryPolicy { budget: 0, ..RetryPolicy::default() }
+    }
+
+    /// A retrying policy with zero sleep between attempts — used by
+    /// tests and benches where deterministic healing matters but
+    /// wall-clock delay is waste.
+    pub fn immediate(budget: u32) -> Self {
+        RetryPolicy {
+            budget,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+            ..RetryPolicy::default()
+        }
+    }
+
+    /// The jittered delay before retry number `attempt` (0-based).
+    fn delay(&self, attempt: u32, rng: &mut SplitMix64) -> Duration {
+        let shift = attempt.min(20);
+        let nominal = self
+            .base_backoff
+            .saturating_mul(1u32 << shift)
+            .min(self.max_backoff);
+        if nominal.is_zero() {
+            return Duration::ZERO;
+        }
+        nominal.mul_f64(0.5 + 0.5 * rng.f64())
+    }
+
+    /// Run `op` under this policy. Transient failures (per [`classify`])
+    /// are retried with backoff until the budget runs out; permanent
+    /// failures return immediately. The returned error keeps the
+    /// original [`io::ErrorKind`] (so callers can re-classify it) and
+    /// appends `ctx` plus the attempt count to the message.
+    pub fn run<T>(&self, ctx: &str, mut op: impl FnMut() -> io::Result<T>) -> io::Result<T> {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut attempt: u32 = 0;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if classify(&e) == ErrorClass::Permanent || attempt >= self.budget {
+                        return Err(io::Error::new(
+                            e.kind(),
+                            format!("{ctx}: {e} (attempts: {})", attempt + 1),
+                        ));
+                    }
+                    let d = self.delay(attempt, &mut rng);
+                    if !d.is_zero() {
+                        std::thread::sleep(d);
+                    }
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn transient() -> io::Error {
+        io::Error::new(io::ErrorKind::Interrupted, "flaky")
+    }
+
+    #[test]
+    fn classifies_kinds() {
+        assert_eq!(classify(&transient()), ErrorClass::Transient);
+        assert_eq!(
+            classify(&io::Error::new(io::ErrorKind::TimedOut, "t")),
+            ErrorClass::Transient
+        );
+        assert_eq!(classify(&io::Error::other("x")), ErrorClass::Permanent);
+        assert_eq!(
+            classify(&io::Error::new(io::ErrorKind::InvalidData, "bad crc")),
+            ErrorClass::Permanent
+        );
+        assert_eq!(
+            classify(&io::Error::new(io::ErrorKind::NotFound, "gone")),
+            ErrorClass::Permanent
+        );
+    }
+
+    #[test]
+    fn retries_transient_until_success() {
+        let calls = AtomicU32::new(0);
+        let out = RetryPolicy::immediate(3).run("op", || {
+            if calls.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err(transient())
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn budget_bounds_attempts_and_keeps_kind() {
+        let calls = AtomicU32::new(0);
+        let out: io::Result<()> = RetryPolicy::immediate(2).run("op", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Err(transient())
+        });
+        let err = out.unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        assert!(err.to_string().contains("attempts: 3"), "{err}");
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn permanent_errors_never_retry() {
+        let calls = AtomicU32::new(0);
+        let out: io::Result<()> = RetryPolicy::immediate(5).run("op", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Err(io::Error::other("dead disk"))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn none_runs_exactly_once() {
+        let calls = AtomicU32::new(0);
+        let out: io::Result<()> = RetryPolicy::none().run("op", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Err(transient())
+        });
+        assert!(out.is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn delays_are_deterministic_and_capped() {
+        let p = RetryPolicy::default();
+        let mut a = SplitMix64::new(p.seed);
+        let mut b = SplitMix64::new(p.seed);
+        for attempt in 0..8 {
+            let da = p.delay(attempt, &mut a);
+            let db = p.delay(attempt, &mut b);
+            assert_eq!(da, db);
+            assert!(da <= p.max_backoff);
+        }
+    }
+}

@@ -347,7 +347,7 @@ fn shared_cells_survive_table_mutation() {
     let table = Table::new("t", TableConfig::default());
     table.write_batch(vec![Triple::new("r", "c", "hello")]).unwrap();
     let scanned = table.scan(ScanRange::all());
-    assert!(table.delete("r", "c"));
+    assert!(table.delete("r", "c").unwrap());
     assert_eq!(scanned[0].val, "hello");
     assert_eq!(scanned[0].row, "r");
 }

@@ -32,7 +32,7 @@ fn apply(t: &Table, op: &Op) {
             t.write_batch(batch.clone()).expect("no offline tablets in harness");
         }
         Op::Del(r, c) => {
-            t.delete(r, c);
+            t.delete(r, c).expect("no degraded tables in harness");
         }
     }
 }
@@ -290,7 +290,7 @@ fn recovered_table_keeps_writing() {
     {
         let t = Table::recover("t", cfg(), &dir, FsyncPolicy::Never).unwrap();
         t.write_batch(vec![Triple::new("b", "c", "2")]).unwrap();
-        assert!(t.delete("a", "c"));
+        assert!(t.delete("a", "c").unwrap());
         t.sync().unwrap();
     }
     let r = Table::recover("t", cfg(), &dir, FsyncPolicy::Never).unwrap();

@@ -1,0 +1,683 @@
+//! Fault-injection harness for the durable storage tier (PR 7).
+//!
+//! Every test drives a durable [`Table`] through a [`FaultyIo`] backend
+//! whose [`FaultPlan`] schedules faults by global operation index. The
+//! core property, checked exhaustively in [`seeded_fault_sweep`], is:
+//! for **every** operation index and **every** fault kind, each durable
+//! operation either succeeds (possibly after retries) or fails with a
+//! typed error — and a clean [`Table::recover`] afterwards always
+//! restores a *prefix-consistent* table: exactly the state produced by
+//! replaying some prefix of the acknowledged operations. Silent
+//! corruption (`FaultKind::Corrupt`) may shorten the prefix; every
+//! other kind must preserve all acknowledged operations.
+//!
+//! The remaining tests pin down the individual robustness features:
+//! scan-time corruption quarantine (bit-identical to dropping the bad
+//! run), the degradation ladder (`Healthy → DegradedReadOnly` /
+//! `InMemoryOnly`), compaction failure isolation, orphan run GC,
+//! retry-healed transient faults, crashes *during* recovery, and
+//! [`BatchWriter`] buffer retention under storage errors.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use d4m::store::{
+    BatchWriter, CompactionSpec, DurableOptions, FaultKind, FaultPlan, FaultyIo, FsyncPolicy,
+    ScanRange, StoreError, Table, TableConfig, TableHealth, Triple, WriterConfig,
+};
+use d4m::util::{RetryPolicy, SplitMix64};
+
+/// One step of the fault-sweep workload.
+#[derive(Debug, Clone)]
+enum FOp {
+    Put(Vec<Triple>),
+    Del(String, String),
+    Minor,
+    Major,
+    Sync,
+}
+
+/// Deterministic workload: mixed puts/deletes over a small keyspace
+/// with compactions and a final sync spliced in, so the sweep schedules
+/// faults into WAL appends, fsyncs, run saves, manifest rewrites, and
+/// orphan GC alike.
+fn fault_workload(seed: u64) -> Vec<FOp> {
+    let mut rng = SplitMix64::new(seed);
+    let mut ops = Vec::new();
+    for i in 0..16usize {
+        if rng.chance(0.25) {
+            ops.push(FOp::Del(
+                format!("r{:02}", rng.below(12)),
+                format!("c{}", rng.below(3)),
+            ));
+        } else {
+            let k = 1 + rng.below_usize(3);
+            let batch = (0..k)
+                .map(|_| {
+                    Triple::new(
+                        format!("r{:02}", rng.below(12)),
+                        format!("c{}", rng.below(3)),
+                        format!("v{}", rng.below(100)),
+                    )
+                })
+                .collect();
+            ops.push(FOp::Put(batch));
+        }
+        if i == 5 || i == 13 {
+            ops.push(FOp::Minor);
+        }
+        if i == 9 {
+            ops.push(FOp::Major);
+        }
+    }
+    ops.push(FOp::Sync);
+    ops
+}
+
+/// Small split threshold so workloads exercise multi-tablet tables
+/// (and therefore multi-run checkpoints).
+fn cfg() -> TableConfig {
+    TableConfig { split_threshold: 256, write_latency_us: 0 }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("d4m-fault-tests")
+        .join(format!("{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Apply one workload step; mutation acks are recorded by the caller,
+/// compaction/sync errors are the fault under test and are ignored.
+fn apply_faulty(t: &Table, op: &FOp) -> Result<(), StoreError> {
+    match op {
+        FOp::Put(batch) => t.write_batch(batch.clone()).map(|_| ()),
+        FOp::Del(r, c) => t.delete(r, c).map(|_| ()),
+        FOp::Minor => {
+            let _ = t.minor_compact();
+            Ok(())
+        }
+        FOp::Major => {
+            let _ = t.major_compact(&CompactionSpec::default());
+            Ok(())
+        }
+        FOp::Sync => {
+            let _ = t.sync();
+            Ok(())
+        }
+    }
+}
+
+/// Scans of every acked-prefix replay: `result[k]` is the full scan of
+/// an in-memory table after applying `acked[..k]`.
+fn prefix_scans(acked: &[FOp]) -> Vec<Vec<Triple>> {
+    let model = Table::new("model", cfg());
+    let mut scans = vec![model.scan(ScanRange::all())];
+    for op in acked {
+        match op {
+            FOp::Put(batch) => {
+                model.write_batch(batch.clone()).unwrap();
+            }
+            FOp::Del(r, c) => {
+                model.delete(r, c).unwrap();
+            }
+            _ => unreachable!("only mutations are acked"),
+        }
+        scans.push(model.scan(ScanRange::all()));
+    }
+    scans
+}
+
+fn opts(io: &Arc<FaultyIo>, retry: RetryPolicy, fallback: bool) -> DurableOptions {
+    DurableOptions { io: io.clone(), retry, fallback_to_memory: fallback }
+}
+
+fn sweep_seeds() -> Vec<u64> {
+    let n: u64 = std::env::var("D4M_FAULT_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    (0..n.max(1)).map(|i| 0xFA17_0000 + i).collect()
+}
+
+const ALL_KINDS: [FaultKind; 6] = [
+    FaultKind::Transient,
+    FaultKind::Permanent,
+    FaultKind::ShortWrite,
+    FaultKind::FsyncFail,
+    FaultKind::Enospc,
+    FaultKind::Corrupt,
+];
+
+/// The tentpole property: schedule every fault kind at every single
+/// operation index of a seeded workload; whatever happens in-session,
+/// a clean recovery must land on a prefix of the acknowledged
+/// operations (the full set unless the fault was silent corruption),
+/// and recovering twice must be idempotent.
+#[test]
+fn seeded_fault_sweep() {
+    for seed in sweep_seeds() {
+        let ops = fault_workload(seed);
+
+        // Probe run with a fault-free injector to learn the schedule
+        // length: how many storage operations the workload performs.
+        let total = {
+            let dir = temp_dir(&format!("sweep-probe-{seed:x}"));
+            let io = FaultyIo::new(FaultPlan::new());
+            let t = Table::durable_with(
+                "t",
+                cfg(),
+                &dir,
+                FsyncPolicy::Never,
+                opts(&io, RetryPolicy::immediate(3), false),
+            )
+            .unwrap();
+            for op in &ops {
+                apply_faulty(&t, op).unwrap();
+            }
+            drop(t);
+            let _ = std::fs::remove_dir_all(&dir);
+            io.ops()
+        };
+        assert!(total > 0);
+
+        for kind in ALL_KINDS {
+            for idx in 0..total {
+                let dir = temp_dir(&format!("sweep-{seed:x}-{kind:?}-{idx}"));
+                let io = FaultyIo::new(FaultPlan::new().fail_at(idx, kind));
+                let mut acked: Vec<FOp> = Vec::new();
+                // On Err the fault killed table creation itself and
+                // nothing was acknowledged.
+                if let Ok(t) = Table::durable_with(
+                    "t",
+                    cfg(),
+                    &dir,
+                    FsyncPolicy::Never,
+                    opts(&io, RetryPolicy::immediate(3), false),
+                ) {
+                    for op in &ops {
+                        let ok = apply_faulty(&t, op).is_ok();
+                        if ok && matches!(op, FOp::Put(_) | FOp::Del(..)) {
+                            acked.push(op.clone());
+                        }
+                    }
+                }
+
+                let recovered =
+                    Table::recover("t", cfg(), &dir, FsyncPolicy::Never).unwrap_or_else(|e| {
+                        panic!("clean recovery failed (seed {seed:x} {kind:?}@{idx}): {e}")
+                    });
+                let scan = recovered.scan(ScanRange::all());
+                let prefixes = prefix_scans(&acked);
+                if kind == FaultKind::Corrupt {
+                    assert!(
+                        prefixes.contains(&scan),
+                        "not prefix-consistent (seed {seed:x} Corrupt@{idx}): \
+                         {} cells vs {} acked ops",
+                        scan.len(),
+                        acked.len()
+                    );
+                } else {
+                    assert_eq!(
+                        scan,
+                        *prefixes.last().unwrap(),
+                        "acked op lost (seed {seed:x} {kind:?}@{idx})"
+                    );
+                }
+                drop(recovered);
+
+                // Recovery is idempotent: a second pass over the same
+                // directory lands on the identical image.
+                let again = Table::recover("t", cfg(), &dir, FsyncPolicy::Never).unwrap();
+                assert_eq!(again.scan(ScanRange::all()), scan);
+                drop(again);
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+/// Write two-plus runs, corrupt one on disk, and recover: the damaged
+/// run is quarantined (renamed aside, reported, dropped from the
+/// manifest) and the degraded scan is bit-identical to recovering the
+/// same directory with that run's manifest line removed.
+#[test]
+fn corrupt_run_scan_quarantines_bit_identical() {
+    let dir1 = temp_dir("quarantine-a");
+    {
+        let t = Table::durable("t", cfg(), &dir1, FsyncPolicy::Never).unwrap();
+        let batch: Vec<Triple> = (0..30)
+            .map(|i| Triple::new(format!("r{i:02}"), "c0", format!("v{i}")))
+            .collect();
+        t.write_batch(batch).unwrap();
+        t.minor_compact().unwrap();
+    }
+    // One clean recovery settles the image: the replayed suffix is
+    // frozen and the fresh WAL is empty, so the runs alone carry the
+    // data (the interesting quarantine case — the log can no longer
+    // backfill).
+    let full = {
+        let t = Table::recover("t", cfg(), &dir1, FsyncPolicy::Never).unwrap();
+        t.scan(ScanRange::all())
+    };
+
+    let manifest = std::fs::read_to_string(dir1.join("MANIFEST")).unwrap();
+    let runs: Vec<&str> = manifest.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(runs.len() >= 2, "need multiple runs, got {runs:?}");
+    let victim = runs.last().unwrap().to_string();
+
+    // dir2 = same directory with the victim dropped explicitly.
+    let dir2 = temp_dir("quarantine-b");
+    copy_dir(&dir1, &dir2);
+    let kept: String = runs[..runs.len() - 1]
+        .iter()
+        .map(|r| format!("{r}\n"))
+        .collect();
+    std::fs::write(dir2.join("MANIFEST"), kept).unwrap();
+    std::fs::remove_file(dir2.join(&victim)).unwrap();
+
+    // dir1: flip one byte in the middle of the victim run file.
+    let victim_path = dir1.join(&victim);
+    let mut bytes = std::fs::read(&victim_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&victim_path, bytes).unwrap();
+
+    let t1 = Table::recover("t", cfg(), &dir1, FsyncPolicy::Never).unwrap();
+    let h = t1.health();
+    assert_eq!(h.quarantined, vec![victim.clone()]);
+    assert_eq!(h.state, TableHealth::Healthy);
+    assert!(h.last_error.is_some());
+    assert!(dir1.join(format!("{victim}.quarantined")).exists());
+    let rewritten = std::fs::read_to_string(dir1.join("MANIFEST")).unwrap();
+    assert!(!rewritten.contains(&victim), "quarantined run still listed");
+
+    let t2 = Table::recover("t", cfg(), &dir2, FsyncPolicy::Never).unwrap();
+    assert!(t2.health().quarantined.is_empty());
+
+    let degraded = t1.scan(ScanRange::all());
+    assert_eq!(degraded, t2.scan(ScanRange::all()), "quarantine must equal dropping the run");
+    assert_ne!(degraded, full, "victim run held unique cells");
+
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+/// A persistently failing WAL flips the table to `DegradedReadOnly`:
+/// the failing write surfaces a typed permanent error, later writes
+/// are rejected with `StoreError::Degraded`, reads keep serving, and
+/// `sync` reports the condition.
+#[test]
+fn persistent_wal_failure_degrades_read_only() {
+    let dir = temp_dir("degrade-ro");
+    let io = FaultyIo::new(FaultPlan::new());
+    let t = Table::durable_with(
+        "t",
+        cfg(),
+        &dir,
+        FsyncPolicy::Never,
+        opts(&io, RetryPolicy::immediate(2), false),
+    )
+    .unwrap();
+    t.write_batch(vec![Triple::new("a", "b", "1")]).unwrap();
+
+    io.fail_from_now(FaultKind::Permanent);
+    let err = t.write_batch(vec![Triple::new("c", "d", "2")]).unwrap_err();
+    match &err {
+        StoreError::Io { transient, .. } => assert!(!*transient),
+        other => panic!("expected permanent Io error, got {other:?}"),
+    }
+    assert!(!err.is_transient());
+    assert_eq!(t.health().state, TableHealth::DegradedReadOnly);
+
+    // Next write is rejected up front with the ladder error.
+    match t.write_batch(vec![Triple::new("e", "f", "3")]) {
+        Err(StoreError::Degraded { state, .. }) => {
+            assert_eq!(state, TableHealth::DegradedReadOnly)
+        }
+        other => panic!("expected Degraded, got {other:?}"),
+    }
+    assert!(matches!(t.delete("a", "b"), Err(StoreError::Degraded { .. })));
+
+    // Reads still serve the pre-failure state; sync reports the fault.
+    assert_eq!(t.get("a", "b").as_deref(), Some("1"));
+    assert_eq!(t.len(), 1);
+    assert!(t.sync().is_err());
+    assert!(t.health().last_error.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// With `fallback_to_memory`, a dead WAL drops the table to
+/// `InMemoryOnly` instead: writes keep succeeding (non-durably,
+/// counted), reads see them, and `sync` reports the condition. A later
+/// recovery only finds the durable prefix.
+#[test]
+fn persistent_wal_failure_falls_back_to_memory() {
+    let dir = temp_dir("degrade-mem");
+    let io = FaultyIo::new(FaultPlan::new());
+    let t = Table::durable_with(
+        "t",
+        cfg(),
+        &dir,
+        FsyncPolicy::Never,
+        opts(&io, RetryPolicy::immediate(2), true),
+    )
+    .unwrap();
+    t.write_batch(vec![Triple::new("a", "b", "1")]).unwrap();
+
+    io.fail_from_now(FaultKind::Permanent);
+    t.write_batch(vec![Triple::new("c", "d", "2")]).unwrap();
+    assert_eq!(t.health().state, TableHealth::InMemoryOnly);
+    t.write_batch(vec![Triple::new("e", "f", "3")]).unwrap();
+    assert!(t.delete("a", "b").unwrap());
+    let h = t.health();
+    assert!(h.non_durable_writes >= 3, "got {}", h.non_durable_writes);
+
+    // Reads serve the in-memory state...
+    assert_eq!(t.get("c", "d").as_deref(), Some("2"));
+    assert_eq!(t.get("a", "b"), None);
+    // ...but durability is gone and sync says so.
+    assert!(t.sync().is_err());
+    drop(t);
+
+    let r = Table::recover("t", cfg(), &dir, FsyncPolicy::Never).unwrap();
+    let scan = r.scan(ScanRange::all());
+    assert_eq!(scan, vec![Triple::new("a", "b", "1")], "only the durable prefix survives");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A failed compaction leaves the table and its manifest untouched and
+/// is safely re-runnable once storage heals — for both minor and major
+/// compactions.
+#[test]
+fn compaction_failure_leaves_state_and_is_rerunnable() {
+    let dir = temp_dir("compact-isolate");
+    let io = FaultyIo::new(FaultPlan::new());
+    // Single tablet + no retry so operation indices are predictable:
+    // a compaction is [wal sync][run save][manifest write][gc read +
+    // read_dir].
+    let t = Table::durable_with(
+        "t",
+        TableConfig::default(),
+        &dir,
+        FsyncPolicy::Never,
+        opts(&io, RetryPolicy::none(), false),
+    )
+    .unwrap();
+    for i in 0..8 {
+        t.write_batch(vec![Triple::new(format!("r{i}"), "c", format!("v{i}"))]).unwrap();
+    }
+    let before = t.scan(ScanRange::all());
+
+    // Fail the run save (the op after the WAL sync).
+    io.schedule(io.ops() + 1, FaultKind::Permanent);
+    assert!(t.minor_compact().is_err());
+    assert_eq!(t.scan(ScanRange::all()), before, "failed minor changed visible state");
+    assert_eq!(t.run_count(), 0);
+    assert_eq!(t.health().state, TableHealth::Healthy, "checkpoint failure must not degrade");
+    assert!(!dir.join("MANIFEST").exists(), "failed minor wrote a manifest");
+
+    io.clear();
+    assert!(t.minor_compact().unwrap() > 0, "re-run after healing");
+    assert_eq!(t.scan(ScanRange::all()), before);
+    assert_eq!(t.run_count(), 1);
+
+    // Same isolation for a major compaction over existing runs.
+    t.write_batch(vec![Triple::new("r0", "c", "patched")]).unwrap();
+    let before = t.scan(ScanRange::all());
+    let manifest = std::fs::read_to_string(dir.join("MANIFEST")).unwrap();
+    io.schedule(io.ops() + 1, FaultKind::Permanent);
+    assert!(t.major_compact(&CompactionSpec::default()).is_err());
+    assert_eq!(t.scan(ScanRange::all()), before, "failed major changed visible state");
+    assert_eq!(t.run_count(), 1);
+    assert_eq!(std::fs::read_to_string(dir.join("MANIFEST")).unwrap(), manifest);
+
+    io.clear();
+    t.major_compact(&CompactionSpec::default()).unwrap();
+    assert_eq!(t.scan(ScanRange::all()), before);
+    drop(t);
+
+    let r = Table::recover("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+    assert_eq!(r.scan(ScanRange::all()), before);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Successful compactions and recoveries garbage-collect run files no
+/// longer referenced by the manifest — and only those.
+#[test]
+fn orphan_runs_collected_after_compaction() {
+    let dir = temp_dir("orphan-gc");
+    let io = FaultyIo::new(FaultPlan::new());
+    let t = Table::durable_with(
+        "t",
+        TableConfig::default(),
+        &dir,
+        FsyncPolicy::Never,
+        opts(&io, RetryPolicy::immediate(1), false),
+    )
+    .unwrap();
+    t.write_batch(vec![Triple::new("a", "c", "1")]).unwrap();
+    t.minor_compact().unwrap();
+    t.write_batch(vec![Triple::new("b", "c", "2")]).unwrap();
+    t.minor_compact().unwrap();
+    assert!(dir.join("run-00000001.run").exists());
+    assert!(dir.join("run-00000002.run").exists());
+
+    t.major_compact(&CompactionSpec::default()).unwrap();
+    assert!(!dir.join("run-00000001.run").exists(), "superseded run not GC'd");
+    assert!(!dir.join("run-00000002.run").exists(), "superseded run not GC'd");
+    assert!(dir.join("run-00000003.run").exists());
+    assert!(t.health().orphans_removed >= 2);
+    let expected = t.scan(ScanRange::all());
+    drop(t);
+
+    // Recovery GC: a stray run file (crash between save and manifest
+    // commit) is collected; unrelated files are untouched.
+    std::fs::write(dir.join("run-99999999.run"), b"junk").unwrap();
+    std::fs::write(dir.join("foo.txt"), b"keep me").unwrap();
+    let r = Table::recover("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+    assert!(!dir.join("run-99999999.run").exists(), "stray run survived recovery GC");
+    assert!(dir.join("foo.txt").exists(), "GC deleted an unrelated file");
+    assert!(r.health().orphans_removed >= 1);
+    assert_eq!(r.scan(ScanRange::all()), expected);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Periodic transient faults are fully healed by the retry layer: the
+/// whole workload succeeds, and recovery matches the fault-free model.
+#[test]
+fn transient_faults_healed_by_retry() {
+    let seed = 0x7EA1u64;
+    let dir = temp_dir("transient-heal");
+    let io = FaultyIo::new(FaultPlan::new().fail_every(7, FaultKind::Transient));
+    let t = Table::durable_with(
+        "t",
+        cfg(),
+        &dir,
+        FsyncPolicy::Never,
+        opts(&io, RetryPolicy::immediate(3), false),
+    )
+    .unwrap();
+    let ops = fault_workload(seed);
+    let mut acked = Vec::new();
+    for op in &ops {
+        match op {
+            FOp::Put(batch) => {
+                t.write_batch(batch.clone()).expect("retry must heal transient fault");
+                acked.push(op.clone());
+            }
+            FOp::Del(r, c) => {
+                t.delete(r, c).expect("retry must heal transient fault");
+                acked.push(op.clone());
+            }
+            FOp::Minor => {
+                t.minor_compact().expect("retry must heal transient fault");
+            }
+            FOp::Major => {
+                t.major_compact(&CompactionSpec::default())
+                    .expect("retry must heal transient fault");
+            }
+            FOp::Sync => t.sync().expect("retry must heal transient fault"),
+        }
+    }
+    assert_eq!(t.health().state, TableHealth::Healthy);
+    assert!(io.injected() > 0, "the plan never fired");
+    drop(t);
+
+    let r = Table::recover("t", cfg(), &dir, FsyncPolicy::Never).unwrap();
+    assert_eq!(r.scan(ScanRange::all()), *prefix_scans(&acked).last().unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash *during* recovery, at every operation index: a third, clean
+/// recovery must still restore the full pre-crash state (recovery
+/// checkpoints and rewrites the manifest before truncating the old
+/// log), and a fourth pass is idempotent.
+#[test]
+fn double_crash_during_recovery() {
+    let base = temp_dir("double-crash-base");
+    {
+        let t = Table::durable("t", cfg(), &base, FsyncPolicy::Never).unwrap();
+        // The workload compacts partway through and keeps writing, so
+        // recovery has runs to load *and* a log suffix to re-freeze.
+        for op in &fault_workload(0x8CADE) {
+            match op {
+                FOp::Put(batch) => {
+                    t.write_batch(batch.clone()).unwrap();
+                }
+                FOp::Del(r, c) => {
+                    t.delete(r, c).unwrap();
+                }
+                FOp::Minor => {
+                    t.minor_compact().unwrap();
+                }
+                FOp::Major => {
+                    t.major_compact(&CompactionSpec::default()).unwrap();
+                }
+                FOp::Sync => t.sync().unwrap(),
+            }
+        }
+    }
+    let expected = {
+        let probe = temp_dir("double-crash-probe");
+        copy_dir(&base, &probe);
+        let t = Table::recover("t", cfg(), &probe, FsyncPolicy::Never).unwrap();
+        let scan = t.scan(ScanRange::all());
+        drop(t);
+        let _ = std::fs::remove_dir_all(&probe);
+        scan
+    };
+
+    // Count the storage operations one full recovery performs.
+    let total = {
+        let probe = temp_dir("double-crash-count");
+        copy_dir(&base, &probe);
+        let io = FaultyIo::new(FaultPlan::new());
+        let t = Table::recover_with(
+            "t",
+            cfg(),
+            &probe,
+            FsyncPolicy::Never,
+            opts(&io, RetryPolicy::none(), false),
+        )
+        .unwrap();
+        drop(t);
+        let _ = std::fs::remove_dir_all(&probe);
+        io.ops()
+    };
+    assert!(total > 0);
+
+    for idx in 0..total {
+        let dir = temp_dir(&format!("double-crash-{idx}"));
+        copy_dir(&base, &dir);
+        let io = FaultyIo::new(FaultPlan::new().fail_at(idx, FaultKind::Permanent));
+        let first = Table::recover_with(
+            "t",
+            cfg(),
+            &dir,
+            FsyncPolicy::Never,
+            opts(&io, RetryPolicy::none(), false),
+        );
+        if let Ok(t) = &first {
+            // Fault landed on a best-effort path (orphan GC); the
+            // recovered table must already be complete.
+            assert_eq!(t.scan(ScanRange::all()), expected, "crash@{idx}");
+        }
+        drop(first);
+
+        let third = Table::recover("t", cfg(), &dir, FsyncPolicy::Never)
+            .unwrap_or_else(|e| panic!("third recovery failed (crash@{idx}): {e}"));
+        assert_eq!(third.scan(ScanRange::all()), expected, "state lost (crash@{idx})");
+        drop(third);
+        let fourth = Table::recover("t", cfg(), &dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(fourth.scan(ScanRange::all()), expected, "not idempotent (crash@{idx})");
+        drop(fourth);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// `BatchWriter` keeps its buffer across storage-level transient
+/// failures and delivers the same mutations once the device heals —
+/// end to end through the durable tier (the offline-tablet variant
+/// lives in the writer's unit tests).
+#[test]
+fn batch_writer_retains_buffer_across_storage_faults() {
+    let dir = temp_dir("writer-retain");
+    let io = FaultyIo::new(FaultPlan::new());
+    let t = Arc::new(
+        Table::durable_with(
+            "t",
+            TableConfig::default(),
+            &dir,
+            FsyncPolicy::Never,
+            // No table-level retry: the transient error must reach the
+            // writer, whose own retry loop is under test.
+            opts(&io, RetryPolicy::none(), false),
+        )
+        .unwrap(),
+    );
+    let mut w = BatchWriter::new(
+        Arc::clone(&t),
+        WriterConfig {
+            max_retries: 1,
+            retry_backoff: std::time::Duration::ZERO,
+            ..WriterConfig::default()
+        },
+    );
+    for i in 0..3 {
+        w.put(Triple::new(format!("r{i}"), "c", format!("v{i}")));
+    }
+
+    io.fail_from_now(FaultKind::Transient);
+    let err = w.flush().unwrap_err();
+    assert!(err.is_transient(), "got {err:?}");
+    assert_eq!(w.buffered(), 3, "failed flush dropped the buffer");
+    assert_eq!(t.len(), 0, "partial apply after failed WAL append");
+
+    io.clear();
+    assert_eq!(w.flush().unwrap(), 3);
+    assert_eq!(w.buffered(), 0);
+    assert_eq!(t.len(), 3);
+    w.sync().unwrap();
+    drop(w);
+    drop(t);
+
+    let r = Table::recover("t", TableConfig::default(), &dir, FsyncPolicy::Never).unwrap();
+    assert_eq!(r.len(), 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Copy the top-level files of `src` into `dst` (table directories are
+/// flat).
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        if entry.file_type().unwrap().is_file() {
+            std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+        }
+    }
+}

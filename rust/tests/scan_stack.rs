@@ -512,8 +512,8 @@ fn mirrored_tables(rng: &mut SplitMix64, cells: usize) -> (Table, Table) {
         if rng.chance(0.4) {
             let row = format!("r{:03}", rng.below(120));
             let col = format!("c{:02}", rng.below(24));
-            let a = tiered.delete(&row, &col);
-            let b = flat.delete(&row, &col);
+            let a = tiered.delete(&row, &col).unwrap();
+            let b = flat.delete(&row, &col).unwrap();
             assert_eq!(a, b, "delete({row},{col}) visibility must not depend on tiering");
         }
     }
@@ -635,7 +635,9 @@ fn combiner_at_merge_equals_combiner_at_scan() {
                 .unwrap();
         }
         for _ in 0..20 {
-            table.delete(&format!("r{:03}", rng.below(120)), &format!("c{:02}", rng.below(24)));
+            table
+                .delete(&format!("r{:03}", rng.below(120)), &format!("c{:02}", rng.below(24)))
+                .unwrap();
         }
         let expect = table.scan_spec(&ScanSpec::all().reduced(reduce.clone()));
         assert!(!expect.is_empty());

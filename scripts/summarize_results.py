@@ -87,6 +87,7 @@ ACCEPTANCE = {
     "bfs-one-scan": ("one-scan BFS frontier vs per-node seeks", 1.4),
     "wal-recover": ("checkpoint recovery vs durable re-ingest", 5.0),
     "run-backed-scan": ("run-backed vs all-in-memory scan", 0.91),
+    "wal-ingest-retry": ("durable ingest with retry layer vs no-retry", 0.95),
 }
 
 
