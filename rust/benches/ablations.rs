@@ -60,6 +60,17 @@
 //!   storage operation: the retry layer heals every one, and a clean
 //!   recovery is bit-identical to the all-in-memory image.
 //!
+//! * **Snapshot-pinned scans (PR 8)** — two legs, both asserted at
+//!   **≥ 1.3×** (the PR 8 acceptance numbers). *Scan under writers*:
+//!   a full scan through the pinned-snapshot path
+//!   (`Table::scan_spec_par`, zero lock acquisitions after open) vs
+//!   the frozen lock-per-block baseline
+//!   (`Table::scan_spec_locked_par`) while writer threads overwrite
+//!   the table. *Range-chunk fan-out*: a 4-thread scan of a
+//!   single-tablet table, where per-tablet grouping degenerates to a
+//!   serial walk but weighted range chunking still splits the work.
+//!   Outputs are bit-identical by contract (asserted quiescently).
+//!
 //! Besides the CSV, the run writes the machine-readable perf
 //! trajectories `BENCH_PR2.json` (thread sweep + accumulator policies,
 //! schema-compatible with the PR 2 capture), `BENCH_PR3.json`
@@ -68,9 +79,10 @@
 //! (string-vs-dict constructor + TableMult, allocation counters),
 //! `BENCH_PR5.json` (per-seek vs one-scan BFS frontiers),
 //! `BENCH_PR6.json` (durable ingest, checkpoint recovery, run-backed
-//! scans) and `BENCH_PR7.json` (retry-layer overhead and the
-//! fault-healing showcase) for `scripts/summarize_results.py` and the
-//! CI artifacts.
+//! scans), `BENCH_PR7.json` (retry-layer overhead and the
+//! fault-healing showcase) and `BENCH_PR8.json` (snapshot scans under
+//! writers, range-chunk fan-out) for `scripts/summarize_results.py`
+//! and the CI artifacts.
 //!
 //! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
 //! [--threads-n N] [--hyper-scale S] [--mask-scale S]
@@ -83,7 +95,8 @@
 //! defaults 12, 13 and 13. `--bfs-scale` sizes the BFS graph to 2^S
 //! nodes (degree 4); default 13 — the seed frontier stays pinned at
 //! 1 000 nodes, the acceptance shape. `--wal-scale` sizes the durable
-//! tier section to 2^S triples; default 13).
+//! tier section to 2^S triples; default 13. `--chunk-scale` sizes the
+//! snapshot-scan section to 2^S cells; default 14).
 
 use d4m::assoc::{keys_from, Aggregator, Assoc, Key, KeyEncoding, ValsInput};
 use d4m::bench::{BenchRecord, FigureHarness, Workload};
@@ -1127,6 +1140,169 @@ fn main() {
         .with_extra("injected_faults", injected as f64),
     ];
 
+    // --- snapshot-pinned scans + range-chunk fan-out (PR 8). Two legs,
+    // both asserted at >= 1.3x:
+    //   * scan under writers — writer threads continuously overwrite
+    //     the table while one scanner collects it. The lock-per-block
+    //     baseline (`scan_spec_locked_par`, the frozen pre-PR 8 path)
+    //     queues behind the writers' tablet locks at every block; the
+    //     pinned-snapshot path locks once at open and walks free.
+    //   * range-chunk fan-out — a single-tablet table at 4 threads.
+    //     Per-tablet grouping degenerates to one serial walk; weighted
+    //     range chunking splits the same tablet into balanced chunks.
+    // Outputs are bit-identical by contract, asserted while quiescent.
+    let cscale = args.usize_or("chunk-scale", 14);
+    let cn = 1usize << cscale;
+    let chunk_writers = 3usize;
+    // Unique (row, col) per index: 24 columns per row.
+    let chunk_row = |i: usize| format!("r{:05}", i / 24);
+    let chunk_col = |i: usize| format!("c{:02}", i % 24);
+    // ~4-8 tablets at ~14 bytes/cell, at every scale.
+    let contended = Table::new(
+        "chunkbench",
+        TableConfig { split_threshold: (cn * 2).max(1024), write_latency_us: 0 },
+    );
+    {
+        let batch: Vec<Triple> =
+            (0..cn).map(|i| Triple::new(chunk_row(i), chunk_col(i), format!("{i}"))).collect();
+        for chunk in batch.chunks(256) {
+            contended.write_batch(chunk.to_vec()).expect("chunk ingest");
+        }
+    }
+    let chunk_tablets = contended.tablet_count();
+    let chunk_spec = ScanSpec::all().batched(64);
+    let (t_scan_locked, t_scan_pinned) = std::thread::scope(|scope| {
+        let stop = &std::sync::atomic::AtomicBool::new(false);
+        let table = &contended;
+        let row = &chunk_row;
+        let col = &chunk_col;
+        for w in 0..chunk_writers {
+            scope.spawn(move || {
+                let mut rng = SplitMix64::new(0xC8A0 + w as u64);
+                while !stop.load(Ordering::Relaxed) {
+                    let batch: Vec<Triple> = (0..256)
+                        .map(|_| {
+                            let i = rng.below_usize(cn);
+                            Triple::new(row(i), col(i), "w")
+                        })
+                        .collect();
+                    table.write_batch(batch).expect("overwrite");
+                }
+            });
+        }
+        let t_locked = time_op(1, repeats, |_| {
+            table.scan_spec_locked_par(&chunk_spec, Parallelism::serial()).len()
+        });
+        let t_pinned = time_op(1, repeats, |_| {
+            table.scan_spec_par(&chunk_spec, Parallelism::serial()).len()
+        });
+        stop.store(true, Ordering::Relaxed);
+        (t_locked, t_pinned)
+    });
+    // Quiescent bit-identity: with the writers stopped, both paths must
+    // serve the exact same cells.
+    let chunk_expect = contended.scan_spec_locked_par(&chunk_spec, Parallelism::serial());
+    assert_eq!(
+        chunk_expect,
+        contended.scan_spec_par(&chunk_spec, Parallelism::serial()),
+        "pinned scan must be bit-identical to the locked scan"
+    );
+    let writer_speedup = if t_scan_pinned.mean_s() > 0.0 {
+        t_scan_locked.mean_s() / t_scan_pinned.mean_s()
+    } else {
+        0.0
+    };
+    // Range-chunk fan-out: one tablet (default 4 MiB threshold never
+    // splits at these scales), layered memtable-over-run so the chunk
+    // walk merges like real scans do.
+    let fanout = Table::new("fanoutbench", TableConfig::default());
+    {
+        let batch: Vec<Triple> =
+            (0..cn).map(|i| Triple::new(chunk_row(i), chunk_col(i), format!("{i}"))).collect();
+        let mid = batch.len() / 2;
+        for chunk in batch[..mid].chunks(256) {
+            fanout.write_batch(chunk.to_vec()).expect("fanout ingest");
+        }
+        fanout.minor_compact().expect("fanout compact");
+        for chunk in batch[mid..].chunks(256) {
+            fanout.write_batch(chunk.to_vec()).expect("fanout ingest");
+        }
+    }
+    assert_eq!(fanout.tablet_count(), 1, "fan-out leg needs a single tablet");
+    let fanout_spec = ScanSpec::all();
+    let fanout_expect = fanout.scan_spec_locked_par(&fanout_spec, Parallelism::serial());
+    assert_eq!(
+        fanout_expect,
+        fanout.scan_spec_par(&fanout_spec, Parallelism::with_threads(4)),
+        "chunked scan must be bit-identical to the serial scan"
+    );
+    let t_fanout_groups = time_op(1, repeats, |_| {
+        fanout.scan_spec_locked_par(&fanout_spec, Parallelism::with_threads(4)).len()
+    });
+    let t_fanout_chunks = time_op(1, repeats, |_| {
+        fanout.scan_spec_par(&fanout_spec, Parallelism::with_threads(4)).len()
+    });
+    let fanout_speedup = if t_fanout_chunks.mean_s() > 0.0 {
+        t_fanout_groups.mean_s() / t_fanout_chunks.mean_s()
+    } else {
+        0.0
+    };
+    h.record(cscale, "scan-locked-under-writers", t_scan_locked.clone(), chunk_expect.len());
+    h.record(cscale, "scan-under-writers", t_scan_pinned.clone(), chunk_expect.len());
+    h.record(cscale, "scan-tablet-groups", t_fanout_groups.clone(), fanout_expect.len());
+    h.record(cscale, "range-chunk-fanout", t_fanout_chunks.clone(), fanout_expect.len());
+    println!(
+        "[ablations] snapshot scans 2^{cscale} cells ({chunk_tablets} tablets, \
+         {chunk_writers} writers): locked={:.6}s pinned={:.6}s ({writer_speedup:.2}x); \
+         fan-out @4 threads: tablet-groups={:.6}s range-chunks={:.6}s ({fanout_speedup:.2}x)",
+        t_scan_locked.mean_s(),
+        t_scan_pinned.mean_s(),
+        t_fanout_groups.mean_s(),
+        t_fanout_chunks.mean_s(),
+    );
+    assert!(
+        writer_speedup >= 1.3,
+        "pinned scan under writers at {writer_speedup:.2}x is below the 1.3x acceptance threshold"
+    );
+    assert!(
+        fanout_speedup >= 1.3,
+        "range-chunk fan-out at {fanout_speedup:.2}x is below the 1.3x acceptance threshold"
+    );
+    let records8: Vec<BenchRecord> = vec![
+        BenchRecord::new(
+            "scan-locked-under-writers",
+            cscale,
+            1,
+            t_scan_locked.mean_s() * 1e9,
+            1.0,
+        )
+        .with_extra("cells", chunk_expect.len() as f64)
+        .with_extra("writers", chunk_writers as f64)
+        .with_extra("tablets", chunk_tablets as f64),
+        BenchRecord::new(
+            "scan-under-writers",
+            cscale,
+            1,
+            t_scan_pinned.mean_s() * 1e9,
+            writer_speedup,
+        )
+        .with_extra("cells", chunk_expect.len() as f64)
+        .with_extra("writers", chunk_writers as f64)
+        .with_extra("tablets", chunk_tablets as f64),
+        BenchRecord::new("scan-tablet-groups", cscale, 4, t_fanout_groups.mean_s() * 1e9, 1.0)
+            .with_extra("cells", fanout_expect.len() as f64)
+            .with_extra("tablets", 1.0),
+        BenchRecord::new(
+            "range-chunk-fanout",
+            cscale,
+            4,
+            t_fanout_chunks.mean_s() * 1e9,
+            fanout_speedup,
+        )
+        .with_extra("cells", fanout_expect.len() as f64)
+        .with_extra("tablets", 1.0),
+    ];
+
     h.write_csv(&out_dir).expect("write CSV");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR2.json", &records).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR3.json", &records3).expect("write JSON");
@@ -1134,4 +1310,5 @@ fn main() {
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR5.json", &records5).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR6.json", &records6).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR7.json", &records7).expect("write JSON");
+    d4m::bench::write_bench_json(&out_dir, "BENCH_PR8.json", &records8).expect("write JSON");
 }

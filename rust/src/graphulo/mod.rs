@@ -380,6 +380,26 @@ pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
     nodes
 }
 
+/// [`degree_table`] with an explicit thread configuration: the counting
+/// scan fans out over pinned snapshots as load-balanced range chunks
+/// ([`Table::scan_spec_par`] since PR 8 — the combiner still runs
+/// inside each worker's stack, and chunks cut at row boundaries, so
+/// the per-node counts are bit-identical to the streamed kernel).
+pub fn degree_table_par(edges: &Table, out: &Arc<Table>, par: Parallelism) -> usize {
+    if par.is_serial() {
+        return degree_table(edges, out);
+    }
+    let spec = ScanSpec::all().reduced(RowReduce::Count { out_col: "deg".into() });
+    let triples = edges.scan_spec_par(&spec, par);
+    let nodes = triples.len();
+    let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
+    for t in triples {
+        w.put(t);
+    }
+    w.flush().expect("degree table flush");
+    nodes
+}
+
 /// k-hop BFS from `seeds` over an adjacency table (`row → col` edges).
 /// Returns the set of reached nodes per hop. **Hop 0 is the seeds that
 /// exist in the table**: the first stacked multi-range scan probes
@@ -401,19 +421,45 @@ pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
 /// into the stack so exactly one triple per present seed crosses to
 /// the client.
 pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> {
-    let seed_spec =
-        || ScanSpec::ranges(seeds.iter().map(ScanRange::single)).batched(SCAN_BLOCK);
+    bfs_impl(seeds, hops, |spec| adj.scan_stream(spec.batched(SCAN_BLOCK)))
+}
+
+/// [`bfs`] with an explicit thread configuration: every hop's frontier
+/// scan fans out over pinned snapshots as load-balanced range chunks
+/// ([`Table::scan_spec_par`] since PR 8), so a wide frontier's one
+/// stacked scan also uses the pool. Chunks cut at row boundaries and
+/// stitch in range order, so the hop sets are identical to the
+/// streamed kernel's at every thread count.
+pub fn bfs_par(
+    adj: &Table,
+    seeds: &[String],
+    hops: usize,
+    par: Parallelism,
+) -> Vec<BTreeSet<String>> {
+    if par.is_serial() {
+        return bfs(adj, seeds, hops);
+    }
+    bfs_impl(seeds, hops, |spec| adj.scan_spec_par(&spec, par).into_iter())
+}
+
+/// The hop engine shared by [`bfs`] (streamed scans) and [`bfs_par`]
+/// (snapshot fan-out): `scan` runs one stacked multi-range scan and
+/// yields its row-sorted triples.
+fn bfs_impl<I, F>(seeds: &[String], hops: usize, scan: F) -> Vec<BTreeSet<String>>
+where
+    I: Iterator<Item = Triple>,
+    F: Fn(ScanSpec) -> I,
+{
+    let seed_spec = || ScanSpec::ranges(seeds.iter().map(ScanRange::single));
     let mut frontiers: Vec<BTreeSet<String>> = Vec::with_capacity(hops + 1);
     if hops == 0 {
         // Existence probe only: one triple per present seed row.
         let hop0: BTreeSet<String> = if seeds.is_empty() {
             BTreeSet::new()
         } else {
-            adj.scan_stream(
-                seed_spec().reduced(RowReduce::Count { out_col: String::new() }),
-            )
-            .map(|t| t.row.to_string())
-            .collect()
+            scan(seed_spec().reduced(RowReduce::Count { out_col: String::new() }))
+                .map(|t| t.row.to_string())
+                .collect()
         };
         frontiers.push(hop0);
         return frontiers;
@@ -425,7 +471,7 @@ pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> 
     let mut cols: BTreeSet<String> = BTreeSet::new();
     if !seeds.is_empty() {
         let mut last_row: Option<SharedStr> = None;
-        for t in adj.scan_stream(seed_spec()) {
+        for t in scan(seed_spec()) {
             if last_row.as_deref() != Some(t.row.as_str()) {
                 present.insert(t.row.to_string());
                 last_row = Some(t.row.clone());
@@ -449,9 +495,8 @@ pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> 
     let mut frontier = next;
     for _ in 1..hops {
         let mut next = BTreeSet::new();
-        let spec =
-            ScanSpec::ranges(frontier.iter().map(ScanRange::single)).batched(SCAN_BLOCK);
-        for t in adj.scan_stream(spec) {
+        let spec = ScanSpec::ranges(frontier.iter().map(ScanRange::single));
+        for t in scan(spec) {
             if !visited.contains(t.col.as_str()) && !next.contains(t.col.as_str()) {
                 next.insert(t.col.to_string());
             }
@@ -485,11 +530,33 @@ pub fn jaccard_seeded(adj: &Table, nodes: &[String]) -> Result<Assoc, AssocError
     jaccard_over(adj, ScanSpec::ranges(nodes.iter().map(ScanRange::single)))
 }
 
+/// [`jaccard_seeded`] with an explicit thread configuration: the one
+/// stacked multi-range scan over the node rows fans out over pinned
+/// snapshots as load-balanced range chunks ([`Table::scan_spec_par`]
+/// since PR 8). The pair enumeration itself is unchanged, so the
+/// similarities are bit-identical to the streamed kernel's at every
+/// thread count.
+pub fn jaccard_seeded_par(
+    adj: &Table,
+    nodes: &[String],
+    par: Parallelism,
+) -> Result<Assoc, AssocError> {
+    if par.is_serial() {
+        return jaccard_seeded(adj, nodes);
+    }
+    let spec = ScanSpec::ranges(nodes.iter().map(ScanRange::single));
+    jaccard_triples(adj.scan_spec_par(&spec, par).into_iter())
+}
+
 fn jaccard_over(adj: &Table, spec: ScanSpec) -> Result<Assoc, AssocError> {
+    jaccard_triples(adj.scan_stream(spec.batched(SCAN_BLOCK)))
+}
+
+fn jaccard_triples(triples: impl Iterator<Item = Triple>) -> Result<Assoc, AssocError> {
     // Build neighbor sets straight off the stream (shared handles are
     // moved, not copied, into the map).
     let mut nbrs: BTreeMap<SharedStr, BTreeSet<SharedStr>> = BTreeMap::new();
-    for t in adj.scan_stream(spec.batched(SCAN_BLOCK)) {
+    for t in triples {
         nbrs.entry(t.row).or_default().insert(t.col);
     }
     // Invert: neighbor -> rows touching it, so only co-neighbor pairs
@@ -851,6 +918,40 @@ mod tests {
         table_mult_masked(&t, &t, &all, &PlusTimes, &keep_all);
         let a = store.read_assoc("edges").unwrap();
         assert_eq!(store.read_assoc("all").unwrap(), a.sqin());
+    }
+
+    #[test]
+    fn snapshot_parallel_kernels_match_streamed() {
+        // PR 8: the `_par` kernel variants route their scans through
+        // pinned-snapshot range-chunk fan-out; every output must be
+        // bit-identical to the streamed kernel at every thread count.
+        let (store, t, _) = graph_store();
+        t.minor_compact().unwrap();
+        let seeds = vec!["a".to_string()];
+        let expect_bfs = bfs(&t, &seeds, 3);
+        let expect_probe = bfs(&t, &seeds, 0);
+        let nodes: Vec<String> =
+            ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        let expect_jac = jaccard_seeded(&t, &nodes).unwrap();
+        let expect_deg = {
+            let d = store.create_table("deg_serial");
+            degree_table(&t, &d);
+            d.scan(ScanRange::all())
+        };
+        for threads in [1usize, 2, 4, 7] {
+            let par = Parallelism::with_threads(threads);
+            assert_eq!(bfs_par(&t, &seeds, 3, par), expect_bfs, "t={threads}");
+            assert_eq!(bfs_par(&t, &seeds, 0, par), expect_probe, "t={threads}");
+            assert_eq!(
+                jaccard_seeded_par(&t, &nodes, par).unwrap(),
+                expect_jac,
+                "t={threads}"
+            );
+            let d = store.create_table(&format!("deg_par_{threads}"));
+            let n = degree_table_par(&t, &d, par);
+            assert_eq!(d.scan(ScanRange::all()), expect_deg, "t={threads}");
+            assert_eq!(n, expect_deg.len(), "t={threads}");
+        }
     }
 }
 

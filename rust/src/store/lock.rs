@@ -1,0 +1,111 @@
+//! Lock wrappers with a per-thread acquisition counter — the test shim
+//! behind the "snapshot scans take zero locks after open" guarantee.
+//!
+//! The table's tablet-list `RwLock` and per-tablet `Mutex`es are wrapped
+//! in [`TrackedRwLock`] / [`TrackedMutex`], which expose the same API
+//! subset as their `std::sync` counterparts but bump a thread-local
+//! counter on every acquisition. [`lock_acquisitions`] reads the
+//! counter, so a test can diff it around a scan and assert the
+//! lock-free snapshot path acquired nothing — turning the central PR 8
+//! performance claim into a checked invariant instead of a comment.
+//!
+//! The counter is thread-local on purpose: it needs no synchronization
+//! of its own (a shared atomic would serialize the very paths being
+//! measured), and a serial scan's count is exact regardless of what
+//! other threads do concurrently.
+
+use std::cell::Cell;
+use std::sync::{LockResult, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+thread_local! {
+    /// Tracked lock acquisitions made by this thread (mutex locks plus
+    /// rwlock reads and writes).
+    static ACQUISITIONS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of tracked lock acquisitions this thread has performed so
+/// far. Monotone per thread — diff it around an operation to count the
+/// locks that operation took on this thread.
+pub fn lock_acquisitions() -> u64 {
+    ACQUISITIONS.with(Cell::get)
+}
+
+#[inline]
+fn count_one() {
+    ACQUISITIONS.with(|c| c.set(c.get() + 1));
+}
+
+/// [`std::sync::Mutex`] with acquisition counting (same API subset, so
+/// call sites are unchanged).
+#[derive(Debug, Default)]
+pub struct TrackedMutex<T>(Mutex<T>);
+
+impl<T> TrackedMutex<T> {
+    /// Wrap `value` in a tracked mutex.
+    pub fn new(value: T) -> Self {
+        TrackedMutex(Mutex::new(value))
+    }
+
+    /// Acquire the lock, counting the acquisition.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        count_one();
+        self.0.lock()
+    }
+}
+
+/// [`std::sync::RwLock`] with acquisition counting (same API subset, so
+/// call sites are unchanged).
+#[derive(Debug, Default)]
+pub struct TrackedRwLock<T>(RwLock<T>);
+
+impl<T> TrackedRwLock<T> {
+    /// Wrap `value` in a tracked rwlock.
+    pub fn new(value: T) -> Self {
+        TrackedRwLock(RwLock::new(value))
+    }
+
+    /// Acquire a shared read guard, counting the acquisition.
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        count_one();
+        self.0.read()
+    }
+
+    /// Acquire the exclusive write guard, counting the acquisition.
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        count_one();
+        self.0.write()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_every_acquisition_kind() {
+        let m = TrackedMutex::new(1u32);
+        let rw = TrackedRwLock::new(2u32);
+        let before = lock_acquisitions();
+        *m.lock().unwrap() += 1;
+        assert_eq!(*rw.read().unwrap(), 2);
+        *rw.write().unwrap() += 1;
+        assert_eq!(lock_acquisitions() - before, 3);
+        assert_eq!(*m.lock().unwrap(), 2);
+        assert_eq!(*rw.read().unwrap(), 3);
+        assert_eq!(lock_acquisitions() - before, 5);
+    }
+
+    #[test]
+    fn counter_is_per_thread() {
+        let before = lock_acquisitions();
+        std::thread::spawn(|| {
+            let m = TrackedMutex::new(());
+            for _ in 0..10 {
+                drop(m.lock().unwrap());
+            }
+        })
+        .join()
+        .unwrap();
+        assert_eq!(lock_acquisitions(), before, "other threads' locks don't count here");
+    }
+}

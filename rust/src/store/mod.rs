@@ -22,10 +22,11 @@
 //! * **[`scan`]** — the server-side iterator stack (Accumulo's
 //!   seek/next iterator model): composable range-set, filter, and
 //!   combiner stages executed against the tablets, streamed to the
-//!   consumer ([`Table::scan_stream`]) or collected with per-tablet
-//!   parallel fan-out ([`Table::scan_spec_par`]). A spec carries a
-//!   sorted, coalesced *set* of ranges ([`ScanSpec::ranges()`], the
-//!   Accumulo `BatchScanner` idiom), served in one stacked pass.
+//!   consumer ([`Table::scan_stream`]) or collected over pinned
+//!   snapshots with per-range-chunk parallel fan-out
+//!   ([`Table::scan_spec_par`]). A spec carries a sorted, coalesced
+//!   *set* of ranges ([`ScanSpec::ranges()`], the Accumulo
+//!   `BatchScanner` idiom), served in one stacked pass.
 //!
 //! Triples here are strings (Accumulo keys are bytes), stored and
 //! handed out as shared-bytes [`SharedStr`] handles: a cell scanned out
@@ -53,9 +54,20 @@
 //! moves the table down a degradation ladder ([`TableHealth`]) rather
 //! than panicking. [`FaultyIo`] injects scheduled faults
 //! deterministically for the `tests/fault_injection.rs` suite.
+//!
+//! **Snapshot scans** (PR 8) make the read path lock-free: every scan
+//! pins one [`TabletSnapshot`] per tablet (`Arc`-shared runs plus a
+//! frozen memtable image) and walks the pinned state with *zero lock
+//! acquisitions after open* — asserted in tests through the
+//! [`lock_acquisitions`] counting shim wrapped around the table's
+//! locks. [`Table::scan_spec_par`] fans load-balanced *range chunks*
+//! over the snapshots independent of tablet boundaries (Accumulo's
+//! BatchScanner worker model), and [`Table::scan_snapshot`] exposes
+//! the pinned scan ([`SnapshotScan`]) directly.
 
 mod compact;
 pub mod io;
+mod lock;
 mod run;
 pub mod scan;
 mod table;
@@ -65,13 +77,17 @@ mod writer;
 
 pub use compact::CompactionSpec;
 pub use io::{FaultKind, FaultPlan, FaultyIo, RealIo, StorageFile, StorageIo};
+pub use lock::{lock_acquisitions, TrackedMutex, TrackedRwLock};
 pub use run::{Run, RunCursor};
 pub use scan::{
     coalesce_ranges, format_num, CellField, CellFilter, KeyMatch, RowReduce, ScanIter, ScanRange,
     ScanSpec, SCAN_BLOCK,
 };
-pub use table::{DurableOptions, HealthReport, Table, TableConfig, TableHealth, TableStream};
-pub use tablet::Tablet;
+pub use table::{
+    DurableOptions, HealthReport, SnapshotScan, SnapshotStream, Table, TableConfig, TableHealth,
+    TableStream,
+};
+pub use tablet::{Tablet, TabletSnapshot};
 pub use wal::FsyncPolicy;
 pub use writer::{BatchWriter, WriterConfig};
 

@@ -16,12 +16,16 @@
 //! | `ColumnQualifierFilter` / `RegExFilter` | [`CellFilter`] + [`KeyMatch`] |
 //! | `Combiner` (per-key aggregation) | [`RowReduce`] |
 //! | `ScannerOptions` (the configured stack) | [`ScanSpec`] |
+//! | Scan-time isolation (a scan serves one consistent view) | `TabletSnapshot` (pinned per scan) |
+//! | `BatchScanner` worker threads (per-range server fan-out) | `SnapshotScan::collect` (weighted range-chunk fan-out) |
 //!
-//! The base of the stack is a *block cursor* over tablet `BTreeMap`s
-//! ([`SliceCursor`] for a pinned tablet list, `TableCursor` in
-//! `table.rs` for the re-locating streaming scanner): it holds no lock
-//! between blocks, resumes by key, and therefore composes with
-//! concurrent writers and tablet splits. Filter stages are pushed
+//! The base of the stack is a *block cursor* over the tablet layers
+//! ([`SliceCursor`] over a live tablet list, [`SnapCursor`] over pinned
+//! lock-free `TabletSnapshot`s, `TableCursor` in `table.rs` for the
+//! re-locating streaming scanner): it resumes by key between blocks
+//! and therefore composes with concurrent writers and tablet splits —
+//! the live cursor by re-locking per block, the snapshot cursor by
+//! never needing a lock at all after the pin. Filter stages are pushed
 //! *beneath the block copy*: the cursors hand the spec's [`CellFilter`]
 //! list to [`Tablet::scan_block`], which evaluates the matchers against
 //! `&str` borrows of the stored bytes, so a rejected cell is never
@@ -38,16 +42,17 @@
 //! a time.
 //!
 //! **Determinism.** Every stage is a pure, order-preserving function of
-//! the sorted triple stream, rows never span tablets (splits happen at
-//! row boundaries), and the parallel collector in `Table::scan_spec_par`
-//! splits work at tablet boundaries — so a stacked scan is byte-identical
-//! to "naive scan, then filter, then reduce" at every thread count
+//! the sorted triple stream, and the parallel collector in
+//! `Table::scan_spec_par` cuts work at *row* boundaries (load-balanced
+//! range chunks over pinned snapshots, independent of tablet layout) —
+//! so a stacked scan is byte-identical to "naive scan, then filter,
+//! then reduce" at every thread count and chunk granularity
 //! (`rust/tests/scan_stack.rs` enforces this).
 
-use super::tablet::Tablet;
+use super::lock::TrackedMutex;
+use super::tablet::{Tablet, TabletSnapshot};
 use super::{SharedStr, Triple};
 use std::collections::BTreeSet;
-use std::sync::Mutex;
 
 /// A scan range: rows in `[lo, hi)` and, within each row, columns in
 /// `[col_lo, col_hi)` — all unbounded when `None`. The column window is
@@ -204,6 +209,39 @@ pub(crate) fn snap_row<'a>(ranges: &'a [ScanRange], row: &'a str) -> Option<&'a 
         };
     }
     None
+}
+
+/// Clamp a sorted, coalesced range set to the row span `[lo, hi)`
+/// (`None` = unbounded): ranges outside the span are dropped, ranges
+/// straddling a boundary are cut at it, column windows pass through
+/// untouched. Sortedness is preserved (raising every `lo` to the same
+/// floor keeps relative order), so the result feeds straight into the
+/// block walk — this is how the per-range-chunk fan-out hands each
+/// worker its row slice of the full spec.
+pub(crate) fn clamp_ranges(
+    ranges: &[ScanRange],
+    lo: Option<&str>,
+    hi: Option<&str>,
+) -> Vec<ScanRange> {
+    let mut out = Vec::new();
+    for r in ranges {
+        if !r.overlaps_extent(lo, hi) {
+            continue;
+        }
+        let mut c = r.clone();
+        if let Some(lo) = lo {
+            if c.lo.as_deref().is_none_or(|rl| rl < lo) {
+                c.lo = Some(lo.to_string());
+            }
+        }
+        if let Some(hi) = hi {
+            if c.hi.as_deref().is_none_or(|rh| rh > hi) {
+                c.hi = Some(hi.to_string());
+            }
+        }
+        out.push(c);
+    }
+    out
 }
 
 /// The column position a fresh walk of `row` starts at: the smallest
@@ -648,7 +686,7 @@ pub const SCAN_BLOCK: usize = 2048;
 /// contiguous sub-list. Holds no tablet lock between blocks; resumes by
 /// key; evaluates the spec's filters beneath the tablet block copy.
 pub struct SliceCursor<'t> {
-    tablets: &'t [Mutex<Tablet>],
+    tablets: &'t [TrackedMutex<Tablet>],
     live: Vec<usize>,
     ranges: Vec<ScanRange>,
     filters: Vec<CellFilter>,
@@ -667,7 +705,7 @@ impl<'t> SliceCursor<'t> {
     /// restricted to the sorted, coalesced range set `ranges`, with
     /// `filters` pushed into the tablet block scan.
     pub fn new(
-        tablets: &'t [Mutex<Tablet>],
+        tablets: &'t [TrackedMutex<Tablet>],
         live: Vec<usize>,
         ranges: Vec<ScanRange>,
         filters: Vec<CellFilter>,
@@ -742,6 +780,123 @@ impl ScanIter for SliceCursor<'_> {
             let tab = self.tablets[self.live[self.ti]].lock().unwrap();
             let past = tab.hi.as_deref().is_some_and(|hi| hi <= row);
             drop(tab);
+            if !past {
+                break;
+            }
+            self.ti += 1;
+        }
+    }
+
+    fn next_triple(&mut self) -> Option<Triple> {
+        loop {
+            if let Some(t) = self.buf.pop() {
+                return Some(t);
+            }
+            if self.done {
+                return None;
+            }
+            self.refill();
+        }
+    }
+}
+
+/// Block cursor over a pinned [`TabletSnapshot`] list — the lock-free
+/// base iterator under snapshot scans (`Table::scan_snapshot`). Same
+/// walk, same resume discipline, and same block-at-a-time yield points
+/// as [`SliceCursor`], but every block comes from immutable pinned
+/// state: after construction **no lock is ever acquired** (the
+/// examined-cells cap is only a yield point here, kept so snapshot
+/// refresh/cancellation hooks have somewhere to run). Results are
+/// bit-identical to a locked scan of the same state by construction —
+/// both cursors drive the one shared `walk_block` engine.
+pub struct SnapCursor<'s> {
+    snaps: &'s [TabletSnapshot],
+    ranges: Vec<ScanRange>,
+    filters: Vec<CellFilter>,
+    /// Position in `snaps`.
+    ti: usize,
+    /// Resume key: `(row, col, inclusive)`; `None` = range start.
+    resume: Option<(SharedStr, SharedStr, bool)>,
+    /// Current block, reversed so consuming is a pop.
+    buf: Vec<Triple>,
+    done: bool,
+}
+
+impl<'s> SnapCursor<'s> {
+    /// Cursor over `snaps` (pinned snapshots in row order), restricted
+    /// to the sorted, coalesced range set `ranges`, with `filters`
+    /// pushed into the snapshot block scan. Out-of-range snapshots are
+    /// skipped inline (no pre-pruned index list — pruning a pinned
+    /// snapshot costs one extent comparison, not a lock).
+    pub fn new(
+        snaps: &'s [TabletSnapshot],
+        ranges: Vec<ScanRange>,
+        filters: Vec<CellFilter>,
+    ) -> Self {
+        let done = ranges.is_empty();
+        SnapCursor { snaps, ranges, filters, ti: 0, resume: None, buf: Vec::new(), done }
+    }
+
+    fn refill(&mut self) {
+        self.buf.clear();
+        while self.ti < self.snaps.len() {
+            let snap = &self.snaps[self.ti];
+            if !self
+                .ranges
+                .iter()
+                .any(|r| r.overlaps_extent(snap.lo.as_deref(), snap.hi.as_deref()))
+            {
+                self.ti += 1;
+                self.resume = None;
+                continue;
+            }
+            let from = self.resume.as_ref().map(|(r, c, inc)| (r.as_str(), c.as_str(), *inc));
+            let more =
+                snap.scan_block(from, &self.ranges, &self.filters, SCAN_BLOCK, &mut self.buf);
+            match more {
+                None => {
+                    self.ti += 1;
+                    self.resume = None;
+                    if !self.buf.is_empty() {
+                        self.buf.reverse();
+                        return;
+                    }
+                }
+                Some((row, col)) => {
+                    self.resume = Some((row, col, false));
+                    if !self.buf.is_empty() {
+                        self.buf.reverse();
+                        return;
+                    }
+                    // Examined cap fired on an all-rejected block —
+                    // just a yield point on the lock-free path; loop.
+                }
+            }
+        }
+        self.done = true;
+    }
+}
+
+impl ScanIter for SnapCursor<'_> {
+    fn seek(&mut self, row: &str, col: &str) {
+        self.buf.clear();
+        if self.ranges.is_empty() {
+            self.done = true;
+            return;
+        }
+        self.done = false;
+        // Clamp the target to the range-set start (targets inside a gap
+        // are hopped forward by the walk itself).
+        let (row, col) = match self.ranges[0].lo.as_deref() {
+            Some(lo) if row < lo => (lo, ""),
+            _ => (row, col),
+        };
+        self.resume = Some((row.into(), col.into(), true));
+        // First snapshot whose extent may still hold keys >= row — an
+        // extent comparison per snapshot, no locks.
+        self.ti = 0;
+        while self.ti < self.snaps.len() {
+            let past = self.snaps[self.ti].hi.as_deref().is_some_and(|hi| hi <= row);
             if !past {
                 break;
             }
@@ -866,6 +1021,24 @@ mod tests {
         assert_eq!(start_col(&ws, "a"), "q");
         assert_eq!(start_col(&ws, "b"), "c");
         assert_eq!(start_col(&ws, "z"), "");
+    }
+
+    #[test]
+    fn clamp_ranges_cuts_at_row_bounds() {
+        let rs = coalesce_ranges(vec![
+            ScanRange::rows("a", "f").with_cols("x", "y"),
+            ScanRange::rows("m", "p"),
+        ]);
+        let got = clamp_ranges(&rs, Some("c"), Some("n"));
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].lo.as_deref(), got[0].hi.as_deref()), (Some("c"), Some("f")));
+        assert_eq!(got[0].col_lo.as_deref(), Some("x"));
+        assert_eq!((got[1].lo.as_deref(), got[1].hi.as_deref()), (Some("m"), Some("n")));
+        // Fully-outside ranges drop; unbounded chunk sides pass through.
+        assert!(clamp_ranges(&rs, Some("q"), None).is_empty());
+        let all = clamp_ranges(&rs, None, None);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].lo.as_deref(), Some("a"));
     }
 
     #[test]

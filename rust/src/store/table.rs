@@ -9,19 +9,22 @@
 //!
 //! Scans run on the server-side iterator stack (see
 //! [`crate::store::scan`]): [`Table::scan_stream`] returns a streaming,
-//! seekable [`TableStream`]; [`Table::scan_spec_par`] collects a
-//! stacked scan with per-tablet parallel fan-out; and the classic
+//! seekable [`TableStream`]; [`Table::scan_spec_par`] pins a
+//! [`TabletSnapshot`] per tablet and fans load-balanced *range chunks*
+//! out across the pool (Accumulo's BatchScanner, minus the lock
+//! contention — workers touch no lock after the pin); and the classic
 //! [`Table::scan`] / [`Table::scan_par`] entry points are thin
 //! consumers of the same stack.
 
 use super::compact::CompactionSpec;
 use super::io::{RealIo, StorageIo};
 use super::run::Run;
+use super::lock::{TrackedMutex, TrackedRwLock};
 use super::scan::{
     self, stack_collect, CellFilter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor,
-    SCAN_BLOCK,
+    SnapCursor, SCAN_BLOCK,
 };
-use super::tablet::Tablet;
+use super::tablet::{Tablet, TabletSnapshot};
 use super::wal::{self, FsyncPolicy, WalOp, WalWriter};
 use super::{SharedStr, StoreError, Triple};
 use crate::assoc::Assoc;
@@ -32,7 +35,7 @@ use std::collections::BTreeSet;
 use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 
 /// WAL file name inside a durable table's directory.
 const WAL_FILE: &str = "wal.log";
@@ -41,6 +44,11 @@ const WAL_FILE: &str = "wal.log";
 /// superseded run drops out of the manifest and its file is deleted by
 /// the orphan GC pass that follows each successful rewrite.
 const MANIFEST_FILE: &str = "MANIFEST";
+/// Manifest line prefix recording one tablet split point, so
+/// [`Table::recover`] restores the tablet layout instead of restarting
+/// as a single tablet that must re-grow its splits from memtable
+/// weight. Split lines precede run lines in the file.
+const SPLIT_PREFIX: &str = "split:";
 
 /// Degradation ladder of a durable table. The table only ever moves
 /// *down* the ladder at runtime (recovery starts a fresh table at
@@ -89,6 +97,10 @@ pub struct HealthReport {
     pub non_durable_writes: u64,
     /// Orphan run files deleted by GC passes on this handle.
     pub orphans_removed: u64,
+    /// Successful WAL reopen probes: times the table climbed back from
+    /// [`TableHealth::DegradedReadOnly`] to [`TableHealth::Healthy`]
+    /// after the storage medium healed.
+    pub wal_reopens: u64,
 }
 
 /// How a durable table talks to storage: the backend, the retry
@@ -162,13 +174,23 @@ pub struct Table {
     name: String,
     config: TableConfig,
     /// Tablets in row order. The `RwLock` guards the tablet *list*
-    /// (splits); each tablet has its own `Mutex` for cell data.
-    tablets: RwLock<Vec<Mutex<Tablet>>>,
+    /// (splits); each tablet has its own `Mutex` for cell data. Both
+    /// are tracked wrappers so tests can assert the snapshot scan path
+    /// acquires zero locks after open.
+    tablets: TrackedRwLock<Vec<TrackedMutex<Tablet>>>,
     /// WAL + directory when the table is durable ([`Table::durable`] /
     /// [`Table::recover`]); `None` for the classic in-memory table.
     durable: Option<DurableState>,
     /// Monotone run-file sequence allocator (also orders runs by age).
     run_seq: AtomicU64,
+    /// Monotone content-version counter, bumped *after* every mutation
+    /// that changes visible cell content (write batches, deletes,
+    /// compactions with a combiner — splits are content-neutral). Open
+    /// streams compare it against the version they pinned at and
+    /// re-pin their snapshots when it moved, which keeps the
+    /// streams-see-concurrent-writes contract without any locking on
+    /// the quiescent path.
+    mutations: AtomicU64,
 }
 
 impl Table {
@@ -178,9 +200,10 @@ impl Table {
         Table {
             name: name.to_string(),
             config,
-            tablets: RwLock::new(vec![Mutex::new(Tablet::new(None, None))]),
+            tablets: TrackedRwLock::new(vec![TrackedMutex::new(Tablet::new(None, None))]),
             durable: None,
             run_seq: AtomicU64::new(0),
+            mutations: AtomicU64::new(0),
         }
     }
 
@@ -277,18 +300,29 @@ impl Table {
         let mut report = HealthReport::default();
         retry.run("create table dir", || io.create_dir_all(dir))?;
 
-        // Manifest → run list, quarantining structural damage.
+        // Manifest → split points + run list, quarantining structural
+        // damage.
         let manifest_path = dir.join(MANIFEST_FILE);
         let mut run_names: Vec<String> = Vec::new();
+        let mut split_rows: Vec<String> = Vec::new();
         if io.exists(&manifest_path) {
             let bytes = retry.run("manifest read", || io.read(&manifest_path))?;
             match String::from_utf8(bytes) {
-                Ok(body) => run_names.extend(
-                    body.lines().map(str::trim).filter(|l| !l.is_empty()).map(String::from),
-                ),
+                Ok(body) => {
+                    for line in body.lines().map(str::trim).filter(|l| !l.is_empty()) {
+                        match line.strip_prefix(SPLIT_PREFIX) {
+                            Some(row) => split_rows.push(row.to_string()),
+                            None => run_names.push(line.to_string()),
+                        }
+                    }
+                }
                 Err(_) => quarantine_file(io, dir, MANIFEST_FILE, &mut report, "not UTF-8"),
             }
         }
+        // A hand-damaged manifest could hold unsorted or duplicate
+        // split lines; normalize so the tablet layout is well-formed.
+        split_rows.sort();
+        split_rows.dedup();
 
         // Load every listed run, quarantining damaged or missing files.
         let mut runs: Vec<Run> = Vec::new();
@@ -339,11 +373,27 @@ impl Table {
         let table = Table::new(name, config);
         table.run_seq.store(max_run_seq, Ordering::SeqCst);
         {
-            // Freshly built table: exactly one unbounded tablet.
-            let tablets = table.tablets.read().unwrap();
-            let mut tab = tablets[0].lock().unwrap();
+            // Restore the persisted tablet layout, then attach each
+            // run to every tablet whose extent it overlaps (post-split
+            // tablets share runs — extents do the pruning at scan
+            // time, exactly as `split_at` leaves them).
+            let mut tablets = table.tablets.write().unwrap();
+            tablets.clear();
+            let mut lo: Option<String> = None;
+            for row in &split_rows {
+                tablets.push(TrackedMutex::new(Tablet::new(lo.take(), Some(row.clone()))));
+                lo = Some(row.clone());
+            }
+            tablets.push(TrackedMutex::new(Tablet::new(lo, None)));
             for run in runs {
-                tab.attach_run(Arc::new(run));
+                let run = Arc::new(run);
+                for t in tablets.iter() {
+                    let mut tab = t.lock().unwrap();
+                    let (start, end) = run.extent_range(tab.lo.as_deref(), tab.hi.as_deref());
+                    if start < end {
+                        tab.attach_run(Arc::clone(&run));
+                    }
+                }
             }
         }
         let mut last_seq = wmax;
@@ -365,10 +415,12 @@ impl Table {
         }
         // Checkpoint replayed state BEFORE truncating the log. The
         // manifest is rewritten whenever it must change: new frozen
-        // runs, or quarantined names to drop from the list.
+        // runs, quarantined names to drop from the list, or a tablet
+        // layout that grew past the persisted split points during
+        // replay.
         let ctx = CheckpointCtx { io, retry, dir };
         let frozen = table.checkpoint_tablets(Some(&ctx), None, last_seq)?;
-        if frozen > 0 || !report.quarantined.is_empty() {
+        if frozen > 0 || !report.quarantined.is_empty() || table.split_points() != split_rows {
             table.write_manifest(&ctx)?;
         }
         // Collect orphans left by crashes, quarantine, or compaction
@@ -402,7 +454,7 @@ impl Table {
     }
 
     /// Index of the tablet whose extent contains `row`.
-    fn locate(tablets: &[Mutex<Tablet>], row: &str) -> usize {
+    fn locate(tablets: &[TrackedMutex<Tablet>], row: &str) -> usize {
         // Binary search on lower bounds: find the last tablet whose
         // lo <= row. Tablets are in row order; the first has lo = None.
         let mut lo = 0usize;
@@ -423,7 +475,7 @@ impl Table {
     /// shared by every scan path. Tablet extents are sorted, so the
     /// walk stops at the first tablet past the set's overall upper
     /// bound; tablets sitting in the gaps between ranges are pruned.
-    fn live_tablets(tablets: &[Mutex<Tablet>], ranges: &[ScanRange]) -> Vec<usize> {
+    fn live_tablets(tablets: &[TrackedMutex<Tablet>], ranges: &[ScanRange]) -> Vec<usize> {
         if ranges.is_empty() {
             return Vec::new();
         }
@@ -494,7 +546,13 @@ impl Table {
                 return self.apply_batch(batch);
             }
             TableHealth::DegradedReadOnly => {
-                return Err(StoreError::Degraded { table: self.name.clone(), state });
+                // Re-probe: the medium may have healed since the table
+                // degraded. A successful WAL reopen climbs back to
+                // Healthy and the write proceeds normally; a failed
+                // probe rejects the write as before.
+                if self.try_reopen_wal(d, &mut wal).is_err() {
+                    return Err(StoreError::Degraded { table: self.name.clone(), state });
+                }
             }
         }
         if !batch.is_empty() {
@@ -539,6 +597,23 @@ impl Table {
         }
     }
 
+    /// Health re-probe from [`TableHealth::DegradedReadOnly`]: try to
+    /// reopen the WAL on its existing path. On success the torn
+    /// never-acknowledged tail is truncated, the table climbs back to
+    /// [`TableHealth::Healthy`], and the caller proceeds with a normal
+    /// append (whose own failure re-degrades via `note_wal_failure`).
+    /// Caller holds the WAL lock; `health` is taken here (lock order:
+    /// wal before health).
+    fn try_reopen_wal(&self, d: &DurableState, wal: &mut WalWriter) -> io::Result<()> {
+        let path = d.dir.join(WAL_FILE);
+        d.retry.run("wal reopen", || wal.reopen(&*d.io, &path))?;
+        let mut health = d.health.lock().unwrap();
+        health.state = TableHealth::Healthy;
+        health.wal_reopens += 1;
+        health.last_error = None;
+        Ok(())
+    }
+
     /// The memtable half of [`Table::write_batch`] (no logging).
     fn apply_batch(&self, batch: Vec<Triple>) -> Result<usize, StoreError> {
         if self.config.write_latency_us > 0 {
@@ -570,6 +645,9 @@ impl Table {
                 }
             }
         }
+        if written > 0 {
+            self.mutations.fetch_add(1, Ordering::Release);
+        }
         self.maybe_split();
         Ok(written)
     }
@@ -584,6 +662,7 @@ impl Table {
                 (t.weight() > self.config.split_threshold).then(|| i)
             })
         };
+        let mut did_split = false;
         if let Some(idx) = needs_split {
             let mut tablets = self.tablets.write().unwrap();
             // Re-check under the write lock.
@@ -596,7 +675,18 @@ impl Table {
                 }
             };
             if let Some(right) = split {
-                tablets.insert(idx + 1, Mutex::new(right));
+                tablets.insert(idx + 1, TrackedMutex::new(right));
+                did_split = true;
+            }
+        }
+        // Persist the new layout (best-effort, after the write guard
+        // drops — `write_manifest` retakes the read lock). A missed
+        // rewrite only costs re-growing this split at recovery, never
+        // data: runs and the WAL carry all cell content.
+        if did_split {
+            if let Some(d) = &self.durable {
+                let ctx = CheckpointCtx { io: &*d.io, retry: &d.retry, dir: &d.dir };
+                let _ = self.write_manifest(&ctx);
             }
         }
     }
@@ -621,13 +711,28 @@ impl Table {
     }
 
     /// Collect a stacked scan with an explicit thread configuration:
-    /// the in-range tablets are resolved once (under the tablet-list
-    /// read lock), split into at most `par.threads` contiguous groups,
-    /// and each worker runs the full stack over its group. Tablets
-    /// split at row boundaries and every stage is per-row, so stitching
-    /// the groups in order is byte-identical to the serial stack — and
-    /// to naive scan-then-filter-then-reduce (`tests/scan_stack.rs`).
+    /// pin a [`TabletSnapshot`] per tablet (the only locking the scan
+    /// ever does), cut the pinned key space into load-balanced *range
+    /// chunks* weighted by per-chunk cell-count estimates, and fan the
+    /// chunks across the pool independent of tablet boundaries —
+    /// Accumulo's BatchScanner fan-out, minus the lock contention.
+    /// Chunks cut at row boundaries and every stage is per-row, so
+    /// stitching them in order is byte-identical to the serial stack —
+    /// and to naive scan-then-filter-then-reduce
+    /// (`tests/scan_stack.rs`), at every thread count and chunk
+    /// granularity.
     pub fn scan_spec_par(&self, spec: &ScanSpec, par: Parallelism) -> Vec<Triple> {
+        self.scan_snapshot(spec).collect(par)
+    }
+
+    /// The pre-snapshot collection path, retained as the bench baseline
+    /// (the `ablations` bench's `--chunk-scale` section) and as a
+    /// reference implementation: resolve the in-range tablets once, split them
+    /// into at most `par.threads` contiguous *tablet groups*, and run
+    /// the full stack over each group through [`SliceCursor`] — which
+    /// re-takes the tablet lock for every block. Byte-identical to
+    /// [`Table::scan_spec_par`] on a quiescent table.
+    pub fn scan_spec_locked_par(&self, spec: &ScanSpec, par: Parallelism) -> Vec<Triple> {
         // Hand-built specs may bypass the builder's sorted invariant;
         // normalize once before pruning (which assumes the order too).
         let ranges = scan::ensure_walk_order(spec.ranges.clone());
@@ -653,11 +758,33 @@ impl Table {
         out
     }
 
+    /// Pin one [`TabletSnapshot`] per tablet, in row order — the
+    /// "scan open" moment. These are the *last* lock acquisitions a
+    /// snapshot scan makes; everything after walks `Arc`-shared
+    /// immutable state.
+    fn pin_all(&self) -> Vec<TabletSnapshot> {
+        let tablets = self.tablets.read().unwrap();
+        tablets.iter().map(|t| t.lock().unwrap().snapshot()).collect()
+    }
+
+    /// Open a pinned snapshot scan: the tablet states are frozen here,
+    /// and [`SnapshotScan::collect`] / [`SnapshotScan::stream`] serve
+    /// exactly the table content at this moment regardless of
+    /// concurrent writes, deletes, compactions, or splits.
+    pub fn scan_snapshot(&self, spec: &ScanSpec) -> SnapshotScan {
+        // Hand-built specs may bypass the builder's sorted invariant;
+        // normalize once (the chunker and cursors assume the order).
+        let ranges = scan::ensure_walk_order(spec.ranges.clone());
+        let snaps = self.pin_all();
+        SnapshotScan { snaps, spec: ScanSpec { ranges, ..spec.clone() } }
+    }
+
     /// Open a streaming, seekable scan over this table — the stack as
-    /// an iterator. Holds no lock between blocks (the cursor re-locates
-    /// its tablet by key on every refill), so the stream stays valid
-    /// across concurrent writes and tablet splits, and backward seeks
-    /// are allowed.
+    /// an iterator. The cursor walks pinned snapshots and re-pins only
+    /// when the table's content version moved (holding no lock between
+    /// blocks on a quiescent table), so the stream stays valid across
+    /// concurrent writes and tablet splits, sees their effects at
+    /// block granularity, and allows backward seeks.
     pub fn scan_stream(&self, spec: ScanSpec) -> TableStream<'_> {
         TableStream::new(self, spec)
     }
@@ -690,7 +817,10 @@ impl Table {
                 return Ok(self.apply_delete(row, col));
             }
             TableHealth::DegradedReadOnly => {
-                return Err(StoreError::Degraded { table: self.name.clone(), state });
+                // Same re-probe as `write_batch`: reopen-or-reject.
+                if self.try_reopen_wal(d, &mut wal).is_err() {
+                    return Err(StoreError::Degraded { table: self.name.clone(), state });
+                }
             }
         }
         if let Err(e) = d.retry.run("wal append", || wal.append_delete(row, col)) {
@@ -702,10 +832,16 @@ impl Table {
 
     /// The memtable half of [`Table::delete`] (no logging).
     fn apply_delete(&self, row: &str, col: &str) -> bool {
-        let tablets = self.tablets.read().unwrap();
-        let idx = Self::locate(&tablets, row);
-        let mut tab = tablets[idx].lock().unwrap();
-        tab.delete(row, col)
+        let hit = {
+            let tablets = self.tablets.read().unwrap();
+            let idx = Self::locate(&tablets, row);
+            let mut tab = tablets[idx].lock().unwrap();
+            tab.delete(row, col)
+        };
+        if hit {
+            self.mutations.fetch_add(1, Ordering::Release);
+        }
+        hit
     }
 
     /// Total stored cells across tablets.
@@ -877,25 +1013,44 @@ impl Table {
             }
             written += 1;
         }
+        // A compaction can change visible content (a combiner folds
+        // versions, retention drops them, tombstones are consumed), so
+        // open streams must re-pin their snapshots.
+        self.mutations.fetch_add(1, Ordering::Release);
         Ok(written)
     }
 
-    /// Rewrite the manifest to the set of currently attached run files
-    /// (post-split tablets share runs; the `BTreeSet` dedups). Written
-    /// atomically (temp + fsync + rename), so readers see old-or-new,
-    /// never a torn list.
+    /// Rewrite the manifest: the tablet split points (`split:` lines,
+    /// so recovery restores the layout) followed by the set of
+    /// currently attached run files (post-split tablets share runs;
+    /// the `BTreeSet` dedups). Written atomically (temp + fsync +
+    /// rename), so readers see old-or-new, never a torn list.
     fn write_manifest(&self, ctx: &CheckpointCtx<'_>) -> io::Result<()> {
         let mut names: BTreeSet<u64> = BTreeSet::new();
+        let mut splits: Vec<String> = Vec::new();
         {
             let tablets = self.tablets.read().unwrap();
             for t in tablets.iter() {
                 let tab = t.lock().unwrap();
+                if let Some(lo) = &tab.lo {
+                    splits.push(lo.clone());
+                }
                 for run in tab.runs() {
                     names.insert(run.seq());
                 }
             }
         }
         let mut body = String::new();
+        for row in splits {
+            if row.contains('\n') {
+                // Not line-representable; recovery re-grows this split
+                // from memtable weight instead.
+                continue;
+            }
+            body.push_str(SPLIT_PREFIX);
+            body.push_str(&row);
+            body.push('\n');
+        }
         for seq in names {
             body.push_str(&run_file_name(seq));
             body.push('\n');
@@ -915,7 +1070,10 @@ impl Table {
         let mut live: BTreeSet<String> = BTreeSet::new();
         if let Ok(bytes) = ctx.io.read(&ctx.dir.join(MANIFEST_FILE)) {
             if let Ok(body) = String::from_utf8(bytes) {
-                let names = body.lines().map(str::trim).filter(|l| !l.is_empty());
+                let names = body
+                    .lines()
+                    .map(str::trim)
+                    .filter(|l| !l.is_empty() && !l.starts_with(SPLIT_PREFIX));
                 live.extend(names.map(String::from));
             }
         }
@@ -1032,6 +1190,160 @@ impl Table {
     }
 }
 
+/// A pinned, lock-free scan over a [`Table`]: one [`TabletSnapshot`]
+/// per tablet, captured at [`Table::scan_snapshot`] time. Collection
+/// and streaming walk the pinned `Arc`-shared state only — zero lock
+/// acquisitions after open — so the scan serves exactly the table
+/// content at open regardless of concurrent writes, deletes,
+/// compactions, or splits (Accumulo's scan-time isolation).
+pub struct SnapshotScan {
+    snaps: Vec<TabletSnapshot>,
+    spec: ScanSpec,
+}
+
+impl SnapshotScan {
+    /// Cut-row candidates sampled per run / frozen memtable when
+    /// building load-balanced range chunks.
+    const CHUNK_SAMPLES: usize = 8;
+
+    /// Collect the pinned scan. Serial configurations run the plain
+    /// stack; parallel ones cut the pinned key space into
+    /// weight-balanced range chunks (cell-count estimates from the
+    /// snapshots) and fan them across the pool, independent of tablet
+    /// boundaries — then stitch in range order. Chunks cut at row
+    /// boundaries and every stack stage is per-row, so the result is
+    /// byte-identical at every thread count and chunk granularity.
+    pub fn collect(&self, par: Parallelism) -> Vec<Triple> {
+        if par.is_serial() {
+            return self.collect_serial();
+        }
+        let spans = self.chunk_spans(&par);
+        if spans.len() <= 1 {
+            return self.collect_serial();
+        }
+        let parts: Vec<Vec<Triple>> =
+            parallel_map_ranges((0..spans.len()).map(|i| i..i + 1).collect(), |r| {
+                let (lo, hi) = &spans[r.start];
+                let ranges = scan::clamp_ranges(&self.spec.ranges, lo.as_deref(), hi.as_deref());
+                let base = SnapCursor::new(&self.snaps, ranges, self.spec.filters.clone());
+                stack_collect(base, &self.spec)
+            });
+        let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+        for part in parts {
+            out.extend(part);
+        }
+        out
+    }
+
+    fn collect_serial(&self) -> Vec<Triple> {
+        let base =
+            SnapCursor::new(&self.snaps, self.spec.ranges.clone(), self.spec.filters.clone());
+        stack_collect(base, &self.spec)
+    }
+
+    /// Stream the pinned scan through the full stack (filters →
+    /// combiner), one triple at a time, with zero lock acquisitions —
+    /// unlike [`Table::scan_stream`] this never observes concurrent
+    /// mutations, by design.
+    pub fn stream(&self) -> SnapshotStream<'_> {
+        let base =
+            SnapCursor::new(&self.snaps, self.spec.ranges.clone(), self.spec.filters.clone());
+        SnapshotStream { inner: ReduceIter::new(base, self.spec.reduce.clone()) }
+    }
+
+    /// Build the chunk spans `[lo, hi)` (row bounds, `None` = open):
+    /// candidate cut rows come from tablet boundaries, range lower
+    /// bounds, and evenly-strided sample rows out of each snapshot;
+    /// each inter-cut interval is weighted by its estimated cell count
+    /// and the weighted chunker balances them across `par.threads`.
+    fn chunk_spans(&self, par: &Parallelism) -> Vec<(Option<String>, Option<String>)> {
+        let mut cands: Vec<String> = Vec::new();
+        for snap in &self.snaps {
+            if let Some(lo) = &snap.lo {
+                cands.push(lo.clone());
+            }
+            snap.sample_rows(Self::CHUNK_SAMPLES, &mut cands);
+        }
+        for r in &self.spec.ranges {
+            if let Some(lo) = &r.lo {
+                cands.push(lo.clone());
+            }
+        }
+        // Snap each candidate onto the range set (a cut row in a gap
+        // between ranges would only mint an empty chunk) and dedup.
+        let mut cuts: BTreeSet<String> = BTreeSet::new();
+        for c in cands {
+            if let Some(s) = scan::snap_row(&self.spec.ranges, &c) {
+                cuts.insert(s.to_string());
+            }
+        }
+        let mut bounds: Vec<(Option<String>, Option<String>)> = Vec::new();
+        let mut lo: Option<String> = None;
+        for c in cuts {
+            bounds.push((lo.take(), Some(c.clone())));
+            lo = Some(c);
+        }
+        bounds.push((lo, None));
+        // Cell-count estimates ignore range/filter selectivity — they
+        // only balance load, never affect results.
+        let mut cum: Vec<usize> = vec![0];
+        for (blo, bhi) in &bounds {
+            let mut w = 0usize;
+            for snap in &self.snaps {
+                let upto = snap.cells_upto(bhi.as_deref());
+                let below = blo.as_deref().map_or(0, |b| snap.cells_upto(Some(b)));
+                w += upto.saturating_sub(below);
+            }
+            cum.push(cum.last().unwrap() + w);
+        }
+        par.chunk_ranges_weighted(&cum)
+            .into_iter()
+            .map(|r| (bounds[r.start].0.clone(), bounds[r.end - 1].1.clone()))
+            .collect()
+    }
+}
+
+/// A streaming stacked scan over a [`SnapshotScan`]'s pinned state:
+/// the full iterator stack pulled one triple at a time, acquiring no
+/// lock at any point. Implements both [`ScanIter`] (seek + next) and
+/// [`Iterator`].
+pub struct SnapshotStream<'s> {
+    inner: ReduceIter<SnapCursor<'s>>,
+}
+
+impl ScanIter for SnapshotStream<'_> {
+    fn seek(&mut self, row: &str, col: &str) {
+        self.inner.seek(row, col);
+    }
+
+    fn next_triple(&mut self) -> Option<Triple> {
+        self.inner.next_triple()
+    }
+}
+
+impl Iterator for SnapshotStream<'_> {
+    type Item = Triple;
+
+    fn next(&mut self) -> Option<Triple> {
+        self.inner.next_triple()
+    }
+}
+
+/// Index of the snapshot whose extent contains `row` — the lock-free
+/// mirror of [`Table::locate`] (same binary search on lower bounds).
+fn locate_snap(snaps: &[TabletSnapshot], row: &str) -> usize {
+    let mut lo = 0usize;
+    let mut hi = snaps.len();
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        match snaps[mid].lo.as_deref() {
+            Some(bound) if row < bound => hi = mid,
+            _ => lo = mid,
+        }
+    }
+    lo
+}
+
 /// Run file name for a run sequence number (zero-padded so manifests
 /// and directory listings sort by age).
 fn run_file_name(seq: u64) -> String {
@@ -1070,13 +1382,23 @@ fn quarantine_file(
 /// [`ScanSpec::batch`] hint overrides this starting size per stream.
 const STREAM_BLOCK_MIN: usize = 64;
 
-/// The base cursor of a [`TableStream`]: a block cursor that re-locates
-/// its tablet *by key* on every refill instead of pinning the tablet
-/// list, so it holds no table lock between blocks and survives
-/// concurrent splits (Accumulo scanners re-resolve tablet locations the
-/// same way). Spec filters are evaluated beneath the tablet block copy.
+/// The base cursor of a [`TableStream`]: a block cursor over pinned
+/// [`TabletSnapshot`]s that re-locates its snapshot *by key* on every
+/// refill, so it takes zero locks between blocks on a quiescent table
+/// and survives concurrent splits (Accumulo scanners re-resolve tablet
+/// locations the same way). A content-version check at each refill
+/// re-pins the snapshots when the table mutated, so concurrent
+/// writes, deletes and compactions still become visible at block
+/// granularity — the interleaving contract the old lock-per-block
+/// cursor gave, now paid for only when something actually changed.
+/// Spec filters are evaluated beneath the snapshot block copy.
 struct TableCursor<'a> {
     table: &'a Table,
+    /// Pinned per-tablet snapshots (refreshed when `version` lags the
+    /// table's mutation counter).
+    snaps: Vec<TabletSnapshot>,
+    /// The table's mutation-counter value the pins were taken at.
+    version: u64,
     /// Sorted, coalesced range set (empty = scan nothing).
     ranges: Vec<ScanRange>,
     /// The set's overall exclusive row upper bound (`None` = +∞).
@@ -1103,8 +1425,10 @@ impl<'a> TableCursor<'a> {
         let ranges = scan::ensure_walk_order(ranges);
         let done = ranges.is_empty();
         let set_hi = if done { None } else { scan::ranges_row_hi(&ranges).map(String::from) };
-        TableCursor {
+        let mut cur = TableCursor {
             table,
+            snaps: Vec::new(),
+            version: 0,
             ranges,
             set_hi,
             filters,
@@ -1113,20 +1437,34 @@ impl<'a> TableCursor<'a> {
             done,
             block: block_min,
             block_min,
-        }
+        };
+        cur.pin();
+        cur
+    }
+
+    /// (Re-)pin the per-tablet snapshots. The version is read *before*
+    /// the pins: a write landing mid-pin leaves the stored version
+    /// stale, forcing one extra (harmless) re-pin at the next refill —
+    /// never a missed refresh.
+    fn pin(&mut self) {
+        let version = self.table.mutations.load(Ordering::Acquire);
+        self.snaps = self.table.pin_all();
+        self.version = version;
     }
 
     fn refill(&mut self) {
         self.buf.clear();
-        // Both locks (tablet-list read lock, tablet mutex) are taken
-        // and released per iteration, so writers and splits interleave
-        // even when a selective filter needs several all-rejected
-        // blocks to find the next match.
+        // The walk touches only pinned snapshots; the version check is
+        // a single atomic load, so a quiescent table is streamed with
+        // zero lock acquisitions after open.
         loop {
+            if self.table.mutations.load(Ordering::Acquire) != self.version {
+                self.pin();
+            }
             // Snap the position onto the range set first, so a resume
             // key sitting in a gap between ranges locates the next
-            // range's tablet directly instead of walking every tablet
-            // under the gap.
+            // range's snapshot directly instead of walking every
+            // snapshot under the gap.
             let snapped: Option<Option<(SharedStr, SharedStr)>> = {
                 let pos_row = match &self.resume {
                     Some((r, _, _)) => r.as_str(),
@@ -1149,15 +1487,15 @@ impl<'a> TableCursor<'a> {
                 Some(Some((row, col))) => self.resume = Some((row, col, true)),
                 Some(None) => {}
             }
-            let tablets = self.table.tablets.read().unwrap();
             let pos_row = match &self.resume {
                 Some((r, _, _)) => r.as_str(),
                 None => self.ranges[0].lo.as_deref().unwrap_or(""),
             };
-            let idx = Table::locate(&tablets, pos_row);
-            let tab = tablets[idx].lock().unwrap();
-            // The located tablet starts at or past the set's end: done.
-            if let (Some(hi), Some(tlo)) = (self.set_hi.as_deref(), tab.lo.as_deref()) {
+            let idx = locate_snap(&self.snaps, pos_row);
+            let snap = &self.snaps[idx];
+            // The located snapshot starts at or past the set's end:
+            // done.
+            if let (Some(hi), Some(tlo)) = (self.set_hi.as_deref(), snap.lo.as_deref()) {
                 if tlo >= hi {
                     self.done = true;
                     return;
@@ -1165,7 +1503,7 @@ impl<'a> TableCursor<'a> {
             }
             let from = self.resume.as_ref().map(|(r, c, inc)| (r.as_str(), c.as_str(), *inc));
             let more =
-                tab.scan_block(from, &self.ranges, &self.filters, self.block, &mut self.buf);
+                snap.scan_block(from, &self.ranges, &self.filters, self.block, &mut self.buf);
             if let Some((row, col)) = more {
                 self.resume = Some((row, col, false));
                 if !self.buf.is_empty() {
@@ -1173,20 +1511,21 @@ impl<'a> TableCursor<'a> {
                     self.buf.reverse();
                     return;
                 }
-                // Examined cap fired on an all-rejected block: release
-                // the locks and keep scanning from the resume key.
+                // Examined cap fired on an all-rejected block: yield
+                // (version check, snapshot refresh point) and keep
+                // scanning from the resume key.
                 continue;
             }
-            // This tablet is done for the range set — move to the next
-            // one immediately (no extra lock round trip for a partial
-            // final block) or finish the stream.
-            match tab.hi.clone() {
+            // This snapshot is done for the range set — move to the
+            // next one immediately (no extra refill round trip for a
+            // partial final block) or finish the stream.
+            match snap.hi.clone() {
                 None => self.done = true,
                 Some(hi) => {
                     if self.set_hi.as_deref().is_some_and(|rhi| hi.as_str() >= rhi) {
                         self.done = true;
                     } else {
-                        // Continue at the next tablet's first key.
+                        // Continue at the next snapshot's first key.
                         self.resume = Some((hi.into(), "".into(), true));
                     }
                 }
@@ -1645,5 +1984,54 @@ mod tests {
         assert!(got.windows(2).all(|w| w[0] < w[1]), "stream stays sorted");
         assert_eq!(got.iter().filter(|t| t.row.starts_with("zz")).count(), 40);
         assert_eq!(got.len(), 60);
+    }
+
+    #[test]
+    fn recovery_restores_split_layout() {
+        let dir = temp_dir("splits");
+        let cfg = TableConfig { split_threshold: 64, write_latency_us: 0 };
+        let (expect, splits) = {
+            let t = Table::durable("t", cfg.clone(), &dir, FsyncPolicy::Never).unwrap();
+            t.write_batch(batch(80)).unwrap();
+            assert!(t.tablet_count() > 1);
+            t.minor_compact().unwrap();
+            (t.scan(ScanRange::all()), t.split_points())
+        };
+        let r = Table::recover("t", cfg, &dir, FsyncPolicy::Never).unwrap();
+        assert_eq!(r.split_points(), splits, "tablet layout restored from manifest");
+        assert_eq!(r.tablet_count(), splits.len() + 1);
+        assert_eq!(r.scan(ScanRange::all()), expect);
+        // Post-recovery writes route into the restored layout.
+        r.write_batch(vec![Triple::new("row0500", "c", "v")]).unwrap();
+        assert_eq!(r.get("row0500", "c"), Some("v".into()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_scan_matches_locked_and_is_isolated() {
+        let t = small_table();
+        t.write_batch(batch(100)).unwrap();
+        assert!(t.tablet_count() > 1);
+        let spec = ScanSpec::all();
+        let pinned = t.scan_snapshot(&spec);
+        let expect = t.scan_spec_locked_par(&spec, Parallelism::serial());
+        assert_eq!(expect.len(), 100);
+        // Bit-identical at every thread count / chunk granularity.
+        for threads in [1usize, 2, 4, 7] {
+            assert_eq!(
+                pinned.collect(Parallelism::with_threads(threads)),
+                expect,
+                "threads={threads}"
+            );
+        }
+        let streamed: Vec<Triple> = pinned.stream().collect();
+        assert_eq!(streamed, expect);
+        // Mutations after the pin are invisible to the snapshot...
+        t.write_batch(vec![Triple::new("zzz", "c", "v")]).unwrap();
+        assert!(t.delete("row0000", "c").unwrap());
+        assert_eq!(pinned.collect(Parallelism::with_threads(4)), expect);
+        assert_eq!(pinned.stream().collect::<Vec<Triple>>(), expect);
+        // ...but a fresh scan sees them.
+        assert_eq!(t.scan_spec_par(&spec, Parallelism::with_threads(4)).len(), 100);
     }
 }

@@ -40,6 +40,13 @@ pub struct Tablet {
     /// open scans pin a snapshot. Reads clamp each run to the tablet's
     /// extent so post-split children never double-serve cells.
     runs: Vec<Arc<Run>>,
+    /// Cached frozen image of the memtable + tombstones (the sorted
+    /// cell list [`Tablet::freeze_cells`] builds), shared into
+    /// [`TabletSnapshot`]s so pinning a quiescent tablet is a handful
+    /// of `Arc` clones. Invalidated by every mutation of the memtable
+    /// *or* the run stack (run presence decides tombstone retention in
+    /// the image).
+    frozen_mem: Option<Arc<Vec<RunCell>>>,
     weight: usize,
     /// Failure-injection flag: an offline tablet rejects *writes*
     /// (`Table::write_batch` errors). Reads, scans, and compactions are
@@ -66,6 +73,7 @@ impl Tablet {
     /// are shadowed, not read back).
     pub fn put(&mut self, t: Triple) -> Option<SharedStr> {
         debug_assert!(self.contains(&t.row), "triple routed to wrong tablet");
+        self.frozen_mem = None;
         if !self.deletes.is_empty() {
             // A new write un-deletes the key (pointer-clone probe).
             self.deletes.remove(&(t.row.clone(), t.col.clone()));
@@ -108,6 +116,7 @@ impl Tablet {
     /// only the memtable entry would resurrect any run-resident value
     /// beneath it, so when runs hold the key a tombstone is recorded.
     pub fn delete(&mut self, row: &str, col: &str) -> bool {
+        self.frozen_mem = None;
         let had_mem = if let Some(v) = self.entries.remove(&(row.into(), col.into())) {
             self.weight -= row.len() + col.len() + v.len();
             true
@@ -174,125 +183,7 @@ impl Tablet {
         limit: usize,
         out: &mut Vec<Triple>,
     ) -> Option<(SharedStr, SharedStr)> {
-        debug_assert!(limit > 0, "scan_block needs room to make progress");
-        // The walk's monotonic range advance and gap hops assume the
-        // set is sorted by row lower bound — hand-built `ScanSpec`s
-        // that bypass `ScanSpec::ranges()` would otherwise silently
-        // drop cells.
-        debug_assert!(
-            ranges.windows(2).all(|w| w[0].lo <= w[1].lo),
-            "scan_block needs a lo-sorted range set (build specs via ScanSpec::ranges)"
-        );
-        if ranges.is_empty() {
-            return None;
-        }
-        let examine_cap = limit.max(scan::SCAN_BLOCK);
-        let mut start: Bound<(SharedStr, SharedStr)> = match from {
-            Some((r, c, true)) => Bound::Included((r.into(), c.into())),
-            Some((r, c, false)) => Bound::Excluded((r.into(), c.into())),
-            None => match ranges[0].lo.as_deref() {
-                Some(lo) => Bound::Included((lo.into(), scan::start_col(ranges, lo).into())),
-                None => Bound::Unbounded,
-            },
-        };
-        // First range whose row span may still lie ahead; rows only
-        // move forward, so this never rewinds.
-        let mut ri = 0usize;
-        let mut emitted = 0usize;
-        let mut examined = 0usize;
-        loop {
-            // Re-seeks happen when a row's column windows close or the
-            // walk falls in a gap between ranges (cells the reseek
-            // jumps over are never examined). The walk itself runs over
-            // the merged view: memtable over tombstones over runs
-            // (newest run wins), so a block is the same sorted stream a
-            // pure-memtable tablet would serve.
-            let mut reseek: Option<(SharedStr, SharedStr)> = None;
-            let mut merged = Merged::new(self, start);
-            while let Some((r, c, v)) = merged.next() {
-                while ri < ranges.len()
-                    && ranges[ri].hi.as_deref().is_some_and(|hi| r.as_str() >= hi)
-                {
-                    ri += 1;
-                }
-                if ri == ranges.len() {
-                    // Past every range: exhausted.
-                    return None;
-                }
-                examined += 1;
-                if let Some(lo) = ranges[ri].lo.as_deref() {
-                    if r.as_str() < lo {
-                        // In the gap before the next range: hop to its
-                        // start beneath the copy.
-                        if examined >= examine_cap {
-                            return Some((r.clone(), c.clone()));
-                        }
-                        reseek = Some((lo.into(), scan::start_col(&ranges[ri..], lo).into()));
-                        break;
-                    }
-                }
-                // The row is inside at least one range. Column
-                // decision over every range containing it: in any
-                // window → candidate; below every open window → hop to
-                // the nearest window start; past them all → next row.
-                let mut in_window = false;
-                let mut next_col: Option<&str> = None;
-                for rg in &ranges[ri..] {
-                    if rg.lo.as_deref().is_some_and(|lo| r.as_str() < lo) {
-                        break;
-                    }
-                    if rg.hi.as_deref().is_some_and(|hi| r.as_str() >= hi) {
-                        continue;
-                    }
-                    let below = rg.col_lo.as_deref().is_some_and(|cl| c.as_str() < cl);
-                    let above = rg.col_hi.as_deref().is_some_and(|ch| c.as_str() >= ch);
-                    if !below && !above {
-                        in_window = true;
-                        break;
-                    }
-                    if below {
-                        let cl = rg.col_lo.as_deref().expect("below implies a lower bound");
-                        if next_col.is_none_or(|n| cl < n) {
-                            next_col = Some(cl);
-                        }
-                    }
-                }
-                if !in_window {
-                    if examined >= examine_cap {
-                        // The cap bounds window-skip and gap walks too:
-                        // a reseek-per-row stride must not extend this
-                        // lock hold.
-                        return Some((r.clone(), c.clone()));
-                    }
-                    match next_col {
-                        // A window opens later in this row.
-                        Some(nc) => reseek = Some((r.clone(), nc.into())),
-                        // Every window on this row is done: jump to the
-                        // next row's window start.
-                        None => {
-                            let mut next_row = r.to_string();
-                            next_row.push('\0');
-                            let col = scan::start_col(&ranges[ri..], &next_row);
-                            reseek = Some((next_row.into(), col.into()));
-                        }
-                    }
-                    break;
-                }
-                // Rejected beneath the copy: no allocation.
-                if filters.iter().all(|f| f.matches_parts(r, c, v)) {
-                    out.push(Triple { row: r.clone(), col: c.clone(), val: v.clone() });
-                    emitted += 1;
-                }
-                if emitted == limit || examined >= examine_cap {
-                    // Caller resumes after the last examined key.
-                    return Some((r.clone(), c.clone()));
-                }
-            }
-            match reseek {
-                Some(key) => start = Bound::Included(key),
-                None => return None,
-            }
-        }
+        walk_block(|start| Merged::new(self, start), from, ranges, filters, limit, out)
     }
 
     /// Number of *visible* cells. With no runs this is the memtable
@@ -349,6 +240,7 @@ impl Tablet {
     /// extent clamping keeps each child serving only its half of every
     /// run.
     pub fn split_at(&mut self, row: &str) -> Tablet {
+        self.frozen_mem = None;
         let right_entries: BTreeMap<(SharedStr, SharedStr), SharedStr> =
             self.entries.split_off(&(row.into(), "".into()));
         let right_deletes = self.deletes.split_off(&(row.into(), "".into()));
@@ -361,6 +253,7 @@ impl Tablet {
             entries: right_entries,
             deletes: right_deletes,
             runs: self.runs.clone(),
+            frozen_mem: None,
             weight: right_weight,
             offline: false,
         };
@@ -377,6 +270,9 @@ impl Tablet {
     /// memtable — the recovery path ([`super::Table::recover`] loads
     /// run files oldest-to-newest and stacks them here).
     pub(crate) fn attach_run(&mut self, run: Arc<Run>) {
+        // Run presence decides whether the frozen image keeps
+        // tombstones, so the layer change invalidates the cache too.
+        self.frozen_mem = None;
         self.runs.push(run);
     }
 
@@ -417,6 +313,7 @@ impl Tablet {
     /// commit half of a freeze — call only after the frozen run has
     /// been durably persisted (or when provably empty).
     fn clear_memtable(&mut self) {
+        self.frozen_mem = None;
         self.entries.clear();
         self.deletes.clear();
         self.weight = 0;
@@ -481,7 +378,7 @@ impl Tablet {
     /// freeze. `seq` names the run; `watermark` is the WAL sequence
     /// number its contents cover. In-memory path: build and commit in
     /// one step (durable tables persist between the two halves via
-    /// [`Tablet::freeze_cells`] / [`Tablet::complete_freeze`]).
+    /// `Tablet::freeze_cells` / `Tablet::complete_freeze`).
     pub fn freeze(&mut self, seq: u64, watermark: u64) -> Option<Arc<Run>> {
         let cells = self.freeze_cells();
         if cells.is_empty() {
@@ -520,6 +417,272 @@ impl Tablet {
         let mem = usize::from(self.entries.contains_key(&(row.into(), col.into())))
             + usize::from(self.deletes.contains(&(row.into(), col.into())));
         mem + self.runs.iter().map(|run| run.versions(row, col)).sum::<usize>()
+    }
+
+    /// Pin the tablet's current state as an immutable
+    /// [`TabletSnapshot`]: the run stack is `Arc`-cloned, and the
+    /// memtable (entries + tombstones) is frozen into a shared sorted
+    /// cell list. The frozen image is cached on the tablet, so pinning
+    /// a tablet that hasn't been written since the last pin is a
+    /// handful of `Arc` clones — the common case for scan-heavy
+    /// workloads. Mutations invalidate the cache; they never touch an
+    /// already-pinned snapshot.
+    pub(crate) fn snapshot(&mut self) -> TabletSnapshot {
+        let mem = if self.entries.is_empty() && self.deletes.is_empty() {
+            None
+        } else {
+            if self.frozen_mem.is_none() {
+                self.frozen_mem = Some(Arc::new(self.freeze_cells()));
+            }
+            self.frozen_mem.clone()
+        };
+        TabletSnapshot {
+            lo: self.lo.clone(),
+            hi: self.hi.clone(),
+            runs: self.runs.clone(),
+            mem,
+        }
+    }
+}
+
+/// An immutable, cheaply-clonable image of one tablet's state at pin
+/// time: the `Arc`-shared run stack plus a frozen sorted image of the
+/// memtable and its tombstones. Scans over a snapshot
+/// (`TabletSnapshot::scan_block`) serve exactly what the tablet
+/// served at pin time and acquire **no locks** — writers, splits, and
+/// compactions mutate the live tablet without disturbing pinned
+/// snapshots (the Accumulo scan-time isolation contract).
+#[derive(Debug, Clone)]
+pub struct TabletSnapshot {
+    /// Inclusive lower row bound at pin time (`None` = -∞).
+    pub lo: Option<String>,
+    /// Exclusive upper row bound at pin time (`None` = +∞).
+    pub hi: Option<String>,
+    runs: Vec<Arc<Run>>,
+    /// Frozen memtable image (sorted, tombstones as `None` values), or
+    /// `None` when the memtable was empty at pin time.
+    mem: Option<Arc<Vec<RunCell>>>,
+}
+
+impl TabletSnapshot {
+    /// Lock-free equivalent of [`Tablet::scan_block`] over the pinned
+    /// state — same contract (resume keys, range hops, column windows,
+    /// filter pushdown, examined-cells yield discipline), same shared
+    /// walk engine, zero lock acquisitions.
+    pub(crate) fn scan_block(
+        &self,
+        from: Option<(&str, &str, bool)>,
+        ranges: &[ScanRange],
+        filters: &[CellFilter],
+        limit: usize,
+        out: &mut Vec<Triple>,
+    ) -> Option<(SharedStr, SharedStr)> {
+        walk_block(|start| LayerMerge::new(self, start), from, ranges, filters, limit, out)
+    }
+
+    /// Estimated number of stored cells with row `< row` (`None` = all
+    /// cells) — the load-balancing weight for per-range-chunk fan-out.
+    /// Counts stored (not visible) cells: shadowed versions and
+    /// tombstones inflate the estimate slightly, which only skews chunk
+    /// weights, never results.
+    pub(crate) fn cells_upto(&self, row: Option<&str>) -> usize {
+        let mut n = 0;
+        for run in &self.runs {
+            let (start, end) = run.extent_range(self.lo.as_deref(), self.hi.as_deref());
+            let cut = match row {
+                Some(rw) => run.extent_range(self.lo.as_deref(), Some(rw)).1.clamp(start, end),
+                None => end,
+            };
+            n += cut - start;
+        }
+        if let Some(mem) = &self.mem {
+            n += match row {
+                Some(rw) => mem.partition_point(|(r, _, _)| r.as_str() < rw),
+                None => mem.len(),
+            };
+        }
+        n
+    }
+
+    /// Append up to `per_run - 1` evenly-strided row keys from each
+    /// layer to `out` — candidate cut points for range chunking.
+    /// Samples fall strictly inside the layer's extent, so every
+    /// returned row is a valid half-open boundary.
+    pub(crate) fn sample_rows(&self, per_run: usize, out: &mut Vec<String>) {
+        if per_run < 2 {
+            return;
+        }
+        for run in &self.runs {
+            let (start, end) = run.extent_range(self.lo.as_deref(), self.hi.as_deref());
+            let n = end - start;
+            for j in 1..per_run {
+                let idx = start + n * j / per_run;
+                if idx > start && idx < end {
+                    out.push(run.key(idx).0.as_str().to_string());
+                }
+            }
+        }
+        if let Some(mem) = &self.mem {
+            let n = mem.len();
+            for j in 1..per_run {
+                let idx = n * j / per_run;
+                if idx > 0 && idx < n {
+                    out.push(mem[idx].0.as_str().to_string());
+                }
+            }
+        }
+    }
+}
+
+/// A merged forward walk over some layered cell source, yielding
+/// visible cells in `(row, col)` order with lifetime `'t` borrows into
+/// the underlying storage. The two implementors are [`Merged`] (live
+/// tablet: `BTreeMap` memtable + tombstone set + runs) and
+/// [`LayerMerge`] (pinned [`TabletSnapshot`]: frozen memtable image +
+/// runs). [`walk_block`] is generic over this trait, so the live
+/// locked path and the lock-free snapshot path share one block-walk
+/// engine — every range-hop/window/filter/cap behavior is identical by
+/// construction.
+trait MergeWalk<'t> {
+    /// Next visible cell, or `None` when every layer is exhausted.
+    fn next(&mut self) -> Option<(&'t SharedStr, &'t SharedStr, &'t SharedStr)>;
+}
+
+/// The block-walk engine shared by [`Tablet::scan_block`] and
+/// [`TabletSnapshot::scan_block`]: copy up to `limit` in-range,
+/// filter-passing cells into `out`, resuming from `from` (or the
+/// range-set start). `make` builds a fresh merged walk from a start
+/// bound — called once up front and again after each internal re-seek
+/// (column-window hop or inter-range gap hop). See
+/// [`Tablet::scan_block`] for the full contract; this function *is*
+/// that contract, for both walk sources.
+fn walk_block<'t, M: MergeWalk<'t>>(
+    make: impl Fn(Bound<(SharedStr, SharedStr)>) -> M,
+    from: Option<(&str, &str, bool)>,
+    ranges: &[ScanRange],
+    filters: &[CellFilter],
+    limit: usize,
+    out: &mut Vec<Triple>,
+) -> Option<(SharedStr, SharedStr)> {
+    debug_assert!(limit > 0, "scan_block needs room to make progress");
+    // The walk's monotonic range advance and gap hops assume the
+    // set is sorted by row lower bound — hand-built `ScanSpec`s
+    // that bypass `ScanSpec::ranges()` would otherwise silently
+    // drop cells.
+    debug_assert!(
+        ranges.windows(2).all(|w| w[0].lo <= w[1].lo),
+        "scan_block needs a lo-sorted range set (build specs via ScanSpec::ranges)"
+    );
+    if ranges.is_empty() {
+        return None;
+    }
+    let examine_cap = limit.max(scan::SCAN_BLOCK);
+    let mut start: Bound<(SharedStr, SharedStr)> = match from {
+        Some((r, c, true)) => Bound::Included((r.into(), c.into())),
+        Some((r, c, false)) => Bound::Excluded((r.into(), c.into())),
+        None => match ranges[0].lo.as_deref() {
+            Some(lo) => Bound::Included((lo.into(), scan::start_col(ranges, lo).into())),
+            None => Bound::Unbounded,
+        },
+    };
+    // First range whose row span may still lie ahead; rows only
+    // move forward, so this never rewinds.
+    let mut ri = 0usize;
+    let mut emitted = 0usize;
+    let mut examined = 0usize;
+    loop {
+        // Re-seeks happen when a row's column windows close or the
+        // walk falls in a gap between ranges (cells the reseek
+        // jumps over are never examined). The walk itself runs over
+        // the merged view: memtable over tombstones over runs
+        // (newest run wins), so a block is the same sorted stream a
+        // pure-memtable tablet would serve.
+        let mut reseek: Option<(SharedStr, SharedStr)> = None;
+        let mut merged = make(start);
+        while let Some((r, c, v)) = merged.next() {
+            while ri < ranges.len()
+                && ranges[ri].hi.as_deref().is_some_and(|hi| r.as_str() >= hi)
+            {
+                ri += 1;
+            }
+            if ri == ranges.len() {
+                // Past every range: exhausted.
+                return None;
+            }
+            examined += 1;
+            if let Some(lo) = ranges[ri].lo.as_deref() {
+                if r.as_str() < lo {
+                    // In the gap before the next range: hop to its
+                    // start beneath the copy.
+                    if examined >= examine_cap {
+                        return Some((r.clone(), c.clone()));
+                    }
+                    reseek = Some((lo.into(), scan::start_col(&ranges[ri..], lo).into()));
+                    break;
+                }
+            }
+            // The row is inside at least one range. Column
+            // decision over every range containing it: in any
+            // window → candidate; below every open window → hop to
+            // the nearest window start; past them all → next row.
+            let mut in_window = false;
+            let mut next_col: Option<&str> = None;
+            for rg in &ranges[ri..] {
+                if rg.lo.as_deref().is_some_and(|lo| r.as_str() < lo) {
+                    break;
+                }
+                if rg.hi.as_deref().is_some_and(|hi| r.as_str() >= hi) {
+                    continue;
+                }
+                let below = rg.col_lo.as_deref().is_some_and(|cl| c.as_str() < cl);
+                let above = rg.col_hi.as_deref().is_some_and(|ch| c.as_str() >= ch);
+                if !below && !above {
+                    in_window = true;
+                    break;
+                }
+                if below {
+                    let cl = rg.col_lo.as_deref().expect("below implies a lower bound");
+                    if next_col.is_none_or(|n| cl < n) {
+                        next_col = Some(cl);
+                    }
+                }
+            }
+            if !in_window {
+                if examined >= examine_cap {
+                    // The cap bounds window-skip and gap walks too:
+                    // a reseek-per-row stride must not extend this
+                    // lock hold (on the snapshot path it is only a
+                    // yield point, but the discipline is shared).
+                    return Some((r.clone(), c.clone()));
+                }
+                match next_col {
+                    // A window opens later in this row.
+                    Some(nc) => reseek = Some((r.clone(), nc.into())),
+                    // Every window on this row is done: jump to the
+                    // next row's window start.
+                    None => {
+                        let mut next_row = r.to_string();
+                        next_row.push('\0');
+                        let col = scan::start_col(&ranges[ri..], &next_row);
+                        reseek = Some((next_row.into(), col.into()));
+                    }
+                }
+                break;
+            }
+            // Rejected beneath the copy: no allocation.
+            if filters.iter().all(|f| f.matches_parts(r, c, v)) {
+                out.push(Triple { row: r.clone(), col: c.clone(), val: v.clone() });
+                emitted += 1;
+            }
+            if emitted == limit || examined >= examine_cap {
+                // Caller resumes after the last examined key.
+                return Some((r.clone(), c.clone()));
+            }
+        }
+        match reseek {
+            Some(key) => start = Bound::Included(key),
+            None => return None,
+        }
     }
 }
 
@@ -569,8 +732,9 @@ impl<'t> Merged<'t> {
             simple,
         }
     }
+}
 
-    /// Next visible cell, or `None` when every layer is exhausted.
+impl<'t> MergeWalk<'t> for Merged<'t> {
     fn next(&mut self) -> Option<(&'t SharedStr, &'t SharedStr, &'t SharedStr)> {
         if self.simple {
             return self.mem.next().map(|((r, c), v)| (r, c, v));
@@ -633,6 +797,106 @@ impl<'t> Merged<'t> {
                 // Newest run version is a tombstone: skip the key.
                 // (`None` is unreachable — the min key came from some
                 // layer — but skipping is the safe decode.)
+                _ => continue,
+            }
+        }
+    }
+}
+
+/// Merged forward walk over a [`TabletSnapshot`]'s layers: the frozen
+/// memtable image (entries and tombstones already interleaved in one
+/// sorted list) over the runs, newest run winning. The lock-free
+/// counterpart of [`Merged`]; borrows live as long as the snapshot
+/// borrow (`'s`).
+struct LayerMerge<'s> {
+    /// Frozen memtable image; tombstones are `None` values. Keys are
+    /// unique (the put/delete invariant keeps entries and tombstones
+    /// disjoint), so one cursor position suffices.
+    mem: &'s [RunCell],
+    mem_pos: usize,
+    runs: Vec<RunCursor<'s>>,
+}
+
+impl<'s> LayerMerge<'s> {
+    fn new(snap: &'s TabletSnapshot, start: Bound<(SharedStr, SharedStr)>) -> LayerMerge<'s> {
+        // The run cursors need the bound as (row, col, inclusive); an
+        // exclusive resume skips the key's whole version group (every
+        // version is superseded once the key was served).
+        let probe: Option<(&SharedStr, &SharedStr, bool)> = match &start {
+            Bound::Included((r, c)) => Some((r, c, true)),
+            Bound::Excluded((r, c)) => Some((r, c, false)),
+            Bound::Unbounded => None,
+        };
+        let mut runs = Vec::with_capacity(snap.runs.len());
+        for run in &snap.runs {
+            let (ext_start, ext_end) =
+                run.extent_range(snap.lo.as_deref(), snap.hi.as_deref());
+            let pos = match probe {
+                Some((r, c, inclusive)) => run.lower_bound(r, c, inclusive).max(ext_start),
+                None => ext_start,
+            };
+            runs.push(RunCursor::new(run, pos, ext_end));
+        }
+        let mem: &'s [RunCell] = snap.mem.as_deref().map_or(&[], Vec::as_slice);
+        let mem_pos = match probe {
+            Some((r, c, true)) => mem.partition_point(|(mr, mc, _)| {
+                (mr.as_str(), mc.as_str()) < (r.as_str(), c.as_str())
+            }),
+            Some((r, c, false)) => mem.partition_point(|(mr, mc, _)| {
+                (mr.as_str(), mc.as_str()) <= (r.as_str(), c.as_str())
+            }),
+            None => 0,
+        };
+        LayerMerge { mem, mem_pos, runs }
+    }
+}
+
+impl<'s> MergeWalk<'s> for LayerMerge<'s> {
+    fn next(&mut self) -> Option<(&'s SharedStr, &'s SharedStr, &'s SharedStr)> {
+        loop {
+            let mem_peek: Option<&'s RunCell> = self.mem.get(self.mem_pos);
+            let mut min: Option<(&'s str, &'s str)> = None;
+            let mut consider = |key: (&'s str, &'s str), min: &mut Option<(&'s str, &'s str)>| {
+                if min.is_none_or(|m| key < m) {
+                    *min = Some(key);
+                }
+            };
+            if let Some((r, c, _)) = mem_peek {
+                consider((r.as_str(), c.as_str()), &mut min);
+            }
+            for cur in &self.runs {
+                if let Some((r, c, _)) = cur.peek() {
+                    consider((r.as_str(), c.as_str()), &mut min);
+                }
+            }
+            let min = min?;
+            // Advance every run cursor sitting on the min key (each
+            // skips its whole version group) so no layer serves a
+            // shadowed version later; iterating oldest → newest makes
+            // the last hit the newest run's decision.
+            let mut run_winner: Option<(&'s SharedStr, &'s SharedStr, Option<&'s SharedStr>)> =
+                None;
+            for cur in &mut self.runs {
+                if let Some((r, c, v)) = cur.peek() {
+                    if (r.as_str(), c.as_str()) == min {
+                        run_winner = Some((r, c, v));
+                        cur.advance_key();
+                    }
+                }
+            }
+            if let Some((r, c, v)) = mem_peek {
+                if (r.as_str(), c.as_str()) == min {
+                    self.mem_pos += 1;
+                    match v {
+                        Some(v) => return Some((r, c, v)),
+                        // Frozen tombstone: masks every run version.
+                        None => continue,
+                    }
+                }
+            }
+            match run_winner {
+                Some((r, c, Some(v))) => return Some((r, c, v)),
+                // Newest run version is a tombstone: skip the key.
                 _ => continue,
             }
         }
@@ -955,6 +1219,57 @@ mod tests {
         assert!(!tab.overlaps(&ScanRange::rows("a", "m")));
         assert!(!tab.overlaps(&ScanRange::rows("t", "z")));
         assert!(tab.overlaps(&ScanRange::single("s")));
+    }
+
+    #[test]
+    fn snapshot_scan_matches_live_and_survives_mutation() {
+        let mut tab = Tablet::new(None, None);
+        for i in 0..40 {
+            tab.put(t(&format!("r{i:02}"), "c", &format!("v{i}")));
+        }
+        tab.freeze(1, 0);
+        // Post-freeze state mixes run cells, tombstones, and fresh
+        // memtable writes — all three snapshot layers are exercised.
+        for i in (0..40).step_by(3) {
+            tab.delete(&format!("r{i:02}"), "c");
+        }
+        for i in 40..50 {
+            tab.put(t(&format!("r{i:02}"), "c", "new"));
+        }
+        let snap = tab.snapshot();
+        let mut live = Vec::new();
+        tab.scan_into(None, None, &mut live);
+        let range = ScanRange::all();
+        // Block-resume walk over the snapshot matches the live scan.
+        let mut got = Vec::new();
+        let mut from: Option<(SharedStr, SharedStr)> = None;
+        loop {
+            let mut block = Vec::new();
+            let f = from.as_ref().map(|(r, c)| (r.as_str(), c.as_str(), false));
+            let more = snap.scan_block(f, std::slice::from_ref(&range), &[], 7, &mut block);
+            got.extend(block);
+            match more {
+                Some(key) => from = Some(key),
+                None => break,
+            }
+        }
+        assert_eq!(got, live);
+        // Mutating the live tablet never disturbs a pinned snapshot.
+        tab.put(t("r01", "c", "after-pin"));
+        tab.delete("r41", "c");
+        let mut again = Vec::new();
+        assert!(snap
+            .scan_block(None, std::slice::from_ref(&range), &[], usize::MAX, &mut again)
+            .is_none());
+        assert_eq!(again, got);
+        // Chunk-weight helpers: cells_upto is monotone and totals out;
+        // sampled rows are usable cut points.
+        assert_eq!(snap.cells_upto(None), snap.cells_upto(Some("zzz")));
+        assert!(snap.cells_upto(Some("r20")) <= snap.cells_upto(Some("r40")));
+        let mut samples = Vec::new();
+        snap.sample_rows(4, &mut samples);
+        assert!(!samples.is_empty());
+        assert!(samples.iter().all(|s| snap.cells_upto(Some(s)) > 0));
     }
 
     #[test]

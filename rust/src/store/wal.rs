@@ -141,6 +141,24 @@ impl WalWriter {
         Ok(WalWriter { file, policy, pending: 0, last_seq, durable_len, tail_dirty: false })
     }
 
+    /// Re-acquire a handle on the same log after a permanent-looking
+    /// failure — the health re-probe behind auto-recovery from
+    /// read-only degradation. Opens `path` for appending (never
+    /// truncating the whole file the way [`WalWriter::create`] would)
+    /// and cuts the file back to `durable_len`, dropping any torn
+    /// never-acknowledged bytes the failed handle left; acknowledged
+    /// records and the writer's sequence numbering are untouched. On
+    /// error the caller stays degraded and a later probe simply
+    /// retries the whole reopen.
+    pub fn reopen(&mut self, io: &dyn StorageIo, path: &Path) -> io::Result<()> {
+        let file = io.open_append(path)?;
+        self.file = file;
+        self.file.truncate(self.durable_len)?;
+        self.tail_dirty = false;
+        self.pending = 0;
+        Ok(())
+    }
+
     /// Highest sequence number appended (or adopted at open).
     pub fn last_seq(&self) -> u64 {
         self.last_seq

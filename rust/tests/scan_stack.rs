@@ -9,8 +9,8 @@
 //! reduce.
 
 use d4m::store::{
-    format_num, CellFilter, CompactionSpec, KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec,
-    SharedStr, Table, TableConfig, Triple,
+    format_num, lock_acquisitions, CellFilter, CompactionSpec, KeyMatch, RowReduce, ScanIter,
+    ScanRange, ScanSpec, SharedStr, Table, TableConfig, Triple,
 };
 use d4m::util::prop::check;
 use d4m::util::{Parallelism, SplitMix64};
@@ -649,4 +649,165 @@ fn combiner_at_merge_equals_combiner_at_scan() {
         let got = table.scan(ScanRange::all());
         assert_eq!(got, expect, "merge-time {reduce:?} != scan-time");
     }
+}
+
+// ---------------------------------------------------------------------
+// Snapshot isolation section (PR 8)
+// ---------------------------------------------------------------------
+//
+// Contract: `Table::scan_snapshot` pins the layer stack at open. Every
+// consumption of that pin — collected at any thread count / chunk
+// layout, or streamed, even partially consumed before the table moves —
+// is byte-identical to the table state at pin time, no matter what
+// puts, deletes, compactions, or splits land afterwards. And after the
+// pin is taken, consuming it acquires **zero** tablet/table locks
+// (asserted via the counting shim in `d4m::store::lock`).
+
+#[test]
+fn prop_snapshot_scan_is_isolated_from_later_mutations() {
+    check("pinned snapshot scan == table state at open", 25, |g| {
+        let cells = 300 + g.rng().below_usize(400);
+        let table = random_table(g.rng(), cells);
+        assert!(table.tablet_count() > 2, "need real tablet fan-out");
+        let spec = random_spec(g.rng());
+        let snap = table.scan_snapshot(&spec);
+        let expect = table.scan_spec_par(&spec, Parallelism::serial());
+        // Move the table hard: overwrites, deletes, fresh rows (which
+        // force further splits), and both compaction flavors.
+        for _ in 0..20 {
+            let row = format!("r{:03}", g.rng().below(120));
+            let col = format!("c{:02}", g.rng().below(24));
+            table.write_batch(vec![Triple::new(row, col, "999")]).unwrap();
+        }
+        for _ in 0..10 {
+            let row = format!("r{:03}", g.rng().below(120));
+            let col = format!("c{:02}", g.rng().below(24));
+            table.delete(&row, &col).unwrap();
+        }
+        table
+            .write_batch((0..64).map(|i| Triple::new(format!("zz{i:03}"), "c", "v")).collect())
+            .unwrap();
+        table.minor_compact().unwrap();
+        table.major_compact(&CompactionSpec::default()).unwrap();
+        // The pin is oblivious: every consumption mode, every thread
+        // count and chunk layout, still sees the open-time state.
+        assert_eq!(expect, snap.collect(Parallelism::serial()), "serial ({spec:?})");
+        for t in THREADS {
+            assert_eq!(
+                expect,
+                snap.collect(Parallelism::with_threads(t)),
+                "threads={t} ({spec:?})"
+            );
+        }
+        let streamed: Vec<Triple> = snap.stream().collect();
+        assert_eq!(expect, streamed, "streamed ({spec:?})");
+        // A fresh scan sees the new state (sanity: the table did move).
+        assert!(
+            !table.scan(ScanRange::single("zz000")).is_empty(),
+            "mutations must be visible to fresh scans"
+        );
+    });
+}
+
+#[test]
+fn snapshot_consumption_takes_zero_locks_after_open() {
+    // The tentpole assertion: opening the pin is the last lock the scan
+    // ever takes. The shim counter is thread-local, so serial
+    // consumption on this thread gives an exact count.
+    let mut rng = SplitMix64::new(0x5EED_08);
+    let table = random_table(&mut rng, 600);
+    table.minor_compact().unwrap();
+    assert!(table.tablet_count() > 2 && table.run_count() > 0);
+    let spec = ScanSpec::ranges([
+        ScanRange::rows("r000", "r040"),
+        ScanRange::rows("r060", "r090").with_cols("c05", "c15"),
+        ScanRange::single("r100"),
+    ])
+    .filtered(CellFilter::col(KeyMatch::Prefix("c".into())));
+    let expect = table.scan_spec_par(&spec, Parallelism::serial());
+    assert!(!expect.is_empty());
+    // Pin first (locks allowed here), then count.
+    let snap = table.scan_snapshot(&spec);
+    let before = lock_acquisitions();
+    let collected = snap.collect(Parallelism::serial());
+    assert_eq!(lock_acquisitions(), before, "collect took a lock after open");
+    let streamed: Vec<Triple> = snap.stream().collect();
+    assert_eq!(lock_acquisitions(), before, "stream took a lock after open");
+    assert_eq!(collected, expect);
+    assert_eq!(streamed, expect);
+    // Quiescent `scan_stream` consumption is lock-free too: the cursor
+    // pins at construction and refills check only an atomic version.
+    let stream = table.scan_stream(spec.clone());
+    let before = lock_acquisitions();
+    let via_stream: Vec<Triple> = stream.collect();
+    assert_eq!(lock_acquisitions(), before, "quiescent TableStream refill took a lock");
+    assert_eq!(via_stream, expect);
+}
+
+#[test]
+fn partially_consumed_snapshot_stream_stays_isolated() {
+    // Isolation must hold even when the table moves *between* blocks of
+    // an in-flight pinned stream — including a mid-scan split of the
+    // very tablet the stream is walking.
+    let table = Table::new("t", TableConfig { split_threshold: 512, write_latency_us: 0 });
+    table
+        .write_batch((0..60).map(|i| Triple::new(format!("a{i:03}"), "c", "v")).collect())
+        .unwrap();
+    let spec = ScanSpec::all().batched(7);
+    let snap = table.scan_snapshot(&spec);
+    let expect = table.scan_spec_par(&spec, Parallelism::serial());
+    let mut s = snap.stream();
+    let mut got = Vec::new();
+    for _ in 0..10 {
+        got.push(s.next_triple().unwrap());
+    }
+    // Split the walked extent and shadow cells ahead of the cursor.
+    table
+        .write_batch((0..600).map(|i| Triple::new(format!("a{i:03}"), "c", "NEW")).collect())
+        .unwrap();
+    assert!(table.tablet_count() > 1, "writes must have split the tablet");
+    table.delete("a030", "c").unwrap();
+    table.minor_compact().unwrap();
+    for tr in s {
+        got.push(tr);
+    }
+    assert_eq!(got, expect, "in-flight pinned stream leaked post-open state");
+}
+
+#[test]
+fn snapshot_isolated_under_concurrent_writers() {
+    // Writer threads hammer the table while pinned scans are consumed
+    // at several thread counts; every consumption matches the pin-time
+    // state bit-for-bit.
+    let mut rng = SplitMix64::new(0xBEEF_08);
+    let table = random_table(&mut rng, 500);
+    let spec = ScanSpec::all();
+    let snap = table.scan_snapshot(&spec);
+    let expect = snap.collect(Parallelism::serial());
+    assert!(!expect.is_empty());
+    std::thread::scope(|scope| {
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        let stop = &stop;
+        let table = &table;
+        for w in 0..3usize {
+            scope.spawn(move || {
+                let mut wrng = SplitMix64::new(0xABC + w as u64);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let row = format!("r{:03}", wrng.below(120));
+                    let col = format!("c{:02}", wrng.below(24));
+                    table.write_batch(vec![Triple::new(row, col, "w")]).unwrap();
+                }
+            });
+        }
+        for t in [1, 2, 4, 7] {
+            assert_eq!(
+                expect,
+                snap.collect(Parallelism::with_threads(t)),
+                "threads={t} under concurrent writers"
+            );
+        }
+        let streamed: Vec<Triple> = snap.stream().collect();
+        assert_eq!(expect, streamed, "streamed under concurrent writers");
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
 }

@@ -88,6 +88,8 @@ ACCEPTANCE = {
     "wal-recover": ("checkpoint recovery vs durable re-ingest", 5.0),
     "run-backed-scan": ("run-backed vs all-in-memory scan", 0.91),
     "wal-ingest-retry": ("durable ingest with retry layer vs no-retry", 0.95),
+    "scan-under-writers": ("pinned-snapshot vs lock-per-block scan under writers", 1.3),
+    "range-chunk-fanout": ("range-chunk vs per-tablet-group scan fan-out", 1.3),
 }
 
 
