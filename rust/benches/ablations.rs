@@ -71,6 +71,16 @@
 //!   serial walk but weighted range chunking still splits the work.
 //!   Outputs are bit-identical by contract (asserted quiescently).
 //!
+//! * **Block-granular run I/O (PR 9)** — a settled multi-run durable
+//!   table scanned fully resident vs through the shared LRU block cache
+//!   capped at `--block-cap-pct`% of the run bytes (the beyond-RAM cold
+//!   leg; bit-identical, with `peak_live_bytes` asserted within
+//!   `capacity + one block per run cursor`), a warm-cache leg (the
+//!   0.91× acceptance floor lives in `scripts/summarize_results.py`),
+//!   and `major_compact` streamed block-by-block under the same cap vs
+//!   the resident compactor (same memory bound asserted). `--block-only
+//!   1` runs just this section — the CI low-memory smoke leg.
+//!
 //! Besides the CSV, the run writes the machine-readable perf
 //! trajectories `BENCH_PR2.json` (thread sweep + accumulator policies,
 //! schema-compatible with the PR 2 capture), `BENCH_PR3.json`
@@ -80,9 +90,10 @@
 //! `BENCH_PR5.json` (per-seek vs one-scan BFS frontiers),
 //! `BENCH_PR6.json` (durable ingest, checkpoint recovery, run-backed
 //! scans), `BENCH_PR7.json` (retry-layer overhead and the
-//! fault-healing showcase) and `BENCH_PR8.json` (snapshot scans under
-//! writers, range-chunk fan-out) for `scripts/summarize_results.py`
-//! and the CI artifacts.
+//! fault-healing showcase), `BENCH_PR8.json` (snapshot scans under
+//! writers, range-chunk fan-out) and `BENCH_PR9.json` (block-cache
+//! cold/warm scans and bounded-memory compaction) for
+//! `scripts/summarize_results.py` and the CI artifacts.
 //!
 //! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
 //! [--threads-n N] [--hyper-scale S] [--mask-scale S]
@@ -96,7 +107,11 @@
 //! nodes (degree 4); default 13 — the seed frontier stays pinned at
 //! 1 000 nodes, the acceptance shape. `--wal-scale` sizes the durable
 //! tier section to 2^S triples; default 13. `--chunk-scale` sizes the
-//! snapshot-scan section to 2^S cells; default 14).
+//! snapshot-scan section to 2^S cells; default 14. `--block-scale`
+//! sizes the block-cache section to 2^S cells, default 14, with
+//! `--block-cap-pct` setting the cold-leg cache budget as a percentage
+//! of the run bytes, default 25; `--block-only 1` runs only that
+//! section).
 
 use d4m::assoc::{keys_from, Aggregator, Assoc, Key, KeyEncoding, ValsInput};
 use d4m::bench::{BenchRecord, FigureHarness, Workload};
@@ -104,9 +119,9 @@ use d4m::graphulo;
 use d4m::semiring::{PlusTimes, Semiring};
 use d4m::sparse::{spgemm, spgemm_par, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix};
 use d4m::store::{
-    format_num, BatchWriter, CellFilter, DurableOptions, FaultKind, FaultPlan, FaultyIo,
-    FsyncPolicy, KeyMatch, ScanIter, ScanRange, ScanSpec, Table, TableConfig, TableStore, Triple,
-    WriterConfig,
+    format_num, BatchWriter, BlockCache, CellFilter, CompactionSpec, DurableOptions, FaultKind,
+    FaultPlan, FaultyIo, FsyncPolicy, KeyMatch, ScanIter, ScanRange, ScanSpec, Table, TableConfig,
+    TableStore, Triple, WriterConfig,
 };
 use d4m::util::{time_op, Args, Parallelism, RetryPolicy, SplitMix64};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -285,6 +300,248 @@ fn bfs_per_seek(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<Stri
     frontiers
 }
 
+/// Block-granular run I/O through the shared LRU cache (PR 9). Builds a
+/// settled multi-run table with small data blocks, then measures:
+///
+/// * `block-resident-scan` — the fully resident baseline (speedup 1.0).
+/// * `block-cold-scan` — the same scan with the cache capped at
+///   `--block-cap-pct`% of the run bytes (default 25%): the beyond-RAM
+///   regime. Bit-identity to the resident scan is asserted, and
+///   [`CacheStats::peak_live_bytes`] is asserted to stay within
+///   `capacity + one block per run cursor` — the bounded-memory claim.
+/// * `block-warm-scan` — a second scan through an unbounded cache:
+///   once blocks are resident the paged path must track the resident
+///   one (the 0.91× floor is enforced by `scripts/summarize_results.py`).
+/// * `block-compact` — `major_compact` streamed block-by-block under
+///   the capped cache vs the resident compactor, with the same
+///   peak-memory bound asserted and post-compaction bit-identity.
+///
+/// Standalone via `--block-only 1` (the CI low-memory smoke leg).
+fn bench_blocks(args: &Args, repeats: usize) -> Vec<BenchRecord> {
+    let scale = args.usize_or("block-scale", 14);
+    let cap_pct = args.usize_or("block-cap-pct", 25).max(1);
+    let block_triples = 256usize;
+    let block_bytes = block_triples * 12;
+    let bn = 1usize << scale;
+    let row = |i: usize| format!("r{:06}", i / 24);
+    let col = |i: usize| format!("c{:02}", i % 24);
+    let popts = || DurableOptions { block_triples, ..DurableOptions::default() };
+
+    let base = std::env::temp_dir().join(format!("d4m-ablations-blocks-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).expect("bench dir");
+    let dir = base.join("main");
+    {
+        let t = Table::durable_with(
+            "blockbench",
+            TableConfig::default(),
+            &dir,
+            FsyncPolicy::Never,
+            popts(),
+        )
+        .expect("durable table");
+        for wave in 0..4usize {
+            let batch: Vec<Triple> = (wave * (bn / 4)..(wave + 1) * (bn / 4))
+                .map(|i| Triple::new(row(i), col(i), format!("{i}")))
+                .collect();
+            for chunk in batch.chunks(512) {
+                t.write_batch(chunk.to_vec()).expect("block ingest");
+            }
+            t.minor_compact().expect("block minor compact");
+        }
+        t.sync().expect("block sync");
+    }
+    // Settle: the replayed WAL suffix is frozen (with the same small
+    // blocks) and the log truncated, so every leg below recovers the
+    // identical on-disk image without writing new runs.
+    drop(
+        Table::recover_with("blockbench", TableConfig::default(), &dir, FsyncPolicy::Never, popts())
+            .expect("settle recover"),
+    );
+    let copy_into = |dst: &std::path::Path| {
+        std::fs::create_dir_all(dst).expect("copy dir");
+        for entry in std::fs::read_dir(&dir).expect("read dir") {
+            let entry = entry.expect("dir entry");
+            if entry.file_type().expect("file type").is_file() {
+                std::fs::copy(entry.path(), dst.join(entry.file_name())).expect("copy file");
+            }
+        }
+    };
+    let dir_rc = base.join("compact-resident");
+    let dir_pc = base.join("compact-paged");
+    copy_into(&dir_rc);
+    copy_into(&dir_pc);
+    let run_sizes: Vec<u64> = std::fs::read_dir(&dir)
+        .expect("read dir")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "run"))
+        .filter_map(|e| e.metadata().ok().map(|m| m.len()))
+        .collect();
+    let run_files = run_sizes.len();
+    let run_bytes: u64 = run_sizes.iter().sum();
+    assert!(run_files >= 2, "block bench needs a multi-run table, got {run_files}");
+    let capacity = (run_bytes as usize) * cap_pct / 100;
+    // Memory bound for capped legs: the cache budget plus one block per
+    // run cursor (every run can have one pinned block per pass), plus a
+    // little slack for blocks in flight between load and first pin.
+    let peak_bound = (capacity + (run_files + 4) * block_bytes) as u64;
+
+    // Resident baseline.
+    let (expect, t_res) = {
+        let t =
+            Table::recover_with("blockbench", TableConfig::default(), &dir, FsyncPolicy::Never, popts())
+                .expect("resident recover");
+        let expect = t.scan_par(ScanRange::all(), Parallelism::serial());
+        let t_res =
+            time_op(1, repeats, |_| t.scan_par(ScanRange::all(), Parallelism::serial()).len());
+        (expect, t_res)
+    };
+    assert_eq!(expect.len(), bn, "block bench table lost cells");
+
+    // Cold beyond-RAM scans: capped cache, sequential full scans churn
+    // the whole budget every pass.
+    let cold_cache = BlockCache::new(capacity);
+    let (t_cold, cold_stats) = {
+        let t = Table::recover_with(
+            "blockbench",
+            TableConfig::default(),
+            &dir,
+            FsyncPolicy::Never,
+            DurableOptions { cache: Some(Arc::clone(&cold_cache)), ..popts() },
+        )
+        .expect("capped recover");
+        assert_eq!(
+            expect,
+            t.scan_par(ScanRange::all(), Parallelism::serial()),
+            "capped paged scan must be bit-identical to the resident scan"
+        );
+        cold_cache.reset_peak();
+        let t_cold =
+            time_op(0, repeats, |_| t.scan_par(ScanRange::all(), Parallelism::serial()).len());
+        (t_cold, cold_cache.stats())
+    };
+    assert!(cold_stats.misses > 0, "capped scans must fault blocks");
+    assert!(
+        cold_stats.peak_live_bytes <= peak_bound,
+        "cold scan peak {} bytes exceeds capacity + per-cursor bound {peak_bound}",
+        cold_stats.peak_live_bytes,
+    );
+    let cold_speedup =
+        if t_cold.mean_s() > 0.0 { t_res.mean_s() / t_cold.mean_s() } else { 0.0 };
+
+    // Warm cache: unbounded budget, first scan faults everything in,
+    // the timed scans are pure cache hits.
+    let warm_cache = BlockCache::new(usize::MAX);
+    let (t_warm, warm_stats) = {
+        let t = Table::recover_with(
+            "blockbench",
+            TableConfig::default(),
+            &dir,
+            FsyncPolicy::Never,
+            DurableOptions { cache: Some(Arc::clone(&warm_cache)), ..popts() },
+        )
+        .expect("warm recover");
+        assert_eq!(
+            expect,
+            t.scan_par(ScanRange::all(), Parallelism::serial()),
+            "warm paged scan must be bit-identical to the resident scan"
+        );
+        let t_warm =
+            time_op(1, repeats, |_| t.scan_par(ScanRange::all(), Parallelism::serial()).len());
+        (t_warm, warm_cache.stats())
+    };
+    assert!(warm_stats.hits > 0, "warm scans must hit the cache");
+    let warm_speedup =
+        if t_warm.mean_s() > 0.0 { t_res.mean_s() / t_warm.mean_s() } else { 0.0 };
+    // Soft in-binary sanity; the real 0.91x acceptance floor lives in
+    // scripts/summarize_results.py where it gates CI.
+    assert!(
+        warm_speedup >= 0.5,
+        "warm-cache scan at {warm_speedup:.2}x of resident is implausibly slow"
+    );
+
+    // Bounded-memory streaming compaction vs the resident compactor,
+    // each on its own copy of the settled image.
+    let t_comp_res = {
+        let t = Table::recover_with(
+            "blockbench",
+            TableConfig::default(),
+            &dir_rc,
+            FsyncPolicy::Never,
+            popts(),
+        )
+        .expect("compact-resident recover");
+        time_op(0, 1, |_| t.major_compact(&CompactionSpec::default()).expect("resident compact"))
+    };
+    let comp_cache = BlockCache::new(capacity);
+    let (t_comp, comp_stats) = {
+        let t = Table::recover_with(
+            "blockbench",
+            TableConfig::default(),
+            &dir_pc,
+            FsyncPolicy::Never,
+            DurableOptions { cache: Some(Arc::clone(&comp_cache)), ..popts() },
+        )
+        .expect("compact-paged recover");
+        comp_cache.reset_peak();
+        let t_comp =
+            time_op(0, 1, |_| t.major_compact(&CompactionSpec::default()).expect("streamed compact"));
+        let stats = comp_cache.stats();
+        assert_eq!(
+            expect,
+            t.scan_par(ScanRange::all(), Parallelism::serial()),
+            "post-compaction scan must be bit-identical"
+        );
+        (t_comp, stats)
+    };
+    assert!(
+        comp_stats.peak_live_bytes <= peak_bound,
+        "streamed compaction peak {} bytes exceeds capacity + per-cursor bound {peak_bound}",
+        comp_stats.peak_live_bytes,
+    );
+    let comp_speedup =
+        if t_comp.mean_s() > 0.0 { t_comp_res.mean_s() / t_comp.mean_s() } else { 0.0 };
+
+    println!(
+        "[ablations] block cache 2^{scale} cells ({run_files} runs, {run_bytes} run bytes, \
+         cap {capacity} = {cap_pct}%): resident={:.6}s cold={:.6}s ({cold_speedup:.2}x, \
+         {} misses, {} evictions, peak {} <= {peak_bound}) warm={:.6}s ({warm_speedup:.2}x); \
+         major compact resident={:.6}s streamed={:.6}s ({comp_speedup:.2}x, peak {})",
+        t_res.mean_s(),
+        t_cold.mean_s(),
+        cold_stats.misses,
+        cold_stats.evictions,
+        cold_stats.peak_live_bytes,
+        t_warm.mean_s(),
+        t_comp_res.mean_s(),
+        t_comp.mean_s(),
+        comp_stats.peak_live_bytes,
+    );
+    let _ = std::fs::remove_dir_all(&base);
+
+    vec![
+        BenchRecord::new("block-resident-scan", scale, 1, t_res.mean_s() * 1e9, 1.0)
+            .with_extra("cells", expect.len() as f64)
+            .with_extra("run_bytes", run_bytes as f64)
+            .with_extra("runs", run_files as f64),
+        BenchRecord::new("block-cold-scan", scale, 1, t_cold.mean_s() * 1e9, cold_speedup)
+            .with_extra("cells", expect.len() as f64)
+            .with_extra("capacity_bytes", capacity as f64)
+            .with_extra("cache_misses", cold_stats.misses as f64)
+            .with_extra("cache_evictions", cold_stats.evictions as f64)
+            .with_extra("peak_live_bytes", cold_stats.peak_live_bytes as f64),
+        BenchRecord::new("block-warm-scan", scale, 1, t_warm.mean_s() * 1e9, warm_speedup)
+            .with_extra("cells", expect.len() as f64)
+            .with_extra("capacity_bytes", usize::MAX as f64)
+            .with_extra("cache_hits", warm_stats.hits as f64)
+            .with_extra("cache_misses", warm_stats.misses as f64),
+        BenchRecord::new("block-compact", scale, 1, t_comp.mean_s() * 1e9, comp_speedup)
+            .with_extra("capacity_bytes", capacity as f64)
+            .with_extra("peak_live_bytes", comp_stats.peak_live_bytes as f64)
+            .with_extra("runs", run_files as f64),
+    ]
+}
+
 fn main() {
     let args = Args::from_env();
     let n = args.usize_or("n", 12);
@@ -294,6 +551,15 @@ fn main() {
     // overrides; the thread-scaling section below passes Parallelism
     // explicitly and is unaffected.
     Parallelism::with_threads(args.usize_or("threads", 1)).set_default();
+
+    // Low-memory CI leg: only the PR 9 block-cache section, so the
+    // process's own footprint stays a fair proxy for the bounded-memory
+    // claim.
+    if args.flag("block-only") {
+        let records9 = bench_blocks(&args, repeats);
+        d4m::bench::write_bench_json(&out_dir, "BENCH_PR9.json", &records9).expect("write JSON");
+        return;
+    }
     let w = Workload::generate(n, 77);
     let ones = w.ones();
     let a = Assoc::from_triples(&w.rows, &w.cols, ValsInput::Num(ones.clone()));
@@ -1090,6 +1356,7 @@ fn main() {
             io: faulty.clone(),
             retry: RetryPolicy::immediate(3),
             fallback_to_memory: false,
+            ..DurableOptions::default()
         })
     });
     let injected = faulty.injected();
@@ -1303,6 +1570,9 @@ fn main() {
         .with_extra("tablets", 1.0),
     ];
 
+    // --- block-granular run I/O + shared LRU block cache (PR 9) -----
+    let records9 = bench_blocks(&args, repeats);
+
     h.write_csv(&out_dir).expect("write CSV");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR2.json", &records).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR3.json", &records3).expect("write JSON");
@@ -1311,4 +1581,5 @@ fn main() {
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR6.json", &records6).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR7.json", &records7).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR8.json", &records8).expect("write JSON");
+    d4m::bench::write_bench_json(&out_dir, "BENCH_PR9.json", &records9).expect("write JSON");
 }

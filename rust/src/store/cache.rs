@@ -1,0 +1,365 @@
+//! Shared LRU block cache for paged runs (PR 9).
+//!
+//! Accumulo tablet servers never map an RFile whole: scans fault
+//! index-addressed data blocks on demand through a shared block cache,
+//! which is what lets associative-array queries run over tables far
+//! larger than RAM (arXiv:1508.07371 §II; the D4M 3.0 server-side
+//! architecture, arXiv:1702.03253). [`BlockCache`] is that component
+//! for the durable tier: a process-wide, sharded, byte-capacity LRU
+//! keyed by `(run uid, block index)` that hands out [`Arc<Block>`]s.
+//!
+//! Two properties matter for the PR 8 lock-free scan contract:
+//!
+//! - **Pins survive eviction.** A cursor holds an `Arc<Block>`; eviction
+//!   only drops the cache's own reference, so an in-flight merge keeps
+//!   reading its pinned block while the cache reuses the budget for
+//!   other blocks. [`CacheStats::peak_live_bytes`] tracks cache
+//!   residency *plus* pins, which is how the bench asserts the
+//!   "capacity + one block per active cursor" memory bound.
+//! - **No tracked locks.** Shards use plain [`std::sync::Mutex`], not
+//!   [`super::lock::TrackedMutex`]: the PR 8 zero-lock-after-open shim
+//!   counts *table* lock acquisitions, and a cache-faulting scan must
+//!   still report zero of those (`tests/scan_stack.rs` asserts it).
+//!   Shard critical sections are a hash probe and a list splice — no
+//!   I/O ever happens under a shard lock.
+//!
+//! Capacity `0` is a degenerate but supported mode: every load is a
+//! miss, nothing is retained, and scans still complete correctly off
+//! pinned blocks alone — the eviction-torture configuration of the
+//! cache test matrix.
+
+use std::collections::{HashMap, VecDeque};
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of independently locked shards. A small power of two: enough
+/// to keep scan workers from serializing on one mutex, small enough
+/// that per-shard capacity stays meaningful for tiny test capacities.
+const SHARDS: usize = 8;
+
+/// One decoded run block: the `(row, col, val)` pool-id triples of a
+/// contiguous slice of a run file, plus its accounting handle. Dropping
+/// the last `Arc<Block>` (cache copy and all pins gone) releases its
+/// bytes from [`CacheStats::live_bytes`].
+#[derive(Debug)]
+pub struct Block {
+    triples: Vec<(u32, u32, u32)>,
+    bytes: usize,
+    stats: Arc<StatsInner>,
+}
+
+impl Block {
+    /// The decoded triples; indices are block-relative.
+    #[inline]
+    pub fn triples(&self) -> &[(u32, u32, u32)] {
+        &self.triples
+    }
+
+    /// Encoded size of the block on disk (12 bytes per triple) — the
+    /// unit of cache accounting.
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for Block {
+    fn drop(&mut self) {
+        self.stats.live_bytes.fetch_sub(self.bytes as u64, Ordering::Relaxed);
+    }
+}
+
+/// Monotonic counters shared by every block the cache has handed out.
+#[derive(Debug, Default)]
+struct StatsInner {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    live_bytes: AtomicU64,
+    peak_live_bytes: AtomicU64,
+}
+
+impl StatsInner {
+    fn on_block_created(&self, bytes: usize) {
+        let live = self.live_bytes.fetch_add(bytes as u64, Ordering::Relaxed) + bytes as u64;
+        self.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time snapshot of the cache counters, surfaced through
+/// `Table::health()` and the bench JSON.
+///
+/// `misses` is the total number of block faults; diffing it around a
+/// scan gives that scan's faulted-block count. `resident_bytes` is what
+/// the cache itself holds; `live_bytes` additionally counts blocks kept
+/// alive only by cursor pins, and `peak_live_bytes` is the high-water
+/// mark of that sum — the quantity bounded by
+/// `capacity + one block per active cursor`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Block lookups served from the cache.
+    pub hits: u64,
+    /// Block lookups that had to read and decode from storage.
+    pub misses: u64,
+    /// Blocks dropped from the cache to stay under capacity.
+    pub evictions: u64,
+    /// Bytes currently held by the cache itself.
+    pub resident_bytes: u64,
+    /// Bytes of all live blocks: cache residents plus cursor pins.
+    pub live_bytes: u64,
+    /// High-water mark of `live_bytes` since creation (or the last
+    /// [`BlockCache::reset_peak`]).
+    pub peak_live_bytes: u64,
+}
+
+/// Key of one cached block: the owning run's process-unique id plus the
+/// block's index within that run. Run uids (not file paths) keep a
+/// reopened or renamed file from aliasing stale cache entries.
+type BlockKey = (u64, u32);
+
+struct Slot {
+    block: Arc<Block>,
+    /// Shard-local LRU stamp; queue entries with a stale stamp are
+    /// skipped (lazy deletion — no doubly linked list needed).
+    stamp: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<BlockKey, Slot>,
+    /// Recency queue, oldest first, with lazy deletion via stamps.
+    queue: VecDeque<(BlockKey, u64)>,
+    bytes: usize,
+    next_stamp: u64,
+}
+
+impl Shard {
+    fn touch(&mut self, key: BlockKey) {
+        self.next_stamp += 1;
+        let stamp = self.next_stamp;
+        if let Some(slot) = self.map.get_mut(&key) {
+            slot.stamp = stamp;
+            self.queue.push_back((key, stamp));
+        }
+        // Bound the lazy queue: compact once stale entries dominate.
+        if self.queue.len() > 4 * self.map.len() + 16 {
+            let map = &self.map;
+            self.queue.retain(|(k, s)| map.get(k).is_some_and(|slot| slot.stamp == *s));
+        }
+    }
+
+    fn evict_to(&mut self, capacity: usize, stats: &StatsInner) {
+        while self.bytes > capacity {
+            let Some((key, stamp)) = self.queue.pop_front() else { break };
+            let live = self.map.get(&key).is_some_and(|slot| slot.stamp == stamp);
+            if live {
+                let slot = self.map.remove(&key).expect("checked above");
+                self.bytes -= slot.block.bytes;
+                stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Process-unique id source for paged runs (cache key namespace).
+static NEXT_RUN_UID: AtomicU64 = AtomicU64::new(1);
+
+/// The shared LRU block cache. Create one with [`BlockCache::new`] and
+/// hand the same `Arc` to every `DurableOptions` that should share the
+/// byte budget (a `TableStore` does this automatically).
+pub struct BlockCache {
+    capacity: usize,
+    shards: Vec<Mutex<Shard>>,
+    stats: Arc<StatsInner>,
+}
+
+impl std::fmt::Debug for BlockCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BlockCache").field("capacity", &self.capacity).finish()
+    }
+}
+
+impl BlockCache {
+    /// A cache with a total byte `capacity` split evenly across shards.
+    /// Capacity `0` disables retention entirely (every load is a miss).
+    pub fn new(capacity: usize) -> Arc<BlockCache> {
+        Arc::new(BlockCache {
+            capacity,
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            stats: Arc::new(StatsInner::default()),
+        })
+    }
+
+    /// Total byte capacity this cache was created with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Allocate a process-unique run uid (one per paged `Run::open`).
+    pub(crate) fn next_run_uid() -> u64 {
+        NEXT_RUN_UID.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> CacheStats {
+        let s = &self.stats;
+        let resident: usize = self
+            .shards
+            .iter()
+            .map(|sh| sh.lock().expect("cache shard poisoned").bytes)
+            .sum();
+        CacheStats {
+            hits: s.hits.load(Ordering::Relaxed),
+            misses: s.misses.load(Ordering::Relaxed),
+            evictions: s.evictions.load(Ordering::Relaxed),
+            resident_bytes: resident as u64,
+            live_bytes: s.live_bytes.load(Ordering::Relaxed),
+            peak_live_bytes: s.peak_live_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset the `peak_live_bytes` high-water mark to the current live
+    /// bytes — used by benches to bound one phase at a time.
+    pub fn reset_peak(&self) {
+        let live = self.stats.live_bytes.load(Ordering::Relaxed);
+        self.stats.peak_live_bytes.store(live, Ordering::Relaxed);
+    }
+
+    /// Fetch block `key`, loading (and decoding) it with `load` on a
+    /// miss. `load` runs *outside* any shard lock; if two threads race
+    /// on the same missing block, both load it and the first insert
+    /// wins (the loser's copy serves its caller and then drops).
+    pub fn get_or_load(
+        &self,
+        key: BlockKey,
+        load: impl FnOnce() -> io::Result<Block>,
+    ) -> io::Result<Arc<Block>> {
+        let shard_idx = self.shard_of(key);
+        {
+            let mut shard = self.shards[shard_idx].lock().expect("cache shard poisoned");
+            if let Some(slot) = shard.map.get(&key) {
+                let block = Arc::clone(&slot.block);
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                shard.touch(key);
+                return Ok(block);
+            }
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let block = Arc::new(load()?);
+        if self.capacity == 0 {
+            return Ok(block);
+        }
+        let per_shard = (self.capacity / SHARDS).max(1);
+        let mut shard = self.shards[shard_idx].lock().expect("cache shard poisoned");
+        if let Some(slot) = shard.map.get(&key) {
+            // Lost the race; keep the resident copy so accounting stays
+            // single-entry per key.
+            return Ok(Arc::clone(&slot.block));
+        }
+        shard.bytes += block.bytes;
+        shard.map.insert(key, Slot { block: Arc::clone(&block), stamp: 0 });
+        shard.touch(key);
+        shard.evict_to(per_shard, &self.stats);
+        Ok(block)
+    }
+
+    /// Build a [`Block`] wired to this cache's accounting. The block
+    /// immediately counts toward `live_bytes` (it is live the moment a
+    /// loader holds it, cached or not).
+    pub(crate) fn make_block(&self, triples: Vec<(u32, u32, u32)>) -> Block {
+        let bytes = triples.len() * 12;
+        self.stats.on_block_created(bytes);
+        Block { triples, bytes, stats: Arc::clone(&self.stats) }
+    }
+
+    fn shard_of(&self, key: BlockKey) -> usize {
+        // Cheap integer mix; uids are sequential, so fold both halves.
+        let h = key.0.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ u64::from(key.1);
+        ((h >> 32) as usize ^ h as usize) % SHARDS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block_of(cache: &BlockCache, n: usize) -> Block {
+        cache.make_block(vec![(0, 0, 0); n])
+    }
+
+    #[test]
+    fn hit_miss_and_eviction_accounting() {
+        let cache = BlockCache::new(SHARDS * 24); // 2 triples per shard
+        let uid = BlockCache::next_run_uid();
+        let b0 = cache.get_or_load((uid, 0), || Ok(block_of(&cache, 1))).unwrap();
+        assert_eq!(b0.triples().len(), 1);
+        let again = cache.get_or_load((uid, 0), || panic!("must hit")).unwrap();
+        assert!(Arc::ptr_eq(&b0, &again));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.resident_bytes, 12);
+
+        // Same shard keys: uid fixed, spray block indices until one
+        // lands on block 0's shard and overflows it.
+        let shard0 = cache.shard_of((uid, 0));
+        let mut sibling = 1u32;
+        while cache.shard_of((uid, sibling)) != shard0 {
+            sibling += 1;
+        }
+        // Two 1-triple blocks fit (24 bytes); a third evicts the LRU.
+        let _b1 = cache.get_or_load((uid, sibling), || Ok(block_of(&cache, 1))).unwrap();
+        let mut next = sibling + 1;
+        while cache.shard_of((uid, next)) != shard0 {
+            next += 1;
+        }
+        let _b2 = cache.get_or_load((uid, next), || Ok(block_of(&cache, 1))).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        // The evicted block (key 0) is still alive through our pin.
+        assert_eq!(s.live_bytes, 36);
+        assert!(s.peak_live_bytes >= 36);
+        // Refetching the evicted key is a miss again.
+        let b0b = cache.get_or_load((uid, 0), || Ok(block_of(&cache, 1))).unwrap();
+        assert!(!Arc::ptr_eq(&b0, &b0b));
+    }
+
+    #[test]
+    fn capacity_zero_never_retains() {
+        let cache = BlockCache::new(0);
+        let uid = BlockCache::next_run_uid();
+        for _ in 0..3 {
+            let b = cache.get_or_load((uid, 7), || Ok(block_of(&cache, 2))).unwrap();
+            assert_eq!(b.triples().len(), 2);
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 3));
+        assert_eq!(s.resident_bytes, 0);
+        // All handed-out blocks dropped: live bytes fully released.
+        assert_eq!(cache.stats().live_bytes, 0);
+        assert!(cache.stats().peak_live_bytes >= 24);
+    }
+
+    #[test]
+    fn reset_peak_tracks_current_live() {
+        let cache = BlockCache::new(1 << 20);
+        let uid = BlockCache::next_run_uid();
+        let pin = cache.get_or_load((uid, 0), || Ok(block_of(&cache, 4))).unwrap();
+        assert!(cache.stats().peak_live_bytes >= 48);
+        cache.reset_peak();
+        assert_eq!(cache.stats().peak_live_bytes, cache.stats().live_bytes);
+        drop(pin);
+    }
+
+    #[test]
+    fn load_errors_propagate_and_count_as_misses() {
+        let cache = BlockCache::new(1 << 20);
+        let uid = BlockCache::next_run_uid();
+        let err = cache
+            .get_or_load((uid, 0), || Err(io::Error::other("boom")))
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Other);
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().resident_bytes, 0);
+    }
+}

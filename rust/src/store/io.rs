@@ -47,6 +47,14 @@ pub trait StorageIo: Send + Sync + Debug {
     fn open_append(&self, path: &Path) -> io::Result<Box<dyn StorageFile>>;
     /// Read the entire file.
     fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Read exactly `len` bytes starting at `offset`. A file shorter
+    /// than `offset + len` is an `UnexpectedEof` error — run blocks and
+    /// footers are always read with an exact length from the index, so
+    /// a short read means truncation, never a partial tail. This is the
+    /// paged-run fault path: counted (and corruptible) by [`FaultyIo`]
+    /// per call, so a fault can land on one block read without touching
+    /// its neighbors.
+    fn read_range(&self, path: &Path, offset: u64, len: usize) -> io::Result<Vec<u8>>;
     /// Atomically replace `path` with `bytes`: write `<path>.tmp`, fsync
     /// it, rename over `path`. Readers never see a partial file.
     fn write_atomic(&self, path: &Path, bytes: &[u8]) -> io::Result<()>;
@@ -59,6 +67,9 @@ pub trait StorageIo: Send + Sync + Debug {
     fn read_dir(&self, dir: &Path) -> io::Result<Vec<(String, bool)>>;
     /// Whether `path` exists (metadata probe, not counted as faultable).
     fn exists(&self, path: &Path) -> bool;
+    /// Size of `path` in bytes (metadata probe, not counted as
+    /// faultable — the paged-run trailer locator, like [`Self::exists`]).
+    fn file_size(&self, path: &Path) -> io::Result<u64>;
     /// Create `path` and any missing parents.
     fn create_dir_all(&self, path: &Path) -> io::Result<()>;
 }
@@ -118,6 +129,14 @@ impl StorageIo for RealIo {
         Ok(buf)
     }
 
+    fn read_range(&self, path: &Path, offset: u64, len: usize) -> io::Result<Vec<u8>> {
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
     fn write_atomic(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
         let tmp = tmp_path(path);
         {
@@ -150,6 +169,10 @@ impl StorageIo for RealIo {
 
     fn exists(&self, path: &Path) -> bool {
         path.exists()
+    }
+
+    fn file_size(&self, path: &Path) -> io::Result<u64> {
+        std::fs::metadata(path).map(|m| m.len())
     }
 
     fn create_dir_all(&self, path: &Path) -> io::Result<()> {
@@ -412,6 +435,18 @@ impl StorageIo for FaultyIo {
         }
     }
 
+    fn read_range(&self, path: &Path, offset: u64, len: usize) -> io::Result<Vec<u8>> {
+        match self.state.next_fault() {
+            None => self.inner.read_range(path, offset, len),
+            Some(FaultKind::Corrupt) => {
+                let mut bytes = self.inner.read_range(path, offset, len)?;
+                corrupt(&mut bytes);
+                Ok(bytes)
+            }
+            Some(kind) => Err(FaultState::error(kind)),
+        }
+    }
+
     fn write_atomic(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
         match self.state.next_fault() {
             None => self.inner.write_atomic(path, bytes),
@@ -449,6 +484,10 @@ impl StorageIo for FaultyIo {
 
     fn exists(&self, path: &Path) -> bool {
         self.inner.exists(path)
+    }
+
+    fn file_size(&self, path: &Path) -> io::Result<u64> {
+        self.inner.file_size(path)
     }
 
     fn create_dir_all(&self, path: &Path) -> io::Result<()> {
@@ -493,6 +532,34 @@ mod tests {
         f.write_all(b"!").unwrap();
         drop(f);
         assert_eq!(RealIo.read(&p).unwrap(), b"hello!");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn read_range_is_exact_and_faultable() {
+        let d = tmp_dir("range");
+        let p = d.join("f");
+        RealIo.write_atomic(&p, b"0123456789").unwrap();
+        assert_eq!(RealIo.read_range(&p, 2, 5).unwrap(), b"23456");
+        assert_eq!(RealIo.read_range(&p, 0, 10).unwrap(), b"0123456789");
+        // Past the end: exact reads fail instead of returning a prefix.
+        assert_eq!(
+            RealIo.read_range(&p, 8, 5).unwrap_err().kind(),
+            io::ErrorKind::UnexpectedEof
+        );
+        assert_eq!(RealIo.file_size(&p).unwrap(), 10);
+
+        let io = FaultyIo::new(
+            FaultPlan::new()
+                .fail_at(0, FaultKind::Corrupt)
+                .fail_at(1, FaultKind::Permanent),
+        );
+        let got = io.read_range(&p, 2, 5).unwrap(); // op 0: corrupted
+        assert_ne!(got, b"23456");
+        assert_eq!(got.len(), 5);
+        assert!(io.read_range(&p, 2, 5).is_err()); // op 1: fails
+        assert_eq!(io.file_size(&p).unwrap(), 10); // metadata: uncounted
+        assert_eq!(io.ops(), 2);
         let _ = std::fs::remove_dir_all(&d);
     }
 

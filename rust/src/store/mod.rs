@@ -64,7 +64,19 @@
 //! over the snapshots independent of tablet boundaries (Accumulo's
 //! BatchScanner worker model), and [`Table::scan_snapshot`] exposes
 //! the pinned scan ([`SnapshotScan`]) directly.
+//!
+//! **Block-granular run I/O** (PR 9) removes the last total-run-bytes
+//! memory bound: run files are laid out as index-addressed data blocks
+//! (the Accumulo RFile shape) behind a shared byte-capacity LRU
+//! [`BlockCache`], so a table opened with
+//! [`DurableOptions::cache_capacity`] pages blocks in on demand — scans
+//! hold only the blocks they are merging, multi-range scans seek via
+//! the block index without faulting gap blocks, and `major_compact`
+//! streams block-by-block instead of materializing every input run.
+//! The default (no cache configured) stays fully resident, preserving
+//! the PR 6–8 behavior bit-for-bit.
 
+mod cache;
 mod compact;
 pub mod io;
 mod lock;
@@ -75,6 +87,7 @@ mod tablet;
 pub mod wal;
 mod writer;
 
+pub use cache::{Block, BlockCache, CacheStats};
 pub use compact::CompactionSpec;
 pub use io::{FaultKind, FaultPlan, FaultyIo, RealIo, StorageFile, StorageIo};
 pub use lock::{lock_acquisitions, TrackedMutex, TrackedRwLock};

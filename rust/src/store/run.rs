@@ -14,51 +14,177 @@
 //! ([`TOMBSTONE`] value id) masking older runs — exactly Accumulo's
 //! deletion markers.
 //!
-//! ## File format (`run-<seq>.run`)
+//! ## File format v2 (`run-<seq>.run`, magic `D4MRUN02`)
+//!
+//! The v2 layout is Accumulo's RFile shape: data blocks first, then a
+//! footer holding the string pool and a block index, located by a
+//! fixed-size trailer at the end of the file — so a paged open
+//! ([`Run::open_with`]) reads *only* the trailer and footer, and data
+//! blocks fault lazily through the shared
+//! [`BlockCache`](super::cache::BlockCache).
 //!
 //! ```text
-//! [8-byte magic "D4MRUN01"]
-//! [u64 seq][u64 watermark]
-//! [u32 pool_len] pool_len × ([u32 len][bytes])
-//! [u32 ntriples] ntriples × ([u32 row][u32 col][u32 val])
-//! [u32 crc32(everything after the magic)]
+//! [8-byte magic "D4MRUN02"]
+//! blocks × (count × [u32 row][u32 col][u32 val])      // raw id triples
+//! footer:
+//!   [u64 seq][u64 watermark]
+//!   [u32 pool_len] pool_len × ([u32 len][bytes])
+//!   [u32 nblocks] nblocks × ([u32 first_row][u32 first_col]
+//!                            [u32 count][u64 offset][u32 len][u32 crc])
+//!   [u32 ntriples]                                    // redundant sum
+//! trailer: [u64 footer_off][u32 footer_len][u32 crc32(footer)]
 //! ```
 //!
-//! All integers little-endian; the CRC guards the whole body so a torn
-//! or bit-flipped run file fails loudly at [`Run::load`] instead of
-//! serving wrong cells.
+//! All integers little-endian. Each index entry carries the CRC of its
+//! raw block bytes, so a bit flip is caught at block-load time; the
+//! trailer CRC guards the footer. A fully-resident load
+//! ([`Run::load`]) still validates every block up front, preserving the
+//! PR 7 contract that a damaged run file fails loudly at attach time.
+//!
+//! The v1 format (magic `D4MRUN01`: one body + one trailing CRC) is
+//! still read — old manifests recover unchanged — but always resident;
+//! [`Run::save`] writes v2 only.
 
+use super::cache::{Block, BlockCache};
 use super::io::{RealIo, StorageIo};
 use super::wal::crc32;
 use crate::util::intern::StrDict;
+use crate::util::retry::RetryPolicy;
 use crate::util::SharedStr;
 use std::io;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
-/// Magic bytes opening every run file (format version 01).
-pub const RUN_MAGIC: &[u8; 8] = b"D4MRUN01";
+/// Magic bytes of the legacy single-body format (read-only support).
+pub const RUN_MAGIC_V1: &[u8; 8] = b"D4MRUN01";
+
+/// Magic bytes of the paged block format every new run file uses.
+pub const RUN_MAGIC_V2: &[u8; 8] = b"D4MRUN02";
 
 /// Value id marking a deletion tombstone (never a real pool id).
 pub const TOMBSTONE: u32 = u32::MAX;
 
-/// Sanity cap on pool and triple counts read from disk.
+/// Sanity cap on pool, block, and triple counts read from disk.
 const MAX_COUNT: u32 = 1 << 28;
+
+/// Default number of triples per data block (12 bytes per triple, so
+/// ~12 KiB blocks — the same order as Accumulo's default data block
+/// target). Configurable per save for tests and tuning.
+pub const DEFAULT_BLOCK_TRIPLES: usize = 1024;
+
+/// Encoded size of one triple.
+const TRIPLE_BYTES: usize = 12;
+
+/// Size of the fixed trailer locating the footer.
+const TRAILER_BYTES: usize = 16;
 
 /// One cell as frozen: key plus value, `None` value = tombstone.
 pub type RunCell = (SharedStr, SharedStr, Option<SharedStr>);
 
-/// An immutable, dictionary-encoded sorted block of cells.
+/// Index entry for one data block.
 #[derive(Debug, Clone, PartialEq, Eq)]
+struct BlockMeta {
+    /// Pool ids of the block's first key (pool id order == string
+    /// order, so the index is searchable without touching any block).
+    first_row: u32,
+    first_col: u32,
+    /// Global index of the block's first triple (cumulative).
+    start: usize,
+    /// Number of triples in the block.
+    count: usize,
+    /// Absolute file offset of the raw block bytes.
+    offset: u64,
+    /// Raw length in bytes (`count * 12`).
+    len: u32,
+    /// CRC-32 of the raw block bytes.
+    crc: u32,
+}
+
+/// Lazily-paged triple storage behind a [`Run`].
+struct Paged {
+    io: Arc<dyn StorageIo>,
+    path: PathBuf,
+    cache: Arc<BlockCache>,
+    retry: RetryPolicy,
+    /// Process-unique cache-key namespace for this open.
+    uid: u64,
+    index: Vec<BlockMeta>,
+    total: usize,
+    /// Set on an unrecoverable block fault (failed read after retries,
+    /// CRC mismatch, id out of pool range). A poisoned run reads as
+    /// empty to in-flight cursors and is skipped — then quarantined —
+    /// exactly like a run whose whole file failed validation (PR 7).
+    poisoned: AtomicBool,
+}
+
+impl std::fmt::Debug for Paged {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Paged")
+            .field("path", &self.path)
+            .field("blocks", &self.index.len())
+            .field("total", &self.total)
+            .field("poisoned", &self.poisoned.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+/// Triple storage: fully resident (v1 loads, freshly frozen runs, the
+/// default durable mode) or paged through the block cache.
+#[derive(Debug)]
+enum Triples {
+    Resident(Vec<(u32, u32, u32)>),
+    Paged(Paged),
+}
+
+/// An immutable, dictionary-encoded sorted block of cells.
+#[derive(Debug)]
 pub struct Run {
     seq: u64,
     watermark: u64,
     /// Sorted distinct strings; `u32` id order equals string order.
+    /// Always resident, even for paged runs — the pool is the part the
+    /// merge walk borrows from (`&'r SharedStr`), so cursor lifetimes
+    /// are independent of which data block happens to be pinned.
     pool: Vec<SharedStr>,
-    /// `(row, col, val)` pool ids, sorted by `(row, col)`; duplicate
-    /// keys are adjacent, newest version first. `val == TOMBSTONE`
-    /// marks a deletion.
-    triples: Vec<(u32, u32, u32)>,
+    triples: Triples,
 }
+
+impl Clone for Run {
+    fn clone(&self) -> Run {
+        let triples = match &self.triples {
+            Triples::Resident(t) => Triples::Resident(t.clone()),
+            Triples::Paged(p) => Triples::Paged(Paged {
+                io: Arc::clone(&p.io),
+                path: p.path.clone(),
+                cache: Arc::clone(&p.cache),
+                retry: p.retry.clone(),
+                uid: p.uid,
+                index: p.index.clone(),
+                total: p.total,
+                poisoned: AtomicBool::new(p.poisoned.load(Ordering::Relaxed)),
+            }),
+        };
+        Run { seq: self.seq, watermark: self.watermark, pool: self.pool.clone(), triples }
+    }
+}
+
+impl PartialEq for Run {
+    fn eq(&self, other: &Run) -> bool {
+        self.seq == other.seq
+            && self.watermark == other.watermark
+            && self.pool == other.pool
+            && match (&self.triples, &other.triples) {
+                (Triples::Resident(a), Triples::Resident(b)) => a == b,
+                (Triples::Paged(a), Triples::Paged(b)) => {
+                    a.path == b.path && a.total == b.total && a.index == b.index
+                }
+                _ => false,
+            }
+    }
+}
+
+impl Eq for Run {}
 
 impl Run {
     /// Freeze `cells` into a run. `cells` must be sorted by `(row,
@@ -95,7 +221,7 @@ impl Run {
                 (rank[r as usize], rank[c as usize], v)
             })
             .collect();
-        Run { seq, watermark, pool, triples }
+        Run { seq, watermark, pool, triples: Triples::Resident(triples) }
     }
 
     /// The run's file sequence number (unique per table, increasing).
@@ -110,25 +236,67 @@ impl Run {
 
     /// Number of stored cells (tombstones included).
     pub fn len(&self) -> usize {
-        self.triples.len()
+        match &self.triples {
+            Triples::Resident(t) => t.len(),
+            Triples::Paged(p) => p.total,
+        }
     }
 
     /// Whether the run stores no cells at all.
     pub fn is_empty(&self) -> bool {
-        self.triples.is_empty()
+        self.len() == 0
     }
 
-    /// Key of cell `i` as pooled strings.
+    /// Whether the run is paged through the block cache (vs. fully
+    /// resident in memory).
+    pub fn is_paged(&self) -> bool {
+        matches!(self.triples, Triples::Paged(_))
+    }
+
+    /// Whether an unrecoverable block fault has been observed. Poisoned
+    /// runs read as empty to new cursors; `Table::sync` and the
+    /// compaction entry points quarantine them (PR 7 semantics at block
+    /// granularity). Resident runs never poison — their bytes were
+    /// fully validated at load.
+    pub fn is_poisoned(&self) -> bool {
+        match &self.triples {
+            Triples::Resident(_) => false,
+            Triples::Paged(p) => p.poisoned.load(Ordering::Acquire),
+        }
+    }
+
+    /// Triple ids of cell `i`, faulting its block in if needed. `None`
+    /// only on a paged run whose block cannot be read or fails its CRC
+    /// — which also poisons the run.
+    #[inline]
+    fn ids(&self, i: usize) -> Option<(u32, u32, u32)> {
+        match &self.triples {
+            Triples::Resident(t) => Some(t[i]),
+            Triples::Paged(p) => {
+                let b = p.block_of(i);
+                let blk = p.load_block(b, self.pool.len())?;
+                Some(blk.triples()[i - p.index[b].start])
+            }
+        }
+    }
+
+    /// Key of cell `i` as pooled strings. On a paged run this faults
+    /// the containing block (point-lookup path; the merge walk goes
+    /// through [`RunCursor`], which pins one block at a time). After a
+    /// block fault the run is poisoned and this degrades to the first
+    /// pool entry — callers observe the mismatch and treat the run as
+    /// absent, matching the quarantine semantics.
     #[inline]
     pub fn key(&self, i: usize) -> (&SharedStr, &SharedStr) {
-        let (r, c, _) = self.triples[i];
+        let (r, c, _) = self.ids(i).unwrap_or((0, 0, TOMBSTONE));
         (&self.pool[r as usize], &self.pool[c as usize])
     }
 
-    /// Value of cell `i`; `None` for a tombstone.
+    /// Value of cell `i`; `None` for a tombstone (or a faulted block —
+    /// see [`Run::key`]).
     #[inline]
     pub fn val(&self, i: usize) -> Option<&SharedStr> {
-        let (_, _, v) = self.triples[i];
+        let (_, _, v) = self.ids(i).unwrap_or((0, 0, TOMBSTONE));
         if v == TOMBSTONE {
             None
         } else {
@@ -145,7 +313,9 @@ impl Run {
     /// Index of the first cell at or after `(row, col)` (`inclusive`)
     /// or strictly after the *whole version group* of `(row, col)`
     /// (`!inclusive`). Pool ids sort like strings, so this is a plain
-    /// binary search over pooled `&str`s.
+    /// binary search over pooled `&str`s; on a paged run the block
+    /// index narrows the search to one block first, so a seek faults at
+    /// most one block and never touches the gaps.
     pub fn lower_bound(&self, row: &str, col: &str, inclusive: bool) -> usize {
         if inclusive {
             self.partition(|k| k < (row, col))
@@ -154,19 +324,46 @@ impl Run {
         }
     }
 
-    #[inline]
+    /// Global partition point of a monotone key predicate (`true` on a
+    /// prefix of the sorted cells).
     fn partition(&self, pred: impl Fn((&str, &str)) -> bool) -> usize {
-        let mut lo = 0usize;
-        let mut hi = self.triples.len();
-        while lo < hi {
-            let mid = lo + (hi - lo) / 2;
-            if pred(self.key_str(mid)) {
-                lo = mid + 1;
-            } else {
-                hi = mid;
+        match &self.triples {
+            Triples::Resident(t) => {
+                partition_slice(t.len(), |i| pred(self.key_str_resident(t, i)))
+            }
+            Triples::Paged(p) => {
+                // Count index entries whose first key satisfies `pred`;
+                // the partition point lives in the last such block (or
+                // is 0 when even the first key fails the predicate).
+                let pool = &self.pool;
+                let nb = partition_slice(p.index.len(), |b| {
+                    let m = &p.index[b];
+                    pred((pool[m.first_row as usize].as_str(), pool[m.first_col as usize].as_str()))
+                });
+                if nb == 0 {
+                    return 0;
+                }
+                let b = nb - 1;
+                let meta = &p.index[b];
+                let Some(blk) = p.load_block(b, pool.len()) else {
+                    // Faulted (now poisoned): any in-range position is
+                    // fine, the cursor built from it will read empty.
+                    return meta.start;
+                };
+                let triples = blk.triples();
+                meta.start
+                    + partition_slice(triples.len(), |i| {
+                        let (r, c, _) = triples[i];
+                        pred((pool[r as usize].as_str(), pool[c as usize].as_str()))
+                    })
             }
         }
-        lo
+    }
+
+    #[inline]
+    fn key_str_resident<'a>(&'a self, t: &[(u32, u32, u32)], i: usize) -> (&'a str, &'a str) {
+        let (r, c, _) = t[i];
+        (self.pool[r as usize].as_str(), self.pool[c as usize].as_str())
     }
 
     /// Half-open index range of cells whose row lies in `[lo, hi)`
@@ -179,9 +376,23 @@ impl Run {
         };
         let end = match hi {
             Some(hi) => self.partition(|(r, _)| r < hi),
-            None => self.triples.len(),
+            None => self.len(),
         };
         (start, end.max(start))
+    }
+
+    /// A row usable as a chunking cut point near cell `i`. Resident
+    /// runs answer exactly; paged runs answer with the first row of the
+    /// containing block straight from the index — zero block faults, at
+    /// the cost of a slightly coarser (still valid) cut.
+    pub(crate) fn sample_row(&self, i: usize) -> &SharedStr {
+        match &self.triples {
+            Triples::Resident(_) => self.key(i).0,
+            Triples::Paged(p) => {
+                let m = &p.index[p.block_of(i)];
+                &self.pool[m.first_row as usize]
+            }
+        }
     }
 
     /// Newest version of `(row, col)` in this run: `None` if the run
@@ -189,7 +400,7 @@ impl Run {
     /// a tombstone, `Some(Some(val))` otherwise.
     pub fn get(&self, row: &str, col: &str) -> Option<Option<&SharedStr>> {
         let i = self.lower_bound(row, col, true);
-        if i < self.triples.len() && self.key_str(i) == (row, col) {
+        if i < self.len() && self.key_str(i) == (row, col) {
             Some(self.val(i))
         } else {
             None
@@ -201,18 +412,75 @@ impl Run {
         self.lower_bound(row, col, false) - self.lower_bound(row, col, true)
     }
 
-    /// Serialize to `path` (see the module docs for the format).
+    /// Serialize to `path` in the v2 paged format (see module docs).
     pub fn save(&self, path: &Path) -> io::Result<()> {
         self.save_with(&RealIo, path)
     }
 
     /// [`Run::save`] through an explicit [`StorageIo`]. The whole file
-    /// (magic + body + CRC) is built in memory and installed with
+    /// is built in memory and installed with
     /// [`StorageIo::write_atomic`] — a crash or failure mid-save leaves
-    /// either the old file or nothing, never a torn run.
+    /// either the old file or nothing, never a torn run. (Streaming
+    /// compaction writes block-by-block through [`RunWriter`] instead.)
     pub fn save_with(&self, io: &dyn StorageIo, path: &Path) -> io::Result<()> {
-        let mut bytes = Vec::with_capacity(48 + self.pool.len() * 12 + self.triples.len() * 12);
-        bytes.extend_from_slice(RUN_MAGIC);
+        self.save_with_blocks(io, path, DEFAULT_BLOCK_TRIPLES)
+    }
+
+    /// [`Run::save_with`] with an explicit data-block size in triples.
+    pub fn save_with_blocks(
+        &self,
+        io: &dyn StorageIo,
+        path: &Path,
+        block_triples: usize,
+    ) -> io::Result<()> {
+        let Triples::Resident(triples) = &self.triples else {
+            // Paged runs are already on disk; re-saving one would mean
+            // faulting every block back in, which no caller needs.
+            return Err(io::Error::other("cannot re-save a paged run"));
+        };
+        let block_triples = block_triples.max(1);
+        let mut bytes =
+            Vec::with_capacity(64 + self.pool.len() * 12 + triples.len() * TRIPLE_BYTES);
+        bytes.extend_from_slice(RUN_MAGIC_V2);
+        let mut index: Vec<BlockMeta> = Vec::new();
+        for chunk in triples.chunks(block_triples) {
+            let offset = bytes.len() as u64;
+            let start = index.last().map_or(0, |m: &BlockMeta| m.start + m.count);
+            for &(r, c, v) in chunk {
+                bytes.extend_from_slice(&r.to_le_bytes());
+                bytes.extend_from_slice(&c.to_le_bytes());
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            let raw = &bytes[offset as usize..];
+            let (first_row, first_col, _) = chunk[0];
+            index.push(BlockMeta {
+                first_row,
+                first_col,
+                start,
+                count: chunk.len(),
+                offset,
+                len: raw.len() as u32,
+                crc: crc32(raw),
+            });
+        }
+        let footer_off = bytes.len() as u64;
+        let footer = encode_footer(self.seq, self.watermark, &self.pool, &index, triples.len());
+        bytes.extend_from_slice(&footer);
+        bytes.extend_from_slice(&footer_off.to_le_bytes());
+        bytes.extend_from_slice(&(footer.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&crc32(&footer).to_le_bytes());
+        io.write_atomic(path, &bytes)
+    }
+
+    /// Serialize in the **legacy v1** single-body format. Kept so the
+    /// cross-version regression tests can manufacture old-format files;
+    /// production code always writes v2.
+    pub fn save_v1_with(&self, io: &dyn StorageIo, path: &Path) -> io::Result<()> {
+        let Triples::Resident(triples) = &self.triples else {
+            return Err(io::Error::other("cannot re-save a paged run"));
+        };
+        let mut bytes = Vec::with_capacity(48 + self.pool.len() * 12 + triples.len() * 12);
+        bytes.extend_from_slice(RUN_MAGIC_V1);
         bytes.extend_from_slice(&self.seq.to_le_bytes());
         bytes.extend_from_slice(&self.watermark.to_le_bytes());
         bytes.extend_from_slice(&(self.pool.len() as u32).to_le_bytes());
@@ -220,75 +488,111 @@ impl Run {
             bytes.extend_from_slice(&(s.len() as u32).to_le_bytes());
             bytes.extend_from_slice(s.as_bytes());
         }
-        bytes.extend_from_slice(&(self.triples.len() as u32).to_le_bytes());
-        for &(r, c, v) in &self.triples {
+        bytes.extend_from_slice(&(triples.len() as u32).to_le_bytes());
+        for &(r, c, v) in triples {
             bytes.extend_from_slice(&r.to_le_bytes());
             bytes.extend_from_slice(&c.to_le_bytes());
             bytes.extend_from_slice(&v.to_le_bytes());
         }
-        let crc = crc32(&bytes[RUN_MAGIC.len()..]);
+        let crc = crc32(&bytes[RUN_MAGIC_V1.len()..]);
         bytes.extend_from_slice(&crc.to_le_bytes());
         io.write_atomic(path, &bytes)
     }
 
-    /// Load a run from `path`, validating magic, CRC, and id bounds.
-    /// Unlike the WAL, a damaged run file is a hard
-    /// [`io::ErrorKind::InvalidData`] error: runs are written atomically
-    /// after an fsync, so torn runs are not an expected crash state —
-    /// recovery quarantines such files instead of serving wrong cells.
+    /// Load a run from `path` fully resident, validating magic, CRCs,
+    /// and id bounds — both format versions. Unlike the WAL, a damaged
+    /// run file is a hard [`io::ErrorKind::InvalidData`] error: runs
+    /// are written atomically after an fsync, so torn runs are not an
+    /// expected crash state — recovery quarantines such files instead
+    /// of serving wrong cells.
     pub fn load(path: &Path) -> io::Result<Run> {
         Self::load_with(&RealIo, path)
     }
 
     /// [`Run::load`] through an explicit [`StorageIo`].
     pub fn load_with(io: &dyn StorageIo, path: &Path) -> io::Result<Run> {
-        let bad = |msg: &str| {
-            io::Error::new(io::ErrorKind::InvalidData, format!("{}: {msg}", path.display()))
-        };
         let bytes = io.read(path)?;
-        if bytes.len() < RUN_MAGIC.len() + 4 || &bytes[..RUN_MAGIC.len()] != RUN_MAGIC {
-            return Err(bad("not a d4m run file (bad magic or too short)"));
+        if bytes.len() >= 8 && &bytes[..8] == RUN_MAGIC_V1 {
+            return Self::load_v1(&bytes, path);
         }
-        let body = &bytes[RUN_MAGIC.len()..bytes.len() - 4];
+        if bytes.len() >= 8 && &bytes[..8] == RUN_MAGIC_V2 {
+            return Self::load_v2(&bytes, path);
+        }
+        Err(bad(path, "not a d4m run file (bad magic or too short)"))
+    }
+
+    /// Open a run **paged**: read only the trailer and footer through
+    /// `io`, leave the data blocks on disk to be faulted lazily through
+    /// `cache`. A v1 file (no block structure) falls back to a fully
+    /// resident load. `retry` governs each later block read.
+    pub fn open_with(
+        io: Arc<dyn StorageIo>,
+        path: &Path,
+        cache: Arc<BlockCache>,
+        retry: RetryPolicy,
+    ) -> io::Result<Run> {
+        let magic = io.read_range(path, 0, 8)?;
+        if magic.as_slice() == RUN_MAGIC_V1 {
+            return Self::load_with(&*io, path);
+        }
+        if magic.as_slice() != RUN_MAGIC_V2 {
+            return Err(bad(path, "not a d4m run file (bad magic or too short)"));
+        }
+        let size = io.file_size(path)?;
+        if size < (8 + TRAILER_BYTES) as u64 {
+            return Err(bad(path, "run file too short for its trailer"));
+        }
+        let trailer = io.read_range(path, size - TRAILER_BYTES as u64, TRAILER_BYTES)?;
+        let footer_off = u64::from_le_bytes(trailer[0..8].try_into().expect("8 bytes"));
+        let footer_len = u32::from_le_bytes(trailer[8..12].try_into().expect("4 bytes")) as usize;
+        let footer_crc = u32::from_le_bytes(trailer[12..16].try_into().expect("4 bytes"));
+        if footer_off < 8
+            || footer_len as u64 > size
+            || footer_off + footer_len as u64 + TRAILER_BYTES as u64 != size
+        {
+            return Err(bad(path, "run trailer geometry out of bounds"));
+        }
+        let footer = io.read_range(path, footer_off, footer_len)?;
+        if crc32(&footer) != footer_crc {
+            return Err(bad(path, "run footer failed its checksum"));
+        }
+        let (seq, watermark, pool, index, total) =
+            decode_footer(&footer, footer_off, path)?;
+        Ok(Run {
+            seq,
+            watermark,
+            pool,
+            triples: Triples::Paged(Paged {
+                io,
+                path: path.to_path_buf(),
+                cache,
+                retry,
+                uid: BlockCache::next_run_uid(),
+                index,
+                total,
+                poisoned: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    fn load_v1(bytes: &[u8], path: &Path) -> io::Result<Run> {
+        if bytes.len() < RUN_MAGIC_V1.len() + 4 {
+            return Err(bad(path, "not a d4m run file (bad magic or too short)"));
+        }
+        let body = &bytes[RUN_MAGIC_V1.len()..bytes.len() - 4];
         let stored_crc =
             u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().expect("4 bytes"));
         if crc32(body) != stored_crc {
-            return Err(bad("run body failed its checksum"));
-        }
-        struct Reader<'a> {
-            buf: &'a [u8],
-            pos: usize,
-        }
-        impl<'a> Reader<'a> {
-            fn take(&mut self, n: usize) -> Option<&'a [u8]> {
-                let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len())?;
-                let s = &self.buf[self.pos..end];
-                self.pos = end;
-                Some(s)
-            }
-            fn u32(&mut self) -> Option<u32> {
-                self.take(4).map(|b| u32::from_le_bytes(b.try_into().expect("4 bytes")))
-            }
-            fn u64(&mut self) -> Option<u64> {
-                self.take(8).map(|b| u64::from_le_bytes(b.try_into().expect("8 bytes")))
-            }
+            return Err(bad(path, "run body failed its checksum"));
         }
         let mut rd = Reader { buf: body, pos: 0 };
         let parse = |rd: &mut Reader<'_>| -> Option<Result<Run, &'static str>> {
             let seq = rd.u64()?;
             let watermark = rd.u64()?;
-            let pool_len = rd.u32()?;
-            if pool_len > MAX_COUNT {
-                return Some(Err("run pool count out of range"));
-            }
-            let mut pool = Vec::with_capacity(pool_len as usize);
-            for _ in 0..pool_len {
-                let len = rd.u32()? as usize;
-                match std::str::from_utf8(rd.take(len)?) {
-                    Ok(s) => pool.push(SharedStr::from(s)),
-                    Err(_) => return Some(Err("run pool entry is not UTF-8")),
-                }
-            }
+            let pool = match read_pool(rd)? {
+                Ok(pool) => pool,
+                Err(msg) => return Some(Err(msg)),
+            };
             let ntriples = rd.u32()?;
             if ntriples > MAX_COUNT {
                 return Some(Err("run triple count out of range"));
@@ -296,40 +600,442 @@ impl Run {
             let mut triples = Vec::with_capacity(ntriples as usize);
             for _ in 0..ntriples {
                 let (r, c, v) = (rd.u32()?, rd.u32()?, rd.u32()?);
-                let in_pool = |id: u32| (id as usize) < pool.len();
-                if !in_pool(r) || !in_pool(c) || (v != TOMBSTONE && !in_pool(v)) {
+                if !ids_in_pool(r, c, v, pool.len()) {
                     return Some(Err("run triple id out of pool range"));
                 }
                 triples.push((r, c, v));
             }
-            Some(Ok(Run { seq, watermark, pool, triples }))
+            Some(Ok(Run { seq, watermark, pool, triples: Triples::Resident(triples) }))
         };
         let run = match parse(&mut rd) {
-            None => return Err(bad("run body truncated")),
-            Some(Err(msg)) => return Err(bad(msg)),
+            None => return Err(bad(path, "run body truncated")),
+            Some(Err(msg)) => return Err(bad(path, msg)),
             Some(Ok(run)) => run,
         };
         if rd.pos != body.len() {
-            return Err(bad("trailing bytes after run body"));
+            return Err(bad(path, "trailing bytes after run body"));
         }
         Ok(run)
     }
+
+    fn load_v2(bytes: &[u8], path: &Path) -> io::Result<Run> {
+        if bytes.len() < 8 + TRAILER_BYTES {
+            return Err(bad(path, "run file too short for its trailer"));
+        }
+        let t = &bytes[bytes.len() - TRAILER_BYTES..];
+        let footer_off = u64::from_le_bytes(t[0..8].try_into().expect("8 bytes")) as usize;
+        let footer_len = u32::from_le_bytes(t[8..12].try_into().expect("4 bytes")) as usize;
+        let footer_crc = u32::from_le_bytes(t[12..16].try_into().expect("4 bytes"));
+        if footer_off < 8 || footer_off + footer_len + TRAILER_BYTES != bytes.len() {
+            return Err(bad(path, "run trailer geometry out of bounds"));
+        }
+        let footer = &bytes[footer_off..footer_off + footer_len];
+        if crc32(footer) != footer_crc {
+            return Err(bad(path, "run footer failed its checksum"));
+        }
+        let (seq, watermark, pool, index, total) =
+            decode_footer(footer, footer_off as u64, path)?;
+        let mut triples = Vec::with_capacity(total);
+        for m in &index {
+            let (off, len) = (m.offset as usize, m.len as usize);
+            let raw = &bytes[off..off + len];
+            if crc32(raw) != m.crc {
+                return Err(bad(path, "run block failed its checksum"));
+            }
+            for t in raw.chunks_exact(TRIPLE_BYTES) {
+                let r = u32::from_le_bytes(t[0..4].try_into().expect("4 bytes"));
+                let c = u32::from_le_bytes(t[4..8].try_into().expect("4 bytes"));
+                let v = u32::from_le_bytes(t[8..12].try_into().expect("4 bytes"));
+                if !ids_in_pool(r, c, v, pool.len()) {
+                    return Err(bad(path, "run triple id out of pool range"));
+                }
+                triples.push((r, c, v));
+            }
+        }
+        Ok(Run { seq, watermark, pool, triples: Triples::Resident(triples) })
+    }
 }
+
+impl Paged {
+    /// Index of the block containing global triple `i`.
+    fn block_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.total);
+        self.index.partition_point(|m| m.start + m.count <= i)
+    }
+
+    /// Fault block `b` in through the cache, verifying its CRC and id
+    /// bounds. `None` poisons the run (read failure after retries or
+    /// corruption) — callers treat the block as empty; the next sweep
+    /// quarantines the file.
+    fn load_block(&self, b: usize, pool_len: usize) -> Option<Arc<Block>> {
+        if self.poisoned.load(Ordering::Acquire) {
+            return None;
+        }
+        let meta = &self.index[b];
+        let loaded = self.cache.get_or_load((self.uid, b as u32), || {
+            let raw = self.retry.run("block read", || {
+                self.io.read_range(&self.path, meta.offset, meta.len as usize)
+            })?;
+            if crc32(&raw) != meta.crc {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("{}: run block failed its checksum", self.path.display()),
+                ));
+            }
+            let mut triples = Vec::with_capacity(meta.count);
+            for t in raw.chunks_exact(TRIPLE_BYTES) {
+                let r = u32::from_le_bytes(t[0..4].try_into().expect("4 bytes"));
+                let c = u32::from_le_bytes(t[4..8].try_into().expect("4 bytes"));
+                let v = u32::from_le_bytes(t[8..12].try_into().expect("4 bytes"));
+                if !ids_in_pool(r, c, v, pool_len) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("{}: run triple id out of pool range", self.path.display()),
+                    ));
+                }
+                triples.push((r, c, v));
+            }
+            Ok(self.cache.make_block(triples))
+        });
+        match loaded {
+            Ok(blk) => Some(blk),
+            Err(_) => {
+                self.poisoned.store(true, Ordering::Release);
+                None
+            }
+        }
+    }
+}
+
+fn bad(path: &Path, msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("{}: {msg}", path.display()))
+}
+
+/// `partition_point` over `0..n` for a predicate true on a prefix.
+fn partition_slice(n: usize, pred: impl Fn(usize) -> bool) -> usize {
+    let mut lo = 0usize;
+    let mut hi = n;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[inline]
+fn ids_in_pool(r: u32, c: u32, v: u32, pool_len: usize) -> bool {
+    let in_pool = |id: u32| (id as usize) < pool_len;
+    in_pool(r) && in_pool(c) && (v == TOMBSTONE || in_pool(v))
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len())?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+}
+
+fn read_pool(rd: &mut Reader<'_>) -> Option<Result<Vec<SharedStr>, &'static str>> {
+    let pool_len = rd.u32()?;
+    if pool_len > MAX_COUNT {
+        return Some(Err("run pool count out of range"));
+    }
+    let mut pool = Vec::with_capacity(pool_len as usize);
+    for _ in 0..pool_len {
+        let len = rd.u32()? as usize;
+        match std::str::from_utf8(rd.take(len)?) {
+            Ok(s) => pool.push(SharedStr::from(s)),
+            Err(_) => return Some(Err("run pool entry is not UTF-8")),
+        }
+    }
+    Some(Ok(pool))
+}
+
+fn encode_footer(
+    seq: u64,
+    watermark: u64,
+    pool: &[SharedStr],
+    index: &[BlockMeta],
+    total: usize,
+) -> Vec<u8> {
+    let mut f = Vec::with_capacity(32 + pool.len() * 12 + index.len() * 28);
+    f.extend_from_slice(&seq.to_le_bytes());
+    f.extend_from_slice(&watermark.to_le_bytes());
+    f.extend_from_slice(&(pool.len() as u32).to_le_bytes());
+    for s in pool {
+        f.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        f.extend_from_slice(s.as_bytes());
+    }
+    f.extend_from_slice(&(index.len() as u32).to_le_bytes());
+    for m in index {
+        f.extend_from_slice(&m.first_row.to_le_bytes());
+        f.extend_from_slice(&m.first_col.to_le_bytes());
+        f.extend_from_slice(&(m.count as u32).to_le_bytes());
+        f.extend_from_slice(&m.offset.to_le_bytes());
+        f.extend_from_slice(&m.len.to_le_bytes());
+        f.extend_from_slice(&m.crc.to_le_bytes());
+    }
+    f.extend_from_slice(&(total as u32).to_le_bytes());
+    f
+}
+
+/// Parse and validate a v2 footer. `footer_off` bounds the block
+/// geometry (every block must end before the footer starts).
+#[allow(clippy::type_complexity)]
+fn decode_footer(
+    footer: &[u8],
+    footer_off: u64,
+    path: &Path,
+) -> io::Result<(u64, u64, Vec<SharedStr>, Vec<BlockMeta>, usize)> {
+    let mut rd = Reader { buf: footer, pos: 0 };
+    let parse = |rd: &mut Reader<'_>| -> Option<Result<_, &'static str>> {
+        let seq = rd.u64()?;
+        let watermark = rd.u64()?;
+        let pool = match read_pool(rd)? {
+            Ok(pool) => pool,
+            Err(msg) => return Some(Err(msg)),
+        };
+        let nblocks = rd.u32()?;
+        if nblocks > MAX_COUNT {
+            return Some(Err("run block count out of range"));
+        }
+        let mut index = Vec::with_capacity(nblocks as usize);
+        let mut start = 0usize;
+        let mut prev_end = 8u64;
+        for _ in 0..nblocks {
+            let first_row = rd.u32()?;
+            let first_col = rd.u32()?;
+            let count = rd.u32()? as usize;
+            let offset = rd.u64()?;
+            let len = rd.u32()?;
+            let crc = rd.u32()?;
+            let in_pool = |id: u32| (id as usize) < pool.len();
+            if !in_pool(first_row) || !in_pool(first_col) {
+                return Some(Err("run block first key out of pool range"));
+            }
+            if count == 0
+                || count as u32 > MAX_COUNT
+                || len as usize != count * TRIPLE_BYTES
+                || offset < prev_end
+                || offset + len as u64 > footer_off
+            {
+                return Some(Err("run block geometry out of bounds"));
+            }
+            prev_end = offset + len as u64;
+            index.push(BlockMeta { first_row, first_col, start, count, offset, len, crc });
+            start += count;
+        }
+        let total = rd.u32()? as usize;
+        if total != start {
+            return Some(Err("run triple count disagrees with block index"));
+        }
+        Some(Ok((seq, watermark, pool, index, total)))
+    };
+    let parsed = match parse(&mut rd) {
+        None => return Err(bad(path, "run footer truncated")),
+        Some(Err(msg)) => return Err(bad(path, msg)),
+        Some(Ok(p)) => p,
+    };
+    if rd.pos != footer.len() {
+        return Err(bad(path, "trailing bytes after run footer"));
+    }
+    Ok(parsed)
+}
+
+// ------------------------------------------------------------ RunWriter
+
+/// Streaming v2 run writer: blocks go to storage as they fill, so the
+/// writer's memory is one block plus the (resident-by-design) pool and
+/// index — the bounded-memory half of streaming major compaction.
+///
+/// The pool must be complete and sorted *before* the first triple is
+/// pushed (ids are final in the file); the streaming compactor gets it
+/// from its intern pass. Writes go to `<path>.tmp`; [`RunWriter::finish`]
+/// appends the footer + trailer, fsyncs, and renames over `path` — the
+/// same atomic-install contract as [`Run::save_with`]. Dropping an
+/// unfinished writer leaves only a `.tmp` file for the orphan GC.
+pub(crate) struct RunWriter {
+    file: Box<dyn super::io::StorageFile>,
+    seq: u64,
+    watermark: u64,
+    pool: Vec<SharedStr>,
+    block_triples: usize,
+    /// Serialized bytes of the currently filling block.
+    buf: Vec<u8>,
+    /// First key of the currently filling block.
+    first: Option<(u32, u32)>,
+    index: Vec<BlockMeta>,
+    written: u64,
+    total: usize,
+}
+
+impl RunWriter {
+    /// Open `<path>.tmp` through `io` and write the magic. `pool` must
+    /// be sorted ascending with no duplicates.
+    pub(crate) fn create(
+        io: &dyn StorageIo,
+        path: &Path,
+        seq: u64,
+        watermark: u64,
+        pool: Vec<SharedStr>,
+        block_triples: usize,
+    ) -> io::Result<RunWriter> {
+        debug_assert!(pool.windows(2).all(|w| w[0].as_str() < w[1].as_str()));
+        let tmp = tmp_of(path);
+        let mut file = io.create(&tmp)?;
+        file.write_all(RUN_MAGIC_V2)?;
+        Ok(RunWriter {
+            file,
+            seq,
+            watermark,
+            pool,
+            block_triples: block_triples.max(1),
+            buf: Vec::new(),
+            first: None,
+            index: Vec::new(),
+            written: 8,
+            total: 0,
+        })
+    }
+
+    /// Pool id of `s`, or `None` when the string was never interned —
+    /// a divergence between the interning pass and the streaming pass,
+    /// only reachable when a source block faulted between them. Callers
+    /// treat `None` as a fault, never a panic.
+    pub(crate) fn id_of(&self, s: &str) -> Option<u32> {
+        self.pool.binary_search_by(|p| p.as_str().cmp(s)).ok().map(|i| i as u32)
+    }
+
+    /// Append one triple (ids from [`RunWriter::id_of`]; `TOMBSTONE`
+    /// for a deleted value). Must arrive in `(row, col)` order,
+    /// duplicates newest-first — the merge order.
+    pub(crate) fn push(&mut self, r: u32, c: u32, v: u32) -> io::Result<()> {
+        if self.first.is_none() {
+            self.first = Some((r, c));
+        }
+        self.buf.extend_from_slice(&r.to_le_bytes());
+        self.buf.extend_from_slice(&c.to_le_bytes());
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.total += 1;
+        if self.buf.len() >= self.block_triples * TRIPLE_BYTES {
+            self.flush_block()?;
+        }
+        Ok(())
+    }
+
+    fn flush_block(&mut self) -> io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let (first_row, first_col) = self.first.take().expect("non-empty block has a first key");
+        let count = self.buf.len() / TRIPLE_BYTES;
+        let start = self.index.last().map_or(0, |m| m.start + m.count);
+        self.index.push(BlockMeta {
+            first_row,
+            first_col,
+            start,
+            count,
+            offset: self.written,
+            len: self.buf.len() as u32,
+            crc: crc32(&self.buf),
+        });
+        self.file.write_all(&self.buf)?;
+        self.written += self.buf.len() as u64;
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// Flush the last block, write footer + trailer, fsync, and rename
+    /// the tmp file over `path`. Returns the number of cells written.
+    pub(crate) fn finish(mut self, io: &dyn StorageIo, path: &Path) -> io::Result<usize> {
+        self.flush_block()?;
+        let footer_off = self.written;
+        let footer =
+            encode_footer(self.seq, self.watermark, &self.pool, &self.index, self.total);
+        self.file.write_all(&footer)?;
+        let mut trailer = Vec::with_capacity(TRAILER_BYTES);
+        trailer.extend_from_slice(&footer_off.to_le_bytes());
+        trailer.extend_from_slice(&(footer.len() as u32).to_le_bytes());
+        trailer.extend_from_slice(&crc32(&footer).to_le_bytes());
+        self.file.write_all(&trailer)?;
+        self.file.sync_data()?;
+        drop(self.file);
+        io.rename(&tmp_of(path), path)?;
+        Ok(self.total)
+    }
+}
+
+/// `<path>.tmp`, matching [`StorageIo::write_atomic`]'s convention so
+/// abandoned streaming writes are swept by the same stale-tmp GC.
+fn tmp_of(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_owned();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+// ------------------------------------------------------------ RunCursor
 
 /// Forward cursor over a run's cells within an extent-clamped index
 /// window. Borrowed views live as long as the run (`'r`), independent
 /// of the cursor borrow — the merge walk peeks several cursors at once.
+/// (The strings come from the always-resident pool; only the id triples
+/// page, so the lifetimes hold in both modes.)
+///
+/// On a paged run the cursor pins exactly one block at a time (an
+/// `Arc<Block>` that stays valid even if the cache evicts it) — this is
+/// the "+ one block per active cursor" term of the scan memory bound. A
+/// block fault failure poisons the run and exhausts the cursor; newer
+/// cursors skip poisoned runs entirely.
 #[derive(Debug)]
 pub struct RunCursor<'r> {
     run: &'r Run,
     pos: usize,
     end: usize,
+    /// Pinned `(block index, block)` for paged runs.
+    pin: std::cell::RefCell<Option<(usize, Arc<Block>)>>,
 }
 
 impl<'r> RunCursor<'r> {
     /// Cursor over `run` positioned at `pos`, bounded by `end`.
     pub fn new(run: &'r Run, pos: usize, end: usize) -> RunCursor<'r> {
-        RunCursor { run, pos: pos.min(end), end }
+        RunCursor { run, pos: pos.min(end), end, pin: std::cell::RefCell::new(None) }
+    }
+
+    /// Triple ids at global position `i`, through the pin for paged
+    /// runs. `None` exhausts the cursor (block fault on a paged run).
+    #[inline]
+    fn ids_at(&self, i: usize) -> Option<(u32, u32, u32)> {
+        match &self.run.triples {
+            Triples::Resident(t) => Some(t[i]),
+            Triples::Paged(p) => {
+                let b = p.block_of(i);
+                let mut pin = self.pin.borrow_mut();
+                if pin.as_ref().map(|(bi, _)| *bi) != Some(b) {
+                    *pin = Some((b, p.load_block(b, self.run.pool.len())?));
+                }
+                let (_, blk) = pin.as_ref().expect("just pinned");
+                Some(blk.triples()[i - p.index[b].start])
+            }
+        }
     }
 
     /// Current cell, or `None` past the window. The value is `None`
@@ -339,8 +1045,13 @@ impl<'r> RunCursor<'r> {
         if self.pos >= self.end {
             return None;
         }
-        let (r, c) = self.run.key(self.pos);
-        Some((r, c, self.run.val(self.pos)))
+        let (r, c, v) = self.ids_at(self.pos)?;
+        // Borrow through the copied `&'r Run`, not through `&self`, so
+        // the returned views outlive the cursor borrow.
+        let run: &'r Run = self.run;
+        let pool = &run.pool;
+        let val = if v == TOMBSTONE { None } else { Some(&pool[v as usize]) };
+        Some((&pool[r as usize], &pool[c as usize], val))
     }
 
     /// Step past the *entire version group* of the current key, so the
@@ -349,11 +1060,33 @@ impl<'r> RunCursor<'r> {
         if self.pos >= self.end {
             return;
         }
-        // `key_str` borrows from `self.run: &'r Run`, not from the
-        // cursor, so the key stays valid while `pos` moves. Version
-        // groups are tiny (≤ max_versions); linear step.
-        let key = self.run.key_str(self.pos);
-        while self.pos < self.end && self.run.key_str(self.pos) == key {
+        let Some((kr, kc, _)) = self.ids_at(self.pos) else {
+            self.pos = self.end;
+            return;
+        };
+        // Ids are stable across blocks (one pool per run), so the
+        // version-group compare needs no string lookups. Version groups
+        // are tiny (≤ max_versions); linear step.
+        loop {
+            self.pos += 1;
+            if self.pos >= self.end {
+                return;
+            }
+            match self.ids_at(self.pos) {
+                Some((r, c, _)) if (r, c) == (kr, kc) => continue,
+                Some(_) => return,
+                None => {
+                    self.pos = self.end;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Step exactly one stored version forward (the compaction merge
+    /// needs every version, not just each key's newest).
+    pub(crate) fn advance_one(&mut self) {
+        if self.pos < self.end {
             self.pos += 1;
         }
     }
@@ -379,6 +1112,13 @@ mod tests {
                 cell("d", "z", Some("4")),
             ],
         )
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("d4m-run-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
     }
 
     #[test]
@@ -446,13 +1186,12 @@ mod tests {
 
     #[test]
     fn save_load_roundtrip_and_corruption() {
-        let dir = std::env::temp_dir().join("d4m-run-tests");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("roundtrip");
         let path = dir.join("roundtrip.run");
         let run = sample();
         run.save(&path).unwrap();
         assert_eq!(Run::load(&path).unwrap(), run);
-        // Flip a byte in the body: load must fail the checksum.
+        // Flip a byte in the body: load must fail a checksum.
         let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0x01;
@@ -461,5 +1200,162 @@ mod tests {
         // Not a run file at all.
         std::fs::write(&path, b"garbage").unwrap();
         assert_eq!(Run::load(&path).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_files_still_load_and_match_v2() {
+        let dir = tmp_dir("v1compat");
+        let run = sample();
+        let v1 = dir.join("v1.run");
+        let v2 = dir.join("v2.run");
+        run.save_v1_with(&RealIo, &v1).unwrap();
+        run.save(&v2).unwrap();
+        // Distinct formats on disk, identical runs in memory.
+        assert_eq!(&std::fs::read(&v1).unwrap()[..8], RUN_MAGIC_V1);
+        assert_eq!(&std::fs::read(&v2).unwrap()[..8], RUN_MAGIC_V2);
+        assert_eq!(Run::load(&v1).unwrap(), run);
+        assert_eq!(Run::load(&v1).unwrap(), Run::load(&v2).unwrap());
+        // A corrupted v1 file still fails loudly.
+        let mut bytes = std::fs::read(&v1).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&v1, &bytes).unwrap();
+        assert_eq!(Run::load(&v1).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        // Paged open of a v1 file falls back to a resident load.
+        run.save_v1_with(&RealIo, &v1).unwrap();
+        let cache = BlockCache::new(1 << 16);
+        let opened = Run::open_with(
+            Arc::new(RealIo),
+            &v1,
+            Arc::clone(&cache),
+            RetryPolicy::none(),
+        )
+        .unwrap();
+        assert!(!opened.is_paged());
+        assert_eq!(opened, run);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A multi-block run (3 cells per block) used by the paged tests.
+    fn big_run() -> Run {
+        let mut cells = Vec::new();
+        for i in 0..40 {
+            let row = format!("r{i:03}");
+            cells.push(cell(&row, "c", Some(&format!("{i}"))));
+            if i % 5 == 0 {
+                cells.push(cell(&row, "d", None));
+            }
+        }
+        Run::from_cells(9, 100, &cells)
+    }
+
+    #[test]
+    fn paged_open_matches_resident_load() {
+        let dir = tmp_dir("paged");
+        let path = dir.join("paged.run");
+        let run = big_run();
+        run.save_with_blocks(&RealIo, &path, 3).unwrap();
+        let resident = Run::load(&path).unwrap();
+        assert_eq!(resident, run);
+
+        let cache = BlockCache::new(1 << 16);
+        let paged = Run::open_with(
+            Arc::new(RealIo),
+            &path,
+            Arc::clone(&cache),
+            RetryPolicy::none(),
+        )
+        .unwrap();
+        assert!(paged.is_paged());
+        assert_eq!((paged.seq(), paged.watermark(), paged.len()), (9, 100, run.len()));
+        // Point lookups and bounds agree cell-for-cell.
+        for i in 0..run.len() {
+            assert_eq!(paged.key(i), resident.key(i));
+            assert_eq!(paged.val(i), resident.val(i));
+        }
+        assert_eq!(paged.get("r007", "c"), resident.get("r007", "c"));
+        assert_eq!(paged.get("r005", "d"), Some(None));
+        assert_eq!(paged.get("zzz", "c"), None);
+        assert_eq!(
+            paged.extent_range(Some("r010"), Some("r020")),
+            resident.extent_range(Some("r010"), Some("r020"))
+        );
+        assert_eq!(paged.lower_bound("r013", "c", true), resident.lower_bound("r013", "c", true));
+        // Cursor walk is bit-identical, and the stats show real faults.
+        let (s, e) = paged.extent_range(None, None);
+        let mut cur = RunCursor::new(&paged, s, e);
+        let mut cur_r = RunCursor::new(&resident, s, e);
+        loop {
+            let (a, b) = (cur.peek(), cur_r.peek());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+            cur.advance_key();
+            cur_r.advance_key();
+        }
+        let stats = cache.stats();
+        assert!(stats.misses > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn paged_block_corruption_poisons_not_panics() {
+        let dir = tmp_dir("poison");
+        let path = dir.join("bad.run");
+        let run = big_run();
+        run.save_with_blocks(&RealIo, &path, 4).unwrap();
+        // Flip a byte inside the first data block (offset 8 is the
+        // first triple byte; the footer is far away).
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        // Resident load fails loudly (PR 7 quarantine path)...
+        assert_eq!(Run::load(&path).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        // ...while a paged open succeeds (footer is intact) and the
+        // fault surfaces at block-read time as poison + empty reads.
+        let cache = BlockCache::new(1 << 16);
+        let paged = Run::open_with(
+            Arc::new(RealIo),
+            &path,
+            Arc::clone(&cache),
+            RetryPolicy::none(),
+        )
+        .unwrap();
+        assert!(!paged.is_poisoned());
+        let (s, e) = paged.extent_range(None, None);
+        let cur = RunCursor::new(&paged, s, e);
+        assert_eq!(cur.peek(), None); // first block is the bad one
+        assert!(paged.is_poisoned());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_writer_streams_identical_files() {
+        let dir = tmp_dir("writer");
+        let via_save = dir.join("save.run");
+        let via_writer = dir.join("writer.run");
+        let run = big_run();
+        run.save_with_blocks(&RealIo, &via_save, 7).unwrap();
+
+        // Stream the same cells through RunWriter.
+        let Triples::Resident(triples) = &run.triples else { unreachable!() };
+        let mut w = RunWriter::create(
+            &RealIo,
+            &via_writer,
+            run.seq(),
+            run.watermark(),
+            run.pool.clone(),
+            7,
+        )
+        .unwrap();
+        for &(r, c, v) in triples {
+            w.push(r, c, v).unwrap();
+        }
+        assert_eq!(w.finish(&RealIo, &via_writer).unwrap(), run.len());
+        assert_eq!(std::fs::read(&via_save).unwrap(), std::fs::read(&via_writer).unwrap());
+        assert_eq!(Run::load(&via_writer).unwrap(), run);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -18,6 +18,15 @@
 //! | `ScannerOptions` (the configured stack) | [`ScanSpec`] |
 //! | Scan-time isolation (a scan serves one consistent view) | `TabletSnapshot` (pinned per scan) |
 //! | `BatchScanner` worker threads (per-range server fan-out) | `SnapshotScan::collect` (weighted range-chunk fan-out) |
+//! | RFile index blocks + shared block cache (beyond-RAM tables) | Paged [`super::Run`] + [`super::BlockCache`] |
+//!
+//! In paged mode the base cursors fault data blocks through the shared
+//! [`super::BlockCache`] on demand: each run cursor pins at most one
+//! block (`Arc`-held, so eviction never invalidates it), multi-range
+//! specs seek via the per-run block index and never fault the blocks
+//! between ranges, and the whole stack stays lock-free after the pin —
+//! eviction and refault happen under the cache's own shards, not the
+//! table's locks.
 //!
 //! The base of the stack is a *block cursor* over the tablet layers
 //! ([`SliceCursor`] over a live tablet list, [`SnapCursor`] over pinned

@@ -16,9 +16,10 @@
 //! [`Table::scan`] / [`Table::scan_par`] entry points are thin
 //! consumers of the same stack.
 
+use super::cache::{BlockCache, CacheStats};
 use super::compact::CompactionSpec;
 use super::io::{RealIo, StorageIo};
-use super::run::Run;
+use super::run::{Run, DEFAULT_BLOCK_TRIPLES};
 use super::lock::{TrackedMutex, TrackedRwLock};
 use super::scan::{
     self, stack_collect, CellFilter, ReduceIter, ScanIter, ScanRange, ScanSpec, SliceCursor,
@@ -101,6 +102,10 @@ pub struct HealthReport {
     /// [`TableHealth::DegradedReadOnly`] to [`TableHealth::Healthy`]
     /// after the storage medium healed.
     pub wal_reopens: u64,
+    /// Block-cache counters when the table runs paged
+    /// ([`DurableOptions::cache_capacity`]); `None` in the default
+    /// fully-resident mode.
+    pub cache: Option<CacheStats>,
 }
 
 /// How a durable table talks to storage: the backend, the retry
@@ -118,6 +123,17 @@ pub struct DurableOptions {
     /// [`TableHealth::InMemoryOnly`] (writes keep working, non-durably);
     /// `false` (default) drops to [`TableHealth::DegradedReadOnly`].
     pub fallback_to_memory: bool,
+    /// Shared block cache: `Some` switches the table to **paged** run
+    /// I/O — run files are opened footer-only and data blocks are
+    /// faulted through this LRU cache on demand, so tables larger than
+    /// RAM scan within the cache's byte budget. `None` (default) keeps
+    /// every run fully resident, byte-for-byte the pre-cache behavior.
+    /// Share one cache across tables to share the budget process-wide.
+    pub cache: Option<Arc<BlockCache>>,
+    /// Target data-block size, in triples, for newly written run files
+    /// (12 bytes per triple on disk). Smaller blocks = finer cache
+    /// granularity, larger index.
+    pub block_triples: usize,
 }
 
 impl Default for DurableOptions {
@@ -126,7 +142,20 @@ impl Default for DurableOptions {
             io: Arc::new(RealIo),
             retry: RetryPolicy::default(),
             fallback_to_memory: false,
+            cache: None,
+            block_triples: DEFAULT_BLOCK_TRIPLES,
         }
+    }
+}
+
+impl DurableOptions {
+    /// Enable paged run I/O through a fresh block cache holding at most
+    /// `bytes` of data blocks (0 = pin-only: blocks live exactly as
+    /// long as a cursor holds them). Scans and compactions then run in
+    /// bounded memory; see [`BlockCache`] for the eviction contract.
+    pub fn cache_capacity(mut self, bytes: usize) -> Self {
+        self.cache = Some(BlockCache::new(bytes));
+        self
     }
 }
 
@@ -141,16 +170,22 @@ struct DurableState {
     io: Arc<dyn StorageIo>,
     retry: RetryPolicy,
     fallback_to_memory: bool,
+    /// Paged-mode block cache (see [`DurableOptions::cache`]).
+    cache: Option<Arc<BlockCache>>,
+    block_triples: usize,
     wal: Mutex<WalWriter>,
     health: Mutex<HealthReport>,
 }
 
 /// The durable half of a checkpoint pass: where runs and the manifest
-/// are saved, and under which retry schedule.
+/// are saved, under which retry schedule, and (in paged mode) through
+/// which block cache.
 struct CheckpointCtx<'a> {
-    io: &'a dyn StorageIo,
+    io: &'a Arc<dyn StorageIo>,
     retry: &'a RetryPolicy,
     dir: &'a Path,
+    cache: Option<&'a Arc<BlockCache>>,
+    block_triples: usize,
 }
 
 /// Table tuning knobs.
@@ -240,6 +275,8 @@ impl Table {
             io: Arc::clone(&opts.io),
             retry: opts.retry,
             fallback_to_memory: opts.fallback_to_memory,
+            cache: opts.cache,
+            block_triples: opts.block_triples.max(1),
             wal: Mutex::new(wal),
             health: Mutex::new(HealthReport::default()),
         });
@@ -325,10 +362,21 @@ impl Table {
         split_rows.dedup();
 
         // Load every listed run, quarantining damaged or missing files.
+        // Paged mode opens footer-only (blocks fault lazily through the
+        // cache); resident mode loads and fully validates each file.
         let mut runs: Vec<Run> = Vec::new();
         for rn in &run_names {
             let path = dir.join(rn);
-            match retry.run("run load", || Run::load_with(io, &path)) {
+            let load = || match &opts.cache {
+                Some(cache) => Run::open_with(
+                    Arc::clone(&opts.io),
+                    &path,
+                    Arc::clone(cache),
+                    retry.clone(),
+                ),
+                None => Run::load_with(io, &path),
+            };
+            match retry.run("run load", load) {
                 Ok(run) => runs.push(run),
                 Err(e)
                     if matches!(
@@ -418,7 +466,13 @@ impl Table {
         // runs, quarantined names to drop from the list, or a tablet
         // layout that grew past the persisted split points during
         // replay.
-        let ctx = CheckpointCtx { io, retry, dir };
+        let ctx = CheckpointCtx {
+            io: &opts.io,
+            retry,
+            dir,
+            cache: opts.cache.as_ref(),
+            block_triples: opts.block_triples.max(1),
+        };
         let frozen = table.checkpoint_tablets(Some(&ctx), None, last_seq)?;
         if frozen > 0 || !report.quarantined.is_empty() || table.split_points() != split_rows {
             table.write_manifest(&ctx)?;
@@ -436,6 +490,8 @@ impl Table {
                 io: Arc::clone(&opts.io),
                 retry: retry.clone(),
                 fallback_to_memory: opts.fallback_to_memory,
+                cache: opts.cache,
+                block_triples: opts.block_triples.max(1),
                 wal: Mutex::new(wal),
                 health: Mutex::new(report),
             }),
@@ -685,8 +741,7 @@ impl Table {
         // data: runs and the WAL carry all cell content.
         if did_split {
             if let Some(d) = &self.durable {
-                let ctx = CheckpointCtx { io: &*d.io, retry: &d.retry, dir: &d.dir };
-                let _ = self.write_manifest(&ctx);
+                let _ = self.write_manifest(&Self::ctx_of(d));
             }
         }
     }
@@ -923,8 +978,9 @@ impl Table {
         };
         let mut wal = d.wal.lock().unwrap();
         self.sync_locked(d, &mut wal)?;
+        self.sweep_poisoned(d);
         let watermark = wal.last_seq();
-        let ctx = CheckpointCtx { io: &*d.io, retry: &d.retry, dir: &d.dir };
+        let ctx = Self::ctx_of(d);
         let written = self.checkpoint_tablets(Some(&ctx), None, watermark)?;
         if written > 0 {
             self.write_manifest(&ctx)?;
@@ -947,8 +1003,9 @@ impl Table {
         };
         let mut wal = d.wal.lock().unwrap();
         self.sync_locked(d, &mut wal)?;
+        self.sweep_poisoned(d);
         let watermark = wal.last_seq();
-        let ctx = CheckpointCtx { io: &*d.io, retry: &d.retry, dir: &d.dir };
+        let ctx = Self::ctx_of(d);
         let written = self.checkpoint_tablets(Some(&ctx), Some(spec), watermark)?;
         // Rewrite unconditionally: compaction may have *removed* every
         // run (all cells deleted), and the manifest must drop them.
@@ -988,6 +1045,29 @@ impl Table {
                 }
                 continue;
             };
+            if let (Some(spec), Some(cache)) = (spec, ctx.cache) {
+                // Paged major compaction: stream block-by-block so peak
+                // memory is O(blocks in flight), never O(table). The
+                // tmp file of an aborted pass is swept by orphan GC;
+                // the tablet commits only after the rename.
+                let seq = self.run_seq.fetch_add(1, Ordering::SeqCst) + 1;
+                let path = ctx.dir.join(run_file_name(seq));
+                let run = tab.compact_streamed(
+                    spec,
+                    seq,
+                    watermark,
+                    ctx.io,
+                    &path,
+                    cache,
+                    ctx.retry,
+                    ctx.block_triples,
+                )?;
+                if run.is_some() {
+                    written += 1;
+                }
+                tab.install_compacted(run);
+                continue;
+            }
             let cells = match spec {
                 None => tab.freeze_cells(),
                 Some(spec) => tab.compact_cells(spec),
@@ -1004,9 +1084,23 @@ impl Table {
                 continue;
             }
             let seq = self.run_seq.fetch_add(1, Ordering::SeqCst) + 1;
-            let run = Arc::new(Run::from_cells(seq, watermark, &cells));
+            let mut run = Arc::new(Run::from_cells(seq, watermark, &cells));
             let path = ctx.dir.join(run_file_name(seq));
-            ctx.retry.run("run save", || run.save_with(ctx.io, &path))?;
+            ctx.retry
+                .run("run save", || run.save_with_blocks(&**ctx.io, &path, ctx.block_triples))?;
+            if let Some(cache) = ctx.cache {
+                // Paged mode: drop the resident copy and serve the run
+                // we just wrote through the cache, so a freshly frozen
+                // memtable doesn't stay pinned in RAM.
+                run = Arc::new(ctx.retry.run("run open", || {
+                    Run::open_with(
+                        Arc::clone(ctx.io),
+                        &path,
+                        Arc::clone(cache),
+                        ctx.retry.clone(),
+                    )
+                })?);
+            }
             match spec {
                 None => tab.complete_freeze(Arc::clone(&run)),
                 Some(_) => tab.install_compacted(Some(Arc::clone(&run))),
@@ -1110,6 +1204,60 @@ impl Table {
         }
     }
 
+    /// A [`CheckpointCtx`] borrowing `d`'s storage configuration.
+    fn ctx_of(d: &DurableState) -> CheckpointCtx<'_> {
+        CheckpointCtx {
+            io: &d.io,
+            retry: &d.retry,
+            dir: &d.dir,
+            cache: d.cache.as_ref(),
+            block_triples: d.block_triples,
+        }
+    }
+
+    /// Detach every run poisoned by a block-granular fault (a CRC
+    /// mismatch or failed read during a paged scan) and quarantine its
+    /// file — the block-level twin of recovery's whole-run quarantine.
+    /// Scans already serve table-minus-run the moment a run poisons;
+    /// this pass makes the pruning durable (manifest rewrite, file
+    /// renamed to `<name>.quarantined`) and visible through
+    /// [`HealthReport::quarantined`]. Runs at the head of sync and
+    /// compaction passes; a no-op in resident mode, where runs are
+    /// fully validated at load and never poison.
+    fn sweep_poisoned(&self, d: &DurableState) {
+        if d.cache.is_none() {
+            return;
+        }
+        let mut dropped: Vec<Arc<Run>> = Vec::new();
+        {
+            let tablets = self.tablets.read().unwrap();
+            for t in tablets.iter() {
+                dropped.extend(t.lock().unwrap().drop_poisoned());
+            }
+        }
+        if dropped.is_empty() {
+            return;
+        }
+        // Post-split tablets share runs: dedup by sequence number.
+        let seqs: BTreeSet<u64> = dropped.iter().map(|run| run.seq()).collect();
+        {
+            let mut health = d.health.lock().unwrap();
+            for seq in seqs {
+                quarantine_file(
+                    &*d.io,
+                    &d.dir,
+                    &run_file_name(seq),
+                    &mut health,
+                    "block read failed its crc or i/o while paged",
+                );
+            }
+        }
+        let _ = self.write_manifest(&Self::ctx_of(d));
+        // Visible content shrank when the run poisoned; open streams
+        // must re-pin their snapshots.
+        self.mutations.fetch_add(1, Ordering::Release);
+    }
+
     /// Number of distinct runs attached across tablets.
     pub fn run_count(&self) -> usize {
         let tablets = self.tablets.read().unwrap();
@@ -1153,6 +1301,7 @@ impl Table {
                 )));
             }
         }
+        self.sweep_poisoned(d);
         self.sync_locked(d, &mut wal)
     }
 
@@ -1184,7 +1333,11 @@ impl Table {
     /// a default (healthy, empty) report.
     pub fn health(&self) -> HealthReport {
         match &self.durable {
-            Some(d) => d.health.lock().unwrap().clone(),
+            Some(d) => {
+                let mut report = d.health.lock().unwrap().clone();
+                report.cache = d.cache.as_ref().map(|cache| cache.stats());
+                report
+            }
             None => HealthReport::default(),
         }
     }

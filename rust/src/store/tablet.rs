@@ -9,13 +9,19 @@
 //! masking run cells that were deleted after their run froze — the
 //! Accumulo memory-map-plus-RFiles read path.
 
+use super::cache::BlockCache;
 use super::compact::{self, CompactionSpec};
-use super::run::{Run, RunCell, RunCursor};
+use super::io::StorageIo;
+use super::run::{Run, RunCell, RunCursor, RunWriter, TOMBSTONE};
 use super::scan::{self, CellFilter, ScanRange};
 use super::{SharedStr, Triple};
+use crate::util::intern::StrDict;
+use crate::util::retry::RetryPolicy;
 use std::collections::{btree_map, btree_set, BTreeMap, BTreeSet};
+use std::io;
 use std::iter::Peekable;
 use std::ops::Bound;
+use std::path::Path;
 use std::sync::Arc;
 
 /// Sorted `(row, col) → val` map covering the half-open row range
@@ -43,10 +49,18 @@ pub struct Tablet {
     /// Cached frozen image of the memtable + tombstones (the sorted
     /// cell list [`Tablet::freeze_cells`] builds), shared into
     /// [`TabletSnapshot`]s so pinning a quiescent tablet is a handful
-    /// of `Arc` clones. Invalidated by every mutation of the memtable
-    /// *or* the run stack (run presence decides tombstone retention in
-    /// the image).
+    /// of `Arc` clones. Point mutations (put/delete) don't discard it:
+    /// they record the touched key in `frozen_stale`, and the next pin
+    /// splices only those keys into the cached image — O(dirty · log)
+    /// lookups plus one pointer-clone copy, instead of rebuilding from
+    /// the `BTreeMap`. Structural changes (split, run attach/clear —
+    /// run presence decides tombstone retention in the image) still
+    /// invalidate fully.
     frozen_mem: Option<Arc<Vec<RunCell>>>,
+    /// Keys written or deleted since `frozen_mem` was built — the dirty
+    /// portion the next pin re-derives. Meaningless (and empty) while
+    /// `frozen_mem` is `None`.
+    frozen_stale: BTreeSet<(SharedStr, SharedStr)>,
     weight: usize,
     /// Failure-injection flag: an offline tablet rejects *writes*
     /// (`Table::write_batch` errors). Reads, scans, and compactions are
@@ -73,7 +87,9 @@ impl Tablet {
     /// are shadowed, not read back).
     pub fn put(&mut self, t: Triple) -> Option<SharedStr> {
         debug_assert!(self.contains(&t.row), "triple routed to wrong tablet");
-        self.frozen_mem = None;
+        if self.frozen_mem.is_some() {
+            self.frozen_stale.insert((t.row.clone(), t.col.clone()));
+        }
         if !self.deletes.is_empty() {
             // A new write un-deletes the key (pointer-clone probe).
             self.deletes.remove(&(t.row.clone(), t.col.clone()));
@@ -94,7 +110,7 @@ impl Tablet {
     /// tombstone, `Some(Some(val))` otherwise. Point ops skip extent
     /// clamping — routing guarantees the key is in-extent.
     fn run_lookup(&self, row: &str, col: &str) -> Option<Option<&SharedStr>> {
-        self.runs.iter().rev().find_map(|run| run.get(row, col))
+        self.runs.iter().rev().filter(|run| !run.is_poisoned()).find_map(|run| run.get(row, col))
     }
 
     /// Point lookup, merging memtable over tombstones over runs.
@@ -116,7 +132,9 @@ impl Tablet {
     /// only the memtable entry would resurrect any run-resident value
     /// beneath it, so when runs hold the key a tombstone is recorded.
     pub fn delete(&mut self, row: &str, col: &str) -> bool {
-        self.frozen_mem = None;
+        if self.frozen_mem.is_some() {
+            self.frozen_stale.insert((row.into(), col.into()));
+        }
         let had_mem = if let Some(v) = self.entries.remove(&(row.into(), col.into())) {
             self.weight -= row.len() + col.len() + v.len();
             true
@@ -240,7 +258,7 @@ impl Tablet {
     /// extent clamping keeps each child serving only its half of every
     /// run.
     pub fn split_at(&mut self, row: &str) -> Tablet {
-        self.frozen_mem = None;
+        self.invalidate_frozen();
         let right_entries: BTreeMap<(SharedStr, SharedStr), SharedStr> =
             self.entries.split_off(&(row.into(), "".into()));
         let right_deletes = self.deletes.split_off(&(row.into(), "".into()));
@@ -254,6 +272,7 @@ impl Tablet {
             deletes: right_deletes,
             runs: self.runs.clone(),
             frozen_mem: None,
+            frozen_stale: BTreeSet::new(),
             weight: right_weight,
             offline: false,
         };
@@ -272,8 +291,33 @@ impl Tablet {
     pub(crate) fn attach_run(&mut self, run: Arc<Run>) {
         // Run presence decides whether the frozen image keeps
         // tombstones, so the layer change invalidates the cache too.
-        self.frozen_mem = None;
+        self.invalidate_frozen();
         self.runs.push(run);
+    }
+
+    /// Detach every poisoned run (one whose block-granular reads hit a
+    /// CRC or I/O failure) from the serving stack, returning them for
+    /// the caller to quarantine on disk. New scans already skip
+    /// poisoned runs; this makes the pruning durable. Invalidates the
+    /// frozen image only when something was actually dropped (run
+    /// presence decides tombstone retention).
+    pub(crate) fn drop_poisoned(&mut self) -> Vec<Arc<Run>> {
+        if !self.runs.iter().any(|run| run.is_poisoned()) {
+            return Vec::new();
+        }
+        self.invalidate_frozen();
+        let (bad, good): (Vec<_>, Vec<_>) =
+            self.runs.drain(..).partition(|run| run.is_poisoned());
+        self.runs = good;
+        bad
+    }
+
+    /// Drop the cached frozen image and its dirty-key overlay. Called
+    /// by every *structural* change; point writes go through
+    /// `frozen_stale` instead.
+    fn invalidate_frozen(&mut self) {
+        self.frozen_mem = None;
+        self.frozen_stale.clear();
     }
 
     /// Merge the memtable and tombstones into a sorted cell list
@@ -313,7 +357,7 @@ impl Tablet {
     /// commit half of a freeze — call only after the frozen run has
     /// been durably persisted (or when provably empty).
     fn clear_memtable(&mut self) {
-        self.frozen_mem = None;
+        self.invalidate_frozen();
         self.entries.clear();
         self.deletes.clear();
         self.weight = 0;
@@ -347,7 +391,7 @@ impl Tablet {
         // clamped to the extent. A stable key-only sort then groups
         // versions while preserving that priority order.
         let mut cells = self.memtable_cells(true);
-        for run in self.runs.iter().rev() {
+        for run in self.runs.iter().rev().filter(|run| !run.is_poisoned()) {
             let (start, end) = run.extent_range(self.lo.as_deref(), self.hi.as_deref());
             for i in start..end {
                 let (r, c) = run.key(i);
@@ -416,7 +460,12 @@ impl Tablet {
     pub fn cell_versions(&self, row: &str, col: &str) -> usize {
         let mem = usize::from(self.entries.contains_key(&(row.into(), col.into())))
             + usize::from(self.deletes.contains(&(row.into(), col.into())));
-        mem + self.runs.iter().map(|run| run.versions(row, col)).sum::<usize>()
+        mem + self
+            .runs
+            .iter()
+            .filter(|run| !run.is_poisoned())
+            .map(|run| run.versions(row, col))
+            .sum::<usize>()
     }
 
     /// Pin the tablet's current state as an immutable
@@ -429,18 +478,240 @@ impl Tablet {
     /// already-pinned snapshot.
     pub(crate) fn snapshot(&mut self) -> TabletSnapshot {
         let mem = if self.entries.is_empty() && self.deletes.is_empty() {
+            // Deletes may have drained the memtable key-by-key while an
+            // image was cached; the image is stale and worthless now.
+            self.invalidate_frozen();
             None
         } else {
-            if self.frozen_mem.is_none() {
-                self.frozen_mem = Some(Arc::new(self.freeze_cells()));
-            }
-            self.frozen_mem.clone()
+            let image = match (&self.frozen_mem, self.frozen_stale.is_empty()) {
+                // Quiet re-pin: pure Arc clone, no rebuild at all.
+                (Some(img), true) => Arc::clone(img),
+                // Dirty re-pin: splice only the touched keys into the
+                // cached image — O(dirty) map probes, one linear copy.
+                (Some(img), false) => Arc::new(self.splice_frozen(img)),
+                // Cold pin: full rebuild from the BTreeMap.
+                (None, _) => Arc::new(self.freeze_cells()),
+            };
+            self.frozen_mem = Some(Arc::clone(&image));
+            self.frozen_stale.clear();
+            Some(image)
         };
         TabletSnapshot {
             lo: self.lo.clone(),
             hi: self.hi.clone(),
             runs: self.runs.clone(),
             mem,
+        }
+    }
+
+    /// Rebuild only the dirty portion of a cached frozen image: walk
+    /// `base` and the sorted stale-key set with two pointers, replacing
+    /// each stale key's cell with its current memtable state (value,
+    /// tombstone, or absent). Clean stretches are copied as pointer
+    /// clones. Equivalent to [`Tablet::freeze_cells`] by construction:
+    /// every key not in `frozen_stale` is unchanged since `base` was
+    /// built, and run presence (which decides tombstone retention)
+    /// can't have changed — structural ops fully invalidate.
+    fn splice_frozen(&self, base: &[RunCell]) -> Vec<RunCell> {
+        let keep_tombstones = !self.runs.is_empty();
+        let mut out: Vec<RunCell> = Vec::with_capacity(base.len() + self.frozen_stale.len());
+        let mut bi = 0usize;
+        for key in &self.frozen_stale {
+            let k = (key.0.as_str(), key.1.as_str());
+            // Copy the clean cells strictly before the stale key, then
+            // drop the superseded image cell for the key itself.
+            let upto = bi + base[bi..].partition_point(|(r, c, _)| (r.as_str(), c.as_str()) < k);
+            out.extend_from_slice(&base[bi..upto]);
+            bi = upto;
+            if bi < base.len() && (base[bi].0.as_str(), base[bi].1.as_str()) == k {
+                bi += 1;
+            }
+            if let Some(v) = self.entries.get(key) {
+                out.push((key.0.clone(), key.1.clone(), Some(v.clone())));
+            } else if keep_tombstones && self.deletes.contains(key) {
+                out.push((key.0.clone(), key.1.clone(), None));
+            }
+        }
+        out.extend_from_slice(&base[bi..]);
+        out
+    }
+
+    /// Streaming major compaction for paged (block-cached) tablets:
+    /// produce exactly the triples [`Tablet::compact_cells`] +
+    /// [`Run::from_cells`] would, but never materialise more than one
+    /// key-group of input cells, one output block, and the output
+    /// string pool — peak memory is O(blocks in flight), not O(table).
+    ///
+    /// Two passes over the same immutable state: pass 1 merges and
+    /// interns every *output* string into a [`StrDict`] (ids must be
+    /// assigned in sorted order before any block is written); pass 2
+    /// re-merges and streams encoded blocks through a [`RunWriter`].
+    /// Each source run's cursor pins at most one cache block at a
+    /// time.
+    ///
+    /// If any source run is poisoned by a block fault mid-merge the
+    /// compaction aborts with an error *before* commit — the tmp file
+    /// is left for orphan GC and the tablet keeps serving its old
+    /// layers, exactly like a failed persist. Returns the reopened
+    /// (paged) output run, or `None` when the merge came out empty.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn compact_streamed(
+        &self,
+        spec: &CompactionSpec,
+        seq: u64,
+        watermark: u64,
+        io: &Arc<dyn StorageIo>,
+        path: &Path,
+        cache: &Arc<BlockCache>,
+        retry: &RetryPolicy,
+        block_triples: usize,
+    ) -> io::Result<Option<Arc<Run>>> {
+        let fault = || {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                "block fault while streaming compaction; source run poisoned",
+            )
+        };
+        let mem = self.memtable_cells(true);
+
+        // Pass 1: intern the strings the merged output will reference.
+        let mut dict = StrDict::default();
+        let mut total = 0usize;
+        self.for_each_compacted_row(&mem, spec, |row| {
+            for (r, c, v) in &row {
+                dict.intern_str(r.as_str());
+                dict.intern_str(c.as_str());
+                if let Some(v) = v {
+                    dict.intern_str(v.as_str());
+                }
+            }
+            total += row.len();
+        });
+        if self.runs.iter().any(|run| run.is_poisoned()) {
+            return Err(fault());
+        }
+        if total == 0 {
+            return Ok(None);
+        }
+        let (pool, _ids) = dict.into_sorted();
+
+        // Pass 2: re-merge (same immutable inputs, same output) and
+        // stream blocks through the writer.
+        let mut writer = retry.run("run create", || {
+            RunWriter::create(&**io, path, seq, watermark, pool.clone(), block_triples)
+        })?;
+        let mut stream_err: Option<io::Error> = None;
+        self.for_each_compacted_row(&mem, spec, |row| {
+            if stream_err.is_some() {
+                return;
+            }
+            for (r, c, v) in &row {
+                // A block fault in pass 2 only can shrink a combined
+                // row to a value pass 1 never interned — map the
+                // missing id to a fault instead of panicking.
+                let ids = (|| {
+                    let ri = writer.id_of(r.as_str())?;
+                    let ci = writer.id_of(c.as_str())?;
+                    let vi = match v {
+                        Some(v) => writer.id_of(v.as_str())?,
+                        None => TOMBSTONE,
+                    };
+                    Some((ri, ci, vi))
+                })();
+                let Some((ri, ci, vi)) = ids else {
+                    stream_err = Some(fault());
+                    return;
+                };
+                if let Err(e) = writer.push(ri, ci, vi) {
+                    stream_err = Some(e);
+                    return;
+                }
+            }
+        });
+        if let Some(e) = stream_err {
+            return Err(e);
+        }
+        if self.runs.iter().any(|run| run.is_poisoned()) {
+            return Err(fault());
+        }
+        let written = writer.finish(&**io, path)?;
+        debug_assert_eq!(written, total, "pass 1 / pass 2 merge divergence");
+        let run = retry.run("run open", || {
+            Run::open_with(Arc::clone(io), path, Arc::clone(cache), retry.clone())
+        })?;
+        Ok(Some(Arc::new(run)))
+    }
+
+    /// Shared merge engine for [`Tablet::compact_streamed`]: visit each
+    /// fully-compacted row (post `spec` combiner/versioning) in key
+    /// order, materialising only one key-group at a time. Version
+    /// priority matches [`Tablet::compact_cells`] exactly — memtable
+    /// first, then runs newest → oldest, each clamped to the extent —
+    /// so per-row [`compact::merge_cells`] (key groups are independent
+    /// and row reduction is row-local) equals the whole-table call.
+    fn for_each_compacted_row(
+        &self,
+        mem: &[RunCell],
+        spec: &CompactionSpec,
+        mut sink: impl FnMut(Vec<RunCell>),
+    ) {
+        let mut curs: Vec<RunCursor<'_>> = self
+            .runs
+            .iter()
+            .rev()
+            .filter(|run| !run.is_poisoned())
+            .map(|run| {
+                let (start, end) = run.extent_range(self.lo.as_deref(), self.hi.as_deref());
+                RunCursor::new(run, start, end)
+            })
+            .collect();
+        let mut mi = 0usize;
+        let mut cur_row: Option<SharedStr> = None;
+        let mut row_cells: Vec<RunCell> = Vec::new();
+        loop {
+            // Smallest (row, col) still pending across the memtable
+            // image and every cursor. Cursor peeks borrow from the runs
+            // (not the cursors), so the key survives advancing below.
+            let mut min: Option<(&str, &str)> = None;
+            if let Some((r, c, _)) = mem.get(mi) {
+                min = Some((r.as_str(), c.as_str()));
+            }
+            for cur in &curs {
+                if let Some((r, c, _)) = cur.peek() {
+                    let k = (r.as_str(), c.as_str());
+                    if min.is_none_or(|m| k < m) {
+                        min = Some(k);
+                    }
+                }
+            }
+            let Some(min) = min else { break };
+            if cur_row.as_ref().map(|r| r.as_str()) != Some(min.0) {
+                if !row_cells.is_empty() {
+                    sink(compact::merge_cells(std::mem::take(&mut row_cells), spec));
+                }
+                cur_row = None; // set from the first cell pushed below
+            }
+            // Gather every version of the min key, newest layer first.
+            if let Some((r, c, v)) = mem.get(mi) {
+                if (r.as_str(), c.as_str()) == min {
+                    cur_row.get_or_insert_with(|| r.clone());
+                    row_cells.push((r.clone(), c.clone(), v.clone()));
+                    mi += 1;
+                }
+            }
+            for cur in &mut curs {
+                while let Some((r, c, v)) = cur.peek() {
+                    if (r.as_str(), c.as_str()) != min {
+                        break;
+                    }
+                    cur_row.get_or_insert_with(|| r.clone());
+                    row_cells.push((r.clone(), c.clone(), v.cloned()));
+                    cur.advance_one();
+                }
+            }
+        }
+        if !row_cells.is_empty() {
+            sink(compact::merge_cells(row_cells, spec));
         }
     }
 }
@@ -518,7 +789,10 @@ impl TabletSnapshot {
             for j in 1..per_run {
                 let idx = start + n * j / per_run;
                 if idx > start && idx < end {
-                    out.push(run.key(idx).0.as_str().to_string());
+                    // Index-resolution sampling: on a paged run this
+                    // answers from the block index's first keys and
+                    // never faults a block in.
+                    out.push(run.sample_row(idx).as_str().to_string());
                 }
             }
         }
@@ -713,7 +987,10 @@ impl<'t> Merged<'t> {
         };
         let mut runs = Vec::with_capacity(tablet.runs.len());
         if !simple {
-            for run in &tablet.runs {
+            // A poisoned run (block-level CRC/I/O failure) is served as
+            // table-minus-run until it is swept — same contract as the
+            // whole-run corruption path.
+            for run in tablet.runs.iter().filter(|run| !run.is_poisoned()) {
                 let (ext_start, ext_end) =
                     run.extent_range(tablet.lo.as_deref(), tablet.hi.as_deref());
                 let pos = match &probe {
@@ -828,7 +1105,10 @@ impl<'s> LayerMerge<'s> {
             Bound::Unbounded => None,
         };
         let mut runs = Vec::with_capacity(snap.runs.len());
-        for run in &snap.runs {
+        // New merges skip runs already poisoned; a fault *during* this
+        // merge instead exhausts that run's cursor (and poisons the run
+        // for later merges) — reads never panic or block.
+        for run in snap.runs.iter().filter(|run| !run.is_poisoned()) {
             let (ext_start, ext_end) =
                 run.extent_range(snap.lo.as_deref(), snap.hi.as_deref());
             let pos = match probe {
@@ -909,6 +1189,50 @@ mod tests {
 
     fn t(r: &str, c: &str, v: &str) -> Triple {
         Triple::new(r, c, v)
+    }
+
+    #[test]
+    fn frozen_image_reuse_and_splice() {
+        let mut tab = Tablet::new(None, None);
+        for i in 0..20 {
+            tab.put(t(&format!("r{i:02}"), "c", &format!("v{i}")));
+        }
+        // Quiet re-pin: the cached image is shared, not rebuilt.
+        let a = tab.snapshot().mem.expect("non-empty memtable");
+        let b = tab.snapshot().mem.expect("non-empty memtable");
+        assert!(Arc::ptr_eq(&a, &b));
+        // Point writes mark keys stale; the next pin splices only those
+        // keys and must equal a from-scratch freeze.
+        tab.put(t("r05", "c", "v5-new"));
+        tab.put(t("r20", "c", "appended"));
+        tab.delete("r07", "c");
+        tab.delete("never", "present");
+        let spliced = tab.snapshot().mem.expect("non-empty memtable");
+        assert!(!Arc::ptr_eq(&a, &spliced));
+        assert_eq!(*spliced, tab.freeze_cells());
+        // With no runs beneath, tombstones are dropped from the image.
+        assert!(spliced.iter().all(|(_, _, v)| v.is_some()));
+        assert_eq!(spliced.len(), 20); // 20 base - r07 + r20
+        // With a run attached (structural: full invalidation) the same
+        // dirty-splice path must keep tombstones.
+        tab.freeze(1, 0);
+        tab.put(t("r01", "c", "over"));
+        let warm = tab.snapshot().mem;
+        assert!(warm.is_none() || !warm.as_ref().unwrap().is_empty());
+        tab.delete("r02", "c");
+        tab.put(t("r30", "c", "tail"));
+        let dirty = tab.snapshot().mem.expect("non-empty memtable");
+        assert_eq!(*dirty, tab.freeze_cells());
+        assert!(dirty.iter().any(|(r, _, v)| r.as_str() == "r02" && v.is_none()));
+        // Deleting every live key drains the memtable; the pin reports
+        // an empty image (tombstones only) or none, matching a rebuild.
+        tab.delete("r01", "c");
+        tab.delete("r30", "c");
+        let drained = tab.snapshot().mem;
+        match &drained {
+            Some(img) => assert_eq!(**img, tab.freeze_cells()),
+            None => assert!(tab.is_empty()),
+        }
     }
 
     #[test]

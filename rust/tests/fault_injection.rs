@@ -23,7 +23,8 @@ use std::sync::Arc;
 
 use d4m::store::{
     BatchWriter, CompactionSpec, DurableOptions, FaultKind, FaultPlan, FaultyIo, FsyncPolicy,
-    ScanRange, StoreError, Table, TableConfig, TableHealth, Triple, WriterConfig,
+    RealIo, Run, ScanRange, SharedStr, StoreError, Table, TableConfig, TableHealth, Triple,
+    WriterConfig,
 };
 use d4m::util::{RetryPolicy, SplitMix64};
 
@@ -131,7 +132,7 @@ fn prefix_scans(acked: &[FOp]) -> Vec<Vec<Triple>> {
 }
 
 fn opts(io: &Arc<FaultyIo>, retry: RetryPolicy, fallback: bool) -> DurableOptions {
-    DurableOptions { io: io.clone(), retry, fallback_to_memory: fallback }
+    DurableOptions { io: io.clone(), retry, fallback_to_memory: fallback, ..Default::default() }
 }
 
 fn sweep_seeds() -> Vec<u64> {
@@ -742,4 +743,231 @@ fn copy_dir(src: &Path, dst: &Path) {
             std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Block-granular run I/O section (PR 9)
+// ---------------------------------------------------------------------
+
+/// Single-tablet config for the block tests: the run layout must stay
+/// exactly "one run per minor compaction" so victims are predictable.
+fn block_cfg() -> TableConfig {
+    TableConfig { split_threshold: 100_000, write_latency_us: 0 }
+}
+
+/// Build a settled table whose run files use tiny (32-triple) data
+/// blocks: a 200-cell `a*` run with content no other run covers, a
+/// 40-cell `z*` run, plus the replay-frozen duplicate of the `z`
+/// suffix. Returns the directory and the settled full scan.
+fn build_block_dir(tag: &str) -> (PathBuf, Vec<Triple>) {
+    let dir = temp_dir(tag);
+    {
+        let o = DurableOptions { block_triples: 32, ..Default::default() };
+        let t = Table::durable_with("t", block_cfg(), &dir, FsyncPolicy::Never, o).unwrap();
+        let batch: Vec<Triple> = (0..200)
+            .map(|i| Triple::new(format!("a{i:03}"), "c0", format!("v{i}")))
+            .collect();
+        t.write_batch(batch).unwrap();
+        t.minor_compact().unwrap();
+        let batch: Vec<Triple> = (0..40)
+            .map(|i| Triple::new(format!("z{i:02}"), "c0", format!("w{i}")))
+            .collect();
+        t.write_batch(batch).unwrap();
+        t.minor_compact().unwrap();
+    }
+    // Settle: the WAL suffix is frozen to a run and truncated, so from
+    // here the run files alone carry the data.
+    let full = {
+        let t = Table::recover("t", block_cfg(), &dir, FsyncPolicy::Never).unwrap();
+        t.scan(ScanRange::all())
+    };
+    assert_eq!(full.len(), 240);
+    (dir, full)
+}
+
+/// Run-format versioning: hand-written v1 (pre-block) run files recover
+/// byte-identically in both resident and paged mode — the paged open
+/// probes the magic and falls back to a fully resident load for v1.
+#[test]
+fn v1_run_files_recover_across_versions() {
+    let dir = temp_dir("v1-compat");
+    let cell = |r: &str, c: &str, v: Option<&str>| {
+        (SharedStr::from(r), SharedStr::from(c), v.map(SharedStr::from))
+    };
+    // Run 1 (older): three hand keys plus filler, all live.
+    let mut cells1 = vec![
+        cell("a0", "c0", Some("old")),
+        cell("a1", "c0", Some("keep1")),
+        cell("a2", "c0", Some("dead")),
+    ];
+    for i in 0..100 {
+        cells1.push(cell(&format!("f{i:03}"), "c0", Some(&format!("v{i}"))));
+    }
+    // Run 2 (newer): shadows a0, tombstones a2, adds b0.
+    let cells2 = vec![
+        cell("a0", "c0", Some("new")),
+        cell("a2", "c0", None),
+        cell("b0", "c0", Some("b")),
+    ];
+    let io = RealIo;
+    Run::from_cells(1, 0, &cells1)
+        .save_v1_with(&io, &dir.join("run-00000001.run"))
+        .unwrap();
+    Run::from_cells(2, 0, &cells2)
+        .save_v1_with(&io, &dir.join("run-00000002.run"))
+        .unwrap();
+    std::fs::write(dir.join("MANIFEST"), "run-00000001.run\nrun-00000002.run\n").unwrap();
+
+    let mut expect = vec![
+        Triple::new("a0", "c0", "new"),
+        Triple::new("a1", "c0", "keep1"),
+        Triple::new("b0", "c0", "b"),
+    ];
+    for i in 0..100 {
+        expect.push(Triple::new(format!("f{i:03}"), "c0", format!("v{i}")));
+    }
+
+    let resident = Table::recover("t", block_cfg(), &dir, FsyncPolicy::Never).unwrap();
+    assert!(resident.health().quarantined.is_empty());
+    assert_eq!(resident.scan(ScanRange::all()), expect, "resident v1 recovery");
+    drop(resident);
+
+    let o = DurableOptions::default().cache_capacity(usize::MAX);
+    let paged = Table::recover_with("t", block_cfg(), &dir, FsyncPolicy::Never, o).unwrap();
+    assert!(paged.health().quarantined.is_empty());
+    assert_eq!(paged.scan(ScanRange::all()), expect, "paged v1 recovery (resident fallback)");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A flipped byte inside one *data block* of a paged run: recovery
+/// (footer-only) still succeeds, the first scan to fault the block
+/// poisons the run without panicking, every later scan is bit-identical
+/// to dropping the whole run, and `sync` makes the quarantine durable
+/// exactly like the whole-run corruption path (rename aside + manifest
+/// rewrite + health report).
+#[test]
+fn block_corruption_quarantines_like_whole_run() {
+    let (dir1, full) = build_block_dir("block-quarantine-a");
+
+    let manifest = std::fs::read_to_string(dir1.join("MANIFEST")).unwrap();
+    let runs: Vec<String> = manifest
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with("split:"))
+        .map(str::to_string)
+        .collect();
+    assert!(runs.len() >= 2, "need multiple runs, got {runs:?}");
+    // The largest run is the 200-cell `a*` one — multi-block at 32
+    // triples per block, and the only copy of its cells.
+    let victim = runs
+        .iter()
+        .max_by_key(|r| std::fs::metadata(dir1.join(r.as_str())).unwrap().len())
+        .unwrap()
+        .clone();
+
+    // dir2 = same image with the victim dropped explicitly.
+    let dir2 = temp_dir("block-quarantine-b");
+    copy_dir(&dir1, &dir2);
+    let kept: String = runs
+        .iter()
+        .filter(|r| **r != victim)
+        .map(|r| format!("{r}\n"))
+        .collect();
+    std::fs::write(dir2.join("MANIFEST"), kept).unwrap();
+    std::fs::remove_file(dir2.join(&victim)).unwrap();
+    let t2 = Table::recover("t", block_cfg(), &dir2, FsyncPolicy::Never).unwrap();
+    let baseline = t2.scan(ScanRange::all());
+    assert_ne!(baseline, full, "victim run held unique cells");
+
+    // Flip one byte inside the victim's first data block (blocks start
+    // right after the 8-byte magic; the footer is far away at EOF).
+    let victim_path = dir1.join(&victim);
+    let mut bytes = std::fs::read(&victim_path).unwrap();
+    bytes[8 + 10] ^= 0xFF;
+    std::fs::write(&victim_path, bytes).unwrap();
+
+    let o = DurableOptions::default().cache_capacity(usize::MAX);
+    let t1 = Table::recover_with("t", block_cfg(), &dir1, FsyncPolicy::Never, o).unwrap();
+    assert!(
+        t1.health().quarantined.is_empty(),
+        "footer-only open must not fault (or validate) data blocks"
+    );
+    // First scan hits the bad CRC: the run is poisoned mid-scan; the
+    // in-flight scan itself only promises to complete without panicking.
+    let _mid = t1.scan(ScanRange::all());
+    // Every *new* scan skips the poisoned run entirely.
+    assert_eq!(t1.scan(ScanRange::all()), baseline, "poisoned run must scan as if dropped");
+    // sync() makes it durable: the PR 7 quarantine contract, per block.
+    t1.sync().unwrap();
+    let h = t1.health();
+    assert_eq!(h.quarantined, vec![victim.clone()]);
+    assert!(h.last_error.is_some());
+    assert!(dir1.join(format!("{victim}.quarantined")).exists());
+    let rewritten = std::fs::read_to_string(dir1.join("MANIFEST")).unwrap();
+    assert!(!rewritten.contains(&victim), "quarantined run still listed");
+    assert_eq!(t1.scan(ScanRange::all()), baseline, "post-quarantine scan");
+
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+/// An injected I/O failure on a single block *read* (not corruption on
+/// disk): with no retry budget the run poisons, later scans equal the
+/// table minus that run, and `sync` quarantines it durably.
+#[test]
+fn block_read_fault_poisons_then_quarantines() {
+    let (dir1, full) = build_block_dir("block-fault-a");
+    let dir2 = temp_dir("block-fault-b");
+    copy_dir(&dir1, &dir2);
+
+    let io = FaultyIo::new(FaultPlan::new());
+    let o = opts(&io, RetryPolicy::none(), false).cache_capacity(0);
+    let t = Table::recover_with("t", block_cfg(), &dir1, FsyncPolicy::Never, o).unwrap();
+    assert_eq!(t.scan(ScanRange::all()), full, "paged scan == resident before faults");
+
+    // Capacity 0 retains nothing, so the next scan must re-read its
+    // first block from storage — fail exactly that operation.
+    io.schedule(io.ops(), FaultKind::Permanent);
+    let _mid = t.scan(ScanRange::all()); // poisons mid-scan; panic-free
+    t.sync().unwrap();
+    let h = t.health();
+    assert_eq!(h.quarantined.len(), 1, "exactly one run poisoned: {:?}", h.quarantined);
+    let victim = h.quarantined[0].clone();
+    assert!(dir1.join(format!("{victim}.quarantined")).exists());
+
+    // Reference: the pre-fault image with that run dropped explicitly.
+    let manifest = std::fs::read_to_string(dir2.join("MANIFEST")).unwrap();
+    let kept: String = manifest
+        .lines()
+        .filter(|l| !l.trim().is_empty() && *l != victim.as_str())
+        .map(|l| format!("{l}\n"))
+        .collect();
+    std::fs::write(dir2.join("MANIFEST"), kept).unwrap();
+    std::fs::remove_file(dir2.join(&victim)).unwrap();
+    let t2 = Table::recover("t", block_cfg(), &dir2, FsyncPolicy::Never).unwrap();
+    let baseline = t2.scan(ScanRange::all());
+
+    assert_eq!(t.scan(ScanRange::all()), baseline, "poisoned run must scan as if dropped");
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+/// Transient block-read faults under a retry budget heal invisibly:
+/// scans stay byte-identical to the resident image, nothing poisons,
+/// nothing is quarantined — even though faults demonstrably fired.
+#[test]
+fn transient_block_faults_heal_under_retry() {
+    let (dir, full) = build_block_dir("block-transient");
+    let io = FaultyIo::new(FaultPlan::new().fail_every(7, FaultKind::Transient));
+    let o = opts(&io, RetryPolicy::immediate(3), false).cache_capacity(0);
+    let t = Table::recover_with("t", block_cfg(), &dir, FsyncPolicy::Never, o).unwrap();
+    for round in 0..2 {
+        assert_eq!(t.scan(ScanRange::all()), full, "round {round}");
+    }
+    assert!(io.injected() > 0, "the fault plan never fired");
+    let h = t.health();
+    assert!(h.quarantined.is_empty(), "transient faults must heal, not quarantine");
+    assert_eq!(h.state, TableHealth::Healthy);
+    let stats = h.cache.expect("paged mode reports cache stats");
+    assert!(stats.misses > 0);
+    let _ = std::fs::remove_dir_all(&dir);
 }

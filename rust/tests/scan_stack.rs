@@ -9,8 +9,8 @@
 //! reduce.
 
 use d4m::store::{
-    format_num, lock_acquisitions, CellFilter, CompactionSpec, KeyMatch, RowReduce, ScanIter,
-    ScanRange, ScanSpec, SharedStr, Table, TableConfig, Triple,
+    format_num, lock_acquisitions, CellFilter, CompactionSpec, DurableOptions, FsyncPolicy,
+    KeyMatch, RowReduce, ScanIter, ScanRange, ScanSpec, SharedStr, Table, TableConfig, Triple,
 };
 use d4m::util::prop::check;
 use d4m::util::{Parallelism, SplitMix64};
@@ -772,6 +772,247 @@ fn partially_consumed_snapshot_stream_stays_isolated() {
         got.push(tr);
     }
     assert_eq!(got, expect, "in-flight pinned stream leaked post-open state");
+}
+
+// ---------------------------------------------------------------------
+// Block cache section (PR 9)
+// ---------------------------------------------------------------------
+//
+// Contract: with `DurableOptions::cache_capacity` set, run files are
+// served block-by-block through a shared LRU cache. At *every*
+// capacity — 0 (pin-only), smaller than one block, a few blocks, or
+// unbounded — every scan flavor is byte-identical to the fully
+// resident table; multi-range scans never fault the blocks between
+// ranges; eviction under concurrent writers never disturbs a pinned
+// scan; and the zero-locks-after-open contract extends to scans that
+// fault blocks in.
+
+/// Data-block size (in triples) the cache tests write run files with:
+/// small enough that a ~1.5k-cell layered table spans dozens of blocks.
+const CACHE_BLOCK_TRIPLES: usize = 64;
+/// On-disk bytes of one full data block (12 bytes per triple).
+const CACHE_BLOCK_BYTES: usize = CACHE_BLOCK_TRIPLES * 12;
+
+fn cache_test_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("d4m-cache-tests")
+        .join(format!("{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Build a layered durable table on disk: three write waves with minor
+/// compactions between (so several runs with shadowed versions), a
+/// sprinkle of deletes, and a live memtable tail carried by the WAL.
+fn build_layered_dir(tag: &str) -> std::path::PathBuf {
+    let dir = cache_test_dir(tag);
+    let opts = DurableOptions { block_triples: CACHE_BLOCK_TRIPLES, ..Default::default() };
+    let t = Table::durable_with(
+        "t",
+        TableConfig { split_threshold: 2048, write_latency_us: 0 },
+        &dir,
+        FsyncPolicy::Never,
+        opts,
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(0xCAC4E);
+    for wave in 0..3u64 {
+        let batch: Vec<Triple> = (0..500)
+            .map(|_| {
+                Triple::new(
+                    format!("r{:03}", rng.below(120)),
+                    format!("c{:02}", rng.below(24)),
+                    format!("w{wave}-{}", rng.below(100)),
+                )
+            })
+            .collect();
+        for chunk in batch.chunks(16) {
+            t.write_batch(chunk.to_vec()).unwrap();
+        }
+        for _ in 0..15 {
+            let _ =
+                t.delete(&format!("r{:03}", rng.below(120)), &format!("c{:02}", rng.below(24)));
+        }
+        if wave < 2 {
+            t.minor_compact().unwrap();
+        }
+    }
+    t.sync().unwrap();
+    dir
+}
+
+/// The specs the capacity sweep compares: full table, a gappy
+/// multi-range set, a filtered scan, and a row combiner.
+fn cache_specs() -> Vec<ScanSpec> {
+    vec![
+        ScanSpec::all(),
+        ScanSpec::ranges([
+            ScanRange::rows("r000", "r010"),
+            ScanRange::rows("r100", "r110").with_cols("c00", "c12"),
+        ]),
+        ScanSpec::all().filtered(CellFilter::col(KeyMatch::Prefix("c1".into()))),
+        ScanSpec::all().reduced(RowReduce::Count { out_col: "n".into() }),
+    ]
+}
+
+#[test]
+fn paged_scans_bit_identical_across_cache_capacities() {
+    let dir = build_layered_dir("capacities");
+    // Settle once resident: the WAL tail is frozen to a run and the
+    // baseline image is fixed on disk.
+    let baseline: Vec<Vec<Triple>> = {
+        let t = Table::recover("t", cfg_cache(), &dir, FsyncPolicy::Never).unwrap();
+        assert!(t.health().cache.is_none(), "resident mode must not report cache stats");
+        cache_specs().iter().map(|s| t.scan_spec_par(s, Parallelism::serial())).collect()
+    };
+    assert!(baseline[0].len() > 800, "need a multi-block table");
+    for capacity in [0usize, CACHE_BLOCK_BYTES, 8 * CACHE_BLOCK_BYTES, usize::MAX] {
+        let opts = DurableOptions::default().cache_capacity(capacity);
+        let t = Table::recover_with("t", cfg_cache(), &dir, FsyncPolicy::Never, opts).unwrap();
+        for (spec, expect) in cache_specs().iter().zip(&baseline) {
+            assert_eq!(
+                &t.scan_spec_par(spec, Parallelism::serial()),
+                expect,
+                "capacity={capacity} serial ({spec:?})"
+            );
+            for th in THREADS {
+                assert_eq!(
+                    &t.scan_spec_par(spec, Parallelism::with_threads(th)),
+                    expect,
+                    "capacity={capacity} threads={th} ({spec:?})"
+                );
+            }
+            let streamed: Vec<Triple> = t.scan_stream(spec.clone()).collect();
+            assert_eq!(&streamed, expect, "capacity={capacity} streamed ({spec:?})");
+        }
+        let stats = t.health().cache.expect("paged mode reports cache stats");
+        assert!(stats.misses > 0, "capacity={capacity}: paged scans must fault blocks");
+        if capacity < usize::MAX {
+            assert!(
+                stats.resident_bytes <= capacity,
+                "capacity={capacity}: cache retains {} bytes",
+                stats.resident_bytes
+            );
+        }
+        if capacity == 8 * CACHE_BLOCK_BYTES {
+            assert!(stats.evictions > 0, "tiny capacity must evict under a full scan");
+        }
+        if capacity == usize::MAX {
+            assert_eq!(stats.evictions, 0, "unbounded cache must never evict");
+        }
+    }
+}
+
+/// Split threshold for the cache tests' recovered tables.
+fn cfg_cache() -> TableConfig {
+    TableConfig { split_threshold: 2048, write_latency_us: 0 }
+}
+
+#[test]
+fn multi_range_paged_scans_skip_gap_blocks() {
+    let dir = build_layered_dir("gaps");
+    {
+        let t = Table::recover("t", cfg_cache(), &dir, FsyncPolicy::Never).unwrap();
+        drop(t); // settle the WAL tail into a run
+    }
+    // Capacity 0 retains nothing, so each scan's block faults are
+    // exactly its miss delta — the per-scan faulted-blocks counter.
+    let opts = DurableOptions::default().cache_capacity(0);
+    let t = Table::recover_with("t", cfg_cache(), &dir, FsyncPolicy::Never, opts).unwrap();
+    let full_spec = ScanSpec::all();
+    let m0 = t.health().cache.unwrap().misses;
+    let full = t.scan_spec_par(&full_spec, Parallelism::serial());
+    let full_faults = t.health().cache.unwrap().misses - m0;
+    assert!(!full.is_empty());
+    // Two narrow row windows ~90 rows apart: the blocks between them
+    // must never be faulted in (the index seeks straight across).
+    let gap_spec = ScanSpec::ranges([
+        ScanRange::rows("r000", "r008"),
+        ScanRange::rows("r100", "r108"),
+    ]);
+    let m1 = t.health().cache.unwrap().misses;
+    let gappy = t.scan_spec_par(&gap_spec, Parallelism::serial());
+    let gap_faults = t.health().cache.unwrap().misses - m1;
+    assert!(!gappy.is_empty());
+    assert!(
+        gap_faults * 2 < full_faults,
+        "gap hop faulted {gap_faults} of {full_faults} blocks — index seeks must skip gaps"
+    );
+}
+
+#[test]
+fn mid_scan_eviction_under_concurrent_writers_stays_isolated() {
+    let dir = build_layered_dir("evict-writers");
+    {
+        let t = Table::recover("t", cfg_cache(), &dir, FsyncPolicy::Never).unwrap();
+        drop(t);
+    }
+    // Two blocks' worth of cache: every collect refaults and evicts.
+    let opts = DurableOptions::default().cache_capacity(2 * CACHE_BLOCK_BYTES);
+    let t = Table::recover_with("t", cfg_cache(), &dir, FsyncPolicy::Never, opts).unwrap();
+    let spec = ScanSpec::all();
+    let snap = t.scan_snapshot(&spec);
+    let expect = snap.collect(Parallelism::serial());
+    assert!(!expect.is_empty());
+    std::thread::scope(|scope| {
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        let stop = &stop;
+        let table = &t;
+        for w in 0..2usize {
+            scope.spawn(move || {
+                let mut wrng = SplitMix64::new(0xD00D + w as u64);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let row = format!("r{:03}", wrng.below(120));
+                    let col = format!("c{:02}", wrng.below(24));
+                    table.write_batch(vec![Triple::new(row, col, "w")]).unwrap();
+                }
+            });
+        }
+        for th in [1, 2, 4, 7] {
+            assert_eq!(
+                expect,
+                snap.collect(Parallelism::with_threads(th)),
+                "threads={th} under concurrent writers with eviction"
+            );
+        }
+        let streamed: Vec<Triple> = snap.stream().collect();
+        assert_eq!(expect, streamed, "streamed under concurrent writers with eviction");
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+    let stats = t.health().cache.unwrap();
+    assert!(stats.evictions > 0, "capped cache must have evicted under repeated scans");
+    // Pinned cursors kept their blocks alive through eviction, and the
+    // high-water mark stayed within capacity + pinned-per-cursor slack.
+    assert!(stats.peak_live_bytes >= stats.resident_bytes);
+}
+
+#[test]
+fn paged_snapshot_consumption_takes_zero_tracked_locks() {
+    // PR 8's zero-locks-after-open contract must hold when the scan
+    // faults blocks through the cache: block loads synchronize on the
+    // cache's own (untracked) shards, never on table or tablet locks.
+    let dir = build_layered_dir("lockfree");
+    {
+        let t = Table::recover("t", cfg_cache(), &dir, FsyncPolicy::Never).unwrap();
+        drop(t);
+    }
+    // Capacity 0: every block read is a fresh fault, so the collect
+    // below exercises the fault path, not a warm cache.
+    let opts = DurableOptions::default().cache_capacity(0);
+    let t = Table::recover_with("t", cfg_cache(), &dir, FsyncPolicy::Never, opts).unwrap();
+    let spec = ScanSpec::all();
+    let expect = t.scan_spec_par(&spec, Parallelism::serial());
+    let snap = t.scan_snapshot(&spec);
+    let before = lock_acquisitions();
+    let collected = snap.collect(Parallelism::serial());
+    assert_eq!(lock_acquisitions(), before, "cache-faulting collect took a tracked lock");
+    let streamed: Vec<Triple> = snap.stream().collect();
+    assert_eq!(lock_acquisitions(), before, "cache-faulting stream took a tracked lock");
+    assert_eq!(collected, expect);
+    assert_eq!(streamed, expect);
+    let stats = t.health().cache.unwrap();
+    assert!(stats.misses > 0, "the lock-free consumption must actually have faulted blocks");
 }
 
 #[test]

@@ -90,6 +90,9 @@ ACCEPTANCE = {
     "wal-ingest-retry": ("durable ingest with retry layer vs no-retry", 0.95),
     "scan-under-writers": ("pinned-snapshot vs lock-per-block scan under writers", 1.3),
     "range-chunk-fanout": ("range-chunk vs per-tablet-group scan fan-out", 1.3),
+    "block-cold-scan": ("capped block-cache cold scan vs resident (beyond-RAM)", 0.15),
+    "block-warm-scan": ("warm block-cache scan vs resident", 0.91),
+    "block-compact": ("streamed bounded-memory vs resident major compaction", 0.15),
 }
 
 
