@@ -80,6 +80,13 @@
 //!   and `major_compact` streamed block-by-block under the same cap vs
 //!   the resident compactor (same memory bound asserted). `--block-only
 //!   1` runs just this section — the CI low-memory smoke leg.
+//! * **Cost-based planner (PR 10)** — planner-chosen plans vs the
+//!   frozen pre-planner heuristics on parity shapes (masked TableMult
+//!   and BFS, ≥ 0.95× asserted — within the 1.05× band), an
+//!   adversarial ingest shape where the cost rule must beat the frozen
+//!   `8×` row-restriction heuristic ≥ 1.2× (asserted), and the
+//!   symbolic-exact SpGEMM output bound on column skew (allocation
+//!   witness asserted). Every leg asserts bit-identical output.
 //!
 //! Besides the CSV, the run writes the machine-readable perf
 //! trajectories `BENCH_PR2.json` (thread sweep + accumulator policies,
@@ -91,9 +98,10 @@
 //! `BENCH_PR6.json` (durable ingest, checkpoint recovery, run-backed
 //! scans), `BENCH_PR7.json` (retry-layer overhead and the
 //! fault-healing showcase), `BENCH_PR8.json` (snapshot scans under
-//! writers, range-chunk fan-out) and `BENCH_PR9.json` (block-cache
-//! cold/warm scans and bounded-memory compaction) for
-//! `scripts/summarize_results.py` and the CI artifacts.
+//! writers, range-chunk fan-out), `BENCH_PR9.json` (block-cache
+//! cold/warm scans and bounded-memory compaction) and
+//! `BENCH_PR10.json` (planner parity, adversarial ingest, symbolic
+//! bound) for `scripts/summarize_results.py` and the CI artifacts.
 //!
 //! Usage: `cargo bench --bench ablations -- [--n N] [--repeats R]
 //! [--threads-n N] [--hyper-scale S] [--mask-scale S]
@@ -111,13 +119,18 @@
 //! sizes the block-cache section to 2^S cells, default 14, with
 //! `--block-cap-pct` setting the cold-leg cache budget as a percentage
 //! of the run bytes, default 25; `--block-only 1` runs only that
-//! section).
+//! section. `--plan-scale` sizes the planner section to 2^S triples;
+//! default 12).
 
 use d4m::assoc::{keys_from, Aggregator, Assoc, Key, KeyEncoding, ValsInput};
 use d4m::bench::{BenchRecord, FigureHarness, Workload};
 use d4m::graphulo;
+use d4m::plan::Choices;
 use d4m::semiring::{PlusTimes, Semiring};
-use d4m::sparse::{spgemm, spgemm_par, spgemm_with_policy_par, AccumulatorPolicy, CooMatrix};
+use d4m::sparse::{
+    spgemm, spgemm_par, spgemm_with_modes_par, spgemm_with_policy_par, AccumulatorPolicy,
+    CooMatrix, CsrMatrix, SymbolicBound,
+};
 use d4m::store::{
     format_num, BatchWriter, BlockCache, CellFilter, CompactionSpec, DurableOptions, FaultKind,
     FaultPlan, FaultyIo, FsyncPolicy, KeyMatch, ScanIter, ScanRange, ScanSpec, Table, TableConfig,
@@ -540,6 +553,337 @@ fn bench_blocks(args: &Args, repeats: usize) -> Vec<BenchRecord> {
             .with_extra("peak_live_bytes", comp_stats.peak_live_bytes as f64)
             .with_extra("runs", run_files as f64),
     ]
+}
+
+/// Cost-based query planner (PR 10). Three shapes:
+///
+/// * **parity** (masked TableMult and BFS on the shapes the frozen
+///   heuristics were tuned for) — the planner must stay within 1.05×
+///   of [`Choices::frozen`] (speedup ≥ 0.95, asserted) and its output
+///   must be bit-identical;
+/// * **adversarial ingest** — an operand sized into the gap where the
+///   frozen `8·rows ≤ len` rule refuses to restrict but the cost rule,
+///   which can *estimate* the range-set cells, restricts and must win
+///   **≥ 1.2×** (asserted);
+/// * **symbolic-exact bound** — a column-skewed SpGEMM where the loose
+///   `min(flops, ncols)` bound overallocates; `Auto` must upgrade to
+///   the exact two-pass bound (allocation witness asserted,
+///   bit-identical output).
+///
+/// Returns the `BENCH_PR10.json` records.
+fn bench_planner(args: &Args, repeats: usize) -> Vec<BenchRecord> {
+    let pscale = args.usize_or("plan-scale", 12);
+    let pn = 1usize << pscale;
+    let par = Parallelism::current();
+    let threads = par.threads;
+    let store = TableStore::new(TableConfig::default());
+    let mut records = Vec::new();
+
+    // --- parity: masked TableMult, planner vs frozen plan ------------
+    // The PR 5 hit-table shape (most rows survive the mask, so the
+    // frozen full-scan ingest was already right); the planner must
+    // reach the same physical plan family and the same bits.
+    {
+        let mut rng = SplitMix64::new(0x91A_77E5);
+        let rows: Vec<String> =
+            (0..pn).map(|i| format!("r{:05}", i % (pn / 16).max(1))).collect();
+        let cols: Vec<String> = (0..pn).map(|_| format!("c{:03}", rng.below(1000))).collect();
+        store.ingest_assoc("phits", &Assoc::from_triples(&rows, &cols, 1.0));
+    }
+    let phits = store.table("phits").expect("ingested above");
+    let keep = KeyMatch::Prefix("c0".into());
+    let out_frozen = store.create_table("pm_frozen");
+    let mut pm_cells = 0usize;
+    let t_pm_frozen = time_op(1, repeats, |_| {
+        pm_cells = graphulo::table_mult_masked_planned(
+            &phits,
+            &phits,
+            &out_frozen,
+            &PlusTimes,
+            &keep,
+            par,
+            &Choices::frozen(),
+        );
+        pm_cells
+    });
+    let out_plan = store.create_table("pm_plan");
+    let t_pm_plan = time_op(1, repeats, |_| {
+        graphulo::table_mult_masked_planned(
+            &phits,
+            &phits,
+            &out_plan,
+            &PlusTimes,
+            &keep,
+            par,
+            &Choices::planner(),
+        )
+    });
+    assert_eq!(
+        out_plan.scan(ScanRange::all()),
+        out_frozen.scan(ScanRange::all()),
+        "planner-chosen masked mult must be bit-identical to the frozen plan"
+    );
+    let pm_speedup = if t_pm_plan.mean_s() > 0.0 {
+        t_pm_frozen.mean_s() / t_pm_plan.mean_s()
+    } else {
+        0.0
+    };
+    println!(
+        "[ablations] planner masked mult 2^{pscale}: frozen={:.6}s planner={:.6}s \
+         parity={pm_speedup:.2}x ({pm_cells} cells)",
+        t_pm_frozen.mean_s(),
+        t_pm_plan.mean_s(),
+    );
+    assert!(
+        pm_speedup >= 0.95,
+        "planner masked mult at {pm_speedup:.2}x of frozen is outside the 1.05x parity band"
+    );
+    records.push(
+        BenchRecord::new("tablemult-frozen-plan", pscale, threads, t_pm_frozen.mean_s() * 1e9, 1.0)
+            .with_extra("out_cells", pm_cells as f64),
+    );
+    records.push(
+        BenchRecord::new("plan-masked-mult", pscale, threads, t_pm_plan.mean_s() * 1e9, pm_speedup)
+            .with_extra("out_cells", pm_cells as f64),
+    );
+
+    // --- parity: BFS, planner row-set lowering vs frozen range sets --
+    let bfs_graph = store.create_table("pgraph");
+    {
+        let mut rng = SplitMix64::new(0xB0F5_11AB);
+        let mut w = BatchWriter::new(Arc::clone(&bfs_graph), WriterConfig::default());
+        for i in 0..pn {
+            for _ in 0..4 {
+                w.put(Triple::new(
+                    format!("n{i:06}"),
+                    format!("n{:06}", rng.below_usize(pn)),
+                    "1",
+                ));
+            }
+        }
+        w.flush().expect("bench flush");
+    }
+    let frontier_n = 1000usize.min(pn);
+    let seeds: Vec<String> =
+        (0..frontier_n).map(|i| format!("n{:06}", i * (pn / frontier_n))).collect();
+    let mut frozen_frontiers = Vec::new();
+    let t_bfs_frozen = time_op(1, repeats, |_| {
+        frozen_frontiers = graphulo::bfs_planned(&bfs_graph, &seeds, 2, par, &Choices::frozen());
+        frozen_frontiers.len()
+    });
+    let mut plan_frontiers = Vec::new();
+    let t_bfs_plan = time_op(1, repeats, |_| {
+        plan_frontiers = graphulo::bfs_planned(&bfs_graph, &seeds, 2, par, &Choices::planner());
+        plan_frontiers.len()
+    });
+    assert_eq!(
+        frozen_frontiers, plan_frontiers,
+        "planner BFS must reach exactly the frozen-plan frontiers"
+    );
+    let reached: usize = plan_frontiers.iter().map(BTreeSet::len).sum();
+    let bfs_parity = if t_bfs_plan.mean_s() > 0.0 {
+        t_bfs_frozen.mean_s() / t_bfs_plan.mean_s()
+    } else {
+        0.0
+    };
+    println!(
+        "[ablations] planner bfs 2^{pscale} nodes, {frontier_n}-seed frontier: frozen={:.6}s \
+         planner={:.6}s parity={bfs_parity:.2}x ({reached} reached)",
+        t_bfs_frozen.mean_s(),
+        t_bfs_plan.mean_s(),
+    );
+    assert!(
+        bfs_parity >= 0.95,
+        "planner BFS at {bfs_parity:.2}x of frozen is outside the 1.05x parity band"
+    );
+    records.push(
+        BenchRecord::new("bfs-frozen-plan", pscale, threads, t_bfs_frozen.mean_s() * 1e9, 1.0)
+            .with_extra("frontier_nodes", frontier_n as f64)
+            .with_extra("reached_nodes", reached as f64),
+    );
+    records.push(
+        BenchRecord::new("plan-bfs", pscale, threads, t_bfs_plan.mean_s() * 1e9, bfs_parity)
+            .with_extra("frontier_nodes", frontier_n as f64)
+            .with_extra("reached_nodes", reached as f64),
+    );
+
+    // --- adversarial ingest: thin survivors + a fat off-mask band ----
+    // A holds one cell per survivor row plus 6·S cells in fat rows the
+    // mask never selects — 7·S cells total, sized into the gap where
+    // the frozen heuristic refuses to restrict (8·S > 7·S ⇒ full scan,
+    // copying every fat cell) but the cost rule estimates S cells +
+    // 4·S seek-equivalents < 7·S and restricts.
+    let surv = (pn / 2).max(64);
+    let fat_rows = ((6 * surv) / 512).max(1);
+    let adv_a = store.create_table("adv_a");
+    let adv_b = store.create_table("adv_b");
+    {
+        let mut w = BatchWriter::new(Arc::clone(&adv_a), WriterConfig::default());
+        for i in 0..surv {
+            w.put(Triple::new(format!("s{i:06}"), "x", "1"));
+        }
+        for i in 0..fat_rows {
+            for j in 0..512 {
+                w.put(Triple::new(format!("zfat{i:04}"), format!("f{j:03}"), "1"));
+            }
+        }
+        w.flush().expect("bench flush");
+        let mut w = BatchWriter::new(Arc::clone(&adv_b), WriterConfig::default());
+        for i in 0..surv {
+            w.put(Triple::new(format!("s{i:06}"), "y", "1"));
+        }
+        w.flush().expect("bench flush");
+    }
+    let adv_keep = KeyMatch::Equals("y".into());
+    let adv_frozen_out = store.create_table("adv_frozen");
+    let mut adv_cells = 0usize;
+    let t_adv_frozen = time_op(1, repeats, |_| {
+        adv_cells = graphulo::table_mult_masked_planned(
+            &adv_a,
+            &adv_b,
+            &adv_frozen_out,
+            &PlusTimes,
+            &adv_keep,
+            par,
+            &Choices::frozen(),
+        );
+        adv_cells
+    });
+    let adv_plan_out = store.create_table("adv_plan");
+    let t_adv_plan = time_op(1, repeats, |_| {
+        graphulo::table_mult_masked_planned(
+            &adv_a,
+            &adv_b,
+            &adv_plan_out,
+            &PlusTimes,
+            &adv_keep,
+            par,
+            &Choices::planner(),
+        )
+    });
+    assert_eq!(
+        adv_plan_out.scan(ScanRange::all()),
+        adv_frozen_out.scan(ScanRange::all()),
+        "planner adversarial mult must be bit-identical to the frozen plan"
+    );
+    let adv_speedup = if t_adv_plan.mean_s() > 0.0 {
+        t_adv_frozen.mean_s() / t_adv_plan.mean_s()
+    } else {
+        0.0
+    };
+    println!(
+        "[ablations] planner adversarial ingest ({surv} survivors, {} operand cells): \
+         frozen={:.6}s planner={:.6}s speedup={adv_speedup:.2}x",
+        adv_a.len(),
+        t_adv_frozen.mean_s(),
+        t_adv_plan.mean_s(),
+    );
+    assert!(
+        adv_speedup >= 1.2,
+        "planner adversarial-ingest speedup {adv_speedup:.2}x below the 1.2x acceptance threshold"
+    );
+    records.push(
+        BenchRecord::new(
+            "adversarial-frozen-plan",
+            pscale,
+            threads,
+            t_adv_frozen.mean_s() * 1e9,
+            1.0,
+        )
+        .with_extra("operand_cells", adv_a.len() as f64)
+        .with_extra("survivor_rows", surv as f64),
+    );
+    records.push(
+        BenchRecord::new(
+            "plan-adversarial-ingest",
+            pscale,
+            threads,
+            t_adv_plan.mean_s() * 1e9,
+            adv_speedup,
+        )
+        .with_extra("operand_cells", adv_a.len() as f64)
+        .with_extra("survivor_rows", surv as f64)
+        .with_extra("out_cells", adv_cells as f64),
+    );
+
+    // --- symbolic-exact output bound on column skew ------------------
+    // Every B row lands its 64 nnz inside a 128-column hot set, so the
+    // loose per-row bound min(flops, ncols) ≈ 1024 while the true
+    // distinct-column count is ≤ 128. `Auto` must detect the skew
+    // (Σ bound > 2× input nnz), upgrade to the exact two-pass bound,
+    // and allocate a fraction of the loose arrays — same bits.
+    let em = (pn / 16).max(64);
+    let hot = 128usize;
+    let mut rng = SplitMix64::new(0xE8AC_7B0D);
+    let (mut ar, mut ac) = (Vec::new(), Vec::new());
+    for i in 0..em {
+        for _ in 0..32 {
+            ar.push(i);
+            ac.push(rng.below_usize(em));
+        }
+    }
+    let a_ones = vec![1.0; ar.len()];
+    let skew_a = CooMatrix::from_triples_aggregate(em, em, &ar, &ac, &a_ones, 0.0, |x, _| x)
+        .expect("skew A")
+        .to_csr();
+    let (mut br, mut bc) = (Vec::new(), Vec::new());
+    for i in 0..em {
+        for _ in 0..64 {
+            br.push(i);
+            bc.push(rng.below_usize(hot));
+        }
+    }
+    let b_ones = vec![1.0; br.len()];
+    let skew_b = CooMatrix::from_triples_aggregate(em, 1024, &br, &bc, &b_ones, 0.0, |x, _| x)
+        .expect("skew B")
+        .to_csr();
+    let run_bound = |bound: SymbolicBound| {
+        spgemm_with_modes_par(
+            &skew_a,
+            &skew_b,
+            &PlusTimes,
+            par,
+            AccumulatorPolicy::default(),
+            bound,
+        )
+        .expect("shared dimension")
+    };
+    let (c_loose, st_loose) = run_bound(SymbolicBound::MinFlopsCols);
+    let (c_auto, st_auto) = run_bound(SymbolicBound::Auto);
+    let fp = |c: &CsrMatrix| {
+        let bits: Vec<u64> = c.values().iter().map(|v| v.to_bits()).collect();
+        (c.indptr().to_vec(), c.indices().to_vec(), bits)
+    };
+    assert_eq!(fp(&c_loose), fp(&c_auto), "exact bound must not change the output bits");
+    assert!(
+        st_auto.alloc_bound < st_loose.alloc_bound,
+        "auto bound {} must allocate under the loose bound {} on column skew",
+        st_auto.alloc_bound,
+        st_loose.alloc_bound,
+    );
+    let t_loose = time_op(1, repeats, |_| run_bound(SymbolicBound::MinFlopsCols).1.out_nnz);
+    let t_auto = time_op(1, repeats, |_| run_bound(SymbolicBound::Auto).1.out_nnz);
+    let bound_speedup =
+        if t_auto.mean_s() > 0.0 { t_loose.mean_s() / t_auto.mean_s() } else { 0.0 };
+    println!(
+        "[ablations] symbolic bound on skew ({em} rows): loose={:.6}s auto/exact={:.6}s \
+         ({bound_speedup:.2}x, alloc bound {} -> {})",
+        t_loose.mean_s(),
+        t_auto.mean_s(),
+        st_loose.alloc_bound,
+        st_auto.alloc_bound,
+    );
+    records.push(
+        BenchRecord::new("spgemm-loose-bound", pscale, threads, t_loose.mean_s() * 1e9, 1.0)
+            .with_extra("alloc_bound", st_loose.alloc_bound as f64)
+            .with_extra("out_nnz", st_loose.out_nnz as f64),
+    );
+    records.push(
+        BenchRecord::new("plan-exact-bound", pscale, threads, t_auto.mean_s() * 1e9, bound_speedup)
+            .with_extra("alloc_bound", st_auto.alloc_bound as f64)
+            .with_extra("out_nnz", st_auto.out_nnz as f64),
+    );
+    records
 }
 
 fn main() {
@@ -1573,6 +1917,9 @@ fn main() {
     // --- block-granular run I/O + shared LRU block cache (PR 9) -----
     let records9 = bench_blocks(&args, repeats);
 
+    // --- cost-based query planner vs frozen heuristics (PR 10) ------
+    let records10 = bench_planner(&args, repeats);
+
     h.write_csv(&out_dir).expect("write CSV");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR2.json", &records).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR3.json", &records3).expect("write JSON");
@@ -1582,4 +1929,5 @@ fn main() {
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR7.json", &records7).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR8.json", &records8).expect("write JSON");
     d4m::bench::write_bench_json(&out_dir, "BENCH_PR9.json", &records9).expect("write JSON");
+    d4m::bench::write_bench_json(&out_dir, "BENCH_PR10.json", &records10).expect("write JSON");
 }

@@ -24,28 +24,37 @@
 //!
 //! All kernels pull from the server-side iterator stack
 //! ([`crate::store::scan`]) and write results back via a
-//! [`BatchWriter`] — no kernel materializes a full `Vec<Triple>` of its
-//! input; scans stream into the compute structures directly, and since
-//! PR 4 they stream as *dictionary-encoded id triples*: each side's
-//! column keys are interned to dense `u32` ids through a
-//! [`StrDict`] (cells arrive as shared-bytes handles, so interning is a
-//! pointer clone), and the CSR builders consume ids — string bytes are
-//! touched once per distinct key instead of once per cell.
+//! [`crate::store::BatchWriter`] — no kernel materializes a full
+//! `Vec<Triple>` of its input; scans stream into the compute
+//! structures directly, and since PR 4 they stream as
+//! *dictionary-encoded id triples*: each side's column keys are
+//! interned to dense `u32` ids through a [`crate::util::StrDict`]
+//! (cells arrive as shared-bytes handles, so interning is a pointer
+//! clone), and the CSR builders consume ids — string bytes are touched
+//! once per distinct key instead of once per cell.
 //!
 //! The kernels are oblivious to the storage tiering underneath (PR 6):
 //! an input table whose cells live partly in frozen runs scans
 //! byte-identically to an all-in-memory one, so every kernel here works
 //! unchanged over compacted tables (pinned by the compacted-input
 //! equivalence test below and `tests/scan_stack.rs`).
+//!
+//! Since PR 10 every kernel routes through the cost-based query
+//! planner ([`crate::plan`]): the entry points here *build* logical
+//! plans, the planner annotates them with per-table statistics,
+//! chooses the physical operators that used to be hard-coded
+//! heuristics, and executes the fused pipeline. The `_planned`
+//! variants expose the [`Choices`] knobs — [`Choices::frozen`] forces
+//! the exact pre-planner behavior (the benchmark baseline), and every
+//! choice combination produces bit-identical output
+//! (`rust/tests/plan_equivalence.rs`).
 
 use crate::assoc::{Assoc, AssocError};
-use crate::semiring::Semiring;
-use crate::sparse::{spgemm_masked_par, spgemm_par, spgemm_row_masked_par, CooMatrix, CsrMatrix};
-use crate::store::{
-    format_num, BatchWriter, CellFilter, KeyMatch, RowReduce, ScanRange, ScanSpec, SharedStr,
-    Table, Triple, WriterConfig, SCAN_BLOCK,
+use crate::plan::{
+    execute_mult, execute_reduce_write, plan_mult, plan_scan, Choices, MultNode, ScanNode,
 };
-use crate::util::intern::StrDict;
+use crate::semiring::Semiring;
+use crate::store::{KeyMatch, RowReduce, ScanSpec, SharedStr, Table, Triple, SCAN_BLOCK};
 use crate::util::Parallelism;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -77,19 +86,37 @@ pub fn table_mult_par(
     s: &dyn Semiring,
     par: Parallelism,
 ) -> usize {
-    table_mult_inner(a, b, out, s, par, Sink::None)
+    table_mult_planned(a, b, out, s, par, &Choices::planner())
+}
+
+/// [`table_mult_par`] under explicit planner [`Choices`]: the logical
+/// plan is built here, annotated/chosen/executed by [`crate::plan`].
+/// Forced choices select physical operators directly (every
+/// combination is bit-identical); [`Choices::planner`] is what the
+/// plain entry points use.
+pub fn table_mult_planned(
+    a: &Table,
+    b: &Table,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    par: Parallelism,
+    choices: &Choices,
+) -> usize {
+    let node = MultNode::new(a, b);
+    execute_mult(&plan_mult(&node, choices), out, s, par)
 }
 
 /// Sink-filtered [`table_mult`]: compute and write only the output
 /// columns whose key matches `keep` — the Graphulo pattern of a
 /// multiply feeding a filtered sink table. The filter is pushed all the
-/// way into the scans (since PR 5): `B` is scanned with the column
-/// filter beneath the tablet block copy, and when the surviving row
-/// subset is selective `A` is scanned over a multi-range set of `B`'s
-/// surviving contraction rows only, so doomed cells are never copied
-/// and emptied rows are never visited. The
-/// masked SpGEMM engine ([`spgemm_masked_par`]) still guards the
-/// compute stage; the kept cells are bit-identical to running the full
+/// way into the scans (since PR 5, cost-gated by the planner since
+/// PR 10): `B` is scanned with the column filter beneath the tablet
+/// block copy, and when the statistics say the surviving row subset is
+/// selective `A` is scanned over a multi-range set of `B`'s surviving
+/// contraction rows only, so doomed cells are never copied and emptied
+/// rows are never visited. The masked SpGEMM engine
+/// ([`crate::sparse::spgemm_masked_par`]) still guards the compute
+/// stage; the kept cells are bit-identical to running the full
 /// multiply and filtering afterwards.
 pub fn table_mult_masked(
     a: &Table,
@@ -110,7 +137,22 @@ pub fn table_mult_masked_par(
     keep: &KeyMatch,
     par: Parallelism,
 ) -> usize {
-    table_mult_inner(a, b, out, s, par, Sink::Col(keep))
+    table_mult_masked_planned(a, b, out, s, keep, par, &Choices::planner())
+}
+
+/// [`table_mult_masked_par`] under explicit planner [`Choices`] (see
+/// [`table_mult_planned`]).
+pub fn table_mult_masked_planned(
+    a: &Table,
+    b: &Table,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    keep: &KeyMatch,
+    par: Parallelism,
+    choices: &Choices,
+) -> usize {
+    let node = MultNode::col_masked(a, b, keep.clone());
+    execute_mult(&plan_mult(&node, choices), out, s, par)
 }
 
 /// Row-sink-filtered [`table_mult`]: compute and write only the output
@@ -118,13 +160,13 @@ pub fn table_mult_masked_par(
 /// for sinks filtered on the row key space. Output rows of `AᵀB` are
 /// `A`'s column keys, so the filter rides `A`'s scan (a pushed-down
 /// column filter: doomed cells are rejected beneath the tablet block
-/// copy) and, when the surviving subset is selective, `B` is scanned
-/// over a multi-range set of `A`'s surviving contraction rows only —
-/// rows the mask will drop are never scanned
-/// (since PR 5). The row-masked SpGEMM engine
-/// ([`spgemm_row_masked_par`]) still guards the compute stage, and the
-/// kept cells are bit-identical to running the full multiply and
-/// filtering afterwards.
+/// copy) and, when the planner's statistics say the surviving subset
+/// is selective, `B` is scanned over a multi-range set of `A`'s
+/// surviving contraction rows only — rows the mask will drop are never
+/// scanned (since PR 5, cost-gated since PR 10). The row-masked SpGEMM
+/// engine ([`crate::sparse::spgemm_row_masked_par`]) still guards the
+/// compute stage, and the kept cells are bit-identical to running the
+/// full multiply and filtering afterwards.
 pub fn table_mult_row_masked(
     a: &Table,
     b: &Table,
@@ -144,260 +186,57 @@ pub fn table_mult_row_masked_par(
     keep: &KeyMatch,
     par: Parallelism,
 ) -> usize {
-    table_mult_inner(a, b, out, s, par, Sink::Row(keep))
+    table_mult_row_masked_planned(a, b, out, s, keep, par, &Choices::planner())
 }
 
-/// Which output axis a sink filter restricts.
-enum Sink<'a> {
-    /// No sink filter: full product.
-    None,
-    /// Keep only output columns matching the filter (`B`-side mask).
-    Col(&'a KeyMatch),
-    /// Keep only output rows matching the filter (`Aᵀ`-side mask).
-    Row(&'a KeyMatch),
-}
-
-fn table_mult_inner(
+/// [`table_mult_row_masked_par`] under explicit planner [`Choices`]
+/// (see [`table_mult_planned`]).
+pub fn table_mult_row_masked_planned(
     a: &Table,
     b: &Table,
     out: &Arc<Table>,
     s: &dyn Semiring,
+    keep: &KeyMatch,
     par: Parallelism,
-    sink: Sink<'_>,
+    choices: &Choices,
 ) -> usize {
-    // Sink pushdown into the scans themselves. A sink filter dooms
-    // input cells before they are read: under `Sink::Row` an `A` cell
-    // whose *column* key the mask drops can only feed dropped output
-    // rows, so the filter rides `A`'s scan (rejected beneath the tablet
-    // block copy — no copy, no allocation), and `B` is then scanned
-    // over a multi-range set of `A`'s surviving contraction rows only —
-    // rows the mask emptied are never scanned at all (when the subset
-    // is selective; see `row_restricted_spec`). `Sink::Col` is
-    // the mirror image. Dropped cells contribute only to dropped
-    // outputs, so the kept cells stay bit-identical to the full
-    // multiply (the masked SpGEMM below still guards the contract).
-    let (sa, sb) = match &sink {
-        Sink::None => (ingest_side(a, ScanSpec::all(), par), ingest_side(b, ScanSpec::all(), par)),
-        Sink::Row(keep) => {
-            let sa = ingest_side(
-                a,
-                ScanSpec::all().filtered(CellFilter::col((*keep).clone())),
-                par,
-            );
-            let sb = if sa.rows.is_empty() {
-                ScanSide::default()
-            } else {
-                ingest_side(b, row_restricted_spec(&sa.rows, b), par)
-            };
-            (sa, sb)
-        }
-        Sink::Col(keep) => {
-            let sb = ingest_side(
-                b,
-                ScanSpec::all().filtered(CellFilter::col((*keep).clone())),
-                par,
-            );
-            let sa = if sb.rows.is_empty() {
-                ScanSide::default()
-            } else {
-                ingest_side(a, row_restricted_spec(&sb.rows, a), par)
-            };
-            (sa, sb)
-        }
-    };
-    if sa.rows.is_empty() && sb.rows.is_empty() {
-        return 0;
-    }
-    // Shared contraction dimension: merged distinct row keys (scans are
-    // sorted by row, so this is a linear merge of pointer handles).
-    let merged = merge_distinct(&sa.rows, &sb.rows);
-    let (ma, cols_a) = sa.into_csr(&merged);
-    let (mb, cols_b) = sb.into_csr(&merged);
-    // `Aᵀ` row c1 walks the rows containing c1 in ascending key order —
-    // the same ⊕ order the streaming row-join produced. The scans above
-    // already restricted the masked inputs, so the bitmaps below are
-    // all-true; they stay wired as the compute-stage guard of the
-    // multiply-then-drop contract.
-    let at = ma.transpose_cached();
-    let c = match sink {
-        Sink::None => spgemm_par(at, &mb, s, par).expect("shared row dimension"),
-        Sink::Col(keep) => {
-            let mask: Vec<bool> = cols_b.iter().map(|c| keep.matches(c)).collect();
-            spgemm_masked_par(at, &mb, s, par, &mask).expect("shared row dimension")
-        }
-        Sink::Row(keep) => {
-            let mask: Vec<bool> = cols_a.iter().map(|c| keep.matches(c)).collect();
-            spgemm_row_masked_par(at, &mb, s, par, &mask).expect("shared row dimension")
-        }
-    };
-    let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
-    let mut cells = 0usize;
-    for (i, c1) in cols_a.iter().enumerate() {
-        let (cj, cv) = c.row(i);
-        for (j, v) in cj.iter().zip(cv) {
-            if *v != s.zero() {
-                // Output keys are pointer clones of the scanned bytes.
-                w.put(Triple::new(c1.clone(), cols_b[*j as usize].clone(), format_num(*v)));
-                cells += 1;
-            }
-        }
-    }
-    w.flush().expect("spgemm sink flush");
-    cells
-}
-
-/// Stream one operand's stacked scan into a [`ScanSide`] — `spec`
-/// carries the sink pushdown (filters and/or a restricting range set);
-/// the serial path pulls from the stack triple-by-triple at the
-/// full-scan batch size, the parallel path consumes the fanned-out
-/// collection without re-allocating it.
-fn ingest_side(t: &Table, spec: ScanSpec, par: Parallelism) -> ScanSide {
-    let mut side = ScanSide::default();
-    if par.is_serial() {
-        for tr in t.scan_stream(spec.batched(SCAN_BLOCK)) {
-            side.ingest(tr);
-        }
-    } else {
-        for tr in t.scan_spec_par(&spec, par) {
-            side.ingest(tr);
-        }
-    }
-    side
-}
-
-/// A spec scanning exactly the given sorted, distinct rows — one
-/// [`ScanRange::single`] per row, coalesced into a multi-range set
-/// (adjacent keys merge; the tablet walk hops the gaps beneath the
-/// block copy) — when the subset is *selective*. Each range costs two
-/// small allocations plus pruning work, so a subset that is not
-/// clearly small relative to the operand's stored cells would make
-/// the range set pure overhead; those fall back to the full scan,
-/// which yields the identical product (cells in non-surviving rows
-/// contribute only to products that do not exist).
-fn row_restricted_spec(rows: &[SharedStr], operand: &Table) -> ScanSpec {
-    if rows.len().saturating_mul(8) <= operand.len() {
-        ScanSpec::ranges(rows.iter().map(|r| ScanRange::single(r.as_str())))
-    } else {
-        ScanSpec::all()
-    }
-}
-
-/// One operand of [`table_mult`], accumulated directly from a sorted
-/// triple stream as dictionary-encoded ids: distinct row keys (shared
-/// handles), per-entry local row index, a column [`StrDict`] with
-/// per-entry column ids, and parsed values — no `Triple` structs
-/// retained, no string bytes copied, no per-cell string compares.
-#[derive(Default)]
-struct ScanSide {
-    rows: Vec<SharedStr>,
-    row_of: Vec<u32>,
-    cols: StrDict,
-    col_of: Vec<u32>,
-    vals: Vec<f64>,
-}
-
-impl ScanSide {
-    /// Fold one streamed triple (stream is (row, col)-sorted). Values
-    /// parse like the old streaming join did (`unwrap_or(0.0)`), and
-    /// parsed zeros stay stored so non-plus-times semirings see exactly
-    /// the cells the table holds.
-    fn ingest(&mut self, t: Triple) {
-        let Triple { row, col, val } = t;
-        if self.rows.last() != Some(&row) {
-            self.rows.push(row);
-        }
-        self.row_of.push((self.rows.len() - 1) as u32);
-        self.col_of.push(self.cols.intern(&col));
-        self.vals.push(val.parse().unwrap_or(0.0));
-    }
-
-    /// Index into a CSR matrix over `merged` (a sorted superset of
-    /// `self.rows`). Returns the matrix and its sorted distinct column
-    /// keys. String bytes are touched once per distinct column here
-    /// (the dictionary sort); per-cell work is two id lookups.
-    fn into_csr(self, merged: &[SharedStr]) -> (CsrMatrix, Vec<SharedStr>) {
-        let ScanSide { rows, row_of, cols, col_of, vals } = self;
-        let (distinct, rank) = cols.into_sorted();
-        // Local row index → merged row index (both lists sorted).
-        let mut map = vec![0u32; rows.len()];
-        let mut p = 0usize;
-        for (i, r) in rows.iter().enumerate() {
-            while merged[p] != *r {
-                p += 1;
-            }
-            map[i] = p as u32;
-        }
-        let mut ri: Vec<u32> = Vec::with_capacity(row_of.len());
-        let mut ci: Vec<u32> = Vec::with_capacity(col_of.len());
-        for (k, &own) in row_of.iter().enumerate() {
-            ri.push(map[own as usize]);
-            ci.push(rank[col_of[k] as usize]);
-        }
-        let m = CooMatrix::from_sorted_parts(merged.len(), distinct.len(), ri, ci, vals)
-            .into_csr();
-        (m, distinct)
-    }
-}
-
-/// Merge two sorted, distinct key lists into their sorted union
-/// (clones are pointer copies).
-fn merge_distinct(x: &[SharedStr], y: &[SharedStr]) -> Vec<SharedStr> {
-    let mut out = Vec::with_capacity(x.len().max(y.len()));
-    let (mut i, mut j) = (0usize, 0usize);
-    while i < x.len() || j < y.len() {
-        let next = match (x.get(i), y.get(j)) {
-            (Some(a), Some(b)) => a.min(b),
-            (Some(a), None) => a,
-            (None, Some(b)) => b,
-            (None, None) => unreachable!(),
-        }
-        .clone();
-        if i < x.len() && x[i] == next {
-            i += 1;
-        }
-        if j < y.len() && y[j] == next {
-            j += 1;
-        }
-        out.push(next);
-    }
-    out
+    let node = MultNode::row_masked(a, b, keep.clone());
+    execute_mult(&plan_mult(&node, choices), out, s, par)
 }
 
 /// Build degree tables from an edge table: `(node, "deg", count)`.
 /// `out_degrees` counts cells per row (out-degree in an adjacency
 /// table); run it on the transpose table for in-degrees.
 ///
-/// The count happens *inside* the scan stack — a [`RowReduce::Count`]
-/// combiner collapses each row server-side, so exactly one triple per
-/// node crosses into the writer.
+/// The count usually happens *inside* the scan stack — a
+/// [`RowReduce::Count`] combiner collapses each row server-side, so
+/// exactly one triple per node crosses into the writer. The planner's
+/// combiner knob may instead aggregate at the client merge when run
+/// statistics say rows mostly hold one cell (scan-side aggregation
+/// would shrink nothing); both placements count identically.
 pub fn degree_table(edges: &Table, out: &Arc<Table>) -> usize {
-    let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
-    let spec = ScanSpec::all()
-        .reduced(RowReduce::Count { out_col: "deg".into() })
-        .batched(SCAN_BLOCK);
-    let nodes = w.put_scan(edges.scan_stream(spec));
-    w.flush().expect("degree table flush");
-    nodes
+    degree_table_planned(edges, out, Parallelism::serial(), &Choices::planner())
 }
 
 /// [`degree_table`] with an explicit thread configuration: the counting
 /// scan fans out over pinned snapshots as load-balanced range chunks
-/// ([`Table::scan_spec_par`] since PR 8 — the combiner still runs
-/// inside each worker's stack, and chunks cut at row boundaries, so
-/// the per-node counts are bit-identical to the streamed kernel).
+/// ([`Table::scan_spec_par`] since PR 8 — chunks cut at row
+/// boundaries, so the per-node counts are bit-identical to the
+/// streamed kernel).
 pub fn degree_table_par(edges: &Table, out: &Arc<Table>, par: Parallelism) -> usize {
-    if par.is_serial() {
-        return degree_table(edges, out);
-    }
-    let spec = ScanSpec::all().reduced(RowReduce::Count { out_col: "deg".into() });
-    let triples = edges.scan_spec_par(&spec, par);
-    let nodes = triples.len();
-    let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
-    for t in triples {
-        w.put(t);
-    }
-    w.flush().expect("degree table flush");
-    nodes
+    degree_table_planned(edges, out, par, &Choices::planner())
+}
+
+/// [`degree_table_par`] under explicit planner [`Choices`] (see
+/// [`table_mult_planned`]).
+pub fn degree_table_planned(
+    edges: &Table,
+    out: &Arc<Table>,
+    par: Parallelism,
+    choices: &Choices,
+) -> usize {
+    let node = ScanNode::full(edges).reduced(RowReduce::Count { out_col: "deg".into() });
+    execute_reduce_write(&plan_scan(&node, choices), out, par)
 }
 
 /// k-hop BFS from `seeds` over an adjacency table (`row → col` edges).
@@ -409,19 +248,19 @@ pub fn degree_table_par(edges: &Table, out: &Arc<Table>, par: Parallelism) -> us
 /// enter the visited set, so a reachable one is still discovered at
 /// its true hop distance.
 ///
-/// Every hop is **one stacked scan**: the frontier becomes a sorted,
-/// coalesced range set ([`ScanSpec::ranges()`], one
-/// [`ScanRange::single`] per frontier row — the Accumulo
-/// `BatchScanner` idiom) and the tablet cursors hop from range to
-/// range beneath the block copy, so a 1 000-node frontier costs one
-/// scan, not 1 000 seeks. The first scan does double duty: the rows it
-/// yields *are* the present seeds (hop 0) and their columns are hop 1,
-/// so the seed rows are walked once, not twice. A `hops == 0` call
-/// probes existence alone, pushing a [`RowReduce::Count`] combiner
-/// into the stack so exactly one triple per present seed crosses to
-/// the client.
+/// Every hop is **one stacked scan** over the frontier rows, lowered
+/// by the planner's row-set knob: a sorted, coalesced range set (the
+/// Accumulo `BatchScanner` idiom — the tablet cursors hop from range
+/// to range beneath the block copy, so a 1 000-node frontier costs one
+/// scan, not 1 000 seeks) when the statistics say the frontier is
+/// selective, or a full scan under an `In` row filter when it is not.
+/// The first scan does double duty: the rows it yields *are* the
+/// present seeds (hop 0) and their columns are hop 1, so the seed rows
+/// are walked once, not twice. A `hops == 0` call probes existence
+/// alone, pushing a [`RowReduce::Count`] combiner into the stack so
+/// exactly one triple per present seed crosses to the client.
 pub fn bfs(adj: &Table, seeds: &[String], hops: usize) -> Vec<BTreeSet<String>> {
-    bfs_impl(seeds, hops, |spec| adj.scan_stream(spec.batched(SCAN_BLOCK)))
+    bfs_planned(adj, seeds, hops, Parallelism::serial(), &Choices::planner())
 }
 
 /// [`bfs`] with an explicit thread configuration: every hop's frontier
@@ -436,21 +275,42 @@ pub fn bfs_par(
     hops: usize,
     par: Parallelism,
 ) -> Vec<BTreeSet<String>> {
-    if par.is_serial() {
-        return bfs(adj, seeds, hops);
-    }
-    bfs_impl(seeds, hops, |spec| adj.scan_spec_par(&spec, par).into_iter())
+    bfs_planned(adj, seeds, hops, par, &Choices::planner())
 }
 
-/// The hop engine shared by [`bfs`] (streamed scans) and [`bfs_par`]
-/// (snapshot fan-out): `scan` runs one stacked multi-range scan and
-/// yields its row-sorted triples.
-fn bfs_impl<I, F>(seeds: &[String], hops: usize, scan: F) -> Vec<BTreeSet<String>>
+/// [`bfs_par`] under explicit planner [`Choices`] (see
+/// [`table_mult_planned`]): the row-set knob decides how each hop's
+/// frontier lowers; every choice yields identical hop sets.
+pub fn bfs_planned(
+    adj: &Table,
+    seeds: &[String],
+    hops: usize,
+    par: Parallelism,
+    choices: &Choices,
+) -> Vec<BTreeSet<String>> {
+    if par.is_serial() {
+        bfs_impl(adj, seeds, hops, choices, |spec| adj.scan_stream(spec.batched(SCAN_BLOCK)))
+    } else {
+        bfs_impl(adj, seeds, hops, choices, |spec| adj.scan_spec_par(&spec, par).into_iter())
+    }
+}
+
+/// The hop engine shared by the streamed and snapshot-fan-out paths:
+/// `scan` runs one stacked scan and yields its row-sorted triples;
+/// each hop's spec comes from the planner's row-set lowering.
+fn bfs_impl<I, F>(
+    adj: &Table,
+    seeds: &[String],
+    hops: usize,
+    choices: &Choices,
+    scan: F,
+) -> Vec<BTreeSet<String>>
 where
     I: Iterator<Item = Triple>,
     F: Fn(ScanSpec) -> I,
 {
-    let seed_spec = || ScanSpec::ranges(seeds.iter().map(ScanRange::single));
+    let spec_over = |keys: Vec<&str>| plan_scan(&ScanNode::over_rows(adj, keys), choices).spec;
+    let seed_spec = || spec_over(seeds.iter().map(|s| s.as_str()).collect());
     let mut frontiers: Vec<BTreeSet<String>> = Vec::with_capacity(hops + 1);
     if hops == 0 {
         // Existence probe only: one triple per present seed row.
@@ -495,7 +355,7 @@ where
     let mut frontier = next;
     for _ in 1..hops {
         let mut next = BTreeSet::new();
-        let spec = ScanSpec::ranges(frontier.iter().map(ScanRange::single));
+        let spec = spec_over(frontier.iter().map(|f| f.as_str()).collect());
         for t in scan(spec) {
             if !visited.contains(t.col.as_str()) && !next.contains(t.col.as_str()) {
                 next.insert(t.col.to_string());
@@ -520,32 +380,45 @@ pub fn jaccard(adj: &Table) -> Result<Assoc, AssocError> {
     jaccard_over(adj, ScanSpec::all())
 }
 
-/// Seeded [`jaccard`]: similarities among `nodes` only. The scan is
-/// one stacked multi-range pass over the node rows
-/// ([`ScanSpec::ranges()`]) — rows outside the subset are never copied
-/// out of the tablets, and absent nodes simply contribute nothing.
-/// `J(u, v)` depends only on `N(u)` and `N(v)`, so for pairs inside
-/// the subset the values are bit-identical to the full kernel's.
+/// Seeded [`jaccard`]: similarities among `nodes` only. The scan over
+/// the node rows is lowered by the planner's row-set knob — a stacked
+/// multi-range pass when the subset is selective (rows outside it are
+/// never copied out of the tablets), a filtered full scan when it is
+/// not — and absent nodes simply contribute nothing. `J(u, v)` depends
+/// only on `N(u)` and `N(v)`, so for pairs inside the subset the
+/// values are bit-identical to the full kernel's.
 pub fn jaccard_seeded(adj: &Table, nodes: &[String]) -> Result<Assoc, AssocError> {
-    jaccard_over(adj, ScanSpec::ranges(nodes.iter().map(ScanRange::single)))
+    jaccard_seeded_planned(adj, nodes, Parallelism::serial(), &Choices::planner())
 }
 
 /// [`jaccard_seeded`] with an explicit thread configuration: the one
-/// stacked multi-range scan over the node rows fans out over pinned
-/// snapshots as load-balanced range chunks ([`Table::scan_spec_par`]
-/// since PR 8). The pair enumeration itself is unchanged, so the
-/// similarities are bit-identical to the streamed kernel's at every
-/// thread count.
+/// stacked scan over the node rows fans out over pinned snapshots as
+/// load-balanced range chunks ([`Table::scan_spec_par`] since PR 8).
+/// The pair enumeration itself is unchanged, so the similarities are
+/// bit-identical to the streamed kernel's at every thread count.
 pub fn jaccard_seeded_par(
     adj: &Table,
     nodes: &[String],
     par: Parallelism,
 ) -> Result<Assoc, AssocError> {
+    jaccard_seeded_planned(adj, nodes, par, &Choices::planner())
+}
+
+/// [`jaccard_seeded_par`] under explicit planner [`Choices`] (see
+/// [`table_mult_planned`]).
+pub fn jaccard_seeded_planned(
+    adj: &Table,
+    nodes: &[String],
+    par: Parallelism,
+    choices: &Choices,
+) -> Result<Assoc, AssocError> {
+    let node = ScanNode::over_rows(adj, nodes.iter().map(|n| n.as_str()).collect());
+    let spec = plan_scan(&node, choices).spec;
     if par.is_serial() {
-        return jaccard_seeded(adj, nodes);
+        jaccard_triples(adj.scan_stream(spec.batched(SCAN_BLOCK)))
+    } else {
+        jaccard_triples(adj.scan_spec_par(&spec, par).into_iter())
     }
-    let spec = ScanSpec::ranges(nodes.iter().map(ScanRange::single));
-    jaccard_triples(adj.scan_spec_par(&spec, par).into_iter())
 }
 
 fn jaccard_over(adj: &Table, spec: ScanSpec) -> Result<Assoc, AssocError> {
@@ -596,7 +469,7 @@ fn jaccard_triples(triples: impl Iterator<Item = Triple>) -> Result<Assoc, Assoc
 mod tests {
     use super::*;
     use crate::semiring::{MaxPlus, MinPlus, PlusTimes};
-    use crate::store::{TableConfig, TableStore};
+    use crate::store::{ScanRange, TableConfig, TableStore};
 
     /// Small directed graph:  a→b, a→c, b→c, c→d.
     fn graph_store() -> (TableStore, Arc<Table>, Arc<Table>) {

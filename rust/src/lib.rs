@@ -29,6 +29,11 @@
 //!   tables, BFS) over the store's scan stack.
 //! * **[`pipeline`]** — the streaming ingest orchestrator: sharding,
 //!   rebalancing and bounded-queue backpressure.
+//! * **[`plan`]** — the cost-based Graphulo query planner: a logical
+//!   plan IR with explicit lowering passes (build → annotate → choose
+//!   → execute), per-table statistics ([`store::Table::stats`]), and
+//!   fused scan→kernel pipelines; every physical choice is forcible
+//!   and produces bit-identical output.
 //! * **[`runtime`]** — PJRT (XLA) runtime that loads AOT-compiled Pallas
 //!   semiring-matmul kernels and serves the dense-block acceleration path
 //!   (gated behind the `accel` feature; the default offline build uses an
@@ -73,6 +78,7 @@ pub mod baselines;
 pub mod bench;
 pub mod graphulo;
 pub mod pipeline;
+pub mod plan;
 // The real PJRT runtime needs the external `xla` + `anyhow` crates,
 // unavailable in the offline build image; the default build compiles an
 // API-compatible stub whose loader reports "runtime unavailable".

@@ -1,0 +1,629 @@
+//! **Annotate** and **choose** passes: bind per-table statistics to a
+//! logical plan, then select physical operators by cost.
+//!
+//! The annotate pass ([`annotate_scan`] / [`annotate_mult`]) attaches
+//! [`TableStats`] snapshots (and, for row-restricted scans, a
+//! range-set cell estimate from [`Table::estimate_cells_in`]) to the
+//! logical nodes. The choose pass ([`choose_scan`] / [`choose_mult`])
+//! turns each annotated node into a physical plan, one recorded
+//! [`Decision`] per knob:
+//!
+//! | knob | physical alternatives | cost rule |
+//! |---|---|---|
+//! | `rows` | multi-range set vs. full scan + `In` row filter | `est + seeks < stored cells` |
+//! | `filter` | column windows vs. predicate | interval-shaped and ≤ [`WINDOW_MAX_KEYS`] |
+//! | `ingest` | restrict the non-mask side vs. full scan | `est + seeks < stored cells`, at execution |
+//! | `engine` | masked SpGEMM vs. unmasked + write-back filter | masked always wins; write-filter is forced-only |
+//! | `bound` | symbolic output bound ([`SymbolicBound`]) | `Auto` upgrades inside the SpGEMM |
+//! | `combiner` | reduce at scan vs. at the client merge | mean key duplication ≥ [`COMBINER_MIN_DUP`] |
+//!
+//! Every knob can be *forced* through [`Choices`], which is how the
+//! pre-planner heuristics stay callable ([`Choices::frozen`]) and how
+//! the equivalence suite pins every physical alternative to the same
+//! bits. **Determinism contract:** any plan the chooser can emit —
+//! cost-picked or forced — produces bit-identical output; the choices
+//! move only work, never results.
+
+use super::ir::{MaskAxis, MultNode, RowSet, ScanNode};
+use crate::sparse::SymbolicBound;
+use crate::store::{
+    CellField, CellFilter, KeyMatch, RowReduce, ScanRange, ScanSpec, SharedStr, Table, TableStats,
+};
+use std::collections::BTreeSet;
+
+/// Largest `In`-set lowered to per-key column windows. Each examined
+/// cell pays one binary hop per live window in its row's range set, so
+/// beyond a modest set size the predicate (one hash probe per cell)
+/// wins back.
+pub const WINDOW_MAX_KEYS: usize = 64;
+
+/// Cost of one range seek in examined-cell equivalents: a range hop
+/// re-locates every layer cursor (binary searches plus a possible
+/// block fault), worth roughly this many sequential cell copies.
+pub const SEEK_COST_CELLS: usize = 4;
+
+/// Minimum mean key-duplication factor (stored cells per dictionary
+/// key) at which a combiner runs inside the scan stack: below it, rows
+/// mostly hold one cell, so scan-side aggregation shrinks nothing and
+/// only adds per-cell iterator work.
+pub const COMBINER_MIN_DUP: usize = 2;
+
+/// How the non-mask-side operand of a masked mult is restricted to the
+/// mask side's surviving contraction rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IngestChoice {
+    /// Cost-based: restrict when the estimated restricted cells plus
+    /// seek overhead undercut the full scan (resolved at execution,
+    /// when the surviving rows exist).
+    #[default]
+    Cost,
+    /// The frozen PR 5 heuristic: restrict when `8·rows ≤ len`.
+    Heuristic8x,
+    /// Always scan the restricted range set.
+    Ranges,
+    /// Always scan the full operand.
+    Full,
+}
+
+/// How a sink mask (or column filter) lowers into the carrying scan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FilterChoice {
+    /// Cost-based: column windows when interval-shaped and at most
+    /// [`WINDOW_MAX_KEYS`] windows, else a pushed-down predicate.
+    #[default]
+    Cost,
+    /// Always a pushed-down predicate (the frozen PR 5 behavior).
+    Predicate,
+    /// Always column windows (clamped to predicate when the matcher is
+    /// not interval-shaped).
+    Windows,
+    /// No pushdown at all: scan everything, enforce the mask at the
+    /// compute/write stage. Only honored inside a mult plan (a
+    /// standalone scan has no later enforcement stage); the naive
+    /// baseline leg of the equivalence tests.
+    NoPushdown,
+}
+
+/// Which engine enforces a mult's mask at the compute stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineChoice {
+    /// Cost-based (always resolves to masked SpGEMM: it computes only
+    /// kept outputs, strictly less work than compute-then-drop).
+    #[default]
+    Cost,
+    /// Force the masked SpGEMM engine.
+    MaskedSpGemm,
+    /// Force an unmasked SpGEMM with the mask applied at write-back —
+    /// the multiply-then-filter baseline, kept forced-only.
+    WriteFilter,
+}
+
+/// Where a scan's per-row reduce node runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CombinerChoice {
+    /// Cost-based: scan-side when mean key duplication is at least
+    /// [`COMBINER_MIN_DUP`] (or no run statistics exist), else at the
+    /// client merge.
+    #[default]
+    Cost,
+    /// Always inside the scan stack (the frozen behavior).
+    AtScan,
+    /// Always at the client merge: the scan streams raw cells and the
+    /// executor aggregates, bit-for-bit like the scan stack would.
+    AtMerge,
+}
+
+/// How a [`RowSet::Keys`] restriction lowers into the scan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RowSetChoice {
+    /// Cost-based: range set when `est + seeks < stored cells`.
+    #[default]
+    Cost,
+    /// Always a coalesced single-row range set (the frozen behavior).
+    Ranges,
+    /// Always a full scan under an `In` row filter.
+    FilterIn,
+}
+
+/// One knob per physical decision. `Cost` variants (the default) let
+/// the chooser decide from [`TableStats`]; any other value forces that
+/// physical operator. Forced plans are how the pre-planner heuristics
+/// stay callable ([`Choices::frozen`]) and how the equivalence tests
+/// pin every operator combination to identical bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Choices {
+    /// Non-mask-side restriction rule.
+    pub ingest: IngestChoice,
+    /// Mask/filter lowering rule.
+    pub filter: FilterChoice,
+    /// Mask enforcement engine.
+    pub engine: EngineChoice,
+    /// SpGEMM symbolic output bound.
+    pub bound: SymbolicBound,
+    /// Reduce placement.
+    pub combiner: CombinerChoice,
+    /// Row-subset lowering rule.
+    pub rowset: RowSetChoice,
+}
+
+impl Choices {
+    /// Every knob cost-based — what the public kernels use.
+    pub fn planner() -> Self {
+        Choices {
+            ingest: IngestChoice::Cost,
+            filter: FilterChoice::Cost,
+            engine: EngineChoice::Cost,
+            bound: SymbolicBound::Auto,
+            combiner: CombinerChoice::Cost,
+            rowset: RowSetChoice::Cost,
+        }
+    }
+
+    /// The pre-planner behavior, frozen: `8·rows ≤ len` ingest
+    /// heuristic, predicate filter pushdown, masked SpGEMM,
+    /// `min(flops, ncols)` bound, scan-side combiner, range-set row
+    /// subsets. The benchmark baseline every planner leg is measured
+    /// against.
+    pub fn frozen() -> Self {
+        Choices {
+            ingest: IngestChoice::Heuristic8x,
+            filter: FilterChoice::Predicate,
+            engine: EngineChoice::MaskedSpGemm,
+            bound: SymbolicBound::MinFlopsCols,
+            combiner: CombinerChoice::AtScan,
+            rowset: RowSetChoice::Ranges,
+        }
+    }
+}
+
+impl Default for Choices {
+    fn default() -> Self {
+        Choices::planner()
+    }
+}
+
+/// One resolved decision with provenance — the unit `EXPLAIN` renders
+/// ([`super::explain`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decision {
+    /// The knob decided: `rows`, `filter`, `ingest`, `engine`,
+    /// `bound`, or `combiner`.
+    pub knob: &'static str,
+    /// The physical pick, e.g. `windows(3)`.
+    pub pick: String,
+    /// Provenance: `forced`, or the cost inputs that decided it.
+    pub why: String,
+}
+
+impl Decision {
+    fn new(knob: &'static str, pick: impl Into<String>, why: impl Into<String>) -> Self {
+        Decision { knob, pick: pick.into(), why: why.into() }
+    }
+}
+
+/// Output of the annotate pass over one [`ScanNode`].
+#[derive(Debug, Clone)]
+pub struct ScanAnnotations {
+    /// Statistics of the scanned table at annotation time.
+    pub stats: TableStats,
+    /// Coalesced single-row ranges for a [`RowSet::Keys`] subset.
+    pub row_ranges: Option<Vec<ScanRange>>,
+    /// Estimated stored cells inside `row_ranges`.
+    pub est_row_cells: Option<usize>,
+}
+
+/// Annotate a scan node: bind table statistics and, for row-restricted
+/// scans, the restricted-cell estimate the chooser weighs against a
+/// full scan.
+pub fn annotate_scan(node: &ScanNode<'_>) -> ScanAnnotations {
+    let stats = node.table.stats();
+    let (row_ranges, est_row_cells) = match &node.rows {
+        RowSet::All => (None, None),
+        RowSet::Keys(keys) => {
+            let ranges = ScanSpec::ranges(keys.iter().map(|k| ScanRange::single(*k))).ranges;
+            let est = node.table.estimate_cells_in(&ranges);
+            (Some(ranges), Some(est))
+        }
+    };
+    ScanAnnotations { stats, row_ranges, est_row_cells }
+}
+
+/// Output of the annotate pass over a [`MultNode`]: statistics of both
+/// operands.
+#[derive(Debug, Clone)]
+pub struct MultAnnotations {
+    /// `A`-side statistics.
+    pub a: TableStats,
+    /// `B`-side statistics.
+    pub b: TableStats,
+}
+
+/// Annotate a mult node.
+pub fn annotate_mult(node: &MultNode<'_>) -> MultAnnotations {
+    MultAnnotations { a: node.a.stats(), b: node.b.stats() }
+}
+
+/// Physical rule restricting the non-mask side of a masked mult. The
+/// surviving row set does not exist until the mask side has been
+/// scanned, so the choose pass emits a *rule* and the executor binds
+/// it to the discovered rows ([`IngestRule::spec`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IngestRule {
+    /// Always one [`ScanRange::single`] per surviving row.
+    Ranges,
+    /// Always the full operand.
+    Full,
+    /// Restrict when `8·rows ≤ len` (the frozen PR 5 rule).
+    Heuristic8x,
+    /// Restrict when `est(ranges) + SEEK_COST_CELLS·|ranges| <
+    /// operand_cells`.
+    Cost {
+        /// The operand's stored-cell count at annotation time.
+        operand_cells: usize,
+    },
+}
+
+impl IngestRule {
+    /// Resolve the rule against the surviving contraction rows: the
+    /// spec the operand's ingest scan runs with.
+    pub fn spec(&self, rows: &[SharedStr], operand: &Table) -> ScanSpec {
+        let singles = || ScanSpec::ranges(rows.iter().map(|r| ScanRange::single(r.as_str())));
+        match self {
+            IngestRule::Ranges => singles(),
+            IngestRule::Full => ScanSpec::all(),
+            IngestRule::Heuristic8x => {
+                if rows.len().saturating_mul(8) <= operand.len() {
+                    singles()
+                } else {
+                    ScanSpec::all()
+                }
+            }
+            IngestRule::Cost { operand_cells } => {
+                let spec = singles();
+                let est = operand.estimate_cells_in(&spec.ranges);
+                let seeks = SEEK_COST_CELLS.saturating_mul(spec.ranges.len());
+                if est.saturating_add(seeks) < *operand_cells {
+                    spec
+                } else {
+                    ScanSpec::all()
+                }
+            }
+        }
+    }
+}
+
+/// Physical mask-enforcement engine of a mult plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnginePhys {
+    /// Masked SpGEMM: the compute stage skips dropped outputs.
+    Masked,
+    /// Unmasked SpGEMM; the write-back drops masked cells.
+    WriteFilter,
+}
+
+/// A fully lowered scan pipeline.
+#[derive(Debug, Clone)]
+pub struct ScanPlan<'p> {
+    /// The table read.
+    pub table: &'p Table,
+    /// The lowered spec handed to the scan stack.
+    pub spec: ScanSpec,
+    /// A reduce the executor applies client-side (chosen when
+    /// scan-side aggregation would not shrink the stream).
+    pub client_reduce: Option<RowReduce>,
+    /// The statistics the plan was chosen against.
+    pub stats: TableStats,
+    /// Decision log, in knob order.
+    pub decisions: Vec<Decision>,
+}
+
+/// A fully lowered mult pipeline.
+#[derive(Debug, Clone)]
+pub struct MultPlan<'p> {
+    /// Left operand.
+    pub a: &'p Table,
+    /// Right operand.
+    pub b: &'p Table,
+    /// The mask node, if any.
+    pub mask: Option<(MaskAxis, KeyMatch)>,
+    /// Lowered spec for the mask-carrying side (`B` under a column
+    /// mask, `A` under a row mask; a full scan when unmasked).
+    pub lead_spec: ScanSpec,
+    /// Restriction rule for the opposite side.
+    pub ingest: IngestRule,
+    /// Mask enforcement engine.
+    pub engine: EnginePhys,
+    /// SpGEMM symbolic output bound.
+    pub bound: SymbolicBound,
+    /// The statistics the plan was chosen against.
+    pub ann: MultAnnotations,
+    /// Decision log, in knob order.
+    pub decisions: Vec<Decision>,
+}
+
+/// Resolved filter lowering: the windows to scan, or `None` for a
+/// predicate / no-pushdown outcome.
+fn resolve_filter(
+    keep: &KeyMatch,
+    choice: FilterChoice,
+    allow_no_pushdown: bool,
+    decisions: &mut Vec<Decision>,
+) -> Option<Vec<(String, Option<String>)>> {
+    let windows = keep.intervals();
+    match (choice, windows) {
+        (FilterChoice::NoPushdown, _) if allow_no_pushdown => {
+            decisions.push(Decision::new(
+                "filter",
+                "no-pushdown",
+                "forced: mask enforced at the compute/write stage only",
+            ));
+            None
+        }
+        (FilterChoice::NoPushdown, _) => {
+            decisions.push(Decision::new(
+                "filter",
+                "predicate",
+                "forced no-pushdown clamped: a standalone scan has no later enforcement stage",
+            ));
+            None
+        }
+        (FilterChoice::Predicate, _) => {
+            decisions.push(Decision::new("filter", "predicate", "forced"));
+            None
+        }
+        (FilterChoice::Windows, Some(ivs)) => {
+            decisions.push(Decision::new("filter", format!("windows({})", ivs.len()), "forced"));
+            Some(ivs)
+        }
+        (FilterChoice::Windows, None) => {
+            decisions.push(Decision::new(
+                "filter",
+                "predicate",
+                "forced windows clamped: matcher is not interval-shaped",
+            ));
+            None
+        }
+        (FilterChoice::Cost, Some(ivs)) if ivs.len() <= WINDOW_MAX_KEYS => {
+            decisions.push(Decision::new(
+                "filter",
+                format!("windows({})", ivs.len()),
+                format!("cost: interval-shaped, {} <= {WINDOW_MAX_KEYS} windows", ivs.len()),
+            ));
+            Some(ivs)
+        }
+        (FilterChoice::Cost, Some(ivs)) => {
+            decisions.push(Decision::new(
+                "filter",
+                "predicate",
+                format!("cost: {} windows exceed cap {WINDOW_MAX_KEYS}", ivs.len()),
+            ));
+            None
+        }
+        (FilterChoice::Cost, None) => {
+            decisions.push(Decision::new(
+                "filter",
+                "predicate",
+                "cost: matcher is not interval-shaped",
+            ));
+            None
+        }
+    }
+}
+
+/// Column-window intervals as a coalesced range set (unbounded rows,
+/// one per-row window per interval).
+fn windows_spec(ivs: Vec<(String, Option<String>)>) -> ScanSpec {
+    ScanSpec::ranges(ivs.into_iter().map(|(lo, hi)| ScanRange {
+        lo: None,
+        hi: None,
+        col_lo: Some(lo),
+        col_hi: hi,
+    }))
+}
+
+/// Choose pass over an annotated scan node: lower the row subset, the
+/// filter, and the reduce placement into a [`ScanPlan`].
+///
+/// `ann` must come from [`annotate_scan`] over the same node.
+pub fn choose_scan<'p>(
+    node: &ScanNode<'p>,
+    ann: &ScanAnnotations,
+    choices: &Choices,
+) -> ScanPlan<'p> {
+    let mut decisions = Vec::new();
+    let mut spec = match (&node.rows, ann.row_ranges.as_ref()) {
+        (RowSet::All, _) => ScanSpec::all(),
+        (RowSet::Keys(keys), Some(ranges)) => {
+            let est = ann.est_row_cells.unwrap_or(0);
+            let as_ranges = match choices.rowset {
+                RowSetChoice::Ranges => {
+                    decisions.push(Decision::new(
+                        "rows",
+                        format!("ranges({})", ranges.len()),
+                        "forced",
+                    ));
+                    true
+                }
+                RowSetChoice::FilterIn => {
+                    decisions.push(Decision::new("rows", "in-filter", "forced"));
+                    false
+                }
+                RowSetChoice::Cost => {
+                    let seeks = SEEK_COST_CELLS.saturating_mul(ranges.len());
+                    let selective = est.saturating_add(seeks) < ann.stats.cells;
+                    let why = format!(
+                        "cost: est {est} cells + {seeks} seek vs {} stored",
+                        ann.stats.cells
+                    );
+                    let pick = if selective {
+                        format!("ranges({})", ranges.len())
+                    } else {
+                        "in-filter".to_string()
+                    };
+                    decisions.push(Decision::new("rows", pick, why));
+                    selective
+                }
+            };
+            if as_ranges {
+                ScanSpec::ranges(ranges.iter().cloned())
+            } else {
+                let set: BTreeSet<String> = keys.iter().map(|k| (*k).to_string()).collect();
+                ScanSpec::all().filtered(CellFilter::row(KeyMatch::In(set)))
+            }
+        }
+        (RowSet::Keys(_), None) => {
+            unreachable!("ScanAnnotations missing row ranges: annotate the same node")
+        }
+    };
+    if let Some(f) = &node.filter {
+        let lowerable = matches!(f.field, CellField::Col) && matches!(node.rows, RowSet::All);
+        let windows = if lowerable {
+            resolve_filter(&f.matcher, choices.filter, false, &mut decisions)
+        } else {
+            decisions.push(Decision::new(
+                "filter",
+                "predicate",
+                "only column filters over unrestricted rows lower to windows",
+            ));
+            None
+        };
+        spec = match windows {
+            Some(ivs) => windows_spec(ivs),
+            None => spec.filtered(f.clone()),
+        };
+    }
+    let mut client_reduce = None;
+    if let Some(r) = &node.reduce {
+        let at_scan = match choices.combiner {
+            CombinerChoice::AtScan => {
+                decisions.push(Decision::new("combiner", "at-scan", "forced"));
+                true
+            }
+            CombinerChoice::AtMerge => {
+                decisions.push(Decision::new("combiner", "at-merge", "forced"));
+                false
+            }
+            CombinerChoice::Cost => {
+                let dup = ann.stats.dict_keys == 0
+                    || ann.stats.cells >= COMBINER_MIN_DUP.saturating_mul(ann.stats.dict_keys);
+                let why = format!(
+                    "cost: {} stored cells vs {} dictionary keys (dup >= {COMBINER_MIN_DUP}x \
+                     => scan-side)",
+                    ann.stats.cells, ann.stats.dict_keys
+                );
+                decisions.push(Decision::new(
+                    "combiner",
+                    if dup { "at-scan" } else { "at-merge" },
+                    why,
+                ));
+                dup
+            }
+        };
+        if at_scan {
+            spec = spec.reduced(r.clone());
+        } else {
+            client_reduce = Some(r.clone());
+        }
+    }
+    ScanPlan { table: node.table, spec, client_reduce, stats: ann.stats.clone(), decisions }
+}
+
+/// Choose pass over an annotated mult node: lower the mask into the
+/// lead scan, pick the opposite side's ingest rule, the enforcement
+/// engine, and the symbolic bound into a [`MultPlan`].
+///
+/// `ann` must come from [`annotate_mult`] over the same node.
+pub fn choose_mult<'p>(
+    node: &MultNode<'p>,
+    ann: &MultAnnotations,
+    choices: &Choices,
+) -> MultPlan<'p> {
+    let mut decisions = Vec::new();
+    let (lead_spec, ingest, engine) = match &node.mask {
+        None => (ScanSpec::all(), IngestRule::Full, EnginePhys::Masked),
+        Some((axis, keep)) => {
+            let lead_spec = match resolve_filter(keep, choices.filter, true, &mut decisions) {
+                Some(ivs) => windows_spec(ivs),
+                None if matches!(choices.filter, FilterChoice::NoPushdown) => ScanSpec::all(),
+                None => ScanSpec::all().filtered(CellFilter::col(keep.clone())),
+            };
+            let operand_cells = match axis {
+                MaskAxis::Cols => ann.a.cells,
+                MaskAxis::Rows => ann.b.cells,
+            };
+            let ingest = match choices.ingest {
+                IngestChoice::Cost => {
+                    decisions.push(Decision::new(
+                        "ingest",
+                        "cost-rule",
+                        format!(
+                            "restrict other side when est + {SEEK_COST_CELLS}*ranges < \
+                             {operand_cells} stored cells"
+                        ),
+                    ));
+                    IngestRule::Cost { operand_cells }
+                }
+                IngestChoice::Heuristic8x => {
+                    decisions.push(Decision::new("ingest", "heuristic-8x", "forced"));
+                    IngestRule::Heuristic8x
+                }
+                IngestChoice::Ranges => {
+                    decisions.push(Decision::new("ingest", "always-ranges", "forced"));
+                    IngestRule::Ranges
+                }
+                IngestChoice::Full => {
+                    decisions.push(Decision::new("ingest", "always-full", "forced"));
+                    IngestRule::Full
+                }
+            };
+            let engine = match choices.engine {
+                EngineChoice::Cost => {
+                    decisions.push(Decision::new(
+                        "engine",
+                        "masked-spgemm",
+                        "cost: compute touches only kept outputs",
+                    ));
+                    EnginePhys::Masked
+                }
+                EngineChoice::MaskedSpGemm => {
+                    decisions.push(Decision::new("engine", "masked-spgemm", "forced"));
+                    EnginePhys::Masked
+                }
+                EngineChoice::WriteFilter => {
+                    decisions.push(Decision::new("engine", "write-filter", "forced"));
+                    EnginePhys::WriteFilter
+                }
+            };
+            (lead_spec, ingest, engine)
+        }
+    };
+    let (pick, why) = match choices.bound {
+        SymbolicBound::MinFlopsCols => ("min-flops-cols", "forced".to_string()),
+        SymbolicBound::Exact => ("exact", "forced".to_string()),
+        SymbolicBound::Auto => {
+            ("auto", "cost: upgrade to exact when bound > 2x input nnz".to_string())
+        }
+    };
+    decisions.push(Decision::new("bound", pick, why));
+    MultPlan {
+        a: node.a,
+        b: node.b,
+        mask: node.mask.clone(),
+        lead_spec,
+        ingest,
+        engine,
+        bound: choices.bound,
+        ann: ann.clone(),
+        decisions,
+    }
+}
+
+/// Annotate + choose over a scan node in one call.
+pub fn plan_scan<'p>(node: &ScanNode<'p>, choices: &Choices) -> ScanPlan<'p> {
+    choose_scan(node, &annotate_scan(node), choices)
+}
+
+/// Annotate + choose over a mult node in one call.
+pub fn plan_mult<'p>(node: &MultNode<'p>, choices: &Choices) -> MultPlan<'p> {
+    choose_mult(node, &annotate_mult(node), choices)
+}

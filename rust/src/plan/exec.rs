@@ -1,0 +1,305 @@
+//! **Execute** pass: fused physical pipelines.
+//!
+//! Plans stream: scans feed dictionary-encoded id triples straight
+//! into CSR builders ([`ScanSide`], moved here from the pre-planner
+//! `graphulo` kernels), the SpGEMM engine runs over the snapshot scan
+//! path, and results flow back out through a [`BatchWriter`] — no
+//! intermediate `Assoc` (or full `Vec<Triple>`) is ever materialized.
+//! The executor is deliberately dumb: every decision was already made
+//! by the choose pass and recorded in the plan; the only execution-time
+//! resolution is [`IngestRule::spec`], which needs the surviving row
+//! set a prior pipeline stage produced.
+
+use super::choose::{EnginePhys, IngestRule, MultPlan, ScanPlan};
+use super::ir::MaskAxis;
+use crate::semiring::Semiring;
+use crate::sparse::{
+    spgemm_masked_with_modes_par, spgemm_row_masked_with_modes_par, spgemm_with_modes_par,
+    AccumulatorPolicy, CooMatrix, CsrMatrix,
+};
+use crate::store::{
+    format_num, BatchWriter, RowReduce, ScanSpec, SharedStr, Table, Triple, WriterConfig,
+    SCAN_BLOCK,
+};
+use crate::util::intern::StrDict;
+use crate::util::Parallelism;
+use std::sync::Arc;
+
+/// Execute a lowered mult plan into `out` under semiring `s`,
+/// returning the number of result cells written.
+///
+/// The pipeline is the fused scan→SpGEMM→write path: the lead (mask-
+/// carrying) side streams through its lowered spec, the opposite side
+/// through the ingest rule resolved against the survivors, the engine
+/// enforces the mask at compute or write-back exactly as the plan
+/// says. Every engine/lowering combination writes bit-identical cells
+/// — a dropped input cell can only feed dropped outputs, and the
+/// per-output ⊕ order (ascending contraction row key) never changes.
+pub fn execute_mult(
+    plan: &MultPlan<'_>,
+    out: &Arc<Table>,
+    s: &dyn Semiring,
+    par: Parallelism,
+) -> usize {
+    let (sa, sb) = match &plan.mask {
+        None => (
+            ingest_side(plan.a, ScanSpec::all(), par),
+            ingest_side(plan.b, ScanSpec::all(), par),
+        ),
+        Some((MaskAxis::Rows, _)) => {
+            let sa = ingest_side(plan.a, plan.lead_spec.clone(), par);
+            let sb = if sa.rows.is_empty() {
+                ScanSide::default()
+            } else {
+                ingest_side(plan.b, plan.ingest.spec(&sa.rows, plan.b), par)
+            };
+            (sa, sb)
+        }
+        Some((MaskAxis::Cols, _)) => {
+            let sb = ingest_side(plan.b, plan.lead_spec.clone(), par);
+            let sa = if sb.rows.is_empty() {
+                ScanSide::default()
+            } else {
+                ingest_side(plan.a, plan.ingest.spec(&sb.rows, plan.a), par)
+            };
+            (sa, sb)
+        }
+    };
+    if sa.rows.is_empty() && sb.rows.is_empty() {
+        return 0;
+    }
+    // Shared contraction dimension: merged distinct row keys (scans are
+    // sorted by row, so this is a linear merge of pointer handles).
+    let merged = merge_distinct(&sa.rows, &sb.rows);
+    let (ma, cols_a) = sa.into_csr(&merged);
+    let (mb, cols_b) = sb.into_csr(&merged);
+    // `Aᵀ` row c1 walks the rows containing c1 in ascending key order —
+    // the same ⊕ order the streaming row-join produced.
+    let at = ma.transpose_cached();
+    let policy = AccumulatorPolicy::default();
+    let (c, _stats) = match (&plan.mask, plan.engine) {
+        (Some((MaskAxis::Cols, keep)), EnginePhys::Masked) => {
+            let mask: Vec<bool> = cols_b.iter().map(|c| keep.matches(c)).collect();
+            spgemm_masked_with_modes_par(at, &mb, s, par, &mask, policy, plan.bound)
+        }
+        (Some((MaskAxis::Rows, keep)), EnginePhys::Masked) => {
+            let mask: Vec<bool> = cols_a.iter().map(|c| keep.matches(c)).collect();
+            spgemm_row_masked_with_modes_par(at, &mb, s, par, &mask, policy, plan.bound)
+        }
+        (None, _) | (Some(_), EnginePhys::WriteFilter) => {
+            spgemm_with_modes_par(at, &mb, s, par, policy, plan.bound)
+        }
+    }
+    .expect("shared row dimension");
+    // Under the write-filter engine the compute stage ran unmasked, so
+    // the mask drops cells here instead; under the masked engine these
+    // predicates are `None` and every computed cell is written.
+    let (row_keep, col_keep) = match (&plan.mask, plan.engine) {
+        (Some((MaskAxis::Rows, keep)), EnginePhys::WriteFilter) => (Some(keep), None),
+        (Some((MaskAxis::Cols, keep)), EnginePhys::WriteFilter) => (None, Some(keep)),
+        _ => (None, None),
+    };
+    let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
+    let mut cells = 0usize;
+    for (i, c1) in cols_a.iter().enumerate() {
+        if row_keep.is_some_and(|k| !k.matches(c1)) {
+            continue;
+        }
+        let (cj, cv) = c.row(i);
+        for (j, v) in cj.iter().zip(cv) {
+            if *v != s.zero() {
+                let c2 = &cols_b[*j as usize];
+                if col_keep.is_some_and(|k| !k.matches(c2)) {
+                    continue;
+                }
+                // Output keys are pointer clones of the scanned bytes.
+                w.put(Triple::new(c1.clone(), c2.clone(), format_num(*v)));
+                cells += 1;
+            }
+        }
+    }
+    w.flush().expect("spgemm sink flush");
+    cells
+}
+
+/// Execute a lowered scan(-reduce) pipeline into `out`, returning the
+/// number of triples written. A scan-side reduce rides the spec; a
+/// client-side reduce ([`ScanPlan::client_reduce`]) streams raw cells
+/// and aggregates here, bit-for-bit like the scan stack's combiner.
+pub fn execute_reduce_write(plan: &ScanPlan<'_>, out: &Arc<Table>, par: Parallelism) -> usize {
+    let t = plan.table;
+    let mut w = BatchWriter::new(Arc::clone(out), WriterConfig::default());
+    let written = match (&plan.client_reduce, par.is_serial()) {
+        (None, true) => w.put_scan(t.scan_stream(plan.spec.clone().batched(SCAN_BLOCK))),
+        (None, false) => {
+            let triples = t.scan_spec_par(&plan.spec, par);
+            let n = triples.len();
+            for tr in triples {
+                w.put(tr);
+            }
+            n
+        }
+        (Some(r), true) => {
+            reduce_write(&mut w, t.scan_stream(plan.spec.clone().batched(SCAN_BLOCK)), r)
+        }
+        (Some(r), false) => reduce_write(&mut w, t.scan_spec_par(&plan.spec, par).into_iter(), r),
+    };
+    w.flush().expect("planned scan flush");
+    written
+}
+
+/// Client-side combiner mirroring the scan stack's `ReduceIter` bit
+/// for bit: the first cell starts a row (count 1, accumulator = parsed
+/// value, non-numeric parses as 0), later cells fold, a row change
+/// emits `(row, out_col, aggregate)`.
+fn reduce_write(
+    w: &mut BatchWriter,
+    triples: impl Iterator<Item = Triple>,
+    reduce: &RowReduce,
+) -> usize {
+    let out_col = match reduce {
+        RowReduce::Count { out_col }
+        | RowReduce::Sum { out_col }
+        | RowReduce::Min { out_col }
+        | RowReduce::Max { out_col } => out_col.clone(),
+    };
+    let emit = |w: &mut BatchWriter, row: SharedStr, count: usize, acc: f64| {
+        let val = match reduce {
+            RowReduce::Count { .. } => count.to_string(),
+            _ => format_num(acc),
+        };
+        w.put(Triple::new(row, out_col.as_str(), val));
+    };
+    let mut rows = 0usize;
+    let mut cur: Option<SharedStr> = None;
+    let mut count = 0usize;
+    let mut acc = 0.0f64;
+    for t in triples {
+        let v: f64 = t.val.parse().unwrap_or(0.0);
+        match &cur {
+            Some(r) if *r == t.row => {
+                count += 1;
+                match reduce {
+                    RowReduce::Count { .. } => {}
+                    RowReduce::Sum { .. } => acc += v,
+                    RowReduce::Min { .. } => acc = acc.min(v),
+                    RowReduce::Max { .. } => acc = acc.max(v),
+                }
+            }
+            _ => {
+                if let Some(prev) = cur.take() {
+                    emit(w, prev, count, acc);
+                    rows += 1;
+                }
+                cur = Some(t.row.clone());
+                count = 1;
+                acc = v;
+            }
+        }
+    }
+    if let Some(prev) = cur.take() {
+        emit(w, prev, count, acc);
+        rows += 1;
+    }
+    rows
+}
+
+/// Stream one operand's stacked scan into a [`ScanSide`] — `spec`
+/// carries the plan's pushdown (filters, column windows, and/or a
+/// restricting range set); the serial path pulls from the stack
+/// triple-by-triple at the full-scan batch size, the parallel path
+/// consumes the fanned-out collection without re-allocating it.
+fn ingest_side(t: &Table, spec: ScanSpec, par: Parallelism) -> ScanSide {
+    let mut side = ScanSide::default();
+    if par.is_serial() {
+        for tr in t.scan_stream(spec.batched(SCAN_BLOCK)) {
+            side.ingest(tr);
+        }
+    } else {
+        for tr in t.scan_spec_par(&spec, par) {
+            side.ingest(tr);
+        }
+    }
+    side
+}
+
+/// One operand of a mult plan, accumulated directly from a sorted
+/// triple stream as dictionary-encoded ids: distinct row keys (shared
+/// handles), per-entry local row index, a column [`StrDict`] with
+/// per-entry column ids, and parsed values — no `Triple` structs
+/// retained, no string bytes copied, no per-cell string compares.
+#[derive(Default)]
+struct ScanSide {
+    rows: Vec<SharedStr>,
+    row_of: Vec<u32>,
+    cols: StrDict,
+    col_of: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl ScanSide {
+    /// Fold one streamed triple (stream is (row, col)-sorted). Values
+    /// parse like the old streaming join did (`unwrap_or(0.0)`), and
+    /// parsed zeros stay stored so non-plus-times semirings see exactly
+    /// the cells the table holds.
+    fn ingest(&mut self, t: Triple) {
+        let Triple { row, col, val } = t;
+        if self.rows.last() != Some(&row) {
+            self.rows.push(row);
+        }
+        self.row_of.push((self.rows.len() - 1) as u32);
+        self.col_of.push(self.cols.intern(&col));
+        self.vals.push(val.parse().unwrap_or(0.0));
+    }
+
+    /// Index into a CSR matrix over `merged` (a sorted superset of
+    /// `self.rows`). Returns the matrix and its sorted distinct column
+    /// keys. String bytes are touched once per distinct column here
+    /// (the dictionary sort); per-cell work is two id lookups.
+    fn into_csr(self, merged: &[SharedStr]) -> (CsrMatrix, Vec<SharedStr>) {
+        let ScanSide { rows, row_of, cols, col_of, vals } = self;
+        let (distinct, rank) = cols.into_sorted();
+        // Local row index → merged row index (both lists sorted).
+        let mut map = vec![0u32; rows.len()];
+        let mut p = 0usize;
+        for (i, r) in rows.iter().enumerate() {
+            while merged[p] != *r {
+                p += 1;
+            }
+            map[i] = p as u32;
+        }
+        let mut ri: Vec<u32> = Vec::with_capacity(row_of.len());
+        let mut ci: Vec<u32> = Vec::with_capacity(col_of.len());
+        for (k, &own) in row_of.iter().enumerate() {
+            ri.push(map[own as usize]);
+            ci.push(rank[col_of[k] as usize]);
+        }
+        let m = CooMatrix::from_sorted_parts(merged.len(), distinct.len(), ri, ci, vals)
+            .into_csr();
+        (m, distinct)
+    }
+}
+
+/// Merge two sorted, distinct key lists into their sorted union
+/// (clones are pointer copies).
+fn merge_distinct(x: &[SharedStr], y: &[SharedStr]) -> Vec<SharedStr> {
+    let mut out = Vec::with_capacity(x.len().max(y.len()));
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < x.len() || j < y.len() {
+        let next = match (x.get(i), y.get(j)) {
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => unreachable!(),
+        }
+        .clone();
+        if i < x.len() && x[i] == next {
+            i += 1;
+        }
+        if j < y.len() && y[j] == next {
+            j += 1;
+        }
+        out.push(next);
+    }
+    out
+}

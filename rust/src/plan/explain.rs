@@ -1,0 +1,60 @@
+//! Deterministic plan rendering (`EXPLAIN`).
+//!
+//! One line per decision, in knob order, with provenance — exactly
+//! what the choose pass recorded. The output is a pure function of
+//! the table *contents* at plan time: statistics lines include cell,
+//! run, and dictionary figures but deliberately exclude the mutation
+//! version counter, so re-planning an unchanged workload renders the
+//! identical string (pinned by the `Explain` stability test).
+
+use super::choose::{MultPlan, ScanPlan};
+use super::ir::MaskAxis;
+use crate::store::{KeyMatch, TableStats};
+use std::fmt::Write as _;
+
+/// Render a mult plan.
+pub fn explain_mult(plan: &MultPlan<'_>) -> String {
+    let mut s = String::from("TableMult C(c1,c2) (+)= sum_r A(r,c1) (x) B(r,c2)\n");
+    match &plan.mask {
+        None => s.push_str("  mask: none (full product)\n"),
+        Some((axis, keep)) => {
+            let ax = match axis {
+                MaskAxis::Rows => "rows",
+                MaskAxis::Cols => "cols",
+            };
+            let _ = writeln!(s, "  mask: {ax} {}", render_match(keep));
+        }
+    }
+    let _ = writeln!(s, "  A: {}", render_stats(&plan.ann.a));
+    let _ = writeln!(s, "  B: {}", render_stats(&plan.ann.b));
+    for d in &plan.decisions {
+        let _ = writeln!(s, "  {}: {} [{}]", d.knob, d.pick, d.why);
+    }
+    s
+}
+
+/// Render a scan plan.
+pub fn explain_scan(plan: &ScanPlan<'_>) -> String {
+    let mut s = String::from("Scan\n");
+    let _ = writeln!(s, "  table: {}", render_stats(&plan.stats));
+    for d in &plan.decisions {
+        let _ = writeln!(s, "  {}: {} [{}]", d.knob, d.pick, d.why);
+    }
+    s
+}
+
+fn render_stats(st: &TableStats) -> String {
+    format!(
+        "cells={} tablets={} runs={} dict-keys={} sampled-rows={}",
+        st.cells, st.tablets, st.runs, st.dict_keys, st.sampled_rows.len()
+    )
+}
+
+fn render_match(k: &KeyMatch) -> String {
+    match k {
+        KeyMatch::Equals(v) => format!("equals({v:?})"),
+        KeyMatch::Prefix(p) => format!("prefix({p:?})"),
+        KeyMatch::Glob(g) => format!("glob({g:?})"),
+        KeyMatch::In(set) => format!("in({} keys)", set.len()),
+    }
+}

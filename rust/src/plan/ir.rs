@@ -1,0 +1,110 @@
+//! **Build** pass: the logical plan IR kernel entry points construct.
+//!
+//! A logical plan says *what* a Graphulo kernel reads and combines,
+//! never *how*: no scan specs, no range sets, no engine selection.
+//! Those are physical concerns the **choose** pass
+//! ([`super::choose`]) resolves against per-table statistics. Two node
+//! shapes cover every kernel in [`crate::graphulo`]:
+//!
+//! * [`ScanNode`] — scan + filter + reduce fused into one struct (the
+//!   store's scan stack executes them as one pipeline anyway), over a
+//!   [`RowSet`]. BFS frontier hops, seeded Jaccard, and degree tables
+//!   all lower from this node.
+//! * [`MultNode`] — the TableMult contraction with an optional *mask*
+//!   node on one output axis ([`MaskAxis`]).
+//!
+//! The IR's *write* node is implicit: every plan executes into a sink
+//! table bound at execution time ([`super::exec`]), mirroring how the
+//! kernels have always taken `out: &Arc<Table>`.
+
+use crate::store::{CellFilter, KeyMatch, RowReduce, Table};
+
+/// The row subset a logical scan reads.
+#[derive(Debug, Clone)]
+pub enum RowSet<'p> {
+    /// Every row.
+    All,
+    /// Exactly these row keys. Order and duplicates do not affect
+    /// results (lowering coalesces), but sorted distinct input gives
+    /// the sharpest cost estimates.
+    Keys(Vec<&'p str>),
+}
+
+/// Logical scan: read `table` over `rows`, keep cells passing
+/// `filter`, optionally collapse each row through `reduce`.
+#[derive(Debug, Clone)]
+pub struct ScanNode<'p> {
+    /// The table read.
+    pub table: &'p Table,
+    /// Row subset.
+    pub rows: RowSet<'p>,
+    /// Optional filter node.
+    pub filter: Option<CellFilter>,
+    /// Optional per-row reduce node.
+    pub reduce: Option<RowReduce>,
+}
+
+impl<'p> ScanNode<'p> {
+    /// Full-table scan.
+    pub fn full(table: &'p Table) -> Self {
+        ScanNode { table, rows: RowSet::All, filter: None, reduce: None }
+    }
+
+    /// Scan restricted to `keys` rows.
+    pub fn over_rows(table: &'p Table, keys: Vec<&'p str>) -> Self {
+        ScanNode { rows: RowSet::Keys(keys), ..Self::full(table) }
+    }
+
+    /// Attach a filter node.
+    pub fn filtered(mut self, f: CellFilter) -> Self {
+        self.filter = Some(f);
+        self
+    }
+
+    /// Attach a reduce node.
+    pub fn reduced(mut self, r: RowReduce) -> Self {
+        self.reduce = Some(r);
+        self
+    }
+}
+
+/// Which output axis a mask node restricts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskAxis {
+    /// Keep output rows matching the mask. Output rows of `AᵀB` are
+    /// `A`'s column keys, so the mask rides the `A` side.
+    Rows,
+    /// Keep output columns matching the mask (`B`'s column keys).
+    Cols,
+}
+
+/// Logical TableMult: `C(c1, c2) ⊕= Σ_r A(r, c1) ⊗ B(r, c2)`,
+/// optionally under a mask node on one output axis.
+#[derive(Debug, Clone)]
+pub struct MultNode<'p> {
+    /// Left operand (contracted over rows; its columns become output
+    /// rows).
+    pub a: &'p Table,
+    /// Right operand (contracted over rows; its columns become output
+    /// columns).
+    pub b: &'p Table,
+    /// Optional mask node on one output axis.
+    pub mask: Option<(MaskAxis, KeyMatch)>,
+}
+
+impl<'p> MultNode<'p> {
+    /// Unmasked full product.
+    pub fn new(a: &'p Table, b: &'p Table) -> Self {
+        MultNode { a, b, mask: None }
+    }
+
+    /// Product masked on the output-column axis.
+    pub fn col_masked(a: &'p Table, b: &'p Table, keep: KeyMatch) -> Self {
+        MultNode { a, b, mask: Some((MaskAxis::Cols, keep)) }
+    }
+
+    /// Product masked on the output-row axis.
+    pub fn row_masked(a: &'p Table, b: &'p Table, keep: KeyMatch) -> Self {
+        MultNode { a, b, mask: Some((MaskAxis::Rows, keep)) }
+    }
+}

@@ -1,0 +1,227 @@
+//! Cost-based Graphulo query planner.
+//!
+//! Accumulo-side Graphulo (paper refs [18], [19]) plans its kernels
+//! around pre-computed degree tables; this module is that idea grown
+//! into a small query planner for the in-repo store. A kernel call
+//! flows through four explicit, individually testable lowering passes:
+//!
+//! 1. **build** ([`ir`]) — the kernel entry point constructs a logical
+//!    plan: scan / filter / reduce / mult / mask nodes, no physical
+//!    decisions.
+//! 2. **annotate** ([`choose::annotate_scan`] /
+//!    [`choose::annotate_mult`]) — per-table statistics
+//!    ([`crate::store::TableStats`]: tablet cell counts, run and
+//!    dictionary cardinalities, sampled row boundaries) bind to the
+//!    nodes, plus range-set cell estimates from
+//!    [`crate::store::Table::estimate_cells_in`].
+//! 3. **choose** ([`choose`]) — every formerly hard-coded heuristic
+//!    becomes a recorded, cost-based decision: masked vs. unmasked
+//!    SpGEMM, row-restricted vs. full ingest, filter-as-range-set vs.
+//!    filter-as-predicate, combiner at scan vs. at merge, symbolic
+//!    output bound. Any knob can be *forced* ([`Choices`]), keeping
+//!    the old heuristics callable as frozen physical plans
+//!    ([`Choices::frozen`]).
+//! 4. **execute** ([`exec`]) — fused scan→filter→SpGEMM→write
+//!    pipelines streaming through the snapshot scan path; no
+//!    intermediate `Assoc` is materialized.
+//!
+//! [`explain`] renders any chosen plan as a stable, deterministic
+//! multi-line string.
+//!
+//! **Determinism contract.** Every plan the chooser can emit — for any
+//! [`Choices`], any thread count, any physical operator combination —
+//! produces bit-identical output tables. The planner moves work, never
+//! results; `rust/tests/plan_equivalence.rs` enforces this over the
+//! full forced-choice grid.
+
+pub mod choose;
+pub mod exec;
+pub mod explain;
+pub mod ir;
+
+pub use choose::{
+    annotate_mult, annotate_scan, choose_mult, choose_scan, plan_mult, plan_scan, Choices,
+    CombinerChoice, Decision, EngineChoice, EnginePhys, FilterChoice, IngestChoice, IngestRule,
+    MultAnnotations, MultPlan, RowSetChoice, ScanAnnotations, ScanPlan, COMBINER_MIN_DUP,
+    SEEK_COST_CELLS, WINDOW_MAX_KEYS,
+};
+pub use exec::{execute_mult, execute_reduce_write};
+pub use explain::{explain_mult, explain_scan};
+pub use ir::{MaskAxis, MultNode, RowSet, ScanNode};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc::Assoc;
+    use crate::store::{
+        CellFilter, KeyMatch, RowReduce, ScanRange, SharedStr, Table, TableStore,
+    };
+    use crate::util::Parallelism;
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    /// `rows × cols` grid of unit-weight cells: row keys `r000..`,
+    /// column keys `c000..`.
+    fn grid_table(store: &TableStore, name: &str, rows: usize, cols: usize) -> Arc<Table> {
+        let r: Vec<String> = (0..rows * cols).map(|i| format!("r{:03}", i / cols)).collect();
+        let c: Vec<String> = (0..rows * cols).map(|i| format!("c{:03}", i % cols)).collect();
+        store.ingest_assoc(name, &Assoc::from_triples(&r, &c, 1.0)).0
+    }
+
+    fn pick(decisions: &[Decision], knob: &str) -> String {
+        decisions.iter().find(|d| d.knob == knob).unwrap_or_else(|| panic!("{knob}")).pick.clone()
+    }
+
+    #[test]
+    fn filter_lowering_cost_rules() {
+        let store = TableStore::with_defaults();
+        let a = grid_table(&store, "a", 6, 4);
+        let b = grid_table(&store, "b", 6, 4);
+        let planner = Choices::planner();
+        // Interval-shaped matchers lower to column windows...
+        let p = plan_mult(&MultNode::col_masked(&a, &b, KeyMatch::Prefix("c0".into())), &planner);
+        assert_eq!(pick(&p.decisions, "filter"), "windows(1)");
+        assert!(p.lead_spec.filters.is_empty());
+        let small: BTreeSet<String> = (0..3).map(|i| format!("c{i:03}")).collect();
+        let p = plan_mult(&MultNode::col_masked(&a, &b, KeyMatch::In(small)), &planner);
+        assert_eq!(pick(&p.decisions, "filter"), "windows(3)");
+        // ...globs are not interval-shaped, and an `In` set past the
+        // window cap pays more per-cell than the predicate probe.
+        let p = plan_mult(&MultNode::col_masked(&a, &b, KeyMatch::Glob("c*1".into())), &planner);
+        assert_eq!(pick(&p.decisions, "filter"), "predicate");
+        assert_eq!(p.lead_spec.filters.len(), 1);
+        let big: BTreeSet<String> =
+            (0..WINDOW_MAX_KEYS + 1).map(|i| format!("c{i:03}")).collect();
+        let p = plan_mult(&MultNode::col_masked(&a, &b, KeyMatch::In(big)), &planner);
+        assert_eq!(pick(&p.decisions, "filter"), "predicate");
+    }
+
+    #[test]
+    fn forced_filter_choices_clamp() {
+        let store = TableStore::with_defaults();
+        let a = grid_table(&store, "a", 6, 4);
+        let b = grid_table(&store, "b", 6, 4);
+        // Windows forced on a non-interval matcher clamps to predicate.
+        let mut ch = Choices::planner();
+        ch.filter = FilterChoice::Windows;
+        let p = plan_mult(&MultNode::col_masked(&a, &b, KeyMatch::Glob("*x".into())), &ch);
+        assert_eq!(pick(&p.decisions, "filter"), "predicate");
+        // NoPushdown is honored inside a mult plan: the lead scan runs
+        // unfiltered and the engine/write-back enforces the mask...
+        ch.filter = FilterChoice::NoPushdown;
+        let p = plan_mult(&MultNode::col_masked(&a, &b, KeyMatch::Prefix("c0".into())), &ch);
+        assert_eq!(pick(&p.decisions, "filter"), "no-pushdown");
+        assert!(p.lead_spec.filters.is_empty());
+        assert_eq!(p.lead_spec.ranges, vec![ScanRange::all()]);
+        // ...but clamps to predicate on a standalone scan, which has no
+        // later stage to enforce the dropped filter.
+        let node = ScanNode::full(&a).filtered(CellFilter::col(KeyMatch::Prefix("c0".into())));
+        let sp = plan_scan(&node, &ch);
+        assert_eq!(pick(&sp.decisions, "filter"), "predicate");
+        assert_eq!(sp.spec.filters.len(), 1);
+    }
+
+    #[test]
+    fn rowset_cost_rule() {
+        let store = TableStore::with_defaults();
+        let t = grid_table(&store, "t", 20, 5); // 100 cells, 5 per row
+        let planner = Choices::planner();
+        // A selective subset lowers to a coalesced range set.
+        let sel = plan_scan(&ScanNode::over_rows(&t, vec!["r000", "r007"]), &planner);
+        assert_eq!(pick(&sel.decisions, "rows"), "ranges(2)");
+        assert_eq!(sel.spec.ranges.len(), 2);
+        // A subset covering the whole table estimates no cheaper than a
+        // full scan, so it lowers to an `In` row filter instead.
+        let all: Vec<String> = (0..20).map(|i| format!("r{i:03}")).collect();
+        let keys: Vec<&str> = all.iter().map(|s| s.as_str()).collect();
+        let un = plan_scan(&ScanNode::over_rows(&t, keys), &planner);
+        assert_eq!(pick(&un.decisions, "rows"), "in-filter");
+        assert_eq!(un.spec.filters.len(), 1);
+        // Forcing the other lowering moves work, never results.
+        let mut ch = Choices::planner();
+        ch.rowset = RowSetChoice::FilterIn;
+        let forced = plan_scan(&ScanNode::over_rows(&t, vec!["r000", "r007"]), &ch);
+        assert_eq!(pick(&forced.decisions, "rows"), "in-filter");
+        assert_eq!(
+            t.scan_stream(forced.spec.clone()).collect::<Vec<_>>(),
+            t.scan_stream(sel.spec.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn combiner_cost_rule() {
+        let store = TableStore::with_defaults();
+        // No run statistics yet (dict_keys == 0): combiner stays
+        // scan-side, the frozen default.
+        let t = grid_table(&store, "mem", 10, 10);
+        let node = ScanNode::full(&t).reduced(RowReduce::Count { out_col: "deg".into() });
+        let p = plan_scan(&node, &Choices::planner());
+        assert_eq!(pick(&p.decisions, "combiner"), "at-scan");
+        assert!(p.spec.reduce.is_some() && p.client_reduce.is_none());
+        // Compacted with heavy key duplication (100 cells over ~21
+        // dictionary keys): still scan-side.
+        t.minor_compact().unwrap();
+        let p = plan_scan(&node, &Choices::planner());
+        assert_eq!(pick(&p.decisions, "combiner"), "at-scan");
+        // Compacted all-distinct single-cell rows: scan-side
+        // aggregation would shrink nothing, so the reduce moves to the
+        // client merge.
+        let rows: Vec<String> = (0..50).map(|i| format!("r{i:03}")).collect();
+        let cols: Vec<String> = (0..50).map(|i| format!("c{i:03}")).collect();
+        let thin = store.ingest_assoc("thin", &Assoc::from_triples(&rows, &cols, 1.0)).0;
+        thin.minor_compact().unwrap();
+        let node = ScanNode::full(&thin).reduced(RowReduce::Count { out_col: "deg".into() });
+        let p = plan_scan(&node, &Choices::planner());
+        assert_eq!(pick(&p.decisions, "combiner"), "at-merge");
+        assert!(p.spec.reduce.is_none() && p.client_reduce.is_some());
+        // Both placements write identical degree tables.
+        let merge_out = store.create_table("deg_merge");
+        execute_reduce_write(&p, &merge_out, Parallelism::serial());
+        let mut forced = Choices::planner();
+        forced.combiner = CombinerChoice::AtScan;
+        let scan_out = store.create_table("deg_scan");
+        execute_reduce_write(&plan_scan(&node, &forced), &scan_out, Parallelism::serial());
+        assert_eq!(merge_out.scan(ScanRange::all()), scan_out.scan(ScanRange::all()));
+    }
+
+    #[test]
+    fn ingest_rule_resolution() {
+        let store = TableStore::with_defaults();
+        let t = grid_table(&store, "op", 20, 5); // 100 cells, 5 per row
+        let few: Vec<SharedStr> = vec!["r000".into(), "r007".into()];
+        let many: Vec<SharedStr> = (0..20).map(|i| format!("r{i:03}").into()).collect();
+        // Cost rule: a selective survivor set restricts the scan, a
+        // covering one falls back to the full pass.
+        let rule = IngestRule::Cost { operand_cells: t.stats().cells };
+        assert_eq!(rule.spec(&few, &t).ranges.len(), 2);
+        assert_eq!(rule.spec(&many, &t).ranges, vec![ScanRange::all()]);
+        // Frozen 8x heuristic: 2·8 ≤ 100 restricts, 20·8 > 100 not.
+        assert_eq!(IngestRule::Heuristic8x.spec(&few, &t).ranges.len(), 2);
+        assert_eq!(IngestRule::Heuristic8x.spec(&many, &t).ranges, vec![ScanRange::all()]);
+        // Forced rules ignore the statistics entirely.
+        assert_eq!(IngestRule::Ranges.spec(&many, &t).ranges.len(), 20);
+        assert_eq!(IngestRule::Full.spec(&few, &t).ranges, vec![ScanRange::all()]);
+    }
+
+    #[test]
+    fn explain_renders_stably() {
+        let store = TableStore::with_defaults();
+        let a = grid_table(&store, "a", 6, 4);
+        let b = grid_table(&store, "b", 6, 4);
+        let node = MultNode::col_masked(&a, &b, KeyMatch::Prefix("c0".into()));
+        let first = explain_mult(&plan_mult(&node, &Choices::planner()));
+        // Re-planning an unchanged workload renders the identical
+        // string (the stability contract EXPLAIN tests pin against).
+        assert_eq!(explain_mult(&plan_mult(&node, &Choices::planner())), first);
+        assert!(first.starts_with("TableMult"), "{first}");
+        assert!(first.contains("mask: cols prefix(\"c0\")"), "{first}");
+        assert!(first.contains("A: cells=24 tablets=1 runs=0 dict-keys=0"), "{first}");
+        assert!(first.contains("filter: windows(1)"), "{first}");
+        assert!(first.contains("engine: masked-spgemm"), "{first}");
+        assert!(first.contains("bound: auto"), "{first}");
+        let sp = plan_scan(&ScanNode::over_rows(&a, vec!["r001"]), &Choices::planner());
+        let scan = explain_scan(&sp);
+        assert!(scan.starts_with("Scan\n"), "{scan}");
+        assert!(scan.contains("rows: ranges(1)"), "{scan}");
+    }
+}

@@ -34,10 +34,11 @@ pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use dense::DenseBlock;
 pub use spgemm::{
-    spgemm, spgemm_masked, spgemm_masked_par, spgemm_masked_with_stats_par, spgemm_par,
-    spgemm_row_masked, spgemm_row_masked_par, spgemm_row_masked_with_stats_par,
+    spgemm, spgemm_masked, spgemm_masked_par, spgemm_masked_with_modes_par,
+    spgemm_masked_with_stats_par, spgemm_par, spgemm_row_masked, spgemm_row_masked_par,
+    spgemm_row_masked_with_modes_par, spgemm_row_masked_with_stats_par, spgemm_with_modes_par,
     spgemm_with_policy_par, spgemm_with_stats, spgemm_with_stats_par, AccumulatorPolicy,
-    SpGemmStats,
+    SpGemmStats, SymbolicBound,
 };
 
 /// Errors from sparse-matrix constructors and shape checks.

@@ -89,6 +89,12 @@ pub struct SpGemmStats {
     pub rows_hash: usize,
     /// Rows handled by the dense scratch row.
     pub rows_dense: usize,
+    /// Total output entries *allocated* from the symbolic bound (summed
+    /// over chunks). Under [`SymbolicBound::MinFlopsCols`] this is
+    /// `Σ min(flops, ncols)`; under [`SymbolicBound::Exact`] it is the
+    /// true distinct-column count — the allocation-savings witness for
+    /// extreme-skew rows.
+    pub alloc_bound: usize,
 }
 
 /// Accumulator selection for the numeric phase. [`Adaptive`] picks per
@@ -108,6 +114,28 @@ pub enum AccumulatorPolicy {
     Sort,
     /// Hash accumulator for every row.
     Hash,
+}
+
+/// How the symbolic phase bounds each row's output size (the numeric
+/// phase allocates its chunk buffers from this bound and never grows
+/// them). Purely an allocation decision: every variant produces
+/// bit-identical output, so the planner may select freely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SymbolicBound {
+    /// `min(flops, ncols)` per row — one pass over `A`, O(nnz(A)). The
+    /// default; loose on extreme-skew rows where many products collide
+    /// on few distinct columns.
+    #[default]
+    MinFlopsCols,
+    /// Exact distinct-column count per row — a second symbolic pass
+    /// over the products (O(flops) with a generation-stamped mark
+    /// table), paying compute to allocate exactly. Worth it when the
+    /// loose bound would overallocate badly (power-law column skew).
+    Exact,
+    /// Run the cheap pass, then upgrade to [`SymbolicBound::Exact`]
+    /// when the loose bound exceeds twice the input size — the
+    /// overallocation regime where the exact pass pays for itself.
+    Auto,
 }
 
 /// Rows whose flop count is at most this use the sort accumulator under
@@ -192,16 +220,31 @@ pub fn spgemm_masked_with_stats_par(
     par: Parallelism,
     mask: &[bool],
 ) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
+    spgemm_masked_with_modes_par(a, b, s, par, mask, Default::default(), Default::default())
+}
+
+/// [`spgemm_masked_with_stats_par`] with explicit physical knobs
+/// ([`AccumulatorPolicy`] + [`SymbolicBound`]) — the planner-facing
+/// masked entry point. Bit-identical across every knob combination.
+pub fn spgemm_masked_with_modes_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+    mask: &[bool],
+    policy: AccumulatorPolicy,
+    bound: SymbolicBound,
+) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
     let n = b.shape().1;
     if mask.len() != n {
         return Err(SparseError::MaskLengthMismatch { mask: mask.len(), extent: n, axis: "column" });
     }
     if mask.iter().all(|&keep| keep) {
         // Degenerate mask: nothing to restrict, skip the copy.
-        return spgemm_with_policy_par(a, b, s, par, AccumulatorPolicy::Adaptive);
+        return spgemm_with_modes_par(a, b, s, par, policy, bound);
     }
     let bm = restrict_cols(b, mask);
-    spgemm_with_policy_par(a, &bm, s, par, AccumulatorPolicy::Adaptive)
+    spgemm_with_modes_par(a, &bm, s, par, policy, bound)
 }
 
 /// Row-masked SpGEMM at the process-default parallelism: compute only
@@ -239,15 +282,30 @@ pub fn spgemm_row_masked_with_stats_par(
     par: Parallelism,
     mask: &[bool],
 ) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
+    spgemm_row_masked_with_modes_par(a, b, s, par, mask, Default::default(), Default::default())
+}
+
+/// [`spgemm_row_masked_with_stats_par`] with explicit physical knobs
+/// ([`AccumulatorPolicy`] + [`SymbolicBound`]) — the planner-facing
+/// row-masked entry point. Bit-identical across every knob combination.
+pub fn spgemm_row_masked_with_modes_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+    mask: &[bool],
+    policy: AccumulatorPolicy,
+    bound: SymbolicBound,
+) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
     let m = a.shape().0;
     if mask.len() != m {
         return Err(SparseError::MaskLengthMismatch { mask: mask.len(), extent: m, axis: "row" });
     }
     if mask.iter().all(|&keep| keep) {
-        return spgemm_with_policy_par(a, b, s, par, AccumulatorPolicy::Adaptive);
+        return spgemm_with_modes_par(a, b, s, par, policy, bound);
     }
     let am = restrict_rows(a, mask);
-    spgemm_with_policy_par(&am, b, s, par, AccumulatorPolicy::Adaptive)
+    spgemm_with_modes_par(&am, b, s, par, policy, bound)
 }
 
 /// `A` restricted to mask-true rows: same shape, masked-out rows
@@ -300,15 +358,33 @@ fn restrict_cols(b: &CsrMatrix, mask: &[bool]) -> CsrMatrix {
 /// more than the row work saved).
 const PAR_MIN_ROWS: usize = 64;
 
-/// The full engine entry point: [`spgemm_par`] with an explicit
-/// [`AccumulatorPolicy`]. Every policy yields bit-identical output; the
-/// forced variants exist for benchmarking and cross-checking.
+/// [`spgemm_par`] with an explicit [`AccumulatorPolicy`] (and the
+/// default [`SymbolicBound`]). Every policy yields bit-identical
+/// output; the forced variants exist for benchmarking and
+/// cross-checking.
 pub fn spgemm_with_policy_par(
     a: &CsrMatrix,
     b: &CsrMatrix,
     s: &dyn Semiring,
     par: Parallelism,
     policy: AccumulatorPolicy,
+) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
+    spgemm_with_modes_par(a, b, s, par, policy, SymbolicBound::default())
+}
+
+/// The full engine entry point: [`spgemm_par`] with an explicit
+/// [`AccumulatorPolicy`] *and* [`SymbolicBound`] — the two physical
+/// knobs the query planner selects. Every combination yields
+/// bit-identical output: the accumulator changes only the combine
+/// order bookkeeping (see the module docs) and the bound changes only
+/// allocation sizes.
+pub fn spgemm_with_modes_par(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    s: &dyn Semiring,
+    par: Parallelism,
+    policy: AccumulatorPolicy,
+    bound: SymbolicBound,
 ) -> Result<(CsrMatrix, SpGemmStats), SparseError> {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
@@ -318,6 +394,15 @@ pub fn spgemm_with_policy_par(
 
     // Symbolic phase: per-row flop counts and output-size bounds.
     let (cum_flops, cum_bound) = symbolic(a, b);
+    let exact = match bound {
+        SymbolicBound::MinFlopsCols => false,
+        SymbolicBound::Exact => true,
+        // Upgrade when the loose bound would allocate more than twice
+        // the input size — the skew regime where a second O(flops)
+        // pass is cheaper than the wasted allocation + zero-fill.
+        SymbolicBound::Auto => cum_bound[m] > 2 * (a.nnz() + b.nnz()),
+    };
+    let cum_bound = if exact { symbolic_exact(a, b) } else { cum_bound };
 
     let parts: Vec<RowChunk> = if par.is_serial() || m < PAR_MIN_ROWS {
         vec![numeric_rows(a, b, s, 0..m, &cum_flops, &cum_bound, policy)]
@@ -348,6 +433,7 @@ pub fn spgemm_with_policy_par(
         stats.rows_sort += part.stats.rows_sort;
         stats.rows_hash += part.stats.rows_hash;
         stats.rows_dense += part.stats.rows_dense;
+        stats.alloc_bound += part.stats.alloc_bound;
     }
     stats.out_nnz = data.len();
     Ok((CsrMatrix::from_parts(m, n, indptr, indices, data), stats))
@@ -375,6 +461,36 @@ fn symbolic(a: &CsrMatrix, b: &CsrMatrix) -> (Vec<usize>, Vec<usize>) {
         cum_bound.push(tb);
     }
     (cum_flops, cum_bound)
+}
+
+/// Exact symbolic pass ([`SymbolicBound::Exact`]): `cum[i]` = total
+/// *distinct* output columns of rows `0..i`. O(flops) via a
+/// generation-stamped mark table — each row stamps the columns it
+/// touches with its own row index, so the table never needs clearing.
+/// Row indices never reach `u32::MAX` (extents are capped there), so
+/// the initial sentinel can't collide with a stamp.
+fn symbolic_exact(a: &CsrMatrix, b: &CsrMatrix) -> Vec<usize> {
+    let m = a.shape().0;
+    let n = b.shape().1;
+    let (bptr, bidx) = (b.indptr(), b.indices());
+    let mut mark: Vec<u32> = vec![u32::MAX; n];
+    let mut cum = Vec::with_capacity(m + 1);
+    cum.push(0usize);
+    let mut total = 0usize;
+    for r in 0..m {
+        let (acols, _) = a.row(r);
+        let stamp = r as u32;
+        for &k in acols {
+            for &c in &bidx[bptr[k as usize]..bptr[k as usize + 1]] {
+                if mark[c as usize] != stamp {
+                    mark[c as usize] = stamp;
+                    total += 1;
+                }
+            }
+        }
+        cum.push(total);
+    }
+    cum
 }
 
 /// Output of [`numeric_rows`] for one contiguous row range.
@@ -472,6 +588,7 @@ fn numeric_rows(
     let mut scratch = Scratch::new();
 
     let cap = cum_bound[rows.end] - cum_bound[rows.start];
+    stats.alloc_bound = cap;
     let mut rel_indptr = Vec::with_capacity(rows.len());
     let mut indices: Vec<u32> = Vec::with_capacity(cap);
     let mut data: Vec<f64> = Vec::with_capacity(cap);
@@ -798,6 +915,80 @@ mod tests {
                 spgemm_with_policy_par(&a, &b, &PlusTimes, Parallelism::serial(), policy).unwrap();
             assert_bits_equal(&base, &c, &format!("{policy:?}"));
         }
+    }
+
+    #[test]
+    fn symbolic_exact_bound_tighter_on_skew() {
+        // Extreme column skew: two fat B rows share the same 50
+        // columns, and every A row hits both — per row the flop count
+        // is 100 but only 50 distinct output columns exist, so the
+        // min(flops, ncols) bound allocates 2x. The exact pass must
+        // halve the allocation without changing a single output bit.
+        let n = 1000usize;
+        let m = 80usize;
+        let mut bt = Vec::new();
+        for j in 0..50 {
+            bt.push((0, j * 3, 1.0));
+            bt.push((1, j * 3, 1.0));
+        }
+        let b = from_triples(2, n, &bt);
+        let mut at = Vec::new();
+        for i in 0..m {
+            at.push((i, 0, 1.0));
+            at.push((i, 1, 1.0));
+        }
+        let a = from_triples(m, 2, &at);
+        let run = |bound: SymbolicBound, threads: usize| {
+            spgemm_with_modes_par(
+                &a,
+                &b,
+                &PlusTimes,
+                Parallelism::with_threads(threads),
+                AccumulatorPolicy::Adaptive,
+                bound,
+            )
+            .unwrap()
+        };
+        let (base, loose) = run(SymbolicBound::MinFlopsCols, 1);
+        let (exact_c, exact) = run(SymbolicBound::Exact, 1);
+        let (auto_c, auto) = run(SymbolicBound::Auto, 1);
+        assert_bits_equal(&base, &exact_c, "exact bound");
+        assert_bits_equal(&base, &auto_c, "auto bound");
+        assert_eq!(loose.alloc_bound, m * 100, "loose bound = flops");
+        assert_eq!(exact.alloc_bound, m * 50, "exact bound = distinct columns");
+        // Auto must detect the skew (bound >> input nnz) and upgrade.
+        assert_eq!(auto.alloc_bound, exact.alloc_bound, "auto upgrades on skew");
+        assert_eq!(exact.alloc_bound, exact.out_nnz, "all products survive here");
+        // Bit-identity holds across the fan-out too (m > PAR_MIN_ROWS).
+        for bound in [SymbolicBound::MinFlopsCols, SymbolicBound::Exact, SymbolicBound::Auto] {
+            for threads in [2usize, 4, 7] {
+                let (c, _) = run(bound, threads);
+                assert_bits_equal(&base, &c, &format!("{bound:?} at {threads} threads"));
+            }
+        }
+    }
+
+    #[test]
+    fn symbolic_auto_stays_loose_on_small_bounds() {
+        // Total bound 4 vs input nnz 8: well under the 2x threshold,
+        // so Auto keeps the one-pass bound (no wasted exact pass).
+        let a = from_triples(3, 4, &[(0, 0, 2.0), (0, 3, 1.0), (1, 2, 5.0), (2, 1, -1.0)]);
+        let b = from_triples(4, 3, &[(0, 0, 1.0), (1, 2, 4.0), (2, 1, 3.0), (3, 0, -2.0)]);
+        let run = |bound: SymbolicBound| {
+            spgemm_with_modes_par(
+                &a,
+                &b,
+                &PlusTimes,
+                Parallelism::serial(),
+                AccumulatorPolicy::Adaptive,
+                bound,
+            )
+            .unwrap()
+            .1
+        };
+        let auto = run(SymbolicBound::Auto).alloc_bound;
+        let loose = run(SymbolicBound::MinFlopsCols).alloc_bound;
+        assert_eq!(auto, loose);
     }
 
     #[test]

@@ -98,7 +98,7 @@ pub use scan::{
 };
 pub use table::{
     DurableOptions, HealthReport, SnapshotScan, SnapshotStream, Table, TableConfig, TableHealth,
-    TableStream,
+    TableStats, TableStream,
 };
 pub use tablet::{Tablet, TabletSnapshot};
 pub use wal::FsyncPolicy;

@@ -247,6 +247,13 @@ impl Run {
         self.len() == 0
     }
 
+    /// Number of distinct strings in the run's dictionary pool (row,
+    /// column, and value keys share one pool). The pool is always
+    /// resident — even for paged runs — so this never faults a block.
+    pub fn dict_len(&self) -> usize {
+        self.pool.len()
+    }
+
     /// Whether the run is paged through the block cache (vs. fully
     /// resident in memory).
     pub fn is_paged(&self) -> bool {

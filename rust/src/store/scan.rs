@@ -69,7 +69,7 @@ use std::collections::BTreeSet;
 /// soon as a row's window is exhausted (Accumulo's column-qualifier
 /// range seek), so out-of-window cells are never even copied out of the
 /// tablet.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ScanRange {
     /// Inclusive lower row bound.
     pub lo: Option<String>,
@@ -314,6 +314,54 @@ impl KeyMatch {
             KeyMatch::In(set) => set.contains(s),
         }
     }
+
+    /// The half-open key interval `[lo, hi)` (`hi` `None` = +∞) that
+    /// contains exactly the accepted keys, when the matcher is
+    /// interval-shaped: `Equals` and `Prefix` are; `In` decomposes into
+    /// several intervals ([`KeyMatch::intervals`]); `Glob` is not.
+    pub fn interval(&self) -> Option<(String, Option<String>)> {
+        match self {
+            KeyMatch::Equals(k) => Some((k.clone(), Some(format!("{k}\0")))),
+            KeyMatch::Prefix(p) => Some((p.clone(), prefix_upper_bound(p))),
+            KeyMatch::Glob(_) | KeyMatch::In(_) => None,
+        }
+    }
+
+    /// Sorted, pairwise-disjoint half-open key intervals exactly
+    /// covering the accepted keys, or `None` when the matcher is not
+    /// interval-shaped (`Glob`). This is the raw material for the
+    /// planner's filter-lowering rule: each interval becomes a per-row
+    /// column window on a [`ScanRange`], so the block walk *seeks* past
+    /// doomed cells instead of evaluating a predicate on each.
+    pub fn intervals(&self) -> Option<Vec<(String, Option<String>)>> {
+        match self {
+            // `BTreeSet` iterates in sorted order; `[k, k\0)` intervals
+            // of distinct keys never overlap.
+            KeyMatch::In(set) => {
+                Some(set.iter().map(|k| (k.clone(), Some(format!("{k}\0")))).collect())
+            }
+            KeyMatch::Glob(_) => None,
+            _ => self.interval().map(|iv| vec![iv]),
+        }
+    }
+}
+
+/// Least string greater than every string carrying prefix `p` under
+/// the store's byte-lexicographic order, or `None` when no finite
+/// bound exists (`p` empty or entirely `char::MAX`). Strips trailing
+/// `char::MAX` chars, then replaces the final char with its code-point
+/// successor (hopping the surrogate gap). UTF-8 byte order equals
+/// code-point order, so the replacement bounds every extension of the
+/// prefix (Accumulo's `Range.prefix` followingKey construction).
+fn prefix_upper_bound(p: &str) -> Option<String> {
+    let mut s: String = p.trim_end_matches(char::MAX).to_string();
+    let last = s.pop()?;
+    let mut code = last as u32 + 1;
+    if (0xD800..=0xDFFF).contains(&code) {
+        code = 0xE000;
+    }
+    s.push(char::from_u32(code)?);
+    Some(s)
 }
 
 /// Iterative glob matcher (`*` any sequence, `?` any one char) with the
@@ -969,6 +1017,48 @@ mod tests {
         let set: BTreeSet<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
         assert!(KeyMatch::In(set.clone()).matches("a"));
         assert!(!KeyMatch::In(set).matches("c"));
+    }
+
+    #[test]
+    fn prefix_upper_bounds() {
+        assert_eq!(prefix_upper_bound("abc"), Some("abd".to_string()));
+        assert_eq!(prefix_upper_bound("c0"), Some("c1".to_string()));
+        assert_eq!(prefix_upper_bound("a\u{D7FF}"), Some("a\u{E000}".to_string()));
+        // Trailing MAX chars fall back to bumping the preceding char.
+        assert_eq!(prefix_upper_bound("a\u{10FFFF}"), Some("b".to_string()));
+        assert_eq!(prefix_upper_bound("\u{10FFFF}"), None);
+        assert_eq!(prefix_upper_bound(""), None);
+    }
+
+    /// Interval membership `[lo, hi)` under plain string order.
+    fn in_iv(iv: &(String, Option<String>), s: &str) -> bool {
+        s >= iv.0.as_str() && iv.1.as_deref().is_none_or(|hi| s < hi)
+    }
+
+    #[test]
+    fn key_match_intervals_cover_exactly_the_matches() {
+        let samples =
+            ["", "a", "ab", "abc", "abcd", "ab\u{0}", "abd", "b", "c0", "c00", "c1", "z"];
+        let set: BTreeSet<String> = ["ab", "c0"].iter().map(|s| s.to_string()).collect();
+        let cases = [
+            KeyMatch::Equals("ab".into()),
+            KeyMatch::Prefix("ab".into()),
+            KeyMatch::Prefix("".into()),
+            KeyMatch::In(set),
+        ];
+        for m in &cases {
+            let ivs = m.intervals().expect("interval-shaped matcher");
+            for s in samples {
+                let covered = ivs.iter().any(|iv| in_iv(iv, s));
+                assert_eq!(covered, m.matches(s), "matcher {m:?} key {s:?}");
+            }
+            // Sorted and disjoint: each interval's hi <= the next lo.
+            for w in ivs.windows(2) {
+                let hi = w[0].1.as_deref().expect("non-final interval is bounded");
+                assert!(hi <= w[1].0.as_str(), "overlapping intervals {w:?}");
+            }
+        }
+        assert!(KeyMatch::Glob("c*".into()).intervals().is_none());
     }
 
     #[test]

@@ -106,6 +106,42 @@ pub struct HealthReport {
     /// ([`DurableOptions::cache_capacity`]); `None` in the default
     /// fully-resident mode.
     pub cache: Option<CacheStats>,
+    /// Per-table planner statistics ([`Table::stats`]), attached on
+    /// every [`Table::health`] call for observability.
+    pub stats: Option<TableStats>,
+}
+
+/// Cheap per-table statistics: the **annotate** input of the query
+/// planner ([`crate::plan`]) and an observability surface
+/// ([`Table::health`]). Computed from pinned [`TabletSnapshot`]s in
+/// O(tablets × runs) — cell counts come from run extents and frozen
+/// memtable lengths, never from walking cells — cached per content
+/// version, and refreshed eagerly by compactions.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TableStats {
+    /// Content version (the table's mutation counter) the statistics
+    /// were computed at. The counter bumps after every visible-content
+    /// mutation, so `version < current` means the numbers are stale —
+    /// the staleness signal for planner caches.
+    pub version: u64,
+    /// Tablet count at computation time.
+    pub tablets: usize,
+    /// Total stored cells across tablets (shadowed versions and
+    /// tombstones included — an upper bound on visible cells).
+    pub cells: usize,
+    /// Stored cells per tablet, in row order.
+    pub per_tablet_cells: Vec<usize>,
+    /// Distinct run files attached across tablets (post-split siblings
+    /// sharing a run count it once).
+    pub runs: usize,
+    /// Dictionary-pool entries summed over distinct runs: distinct
+    /// row/col/value strings per run. An upper bound on the table's
+    /// distinct keys; `cells / dict_keys` approximates the mean
+    /// duplication factor the planner uses for combiner placement.
+    pub dict_keys: usize,
+    /// Evenly-strided sampled row boundaries (sorted, deduplicated) —
+    /// the same candidate cut points range chunking uses.
+    pub sampled_rows: Vec<String>,
 }
 
 /// How a durable table talks to storage: the backend, the retry
@@ -226,6 +262,9 @@ pub struct Table {
     /// streams-see-concurrent-writes contract without any locking on
     /// the quiescent path.
     mutations: AtomicU64,
+    /// Cached [`TableStats`], valid while its `version` matches
+    /// `mutations`. Leaf lock: never held across any other lock.
+    stats_cache: Mutex<Option<TableStats>>,
 }
 
 impl Table {
@@ -239,6 +278,7 @@ impl Table {
             durable: None,
             run_seq: AtomicU64::new(0),
             mutations: AtomicU64::new(0),
+            stats_cache: Mutex::new(None),
         }
     }
 
@@ -834,6 +874,89 @@ impl Table {
         SnapshotScan { snaps, spec: ScanSpec { ranges, ..spec.clone() } }
     }
 
+    /// Per-table statistics for cost-based planning (the planner's
+    /// **annotate** input) and observability. Cached per content
+    /// version: a hit costs one mutex lock + clone, a miss pins the
+    /// tablet snapshots and recounts in O(tablets × runs) without
+    /// touching cell data. Compactions refresh the cache eagerly, so
+    /// post-compaction calls are hits.
+    pub fn stats(&self) -> TableStats {
+        let version = self.mutations.load(Ordering::Acquire);
+        if let Some(cached) = self.stats_cache.lock().unwrap().as_ref() {
+            if cached.version == version {
+                return cached.clone();
+            }
+        }
+        let stats = Self::compute_stats(&self.pin_all(), version);
+        *self.stats_cache.lock().unwrap() = Some(stats.clone());
+        stats
+    }
+
+    /// Recompute the stats cache at the current content version —
+    /// called by the compaction entry points so the post-compaction
+    /// layout (fewer runs, merged dictionaries) is visible to planners
+    /// without a recount on their next [`Table::stats`] call.
+    fn refresh_stats(&self) {
+        let version = self.mutations.load(Ordering::Acquire);
+        let stats = Self::compute_stats(&self.pin_all(), version);
+        *self.stats_cache.lock().unwrap() = Some(stats);
+    }
+
+    /// Count cells/runs/dictionaries over pinned snapshots. Run-level
+    /// figures dedup by run sequence number because post-split sibling
+    /// tablets share their runs by `Arc`.
+    fn compute_stats(snaps: &[TabletSnapshot], version: u64) -> TableStats {
+        let mut per_tablet_cells = Vec::with_capacity(snaps.len());
+        let mut seen = BTreeSet::new();
+        let mut runs = 0usize;
+        let mut dict_keys = 0usize;
+        let mut sampled_rows = Vec::new();
+        for snap in snaps {
+            per_tablet_cells.push(snap.cells_upto(None));
+            for (seq, _len, dict) in snap.run_summaries() {
+                if seen.insert(seq) {
+                    runs += 1;
+                    dict_keys += dict;
+                }
+            }
+            snap.sample_rows(SnapshotScan::CHUNK_SAMPLES, &mut sampled_rows);
+        }
+        sampled_rows.sort_unstable();
+        sampled_rows.dedup();
+        TableStats {
+            version,
+            tablets: snaps.len(),
+            cells: per_tablet_cells.iter().sum(),
+            per_tablet_cells,
+            runs,
+            dict_keys,
+            sampled_rows,
+        }
+    }
+
+    /// Estimated stored cells whose row falls inside any of `ranges`
+    /// (column windows are ignored — this is a row-extent estimate).
+    /// Costs O(ranges × tablets × runs) binary searches over pinned
+    /// snapshots; never walks cells. Overlapping ranges double-count,
+    /// so pass a coalesced set ([`ScanSpec`] builders coalesce).
+    pub fn estimate_cells_in(&self, ranges: &[ScanRange]) -> usize {
+        let snaps = self.pin_all();
+        let mut n = 0usize;
+        for r in ranges {
+            for snap in &snaps {
+                // Out-of-extent bounds clamp inside `cells_upto`, so a
+                // range disjoint from this tablet contributes ~0.
+                let hi_n = snap.cells_upto(r.hi.as_deref());
+                let lo_n = match r.lo.as_deref() {
+                    Some(lo) => snap.cells_upto(Some(lo)),
+                    None => 0,
+                };
+                n += hi_n.saturating_sub(lo_n);
+            }
+        }
+        n
+    }
+
     /// Open a streaming, seekable scan over this table — the stack as
     /// an iterator. The cursor walks pinned snapshots and re-pins only
     /// when the table's content version moved (holding no lock between
@@ -974,7 +1097,9 @@ impl Table {
     /// safely re-runnable and a crash loses nothing.
     pub fn minor_compact(&self) -> io::Result<usize> {
         let Some(d) = &self.durable else {
-            return self.checkpoint_tablets(None, None, 0);
+            let written = self.checkpoint_tablets(None, None, 0)?;
+            self.refresh_stats();
+            return Ok(written);
         };
         let mut wal = d.wal.lock().unwrap();
         self.sync_locked(d, &mut wal)?;
@@ -986,6 +1111,7 @@ impl Table {
             self.write_manifest(&ctx)?;
             self.collect_orphans(d, &ctx);
         }
+        self.refresh_stats();
         Ok(written)
     }
 
@@ -999,7 +1125,9 @@ impl Table {
     /// the pass is safely re-runnable.
     pub fn major_compact(&self, spec: &CompactionSpec) -> io::Result<usize> {
         let Some(d) = &self.durable else {
-            return self.checkpoint_tablets(None, Some(spec), 0);
+            let written = self.checkpoint_tablets(None, Some(spec), 0)?;
+            self.refresh_stats();
+            return Ok(written);
         };
         let mut wal = d.wal.lock().unwrap();
         self.sync_locked(d, &mut wal)?;
@@ -1011,6 +1139,7 @@ impl Table {
         // run (all cells deleted), and the manifest must drop them.
         self.write_manifest(&ctx)?;
         self.collect_orphans(d, &ctx);
+        self.refresh_stats();
         Ok(written)
     }
 
@@ -1329,17 +1458,20 @@ impl Table {
 
     /// Snapshot this table's fault-tolerance state: the degradation
     /// rung, quarantined files, last storage error, and the
-    /// non-durable-write / orphan-GC counters. In-memory tables report
-    /// a default (healthy, empty) report.
+    /// non-durable-write / orphan-GC counters, plus the current
+    /// [`TableStats`]. In-memory tables report a default (healthy,
+    /// empty) fault state with the stats attached.
     pub fn health(&self) -> HealthReport {
-        match &self.durable {
+        let mut report = match &self.durable {
             Some(d) => {
                 let mut report = d.health.lock().unwrap().clone();
                 report.cache = d.cache.as_ref().map(|cache| cache.stats());
                 report
             }
             None => HealthReport::default(),
-        }
+        };
+        report.stats = Some(self.stats());
+        report
     }
 }
 

@@ -775,6 +775,14 @@ impl TabletSnapshot {
         n
     }
 
+    /// One `(seq, len, dict_len)` summary per pinned run — the raw
+    /// material for [`crate::store::TableStats`]. Post-split siblings
+    /// share runs by `Arc`, so callers dedup by `seq` before summing
+    /// run-level figures table-wide.
+    pub(crate) fn run_summaries(&self) -> impl Iterator<Item = (u64, usize, usize)> + '_ {
+        self.runs.iter().map(|r| (r.seq(), r.len(), r.dict_len()))
+    }
+
     /// Append up to `per_run - 1` evenly-strided row keys from each
     /// layer to `out` — candidate cut points for range chunking.
     /// Samples fall strictly inside the layer's extent, so every

@@ -1,0 +1,221 @@
+//! Planner equivalence suite (PR 10).
+//!
+//! Contract under test: **plan-choice invariance**. Every physical
+//! plan the planner can emit — every forced [`Choices`] combination,
+//! at every thread count — writes bit-identical results to the naive
+//! baseline (full multiply, mask enforced only at write-back; raw
+//! scans with client-side aggregation). The planner moves work, never
+//! results: masked/unmasked SpGEMM engines, row-restricted vs. full
+//! ingest, filter-as-windows vs. filter-as-predicate vs. no pushdown,
+//! combiner at scan vs. at merge, and every symbolic output bound must
+//! all agree cell-for-cell.
+//!
+//! A final section pins `EXPLAIN` stability: re-planning an unchanged
+//! workload renders the identical decision log.
+
+use d4m::assoc::Assoc;
+use d4m::graphulo::{
+    bfs_planned, degree_table_planned, jaccard_seeded_planned, table_mult_masked_planned,
+    table_mult_planned, table_mult_row_masked_planned,
+};
+use d4m::plan::{
+    explain_mult, plan_mult, Choices, CombinerChoice, EngineChoice, FilterChoice, IngestChoice,
+    MultNode, RowSetChoice,
+};
+use d4m::semiring::{MaxPlus, PlusTimes};
+use d4m::sparse::SymbolicBound;
+use d4m::store::{KeyMatch, ScanRange, Table, TableConfig, TableStore};
+use d4m::util::Parallelism;
+use std::sync::Arc;
+
+/// Split-forcing store plus two overlapping operand tables; the `A`
+/// side is minor-compacted so the planner's statistics see runs.
+fn fixture() -> (TableStore, Arc<Table>, Arc<Table>) {
+    let store = TableStore::new(TableConfig { split_threshold: 96, write_latency_us: 0 });
+    let n = 150;
+    let rows: Vec<String> = (0..n).map(|i| format!("r{:03}", i % 25)).collect();
+    let cols: Vec<String> = (0..n).map(|i| format!("c{:03}", (i * 7) % 18)).collect();
+    let (a, _) = store.ingest_assoc("a", &Assoc::from_triples(&rows, &cols, 2.0));
+    let rows2: Vec<String> = (0..n).map(|i| format!("r{:03}", (i * 3) % 25)).collect();
+    let cols2: Vec<String> = (0..n).map(|i| format!("c{:03}", (i * 5) % 18)).collect();
+    let (b, _) = store.ingest_assoc("b", &Assoc::from_triples(&rows2, &cols2, 3.0));
+    a.minor_compact().unwrap();
+    (store, a, b)
+}
+
+/// The multiply-then-filter baseline: nothing pushed down, nothing
+/// restricted, the mask applied at write-back only.
+fn naive() -> Choices {
+    Choices {
+        ingest: IngestChoice::Full,
+        filter: FilterChoice::NoPushdown,
+        engine: EngineChoice::WriteFilter,
+        bound: SymbolicBound::MinFlopsCols,
+        ..Choices::frozen()
+    }
+}
+
+#[test]
+fn masked_mult_equivalent_over_full_forced_grid() {
+    let (store, a, b) = fixture();
+    let keep = KeyMatch::Prefix("c00".into());
+    let base = store.create_table("base");
+    let par1 = Parallelism::with_threads(1);
+    let n = table_mult_masked_planned(&a, &b, &base, &PlusTimes, &keep, par1, &naive());
+    let expect = base.scan(ScanRange::all());
+    assert_eq!(n, expect.len());
+    assert!(!expect.is_empty(), "degenerate fixture");
+    let mut id = 0usize;
+    for ingest in
+        [IngestChoice::Cost, IngestChoice::Heuristic8x, IngestChoice::Ranges, IngestChoice::Full]
+    {
+        for filter in [
+            FilterChoice::Cost,
+            FilterChoice::Predicate,
+            FilterChoice::Windows,
+            FilterChoice::NoPushdown,
+        ] {
+            for engine in
+                [EngineChoice::Cost, EngineChoice::MaskedSpGemm, EngineChoice::WriteFilter]
+            {
+                for bound in
+                    [SymbolicBound::Auto, SymbolicBound::MinFlopsCols, SymbolicBound::Exact]
+                {
+                    let ch = Choices { ingest, filter, engine, bound, ..Choices::frozen() };
+                    for threads in [1usize, 4] {
+                        let out = store.create_table(&format!("g{id}"));
+                        id += 1;
+                        let par = Parallelism::with_threads(threads);
+                        let cells =
+                            table_mult_masked_planned(&a, &b, &out, &PlusTimes, &keep, par, &ch);
+                        assert_eq!(out.scan(ScanRange::all()), expect, "{ch:?} t={threads}");
+                        assert_eq!(cells, expect.len(), "{ch:?} t={threads}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn row_masked_mult_equivalent_over_mask_shapes() {
+    let (store, a, b) = fixture();
+    let masks = [
+        KeyMatch::Prefix("c00".into()),
+        KeyMatch::Equals("c004".into()),
+        KeyMatch::Glob("c*1".into()),
+        KeyMatch::In((0..6).map(|i| format!("c{:03}", i * 3)).collect()),
+    ];
+    let forced_combo = Choices {
+        filter: FilterChoice::Windows,
+        engine: EngineChoice::WriteFilter,
+        bound: SymbolicBound::Exact,
+        ..Choices::planner()
+    };
+    let mut id = 0usize;
+    for keep in masks {
+        let base = store.create_table(&format!("rm_base_{id}"));
+        let par1 = Parallelism::with_threads(1);
+        table_mult_row_masked_planned(&a, &b, &base, &PlusTimes, &keep, par1, &naive());
+        let expect = base.scan(ScanRange::all());
+        for ch in [Choices::planner(), Choices::frozen(), forced_combo] {
+            for threads in [1usize, 2, 7] {
+                let out = store.create_table(&format!("rm_{id}"));
+                id += 1;
+                let par = Parallelism::with_threads(threads);
+                let cells =
+                    table_mult_row_masked_planned(&a, &b, &out, &PlusTimes, &keep, par, &ch);
+                assert_eq!(out.scan(ScanRange::all()), expect, "{keep:?} {ch:?} t={threads}");
+                assert_eq!(cells, expect.len(), "{keep:?} {ch:?} t={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn unmasked_mult_ignores_choice_knobs() {
+    let (store, a, b) = fixture();
+    let base = store.create_table("um_base");
+    table_mult_planned(&a, &b, &base, &MaxPlus, Parallelism::with_threads(1), &Choices::frozen());
+    let expect = base.scan(ScanRange::all());
+    assert!(!expect.is_empty());
+    for (i, ch) in [Choices::planner(), Choices::frozen(), naive()].iter().enumerate() {
+        for threads in [1usize, 4, 7] {
+            let out = store.create_table(&format!("um_{i}_{threads}"));
+            let par = Parallelism::with_threads(threads);
+            let n = table_mult_planned(&a, &b, &out, &MaxPlus, par, ch);
+            assert_eq!(out.scan(ScanRange::all()), expect, "{ch:?} t={threads}");
+            assert_eq!(n, expect.len(), "{ch:?} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn degree_combiner_placements_identical() {
+    let (store, a, _) = fixture();
+    let base = store.create_table("deg_base");
+    let n0 = degree_table_planned(&a, &base, Parallelism::with_threads(1), &Choices::frozen());
+    let expect = base.scan(ScanRange::all());
+    assert_eq!(n0, expect.len());
+    assert!(!expect.is_empty());
+    for comb in [CombinerChoice::Cost, CombinerChoice::AtScan, CombinerChoice::AtMerge] {
+        for threads in [1usize, 2, 4, 7] {
+            let ch = Choices { combiner: comb, ..Choices::planner() };
+            let out = store.create_table(&format!("deg_{comb:?}_{threads}"));
+            let n = degree_table_planned(&a, &out, Parallelism::with_threads(threads), &ch);
+            assert_eq!(out.scan(ScanRange::all()), expect, "{comb:?} t={threads}");
+            assert_eq!(n, expect.len(), "{comb:?} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn bfs_and_jaccard_rowset_lowerings_identical() {
+    let store = TableStore::with_defaults();
+    let n = 120;
+    let rows: Vec<String> = (0..n).map(|i| format!("n{:03}", i % 40)).collect();
+    let cols: Vec<String> = (0..n).map(|i| format!("n{:03}", (i * 7 + 1) % 40)).collect();
+    let (t, _) = store.ingest_assoc("g", &Assoc::from_triples(&rows, &cols, 1.0));
+    t.minor_compact().unwrap();
+    let par1 = Parallelism::with_threads(1);
+    // Seeds include an absent node; the frozen (range-set) lowering at
+    // one thread is the baseline every other lowering must match.
+    let seeds: Vec<String> = ["n000", "n013", "zzz"].iter().map(|s| s.to_string()).collect();
+    let expect_bfs = bfs_planned(&t, &seeds, 4, par1, &Choices::frozen());
+    let expect_probe = bfs_planned(&t, &seeds, 0, par1, &Choices::frozen());
+    assert!(expect_bfs.iter().any(|hop| !hop.is_empty()));
+    let nodes: Vec<String> = (0..12).map(|i| format!("n{:03}", i * 3)).collect();
+    let expect_jac = jaccard_seeded_planned(&t, &nodes, par1, &Choices::frozen()).unwrap();
+    for rowset in [RowSetChoice::Cost, RowSetChoice::Ranges, RowSetChoice::FilterIn] {
+        let ch = Choices { rowset, ..Choices::planner() };
+        for threads in [1usize, 2, 4, 7] {
+            let par = Parallelism::with_threads(threads);
+            assert_eq!(bfs_planned(&t, &seeds, 4, par, &ch), expect_bfs, "{rowset:?} t={threads}");
+            assert_eq!(
+                bfs_planned(&t, &seeds, 0, par, &ch),
+                expect_probe,
+                "{rowset:?} t={threads}"
+            );
+            assert_eq!(
+                jaccard_seeded_planned(&t, &nodes, par, &ch).unwrap(),
+                expect_jac,
+                "{rowset:?} t={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn explain_is_stable_and_decision_complete() {
+    let (_store, a, b) = fixture();
+    let node = MultNode::col_masked(&a, &b, KeyMatch::Prefix("c00".into()));
+    let text = explain_mult(&plan_mult(&node, &Choices::planner()));
+    // Re-planning an unchanged workload renders the identical string.
+    assert_eq!(explain_mult(&plan_mult(&node, &Choices::planner())), text);
+    for knob in ["mask: cols", "A: cells=", "B: cells=", "filter:", "ingest:", "engine:", "bound:"]
+    {
+        assert!(text.contains(knob), "missing {knob:?} in\n{text}");
+    }
+    // Forced plans record their provenance.
+    assert!(explain_mult(&plan_mult(&node, &Choices::frozen())).contains("[forced]"));
+}

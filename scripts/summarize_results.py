@@ -93,6 +93,9 @@ ACCEPTANCE = {
     "block-cold-scan": ("capped block-cache cold scan vs resident (beyond-RAM)", 0.15),
     "block-warm-scan": ("warm block-cache scan vs resident", 0.91),
     "block-compact": ("streamed bounded-memory vs resident major compaction", 0.15),
+    "plan-masked-mult": ("planner-chosen vs frozen-plan masked TableMult", 0.95),
+    "plan-bfs": ("planner-chosen vs frozen-plan BFS", 0.95),
+    "plan-adversarial-ingest": ("cost-rule vs frozen 8x ingest (adversarial)", 1.2),
 }
 
 
